@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 jax models + L1 pallas kernels + AOT lowering.
+
+Nothing in this package is imported at training time; ``aot.py`` lowers
+every (model, step) pair to HLO text consumed by the rust runtime.
+"""

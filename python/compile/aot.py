@@ -1,0 +1,151 @@
+"""AOT pipeline: lower every (model x step) pair to HLO text + manifest.
+
+HLO *text* is the interchange format (NOT ``lowered.compile().serialize()``
+and NOT serialized HloModuleProto): jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the rust
+``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts [--models a,b]
+
+Python runs ONCE here; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import steps
+from .model import ZOO
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def _sig(args):
+    """Manifest signature for a list of ShapeDtypeStructs."""
+    return [{"dtype": _dtype_tag(a.dtype), "shape": list(a.shape)}
+            for a in args]
+
+
+def _scalar(dt=jnp.float32):
+    return jax.ShapeDtypeStruct((), dt)
+
+
+def artifact_plan(name: str, entry):
+    """(step_name, fn, example_args) for every artifact of one model."""
+    model, batch, scan_l = entry.model, entry.batch, entry.scan_l
+    flat = jax.ShapeDtypeStruct((model.flattener().total,), jnp.float32)
+    xb, yb = model.batch_specs(batch)
+    xs = jax.ShapeDtypeStruct((scan_l,) + xb.shape, xb.dtype)
+    ys = jax.ShapeDtypeStruct((scan_l,) + yb.shape, yb.dtype)
+    f32, i32 = _scalar(), _scalar(jnp.int32)
+
+    return [
+        ("init", steps.make_init(model), (jax.ShapeDtypeStruct((), jnp.int32),)),
+        ("inner_step", steps.make_inner_step(model),
+         (flat, flat, flat, flat, xb, yb, f32, f32, f32, f32, f32, i32)),
+        ("inner_scan", steps.make_inner_scan(model, scan_l),
+         (flat, flat, flat, flat, xs, ys, f32, f32, f32, f32, f32, i32)),
+        ("grad_eval", steps.make_grad_eval(model), (flat, xb, yb, i32)),
+        ("eval_chunk", steps.make_eval_chunk(model), (flat, xb, yb)),
+        ("predict", steps.make_predict(model), (flat, xb)),
+    ]
+
+
+def lower_model(name: str, entry, out_dir: str, force: bool,
+                only_steps=None) -> dict:
+    model = entry.model
+    flattener = model.flattener()
+    model_dir = os.path.join(out_dir, name)
+    os.makedirs(model_dir, exist_ok=True)
+
+    arts = {}
+    for step_name, fn, args in artifact_plan(name, entry):
+        if only_steps and step_name not in only_steps:
+            continue
+        rel = f"{name}/{step_name}.hlo.txt"
+        path = os.path.join(out_dir, rel)
+        t0 = time.time()
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        # output signature from the lowered module
+        out_tree = jax.eval_shape(fn, *args)
+        outs = jax.tree_util.tree_leaves(out_tree)
+        arts[step_name] = {
+            "file": rel,
+            "inputs": _sig(args),
+            "outputs": _sig(outs),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {rel}: {len(text) / 1e6:.2f} MB in "
+              f"{time.time() - t0:.1f}s")
+
+    xb, yb = model.batch_specs(entry.batch)
+    return {
+        "param_count": flattener.total,
+        "batch": entry.batch,
+        "scan_l": entry.scan_l,
+        "dataset": entry.dataset,
+        "num_classes": model.num_classes,
+        "input_shape": list(model.input_shape),
+        "input_dtype": _dtype_tag(xb.dtype),
+        "label_shape": list(yb.shape[1:]),
+        "layers": flattener.layer_table(),
+        "artifacts": arts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma-separated zoo names or 'all'")
+    ap.add_argument("--steps", default=None,
+                    help="comma-separated step names (default: all)")
+    args = ap.parse_args()
+
+    names = list(ZOO) if args.models == "all" else args.models.split(",")
+    only_steps = args.steps.split(",") if args.steps else None
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": 1, "models": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    t0 = time.time()
+    for name in names:
+        if name not in ZOO:
+            raise SystemExit(f"unknown model {name!r}; have {list(ZOO)}")
+        print(f"[aot] lowering {name} "
+              f"(P={ZOO[name].model.flattener().total:,})")
+        manifest["models"][name] = lower_model(
+            name, ZOO[name], args.out_dir, force=True,
+            only_steps=only_steps)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {manifest_path} ({time.time() - t0:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

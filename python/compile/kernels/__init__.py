@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for the Parle reproduction.
+
+Every kernel here is written for TPU structure (MXU-shaped matmul tiles,
+VMEM-sized blocks expressed via BlockSpec) but lowered with
+``interpret=True`` so the HLO runs on the CPU PJRT client — real-TPU
+lowering would emit a Mosaic custom-call the CPU plugin cannot execute
+(see /opt/xla-example/README.md).
+
+Each kernel has a pure-jnp oracle in :mod:`ref` and a hypothesis sweep in
+``python/tests/test_kernels.py``.
+"""
+
+from . import matmul, ref, softmax_xent, update  # noqa: F401

@@ -1,0 +1,93 @@
+"""Differentiable wrappers around the L1 Pallas kernels.
+
+Pallas ``interpret=True`` calls do not define transposition rules, so each
+kernel is wrapped in ``jax.custom_vjp``:
+
+  * forward  = the Pallas kernel (MXU-structured),
+  * backward = expressed with the *same* Pallas matmul kernel where the
+    cotangent math is itself a matmul (dx, dw), and plain jnp for the
+    cheap element-wise parts.
+
+This is exactly how production Pallas kernels ship (e.g. flash attention):
+the custom VJP is part of the kernel's contract and everything still lowers
+into one HLO module at AOT time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as _matmul
+from . import softmax_xent as _sx
+
+
+# ---------------------------------------------------------------- dense ---
+
+@jax.custom_vjp
+def linear(x, w, b):
+    """x @ w + b via the tiled Pallas matmul (f32 accumulation)."""
+    return _matmul.matmul_bias_act(x, w, b, "none")
+
+
+def _linear_fwd(x, w, b):
+    return linear(x, w, b), (x, w)
+
+
+def _linear_bwd(res, dy):
+    x, w = res
+    zb_n = jnp.zeros((w.shape[0],), jnp.float32)
+    zb_m = jnp.zeros((w.shape[1],), jnp.float32)
+    # dx = dy @ w.T and dw = x.T @ dy are matmuls -> same Pallas kernel.
+    dx = _matmul.matmul_bias_act(dy, w.T, zb_n, "none")
+    dw = _matmul.matmul_bias_act(x.T, dy, zb_m, "none")
+    db = jnp.sum(dy, axis=0)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(jnp.float32)
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+def dense(x, w, b, activation: str = "none"):
+    """act(x @ w + b). Matmul on the MXU path, activation element-wise."""
+    y = linear(x, w, b)
+    if activation == "relu":
+        return jax.nn.relu(y)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+# -------------------------------------------------------------- xent -----
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Fused per-example (nll, err) via the Pallas kernel."""
+    nll, err = _sx.softmax_xent(logits, labels)
+    return nll, err
+
+
+def _sx_fwd(logits, labels):
+    out = softmax_xent(logits, labels)
+    return out, (logits, labels)
+
+
+def _sx_bwd(res, cotangents):
+    logits, labels = res
+    dnll, _derr = cotangents  # err is piecewise constant: zero gradient
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    c = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    dlogits = (p - onehot) * dnll[:, None]
+    return dlogits.astype(logits.dtype), None
+
+
+softmax_xent.defvjp(_sx_fwd, _sx_bwd)
+
+
+def mean_xent(logits, labels):
+    """Scalar (mean nll, mean err) convenience used by every model."""
+    nll, err = softmax_xent(logits, labels)
+    return jnp.mean(nll), jnp.mean(err)

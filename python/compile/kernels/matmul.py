@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: tiled matmul + bias + activation.
+
+This is the compute hot-spot of every model in the zoo (dense layers,
+attention projections, and convolutions lowered to matmuls). The paper's
+testbed ran this through cuDNN on Titan-X-class GPUs; the TPU mapping of
+the same insight is an MXU systolic-array matmul:
+
+  * blocks are MXU-shaped: the inner dot runs on (bm, bk) x (bk, bn)
+    tiles with bm/bn multiples of 128 and bk a multiple of 128 when the
+    operands are big enough (MXU is a 128x128 array; bf16 inputs with f32
+    accumulation is the native mode),
+  * BlockSpec expresses the HBM->VMEM schedule the paper's CUDA code did
+    with threadblocks: grid = (M/bm, N/bn, K/bk), K innermost so partial
+    products accumulate in a VMEM-resident output tile,
+  * the accumulator stays f32 regardless of input dtype.
+
+VMEM budget per grid step = bm*bk + bk*bn + bm*bn floats; the default
+128x128x128 tiles use 3 * 64 KiB = 192 KiB << 16 MiB VMEM, leaving room
+for double-buffering (the pipeline overlap the Pallas runtime inserts).
+
+``interpret=True`` everywhere: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tile sizes (see module docstring).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _apply_act(y, activation: str):
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation, nk):
+    """Grid step: accumulate one (bm, bk) x (bk, bn) partial product.
+
+    Grid is (M/bm, N/bn, K/bk) with K innermost. The output tile's
+    index_map ignores k, so the same f32 tile stays VMEM-resident across
+    the whole K sweep and doubles as the accumulator; bias + activation
+    are fused into the epilogue of the last K step so the tile is written
+    to HBM exactly once.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _apply_act(y, activation)
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= pref, preferring multiples of 8.
+
+    Small models in the zoo have dims below the MXU tile; shrinking the
+    block keeps the kernel valid (interpret mode) while the BlockSpec
+    structure stays the one a real TPU build would use.
+    """
+    if dim % pref == 0:
+        return pref
+    best = 1
+    for cand in range(min(pref, dim), 0, -1):
+        if dim % cand == 0:
+            best = cand
+            break
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk"))
+def matmul_bias_act(x, w, b, activation: str = "none",
+                    bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                    bk: int = DEFAULT_BK):
+    """act(x @ w + b) as a tiled Pallas kernel.
+
+    Args:
+      x: f32/bf16 [M, K]
+      w: f32/bf16 [K, N]
+      b: f32 [N]
+      activation: none | relu | tanh | gelu
+
+    Returns f32 [M, N].
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    nk = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, activation=activation, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+               bk: int = DEFAULT_BK, bytes_per_el: int = 4) -> int:
+    """VMEM footprint of one grid step (x tile + w tile + acc tile + out)."""
+    return bytes_per_el * (bm * bk + bk * bn + 2 * bm * bn + bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int,
+                             bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                             bk: int = DEFAULT_BK) -> float:
+    """Analytic MXU utilization proxy: fraction of each 128x128x128 MXU
+    pass that does useful work, given edge-padding of the tile grid.
+
+    interpret=True gives CPU-numpy timings which are NOT a TPU proxy; this
+    is the number DESIGN.md §Perf reports instead.
+    """
+    def ceil_div(a, bdim):
+        return -(-a // bdim)
+
+    eff_m = ceil_div(m, bm) * bm
+    eff_n = ceil_div(n, bn) * bn
+    eff_k = ceil_div(k, bk) * bk
+    useful = m * n * k
+    issued = eff_m * eff_n * eff_k
+    return useful / issued

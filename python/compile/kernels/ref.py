@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the CORE correctness signal: pytest asserts the Pallas kernels
+(interpret mode) match these references to tight tolerances over
+hypothesis-generated shapes and values.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act(x, w, b, activation: str = "none"):
+    """Reference for kernels.matmul.matmul_bias_act.
+
+    y = act(x @ w + b) with f32 accumulation.
+    """
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    y = y + b.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def parle_inner_update(y, z, mom, grad, anchor, lr, gamma_inv, alpha, mu):
+    """Reference for kernels.update.parle_inner_update.
+
+    Fused (8a)+(8b) of the paper with Nesterov momentum:
+
+      g_tot = grad + gamma_inv * (y - anchor)
+      mom'  = mu * mom - lr * g_tot
+      y'    = y + mom'
+      z'    = alpha * z + (1 - alpha) * y'
+
+    All element-wise over the flat parameter vector.
+    """
+    g_tot = grad + gamma_inv * (y - anchor)
+    mom2 = mu * mom - lr * g_tot
+    y2 = y + mom2
+    z2 = alpha * z + (1.0 - alpha) * y2
+    return y2, z2, mom2
+
+
+def softmax_xent(logits, labels):
+    """Reference for kernels.softmax_xent.softmax_xent.
+
+    Returns (per-example NLL, per-example error indicator).
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    nll = lse - jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    err = (jnp.argmax(logits, axis=-1) != labels).astype(jnp.float32)
+    return nll, err

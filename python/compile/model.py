@@ -1,0 +1,65 @@
+"""Model registry: the configured zoo instances the AOT pipeline lowers.
+
+Sizes are CPU-feasible stand-ins for the paper's networks (DESIGN.md §4):
+the architecture *structure* is exact, widths are scaled. ``batch`` is
+baked into each artifact's shapes; ``scan_l`` is the paper's L=25 for the
+fused inner_scan artifact (mlp uses a smaller L so integration tests stay
+fast).
+"""
+
+import dataclasses
+
+from .models.allcnn import AllCNN
+from .models.lenet import LeNet
+from .models.mlp import MLP
+from .models.transformer import TransformerLM
+from .models.wrn import WRN
+
+
+@dataclasses.dataclass(frozen=True)
+class ZooEntry:
+    model: object
+    batch: int
+    scan_l: int
+    dataset: str  # default dataset tag the rust side pairs it with
+
+
+def build_zoo():
+    return {
+        # quickstart / integration-test model
+        "mlp_synth": ZooEntry(
+            MLP("mlp_synth", in_dim=32, hidden=(64, 64), num_classes=10),
+            batch=128, scan_l=5, dataset="synth_gauss"),
+        # §4.2 LeNet on MNIST (full-size LeNet, paper-exact structure)
+        "lenet_mnist": ZooEntry(
+            LeNet("lenet_mnist", image=28, channels=1, num_classes=10),
+            batch=32, scan_l=5, dataset="synth_mnist"),
+        # §1.2/§5 All-CNN on CIFAR-10 (width-scaled)
+        "allcnn_cifar": ZooEntry(
+            AllCNN("allcnn_cifar", image=32, channels=3, num_classes=10,
+                   w1=24, w2=48),
+            batch=32, scan_l=5, dataset="synth_cifar10"),
+        # §4.3 WRN on CIFAR-10 (depth-16, width-scaled)
+        "wrn_cifar10": ZooEntry(
+            WRN("wrn_cifar10", num_classes=10, depth=16, widen=2, base=8,
+                dropout=0.3),
+            batch=32, scan_l=5, dataset="synth_cifar10"),
+        # §4.3 WRN on CIFAR-100
+        "wrn_cifar100": ZooEntry(
+            WRN("wrn_cifar100", num_classes=100, depth=16, widen=2, base=8,
+                dropout=0.3),
+            batch=32, scan_l=5, dataset="synth_cifar100"),
+        # §4.4 WRN-16-4-style on SVHN (dropout 0.4 per the paper)
+        "wrn_svhn": ZooEntry(
+            WRN("wrn_svhn", num_classes=10, depth=16, widen=2, base=8,
+                dropout=0.4),
+            batch=32, scan_l=5, dataset="synth_svhn"),
+        # end-to-end example: char-LM transformer
+        "transformer_lm": ZooEntry(
+            TransformerLM("transformer_lm", vocab=64, seq_len=64,
+                          d_model=128, n_heads=4, n_layers=4, d_ff=512),
+            batch=16, scan_l=10, dataset="synth_corpus"),
+    }
+
+
+ZOO = build_zoo()

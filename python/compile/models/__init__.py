@@ -1,0 +1,10 @@
+"""L2 model zoo (build-time jax).
+
+Every model exposes the same contract (see :mod:`common.Model`): a list of
+parameter specs plus a ``loss_and_err`` over a *flat* f32[P] parameter
+vector, so the rust coordinator can treat all state as dense vectors — the
+same O(N) payload the paper's NCCL reduce moves.
+"""
+
+from . import allcnn, common, lenet, mlp, transformer, wrn  # noqa: F401
+from .common import Flattener, Model  # noqa: F401

@@ -1,0 +1,67 @@
+"""All-CNN-C (Springenberg et al. 2014) — §1.2 / §5 / Fig. 1/6 / Table 2.
+
+The paper uses the full All-CNN-C (~1.4M params, channel widths 96/192).
+Default here is a width-scaled variant for CPU feasibility; the layer
+structure (all-convolutional, stride-2 convs instead of pooling, 1x1
+convs, global average pooling) is exact. Dropout 0.5 per the paper.
+"""
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+from . import common
+from .common import Model, ParamSpec
+
+
+class AllCNN(Model):
+    def __init__(self, name: str = "allcnn", image: int = 32,
+                 channels: int = 3, num_classes: int = 10,
+                 w1: int = 24, w2: int = 48, dropout: float = 0.5):
+        self.name = name
+        self.input_shape = (image, image, channels)
+        self.input_dtype = jnp.float32
+        self.num_classes = num_classes
+        self.w1, self.w2 = w1, w2
+        self.dropout = dropout
+
+    def param_specs(self) -> List[ParamSpec]:
+        cin = self.input_shape[2]
+        w1, w2, nc = self.w1, self.w2, self.num_classes
+        cfg = [
+            ("c1", 3, cin, w1), ("c2", 3, w1, w1), ("c3", 3, w1, w1),  # s2
+            ("c4", 3, w1, w2), ("c5", 3, w2, w2), ("c6", 3, w2, w2),  # s2
+            ("c7", 3, w2, w2), ("c8", 1, w2, w2), ("c9", 1, w2, nc),
+        ]
+        specs = []
+        for nm, k, ci, co in cfg:
+            specs.append(ParamSpec(f"{nm}.w", (k, k, ci, co), "he"))
+            specs.append(ParamSpec(f"{nm}.b", (co,), "zeros"))
+            if nm != "c9":
+                specs.append(ParamSpec(f"{nm}.gn.scale", (co,), "ones"))
+                specs.append(ParamSpec(f"{nm}.gn.offset", (co,), "zeros"))
+        return specs
+
+    def _block(self, p, h, nm, stride, train, seed, idx):
+        h = common.conv2d(h, p[f"{nm}.w"], p[f"{nm}.b"], stride=stride)
+        if f"{nm}.gn.scale" in p:
+            h = common.group_norm(h, p[f"{nm}.gn.scale"],
+                                  p[f"{nm}.gn.offset"], groups=8)
+            h = jnp.maximum(h, 0.0)
+        return h
+
+    def apply(self, p: Dict[str, jnp.ndarray], xb, train: bool, seed):
+        h = common.dropout(xb, 0.2 if self.dropout > 0 else 0.0,
+                           seed, 0, train)
+        h = self._block(p, h, "c1", 1, train, seed, 1)
+        h = self._block(p, h, "c2", 1, train, seed, 2)
+        h = self._block(p, h, "c3", 2, train, seed, 3)  # stride-2 "pool"
+        h = common.dropout(h, self.dropout, seed, 4, train)
+        h = self._block(p, h, "c4", 1, train, seed, 5)
+        h = self._block(p, h, "c5", 1, train, seed, 6)
+        h = self._block(p, h, "c6", 2, train, seed, 7)  # stride-2 "pool"
+        h = common.dropout(h, self.dropout, seed, 8, train)
+        h = self._block(p, h, "c7", 1, train, seed, 9)
+        h = self._block(p, h, "c8", 1, train, seed, 10)
+        h = self._block(p, h, "c9", 1, train, seed, 11)  # 1x1 -> classes
+        return common.global_avg_pool(h)

@@ -1,0 +1,232 @@
+"""Shared model machinery: param specs, the flat-vector Flattener,
+initializers, and stateless layers (conv, group-norm, dropout, pooling).
+
+Design notes
+------------
+* **Flat parameters.** The whole model lives in one f32[P] vector;
+  ``Flattener`` maps it to named tensors with static slices (free after
+  XLA fusion). This is what makes the rust-side coupling (8c)(8d) a dense
+  vector op.
+* **GroupNorm instead of BatchNorm.** The paper's networks use BN, whose
+  running statistics are non-trained state that the elastic coupling
+  would have to average separately (PyTorch Parle averaged them with the
+  weights). GroupNorm is stateless and keeps the flat-vector state
+  machine exact; DESIGN.md documents the substitution.
+* **Dropout** derives its PRNG key from an int32 ``seed`` input to the
+  step artifact, folded with a per-layer counter, so the rust coordinator
+  fully controls stochasticity (reproducible runs).
+"""
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ------------------------------------------------------------ specs ------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # he | glorot | zeros | ones | embed
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def _fan_in(shape: Sequence[int]) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    if len(shape) == 2:  # [in, out] dense
+        return shape[0]
+    if len(shape) == 4:  # HWIO conv
+        return shape[0] * shape[1] * shape[2]
+    n = 1
+    for d in shape[:-1]:
+        n *= d
+    return n
+
+
+def init_param(key, spec: ParamSpec) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, jnp.float32)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, jnp.float32)
+    fan = _fan_in(spec.shape)
+    if spec.init == "he":
+        std = jnp.sqrt(2.0 / fan)
+    elif spec.init == "glorot":
+        fan_out = spec.shape[-1]
+        std = jnp.sqrt(2.0 / (fan + fan_out))
+    elif spec.init == "embed":
+        std = 0.02
+    else:
+        raise ValueError(f"unknown init {spec.init!r}")
+    return std * jax.random.normal(key, spec.shape, jnp.float32)
+
+
+class Flattener:
+    """Bidirectional map between a flat f32[P] vector and named tensors."""
+
+    def __init__(self, specs: Sequence[ParamSpec]):
+        self.specs = list(specs)
+        self.offsets: List[int] = []
+        off = 0
+        for s in self.specs:
+            self.offsets.append(off)
+            off += s.size
+        self.total = off
+
+    def unflatten(self, flat) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for spec, off in zip(self.specs, self.offsets):
+            out[spec.name] = lax.slice(flat, (off,), (off + spec.size,)) \
+                .reshape(spec.shape)
+        return out
+
+    def flatten(self, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        parts = [params[s.name].reshape((-1,)).astype(jnp.float32)
+                 for s in self.specs]
+        return jnp.concatenate(parts)
+
+    def init_flat(self, key) -> jnp.ndarray:
+        parts = []
+        for i, s in enumerate(self.specs):
+            parts.append(init_param(jax.random.fold_in(key, i), s)
+                         .reshape((-1,)))
+        return jnp.concatenate(parts)
+
+    def layer_table(self) -> List[dict]:
+        """Manifest entry: name/shape/offset per tensor (rust align/ uses
+        this to find filter banks for the Fig-1 permutation alignment)."""
+        return [
+            {"name": s.name, "shape": list(s.shape), "offset": off,
+             "size": s.size, "init": s.init}
+            for s, off in zip(self.specs, self.offsets)
+        ]
+
+
+# ------------------------------------------------------------ layers -----
+
+def conv2d(x, w, b=None, stride: int = 1, padding: str = "SAME"):
+    """NHWC conv with HWIO weights (jnp/XLA path; the matmul-shaped dense
+    layers go through the Pallas kernel instead)."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        y = y + b
+    return y
+
+
+def group_norm(x, scale, offset, groups: int = 8, eps: float = 1e-5):
+    """Stateless GroupNorm over NHWC (or [B, C] dense) activations."""
+    if x.ndim == 2:
+        b, c = x.shape
+        g = min(groups, c)
+        while c % g != 0:
+            g -= 1
+        xg = x.reshape(b, g, c // g)
+        mean = jnp.mean(xg, axis=-1, keepdims=True)
+        var = jnp.var(xg, axis=-1, keepdims=True)
+        xn = ((xg - mean) * jax.lax.rsqrt(var + eps)).reshape(b, c)
+        return xn * scale + offset
+    b, h, w_, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(b, h, w_, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mean) * jax.lax.rsqrt(var + eps)).reshape(b, h, w_, c)
+    return xn * scale + offset
+
+
+def dropout(x, rate: float, seed, layer_idx: int, train: bool):
+    """Seed-driven dropout; identity when not training or rate == 0."""
+    if not train or rate <= 0.0:
+        return x
+    # derive from the runtime-supplied int32 seed, distinct per layer
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), layer_idx)
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)
+
+
+def avg_pool(x, window: int):
+    return lax.reduce_window(
+        x, 0.0, lax.add, (1, window, window, 1), (1, window, window, 1),
+        "VALID") / float(window * window)
+
+
+def max_pool(x, window: int, stride: int = None):
+    stride = stride or window
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ------------------------------------------------------------ model ------
+
+class Model:
+    """Contract every zoo model implements.
+
+    Attributes:
+      name: registry key.
+      input_shape: per-example input shape (images: HWC; LM: (T,) int32).
+      input_dtype: jnp dtype of the input batch.
+      num_classes: softmax width (vocab size for the LM).
+    """
+
+    name: str = "base"
+    input_shape: Tuple[int, ...] = ()
+    input_dtype = jnp.float32
+    num_classes: int = 0
+
+    def param_specs(self) -> List[ParamSpec]:
+        raise NotImplementedError
+
+    def apply(self, p: Dict[str, jnp.ndarray], xb, train: bool, seed):
+        """Returns logits ([B, C] or [B, T, V] for the LM)."""
+        raise NotImplementedError
+
+    # -- derived ----------------------------------------------------------
+
+    def flattener(self) -> Flattener:
+        return Flattener(self.param_specs())
+
+    def loss_and_err(self, flat, xb, yb, train: bool, seed):
+        """Mean (cross-entropy loss, top-1 error) over the batch.
+
+        Image models: yb int32[B]. LM: yb int32[B, T] (next tokens).
+        Goes through the fused Pallas softmax-xent kernel.
+        """
+        from ..kernels import layers as klayers
+
+        p = self.flattener().unflatten(flat)
+        logits = self.apply(p, xb, train, seed)
+        if logits.ndim == 3:  # LM: flatten time
+            bsz, t, v = logits.shape
+            logits = logits.reshape(bsz * t, v)
+            yb = yb.reshape(bsz * t)
+        return klayers.mean_xent(logits, yb)
+
+    def batch_specs(self, batch: int):
+        x = jax.ShapeDtypeStruct((batch,) + tuple(self.input_shape),
+                                 self.input_dtype)
+        if len(self.input_shape) == 1 and self.input_dtype == jnp.int32:
+            y = jax.ShapeDtypeStruct((batch, self.input_shape[0]), jnp.int32)
+        else:
+            y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        return x, y

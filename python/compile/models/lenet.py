@@ -1,0 +1,70 @@
+"""LeNet for (synthetic) MNIST — §4.2 / Fig. 2 / Table 1 row 1.
+
+Matches the paper's description: two conv layers (20 and 50 channels,
+5x5, each followed by ReLU + 2x2 max-pool), a 500-unit fully-connected
+layer, 10-way softmax, dropout 0.25 on conv and fc layers. The paper's
+BatchNorm is replaced by GroupNorm (see common.py docstring / DESIGN.md).
+
+~0.58M parameters at full size — trained as-is (no scaling needed).
+"""
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+from ..kernels import layers as klayers
+from . import common
+from .common import Model, ParamSpec
+
+
+class LeNet(Model):
+    def __init__(self, name: str = "lenet", image: int = 28,
+                 channels: int = 1, num_classes: int = 10,
+                 c1: int = 20, c2: int = 50, fc: int = 500,
+                 dropout: float = 0.25):
+        self.name = name
+        self.input_shape = (image, image, channels)
+        self.input_dtype = jnp.float32
+        self.num_classes = num_classes
+        self.c1, self.c2, self.fc = c1, c2, fc
+        self.dropout = dropout
+        # spatial size after two VALID 5x5 convs + 2x2 pools
+        s = image
+        s = (s - 4) // 2
+        s = (s - 4) // 2
+        self._flat_dim = s * s * c2
+
+    def param_specs(self) -> List[ParamSpec]:
+        cin = self.input_shape[2]
+        return [
+            ParamSpec("conv1.w", (5, 5, cin, self.c1), "he"),
+            ParamSpec("conv1.b", (self.c1,), "zeros"),
+            ParamSpec("gn1.scale", (self.c1,), "ones"),
+            ParamSpec("gn1.offset", (self.c1,), "zeros"),
+            ParamSpec("conv2.w", (5, 5, self.c1, self.c2), "he"),
+            ParamSpec("conv2.b", (self.c2,), "zeros"),
+            ParamSpec("gn2.scale", (self.c2,), "ones"),
+            ParamSpec("gn2.offset", (self.c2,), "zeros"),
+            ParamSpec("fc1.w", (self._flat_dim, self.fc), "he"),
+            ParamSpec("fc1.b", (self.fc,), "zeros"),
+            ParamSpec("fc2.w", (self.fc, self.num_classes), "he"),
+            ParamSpec("fc2.b", (self.num_classes,), "zeros"),
+        ]
+
+    def apply(self, p: Dict[str, jnp.ndarray], xb, train: bool, seed):
+        h = common.conv2d(xb, p["conv1.w"], p["conv1.b"], padding="VALID")
+        h = common.group_norm(h, p["gn1.scale"], p["gn1.offset"], groups=4)
+        h = jnp.maximum(h, 0.0)
+        h = common.max_pool(h, 2)
+        h = common.dropout(h, self.dropout, seed, 0, train)
+
+        h = common.conv2d(h, p["conv2.w"], p["conv2.b"], padding="VALID")
+        h = common.group_norm(h, p["gn2.scale"], p["gn2.offset"], groups=4)
+        h = jnp.maximum(h, 0.0)
+        h = common.max_pool(h, 2)
+        h = common.dropout(h, self.dropout, seed, 1, train)
+
+        h = h.reshape(h.shape[0], -1)
+        h = klayers.dense(h, p["fc1.w"], p["fc1.b"], "relu")
+        h = common.dropout(h, self.dropout, seed, 2, train)
+        return klayers.dense(h, p["fc2.w"], p["fc2.b"], "none")

@@ -1,0 +1,43 @@
+"""MLP on flat feature vectors — the quickstart model.
+
+Small enough that an AOT artifact compiles in seconds; used by the rust
+integration tests and `examples/quickstart.rs`.
+"""
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+from ..kernels import layers as klayers
+from . import common
+from .common import Model, ParamSpec
+
+
+class MLP(Model):
+    def __init__(self, name: str = "mlp_synth", in_dim: int = 32,
+                 hidden: tuple = (64, 64), num_classes: int = 10,
+                 dropout: float = 0.0):
+        self.name = name
+        self.input_shape = (in_dim,)
+        self.input_dtype = jnp.float32
+        self.num_classes = num_classes
+        self.hidden = tuple(hidden)
+        self.dropout = dropout
+
+    def param_specs(self) -> List[ParamSpec]:
+        dims = (self.input_shape[0],) + self.hidden + (self.num_classes,)
+        specs = []
+        for i in range(len(dims) - 1):
+            specs.append(ParamSpec(f"fc{i}.w", (dims[i], dims[i + 1]), "he"))
+            specs.append(ParamSpec(f"fc{i}.b", (dims[i + 1],), "zeros"))
+        return specs
+
+    def apply(self, p: Dict[str, jnp.ndarray], xb, train: bool, seed):
+        h = xb
+        n_layers = len(self.hidden) + 1
+        for i in range(n_layers):
+            act = "relu" if i < n_layers - 1 else "none"
+            h = klayers.dense(h, p[f"fc{i}.w"], p[f"fc{i}.b"], act)
+            if i < n_layers - 1 and self.dropout > 0:
+                h = common.dropout(h, self.dropout, seed, i, train)
+        return h

@@ -1,0 +1,104 @@
+"""Wide residual network (Zagoruyko & Komodakis 2016) — §4.3/§4.4,
+Figs. 3/4/5, Table 1 rows 2-4.
+
+The paper uses WRN-28-10 (36.5M params) for CIFAR and WRN-16-4 for SVHN.
+Defaults here are depth-16 width-2 style at reduced base width for CPU
+feasibility; the block structure (pre-activation residual blocks, three
+stages with strides 1/2/2, widening factor) is exact. BN -> GroupNorm per
+DESIGN.md; dropout inside residual blocks per the WRN paper / Parle §4.3.
+
+depth = 6*n_blocks_per_stage + 4 (e.g. depth 16 -> 2 blocks per stage).
+"""
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+from ..kernels import layers as klayers
+from . import common
+from .common import Model, ParamSpec
+
+
+class WRN(Model):
+    def __init__(self, name: str = "wrn", image: int = 32, channels: int = 3,
+                 num_classes: int = 10, depth: int = 16, widen: int = 2,
+                 base: int = 8, dropout: float = 0.3):
+        assert (depth - 4) % 6 == 0, "WRN depth must be 6n+4"
+        self.name = name
+        self.input_shape = (image, image, channels)
+        self.input_dtype = jnp.float32
+        self.num_classes = num_classes
+        self.n = (depth - 4) // 6
+        self.widths = [base, base * widen, 2 * base * widen,
+                       4 * base * widen]
+        self.dropout = dropout
+
+    # -- spec helpers ------------------------------------------------------
+
+    def _block_specs(self, nm, cin, cout) -> List[ParamSpec]:
+        s = [
+            ParamSpec(f"{nm}.gn1.scale", (cin,), "ones"),
+            ParamSpec(f"{nm}.gn1.offset", (cin,), "zeros"),
+            ParamSpec(f"{nm}.conv1.w", (3, 3, cin, cout), "he"),
+            ParamSpec(f"{nm}.gn2.scale", (cout,), "ones"),
+            ParamSpec(f"{nm}.gn2.offset", (cout,), "zeros"),
+            ParamSpec(f"{nm}.conv2.w", (3, 3, cout, cout), "he"),
+        ]
+        if cin != cout:
+            s.append(ParamSpec(f"{nm}.short.w", (1, 1, cin, cout), "he"))
+        return s
+
+    def param_specs(self) -> List[ParamSpec]:
+        w = self.widths
+        specs = [ParamSpec("conv0.w", (3, 3, self.input_shape[2], w[0]),
+                           "he")]
+        for stage in range(3):
+            cin = w[stage]
+            cout = w[stage + 1]
+            for b in range(self.n):
+                nm = f"s{stage}b{b}"
+                specs += self._block_specs(nm, cin if b == 0 else cout,
+                                           cout)
+        specs += [
+            ParamSpec("gn_out.scale", (w[3],), "ones"),
+            ParamSpec("gn_out.offset", (w[3],), "zeros"),
+            ParamSpec("fc.w", (w[3], self.num_classes), "he"),
+            ParamSpec("fc.b", (self.num_classes,), "zeros"),
+        ]
+        return specs
+
+    # -- forward -----------------------------------------------------------
+
+    def _block(self, p, h, nm, stride, train, seed, idx):
+        cin = h.shape[-1]
+        o = common.group_norm(h, p[f"{nm}.gn1.scale"],
+                              p[f"{nm}.gn1.offset"], groups=8)
+        o = jnp.maximum(o, 0.0)
+        shortcut = h
+        if f"{nm}.short.w" in p:
+            shortcut = common.conv2d(o, p[f"{nm}.short.w"], stride=stride)
+        elif stride != 1:
+            shortcut = h[:, ::stride, ::stride, :]
+        o = common.conv2d(o, p[f"{nm}.conv1.w"], stride=stride)
+        o = common.group_norm(o, p[f"{nm}.gn2.scale"],
+                              p[f"{nm}.gn2.offset"], groups=8)
+        o = jnp.maximum(o, 0.0)
+        o = common.dropout(o, self.dropout, seed, idx, train)
+        o = common.conv2d(o, p[f"{nm}.conv2.w"])
+        return o + shortcut
+
+    def apply(self, p: Dict[str, jnp.ndarray], xb, train: bool, seed):
+        h = common.conv2d(xb, p["conv0.w"])
+        idx = 0
+        for stage in range(3):
+            stride = 1 if stage == 0 else 2
+            for b in range(self.n):
+                nm = f"s{stage}b{b}"
+                h = self._block(p, h, nm, stride if b == 0 else 1,
+                                train, seed, idx)
+                idx += 1
+        h = common.group_norm(h, p["gn_out.scale"], p["gn_out.offset"],
+                              groups=8)
+        h = jnp.maximum(h, 0.0)
+        h = common.global_avg_pool(h)
+        return klayers.dense(h, p["fc.w"], p["fc.b"], "none")

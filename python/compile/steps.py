@@ -1,0 +1,128 @@
+"""Unified step functions — the L2 compute graphs lowered to HLO.
+
+One ``inner_step`` serves all four algorithms in the paper (§2/§3):
+
+  plain SGD        gamma_inv = 0            (anchor ignored)
+  Entropy-SGD      anchor = outer x,        gamma_inv = 1/gamma   (6a-6b)
+  Elastic-SGD      anchor = reference x,    gamma_inv = 1/rho     (7a)
+  Parle (inner)    anchor = x^a,            gamma_inv = 1/gamma   (8a-8b)
+
+The outer updates (6c)/(8c)/(8d) and the scoping schedule (9) live in the
+rust coordinator — they run once every L minibatches and *are* the paper's
+communication step.
+
+Signatures (all arrays f32 unless noted):
+
+  inner_step(y[P], z[P], mom[P], anchor[P], xb, yb, lr, gamma_inv, alpha,
+             mu, wd, seed:i32) -> (y', z', mom', loss, err)
+  inner_scan — same state, but xb/yb carry L stacked minibatches and the
+             L steps run inside one lax.scan: one dispatch + two host
+             copies per communication round instead of L (the L2 perf
+             lever; see EXPERIMENTS.md §Perf).
+  grad_eval(flat[P], xb, yb, seed) -> (grad[P], loss, err)   — for
+             data-parallel SGD where the master averages worker grads.
+  eval_chunk(flat[P], xb, yb) -> (loss_sum, err_count)       — validation.
+  init(seed:i32) -> flat[P]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import update as kupdate
+
+
+def make_loss_fn(model, train: bool):
+    def loss_fn(flat, xb, yb, seed):
+        return model.loss_and_err(flat, xb, yb, train, seed)
+    return loss_fn
+
+
+def make_inner_step(model):
+    loss_fn = make_loss_fn(model, train=True)
+
+    def inner_step(y, z, mom, anchor, xb, yb, lr, gamma_inv, alpha, mu, wd,
+                   seed):
+        # Nesterov: gradient at the lookahead point y + mu*mom.
+        lookahead = y + mu * mom
+        (loss, err), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            lookahead, xb, yb, seed)
+        grad = grad + wd * y  # weight decay on the iterate
+        # Fused (8a)+(8b): proximal force, velocity, position, exp-average
+        # — the L1 Pallas update kernel.
+        y2, z2, mom2 = kupdate.parle_inner_update(
+            y, z, mom, grad, anchor, lr, gamma_inv, alpha, mu)
+        return y2, z2, mom2, loss, err
+
+    return inner_step
+
+
+def make_inner_scan(model, scan_l: int):
+    """L inner steps fused into one artifact via lax.scan.
+
+    xb: [L, B, ...], yb: [L, B]; seeds derived per-step from the base seed.
+    Returns final state plus per-step loss/err vectors [L] (the rust side
+    logs them so curves keep per-minibatch resolution).
+    """
+    step = make_inner_step(model)
+
+    def inner_scan(y, z, mom, anchor, xb, yb, lr, gamma_inv, alpha, mu, wd,
+                   seed):
+        def body(carry, inp):
+            y, z, mom, k = carry
+            xk, yk = inp
+            y, z, mom, loss, err = step(y, z, mom, anchor, xk, yk, lr,
+                                        gamma_inv, alpha, mu, wd, k)
+            return (y, z, mom, k + 1), (loss, err)
+
+        (y2, z2, mom2, _), (losses, errs) = jax.lax.scan(
+            body, (y, z, mom, seed), (xb, yb), length=scan_l)
+        return y2, z2, mom2, losses, errs
+
+    return inner_scan
+
+
+def make_grad_eval(model):
+    loss_fn = make_loss_fn(model, train=True)
+
+    def grad_eval(flat, xb, yb, seed):
+        (loss, err), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            flat, xb, yb, seed)
+        return grad, loss, err
+
+    return grad_eval
+
+
+def make_eval_chunk(model):
+    loss_fn = make_loss_fn(model, train=False)
+
+    def eval_chunk(flat, xb, yb):
+        loss, err = loss_fn(flat, xb, yb, jnp.int32(0))
+        n = yb.size  # examples (LM counts tokens)
+        return loss * n, err * n
+
+    return eval_chunk
+
+
+def make_predict(model):
+    """Raw logits for a batch — the §1.2 ensemble/averaging experiment
+    needs per-example class scores on the rust side."""
+    flattener = model.flattener()
+
+    def predict(flat, xb):
+        p = flattener.unflatten(flat)
+        logits = model.apply(p, xb, False, jnp.int32(0))
+        if logits.ndim == 3:  # LM: [B, T, V] -> flatten time
+            b, t, v = logits.shape
+            logits = logits.reshape(b * t, v)
+        return (logits,)
+
+    return predict
+
+
+def make_init(model):
+    flattener = model.flattener()
+
+    def init(seed):
+        return flattener.init_flat(jax.random.PRNGKey(seed))
+
+    return init

@@ -1,0 +1,83 @@
+"""AOT pipeline tests: manifest schema, HLO text sanity, signatures."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.model import ZOO
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_artifact_plan_covers_all_steps():
+    plan = aot.artifact_plan("mlp_synth", ZOO["mlp_synth"])
+    names = [p[0] for p in plan]
+    assert names == ["init", "inner_step", "inner_scan", "grad_eval",
+                     "eval_chunk", "predict"]
+
+
+def test_inner_step_signature_matches_rust_contract():
+    plan = dict((p[0], p) for p in aot.artifact_plan(
+        "mlp_synth", ZOO["mlp_synth"]))
+    _, _, args = plan["inner_step"]
+    # (y, z, mom, anchor, xb, yb, lr, gamma_inv, alpha, mu, wd, seed)
+    assert len(args) == 12
+    p = ZOO["mlp_synth"].model.flattener().total
+    for i in range(4):
+        assert args[i].shape == (p,)
+    assert args[5].dtype == jnp.int32
+    assert args[11].dtype == jnp.int32
+
+
+def test_dtype_tags():
+    assert aot._dtype_tag(jnp.float32) == "f32"
+    assert aot._dtype_tag(jnp.int32) == "i32"
+    with pytest.raises(KeyError):
+        aot._dtype_tag(jnp.float64)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_built_manifest_consistent_with_zoo():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, entry in ZOO.items():
+        m = manifest["models"].get(name)
+        assert m is not None, f"{name} missing from manifest"
+        assert m["param_count"] == entry.model.flattener().total
+        assert m["batch"] == entry.batch
+        assert m["scan_l"] == entry.scan_l
+        for step, art in m["artifacts"].items():
+            path = os.path.join(ART, art["file"])
+            assert os.path.exists(path), path
+            # HLO text sanity: module header + entry computation
+            with open(path) as f:
+                head = f.read(4096)
+            assert head.startswith("HloModule"), path
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_layer_table_covers_param_vector():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, m in manifest["models"].items():
+        total = sum(e["size"] for e in m["layers"])
+        assert total == m["param_count"], name
+
+
+def test_hlo_text_roundtrip_small():
+    """Lower the mlp init fn and verify the HLO text parses back."""
+    import jax
+    from jax._src.lib import xla_client as xc
+    from compile import steps as s
+
+    fn = s.make_init(ZOO["mlp_synth"].model)
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        jax.ShapeDtypeStruct((), jnp.int32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text

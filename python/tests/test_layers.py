@@ -1,0 +1,95 @@
+"""Differentiable kernel wrappers: custom VJPs must match pure-jnp grads."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from compile.kernels import layers
+
+hypothesis.settings.register_profile(
+    "layers", deadline=None, max_examples=15,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("layers")
+
+
+def key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(2, 48),
+    act=st.sampled_from(["none", "relu", "tanh", "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_grads_match_jnp(m, k, n, act, seed):
+    kx, kw, kb, kc = jax.random.split(key(seed), 4)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    cot = jax.random.normal(kc, (m, n), jnp.float32)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(layers.dense(x, w, b, act) * cot)
+
+    def act_fn(y):
+        return {"none": lambda v: v, "relu": jax.nn.relu,
+                "tanh": jnp.tanh, "gelu": jax.nn.gelu}[act](y)
+
+    def f_ref(x, w, b):
+        return jnp.sum(act_fn(x @ w + b) * cot)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(a, r, rtol=5e-4, atol=5e-5)
+
+
+@given(
+    b=st.integers(1, 64),
+    c=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xent_grads_match_jnp(b, c, seed):
+    kl, ky = jax.random.split(key(seed))
+    logits = jax.random.normal(kl, (b, c), jnp.float32) * 3.0
+    labels = jax.random.randint(ky, (b,), 0, c)
+
+    def f_kernel(logits):
+        loss, _ = layers.mean_xent(logits, labels)
+        return loss
+
+    def f_ref(logits):
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(lp, labels[:, None], 1))
+
+    gk = jax.grad(f_kernel)(logits)
+    gr = jax.grad(f_ref)(logits)
+    np.testing.assert_allclose(gk, gr, rtol=5e-4, atol=5e-5)
+
+
+def test_error_has_no_gradient():
+    logits = jax.random.normal(key(0), (8, 4), jnp.float32)
+    labels = jnp.zeros((8,), jnp.int32)
+
+    def err_only(logits):
+        _, err = layers.mean_xent(logits, labels)
+        return err
+
+    g = jax.grad(err_only)(logits)
+    np.testing.assert_array_equal(g, jnp.zeros_like(g))
+
+
+def test_values_forward_consistency():
+    # forward of the wrapped op equals the unwrapped kernel
+    x = jax.random.normal(key(1), (16, 8), jnp.float32)
+    w = jax.random.normal(key(2), (8, 12), jnp.float32)
+    b = jax.random.normal(key(3), (12,), jnp.float32)
+    np.testing.assert_allclose(
+        layers.dense(x, w, b, "relu"),
+        jax.nn.relu(x @ w + b),
+        rtol=2e-5, atol=2e-5)

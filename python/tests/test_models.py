@@ -1,0 +1,123 @@
+"""Model zoo contract tests: shapes, flattener round-trips, and basic
+learnability of each architecture."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ZOO
+from compile.models.common import Flattener
+
+
+def small_batch(entry, b=4, seed=0):
+    model = entry.model
+    k = jax.random.PRNGKey(seed)
+    if model.input_dtype == jnp.int32:
+        t = model.input_shape[0]
+        xb = jax.random.randint(k, (b, t), 0, model.num_classes)
+        yb = jax.random.randint(k, (b, t), 0, model.num_classes)
+    else:
+        xb = jax.random.normal(k, (b,) + tuple(model.input_shape))
+        yb = jax.random.randint(k, (b,), 0, model.num_classes)
+    return xb, yb
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_flattener_roundtrip(name):
+    model = ZOO[name].model
+    fl = model.flattener()
+    flat = fl.init_flat(jax.random.PRNGKey(0))
+    assert flat.shape == (fl.total,)
+    params = fl.unflatten(flat)
+    again = fl.flatten(params)
+    np.testing.assert_array_equal(flat, again)
+    # layer table consistent
+    table = fl.layer_table()
+    assert sum(e["size"] for e in table) == fl.total
+    offs = [e["offset"] for e in table]
+    assert offs == sorted(offs)
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_forward_shapes_and_finiteness(name):
+    entry = ZOO[name]
+    model = entry.model
+    fl = model.flattener()
+    flat = fl.init_flat(jax.random.PRNGKey(1))
+    xb, yb = small_batch(entry)
+    loss, err = model.loss_and_err(flat, xb, yb, False, jnp.int32(0))
+    assert np.isfinite(float(loss)), name
+    assert 0.0 <= float(err) <= 1.0, name
+    # chance-level error at init (generous band)
+    chance = 1.0 - 1.0 / model.num_classes
+    assert float(err) > chance * 0.4, f"{name}: err {err} at init"
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_train_mode_uses_dropout_seed(name):
+    entry = ZOO[name]
+    model = entry.model
+    if getattr(model, "dropout", 0.0) == 0.0:
+        pytest.skip("no dropout in this config")
+    fl = model.flattener()
+    flat = fl.init_flat(jax.random.PRNGKey(2))
+    xb, yb = small_batch(entry)
+    l1, _ = model.loss_and_err(flat, xb, yb, True, jnp.int32(1))
+    l2, _ = model.loss_and_err(flat, xb, yb, True, jnp.int32(2))
+    l3, _ = model.loss_and_err(flat, xb, yb, True, jnp.int32(1))
+    assert float(l1) != float(l2), "different seeds must differ"
+    assert float(l1) == float(l3), "same seed must reproduce"
+
+
+def test_mlp_learns_fixed_batch():
+    entry = ZOO["mlp_synth"]
+    model = entry.model
+    fl = model.flattener()
+    flat = fl.init_flat(jax.random.PRNGKey(3))
+    xb, yb = small_batch(entry, b=32, seed=3)
+
+    def loss_fn(flat):
+        loss, _ = model.loss_and_err(flat, xb, yb, True, jnp.int32(0))
+        return loss
+
+    g = jax.jit(jax.grad(loss_fn))
+    l0 = float(loss_fn(flat))
+    for _ in range(30):
+        flat = flat - 0.2 * g(flat)
+    l1 = float(loss_fn(flat))
+    assert l1 < 0.5 * l0, f"loss {l0} -> {l1}"
+
+
+def test_transformer_causality():
+    """Changing a future token must not affect earlier logits."""
+    entry = ZOO["transformer_lm"]
+    model = entry.model
+    fl = model.flattener()
+    flat = fl.init_flat(jax.random.PRNGKey(4))
+    p = fl.unflatten(flat)
+    t = model.seq_len
+    x1 = jnp.zeros((1, t), jnp.int32)
+    x2 = x1.at[0, t - 1].set(5)  # change only the last token
+    l1 = model.apply(p, x1, False, jnp.int32(0))
+    l2 = model.apply(p, x2, False, jnp.int32(0))
+    np.testing.assert_allclose(l1[0, : t - 1], l2[0, : t - 1],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[0, t - 1], l2[0, t - 1])
+
+
+def test_wrn_depth_validation():
+    from compile.models.wrn import WRN
+    with pytest.raises(AssertionError):
+        WRN(depth=17)
+
+
+def test_flattener_offsets_slice_correctly():
+    fl = Flattener.__new__(Flattener)
+    from compile.models.common import ParamSpec
+    fl.__init__([ParamSpec("a", (2, 3), "zeros"),
+                 ParamSpec("b", (4,), "ones")])
+    flat = jnp.arange(10, dtype=jnp.float32)
+    p = fl.unflatten(flat)
+    np.testing.assert_array_equal(p["a"], flat[:6].reshape(2, 3))
+    np.testing.assert_array_equal(p["b"], flat[6:])

@@ -1,0 +1,68 @@
+//! Figure benches: one quick series per figure.
+//!
+//! * fig1: alignment kernel throughput (hungarian + permutation apply)
+//! * fig2/3/4: one representative curve per figure (Parle), timing the
+//!   per-round cost that sets the x-axis of the paper's plots
+//! * fig6: split-data round cost
+//! * perfmodel: modeled paper-scale numbers printed for reference
+//!
+//! Run: `cargo bench --bench figs_bench`
+
+use parle::align::{greedy_assignment, hungarian};
+use parle::bench_util::{bench_for, section};
+use parle::config::Algo;
+use parle::experiments::{fig2, ExpCtx};
+use parle::util::rng::Pcg64;
+
+fn main() -> parle::Result<()> {
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let ctx = ExpCtx {
+        quick: true,
+        out_dir: "runs/bench".into(),
+        ..Default::default()
+    };
+    std::fs::create_dir_all(&ctx.out_dir)?;
+
+    section("fig1: assignment solvers (channel matching)");
+    let mut rng = Pcg64::new(3, 3);
+    for n in [48usize, 96] {
+        let score: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n).map(|_| rng.next_f64()).collect())
+            .collect();
+        let r = bench_for(&format!("hungarian {n}x{n}"), 0.3, 3, || {
+            let _ = hungarian(&score);
+        });
+        println!("{}", r.row());
+        let r = bench_for(&format!("greedy    {n}x{n}"), 0.3, 3, || {
+            let _ = greedy_assignment(&score);
+        });
+        println!("{}", r.row());
+    }
+
+    section("fig2/fig3/fig6: per-round cost of the plotted runs");
+    for (name, cfg) in [
+        ("fig2 lenet parle n=3", {
+            let mut c = fig2::base(&ctx, Algo::Parle, 3);
+            c.epochs = 0.4;
+            c
+        }),
+    ] {
+        let t = parle::util::timer::Timer::new();
+        let out = parle::coordinator::train(
+            &cfg,
+            &format!("bench_fig_{}", name.replace(' ', "_")),
+        )?;
+        let rounds = out.record.curve.len().max(1);
+        println!(
+            "{:<30} wall {:6.1}s  (~{:.2} s/eval-round)  val {:5.2}%",
+            name,
+            t.elapsed_s(),
+            t.elapsed_s() / rounds as f64,
+            out.record.final_val_err * 100.0
+        );
+    }
+
+    section("perfmodel (paper-scale reference)");
+    parle::experiments::table1::paper_scale_times();
+    Ok(())
+}

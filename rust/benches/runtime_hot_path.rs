@@ -1,0 +1,197 @@
+//! Hot-path microbenchmarks (§Perf of EXPERIMENTS.md):
+//!
+//! * artifact dispatch: per-minibatch `inner_step` vs the fused
+//!   `inner_scan` (the L2 perf lever — 1 dispatch + 2 host copies per
+//!   round instead of L),
+//! * the reduce (flat-vector mean) at several P and replica counts,
+//! * literal creation / extraction overhead (the host<->PJRT copies),
+//! * the data pipeline (batch synthesis + augmentation).
+//!
+//! Run: `cargo bench --bench runtime_hot_path`
+
+use parle::bench_util::{bench_for, section};
+use parle::data::batcher::{Augment, Batcher};
+use parle::data::{build, DataConfig};
+use parle::opt::vecmath;
+use parle::runtime::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32,
+                     Session};
+use parle::util::rng::Pcg64;
+
+fn main() -> parle::Result<()> {
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let session = Session::open("artifacts")?;
+
+    section("artifact dispatch: mlp_synth (P=6.9k)");
+    bench_model_steps(&session, "mlp_synth")?;
+
+    section("artifact dispatch: lenet_mnist (P=431k)");
+    bench_model_steps(&session, "lenet_mnist")?;
+
+    section("reduce (flat mean) — the (8d) all-reduce stand-in");
+    for p in [100_000usize, 1_000_000, 10_000_000] {
+        for n in [3usize, 8] {
+            let mut rng = Pcg64::new(1, 1);
+            let replicas: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut v = vec![0.0f32; p];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let views: Vec<&[f32]> =
+                replicas.iter().map(|r| r.as_slice()).collect();
+            let mut out = vec![0.0f32; p];
+            let r = bench_for(
+                &format!("mean_into P={p} n={n}"),
+                0.3,
+                5,
+                || vecmath::mean_into(&mut out, &views),
+            );
+            println!(
+                "{}   ({:.2} GB/s)",
+                r.row(),
+                (p * n * 4) as f64 / r.mean_s / 1e9
+            );
+        }
+    }
+
+    section("literal round-trip (host <-> PJRT)");
+    for p in [100_000usize, 1_000_000] {
+        let v = vec![1.0f32; p];
+        let r = bench_for(&format!("lit_f32 create P={p}"), 0.2, 5, || {
+            let _ = lit_f32(&v, &[p]).unwrap();
+        });
+        println!("{}", r.row());
+        let lit = lit_f32(&v, &[p])?;
+        let r = bench_for(&format!("to_f32 extract P={p}"), 0.2, 5, || {
+            let _ = parle::runtime::to_f32(&lit).unwrap();
+        });
+        println!("{}", r.row());
+    }
+
+    section("data pipeline");
+    let (train, _) = build(
+        "synth_cifar10",
+        &DataConfig {
+            train: 512,
+            val: 64,
+            difficulty: 0.35,
+            seed: 1,
+        },
+    )?;
+    let mut b = Batcher::new(&train, 64, 0, Augment::cifar(), 1, 0);
+    let r = bench_for("cifar batch64 + augment", 0.3, 5, || {
+        let batch = b.next();
+        std::hint::black_box(batch.x_f32.len());
+    });
+    println!(
+        "{}   ({:.1}k images/s)",
+        r.row(),
+        64.0 / r.mean_s / 1e3
+    );
+
+    Ok(())
+}
+
+fn bench_model_steps(session: &Session, model: &str) -> parle::Result<()> {
+    let mm = session.manifest.model(model)?.clone();
+    let p = mm.param_count;
+    let state = vec![0.05f32; p];
+    let (train, _) = build(
+        &mm.dataset,
+        &DataConfig {
+            train: 256,
+            val: 64,
+            difficulty: 0.35,
+            seed: 1,
+        },
+    )?;
+    let seq = if mm.label_shape.is_empty() {
+        0
+    } else {
+        mm.input_shape[0]
+    };
+    let mut batcher = Batcher::new(&train, mm.batch, seq, Augment::none(),
+                                   1, 0);
+
+    // per-step artifact
+    let batch = batcher.next();
+    let (xb, yb) =
+        parle::coordinator::replica::batch_literals(&mm, &batch)?;
+    let args = || -> parle::Result<Vec<xla::Literal>> {
+        Ok(vec![
+            lit_f32(&state, &[p])?,
+            lit_f32(&state, &[p])?,
+            lit_f32(&state, &[p])?,
+            lit_f32(&state, &[p])?,
+            xb.clone(),
+            yb.clone(),
+            lit_scalar_f32(0.1),
+            lit_scalar_f32(0.01),
+            lit_scalar_f32(0.75),
+            lit_scalar_f32(0.9),
+            lit_scalar_f32(0.0),
+            lit_scalar_i32(7),
+        ])
+    };
+    session.warm(model, "inner_step")?;
+    let r = bench_for(&format!("{model}/inner_step"), 1.0, 5, || {
+        let a = args().unwrap();
+        let _ = session.execute(model, "inner_step", &a).unwrap();
+    });
+    println!("{}", r.row());
+    let per_step = r.mean_s;
+
+    // fused scan artifact (scan_l steps per dispatch)
+    let l = mm.scan_l;
+    let mut xs_f = Vec::new();
+    let mut xs_i = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..l {
+        let b = batcher.next();
+        xs_f.extend_from_slice(&b.x_f32);
+        xs_i.extend_from_slice(&b.x_i32);
+        ys.extend_from_slice(&b.y);
+    }
+    let (xs, ysl) = if xs_i.is_empty() {
+        let mut shape = vec![l, mm.batch];
+        shape.extend_from_slice(&mm.input_shape);
+        (
+            lit_f32(&xs_f, &shape)?,
+            lit_i32(&ys, &[l, mm.batch])?,
+        )
+    } else {
+        let t = mm.input_shape[0];
+        (
+            lit_i32(&xs_i, &[l, mm.batch, t])?,
+            lit_i32(&ys, &[l, mm.batch, t])?,
+        )
+    };
+    session.warm(model, "inner_scan")?;
+    let r = bench_for(&format!("{model}/inner_scan (L={l})"), 1.0, 3, || {
+        let a = vec![
+            lit_f32(&state, &[p]).unwrap(),
+            lit_f32(&state, &[p]).unwrap(),
+            lit_f32(&state, &[p]).unwrap(),
+            lit_f32(&state, &[p]).unwrap(),
+            xs.clone(),
+            ysl.clone(),
+            lit_scalar_f32(0.1),
+            lit_scalar_f32(0.01),
+            lit_scalar_f32(0.75),
+            lit_scalar_f32(0.9),
+            lit_scalar_f32(0.0),
+            lit_scalar_i32(7),
+        ];
+        let _ = session.execute(model, "inner_scan", &a).unwrap();
+    });
+    println!("{}", r.row());
+    println!(
+        "  -> scan speedup per inner step: {:.2}x \
+         ({:.3} ms vs {:.3} ms)",
+        per_step / (r.mean_s / l as f64),
+        per_step * 1e3,
+        r.mean_s / l as f64 * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Table-1 bench: miniature end-to-end runs of every (row, algorithm)
+//! cell — validation error and wall-clock per cell, plus the modeled
+//! paper-scale time columns. This is `parle experiment table1` in bench
+//! clothing with tiny budgets so `cargo bench` stays minutes, not hours.
+//!
+//! Run: `cargo bench --bench table1_bench`
+
+use parle::config::Algo;
+use parle::experiments::{fig2, fig3, fig4, table1, ExpCtx};
+use parle::util::timer::Timer;
+
+fn main() -> parle::Result<()> {
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let ctx = ExpCtx {
+        quick: true,
+        out_dir: "runs/bench".into(),
+        ..Default::default()
+    };
+    std::fs::create_dir_all(&ctx.out_dir)?;
+
+    println!("table1 bench (quick budgets; full runs via `parle \
+              experiment table1`)");
+    // trimmed to two representative algorithms per row so `cargo bench`
+    // stays in minutes on the 1-core testbed; the full grid is
+    // `parle experiment table1`
+    let algos = [
+        (Algo::Parle, 3usize),
+        (Algo::SgdDataParallel, 3),
+    ];
+
+    for (row, mk) in [
+        ("lenet_mnist", 0usize),
+        ("wrn_cifar10", 1),
+    ] {
+        println!("\n-- {row} --");
+        for (algo, n) in algos {
+            let cfg = match mk {
+                0 => fig2::base(&ctx, algo, n),
+                1 => fig3::base(&ctx, row, algo, n),
+                _ => fig4::base(&ctx, algo, n),
+            };
+            let t = Timer::new();
+            let out = parle::coordinator::train(
+                &cfg,
+                &format!("bench_t1_{row}_{}", algo.name()),
+            )?;
+            println!(
+                "{:<14} {:<12} val {:5.2}%  wall {:6.1}s  comm {:5.2}%",
+                row,
+                algo.name(),
+                out.record.final_val_err * 100.0,
+                t.elapsed_s(),
+                out.record.comm_ratio * 100.0
+            );
+        }
+    }
+
+    println!();
+    table1::paper_scale_times();
+    Ok(())
+}

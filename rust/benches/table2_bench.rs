@@ -1,0 +1,61 @@
+//! Table-2 bench: miniature split-data runs (§5) — Parle/Elastic on
+//! disjoint shards vs subset-SGD vs full-data SGD.
+//!
+//! Run: `cargo bench --bench table2_bench`
+
+use parle::config::Algo;
+use parle::experiments::{fig6, ExpCtx};
+use parle::util::timer::Timer;
+
+fn main() -> parle::Result<()> {
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let ctx = ExpCtx {
+        quick: true,
+        out_dir: "runs/bench".into(),
+        ..Default::default()
+    };
+    std::fs::create_dir_all(&ctx.out_dir)?;
+
+    println!("table2 bench (quick budgets)");
+    // one full-data and one split row keep `cargo bench` in minutes;
+    // the full grid is `parle experiment table2`
+    for (tag, n, frac) in [("full", 3usize, 1.0f64), ("50pct", 3, 0.5)] {
+        println!("\n-- {tag} --");
+        let algos: &[Algo] = if tag == "full" {
+            &[Algo::Parle, Algo::ElasticSgd, Algo::SgdDataParallel]
+        } else {
+            &[Algo::Parle, Algo::ElasticSgd]
+        };
+        for &algo in algos {
+            let mut cfg = fig6::base(&ctx, algo, n);
+            cfg.split_data = tag != "full";
+            let t = Timer::new();
+            let out = parle::coordinator::train(
+                &cfg,
+                &format!("bench_t2_{tag}_{}", algo.name()),
+            )?;
+            println!(
+                "{:<8} {:<12} val {:5.2}%  wall {:6.1}s",
+                tag,
+                algo.name(),
+                out.record.final_val_err * 100.0,
+                t.elapsed_s()
+            );
+        }
+        if tag != "full" {
+            let mut cfg = fig6::base(&ctx, Algo::Sgd, 1);
+            cfg.data.train = (cfg.data.train as f64 * frac) as usize;
+            let out = parle::coordinator::train(
+                &cfg,
+                &format!("bench_t2_{tag}_sgd_subset"),
+            )?;
+            println!(
+                "{:<8} {:<12} val {:5.2}%  (random-subset baseline)",
+                tag,
+                "sgd*",
+                out.record.final_val_err * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,202 @@
+//! Assignment solvers for channel matching.
+//!
+//! `hungarian` is the exact O(n^3) Kuhn-Munkres algorithm (maximization
+//! form) — channel counts here are <= a few hundred, so exact matching is
+//! cheap. `greedy_assignment` is the paper's "greedy layer-wise matching"
+//! baseline; tests verify hungarian >= greedy on total similarity.
+
+/// Exact maximum-weight perfect matching on a square score matrix.
+/// `score[i][j]` = similarity of A-channel i with B-channel j.
+/// Returns `perm` with `perm[i] = j` (B-channel assigned to A-slot i).
+pub fn hungarian(score: &[Vec<f64>]) -> Vec<usize> {
+    let n = score.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // Kuhn-Munkres on cost = -score (minimization), potentials form.
+    let inf = f64::INFINITY;
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to column j
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cost = -score[i0 - 1][j - 1];
+                let cur = cost - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut perm = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            perm[p[j] - 1] = j - 1;
+        }
+    }
+    perm
+}
+
+/// Greedy matching: repeatedly take the highest-scoring unmatched pair.
+pub fn greedy_assignment(score: &[Vec<f64>]) -> Vec<usize> {
+    let n = score.len();
+    let mut pairs: Vec<(usize, usize, f64)> = Vec::with_capacity(n * n);
+    for (i, row) in score.iter().enumerate() {
+        for (j, &s) in row.iter().enumerate() {
+            pairs.push((i, j, s));
+        }
+    }
+    pairs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    let mut perm = vec![usize::MAX; n];
+    let mut used_j = vec![false; n];
+    let mut assigned = 0;
+    for (i, j, _) in pairs {
+        if perm[i] == usize::MAX && !used_j[j] {
+            perm[i] = j;
+            used_j[j] = true;
+            assigned += 1;
+            if assigned == n {
+                break;
+            }
+        }
+    }
+    perm
+}
+
+/// Total score of an assignment.
+pub fn assignment_score(score: &[Vec<f64>], perm: &[usize]) -> f64 {
+    perm.iter()
+        .enumerate()
+        .map(|(i, &j)| score[i][j])
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identity_when_diagonal_dominates() {
+        let score = vec![
+            vec![9.0, 1.0, 0.0],
+            vec![1.0, 8.0, 0.0],
+            vec![0.0, 0.0, 7.0],
+        ];
+        assert_eq!(hungarian(&score), vec![0, 1, 2]);
+        assert_eq!(greedy_assignment(&score), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn finds_permuted_optimum() {
+        // optimal is the anti-diagonal
+        let score = vec![
+            vec![0.0, 0.0, 5.0],
+            vec![0.0, 5.0, 0.0],
+            vec![5.0, 0.0, 0.0],
+        ];
+        assert_eq!(hungarian(&score), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn hungarian_beats_greedy_trap() {
+        // greedy takes (0,0)=10 then is forced into (1,1)=0;
+        // optimal is (0,1)+(1,0) = 9+9
+        let score = vec![vec![10.0, 9.0], vec![9.0, 0.0]];
+        let h = hungarian(&score);
+        let g = greedy_assignment(&score);
+        assert!(assignment_score(&score, &h) >= assignment_score(&score, &g));
+        assert_eq!(assignment_score(&score, &h), 18.0);
+    }
+
+    #[test]
+    fn random_matrices_hungarian_is_optimal_vs_bruteforce() {
+        let mut rng = Pcg64::new(11, 0);
+        for _ in 0..20 {
+            let n = 4;
+            let score: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..n).map(|_| rng.next_f64()).collect())
+                .collect();
+            let h = assignment_score(&score, &hungarian(&score));
+            // brute force over 4! permutations
+            let mut best = f64::NEG_INFINITY;
+            let mut perm = [0usize, 1, 2, 3];
+            permute_all(&mut perm, 0, &mut |p| {
+                let s: f64 =
+                    p.iter().enumerate().map(|(i, &j)| score[i][j]).sum();
+                if s > best {
+                    best = s;
+                }
+            });
+            assert!((h - best).abs() < 1e-9, "hungarian {h} vs brute {best}");
+        }
+    }
+
+    fn permute_all(
+        arr: &mut [usize; 4],
+        k: usize,
+        f: &mut impl FnMut(&[usize; 4]),
+    ) {
+        if k == 4 {
+            f(arr);
+            return;
+        }
+        for i in k..4 {
+            arr.swap(k, i);
+            permute_all(arr, k + 1, f);
+            arr.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn perms_are_valid() {
+        let mut rng = Pcg64::new(5, 1);
+        let n = 16;
+        let score: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n).map(|_| rng.next_f64()).collect())
+            .collect();
+        for perm in [hungarian(&score), greedy_assignment(&score)] {
+            let mut sorted = perm.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Permutation alignment of independently trained networks — the §1.2 /
+//! Fig. 1 experiment substrate.
+//!
+//! Deep nets have permutation symmetries: intermediate channels can be
+//! reordered (together with the next layer's input channels) without
+//! changing the function. The paper aligns 6 independently trained
+//! All-CNNs with a greedy layer-wise matching and shows (a) the
+//! permutation-invariant overlap is far below 1 (nets live far apart in
+//! weight space) and (b) averaging *aligned* weights dramatically beats
+//! naive averaging (18.7% vs 89.9% error) — the observation motivating
+//! Parle's quadratic coupling.
+
+pub mod assignment;
+pub mod overlap;
+pub mod permute;
+
+pub use assignment::{greedy_assignment, hungarian};
+pub use overlap::{cosine, layer_overlap, OverlapReport};
+pub use permute::{align_to, average_params, ConvStack};

@@ -1,0 +1,103 @@
+//! Permutation-invariant overlap metric (Fig. 1 of the paper).
+//!
+//! For a layer with `cout` filters, the overlap between two networks is
+//! the mean cosine similarity of optimally matched filter pairs — 1.0 for
+//! identical-up-to-permutation layers, ~0 for unrelated random filters.
+
+use crate::align::assignment::{assignment_score, hungarian};
+
+/// Cosine similarity of two filters.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na * nb)
+}
+
+/// Per-layer overlap after optimal filter matching.
+///
+/// `a`/`b` are the layer weights as `cout` rows of `filter_len` values
+/// (the caller extracts rows from HWIO conv weights or dense columns).
+pub fn layer_overlap(a: &[Vec<f32>], b: &[Vec<f32>]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let score: Vec<Vec<f64>> = a
+        .iter()
+        .map(|fa| b.iter().map(|fb| cosine(fa, fb)).collect())
+        .collect();
+    let perm = hungarian(&score);
+    assignment_score(&score, &perm) / n as f64
+}
+
+/// Overlap per layer across a whole network pair.
+#[derive(Clone, Debug)]
+pub struct OverlapReport {
+    pub layers: Vec<(String, f64)>,
+}
+
+impl OverlapReport {
+    pub fn mean(&self) -> f64 {
+        if self.layers.is_empty() {
+            return f64::NAN;
+        }
+        self.layers.iter().map(|(_, o)| o).sum::<f64>()
+            / self.layers.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_filters(n: usize, d: usize, rng: &mut Pcg64) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| {
+                let mut f = vec![0.0f32; d];
+                rng.fill_normal(&mut f, 1.0);
+                f
+            })
+            .collect()
+    }
+
+    #[test]
+    fn identical_overlap_is_one() {
+        let mut rng = Pcg64::new(1, 0);
+        let a = random_filters(8, 16, &mut rng);
+        assert!((layer_overlap(&a, &a) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn permuted_copy_recovers_one() {
+        let mut rng = Pcg64::new(2, 0);
+        let a = random_filters(8, 16, &mut rng);
+        let mut b = a.clone();
+        b.rotate_left(3); // a permutation
+        assert!((layer_overlap(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_pair_overlap_small() {
+        let mut rng = Pcg64::new(3, 0);
+        let a = random_filters(16, 64, &mut rng);
+        let b = random_filters(16, 64, &mut rng);
+        let o = layer_overlap(&a, &b);
+        // matched random gaussian filters have small positive overlap
+        assert!(o < 0.5, "overlap {o}");
+        assert!(o > -0.2, "overlap {o}");
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+}

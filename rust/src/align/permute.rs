@@ -1,0 +1,281 @@
+//! Greedy layer-wise permutation alignment of conv networks (§1.2).
+//!
+//! Works on flat parameter vectors using the manifest's layer table.
+//! A [`ConvStack`] describes the chain of conv layers (HWIO weights);
+//! aligning network B to network A walks the chain, matches out-channels
+//! with the exact assignment solver, and applies the permutation to the
+//! layer's out-channels *and* the next layer's in-channels — preserving
+//! the function B computes exactly (up to GroupNorm group boundaries,
+//! same caveat as the paper's BatchNorm).
+
+use anyhow::{anyhow, Result};
+
+use crate::align::assignment::hungarian;
+use crate::align::overlap::cosine;
+use crate::runtime::LayerInfo;
+
+/// One conv layer inside the flat vector.
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    pub name: String,
+    pub w_off: usize,
+    /// HWIO dims
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub b_off: Option<usize>,
+    pub gn_scale_off: Option<usize>,
+    pub gn_offset_off: Option<usize>,
+}
+
+/// A simple feed-forward chain of conv layers (the All-CNN shape).
+#[derive(Clone, Debug)]
+pub struct ConvStack {
+    pub layers: Vec<ConvLayer>,
+}
+
+impl ConvStack {
+    /// Build from the manifest layer table for All-CNN-style models:
+    /// layers named `cN.w` / `cN.b` / `cN.gn.scale` / `cN.gn.offset`.
+    pub fn from_layer_table(layers: &[LayerInfo]) -> Result<ConvStack> {
+        let find = |name: &str| layers.iter().find(|l| l.name == name);
+        let mut out = Vec::new();
+        for i in 1.. {
+            let w = match find(&format!("c{i}.w")) {
+                Some(w) => w,
+                None => break,
+            };
+            if w.shape.len() != 4 {
+                return Err(anyhow!("{} is not a conv weight", w.name));
+            }
+            out.push(ConvLayer {
+                name: format!("c{i}"),
+                w_off: w.offset,
+                kh: w.shape[0],
+                kw: w.shape[1],
+                cin: w.shape[2],
+                cout: w.shape[3],
+                b_off: find(&format!("c{i}.b")).map(|l| l.offset),
+                gn_scale_off: find(&format!("c{i}.gn.scale"))
+                    .map(|l| l.offset),
+                gn_offset_off: find(&format!("c{i}.gn.offset"))
+                    .map(|l| l.offset),
+            });
+        }
+        if out.len() < 2 {
+            return Err(anyhow!("need at least 2 conv layers to align"));
+        }
+        Ok(ConvStack { layers: out })
+    }
+
+    /// Extract out-channel filters of layer `l` as `cout` rows.
+    pub fn filters(&self, params: &[f32], l: usize) -> Vec<Vec<f32>> {
+        let lay = &self.layers[l];
+        let flen = lay.kh * lay.kw * lay.cin;
+        let mut rows = vec![Vec::with_capacity(flen); lay.cout];
+        // HWIO layout: index = ((h*kw + w)*cin + ci)*cout + co
+        for spatial in 0..flen {
+            for (co, row) in rows.iter_mut().enumerate() {
+                row.push(params[lay.w_off + spatial * lay.cout + co]);
+            }
+        }
+        rows
+    }
+}
+
+/// Apply an out-channel permutation to layer `l` of `params`
+/// (perm[slot] = source channel), including the next layer's in-channels.
+fn apply_perm(stack: &ConvStack, params: &mut [f32], l: usize,
+              perm: &[usize]) {
+    let lay = &stack.layers[l];
+    let flen = lay.kh * lay.kw * lay.cin;
+
+    // out-channels of W[l]
+    let mut neww = vec![0.0f32; flen * lay.cout];
+    for spatial in 0..flen {
+        for (slot, &src) in perm.iter().enumerate() {
+            neww[spatial * lay.cout + slot] =
+                params[lay.w_off + spatial * lay.cout + src];
+        }
+    }
+    params[lay.w_off..lay.w_off + neww.len()].copy_from_slice(&neww);
+
+    // per-channel vectors
+    for off in [lay.b_off, lay.gn_scale_off, lay.gn_offset_off]
+        .into_iter()
+        .flatten()
+    {
+        let old: Vec<f32> = params[off..off + lay.cout].to_vec();
+        for (slot, &src) in perm.iter().enumerate() {
+            params[off + slot] = old[src];
+        }
+    }
+
+    // in-channels of W[l+1]
+    if l + 1 < stack.layers.len() {
+        let nxt = &stack.layers[l + 1];
+        debug_assert_eq!(nxt.cin, lay.cout);
+        let sp = nxt.kh * nxt.kw;
+        let mut neww = vec![0.0f32; sp * nxt.cin * nxt.cout];
+        for s in 0..sp {
+            for (slot, &src) in perm.iter().enumerate() {
+                for co in 0..nxt.cout {
+                    neww[(s * nxt.cin + slot) * nxt.cout + co] = params
+                        [nxt.w_off + (s * nxt.cin + src) * nxt.cout + co];
+                }
+            }
+        }
+        params[nxt.w_off..nxt.w_off + neww.len()].copy_from_slice(&neww);
+    }
+}
+
+/// Align `b` to `a` (greedy layer-wise, exact matching per layer).
+/// Returns the aligned copy of `b` plus per-layer overlap before/after.
+pub fn align_to(
+    stack: &ConvStack,
+    a: &[f32],
+    b: &[f32],
+) -> (Vec<f32>, Vec<(String, f64, f64)>) {
+    let mut out = b.to_vec();
+    let mut report = Vec::new();
+    // the last layer's out-channels are the class logits: fixed
+    for l in 0..stack.layers.len() - 1 {
+        let fa = stack.filters(a, l);
+        let fb = stack.filters(&out, l);
+        let score: Vec<Vec<f64>> = fa
+            .iter()
+            .map(|ra| fb.iter().map(|rb| cosine(ra, rb)).collect())
+            .collect();
+        let before: f64 = (0..fa.len())
+            .map(|i| score[i][i])
+            .sum::<f64>()
+            / fa.len() as f64;
+        let perm = hungarian(&score);
+        let after: f64 = perm
+            .iter()
+            .enumerate()
+            .map(|(i, &j)| score[i][j])
+            .sum::<f64>()
+            / fa.len() as f64;
+        apply_perm(stack, &mut out, l, &perm);
+        report.push((stack.layers[l].name.clone(), before, after));
+    }
+    (out, report)
+}
+
+/// Plain average of several parameter vectors ("one-shot averaging").
+pub fn average_params(nets: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!nets.is_empty());
+    let p = nets[0].len();
+    let mut out = vec![0.0f32; p];
+    for net in nets {
+        for (o, &x) in out.iter_mut().zip(net) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / nets.len() as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Tiny 3-layer stack for tests: c1 3x3x2->4, c2 3x3x4->4, c3 1x1x4->3
+    fn test_stack() -> (ConvStack, usize) {
+        let mut layers = Vec::new();
+        let mut off = 0usize;
+        let dims = [(3, 3, 2, 4), (3, 3, 4, 4), (1, 1, 4, 3)];
+        for (i, &(kh, kw, cin, cout)) in dims.iter().enumerate() {
+            let w = LayerInfo {
+                name: format!("c{}.w", i + 1),
+                shape: vec![kh, kw, cin, cout],
+                offset: off,
+                size: kh * kw * cin * cout,
+            };
+            off += w.size;
+            let b = LayerInfo {
+                name: format!("c{}.b", i + 1),
+                shape: vec![cout],
+                offset: off,
+                size: cout,
+            };
+            off += cout;
+            layers.push(w);
+            layers.push(b);
+        }
+        (ConvStack::from_layer_table(&layers).unwrap(), off)
+    }
+
+    fn random_params(p: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 0);
+        let mut v = vec![0.0f32; p];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    /// Manually permute out-channels of layer l (reference impl used to
+    /// build a ground-truth permuted network).
+    fn scramble(stack: &ConvStack, params: &[f32], l: usize,
+                perm: &[usize]) -> Vec<f32> {
+        let mut out = params.to_vec();
+        apply_perm(stack, &mut out, l, perm);
+        out
+    }
+
+    #[test]
+    fn alignment_recovers_scrambled_network() {
+        let (stack, p) = test_stack();
+        let a = random_params(p, 1);
+        // b = a with hidden layers permuted
+        let b = scramble(&stack, &a, 0, &[2, 0, 3, 1]);
+        let b = scramble(&stack, &b, 1, &[1, 3, 0, 2]);
+        // before alignment, networks differ
+        assert!(a.iter().zip(&b).any(|(x, y)| (x - y).abs() > 1e-6));
+        let (aligned, report) = align_to(&stack, &a, &b);
+        for (i, (x, y)) in a.iter().zip(&aligned).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-5,
+                "param {i} differs after alignment: {x} vs {y}"
+            );
+        }
+        for (name, _before, after) in &report {
+            assert!(*after > 0.999, "{name} overlap after = {after}");
+        }
+    }
+
+    #[test]
+    fn apply_perm_preserves_multiset() {
+        let (stack, p) = test_stack();
+        let a = random_params(p, 2);
+        let b = scramble(&stack, &a, 0, &[3, 2, 1, 0]);
+        let mut sa = a.clone();
+        let mut sb = b.clone();
+        sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        sb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(sa, sb); // permutation moves values, loses none
+    }
+
+    #[test]
+    fn average_params_means() {
+        let a = vec![1.0f32, 3.0];
+        let b = vec![3.0f32, 5.0];
+        assert_eq!(average_params(&[a, b]), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn stack_requires_conv_chain() {
+        let layers = vec![LayerInfo {
+            name: "fc0.w".into(),
+            shape: vec![4, 4],
+            offset: 0,
+            size: 16,
+        }];
+        assert!(ConvStack::from_layer_table(&layers).is_err());
+    }
+}

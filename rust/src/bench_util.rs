@@ -1,0 +1,121 @@
+//! Micro/endto-end benchmark harness (criterion is not in the offline
+//! vendor set; this provides the subset we need: warmup, repeated timed
+//! runs, robust statistics, aligned reporting).
+//!
+//! Benches live in `rust/benches/*.rs` with `harness = false` and print
+//! one row per paper table/figure configuration.
+
+use crate::util::stats::Stats;
+use crate::util::timer::Timer;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>8} it  {:>12} ±{:>10}  p50 {:>12}",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.std_s),
+            fmt_s(self.p50_s),
+        )
+    }
+
+    /// throughput helper given work units per iteration
+    pub fn per_second(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    for _ in 0..iters {
+        let t = Timer::new();
+        f();
+        stats.push(t.elapsed_s());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats.mean(),
+        std_s: stats.std(),
+        p50_s: stats.median(),
+        min_s: stats.min(),
+    }
+}
+
+/// Auto-calibrating variant: picks an iteration count so the case runs
+/// for roughly `budget_s` seconds (at least `min_iters`).
+pub fn bench_for<F: FnMut()>(name: &str, budget_s: f64, min_iters: usize,
+                             mut f: F) -> BenchResult {
+    // one probe iteration
+    let t = Timer::new();
+    f();
+    let probe = t.elapsed_s().max(1e-9);
+    let iters = ((budget_s / probe) as usize).clamp(min_iters, 10_000);
+    bench(name, 1, iters, f)
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let r = bench("sleep", 0, 3, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert!(r.mean_s >= 0.002);
+        assert_eq!(r.iters, 3);
+        assert!(r.row().contains("sleep"));
+    }
+
+    #[test]
+    fn bench_for_calibrates() {
+        let r = bench_for("noop", 0.01, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_s(2e-9).contains("ns"));
+        assert!(fmt_s(2e-5).contains("µs"));
+        assert!(fmt_s(2e-2).contains("ms"));
+        assert!(fmt_s(2.0).contains(" s"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Typed run configuration + a small `key=value` override parser.
+//!
+//! Experiments are driven by presets (one per paper table/figure row,
+//! see [`crate::experiments`]); the CLI lets any field be overridden with
+//! `--set key=value` pairs so ablations don't need code changes.
+
+pub mod run;
+
+pub use run::{Algo, CommCfg, RunConfig, ScopingCfg};

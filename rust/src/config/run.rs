@@ -1,0 +1,284 @@
+//! RunConfig: everything one training run needs.
+
+use anyhow::{bail, Result};
+
+use crate::data::DataConfig;
+use crate::opt::LrSchedule;
+
+/// Which algorithm drives the run (§2/§3 of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Parle (8a)-(8d): Entropy-SGD inner loop + elastic coupling.
+    Parle,
+    /// Entropy-SGD (6a)-(6c): sequential, n forced to 1.
+    EntropySgd,
+    /// Elastic-SGD (7a)-(7b): couple every step through the reference.
+    ElasticSgd,
+    /// Plain SGD with Nesterov momentum (sequential baseline).
+    Sgd,
+    /// Synchronous data-parallel SGD (gradient averaging across workers).
+    SgdDataParallel,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s {
+            "parle" => Algo::Parle,
+            "entropy-sgd" | "entropy" => Algo::EntropySgd,
+            "elastic-sgd" | "elastic" => Algo::ElasticSgd,
+            "sgd" => Algo::Sgd,
+            "sgd-dp" | "sgd-data-parallel" => Algo::SgdDataParallel,
+            other => bail!("unknown algo {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Parle => "parle",
+            Algo::EntropySgd => "entropy-sgd",
+            Algo::ElasticSgd => "elastic-sgd",
+            Algo::Sgd => "sgd",
+            Algo::SgdDataParallel => "sgd-dp",
+        }
+    }
+}
+
+/// Scoping mode for gamma/rho (eq. 9).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScopingCfg {
+    /// Paper schedule: gamma0=100, rho0=1, decay (1-1/2B)^(k/L).
+    Paper,
+    /// Constant values (the §4.4 "no scoping" ablation).
+    Constant { gamma: f32, rho: f32 },
+}
+
+/// Optional simulated-interconnect model applied to every reduce.
+#[derive(Clone, Copy, Debug)]
+pub struct CommCfg {
+    /// Per-message latency in seconds (0 disables simulation).
+    pub latency_s: f64,
+    /// Link bandwidth in bytes/s (f64::INFINITY disables).
+    pub bandwidth_bps: f64,
+}
+
+impl CommCfg {
+    pub fn off() -> Self {
+        CommCfg {
+            latency_s: 0.0,
+            bandwidth_bps: f64::INFINITY,
+        }
+    }
+
+    /// PCI-E 3.0 x16-ish profile (the paper's testbed interconnect).
+    pub fn pcie() -> Self {
+        CommCfg {
+            latency_s: 10e-6,
+            bandwidth_bps: 12e9,
+        }
+    }
+
+    /// Commodity 10 GbE cluster profile (distributed deployment).
+    pub fn ethernet_10g() -> Self {
+        CommCfg {
+            latency_s: 50e-6,
+            bandwidth_bps: 1.1e9,
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.latency_s == 0.0 && self.bandwidth_bps.is_infinite()
+    }
+
+    /// Simulated transfer time for a payload.
+    pub fn transfer_s(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Full specification of one training run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub algo: Algo,
+    /// Number of replicas n (forced to 1 for sequential algorithms).
+    pub replicas: usize,
+    /// Training length in epochs over the (per-replica) training set.
+    pub epochs: f64,
+    /// Communication period L (minibatches between reduces). The paper
+    /// fixes L=25 for Parle/Entropy-SGD and L=1 for Elastic-SGD.
+    pub l_steps: usize,
+    /// Exponential-average factor alpha (8b); paper: 0.75.
+    pub alpha: f32,
+    /// Nesterov momentum; paper: 0.9.
+    pub momentum: f32,
+    pub lr: LrSchedule,
+    pub weight_decay: f32,
+    pub scoping: ScopingCfg,
+    pub data: DataConfig,
+    /// §5: split the training set into disjoint shards, one per replica.
+    pub split_data: bool,
+    /// Evaluate on the validation set every this many communication
+    /// rounds (0 = only at the end).
+    pub eval_every_rounds: usize,
+    /// Use the fused L-step scan artifact instead of per-step dispatch.
+    pub use_scan: bool,
+    pub comm: CommCfg,
+    pub seed: u64,
+    pub artifacts_dir: String,
+}
+
+impl RunConfig {
+    /// Sensible defaults for a model (paper hyper-parameters §3.1).
+    pub fn new(model: &str, algo: Algo) -> Self {
+        let replicas = match algo {
+            Algo::Sgd | Algo::EntropySgd => 1,
+            _ => 3,
+        };
+        let l_steps = match algo {
+            Algo::ElasticSgd | Algo::Sgd | Algo::SgdDataParallel => 1,
+            _ => 25,
+        };
+        RunConfig {
+            model: model.to_string(),
+            algo,
+            replicas,
+            epochs: 3.0,
+            l_steps,
+            alpha: 0.75,
+            momentum: 0.9,
+            lr: LrSchedule::new(0.1, vec![2, 4, 6], 5.0),
+            weight_decay: 5e-4,
+            scoping: ScopingCfg::Paper,
+            data: DataConfig::default(),
+            split_data: false,
+            eval_every_rounds: 10,
+            use_scan: false,
+            comm: CommCfg::off(),
+            seed: 42,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+
+    /// Apply a `key=value` override; returns an error for unknown keys.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "model" => self.model = value.to_string(),
+            "algo" => self.algo = Algo::parse(value)?,
+            "replicas" | "n" => self.replicas = value.parse()?,
+            "epochs" => self.epochs = value.parse()?,
+            "l" | "l_steps" => self.l_steps = value.parse()?,
+            "alpha" => self.alpha = value.parse()?,
+            "momentum" => self.momentum = value.parse()?,
+            "lr" => self.lr.base = value.parse()?,
+            "wd" | "weight_decay" => self.weight_decay = value.parse()?,
+            "train" => self.data.train = value.parse()?,
+            "val" => self.data.val = value.parse()?,
+            "difficulty" => self.data.difficulty = value.parse()?,
+            "split_data" => self.split_data = value.parse()?,
+            "eval_every" => self.eval_every_rounds = value.parse()?,
+            "use_scan" => self.use_scan = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "artifacts" => self.artifacts_dir = value.to_string(),
+            "scoping" => {
+                self.scoping = match value {
+                    "paper" => ScopingCfg::Paper,
+                    "off" => ScopingCfg::Constant {
+                        gamma: 100.0,
+                        rho: 1.0,
+                    },
+                    other => bail!("unknown scoping {other:?}"),
+                }
+            }
+            "comm" => {
+                self.comm = match value {
+                    "off" => CommCfg::off(),
+                    "pcie" => CommCfg::pcie(),
+                    "10g" => CommCfg::ethernet_10g(),
+                    other => bail!("unknown comm profile {other:?}"),
+                }
+            }
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Consistency checks before a run starts.
+    pub fn validate(&self) -> Result<()> {
+        if self.replicas == 0 {
+            bail!("replicas must be >= 1");
+        }
+        if matches!(self.algo, Algo::Sgd | Algo::EntropySgd)
+            && self.replicas != 1
+        {
+            bail!(
+                "{} is sequential; set replicas=1 (got {})",
+                self.algo.name(),
+                self.replicas
+            );
+        }
+        if self.l_steps == 0 {
+            bail!("l_steps must be >= 1");
+        }
+        if self.split_data && self.replicas < 2 {
+            bail!("split_data needs >= 2 replicas");
+        }
+        if !(0.0..=1.0).contains(&self.alpha) {
+            bail!("alpha must be in [0, 1]");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_roundtrip() {
+        for a in [
+            Algo::Parle,
+            Algo::EntropySgd,
+            Algo::ElasticSgd,
+            Algo::Sgd,
+            Algo::SgdDataParallel,
+        ] {
+            assert_eq!(Algo::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algo::parse("momentum").is_err());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = RunConfig::new("mlp_synth", Algo::Parle);
+        c.set("replicas", "6").unwrap();
+        c.set("epochs", "1.5").unwrap();
+        c.set("lr", "0.05").unwrap();
+        c.set("scoping", "off").unwrap();
+        assert_eq!(c.replicas, 6);
+        assert_eq!(c.epochs, 1.5);
+        assert_eq!(c.lr.base, 0.05);
+        assert!(matches!(c.scoping, ScopingCfg::Constant { .. }));
+        assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn validation() {
+        let mut c = RunConfig::new("mlp_synth", Algo::Sgd);
+        assert!(c.validate().is_ok());
+        c.replicas = 3;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::new("mlp_synth", Algo::Parle);
+        c.split_data = true;
+        c.replicas = 1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn comm_profiles() {
+        assert!(CommCfg::off().is_off());
+        let p = CommCfg::pcie();
+        // 100 MB over pci-e ~ 8.3 ms + latency
+        let t = p.transfer_s(100_000_000);
+        assert!(t > 8e-3 && t < 10e-3, "{t}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Checkpointing: persist/restore flat parameter vectors (+ metadata).
+//!
+//! Format: a small self-describing binary — magic, version, model name,
+//! param count, f64 metadata pairs, then raw little-endian f32 payload.
+//! Deliberately dependency-free (no npy/serde in the offline vendor set)
+//! and versioned so future fields stay backward-compatible.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"PARLECK1";
+
+/// A saved training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub params: Vec<f32>,
+    /// free-form numeric metadata (epoch, val_err, lr, ...)
+    pub meta: Vec<(String, f64)>,
+}
+
+impl Checkpoint {
+    pub fn new(model: &str, params: Vec<f32>) -> Self {
+        Checkpoint {
+            model: model.to_string(),
+            params,
+            meta: Vec::new(),
+        }
+    }
+
+    pub fn with(mut self, key: &str, value: f64) -> Self {
+        self.meta.push((key.to_string(), value));
+        self
+    }
+
+    pub fn meta_value(&self, key: &str) -> Option<f64> {
+        self.meta.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = std::io::BufWriter::new(
+            std::fs::File::create(&path).with_context(|| {
+                format!("creating {}", path.as_ref().display())
+            })?,
+        );
+        out.write_all(MAGIC)?;
+        write_str(&mut out, &self.model)?;
+        out.write_all(&(self.meta.len() as u32).to_le_bytes())?;
+        for (k, v) in &self.meta {
+            write_str(&mut out, k)?;
+            out.write_all(&v.to_le_bytes())?;
+        }
+        out.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        for x in &self.params {
+            out.write_all(&x.to_le_bytes())?;
+        }
+        out.flush()?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path).with_context(|| {
+                format!("opening {}", path.as_ref().display())
+            })?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a parle checkpoint (bad magic)");
+        }
+        let model = read_str(&mut f)?;
+        let n_meta = read_u32(&mut f)? as usize;
+        if n_meta > 1_000_000 {
+            bail!("corrupt checkpoint: {n_meta} metadata entries");
+        }
+        let mut meta = Vec::with_capacity(n_meta);
+        for _ in 0..n_meta {
+            let k = read_str(&mut f)?;
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            meta.push((k, f64::from_le_bytes(b)));
+        }
+        let mut b = [0u8; 8];
+        f.read_exact(&mut b)?;
+        let p = u64::from_le_bytes(b) as usize;
+        if p > (1 << 33) {
+            bail!("corrupt checkpoint: {p} parameters");
+        }
+        let mut raw = vec![0u8; p * 4];
+        f.read_exact(&mut raw)?;
+        let params = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint {
+            model,
+            params,
+            meta,
+        })
+    }
+}
+
+fn write_str<W: Write>(out: &mut W, s: &str) -> Result<()> {
+    out.write_all(&(s.len() as u32).to_le_bytes())?;
+    out.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(f: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_str<R: Read>(f: &mut R) -> Result<String> {
+    let len = read_u32(f)? as usize;
+    if len > (1 << 20) {
+        bail!("corrupt checkpoint: string of {len} bytes");
+    }
+    let mut b = vec![0u8; len];
+    f.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint::new("mlp_synth", vec![1.0, -2.5, 3.25])
+            .with("epoch", 4.0)
+            .with("val_err", 0.032);
+        let path = std::env::temp_dir().join("parle_ck_test/a.ck");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        assert_eq!(back.meta_value("epoch"), Some(4.0));
+        assert_eq!(back.meta_value("nope"), None);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("parle_ck_test2/bad.ck");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Checkpoint::load("/nonexistent/x.ck").is_err());
+    }
+
+    #[test]
+    fn large_vector_roundtrip() {
+        let params: Vec<f32> = (0..100_000).map(|i| i as f32 * 0.5).collect();
+        let ck = Checkpoint::new("wrn_cifar10", params.clone());
+        let path = std::env::temp_dir().join("parle_ck_test3/big.ck");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.params, params);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

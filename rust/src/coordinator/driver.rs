@@ -1,0 +1,323 @@
+//! Master driver: spawns replicas, runs the round loop, owns the
+//! reference variable, scoping, evaluation and metrics.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Algo, RunConfig, ScopingCfg};
+use crate::coordinator::comm::{CommMeter, ReplicaLink, RoundCmd,
+                               RoundReport};
+use crate::coordinator::replica::{batch_literals, run_replica, ReplicaCfg};
+use crate::coordinator::sgd_dp;
+use crate::coordinator::spec::CoupledSpec;
+use crate::data::batcher::{Augment, Batcher};
+use crate::data::{build, split_shards, Dataset};
+use crate::metrics::{Curve, CurvePoint, RunRecord};
+use crate::opt::{vecmath, Scoping};
+use crate::runtime::{lit_f32, Session};
+use crate::util::timer::{PhaseProfiler, Timer};
+use crate::info;
+
+/// Result of a training run: record + final parameters.
+pub struct TrainOutput {
+    pub record: RunRecord,
+    pub final_params: Vec<f32>,
+}
+
+/// Train according to `cfg`; `label` names the run in records/CSVs.
+pub fn train(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
+    cfg.validate()?;
+    if cfg.algo == Algo::SgdDataParallel {
+        return sgd_dp::train_data_parallel(cfg, label);
+    }
+    train_coupled(cfg, label)
+}
+
+fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
+    let spec = CoupledSpec::from_algo(cfg.algo, cfg.replicas);
+    let profiler = PhaseProfiler::new();
+    let meter = Arc::new(CommMeter::new());
+
+    // --- master session + data -------------------------------------------
+    let master = Session::open(&cfg.artifacts_dir)?;
+    let mm = master.manifest.model(&cfg.model)?.clone();
+    let (train_ds, val_ds) = build(&mm.dataset, &cfg.data)?;
+    let augment = default_augment(&mm.dataset);
+
+    // shards
+    let replica_datasets: Vec<Arc<Dataset>> = if cfg.split_data {
+        match &train_ds {
+            Dataset::Image(img) => split_shards(img, cfg.replicas, cfg.seed)
+                .into_iter()
+                .map(|s| Arc::new(Dataset::Image(s)))
+                .collect(),
+            Dataset::Corpus(_) => bail!("split_data needs an image dataset"),
+        }
+    } else {
+        let shared = Arc::new(train_ds);
+        (0..cfg.replicas).map(|_| shared.clone()).collect()
+    };
+
+    let batches_per_epoch =
+        (replica_datasets[0].len() / mm.batch).max(1);
+    let total_rounds = ((cfg.epochs * batches_per_epoch as f64
+        / cfg.l_steps as f64)
+        .ceil() as u64)
+        .max(1);
+
+    let mut scoping = match cfg.scoping {
+        ScopingCfg::Paper => Scoping::paper(batches_per_epoch),
+        ScopingCfg::Constant { gamma, rho } => Scoping::constant(gamma, rho),
+    };
+
+    // --- spawn replicas ----------------------------------------------------
+    let mut links: Vec<ReplicaLink> = Vec::with_capacity(cfg.replicas);
+    let mut handles = Vec::with_capacity(cfg.replicas);
+    for a in 0..cfg.replicas {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<RoundCmd>();
+        let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
+        links.push(ReplicaLink { cmd_tx, report_rx });
+        let rcfg = ReplicaCfg {
+            id: a,
+            model: cfg.model.clone(),
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            spec,
+            l_steps: cfg.l_steps,
+            alpha: cfg.alpha,
+            momentum: cfg.momentum,
+            weight_decay: cfg.weight_decay,
+            use_scan: cfg.use_scan,
+            augment,
+            seed: cfg.seed.wrapping_add(a as u64 * 7919),
+            init_seed: cfg.seed,
+            fixed_inner_lr: if spec.outer_step {
+                Some(cfg.lr.base)
+            } else {
+                None
+            },
+        };
+        let ds = replica_datasets[a].clone();
+        let m = meter.clone();
+        let comm = cfg.comm;
+        handles.push(std::thread::spawn(move || {
+            let id = rcfg.id;
+            let r = run_replica(rcfg, ds, cmd_rx, report_tx, m, comm);
+            if let Err(e) = &r {
+                crate::util::logging::log(
+                    crate::util::logging::Level::Error,
+                    "replica",
+                    &format!("replica {id} failed: {e:#}"),
+                );
+            }
+            r
+        }));
+    }
+
+    // --- reference init ----------------------------------------------------
+    let init = master.execute(
+        &cfg.model,
+        "init",
+        &[crate::runtime::lit_scalar_i32(cfg.seed as i32)],
+    )?;
+    let mut xref: Vec<f32> = crate::runtime::to_f32(&init[0])?;
+    let p = xref.len();
+
+    let eval_batches = {
+        let b = Batcher::new(
+            &val_ds,
+            mm.batch,
+            lm_seq_len(&mm),
+            Augment::none(),
+            cfg.seed,
+            0xe,
+        );
+        b.eval_batches()
+    };
+
+    // --- round loop ---------------------------------------------------------
+    let wall = Timer::new();
+    let mut curve = Curve::new();
+    let mut step_seconds = 0.0f64;
+    let mut last_train = (f64::NAN, f64::NAN);
+
+    for round in 0..total_rounds {
+        let epoch =
+            round as f64 * cfg.l_steps as f64 / batches_per_epoch as f64;
+        let lr = cfg.lr.at(epoch);
+        let xref_arc = Arc::new(xref.clone());
+        for link in &links {
+            meter.account(p * 4); // broadcast payload
+            link.cmd_tx
+                .send(RoundCmd::Round {
+                    round,
+                    xref: xref_arc.clone(),
+                    lr,
+                    gamma_inv: scoping.gamma_inv(),
+                    rho_inv: scoping.rho_inv(),
+                    eta_over_rho: lr * scoping.rho_inv(),
+                })
+                .ok();
+        }
+        // collect reports (barrier = synchronous reduce, like the paper)
+        let mut reports: Vec<RoundReport> = Vec::with_capacity(cfg.replicas);
+        for link in &links {
+            reports.push(
+                link.report_rx
+                    .recv()
+                    .context("replica died mid-round")?,
+            );
+        }
+        reports.sort_by_key(|r| r.replica);
+        step_seconds += reports
+            .iter()
+            .map(|r| r.step_s)
+            .fold(0.0f64, f64::max);
+        last_train = (
+            reports.iter().map(|r| r.train_loss).sum::<f64>()
+                / reports.len() as f64,
+            reports.iter().map(|r| r.train_err).sum::<f64>()
+                / reports.len() as f64,
+        );
+
+        // ---- (8d): x <- mean of replicas --------------------------------
+        profiler.scope("reduce", || {
+            if spec.reduce {
+                let views: Vec<&[f32]> =
+                    reports.iter().map(|r| r.params.as_slice()).collect();
+                vecmath::mean_into(&mut xref, &views);
+            } else {
+                xref.copy_from_slice(&reports[0].params);
+            }
+        });
+        scoping.step();
+
+        // ---- evaluation ---------------------------------------------------
+        let is_last = round + 1 == total_rounds;
+        if is_last
+            || (cfg.eval_every_rounds > 0
+                && (round + 1) % cfg.eval_every_rounds as u64 == 0)
+        {
+            let val_err = profiler.scope("eval", || {
+                evaluate(&master, &cfg.model, &mm, &xref, &eval_batches)
+            })?;
+            curve.push(CurvePoint {
+                wall_s: wall.elapsed_s(),
+                epoch: epoch + cfg.l_steps as f64 / batches_per_epoch as f64,
+                train_loss: last_train.0,
+                train_err: last_train.1,
+                val_err,
+            });
+            info!(
+                "{label} round {}/{} epoch {:.2} lr {:.4} γ {:.2} ρ {:.3} \
+                 train {:.3}/{:.1}% val {:.2}%",
+                round + 1,
+                total_rounds,
+                epoch,
+                lr,
+                scoping.gamma(),
+                scoping.rho(),
+                last_train.0,
+                last_train.1 * 100.0,
+                val_err * 100.0
+            );
+        }
+    }
+
+    // --- shutdown -----------------------------------------------------------
+    for link in &links {
+        link.cmd_tx.send(RoundCmd::Stop).ok();
+    }
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("replica thread panicked"))??;
+    }
+
+    let wall_s = wall.elapsed_s();
+    let comm_s = profiler.total("reduce");
+    let last = curve.last().copied().unwrap_or(CurvePoint {
+        wall_s,
+        epoch: cfg.epochs,
+        train_loss: last_train.0,
+        train_err: last_train.1,
+        val_err: f64::NAN,
+    });
+    let record = RunRecord {
+        label: label.to_string(),
+        model: cfg.model.clone(),
+        algo: cfg.algo.name().to_string(),
+        replicas: cfg.replicas,
+        curve,
+        wall_s,
+        final_val_err: last.val_err,
+        final_train_err: last.train_err,
+        final_train_loss: last.train_loss,
+        comm_bytes: meter.bytes(),
+        comm_ratio: if step_seconds > 0.0 {
+            comm_s / step_seconds
+        } else {
+            f64::NAN
+        },
+        phases: profiler.snapshot(),
+    };
+    Ok(TrainOutput {
+        record,
+        final_params: xref,
+    })
+}
+
+/// Mean validation error of `params` over pre-built eval batches.
+pub fn evaluate(
+    session: &Session,
+    model: &str,
+    mm: &crate::runtime::ModelManifest,
+    params: &[f32],
+    batches: &[crate::data::batcher::Batch],
+) -> Result<f64> {
+    let p = mm.param_count;
+    let mut err_count = 0.0f64;
+    let mut total = 0.0f64;
+    for b in batches {
+        let (xb, yb) = batch_literals(mm, b)?;
+        let outs = session.execute(
+            model,
+            "eval_chunk",
+            &[lit_f32(params, &[p])?, xb, yb],
+        )?;
+        err_count +=
+            crate::runtime::tensor::scalar_f32(&outs[1])? as f64;
+        total += (b.n * mm.labels_per_example()) as f64;
+    }
+    Ok(err_count / total.max(1.0))
+}
+
+/// Augmentation policy per dataset tag (paper §4.2-§4.4: CIFAR gets
+/// flips+crops, MNIST and SVHN are raw).
+pub fn default_augment(dataset: &str) -> Augment {
+    match dataset {
+        "synth_cifar10" | "synth_cifar100" => Augment::cifar(),
+        _ => Augment::none(),
+    }
+}
+
+/// Sequence length for LM models (0 for image models).
+pub fn lm_seq_len(mm: &crate::runtime::ModelManifest) -> usize {
+    if mm.label_shape.is_empty() {
+        0
+    } else {
+        mm.input_shape[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn augment_policy() {
+        assert!(default_augment("synth_cifar10").mirror);
+        assert!(!default_augment("synth_mnist").mirror);
+        assert_eq!(default_augment("synth_svhn").crop_pad, 0);
+    }
+}

@@ -1,0 +1,243 @@
+//! §3.2 "Many deputies under one sheriff" — the fully-distributed Parle
+//! variant of eq. (10):
+//!
+//! ```text
+//!   min  Σ_a [ Σ_b f(y^b) + 1/(2γ) ||y^b − x^a||²  +  1/(2ρ) ||x^a − x||² ]
+//! ```
+//!
+//! Two coupling levels: workers `y^b` proximally tied to their deputy
+//! `x^a` (γ), deputies elastically tied to the sheriff `x` (ρ). The
+//! paper notes the naive formulation costs O(n²N) per update and that
+//! running it with the (6)/(7) updates keeps the amortized O(2nN/L)
+//! cost — which is what this driver does:
+//!
+//! * each worker thread runs L inner steps anchored to its deputy
+//!   (reference-anchored, γ-gain, reset-to-anchor each round),
+//! * the master updates each deputy toward the mean of its workers
+//!   plus the elastic pull toward the sheriff (8c with z := worker
+//!   mean), then sets the sheriff to the deputy mean (8d),
+//! * scoping (9) anneals both γ and ρ.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{RunConfig, ScopingCfg};
+use crate::coordinator::comm::{CommMeter, ReplicaLink, RoundCmd,
+                               RoundReport};
+use crate::coordinator::driver::{default_augment, evaluate, lm_seq_len,
+                                 TrainOutput};
+use crate::coordinator::replica::{run_replica, ReplicaCfg};
+use crate::coordinator::spec::{Anchor, CoupledSpec, Gain};
+use crate::data::batcher::{Augment, Batcher};
+use crate::data::{build, Dataset};
+use crate::metrics::{Curve, CurvePoint, RunRecord};
+use crate::opt::{vecmath, Scoping};
+use crate::runtime::Session;
+use crate::util::timer::{PhaseProfiler, Timer};
+use crate::info;
+
+/// Train with `deputies` groups of `workers_per_deputy` workers each.
+/// `cfg.replicas` is ignored; total workers = deputies x workers_per.
+pub fn train_hierarchical(
+    cfg: &RunConfig,
+    deputies: usize,
+    workers_per_deputy: usize,
+    label: &str,
+) -> Result<TrainOutput> {
+    assert!(deputies >= 1 && workers_per_deputy >= 1);
+    let profiler = PhaseProfiler::new();
+    let meter = Arc::new(CommMeter::new());
+
+    let master = Session::open(&cfg.artifacts_dir)?;
+    let mm = master.manifest.model(&cfg.model)?.clone();
+    let (train_ds, val_ds) = build(&mm.dataset, &cfg.data)?;
+    let augment = default_augment(&mm.dataset);
+    let shared = Arc::new(train_ds);
+
+    let n_workers = deputies * workers_per_deputy;
+    let batches_per_epoch = (shared.len() / mm.batch).max(1);
+    let total_rounds = ((cfg.epochs * batches_per_epoch as f64
+        / cfg.l_steps as f64)
+        .ceil() as u64)
+        .max(1);
+    let mut scoping = match cfg.scoping {
+        ScopingCfg::Paper => Scoping::paper(batches_per_epoch),
+        ScopingCfg::Constant { gamma, rho } => Scoping::constant(gamma, rho),
+    };
+
+    // workers: reference-anchored (the reference they receive is their
+    // DEPUTY, not the sheriff), gamma-gain, reset to the deputy each
+    // round — the y^b update of eq. (10).
+    let spec = CoupledSpec {
+        anchor: Anchor::Reference,
+        gain: Gain::GammaInv,
+        outer_step: false,
+        reset_y: false,
+        reduce: true,
+        outer_elastic: false,
+    };
+
+    let mut links: Vec<ReplicaLink> = Vec::with_capacity(n_workers);
+    let mut handles = Vec::with_capacity(n_workers);
+    for w in 0..n_workers {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<RoundCmd>();
+        let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
+        links.push(ReplicaLink { cmd_tx, report_rx });
+        let rcfg = ReplicaCfg {
+            id: w,
+            model: cfg.model.clone(),
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            spec,
+            l_steps: cfg.l_steps,
+            alpha: cfg.alpha,
+            momentum: cfg.momentum,
+            weight_decay: cfg.weight_decay,
+            use_scan: false,
+            augment,
+            seed: cfg.seed.wrapping_add(w as u64 * 7919),
+            init_seed: cfg.seed,
+            fixed_inner_lr: Some(cfg.lr.base),
+        };
+        let ds = shared.clone();
+        let m = meter.clone();
+        let comm = cfg.comm;
+        handles.push(std::thread::spawn(move || {
+            run_replica(rcfg, ds, cmd_rx, report_tx, m, comm)
+        }));
+    }
+
+    // deputies + sheriff
+    let init = master.execute(
+        &cfg.model,
+        "init",
+        &[crate::runtime::lit_scalar_i32(cfg.seed as i32)],
+    )?;
+    let x0: Vec<f32> = crate::runtime::to_f32(&init[0])?;
+    let p = x0.len();
+    let mut sheriff = x0.clone();
+    let mut deps: Vec<Vec<f32>> = vec![x0; deputies];
+    let mut dep_vel: Vec<Vec<f32>> = vec![vec![0.0; p]; deputies];
+
+    let eval_batches = Batcher::new(&val_ds, mm.batch, lm_seq_len(&mm),
+                                    Augment::none(), cfg.seed, 0xe)
+        .eval_batches();
+
+    let wall = Timer::new();
+    let mut curve = Curve::new();
+    let mut last_train = (f64::NAN, f64::NAN);
+    let _ = &shared; // dataset kept alive via Arc clones in workers
+
+    for round in 0..total_rounds {
+        let epoch =
+            round as f64 * cfg.l_steps as f64 / batches_per_epoch as f64;
+        let lr = cfg.lr.at(epoch);
+
+        // broadcast: each worker's "reference" is its deputy
+        for (w, link) in links.iter().enumerate() {
+            let d = w / workers_per_deputy;
+            meter.account(p * 4);
+            link.cmd_tx
+                .send(RoundCmd::Round {
+                    round,
+                    xref: Arc::new(deps[d].clone()),
+                    lr,
+                    gamma_inv: scoping.gamma_inv(),
+                    rho_inv: scoping.rho_inv(),
+                    eta_over_rho: lr * scoping.rho_inv(),
+                })
+                .ok();
+        }
+        let mut reports: Vec<RoundReport> = Vec::with_capacity(n_workers);
+        for link in &links {
+            reports.push(link.report_rx.recv().context("worker died")?);
+        }
+        reports.sort_by_key(|r| r.replica);
+        last_train = (
+            reports.iter().map(|r| r.train_loss).sum::<f64>()
+                / reports.len() as f64,
+            reports.iter().map(|r| r.train_err).sum::<f64>()
+                / reports.len() as f64,
+        );
+
+        profiler.scope("reduce", || {
+            // deputy update: toward its group's worker mean + sheriff
+            let mut group_mean = vec![0.0f32; p];
+            for d in 0..deputies {
+                let group: Vec<&[f32]> = reports
+                    [d * workers_per_deputy..(d + 1) * workers_per_deputy]
+                    .iter()
+                    .map(|r| r.params.as_slice())
+                    .collect();
+                vecmath::mean_into(&mut group_mean, &group);
+                vecmath::outer_step(
+                    &mut deps[d],
+                    &mut dep_vel[d],
+                    &group_mean,
+                    &sheriff,
+                    lr,
+                    lr * scoping.rho_inv(),
+                    cfg.momentum,
+                );
+            }
+            // sheriff = mean of deputies (8d)
+            let views: Vec<&[f32]> =
+                deps.iter().map(|d| d.as_slice()).collect();
+            vecmath::mean_into(&mut sheriff, &views);
+        });
+        scoping.step();
+
+        let is_last = round + 1 == total_rounds;
+        if is_last
+            || (cfg.eval_every_rounds > 0
+                && (round + 1) % cfg.eval_every_rounds as u64 == 0)
+        {
+            let val_err = profiler.scope("eval", || {
+                evaluate(&master, &cfg.model, &mm, &sheriff, &eval_batches)
+            })?;
+            curve.push(CurvePoint {
+                wall_s: wall.elapsed_s(),
+                epoch,
+                train_loss: last_train.0,
+                train_err: last_train.1,
+                val_err,
+            });
+            info!(
+                "{label} round {}/{} sheriff val {:.2}% train {:.1}%",
+                round + 1,
+                total_rounds,
+                val_err * 100.0,
+                last_train.1 * 100.0
+            );
+        }
+    }
+
+    for link in &links {
+        link.cmd_tx.send(RoundCmd::Stop).ok();
+    }
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    }
+
+    let last = curve.last().copied().unwrap();
+    let record = RunRecord {
+        label: label.to_string(),
+        model: cfg.model.clone(),
+        algo: format!("deputies-{deputies}x{workers_per_deputy}"),
+        replicas: n_workers,
+        curve,
+        wall_s: wall.elapsed_s(),
+        final_val_err: last.val_err,
+        final_train_err: last.train_err,
+        final_train_loss: last.train_loss,
+        comm_bytes: meter.bytes(),
+        comm_ratio: f64::NAN,
+        phases: profiler.snapshot(),
+    };
+    Ok(TrainOutput {
+        record,
+        final_params: sheriff,
+    })
+}

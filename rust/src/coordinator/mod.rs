@@ -1,0 +1,36 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! Topology: `n` replica worker **threads**, each owning a private PJRT
+//! [`crate::runtime::Session`] (one "device" per replica, exactly the
+//! paper's one-GPU-per-replica layout), plus the master thread that owns
+//! the reference variable `x`, the scoping schedule, evaluation, and the
+//! reduce/broadcast fabric.
+//!
+//! A communication **round** = `L` inner minibatch steps on every replica
+//! followed by one exchange with the master:
+//!
+//! ```text
+//!  master ──(xref, lr, 1/γ, 1/ρ)──▶ replica a      [broadcast, O(N)]
+//!  replica a: L × inner_step artifact (8a)+(8b)    [compute]
+//!             outer step (8c) host-side            [O(N) vector op]
+//!  replica a ──(x^a, loss stats)──▶ master         [reduce, O(N)]
+//!  master: x ← mean_a x^a (8d), scoping.step() (9) [reduce]
+//! ```
+//!
+//! All four algorithms in the paper are projections of this loop — see
+//! [`spec::CoupledSpec`]. Synchronous data-parallel SGD (the baseline)
+//! swaps the round body for per-minibatch gradient averaging
+//! ([`sgd_dp`]).
+
+pub mod checkpoint;
+pub mod comm;
+pub mod driver;
+pub mod hierarchy;
+pub mod replica;
+pub mod sgd_dp;
+pub mod spec;
+
+pub use checkpoint::Checkpoint;
+pub use driver::{train, TrainOutput};
+pub use hierarchy::train_hierarchical;
+pub use spec::CoupledSpec;

@@ -1,0 +1,341 @@
+//! Replica worker: one OS thread, one private PJRT session, one shard of
+//! data, one copy of the model state.
+//!
+//! Owns the triple (y, z, mom) the inner artifact evolves plus — for
+//! algorithms with an outer step — the outer iterate x^a and its Nesterov
+//! velocity. All heavy math happens inside the AOT artifacts; this thread
+//! just moves flat vectors and talks to the master through channels.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::CommCfg;
+use crate::coordinator::comm::{simulate_transfer, CommMeter, RoundCmd,
+                               RoundReport};
+use crate::coordinator::spec::{Anchor, CoupledSpec, Gain};
+use crate::data::batcher::{Augment, Batcher};
+use crate::data::Dataset;
+use crate::opt::vecmath;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32,
+                     Session};
+use crate::util::timer::Timer;
+
+/// Static configuration of one replica thread.
+#[derive(Clone)]
+pub struct ReplicaCfg {
+    pub id: usize,
+    pub model: String,
+    pub artifacts_dir: String,
+    pub spec: CoupledSpec,
+    pub l_steps: usize,
+    pub alpha: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub use_scan: bool,
+    pub augment: Augment,
+    /// Per-replica stream seed (data order, dropout).
+    pub seed: u64,
+    /// Shared initialization seed (same for every replica + master).
+    pub init_seed: u64,
+    /// Inner-loop learning rate η′ fixed to the initial LR for
+    /// Entropy-SGD/Parle (§3.1); algorithms without an outer step anneal
+    /// the inner LR directly (lr arrives via RoundCmd).
+    pub fixed_inner_lr: Option<f32>,
+}
+
+/// Thread body. Runs until `Stop`, then returns the final parameters.
+pub fn run_replica(
+    cfg: ReplicaCfg,
+    dataset: Arc<Dataset>,
+    cmd_rx: Receiver<RoundCmd>,
+    report_tx: Sender<RoundReport>,
+    meter: Arc<CommMeter>,
+    comm: CommCfg,
+) -> Result<Vec<f32>> {
+    let session = Session::open(&cfg.artifacts_dir)
+        .with_context(|| format!("replica {} session", cfg.id))?;
+    let mm = session.manifest.model(&cfg.model)?.clone();
+    let p = mm.param_count;
+    let seq_len = if mm.label_shape.is_empty() {
+        0
+    } else {
+        mm.input_shape[0]
+    };
+    let mut batcher = Batcher::new(
+        &dataset,
+        mm.batch,
+        seq_len,
+        cfg.augment,
+        cfg.seed,
+        0x100 + cfg.id as u64,
+    );
+
+    // --- state ----------------------------------------------------------
+    // All replicas start from the SAME initialization (the master's
+    // seed): the quadratic coupling keeps x^a aligned *relative to where
+    // they start*, and averaging dissimilar random inits is exactly the
+    // failure mode §1.2 demonstrates. Replica diversity comes from data
+    // order and dropout streams.
+    let init = session.execute(
+        &cfg.model,
+        "init",
+        &[lit_scalar_i32(cfg.init_seed as i32)],
+    )?;
+    let mut x_a = crate::runtime::to_f32(&init[0])?;
+    debug_assert_eq!(x_a.len(), p);
+    let mut y = x_a.clone();
+    let mut z = x_a.clone();
+    let mut mom = vec![0.0f32; p];
+    let mut v_outer = vec![0.0f32; p];
+
+    if cfg.use_scan && cfg.l_steps != mm.scan_l {
+        bail!(
+            "use_scan requires l_steps == manifest scan_l ({} != {})",
+            cfg.l_steps,
+            mm.scan_l
+        );
+    }
+
+    // --- round loop -------------------------------------------------------
+    while let Ok(cmd) = cmd_rx.recv() {
+        let (round, xref, lr, gamma_inv, rho_inv, _eta_over_rho) = match cmd {
+            RoundCmd::Stop => break,
+            RoundCmd::Round {
+                round,
+                xref,
+                lr,
+                gamma_inv,
+                rho_inv,
+                eta_over_rho,
+            } => (round, xref, lr, gamma_inv, rho_inv, eta_over_rho),
+        };
+
+        if cfg.spec.reset_y {
+            y.copy_from_slice(&x_a);
+            z.copy_from_slice(&x_a);
+        }
+        // Elastic-SGD replicas track the reference between rounds through
+        // the proximal term only; their iterate persists.
+
+        let gain = match cfg.spec.gain {
+            Gain::GammaInv => gamma_inv,
+            Gain::RhoInv => rho_inv,
+            Gain::Zero => 0.0,
+        };
+        let inner_lr = cfg.fixed_inner_lr.unwrap_or(lr);
+
+        let timer = Timer::new();
+        let (loss_sum, err_sum, steps_done) = if cfg.use_scan {
+            run_scan_round(
+                &session, &cfg, &mm, &mut batcher, &mut y, &mut z, &mut mom,
+                &x_a, &xref, inner_lr, gain, round,
+            )?
+        } else {
+            run_step_round(
+                &session, &cfg, &mm, &mut batcher, &mut y, &mut z, &mut mom,
+                &x_a, &xref, inner_lr, gain, round,
+            )?
+        };
+        let step_s = timer.elapsed_s();
+
+        // ---- outer update (8c), host-side -------------------------------
+        if cfg.spec.outer_step {
+            // eta/rho gain of the elastic term in (8c)
+            let elastic = if cfg.spec.outer_elastic {
+                lr * rho_inv
+            } else {
+                0.0
+            };
+            // (8c): x^a <- x^a - eta (x^a - z) - (eta/rho)(x^a - x)
+            vecmath::outer_step(
+                &mut x_a,
+                &mut v_outer,
+                &z,
+                &xref,
+                lr,
+                elastic,
+                cfg.momentum,
+            );
+        } else {
+            // params ARE the inner iterate
+            x_a.copy_from_slice(&y);
+        }
+
+        // ---- report back (the reduce payload) ----------------------------
+        let payload = x_a.clone();
+        let bytes = payload.len() * 4;
+        simulate_transfer(&comm, bytes);
+        meter.account(bytes);
+        report_tx
+            .send(RoundReport {
+                replica: cfg.id,
+                round,
+                params: payload,
+                train_loss: loss_sum / steps_done as f64,
+                train_err: err_sum / steps_done as f64,
+                step_s,
+            })
+            .ok();
+    }
+    Ok(x_a)
+}
+
+/// L dispatches of the per-step artifact.
+#[allow(clippy::too_many_arguments)]
+fn run_step_round(
+    session: &Session,
+    cfg: &ReplicaCfg,
+    mm: &crate::runtime::ModelManifest,
+    batcher: &mut Batcher,
+    y: &mut Vec<f32>,
+    z: &mut Vec<f32>,
+    mom: &mut Vec<f32>,
+    x_a: &[f32],
+    xref: &[f32],
+    inner_lr: f32,
+    gain: f32,
+    round: u64,
+) -> Result<(f64, f64, usize)> {
+    let p = mm.param_count;
+    let mut loss_sum = 0.0;
+    let mut err_sum = 0.0;
+    for step in 0..cfg.l_steps {
+        let batch = batcher.next();
+        let (xb, yb) = batch_literals(mm, &batch)?;
+        let anchor = match cfg.spec.anchor {
+            Anchor::SelfX => lit_f32(x_a, &[p])?,
+            Anchor::Reference => lit_f32(xref, &[p])?,
+            Anchor::None => lit_f32(y, &[p])?, // gain is 0; content unused
+        };
+        let seed = ((cfg.seed as i64
+            ^ ((round as i64 * cfg.l_steps as i64 + step as i64) << 16)
+            ^ cfg.id as i64)
+            & 0x7fff_ffff) as i32;
+        let outs = session.execute(
+            &cfg.model,
+            "inner_step",
+            &[
+                lit_f32(y, &[p])?,
+                lit_f32(z, &[p])?,
+                lit_f32(mom, &[p])?,
+                anchor,
+                xb,
+                yb,
+                lit_scalar_f32(inner_lr),
+                lit_scalar_f32(gain),
+                lit_scalar_f32(cfg.alpha),
+                lit_scalar_f32(cfg.momentum),
+                lit_scalar_f32(cfg.weight_decay),
+                lit_scalar_i32(seed),
+            ],
+        )?;
+        *y = crate::runtime::to_f32(&outs[0])?;
+        *z = crate::runtime::to_f32(&outs[1])?;
+        *mom = crate::runtime::to_f32(&outs[2])?;
+        loss_sum += crate::runtime::tensor::scalar_f32(&outs[3])? as f64;
+        err_sum += crate::runtime::tensor::scalar_f32(&outs[4])? as f64;
+    }
+    Ok((loss_sum, err_sum, cfg.l_steps))
+}
+
+/// One dispatch of the fused L-step scan artifact.
+#[allow(clippy::too_many_arguments)]
+fn run_scan_round(
+    session: &Session,
+    cfg: &ReplicaCfg,
+    mm: &crate::runtime::ModelManifest,
+    batcher: &mut Batcher,
+    y: &mut Vec<f32>,
+    z: &mut Vec<f32>,
+    mom: &mut Vec<f32>,
+    x_a: &[f32],
+    xref: &[f32],
+    inner_lr: f32,
+    gain: f32,
+    round: u64,
+) -> Result<(f64, f64, usize)> {
+    let p = mm.param_count;
+    let l = cfg.l_steps;
+    // stack L minibatches
+    let mut xs_f = Vec::new();
+    let mut xs_i = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..l {
+        let b = batcher.next();
+        xs_f.extend_from_slice(&b.x_f32);
+        xs_i.extend_from_slice(&b.x_i32);
+        ys.extend_from_slice(&b.y);
+    }
+    // images: [L, B, H, W, C]; tokens: [L, B, T]
+    let (xb, yb) = if mm.input_dtype == crate::runtime::artifact::DType::I32 {
+        let t = mm.input_shape[0];
+        (
+            lit_i32(&xs_i, &[l, mm.batch, t])?,
+            lit_i32(&ys, &[l, mm.batch, t])?,
+        )
+    } else {
+        let mut shape = vec![l, mm.batch];
+        shape.extend_from_slice(&mm.input_shape);
+        (lit_f32(&xs_f, &shape)?, lit_i32(&ys, &[l, mm.batch])?)
+    };
+
+    let anchor = match cfg.spec.anchor {
+        Anchor::SelfX => lit_f32(x_a, &[p])?,
+        Anchor::Reference => lit_f32(xref, &[p])?,
+        Anchor::None => lit_f32(y, &[p])?,
+    };
+    let seed = ((cfg.seed as i64 ^ ((round as i64) << 20) ^ cfg.id as i64)
+        & 0x7fff_ffff) as i32;
+    let outs = session.execute(
+        &cfg.model,
+        "inner_scan",
+        &[
+            lit_f32(y, &[p])?,
+            lit_f32(z, &[p])?,
+            lit_f32(mom, &[p])?,
+            anchor,
+            xb,
+            yb,
+            lit_scalar_f32(inner_lr),
+            lit_scalar_f32(gain),
+            lit_scalar_f32(cfg.alpha),
+            lit_scalar_f32(cfg.momentum),
+            lit_scalar_f32(cfg.weight_decay),
+            lit_scalar_i32(seed),
+        ],
+    )?;
+    *y = crate::runtime::to_f32(&outs[0])?;
+    *z = crate::runtime::to_f32(&outs[1])?;
+    *mom = crate::runtime::to_f32(&outs[2])?;
+    let losses = crate::runtime::to_f32(&outs[3])?;
+    let errs = crate::runtime::to_f32(&outs[4])?;
+    Ok((
+        losses.iter().map(|&x| x as f64).sum(),
+        errs.iter().map(|&x| x as f64).sum(),
+        l,
+    ))
+}
+
+/// Build (xb, yb) literals for one per-step batch.
+pub fn batch_literals(
+    mm: &crate::runtime::ModelManifest,
+    batch: &crate::data::batcher::Batch,
+) -> Result<(xla::Literal, xla::Literal)> {
+    use crate::runtime::artifact::DType;
+    if mm.input_dtype == DType::I32 {
+        let t = mm.input_shape[0];
+        Ok((
+            lit_i32(&batch.x_i32, &[batch.n, t])?,
+            lit_i32(&batch.y, &[batch.n, t])?,
+        ))
+    } else {
+        let mut shape = vec![batch.n];
+        shape.extend_from_slice(&mm.input_shape);
+        Ok((
+            lit_f32(&batch.x_f32, &shape)?,
+            lit_i32(&batch.y, &[batch.n])?,
+        ))
+    }
+}

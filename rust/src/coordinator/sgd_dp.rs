@@ -1,0 +1,270 @@
+//! Synchronous data-parallel SGD — the paper's baseline (§2.5, Remark 4:
+//! "we run [SGD] in data-parallel fashion on three GPUs").
+//!
+//! Every minibatch: each worker computes a gradient on its own batch via
+//! the `grad_eval` artifact, the master averages the gradients (the
+//! all-reduce), applies one host-side Nesterov update, and broadcasts the
+//! new parameters. Communication is O(2nN) *per minibatch* — the cost
+//! structure Parle amortizes by a factor of L.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::comm::{simulate_transfer, CommMeter};
+use crate::coordinator::driver::{default_augment, evaluate, lm_seq_len};
+use crate::coordinator::driver::TrainOutput;
+use crate::data::batcher::{Augment, Batcher};
+use crate::data::{build, split_shards, Dataset};
+use crate::metrics::{Curve, CurvePoint, RunRecord};
+use crate::opt::vecmath;
+use crate::runtime::{lit_f32, lit_scalar_i32, Session};
+use crate::util::timer::{PhaseProfiler, Timer};
+use crate::info;
+
+enum GradCmd {
+    Step { params: Arc<Vec<f32>>, seed: i32 },
+    Stop,
+}
+
+struct GradReport {
+    grad: Vec<f32>,
+    loss: f64,
+    err: f64,
+    step_s: f64,
+}
+
+/// Train with synchronous gradient averaging across `cfg.replicas`
+/// workers (effective batch = replicas x manifest batch).
+pub fn train_data_parallel(cfg: &RunConfig, label: &str)
+                           -> Result<TrainOutput> {
+    let profiler = PhaseProfiler::new();
+    let meter = Arc::new(CommMeter::new());
+
+    let master = Session::open(&cfg.artifacts_dir)?;
+    let mm = master.manifest.model(&cfg.model)?.clone();
+    let (train_ds, val_ds) = build(&mm.dataset, &cfg.data)?;
+    let augment = default_augment(&mm.dataset);
+
+    let worker_datasets: Vec<Arc<Dataset>> = if cfg.split_data {
+        match &train_ds {
+            Dataset::Image(img) => split_shards(img, cfg.replicas, cfg.seed)
+                .into_iter()
+                .map(|s| Arc::new(Dataset::Image(s)))
+                .collect(),
+            Dataset::Corpus(_) => {
+                anyhow::bail!("split_data needs an image dataset")
+            }
+        }
+    } else {
+        let shared = Arc::new(train_ds);
+        (0..cfg.replicas).map(|_| shared.clone()).collect()
+    };
+
+    // Each worker draws its own batch: effective batch n*B, the paper's
+    // data-parallel setup. Epoch accounting uses the aggregate batch.
+    let batches_per_epoch = (worker_datasets[0].len()
+        / (mm.batch * cfg.replicas))
+        .max(1);
+    let total_steps =
+        ((cfg.epochs * batches_per_epoch as f64).ceil() as u64).max(1);
+    let eval_every = (cfg.eval_every_rounds * cfg.l_steps.max(1)) as u64;
+
+    // --- workers -----------------------------------------------------------
+    let mut cmd_txs = Vec::new();
+    let mut report_rxs = Vec::new();
+    let mut handles = Vec::new();
+    for a in 0..cfg.replicas {
+        let (ctx_, crx) = mpsc::channel::<GradCmd>();
+        let (rtx, rrx) = mpsc::channel::<GradReport>();
+        cmd_txs.push(ctx_);
+        report_rxs.push(rrx);
+        let model = cfg.model.clone();
+        let dir = cfg.artifacts_dir.clone();
+        let ds = worker_datasets[a].clone();
+        let seed = cfg.seed.wrapping_add(a as u64 * 104729);
+        let m = meter.clone();
+        let comm = cfg.comm;
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let session = Session::open(&dir)
+                .with_context(|| format!("worker {a} session"))?;
+            let mm = session.manifest.model(&model)?.clone();
+            let mut batcher = Batcher::new(
+                &ds,
+                mm.batch,
+                lm_seq_len(&mm),
+                augment,
+                seed,
+                0x200 + a as u64,
+            );
+            let p = mm.param_count;
+            while let Ok(cmd) = crx.recv() {
+                let (params, seed_step) = match cmd {
+                    GradCmd::Stop => break,
+                    GradCmd::Step { params, seed } => (params, seed),
+                };
+                let t = Timer::new();
+                let b = batcher.next();
+                let (xb, yb) =
+                    crate::coordinator::replica::batch_literals(&mm, &b)?;
+                let outs = session.execute(
+                    &model,
+                    "grad_eval",
+                    &[
+                        lit_f32(&params, &[p])?,
+                        xb,
+                        yb,
+                        lit_scalar_i32(seed_step),
+                    ],
+                )?;
+                let grad = crate::runtime::to_f32(&outs[0])?;
+                let loss =
+                    crate::runtime::tensor::scalar_f32(&outs[1])? as f64;
+                let err =
+                    crate::runtime::tensor::scalar_f32(&outs[2])? as f64;
+                let bytes = grad.len() * 4;
+                simulate_transfer(&comm, bytes);
+                m.account(bytes);
+                rtx.send(GradReport {
+                    grad,
+                    loss,
+                    err,
+                    step_s: t.elapsed_s(),
+                })
+                .ok();
+            }
+            Ok(())
+        }));
+    }
+
+    // --- master state -------------------------------------------------------
+    let init = master.execute(
+        &cfg.model,
+        "init",
+        &[lit_scalar_i32(cfg.seed as i32)],
+    )?;
+    let mut x: Vec<f32> = crate::runtime::to_f32(&init[0])?;
+    let p = x.len();
+    let mut v = vec![0.0f32; p];
+    let mut gbar = vec![0.0f32; p];
+
+    let eval_batches = Batcher::new(
+        &val_ds,
+        mm.batch,
+        lm_seq_len(&mm),
+        Augment::none(),
+        cfg.seed,
+        0xe,
+    )
+    .eval_batches();
+
+    let wall = Timer::new();
+    let mut curve = Curve::new();
+    let mut step_seconds = 0.0;
+    #[allow(unused_assignments)]
+    let mut last_train = (f64::NAN, f64::NAN);
+
+    for step in 0..total_steps {
+        let epoch = step as f64 / batches_per_epoch as f64;
+        let lr = cfg.lr.at(epoch);
+        let params = Arc::new(x.clone());
+        for (a, tx) in cmd_txs.iter().enumerate() {
+            meter.account(p * 4);
+            tx.send(GradCmd::Step {
+                params: params.clone(),
+                seed: ((cfg.seed as i64 ^ (step as i64) << 8 ^ a as i64)
+                    & 0x7fff_ffff) as i32,
+            })
+            .ok();
+        }
+        let mut reports = Vec::with_capacity(cfg.replicas);
+        for rx in &report_rxs {
+            reports.push(rx.recv().context("worker died")?);
+        }
+        step_seconds += reports
+            .iter()
+            .map(|r| r.step_s)
+            .fold(0.0f64, f64::max);
+        last_train = (
+            reports.iter().map(|r| r.loss).sum::<f64>()
+                / reports.len() as f64,
+            reports.iter().map(|r| r.err).sum::<f64>()
+                / reports.len() as f64,
+        );
+
+        profiler.scope("reduce", || {
+            let views: Vec<&[f32]> =
+                reports.iter().map(|r| r.grad.as_slice()).collect();
+            vecmath::mean_into(&mut gbar, &views);
+            // Nesterov: v <- mu v - lr (g + wd x);  x <- x + mu v - lr g
+            for i in 0..p {
+                let g = gbar[i] + cfg.weight_decay * x[i];
+                let v_prev = v[i];
+                v[i] = cfg.momentum * v_prev - lr * g;
+                x[i] += -cfg.momentum * v_prev
+                    + (1.0 + cfg.momentum) * v[i];
+            }
+        });
+
+        let is_last = step + 1 == total_steps;
+        if is_last || (eval_every > 0 && (step + 1) % eval_every == 0) {
+            let val_err = profiler.scope("eval", || {
+                evaluate(&master, &cfg.model, &mm, &x, &eval_batches)
+            })?;
+            curve.push(CurvePoint {
+                wall_s: wall.elapsed_s(),
+                epoch,
+                train_loss: last_train.0,
+                train_err: last_train.1,
+                val_err,
+            });
+            info!(
+                "{label} step {}/{} epoch {:.2} lr {:.4} train \
+                 {:.3}/{:.1}% val {:.2}%",
+                step + 1,
+                total_steps,
+                epoch,
+                lr,
+                last_train.0,
+                last_train.1 * 100.0,
+                val_err * 100.0
+            );
+        }
+    }
+
+    for tx in &cmd_txs {
+        tx.send(GradCmd::Stop).ok();
+    }
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    }
+
+    let wall_s = wall.elapsed_s();
+    let comm_s = profiler.total("reduce");
+    let last = curve.last().copied().unwrap();
+    let record = RunRecord {
+        label: label.to_string(),
+        model: cfg.model.clone(),
+        algo: cfg.algo.name().to_string(),
+        replicas: cfg.replicas,
+        curve,
+        wall_s,
+        final_val_err: last.val_err,
+        final_train_err: last.train_err,
+        final_train_loss: last.train_loss,
+        comm_bytes: meter.bytes(),
+        comm_ratio: if step_seconds > 0.0 {
+            comm_s / step_seconds
+        } else {
+            f64::NAN
+        },
+        phases: profiler.snapshot(),
+    };
+    Ok(TrainOutput {
+        record,
+        final_params: x,
+    })
+}

@@ -1,0 +1,137 @@
+//! CoupledSpec: the unified projection of Parle / Entropy-SGD /
+//! Elastic-SGD / SGD onto one coordinator loop (§2.3 of the paper proves
+//! the equivalences; this module encodes them operationally).
+
+use crate::config::Algo;
+
+/// What the inner step's proximal term anchors to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Anchor {
+    /// Anchor to the replica's own outer variable x^a (Entropy-SGD /
+    /// Parle inner loop: gamma coupling).
+    SelfX,
+    /// Anchor to the master's reference x (Elastic-SGD: rho coupling).
+    Reference,
+    /// No proximal term (plain SGD): gain forced to zero.
+    None,
+}
+
+/// Which annealed constant multiplies the proximal term.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gain {
+    GammaInv,
+    RhoInv,
+    Zero,
+}
+
+/// Fully-resolved algorithm behaviour for the coupled driver.
+#[derive(Clone, Copy, Debug)]
+pub struct CoupledSpec {
+    pub anchor: Anchor,
+    pub gain: Gain,
+    /// Apply the host-side outer step (8c) each round.
+    pub outer_step: bool,
+    /// Reset y <- x^a at the start of each round (Entropy-SGD/Parle
+    /// re-initialize the MCMC trajectory; Elastic/SGD continue).
+    pub reset_y: bool,
+    /// Reduce replica states into the reference each round (8d).
+    pub reduce: bool,
+    /// Elastic gain in the outer step: eta/rho term of (8c). Zero for
+    /// Entropy-SGD (n=1 has nothing to couple to).
+    pub outer_elastic: bool,
+}
+
+impl CoupledSpec {
+    pub fn from_algo(algo: Algo, replicas: usize) -> Self {
+        match algo {
+            Algo::Parle => CoupledSpec {
+                anchor: Anchor::SelfX,
+                gain: Gain::GammaInv,
+                outer_step: true,
+                reset_y: true,
+                reduce: true,
+                outer_elastic: replicas > 1,
+            },
+            Algo::EntropySgd => CoupledSpec {
+                anchor: Anchor::SelfX,
+                gain: Gain::GammaInv,
+                outer_step: true,
+                reset_y: true,
+                reduce: false,
+                outer_elastic: false,
+            },
+            Algo::ElasticSgd => CoupledSpec {
+                anchor: Anchor::Reference,
+                gain: Gain::RhoInv,
+                outer_step: false,
+                reset_y: false,
+                reduce: true,
+                outer_elastic: false,
+            },
+            Algo::Sgd => CoupledSpec {
+                anchor: Anchor::None,
+                gain: Gain::Zero,
+                outer_step: false,
+                reset_y: false,
+                reduce: false,
+                outer_elastic: false,
+            },
+            Algo::SgdDataParallel => {
+                unreachable!("SgdDataParallel uses the sgd_dp driver")
+            }
+        }
+    }
+
+    /// What the "current parameters" of a replica are for evaluation and
+    /// reduction: the outer x^a when an outer step exists, else y.
+    pub fn params_are_outer(&self) -> bool {
+        self.outer_step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parle_spec() {
+        let s = CoupledSpec::from_algo(Algo::Parle, 3);
+        assert_eq!(s.anchor, Anchor::SelfX);
+        assert_eq!(s.gain, Gain::GammaInv);
+        assert!(s.outer_step && s.reduce && s.reset_y && s.outer_elastic);
+    }
+
+    #[test]
+    fn entropy_is_parle_minus_coupling() {
+        let s = CoupledSpec::from_algo(Algo::EntropySgd, 1);
+        assert!(s.outer_step && !s.reduce && !s.outer_elastic);
+        assert_eq!(s.anchor, Anchor::SelfX);
+    }
+
+    #[test]
+    fn elastic_spec() {
+        let s = CoupledSpec::from_algo(Algo::ElasticSgd, 3);
+        assert_eq!(s.anchor, Anchor::Reference);
+        assert_eq!(s.gain, Gain::RhoInv);
+        assert!(!s.outer_step && s.reduce && !s.reset_y);
+        assert!(!s.params_are_outer());
+    }
+
+    #[test]
+    fn sgd_spec_is_uncoupled() {
+        let s = CoupledSpec::from_algo(Algo::Sgd, 1);
+        assert_eq!(s.anchor, Anchor::None);
+        assert_eq!(s.gain, Gain::Zero);
+        assert!(!s.outer_step && !s.reduce);
+    }
+
+    /// the table the module docs promise
+    #[test]
+    fn parle_with_one_replica_degenerates_to_entropy() {
+        let p = CoupledSpec::from_algo(Algo::Parle, 1);
+        let e = CoupledSpec::from_algo(Algo::EntropySgd, 1);
+        assert_eq!(p.anchor, e.anchor);
+        assert_eq!(p.gain, e.gain);
+        assert_eq!(p.outer_elastic, e.outer_elastic);
+    }
+}

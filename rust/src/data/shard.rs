@@ -1,0 +1,79 @@
+//! Dataset sharding for §5 ("Splitting the data between replicas").
+//!
+//! The paper splits the training set evenly so each replica `a` sees only
+//! its shard `ξ^a`, with every sample in at least one shard; the proximal
+//! term is the only channel through which gradients on `ξ^b` reach
+//! replica `a`. `split_shards` reproduces that protocol: a seeded shuffle
+//! followed by contiguous slicing into `n` near-equal parts.
+
+use crate::data::synth_images::ImageDataset;
+use crate::util::rng::Pcg64;
+
+/// Split `ds` into `n` disjoint shards covering every example.
+pub fn split_shards(ds: &ImageDataset, n: usize, seed: u64)
+                    -> Vec<ImageDataset> {
+    assert!(n >= 1);
+    let mut idx: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Pcg64::new(seed, SHARD_STREAM);
+    rng.shuffle(&mut idx);
+    let base = ds.len() / n;
+    let rem = ds.len() % n;
+    let mut shards = Vec::with_capacity(n);
+    let mut start = 0;
+    for a in 0..n {
+        let take = base + usize::from(a < rem);
+        shards.push(ds.subset(&idx[start..start + take]));
+        start += take;
+    }
+    shards
+}
+
+/// RNG stream id reserved for shard shuffles.
+const SHARD_STREAM: u64 = 0x5a4d;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth_images, DataConfig};
+
+    fn dataset(n: usize) -> ImageDataset {
+        let mut rng = Pcg64::new(7, 7);
+        let cfg = DataConfig {
+            train: n,
+            val: 1,
+            difficulty: 0.3,
+            seed: 7,
+        };
+        synth_images::mnist_like(&cfg, &mut rng).0
+    }
+
+    #[test]
+    fn covers_everything_disjointly() {
+        let ds = dataset(103);
+        let shards = split_shards(&ds, 3, 1);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 103);
+        // sizes near-equal
+        for s in &shards {
+            assert!((s.len() as i64 - 34).abs() <= 1);
+        }
+    }
+
+    #[test]
+    fn single_shard_is_whole_set() {
+        let ds = dataset(32);
+        let shards = split_shards(&ds, 1, 1);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].len(), 32);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = dataset(50);
+        let a = split_shards(&ds, 4, 9);
+        let b = split_shards(&ds, 4, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.labels, y.labels);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Ablations over the design choices DESIGN.md §7 calls out.
+
+use anyhow::Result;
+
+use crate::config::{Algo, ScopingCfg};
+use crate::experiments::{fig3, fig4, print_table, ExpCtx};
+
+/// §4.4: Elastic-SGD with vs without scoping (paper: SVHN never goes
+/// below 1.9% without scoping vs 1.57% with).
+pub fn scoping(ctx: &ExpCtx) -> Result<()> {
+    let mut rows = Vec::new();
+    for (tag, scoping) in [
+        ("scoping=paper", ScopingCfg::Paper),
+        ("scoping=off", ScopingCfg::Constant { gamma: 100.0, rho: 1.0 }),
+    ] {
+        let mut cfg = fig4::base(ctx, Algo::ElasticSgd, 3);
+        cfg.scoping = scoping;
+        let out = ctx.run(cfg, &format!("ablate_scoping_{tag}"))?;
+        rows.push(vec![
+            tag.to_string(),
+            format!("{:.2}%", out.record.final_val_err * 100.0),
+        ]);
+    }
+    print_table("ablation: Elastic-SGD scoping (§4.4)",
+                &["variant", "val err"], &rows);
+    Ok(())
+}
+
+/// §4.3: Parle with n in {3, 6, 8}: initial speedup but worse final
+/// error at n=8 with the same hyper-parameters.
+pub fn replicas(ctx: &ExpCtx) -> Result<()> {
+    let mut rows = Vec::new();
+    for n in [3usize, 6, 8] {
+        let cfg = {
+            let mut c = fig3::base(ctx, "wrn_cifar10", Algo::Parle, n);
+            c.epochs = ctx.epochs(2.0);
+            c
+        };
+        let out = ctx.run(cfg, &format!("ablate_replicas_n{n}"))?;
+        rows.push(vec![
+            format!("n={n}"),
+            format!("{:.2}%", out.record.final_val_err * 100.0),
+            format!("{:.0}s", out.record.wall_s),
+        ]);
+    }
+    print_table("ablation: replica count (§4.3)",
+                &["variant", "val err", "wall"], &rows);
+    Ok(())
+}
+
+/// Communication period L: more local work per reduce trades error for
+/// communication (L=1 is Elastic-like, L=100 nearly uncoupled).
+pub fn l_sweep(ctx: &ExpCtx) -> Result<()> {
+    let mut rows = Vec::new();
+    for l in [1usize, 5, 25, 100] {
+        let mut cfg = fig3::base(ctx, "wrn_cifar10", Algo::Parle, 3);
+        cfg.l_steps = l;
+        cfg.epochs = ctx.epochs(2.0);
+        cfg.eval_every_rounds = (25 / l).max(1);
+        let out = ctx.run(cfg, &format!("ablate_l_{l}"))?;
+        rows.push(vec![
+            format!("L={l}"),
+            format!("{:.2}%", out.record.final_val_err * 100.0),
+            format!("{:.2}%", out.record.comm_ratio * 100.0),
+        ]);
+    }
+    print_table("ablation: communication period L",
+                &["variant", "val err", "comm ratio"], &rows);
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! Fig. 1 + §1.2: train several All-CNNs independently, then measure
+//! (a) the permutation-invariant overlap per layer after greedy
+//! alignment (Fig. 1) and (b) the validation error of: each individual
+//! net, the softmax ensemble, the naive one-shot weight average, and the
+//! aligned weight average.
+//!
+//! Paper numbers (full scale, 6 nets): individuals ~8.0%, ensemble
+//! 7.84%, naive average 89.9% (chance), aligned average 18.7%. The shape
+//! to reproduce: naive average ~ chance, aligned average dramatically
+//! better, ensemble slightly better than individuals.
+
+use anyhow::Result;
+
+use crate::align::{align_to, average_params, ConvStack};
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::driver::{evaluate, lm_seq_len};
+use crate::data::batcher::{Augment, Batcher};
+use crate::data::build;
+use crate::experiments::{fig6, ExpCtx};
+use crate::runtime::{lit_f32, Session};
+use crate::util::csv::CsvWriter;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let n_nets = if ctx.quick { 3 } else { 6 };
+    println!("training {n_nets} independent All-CNNs (sequential SGD)...");
+
+    let mut nets: Vec<Vec<f32>> = Vec::new();
+    let mut indiv_errs = Vec::new();
+    for i in 0..n_nets {
+        let mut cfg: RunConfig = fig6::base(ctx, Algo::Sgd, 1);
+        cfg.seed = ctx.seed + 1000 * (i as u64 + 1);
+        cfg.data.seed = ctx.seed; // same dataset, different init/order
+        let out = ctx.run(cfg, &format!("fig1_net{i}"))?;
+        indiv_errs.push(out.record.final_val_err);
+        nets.push(out.final_params);
+    }
+
+    // --- evaluation setup -------------------------------------------------
+    let session = Session::open(&ctx.artifacts_dir)?;
+    let mm = session.manifest.model("allcnn_cifar")?.clone();
+    let mut data_cfg = crate::data::DataConfig {
+        train: 64,
+        val: 1024,
+        difficulty: 0.35,
+        seed: ctx.seed,
+    };
+    data_cfg.seed = ctx.seed;
+    let (_, val_ds) = build(&mm.dataset, &data_cfg)?;
+    let eval_batches = Batcher::new(
+        &val_ds,
+        mm.batch,
+        lm_seq_len(&mm),
+        Augment::none(),
+        ctx.seed,
+        0xe,
+    )
+    .eval_batches();
+
+    let eval = |params: &[f32]| -> Result<f64> {
+        evaluate(&session, "allcnn_cifar", &mm, params, &eval_batches)
+    };
+
+    // --- ensembles & averages ----------------------------------------------
+    let naive_avg = average_params(&nets);
+    let naive_err = eval(&naive_avg)?;
+
+    let stack = ConvStack::from_layer_table(&mm.layers)?;
+    let mut aligned = vec![nets[0].clone()];
+    let mut overlaps_before = Vec::new();
+    let mut overlaps_after = Vec::new();
+    for net in &nets[1..] {
+        let (a, report) = align_to(&stack, &nets[0], net);
+        aligned.push(a);
+        overlaps_before.push(report.iter().map(|r| r.1).collect::<Vec<_>>());
+        overlaps_after.push(report.iter().map(|r| r.2).collect::<Vec<_>>());
+    }
+    let aligned_avg = average_params(&aligned);
+    let aligned_err = eval(&aligned_avg)?;
+
+    let ensemble_err = softmax_ensemble_err(&session, &mm, &nets,
+                                            &eval_batches)?;
+
+    // --- report -------------------------------------------------------------
+    let mean_indiv =
+        indiv_errs.iter().sum::<f64>() / indiv_errs.len() as f64;
+    println!("\nfig1 / §1.2 results ({} nets):", n_nets);
+    println!("  individual nets:  {:.2}% mean", mean_indiv * 100.0);
+    println!("  softmax ensemble: {:.2}%", ensemble_err * 100.0);
+    println!("  naive average:    {:.2}%  (chance = {:.1}%)",
+             naive_err * 100.0,
+             (1.0 - 1.0 / mm.num_classes as f64) * 100.0);
+    println!("  aligned average:  {:.2}%", aligned_err * 100.0);
+
+    // per-layer overlap CSV (the Fig-1 series)
+    let layer_names: Vec<String> = stack.layers
+        [..stack.layers.len() - 1]
+        .iter()
+        .map(|l| l.name.clone())
+        .collect();
+    let mut w = CsvWriter::create(
+        format!("{}/fig1_overlap.csv", ctx.out_dir),
+        &["layer", "overlap_before_mean", "overlap_after_mean"],
+    )?;
+    println!("\n  per-layer overlap (before -> after alignment):");
+    for (li, name) in layer_names.iter().enumerate() {
+        let before: f64 = overlaps_before.iter().map(|o| o[li]).sum::<f64>()
+            / overlaps_before.len() as f64;
+        let after: f64 = overlaps_after.iter().map(|o| o[li]).sum::<f64>()
+            / overlaps_after.len() as f64;
+        w.row(&[name.clone(), format!("{before:.4}"),
+                format!("{after:.4}")])?;
+        println!("    {name:<6} {before:6.3} -> {after:6.3}");
+    }
+    w.flush()?;
+
+    // summary CSV
+    let mut w = CsvWriter::create(
+        format!("{}/fig1_summary.csv", ctx.out_dir),
+        &["variant", "val_err"],
+    )?;
+    for (k, v) in [
+        ("individual_mean", mean_indiv),
+        ("ensemble", ensemble_err),
+        ("naive_average", naive_err),
+        ("aligned_average", aligned_err),
+    ] {
+        w.row(&[k.to_string(), format!("{v:.5}")])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Error of averaging the nets' softmax predictions (the classic
+/// test-time ensemble the paper compares against).
+fn softmax_ensemble_err(
+    session: &Session,
+    mm: &crate::runtime::ModelManifest,
+    nets: &[Vec<f32>],
+    batches: &[crate::data::batcher::Batch],
+) -> Result<f64> {
+    let p = mm.param_count;
+    let c = mm.num_classes;
+    let mut wrong = 0usize;
+    let mut total = 0usize;
+    for b in batches {
+        let mut probs = vec![0.0f64; b.n * c];
+        for net in nets {
+            let (xb, _) = crate::coordinator::replica::batch_literals(mm, b)?;
+            let outs = session.execute(
+                &mm.name,
+                "predict",
+                &[lit_f32(net, &[p])?, xb],
+            )?;
+            let logits = crate::runtime::to_f32(&outs[0])?;
+            for i in 0..b.n {
+                // softmax per example
+                let row = &logits[i * c..(i + 1) * c];
+                let m = row.iter().cloned().fold(f32::MIN, f32::max);
+                let exps: Vec<f64> =
+                    row.iter().map(|&x| ((x - m) as f64).exp()).collect();
+                let s: f64 = exps.iter().sum();
+                for j in 0..c {
+                    probs[i * c + j] += exps[j] / s;
+                }
+            }
+        }
+        for i in 0..b.n {
+            let row = &probs[i * c..(i + 1) * c];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as i32 != b.y[i] {
+                wrong += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(wrong as f64 / total.max(1) as f64)
+}

@@ -1,0 +1,83 @@
+//! Fig. 5 (§4.5): training error curves — SGD and Elastic-SGD drive the
+//! training error to ~zero (overfit), while Parle and Entropy-SGD keep a
+//! much larger training error yet generalize better ("flat minima exist
+//! at higher energy levels").
+//!
+//! Reuses the fig3/fig4 run records when present (same runs, different
+//! axis); otherwise runs a compact version itself.
+
+use anyhow::Result;
+
+use crate::config::Algo;
+use crate::experiments::{fig3, fig4, ExpCtx};
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut rows = Vec::new();
+    for (model, maker) in [
+        ("wrn_cifar10", true),
+        ("wrn_cifar100", true),
+        ("wrn_svhn", false),
+    ] {
+        for (algo, n) in [
+            (Algo::Parle, 3),
+            (Algo::ElasticSgd, 3),
+            (Algo::EntropySgd, 1),
+            (Algo::SgdDataParallel, 3),
+        ] {
+            let prefix = if maker { "fig3" } else { "fig4" };
+            let label = if maker {
+                format!("{prefix}_{model}_{}", algo.name())
+            } else {
+                format!("{prefix}_{}", algo.name())
+            };
+            let path = format!("{}/{}.json", ctx.out_dir, label);
+            let (train_err, train_loss) = match load_final(&path) {
+                Some(v) => v,
+                None => {
+                    // record missing: run it now
+                    let cfg = if maker {
+                        fig3::base(ctx, model, algo, n)
+                    } else {
+                        fig4::base(ctx, algo, n)
+                    };
+                    let out = ctx.run(cfg, &label)?;
+                    (
+                        out.record.final_train_err,
+                        out.record.final_train_loss,
+                    )
+                }
+            };
+            rows.push((model.to_string(), algo.name().to_string(),
+                       train_err, train_loss));
+        }
+    }
+
+    let mut w = CsvWriter::create(
+        format!("{}/fig5_train_error.csv", ctx.out_dir),
+        &["model", "algo", "train_err", "train_loss"],
+    )?;
+    println!("\nfig5: final training error (the paper's underfitting gap)");
+    for (model, algo, err, loss) in &rows {
+        w.row(&[
+            model.clone(),
+            algo.clone(),
+            format!("{:.4}", err),
+            format!("{:.4}", loss),
+        ])?;
+        println!("  {model:<14} {algo:<12} train err {:5.2}%  loss {:.3}",
+                 err * 100.0, loss);
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn load_final(path: &str) -> Option<(f64, f64)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    Some((
+        j.f64_of("final_train_err").ok()?,
+        j.f64_of("final_train_loss").ok()?,
+    ))
+}

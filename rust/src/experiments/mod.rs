@@ -1,0 +1,224 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §6 maps
+//! each to its source section).
+//!
+//! Every driver writes per-run JSON records and figure CSVs under
+//! `runs/` and prints the table/series the paper reports. `--quick`
+//! shrinks datasets/epochs ~4x for smoke runs; full runs are what
+//! EXPERIMENTS.md records.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod table2;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::{train, TrainOutput};
+use crate::metrics::RunRecord;
+
+/// Shared context for every driver.
+#[derive(Clone, Debug)]
+pub struct ExpCtx {
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    /// Shrink workloads ~4x (CI/smoke mode).
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for ExpCtx {
+    fn default() -> Self {
+        ExpCtx {
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+            quick: false,
+            seed: 42,
+        }
+    }
+}
+
+impl ExpCtx {
+    /// Scale an epoch budget for quick mode.
+    pub fn epochs(&self, full: f64) -> f64 {
+        if self.quick {
+            (full / 4.0).max(0.25)
+        } else {
+            full
+        }
+    }
+
+    /// Scale a dataset size for quick mode.
+    pub fn examples(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 4).max(256)
+        } else {
+            full
+        }
+    }
+
+    /// Run one config, save its record, return output.
+    pub fn run(&self, mut cfg: RunConfig, label: &str)
+               -> Result<TrainOutput> {
+        cfg.artifacts_dir = self.artifacts_dir.clone();
+        let out = train(&cfg, label)?;
+        out.record.save(&self.out_dir)?;
+        out.record
+            .curve
+            .write_csv(&format!("{}/{}.csv", self.out_dir,
+                                label.replace('/', "_")),
+                       label)?;
+        println!("  {}", out.record.summary());
+        Ok(out)
+    }
+
+    /// Like [`run`], but reuses a saved record if one exists under this
+    /// label (lets `table1`/`table2`/`fig5` share runs with the figure
+    /// drivers instead of recomputing them).
+    pub fn run_cached(&self, cfg: RunConfig, label: &str)
+                      -> Result<RunRecord> {
+        let path = format!("{}/{}.json", self.out_dir,
+                           label.replace('/', "_"));
+        if let Some(rec) = load_record(&path) {
+            println!("  (cached) {}", rec.summary());
+            return Ok(rec);
+        }
+        Ok(self.run(cfg, label)?.record)
+    }
+}
+
+/// Names every driver answers to.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig1", "overlap of independently trained networks (§1.2)"),
+    ("fig2", "LeNet/MNIST validation error vs wall-clock (§4.2)"),
+    ("fig3", "WRN CIFAR-10/100 validation error vs wall-clock (§4.3)"),
+    ("fig4", "WRN SVHN validation error vs wall-clock (§4.4)"),
+    ("fig5", "training error curves / underfitting (§4.5)"),
+    ("fig6", "All-CNN split-data curves (§5)"),
+    ("table1", "summary errors+times, 4 datasets x 4 algos (§4)"),
+    ("table2", "split-data summary (§5)"),
+    ("comm", "comm/compute ratio measured + modeled (§4.1)"),
+    ("sec32", "deputies-under-a-sheriff hierarchy, eq. 10 (§3.2)"),
+    ("ablate-scoping", "Elastic-SGD with/without scoping (§4.4)"),
+    ("ablate-replicas", "Parle with n in {3,6,8} (§4.3)"),
+    ("ablate-l", "communication period L sweep"),
+];
+
+/// Dispatch by name ("all" runs the full suite in paper order).
+pub fn run_experiment(name: &str, ctx: &ExpCtx) -> Result<()> {
+    match name {
+        "fig1" => fig1::run(ctx),
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "table1" => table1::run(ctx),
+        "table2" => table2::run(ctx),
+        "comm" => table1::run_comm(ctx),
+        "sec32" => run_sec32(ctx),
+        "ablate-scoping" => ablations::scoping(ctx),
+        "ablate-replicas" => ablations::replicas(ctx),
+        "ablate-l" => ablations::l_sweep(ctx),
+        "all" => {
+            for (n, _) in EXPERIMENTS {
+                println!("\n==== experiment {n} ====");
+                run_experiment(n, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; see `parle list`"),
+    }
+}
+
+/// Markdown-ish table printer used by the table drivers.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n{title}");
+    println!("{}", header.join(" | "));
+    println!("{}", header.iter().map(|_| "---").collect::<Vec<_>>()
+             .join(" | "));
+    for r in rows {
+        println!("{}", r.join(" | "));
+    }
+}
+
+/// §3.2 hierarchy: 2 deputies x 2 workers vs flat Parle with 4 replicas
+/// at the same gradient budget — eq. (10) says they optimize equivalent
+/// objectives; the hierarchy trades a second coupling level for
+/// deployment flexibility (deputies can live on different machines).
+fn run_sec32(ctx: &ExpCtx) -> Result<()> {
+    use crate::coordinator::train_hierarchical;
+    let mut cfg = RunConfig::new("mlp_synth", crate::config::Algo::Parle);
+    cfg.artifacts_dir = ctx.artifacts_dir.clone();
+    cfg.epochs = ctx.epochs(8.0);
+    cfg.l_steps = 2;
+    cfg.data.train = ctx.examples(1024);
+    cfg.data.val = 512;
+    cfg.seed = ctx.seed;
+    cfg.data.seed = ctx.seed;
+    cfg.eval_every_rounds = 8;
+
+    let out = train_hierarchical(&cfg, 2, 2, "sec32_deputies")?;
+    out.record.save(&ctx.out_dir)?;
+    println!("  {}", out.record.summary());
+
+    let mut flat = cfg.clone();
+    flat.replicas = 4;
+    let rec = self::ExpCtx::run(ctx, flat, "sec32_flat_parle")?.record;
+    println!(
+        "\nsec3.2: hierarchy {:.2}% vs flat parle {:.2}% (equivalent \
+         objectives; eq. 10)",
+        out.record.final_val_err * 100.0,
+        rec.final_val_err * 100.0
+    );
+    Ok(())
+}
+
+/// Load a previously saved run record (minimal fields + curve).
+pub fn load_record(path: &str) -> Option<RunRecord> {
+    use crate::metrics::{Curve, CurvePoint};
+    use crate::util::json::Json;
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let mut curve = Curve::new();
+    for p in j.get("curve")?.as_arr()? {
+        let a = p.as_arr()?;
+        if a.len() == 5 {
+            curve.push(CurvePoint {
+                wall_s: a[0].as_f64()?,
+                epoch: a[1].as_f64()?,
+                train_loss: a[2].as_f64()?,
+                train_err: a[3].as_f64()?,
+                val_err: a[4].as_f64()?,
+            });
+        }
+    }
+    Some(RunRecord {
+        label: j.str_of("label").ok()?.to_string(),
+        model: j.str_of("model").ok()?.to_string(),
+        algo: j.str_of("algo").ok()?.to_string(),
+        replicas: j.usize_of("replicas").ok()?,
+        curve,
+        wall_s: j.f64_of("wall_s").ok()?,
+        final_val_err: j.f64_of("final_val_err").ok()?,
+        final_train_err: j.f64_of("final_train_err").ok()?,
+        final_train_loss: j.f64_of("final_train_loss").ok()?,
+        comm_bytes: j.f64_of("comm_bytes").ok()? as u64,
+        comm_ratio: j.f64_of("comm_ratio").ok()?,
+        phases: Default::default(),
+    })
+}
+
+/// Format "err% (time s)" cells like the paper's tables.
+pub fn cell(rec: &RunRecord) -> String {
+    format!(
+        "{:.2}% ({:.0}s)",
+        rec.final_val_err * 100.0,
+        rec.wall_s
+    )
+}

@@ -1,0 +1,32 @@
+//! # Parle — parallelizing stochastic gradient descent
+//!
+//! Rust + JAX + Pallas reproduction of *"Parle: parallelizing stochastic
+//! gradient descent"* (Chaudhari et al., 2017).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the coordinator: replica worker threads, the
+//!   master/reference variable, elastic reduce/broadcast every `L` steps,
+//!   scoping schedules, data sharding, metrics, experiments and CLI.
+//! * **L2/L1 (`python/compile/`)** — jax models + Pallas kernels, lowered
+//!   once at build time (`make artifacts`) to HLO text this crate loads
+//!   through the PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the training path; after `make artifacts` the
+//! `parle` binary is self-contained.
+
+pub mod align;
+pub mod bench_util;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod opt;
+pub mod perfmodel;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type (anyhow is the only error dependency the offline
+/// vendor set provides, and it is all we need).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,182 @@
+//! `parle` CLI — the L3 entrypoint.
+//!
+//! ```text
+//! parle train --model wrn_cifar10 --algo parle [--set key=value ...]
+//! parle experiment <fig1|fig2|...|table1|table2|comm|ablate-*|all>
+//! parle perfmodel                  # paper-scale Table-1 time columns
+//! parle list                       # models + experiments
+//! parle selftest                   # quick runtime round-trip check
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use parle::config::{Algo, RunConfig};
+use parle::coordinator::train;
+use parle::experiments::{run_experiment, ExpCtx, EXPERIMENTS};
+use parle::runtime::Session;
+use parle::util::logging::{set_level, Level};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut pos = Vec::new();
+    let mut flags: Vec<(String, String)> = Vec::new();
+    let mut sets: Vec<(String, String)> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if a == "--set" {
+            let kv = args
+                .get(i + 1)
+                .context("--set needs key=value")?;
+            let (k, v) = kv
+                .split_once('=')
+                .context("--set needs key=value")?;
+            sets.push((k.to_string(), v.to_string()));
+            i += 2;
+        } else if let Some(name) = a.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                flags.push((k.to_string(), v.to_string()));
+                i += 1;
+            } else if name == "quick" || name == "verbose" || name == "quiet"
+            {
+                flags.push((name.to_string(), "true".to_string()));
+                i += 1;
+            } else {
+                let v = args
+                    .get(i + 1)
+                    .with_context(|| format!("--{name} needs a value"))?;
+                flags.push((name.to_string(), v.clone()));
+                i += 2;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    let flag = |k: &str| -> Option<&str> {
+        flags.iter().rev().find(|(f, _)| f == k).map(|(_, v)| v.as_str())
+    };
+
+    if flag("quiet").is_some() {
+        set_level(Level::Warn);
+    } else if flag("verbose").is_some() {
+        set_level(Level::Debug);
+    }
+
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "train" => {
+            let model = flag("model").unwrap_or("mlp_synth").to_string();
+            let algo = Algo::parse(flag("algo").unwrap_or("parle"))?;
+            let mut cfg = RunConfig::new(&model, algo);
+            if let Some(dir) = flag("artifacts") {
+                cfg.artifacts_dir = dir.to_string();
+            }
+            for (k, v) in &sets {
+                cfg.set(k, v)?;
+            }
+            let label = flag("label").unwrap_or("train").to_string();
+            let out = train(&cfg, &label)?;
+            out.record.save(flag("out").unwrap_or("runs"))?;
+            if let Some(ck) = flag("checkpoint") {
+                parle::coordinator::Checkpoint::new(&cfg.model,
+                                                    out.final_params.clone())
+                    .with("val_err", out.record.final_val_err)
+                    .with("epochs", cfg.epochs)
+                    .save(ck)?;
+                println!("checkpoint written to {ck}");
+            }
+            println!("{}", out.record.summary());
+            Ok(())
+        }
+        "experiment" | "exp" => {
+            let name = pos
+                .get(1)
+                .context("usage: parle experiment <name>")?;
+            let ctx = ExpCtx {
+                artifacts_dir: flag("artifacts")
+                    .unwrap_or("artifacts")
+                    .to_string(),
+                out_dir: flag("out").unwrap_or("runs").to_string(),
+                quick: flag("quick").is_some(),
+                seed: flag("seed").unwrap_or("42").parse()?,
+            };
+            std::fs::create_dir_all(&ctx.out_dir)?;
+            run_experiment(name, &ctx)
+        }
+        "perfmodel" => {
+            parle::experiments::table1::paper_scale_times();
+            Ok(())
+        }
+        "list" => {
+            let dir = flag("artifacts").unwrap_or("artifacts");
+            println!("experiments:");
+            for (name, desc) in EXPERIMENTS {
+                println!("  {name:<18} {desc}");
+            }
+            match Session::open(dir) {
+                Ok(s) => {
+                    println!("\nmodels in {dir}:");
+                    for (name, mm) in &s.manifest.models {
+                        println!(
+                            "  {name:<16} P={:<9} batch={:<4} L={} \
+                             dataset={}",
+                            mm.param_count, mm.batch, mm.scan_l, mm.dataset
+                        );
+                    }
+                }
+                Err(e) => println!("\n(no artifacts: {e})"),
+            }
+            Ok(())
+        }
+        "selftest" => {
+            let dir = flag("artifacts").unwrap_or("artifacts");
+            selftest(dir)
+        }
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+parle — Rust+JAX+Pallas reproduction of 'Parle: parallelizing SGD'
+
+USAGE:
+  parle train --model <zoo> --algo <parle|elastic|entropy|sgd|sgd-dp>
+              [--set key=value ...] [--label name] [--out runs]
+  parle experiment <name|all> [--quick] [--out runs] [--seed N]
+  parle perfmodel
+  parle list
+  parle selftest
+
+Run `make artifacts` first to AOT-compile the models.";
+
+/// Round-trip check: init + inner steps + eval on the smallest model.
+fn selftest(artifacts: &str) -> Result<()> {
+    let mut cfg = RunConfig::new("mlp_synth", Algo::Parle);
+    cfg.artifacts_dir = artifacts.to_string();
+    cfg.replicas = 2;
+    cfg.epochs = 0.5;
+    cfg.data.train = 512;
+    cfg.data.val = 256;
+    cfg.eval_every_rounds = 1;
+    cfg.l_steps = 4;
+    let out = train(&cfg, "selftest")?;
+    let err = out.record.final_val_err;
+    println!("selftest: val err {:.1}% after half an epoch", err * 100.0);
+    if !(err < 0.9) {
+        bail!("selftest: error did not drop below chance ({err})");
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Error/loss curves indexed by wall-clock time and epoch — the paper
+//! plots validation error against wall-clock (Remark 4), so both axes are
+//! recorded for every point.
+
+use anyhow::Result;
+
+use crate::util::csv::CsvWriter;
+
+/// One evaluation point along a run.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub wall_s: f64,
+    pub epoch: f64,
+    pub train_loss: f64,
+    pub train_err: f64,
+    pub val_err: f64,
+}
+
+/// A full training curve.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn last(&self) -> Option<&CurvePoint> {
+        self.points.last()
+    }
+
+    /// Best (minimum) validation error over the run.
+    pub fn best_val_err(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.val_err)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// First wall-clock time at which val err <= threshold (the
+    /// "time-to-target" currency of the paper's speedup claims).
+    pub fn time_to_target(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.val_err <= target)
+            .map(|p| p.wall_s)
+    }
+
+    pub fn write_csv(&self, path: &str, run_label: &str) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["run", "wall_s", "epoch", "train_loss", "train_err",
+              "val_err"],
+        )?;
+        for p in &self.points {
+            w.row(&[
+                run_label.to_string(),
+                format!("{:.3}", p.wall_s),
+                format!("{:.4}", p.epoch),
+                format!("{:.6}", p.train_loss),
+                format!("{:.6}", p.train_err),
+                format!("{:.6}", p.val_err),
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// ASCII sparkline of val error (terminal-friendly figures).
+    pub fn sparkline(&self) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.points.is_empty() {
+            return String::new();
+        }
+        let lo = self.best_val_err();
+        let hi = self
+            .points
+            .iter()
+            .map(|p| p.val_err)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-9);
+        self.points
+            .iter()
+            .map(|p| {
+                let t = ((p.val_err - lo) / span * 7.0).round() as usize;
+                BARS[t.min(7)]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> Curve {
+        let mut c = Curve::new();
+        for (i, err) in [0.9, 0.5, 0.3, 0.2, 0.25].iter().enumerate() {
+            c.push(CurvePoint {
+                wall_s: i as f64,
+                epoch: i as f64 * 0.5,
+                train_loss: 1.0 - 0.1 * i as f64,
+                train_err: *err * 0.8,
+                val_err: *err,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn best_and_target() {
+        let c = curve();
+        assert_eq!(c.best_val_err(), 0.2);
+        assert_eq!(c.time_to_target(0.5), Some(1.0));
+        assert_eq!(c.time_to_target(0.1), None);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let c = curve();
+        let path = std::env::temp_dir().join("parle_curve_test.csv");
+        c.write_csv(path.to_str().unwrap(), "test").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 6); // header + 5 points
+        assert!(text.starts_with("run,wall_s"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let c = curve();
+        let s = c.sparkline();
+        assert_eq!(s.chars().count(), 5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics: training curves and run records — the series behind every
+//! figure and the rows behind every table.
+
+pub mod curve;
+pub mod record;
+
+pub use curve::{Curve, CurvePoint};
+pub use record::RunRecord;

@@ -1,0 +1,146 @@
+//! RunRecord: the JSON-serializable summary of one run (written under
+//! `runs/`, referenced by EXPERIMENTS.md).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::metrics::curve::Curve;
+use crate::util::json::Json;
+
+/// Everything worth keeping from a finished run.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub label: String,
+    pub model: String,
+    pub algo: String,
+    pub replicas: usize,
+    pub curve: Curve,
+    pub wall_s: f64,
+    pub final_val_err: f64,
+    pub final_train_err: f64,
+    pub final_train_loss: f64,
+    /// total bytes moved through the reduce fabric
+    pub comm_bytes: u64,
+    /// comm seconds / compute seconds (paper §4.1 reports 0.4-0.5%)
+    pub comm_ratio: f64,
+    /// phase -> (seconds, calls)
+    pub phases: BTreeMap<String, (f64, u64)>,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        let phases = Json::Obj(
+            self.phases
+                .iter()
+                .map(|(k, (s, n))| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("seconds", Json::Num(*s)),
+                            ("calls", Json::Num(*n as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let curve = Json::Arr(
+            self.curve
+                .points
+                .iter()
+                .map(|p| {
+                    Json::arr_f64(&[
+                        p.wall_s,
+                        p.epoch,
+                        p.train_loss,
+                        p.train_err,
+                        p.val_err,
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("algo", Json::Str(self.algo.clone())),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("final_val_err", Json::Num(self.final_val_err)),
+            ("final_train_err", Json::Num(self.final_train_err)),
+            ("final_train_loss", Json::Num(self.final_train_loss)),
+            ("comm_bytes", Json::Num(self.comm_bytes as f64)),
+            ("comm_ratio", Json::Num(self.comm_ratio)),
+            ("curve_cols", Json::Arr(vec![
+                Json::Str("wall_s".into()),
+                Json::Str("epoch".into()),
+                Json::Str("train_loss".into()),
+                Json::Str("train_err".into()),
+                Json::Str("val_err".into()),
+            ])),
+            ("curve", curve),
+            ("phases", phases),
+        ])
+    }
+
+    pub fn save(&self, dir: &str) -> Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.json", self.label.replace('/', "_"));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+
+    /// One-line summary for logs and tables.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<28} val {:6.2}%  train {:6.2}%  loss {:.4}  {:7.1}s  \
+             comm {:.2}%",
+            self.label,
+            self.final_val_err * 100.0,
+            self.final_train_err * 100.0,
+            self.final_train_loss,
+            self.wall_s,
+            self.comm_ratio * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::curve::CurvePoint;
+
+    #[test]
+    fn json_save_roundtrip() {
+        let mut curve = Curve::new();
+        curve.push(CurvePoint {
+            wall_s: 1.0,
+            epoch: 0.5,
+            train_loss: 2.0,
+            train_err: 0.5,
+            val_err: 0.6,
+        });
+        let rec = RunRecord {
+            label: "test/run".into(),
+            model: "mlp_synth".into(),
+            algo: "parle".into(),
+            replicas: 3,
+            curve,
+            wall_s: 10.0,
+            final_val_err: 0.6,
+            final_train_err: 0.5,
+            final_train_loss: 2.0,
+            comm_bytes: 1024,
+            comm_ratio: 0.005,
+            phases: [("step".to_string(), (9.0, 100u64))].into(),
+        };
+        let dir = std::env::temp_dir().join("parle_record_test");
+        let path = rec.save(dir.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.str_of("algo").unwrap(), "parle");
+        assert_eq!(j.usize_of("replicas").unwrap(), 3);
+        assert_eq!(j.req("curve").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(dir).ok();
+        assert!(rec.summary().contains("val"));
+    }
+}

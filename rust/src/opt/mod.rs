@@ -1,0 +1,13 @@
+//! Host-side optimizer substrate: flat-vector math for the outer updates
+//! (8c)(8d), the scoping schedule (9), and learning-rate annealing.
+//!
+//! Everything here runs once per communication round (every `L`
+//! minibatches) — it is the rust half of the algorithm; the per-minibatch
+//! inner updates run inside the AOT artifacts.
+
+pub mod schedule;
+pub mod scoping;
+pub mod vecmath;
+
+pub use schedule::LrSchedule;
+pub use scoping::Scoping;

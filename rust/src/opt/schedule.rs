@@ -1,0 +1,58 @@
+//! Learning-rate schedules.
+//!
+//! The paper drops the LR by a fixed factor at preset epochs — e.g.
+//! [60, 120, 180] /5 for SGD on CIFAR, [2, 4, 6] /5 for Parle/Entropy-SGD
+//! (the heuristic: Parle sees L=25 gradient evaluations per weight
+//! update, so its "epochs" are L x denser in gradient work).
+
+/// Piecewise-constant step schedule.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub drop_epochs: Vec<usize>,
+    pub drop_factor: f32,
+}
+
+impl LrSchedule {
+    pub fn new(base: f32, drop_epochs: Vec<usize>, drop_factor: f32) -> Self {
+        LrSchedule {
+            base,
+            drop_epochs,
+            drop_factor,
+        }
+    }
+
+    pub fn constant(base: f32) -> Self {
+        LrSchedule::new(base, vec![], 1.0)
+    }
+
+    /// LR at the given (0-based fractional) epoch.
+    pub fn at(&self, epoch: f64) -> f32 {
+        let drops = self
+            .drop_epochs
+            .iter()
+            .filter(|&&e| epoch >= e as f64)
+            .count();
+        self.base / self.drop_factor.powi(drops as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drops_at_epochs() {
+        let s = LrSchedule::new(0.1, vec![2, 4], 10.0);
+        assert_eq!(s.at(0.0), 0.1);
+        assert_eq!(s.at(1.99), 0.1);
+        assert!((s.at(2.0) - 0.01).abs() < 1e-9);
+        assert!((s.at(4.5) - 0.001).abs() < 1e-10);
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let s = LrSchedule::constant(0.05);
+        assert_eq!(s.at(100.0), 0.05);
+    }
+}

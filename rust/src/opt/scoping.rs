@@ -1,0 +1,131 @@
+//! Scoping schedule — eq. (9) of the paper.
+//!
+//! gamma_k = gamma_0 * (1 - 1/(2B))^(k/L),  clipped at 1
+//! rho_k   = rho_0   * (1 - 1/(2B))^(k/L),  clipped at 0.1
+//!
+//! where B is the number of minibatches per epoch and the exponent
+//! advances once per communication round (every L minibatches). The paper
+//! fixes gamma_0 = 100, rho_0 = 1 for *all* experiments; scoping is the
+//! mechanism that collapses all replicas to one configuration at the end
+//! of training (§2.4), and §4.4 reports Elastic-SGD fails without it.
+
+/// Annealed (gamma, rho) coupling strengths.
+#[derive(Clone, Debug)]
+pub struct Scoping {
+    pub gamma0: f32,
+    pub rho0: f32,
+    pub gamma_min: f32,
+    pub rho_min: f32,
+    decay: f64,
+    rounds: u64,
+}
+
+impl Scoping {
+    /// Paper defaults (§3.1): gamma0=100, rho0=1, clip at 1 and 0.1.
+    pub fn paper(batches_per_epoch: usize) -> Self {
+        Scoping::new(100.0, 1.0, 1.0, 0.1, batches_per_epoch)
+    }
+
+    /// Disabled scoping (constant gamma/rho) — the §4.4 ablation.
+    pub fn constant(gamma: f32, rho: f32) -> Self {
+        Scoping {
+            gamma0: gamma,
+            rho0: rho,
+            gamma_min: gamma,
+            rho_min: rho,
+            decay: 1.0,
+            rounds: 0,
+        }
+    }
+
+    pub fn new(gamma0: f32, rho0: f32, gamma_min: f32, rho_min: f32,
+               batches_per_epoch: usize) -> Self {
+        let b = batches_per_epoch.max(1) as f64;
+        Scoping {
+            gamma0,
+            rho0,
+            gamma_min,
+            rho_min,
+            decay: 1.0 - 1.0 / (2.0 * b),
+            rounds: 0,
+        }
+    }
+
+    /// Advance one communication round (k/L incremented).
+    pub fn step(&mut self) {
+        self.rounds += 1;
+    }
+
+    fn factor(&self) -> f64 {
+        self.decay.powf(self.rounds as f64)
+    }
+
+    pub fn gamma(&self) -> f32 {
+        (self.gamma0 as f64 * self.factor()).max(self.gamma_min as f64) as f32
+    }
+
+    pub fn rho(&self) -> f32 {
+        (self.rho0 as f64 * self.factor()).max(self.rho_min as f64) as f32
+    }
+
+    /// 1/gamma fed to the inner-step artifact (the proximal gain).
+    pub fn gamma_inv(&self) -> f32 {
+        1.0 / self.gamma()
+    }
+
+    /// 1/rho fed to Elastic-SGD steps.
+    pub fn rho_inv(&self) -> f32 {
+        1.0 / self.rho()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_decay_with_clip() {
+        let mut s = Scoping::paper(100);
+        let g0 = s.gamma();
+        assert!((g0 - 100.0).abs() < 1e-4);
+        let mut prev = g0;
+        for _ in 0..5000 {
+            s.step();
+            let g = s.gamma();
+            assert!(g <= prev + 1e-6);
+            prev = g;
+        }
+        // after many epochs both hit their clips
+        assert_eq!(s.gamma(), 1.0);
+        assert_eq!(s.rho(), 0.1);
+    }
+
+    #[test]
+    fn paper_rate() {
+        // after exactly 2B rounds the factor is (1-1/(2B))^(2B) ~ 1/e
+        let b = 50;
+        let mut s = Scoping::paper(b);
+        for _ in 0..2 * b {
+            s.step();
+        }
+        let f = s.gamma() / 100.0;
+        assert!((f as f64 - (-1.0f64).exp()).abs() < 0.01, "factor {f}");
+    }
+
+    #[test]
+    fn constant_never_moves() {
+        let mut s = Scoping::constant(50.0, 0.5);
+        for _ in 0..100 {
+            s.step();
+        }
+        assert_eq!(s.gamma(), 50.0);
+        assert_eq!(s.rho(), 0.5);
+    }
+
+    #[test]
+    fn inverses() {
+        let s = Scoping::constant(4.0, 0.25);
+        assert_eq!(s.gamma_inv(), 0.25);
+        assert_eq!(s.rho_inv(), 4.0);
+    }
+}

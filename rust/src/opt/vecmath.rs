@@ -1,0 +1,140 @@
+//! Dense f32 vector kernels for the coordinator hot path.
+//!
+//! These run at every communication round over P-sized vectors (P up to
+//! ~1M here, 10-100M at paper scale), so they are written as simple
+//! chunk-free loops the compiler auto-vectorizes; `mean_into` is the
+//! reduce that stands in for the paper's NCCL all-reduce.
+
+/// out += alpha * x
+pub fn axpy(out: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += alpha * v;
+    }
+}
+
+/// out = x
+pub fn copy(out: &mut [f32], x: &[f32]) {
+    out.copy_from_slice(x);
+}
+
+/// Element-wise mean of several replicas into `out` (the (8d) reduce with
+/// the paper's eta'' = rho/n choice: x <- mean_a x^a).
+pub fn mean_into(out: &mut [f32], replicas: &[&[f32]]) {
+    assert!(!replicas.is_empty());
+    let n = replicas.len() as f32;
+    let inv = 1.0 / n;
+    out.copy_from_slice(replicas[0]);
+    for r in &replicas[1..] {
+        debug_assert_eq!(out.len(), r.len());
+        for (o, &v) in out.iter_mut().zip(*r) {
+            *o += v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// The Parle outer step (8c) with Nesterov momentum (Remark 2):
+///   v    <- mu * v - eta*(x - z) - (eta/rho)*(x - xref)
+///   x    <- x + v
+/// `eta_over_rho` is the caller-scoped elastic gain (0 disables coupling,
+/// giving the Entropy-SGD outer step (6c)).
+pub fn outer_step(
+    x: &mut [f32],
+    v: &mut [f32],
+    z: &[f32],
+    xref: &[f32],
+    eta: f32,
+    eta_over_rho: f32,
+    mu: f32,
+) {
+    debug_assert_eq!(x.len(), v.len());
+    debug_assert_eq!(x.len(), z.len());
+    debug_assert_eq!(x.len(), xref.len());
+    for i in 0..x.len() {
+        let g = eta * (x[i] - z[i]) + eta_over_rho * (x[i] - xref[i]);
+        v[i] = mu * v[i] - g;
+        x[i] += v[i];
+    }
+}
+
+/// Squared L2 distance (used by the alignment metric and tests).
+pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Dot product in f64 accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// L2 norm.
+pub fn norm(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_works() {
+        let mut o = vec![1.0, 2.0];
+        axpy(&mut o, 0.5, &[2.0, 4.0]);
+        assert_eq!(o, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn mean_of_replicas() {
+        let a = vec![1.0f32, 5.0];
+        let b = vec![3.0f32, 7.0];
+        let mut out = vec![0.0; 2];
+        mean_into(&mut out, &[&a, &b]);
+        assert_eq!(out, vec![2.0, 6.0]);
+    }
+
+    #[test]
+    fn mean_single_replica_identity() {
+        let a = vec![1.5f32, -2.0];
+        let mut out = vec![0.0; 2];
+        mean_into(&mut out, &[&a]);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn outer_step_moves_towards_z_and_ref() {
+        let mut x = vec![1.0f32];
+        let mut v = vec![0.0f32];
+        outer_step(&mut x, &mut v, &[0.0], &[0.0], 0.1, 0.2, 0.0);
+        // g = 0.1*1 + 0.2*1 = 0.3 -> x = 0.7
+        assert!((x[0] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn outer_step_momentum_accumulates() {
+        let mut x = vec![1.0f32];
+        let mut v = vec![0.0f32];
+        outer_step(&mut x, &mut v, &[0.0], &[1.0], 0.1, 0.0, 0.9);
+        let x1 = x[0];
+        outer_step(&mut x, &mut v, &[0.0], &[1.0], 0.1, 0.0, 0.9);
+        // second step moves further than the first due to momentum
+        assert!((x1 - x[0]) > (1.0 - x1));
+    }
+
+    #[test]
+    fn distances() {
+        assert_eq!(dist2(&[0.0, 3.0], &[4.0, 0.0]), 25.0);
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Collective communication models.
+
+/// Interconnect profile.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    pub name: &'static str,
+    /// point-to-point bandwidth, bytes/s
+    pub bw: f64,
+    /// per-message latency, seconds
+    pub latency: f64,
+}
+
+impl Link {
+    /// PCI-E 3.0 x16 (the paper's NCCL-over-PCI-E testbed).
+    pub fn pcie3() -> Self {
+        Link {
+            name: "pcie3-x16",
+            bw: 12e9,
+            latency: 10e-6,
+        }
+    }
+
+    pub fn nvlink() -> Self {
+        Link {
+            name: "nvlink",
+            bw: 80e9,
+            latency: 5e-6,
+        }
+    }
+
+    pub fn ethernet_10g() -> Self {
+        Link {
+            name: "10gbe",
+            bw: 1.1e9,
+            latency: 50e-6,
+        }
+    }
+}
+
+/// Ring all-reduce time for `bytes` across `n` participants
+/// (2(n-1)/n x bytes over the slowest link + 2(n-1) latency hops) —
+/// the NCCL model.
+pub fn allreduce_time_s(bytes: usize, n: usize, link: &Link) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let steps = 2 * (n - 1);
+    let volume = 2.0 * (n - 1) as f64 / n as f64 * bytes as f64;
+    volume / link.bw + steps as f64 * link.latency
+}
+
+/// Parameter-server reduce + broadcast (what Parle's master does):
+/// n uploads + n downloads serialized through the server's link.
+pub fn reduce_bcast_time_s(bytes: usize, n: usize, link: &Link) -> f64 {
+    2.0 * n as f64 * (bytes as f64 / link.bw + link.latency)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_scales_gently_with_n() {
+        let link = Link::pcie3();
+        let b = 100_000_000; // 100 MB
+        let t3 = allreduce_time_s(b, 3, &link);
+        let t8 = allreduce_time_s(b, 8, &link);
+        // ring volume factor 2(n-1)/n saturates at 2x, so t8 < 1.4 t3
+        assert!(t8 < 1.4 * t3, "t3={t3} t8={t8}");
+        assert_eq!(allreduce_time_s(b, 1, &link), 0.0);
+    }
+
+    #[test]
+    fn ps_reduce_linear_in_n() {
+        let link = Link::pcie3();
+        let t2 = reduce_bcast_time_s(1_000_000, 2, &link);
+        let t4 = reduce_bcast_time_s(1_000_000, 4, &link);
+        assert!((t4 / t2 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn paper_comm_ratio_wrn28() {
+        // §4.1: WRN-28-10 minibatch 528 ms; reduce steps (8c)-(8d) took
+        // 2.8 ms => ratio 0.52%. Model: 36.5M params x 4B over PCI-E
+        // ring with n=3, amortized over L=25 steps.
+        let bytes = 36_500_000 * 4;
+        let t_comm = allreduce_time_s(bytes, 3, &Link::pcie3());
+        let per_step = t_comm / 25.0;
+        let ratio = per_step / 0.528;
+        assert!(
+            ratio > 0.0005 && ratio < 0.02,
+            "modeled §4.1 ratio {ratio}"
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! Device profiles for the analytic model.
+
+/// Compute device profile (roofline parameters + achievable efficiency).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Peak dense f32 throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// Device memory bandwidth (bytes/s).
+    pub mem_bw: f64,
+    /// Fraction of peak a tuned conv/matmul kernel achieves (Paleo's
+    /// "platform percent of peak").
+    pub efficiency: f64,
+}
+
+impl DeviceProfile {
+    /// NVIDIA Titan X (Pascal) — the class of GPU in the paper's 2017
+    /// desktop testbed.
+    pub fn titan_x_pascal() -> Self {
+        DeviceProfile {
+            name: "titan-x-pascal",
+            peak_flops: 10.97e12,
+            mem_bw: 480e9,
+            efficiency: 0.55,
+        }
+    }
+
+    /// NVIDIA P100 (for the distributed extrapolations).
+    pub fn p100() -> Self {
+        DeviceProfile {
+            name: "p100",
+            peak_flops: 9.5e12,
+            mem_bw: 732e9,
+            efficiency: 0.6,
+        }
+    }
+
+    /// One TPU-v3 core (MXU bf16) — the hardware the Pallas kernels in
+    /// this repo are structured for.
+    pub fn tpu_v3_core() -> Self {
+        DeviceProfile {
+            name: "tpu-v3-core",
+            peak_flops: 61.4e12, // bf16 MXU (half of the 2-core chip)
+            mem_bw: 450e9,
+            efficiency: 0.5,
+        }
+    }
+
+    /// This testbed: one CPU socket running XLA:CPU (measured ballpark).
+    pub fn cpu_xla() -> Self {
+        DeviceProfile {
+            name: "cpu-xla",
+            peak_flops: 150e9,
+            mem_bw: 20e9,
+            efficiency: 0.5,
+        }
+    }
+
+    /// Roofline time for a kernel: max of compute and memory time.
+    pub fn kernel_time_s(&self, flops: f64, bytes: f64) -> f64 {
+        let compute = flops / (self.peak_flops * self.efficiency);
+        let memory = bytes / self.mem_bw;
+        compute.max(memory)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roofline_picks_binding_constraint() {
+        let d = DeviceProfile::titan_x_pascal();
+        // compute-bound: lots of flops, few bytes
+        let t1 = d.kernel_time_s(1e12, 1e6);
+        assert!((t1 - 1e12 / (10.97e12 * 0.55)).abs() / t1 < 1e-9);
+        // memory-bound: few flops, lots of bytes
+        let t2 = d.kernel_time_s(1e6, 48e9);
+        assert!((t2 - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn profiles_sane() {
+        for d in [
+            DeviceProfile::titan_x_pascal(),
+            DeviceProfile::p100(),
+            DeviceProfile::tpu_v3_core(),
+            DeviceProfile::cpu_xla(),
+        ] {
+            assert!(d.peak_flops > 0.0 && d.mem_bw > 0.0);
+            assert!((0.0..=1.0).contains(&d.efficiency));
+        }
+    }
+}

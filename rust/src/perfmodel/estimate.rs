@@ -1,0 +1,187 @@
+//! End-to-end wall-clock estimates for the paper's Table 1/2 time
+//! columns: combine the layer cost model, the collective model and each
+//! algorithm's communication cadence.
+
+use crate::perfmodel::comm::{allreduce_time_s, Link};
+use crate::perfmodel::device::DeviceProfile;
+use crate::perfmodel::layers::NetSpec;
+
+/// Wall-clock estimate for one training run.
+#[derive(Clone, Debug)]
+pub struct TrainEstimate {
+    pub algo: &'static str,
+    pub minutes: f64,
+    pub comm_ratio: f64,
+}
+
+/// Estimated times for the four algorithms on one benchmark row.
+#[derive(Clone, Debug)]
+pub struct AlgoTime {
+    pub net: String,
+    pub rows: Vec<TrainEstimate>,
+}
+
+/// Reproduce one Table-1 row: wall-clock of Parle / Elastic / Entropy /
+/// SGD for a network trained `epochs_*` epochs on `dataset_size` examples
+/// with minibatch `batch` on `n` devices.
+///
+/// Cadences (paper §2/§3):
+/// * SGD (data-parallel over n GPUs): allreduce of gradients every step,
+///   dataset split n ways per step (n x effective batch).
+/// * Elastic-SGD: n replicas, full dataset each, reduce every step.
+/// * Entropy-SGD: sequential (data-parallel over n like the paper's
+///   Remark 4 comparison), L=25 inner steps per weight update.
+/// * Parle: n replicas, reduce every L=25 steps.
+#[allow(clippy::too_many_arguments)]
+pub fn algo_times(
+    net: &NetSpec,
+    dataset_size: usize,
+    batch: usize,
+    n: usize,
+    epochs_sgd: f64,
+    epochs_parle: f64,
+    dev: &DeviceProfile,
+    link: &Link,
+) -> AlgoTime {
+    let l = 25.0;
+    let step = net.minibatch_time_s(batch, dev);
+    let grad_bytes = net.param_count() * 4;
+    let reduce = allreduce_time_s(grad_bytes, n, link);
+    let steps_per_epoch = (dataset_size as f64 / batch as f64).ceil();
+
+    // SGD-DP: the minibatch is split across n GPUs (compute / n), with a
+    // gradient allreduce every step.
+    let sgd_steps = epochs_sgd * steps_per_epoch;
+    let sgd_time = sgd_steps * (step / n as f64 + reduce);
+
+    // Parle: one "Parle epoch" performs B weight updates, each costing
+    // L = 25 gradient evaluations on every replica (replicas run in
+    // parallel); one reduce per weight update (every L minibatches).
+    let parle_rounds = epochs_parle * steps_per_epoch; // weight updates
+    let parle_compute = parle_rounds * l * step;
+    let parle_comm = parle_rounds * reduce;
+    let parle_time = parle_compute + parle_comm;
+
+    // Entropy-SGD: identical gradient work, but sequential — run
+    // data-parallel over the same n devices (paper Remark 4), so each
+    // minibatch costs step/n + a gradient allreduce.
+    let entropy_time = parle_rounds * l * (step / n as f64 + reduce);
+
+    // Elastic-SGD: matched gradient-evaluation budget spread across n
+    // parallel replicas, but communicating EVERY minibatch.
+    let elastic_steps = epochs_parle * l * steps_per_epoch;
+    let elastic_time = elastic_steps * (step + reduce);
+
+    let mins = |s: f64| s / 60.0;
+    AlgoTime {
+        net: net.name.clone(),
+        rows: vec![
+            TrainEstimate {
+                algo: "parle",
+                minutes: mins(parle_time),
+                comm_ratio: parle_comm / parle_compute,
+            },
+            TrainEstimate {
+                algo: "elastic-sgd",
+                minutes: mins(elastic_time),
+                comm_ratio: reduce / step,
+            },
+            TrainEstimate {
+                algo: "entropy-sgd",
+                minutes: mins(entropy_time),
+                comm_ratio: reduce / (step / n as f64),
+            },
+            TrainEstimate {
+                algo: "sgd",
+                minutes: mins(sgd_time),
+                comm_ratio: reduce / (step / n as f64),
+            },
+        ],
+    }
+}
+
+impl AlgoTime {
+    pub fn get(&self, algo: &str) -> Option<&TrainEstimate> {
+        self.rows.iter().find(|r| r.algo == algo)
+    }
+
+    /// Wall-clock speedup of Parle over the SGD baseline at equal target
+    /// error — the paper's headline 2-4x uses SGD's *published* epoch
+    /// budgets vs Parle's (much smaller) epoch budgets.
+    pub fn parle_speedup_vs_sgd(&self) -> f64 {
+        let p = self.get("parle").unwrap().minutes;
+        let s = self.get("sgd").unwrap().minutes;
+        s / p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1 WRN-28-10/CIFAR-10 shape: SGD trains 200 epochs, Parle 6
+    /// epochs of L=25 work; paper reports 355 vs 400 minutes (0.9x) and a
+    /// 2-4x speedup at matched error via early stopping.
+    #[test]
+    fn table1_wrn_shape() {
+        let net = NetSpec::wrn(28, 10, 10);
+        let est = algo_times(
+            &net,
+            50_000,
+            128,
+            3,
+            200.0,
+            6.0,
+            &DeviceProfile::titan_x_pascal(),
+            &Link::pcie3(),
+        );
+        let parle = est.get("parle").unwrap();
+        let sgd = est.get("sgd").unwrap();
+        // both in the hundreds-of-minutes regime like the paper
+        assert!(
+            parle.minutes > 50.0 && parle.minutes < 2000.0,
+            "parle {} min",
+            parle.minutes
+        );
+        assert!(
+            sgd.minutes > 50.0 && sgd.minutes < 2000.0,
+            "sgd {} min",
+            sgd.minutes
+        );
+        // same ballpark (paper: 400 vs 355)
+        let ratio = parle.minutes / sgd.minutes;
+        assert!(ratio > 0.3 && ratio < 3.0, "ratio {ratio}");
+        // comm is negligible for parle (paper: 0.52%)
+        assert!(
+            parle.comm_ratio < 0.02,
+            "parle comm ratio {}",
+            parle.comm_ratio
+        );
+        // elastic pays ~L x more comm than parle
+        let elastic = est.get("elastic-sgd").unwrap();
+        assert!(elastic.comm_ratio > 10.0 * parle.comm_ratio);
+    }
+
+    #[test]
+    fn speedup_at_matched_error_budget() {
+        // the 2-4x claim: in Fig. 3a Parle crosses SGD's *final* error
+        // around its first LR drop (~1.5 Parle epochs of L=25 work),
+        // while data-parallel SGD needs its full 200-epoch schedule.
+        let net = NetSpec::wrn(28, 10, 10);
+        let est = algo_times(
+            &net,
+            50_000,
+            128,
+            3,
+            200.0,
+            1.5, // Parle budget at which it matches SGD's best error
+            &DeviceProfile::titan_x_pascal(),
+            &Link::pcie3(),
+        );
+        let speedup = est.parle_speedup_vs_sgd();
+        assert!(
+            speedup > 1.5 && speedup < 8.0,
+            "modeled speedup {speedup}"
+        );
+    }
+}

@@ -1,0 +1,205 @@
+//! Per-layer FLOP/byte counting for the paper's actual networks.
+
+use crate::perfmodel::device::DeviceProfile;
+
+/// Cost of one layer for one example (forward pass).
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    pub name: String,
+    pub flops: f64,
+    pub bytes: f64,
+    pub params: usize,
+}
+
+/// A network as a list of layer costs.
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    pub name: String,
+    pub layers: Vec<LayerCost>,
+}
+
+impl NetSpec {
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    pub fn flops_per_example_fwd(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops).sum()
+    }
+
+    /// fwd + bwd ~ 3x fwd (standard Paleo accounting).
+    pub fn flops_per_example_step(&self) -> f64 {
+        3.0 * self.flops_per_example_fwd()
+    }
+
+    /// Time for one minibatch step (fwd+bwd) on a device.
+    pub fn minibatch_time_s(&self, batch: usize, dev: &DeviceProfile)
+                            -> f64 {
+        let flops = self.flops_per_example_step() * batch as f64;
+        let bytes: f64 =
+            3.0 * self.layers.iter().map(|l| l.bytes).sum::<f64>()
+                * batch as f64;
+        dev.kernel_time_s(flops, bytes)
+    }
+
+    // ---- constructors for the paper's networks ---------------------------
+
+    fn conv(name: &str, h: usize, w: usize, cin: usize, cout: usize,
+            k: usize, stride: usize) -> LayerCost {
+        let oh = h / stride;
+        let ow = w / stride;
+        let flops = 2.0 * (oh * ow * cout * cin * k * k) as f64;
+        let params = k * k * cin * cout;
+        let bytes = 4.0
+            * ((h * w * cin) + (oh * ow * cout) + params) as f64;
+        LayerCost {
+            name: name.to_string(),
+            flops,
+            bytes,
+            params,
+        }
+    }
+
+    fn dense(name: &str, din: usize, dout: usize) -> LayerCost {
+        LayerCost {
+            name: name.to_string(),
+            flops: 2.0 * (din * dout) as f64,
+            bytes: 4.0 * (din + dout + din * dout) as f64,
+            params: din * dout + dout,
+        }
+    }
+
+    /// LeNet (paper §4.2): conv 20, conv 50, fc 500, fc 10 on 28x28x1.
+    pub fn lenet() -> NetSpec {
+        NetSpec {
+            name: "lenet".into(),
+            layers: vec![
+                Self::conv("conv1", 28, 28, 1, 20, 5, 1),
+                Self::conv("conv2", 12, 12, 20, 50, 5, 1),
+                Self::dense("fc1", 4 * 4 * 50, 500),
+                Self::dense("fc2", 500, 10),
+            ],
+        }
+    }
+
+    /// All-CNN-C (Springenberg et al.): 96/192 channels on 32x32x3.
+    pub fn allcnn() -> NetSpec {
+        NetSpec {
+            name: "allcnn".into(),
+            layers: vec![
+                Self::conv("c1", 32, 32, 3, 96, 3, 1),
+                Self::conv("c2", 32, 32, 96, 96, 3, 1),
+                Self::conv("c3", 32, 32, 96, 96, 3, 2),
+                Self::conv("c4", 16, 16, 96, 192, 3, 1),
+                Self::conv("c5", 16, 16, 192, 192, 3, 1),
+                Self::conv("c6", 16, 16, 192, 192, 3, 2),
+                Self::conv("c7", 8, 8, 192, 192, 3, 1),
+                Self::conv("c8", 8, 8, 192, 192, 1, 1),
+                Self::conv("c9", 8, 8, 192, 10, 1, 1),
+            ],
+        }
+    }
+
+    /// WRN-d-k (Zagoruyko & Komodakis) on 32x32x3.
+    pub fn wrn(depth: usize, widen: usize, classes: usize) -> NetSpec {
+        assert_eq!((depth - 4) % 6, 0);
+        let n = (depth - 4) / 6;
+        let w = [16, 16 * widen, 32 * widen, 64 * widen];
+        let mut layers = vec![Self::conv("conv0", 32, 32, 3, w[0], 3, 1)];
+        let mut hw = 32;
+        for stage in 0..3 {
+            let cin0 = w[stage];
+            let cout = w[stage + 1];
+            for b in 0..n {
+                let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+                let cin = if b == 0 { cin0 } else { cout };
+                if stride == 2 {
+                    hw /= 2;
+                }
+                layers.push(Self::conv(
+                    &format!("s{stage}b{b}c1"),
+                    hw * stride,
+                    hw * stride,
+                    cin,
+                    cout,
+                    3,
+                    stride,
+                ));
+                layers.push(Self::conv(
+                    &format!("s{stage}b{b}c2"),
+                    hw,
+                    hw,
+                    cout,
+                    cout,
+                    3,
+                    1,
+                ));
+                if cin != cout {
+                    layers.push(Self::conv(
+                        &format!("s{stage}b{b}sc"),
+                        hw * stride,
+                        hw * stride,
+                        cin,
+                        cout,
+                        1,
+                        stride,
+                    ));
+                }
+            }
+        }
+        layers.push(Self::dense("fc", w[3], classes));
+        NetSpec {
+            name: format!("wrn-{depth}-{widen}"),
+            layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrn_28_10_param_count_matches_paper() {
+        // Zagoruyko & Komodakis report 36.5M parameters for WRN-28-10
+        let net = NetSpec::wrn(28, 10, 10);
+        let p = net.param_count() as f64 / 1e6;
+        assert!((p - 36.5).abs() < 1.0, "WRN-28-10 params {p}M");
+    }
+
+    #[test]
+    fn allcnn_param_count_matches_paper() {
+        // All-CNN-C is ~1.4M parameters
+        let p = NetSpec::allcnn().param_count() as f64 / 1e6;
+        assert!((p - 1.4).abs() < 0.2, "All-CNN params {p}M");
+    }
+
+    #[test]
+    fn lenet_smaller_than_allcnn() {
+        assert!(
+            NetSpec::lenet().param_count()
+                < NetSpec::allcnn().param_count()
+        );
+    }
+
+    #[test]
+    fn wrn_minibatch_time_plausible_on_titan_x() {
+        // the paper reports 528 ms per batch-128 step for WRN-28-10 on
+        // their testbed; the roofline model should land within 2x
+        let net = NetSpec::wrn(28, 10, 10);
+        let t = net.minibatch_time_s(128, &DeviceProfile::titan_x_pascal());
+        assert!(
+            t > 0.2 && t < 1.2,
+            "WRN-28-10 modeled step {t:.3}s vs paper 0.528s"
+        );
+    }
+
+    #[test]
+    fn deeper_is_slower() {
+        let d = DeviceProfile::titan_x_pascal();
+        assert!(
+            NetSpec::wrn(28, 10, 10).minibatch_time_s(128, &d)
+                > NetSpec::wrn(16, 4, 10).minibatch_time_s(128, &d)
+        );
+    }
+}

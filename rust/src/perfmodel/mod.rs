@@ -1,0 +1,19 @@
+//! Paleo-style analytic performance model (the paper cites Qi et al.'s
+//! Paleo for exactly this purpose).
+//!
+//! Our testbed is a CPU; the paper's is 3 GPUs on PCI-E. To reproduce the
+//! *time* columns of Tables 1-2 and the §4.1 comm/compute ratios at paper
+//! scale, this module models per-layer compute time (roofline over FLOPs
+//! and memory traffic) and collective communication time (ring
+//! all-reduce / parameter-server reduce) for the paper's actual networks
+//! (WRN-28-10, All-CNN-C, LeNet) on period-correct device profiles.
+
+pub mod comm;
+pub mod device;
+pub mod estimate;
+pub mod layers;
+
+pub use comm::{allreduce_time_s, reduce_bcast_time_s};
+pub use device::DeviceProfile;
+pub use estimate::{algo_times, AlgoTime, TrainEstimate};
+pub use layers::{LayerCost, NetSpec};

@@ -1,0 +1,259 @@
+//! Artifact manifest: the typed contract between the python AOT pipeline
+//! and the rust runtime, parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(tag: &str) -> Result<Self> {
+        match tag {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype tag {other:?}"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input or output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        let dtype = DType::parse(j.str_of("dtype")?)?;
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSig { dtype, shape })
+    }
+}
+
+/// One lowered HLO artifact (a step function of one model).
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub sha256: String,
+}
+
+/// One named parameter tensor inside the flat vector — the alignment
+/// experiment (Fig 1) uses these to find conv filter banks.
+#[derive(Clone, Debug)]
+pub struct LayerInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Everything the runtime knows about one model.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub param_count: usize,
+    pub batch: usize,
+    pub scan_l: usize,
+    pub dataset: String,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: DType,
+    pub label_shape: Vec<usize>,
+    pub layers: Vec<LayerInfo>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+impl ModelManifest {
+    pub fn artifact(&self, step: &str) -> Result<&ArtifactSig> {
+        self.artifacts.get(step).ok_or_else(|| {
+            anyhow!(
+                "model {:?} has no artifact {:?} (have: {:?})",
+                self.name,
+                step,
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Per-example input element count (images: H*W*C; LM: T).
+    pub fn input_numel(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Labels per example (1 for classification, T for the LM).
+    pub fn labels_per_example(&self) -> usize {
+        self.label_shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// The whole parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in j
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            models.insert(name.clone(), Self::parse_model(name, mj)?);
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown model {name:?}; manifest has {:?}",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    fn parse_model(name: &str, j: &Json) -> Result<ModelManifest> {
+        let parse_dims = |key: &str| -> Result<Vec<usize>> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect()
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (step, aj) in j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let parse_sigs = |key: &str| -> Result<Vec<TensorSig>> {
+                aj.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} not an array"))?
+                    .iter()
+                    .map(TensorSig::parse)
+                    .collect()
+            };
+            artifacts.insert(
+                step.clone(),
+                ArtifactSig {
+                    file: aj.str_of("file")?.to_string(),
+                    inputs: parse_sigs("inputs")?,
+                    outputs: parse_sigs("outputs")?,
+                    sha256: aj.str_of("sha256")?.to_string(),
+                },
+            );
+        }
+
+        let mut layers = Vec::new();
+        for lj in j
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("layers not an array"))?
+        {
+            layers.push(LayerInfo {
+                name: lj.str_of("name")?.to_string(),
+                shape: lj
+                    .req("shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("bad layer shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: lj.usize_of("offset")?,
+                size: lj.usize_of("size")?,
+            });
+        }
+
+        Ok(ModelManifest {
+            name: name.to_string(),
+            param_count: j.usize_of("param_count")?,
+            batch: j.usize_of("batch")?,
+            scan_l: j.usize_of("scan_l")?,
+            dataset: j.str_of("dataset")?.to_string(),
+            num_classes: j.usize_of("num_classes")?,
+            input_shape: parse_dims("input_shape")?,
+            input_dtype: DType::parse(j.str_of("input_dtype")?)?,
+            label_shape: parse_dims("label_shape")?,
+            layers,
+            artifacts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{"version": 1, "models": {"m": {
+            "param_count": 10, "batch": 4, "scan_l": 5,
+            "dataset": "synth_gauss", "num_classes": 3,
+            "input_shape": [8], "input_dtype": "f32", "label_shape": [],
+            "layers": [{"name": "w", "shape": [2, 4], "offset": 0,
+                        "size": 8, "init": "he"}],
+            "artifacts": {"init": {"file": "m/init.hlo.txt",
+                "inputs": [{"dtype": "i32", "shape": []}],
+                "outputs": [{"dtype": "f32", "shape": [10]}],
+                "sha256": "abc"}}}}}"#
+    }
+
+    #[test]
+    fn parses_model() {
+        let dir = std::env::temp_dir().join("parle_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let mm = m.model("m").unwrap();
+        assert_eq!(mm.param_count, 10);
+        assert_eq!(mm.batch, 4);
+        let a = mm.artifact("init").unwrap();
+        assert_eq!(a.inputs[0].dtype, DType::I32);
+        assert_eq!(a.outputs[0].numel(), 10);
+        assert!(mm.artifact("nope").is_err());
+        assert!(m.model("zzz").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

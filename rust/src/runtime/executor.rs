@@ -1,0 +1,142 @@
+//! Session: one PJRT CPU client + a cache of compiled executables.
+//!
+//! One `Session` per worker thread (PJRT wrapper types are not `Send`).
+//! Artifacts are compiled lazily on first use and cached for the life of
+//! the session; `execute` validates input arity/shape against the
+//! manifest before dispatch so shape bugs surface as errors, not XLA
+//! aborts.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{ArtifactSig, DType, Manifest};
+
+/// A per-thread runtime session.
+pub struct Session {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<(String, String), PjRtLoadedExecutable>>,
+}
+
+impl Session {
+    /// Open the artifacts directory (compiles nothing yet).
+    pub fn open(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Session {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Open with an already-parsed manifest (tests).
+    pub fn with_manifest(manifest: Manifest) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Session {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Ensure `(model, step)` is compiled; returns nothing (warms cache).
+    pub fn warm(&self, model: &str, step: &str) -> Result<()> {
+        self.compiled(model, step).map(|_| ())
+    }
+
+    fn compiled(&self, model: &str, step: &str) -> Result<()> {
+        let key = (model.to_string(), step.to_string());
+        if self.cache.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let mm = self.manifest.model(model)?;
+        let art = mm.artifact(step)?;
+        let path = self.manifest.dir.join(&art.file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().unwrap_or_default(),
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {model}/{step}"))?;
+        self.cache.borrow_mut().insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute `(model, step)` with the given inputs; returns the
+    /// untupled outputs as host literals.
+    pub fn execute(
+        &self,
+        model: &str,
+        step: &str,
+        inputs: &[Literal],
+    ) -> Result<Vec<Literal>> {
+        let mm = self.manifest.model(model)?;
+        let art = mm.artifact(step)?;
+        validate_inputs(model, step, art, inputs)?;
+        self.compiled(model, step)?;
+        let cache = self.cache.borrow();
+        let exe = cache
+            .get(&(model.to_string(), step.to_string()))
+            .expect("compiled() populated the cache");
+        let result = exe.execute::<Literal>(inputs)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {model}/{step}"))?;
+        // AOT lowers with return_tuple=True: outputs arrive as one tuple.
+        let outs = result.to_tuple()?;
+        if outs.len() != art.outputs.len() {
+            bail!(
+                "{model}/{step}: manifest promises {} outputs, got {}",
+                art.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+fn validate_inputs(
+    model: &str,
+    step: &str,
+    art: &ArtifactSig,
+    inputs: &[Literal],
+) -> Result<()> {
+    if inputs.len() != art.inputs.len() {
+        bail!(
+            "{model}/{step}: expected {} inputs, got {}",
+            art.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (sig, lit)) in art.inputs.iter().zip(inputs).enumerate() {
+        let numel = lit.element_count();
+        if numel != sig.numel() {
+            bail!(
+                "{model}/{step} input {i}: expected {:?} ({} elements), \
+                 literal has {}",
+                sig.shape,
+                sig.numel(),
+                numel
+            );
+        }
+        let want = match sig.dtype {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        };
+        if let Ok(ty) = lit.ty() {
+            if ty != want {
+                bail!(
+                    "{model}/{step} input {i}: dtype mismatch \
+                     (manifest {want:?}, literal {ty:?})"
+                );
+            }
+        }
+    }
+    Ok(())
+}

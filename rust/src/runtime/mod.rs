@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` + the
+//! manifest) and executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! The interchange format is HLO *text* — xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! PJRT wrapper types hold raw pointers and are not `Send`: every worker
+//! thread owns its own [`Session`] (client + compiled executables), which
+//! mirrors a real one-device-per-replica deployment.
+
+pub mod artifact;
+pub mod executor;
+pub mod tensor;
+
+pub use artifact::{ArtifactSig, LayerInfo, Manifest, ModelManifest, TensorSig};
+pub use executor::Session;
+pub use tensor::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_f32};

@@ -1,0 +1,78 @@
+//! Host <-> `xla::Literal` conversion helpers.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+/// f32 literal with an explicit shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let numel: usize = shape.iter().product();
+    if numel != data.len() {
+        bail!("lit_f32: {} elements vs shape {:?}", data.len(), shape);
+    }
+    let flat = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(flat);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+/// i32 literal with an explicit shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let numel: usize = shape.iter().product();
+    if numel != data.len() {
+        bail!("lit_i32: {} elements vs shape {:?}", data.len(), shape);
+    }
+    let flat = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(flat);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+pub fn lit_scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn lit_scalar_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Extract an f32 literal to a host vector.
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32 (loss/error outputs).
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    if v.len() != 1 {
+        bail!("expected scalar, got {} elements", v.len());
+    }
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        let s = lit_scalar_f32(2.5);
+        assert_eq!(scalar_f32(&s).unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,75 @@
+//! Tiny CSV writer for experiment outputs (`runs/*.csv` are the series
+//! behind every figure; EXPERIMENTS.md references them).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, fields: &[f64]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|x| format!("{x}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Quote-free field sanitizer (we only ever write numbers and identifiers,
+/// but keep commas from corrupting rows if a label sneaks one in).
+pub fn sanitize(field: &str) -> String {
+    field.replace(',', ";")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_rows() {
+        let dir = std::env::temp_dir().join("parle_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x".into()]).unwrap();
+            w.row_f64(&[2.5, 3.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,x\n2.5,3\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sanitizes() {
+        assert_eq!(sanitize("a,b"), "a;b");
+    }
+}

@@ -1,0 +1,20 @@
+//! Hand-rolled utility substrates.
+//!
+//! The offline vendor set on this image carries only the `xla` crate
+//! closure plus `anyhow`, so the usual ecosystem crates (serde, rand,
+//! csv, criterion) are reimplemented here at the scale this project
+//! needs: a JSON parser/writer for the artifact manifest and run records,
+//! a PCG64 RNG for data synthesis, descriptive statistics, timers, and a
+//! CSV writer for experiment outputs.
+
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Pcg64;
+pub use stats::Stats;
+pub use timer::Timer;

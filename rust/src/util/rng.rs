@@ -1,0 +1,157 @@
+//! PCG-64 (XSL-RR) pseudo-random generator + distribution helpers.
+//!
+//! Deterministic, seedable, stream-splittable — every dataset shard and
+//! every replica derives an independent stream so runs reproduce exactly
+//! across thread interleavings.
+
+/// PCG XSL-RR 128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id; distinct stream ids
+    /// yield statistically independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 1) | 1) ^ 0x5851_f42d_4c95_7f2d;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent child stream (replica a, shard s, ...).
+    pub fn split(&self, stream: u64) -> Self {
+        Pcg64::new(self.peek_seed() ^ 0x9e37_79b9_7f4a_7c15, stream)
+    }
+
+    fn peek_seed(&self) -> u64 {
+        (self.state >> 64) as u64 ^ self.state as u64
+    }
+
+    /// Next raw 64 random bits.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with f64 resolution.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free variant is fine here;
+        // modulo bias at n << 2^64 is negligible for data synthesis.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached second value dropped for
+    /// simplicity — generation is not a hot path once data is cached).
+    pub fn next_normal(&mut self) -> f32 {
+        let u1 = (self.next_f64()).max(1e-12);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos())
+            as f32
+    }
+
+    /// Fill a slice with N(0, sigma^2) samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for v in out.iter_mut() {
+            *v = self.next_normal() * sigma;
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (reservoir when k << n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Pcg64::new(1, 1);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(3, 3);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(5, 5);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut r = Pcg64::new(9, 2);
+        for n in [1usize, 2, 7, 1000] {
+            for _ in 0..200 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Wall-clock timers and a lightweight scoped profiler.
+//!
+//! The coordinator attributes every training second to a phase
+//! (`step`, `reduce`, `data`, `eval`) so the comm/compute ratio of the
+//! paper's §4.1 can be reported directly from a run.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Accumulates seconds per named phase; thread-safe.
+#[derive(Debug, Default)]
+pub struct PhaseProfiler {
+    acc: Mutex<BTreeMap<String, (f64, u64)>>,
+}
+
+impl PhaseProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, phase: &str, seconds: f64) {
+        let mut m = self.acc.lock().unwrap();
+        let e = m.entry(phase.to_string()).or_insert((0.0, 0));
+        e.0 += seconds;
+        e.1 += 1;
+    }
+
+    /// Run `f`, attributing its wall time to `phase`.
+    pub fn scope<T>(&self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::new();
+        let out = f();
+        self.add(phase, t.elapsed_s());
+        out
+    }
+
+    /// (total seconds, call count) per phase.
+    pub fn snapshot(&self) -> BTreeMap<String, (f64, u64)> {
+        self.acc.lock().unwrap().clone()
+    }
+
+    pub fn total(&self, phase: &str) -> f64 {
+        self.acc
+            .lock()
+            .unwrap()
+            .get(phase)
+            .map(|e| e.0)
+            .unwrap_or(0.0)
+    }
+
+    /// Ratio of `num` to `den` phase time (the paper's §4.1 comm/compute).
+    pub fn ratio(&self, num: &str, den: &str) -> f64 {
+        let d = self.total(den);
+        if d == 0.0 {
+            return f64::NAN;
+        }
+        self.total(num) / d
+    }
+
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::from("phase              total_s    calls   mean_ms\n");
+        for (k, (s, n)) in &snap {
+            out.push_str(&format!(
+                "{:<18} {:>8.3} {:>8} {:>9.3}\n",
+                k,
+                s,
+                n,
+                if *n > 0 { s / *n as f64 * 1e3 } else { 0.0 }
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let p = PhaseProfiler::new();
+        p.add("step", 1.0);
+        p.add("step", 2.0);
+        p.add("reduce", 0.5);
+        assert_eq!(p.total("step"), 3.0);
+        assert!((p.ratio("reduce", "step") - 0.5 / 3.0).abs() < 1e-12);
+        assert!(p.report().contains("step"));
+    }
+
+    #[test]
+    fn scope_returns_value() {
+        let p = PhaseProfiler::new();
+        let v = p.scope("x", || 42);
+        assert_eq!(v, 42);
+        assert!(p.total("x") >= 0.0);
+        assert_eq!(p.snapshot()["x"].1, 1);
+    }
+}

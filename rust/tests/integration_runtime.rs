@@ -1,0 +1,181 @@
+//! Integration: manifest + PJRT session + artifact execution round-trips.
+//!
+//! These tests need `make artifacts` to have run (they are skipped with a
+//! message otherwise, so `cargo test` stays green on a fresh clone).
+
+use parle::runtime::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32,
+                     Session};
+
+fn session() -> Option<Session> {
+    match Session::open("artifacts") {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_all_zoo_models() {
+    let Some(s) = session() else { return };
+    for m in [
+        "mlp_synth",
+        "lenet_mnist",
+        "allcnn_cifar",
+        "wrn_cifar10",
+        "wrn_cifar100",
+        "wrn_svhn",
+        "transformer_lm",
+    ] {
+        let mm = s.manifest.model(m).unwrap();
+        assert!(mm.param_count > 0);
+        for step in ["init", "inner_step", "inner_scan", "grad_eval",
+                     "eval_chunk", "predict"] {
+            mm.artifact(step).unwrap();
+        }
+    }
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let Some(s) = session() else { return };
+    let a = s.execute("mlp_synth", "init", &[lit_scalar_i32(7)]).unwrap();
+    let b = s.execute("mlp_synth", "init", &[lit_scalar_i32(7)]).unwrap();
+    let c = s.execute("mlp_synth", "init", &[lit_scalar_i32(8)]).unwrap();
+    let va = parle::runtime::to_f32(&a[0]).unwrap();
+    let vb = parle::runtime::to_f32(&b[0]).unwrap();
+    let vc = parle::runtime::to_f32(&c[0]).unwrap();
+    assert_eq!(va, vb);
+    assert_ne!(va, vc);
+    let p = s.manifest.model("mlp_synth").unwrap().param_count;
+    assert_eq!(va.len(), p);
+}
+
+#[test]
+fn inner_step_decreases_loss_on_fixed_batch() {
+    let Some(s) = session() else { return };
+    let mm = s.manifest.model("mlp_synth").unwrap().clone();
+    let p = mm.param_count;
+    let b = mm.batch;
+    let init = s.execute("mlp_synth", "init", &[lit_scalar_i32(1)]).unwrap();
+    let mut y = parle::runtime::to_f32(&init[0]).unwrap();
+    let mut z = y.clone();
+    let mut mom = vec![0.0f32; p];
+
+    // fixed synthetic batch
+    let xb: Vec<f32> = (0..b * 32)
+        .map(|i| ((i * 2654435761usize) % 97) as f32 / 48.5 - 1.0)
+        .collect();
+    let yb: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+    let xb = lit_f32(&xb, &[b, 32]).unwrap();
+    let yb = lit_i32(&yb, &[b]).unwrap();
+
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 0..40 {
+        let outs = s
+            .execute(
+                "mlp_synth",
+                "inner_step",
+                &[
+                    lit_f32(&y, &[p]).unwrap(),
+                    lit_f32(&z, &[p]).unwrap(),
+                    lit_f32(&mom, &[p]).unwrap(),
+                    lit_f32(&y, &[p]).unwrap(),
+                    xb.clone(),
+                    yb.clone(),
+                    lit_scalar_f32(0.1),
+                    lit_scalar_f32(0.0),
+                    lit_scalar_f32(0.75),
+                    lit_scalar_f32(0.9),
+                    lit_scalar_f32(0.0),
+                    lit_scalar_i32(step),
+                ],
+            )
+            .unwrap();
+        y = parle::runtime::to_f32(&outs[0]).unwrap();
+        z = parle::runtime::to_f32(&outs[1]).unwrap();
+        mom = parle::runtime::to_f32(&outs[2]).unwrap();
+        let loss = parle::runtime::to_f32(&outs[3]).unwrap()[0];
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    assert!(
+        last < 0.8 * first.unwrap(),
+        "loss {first:?} -> {last} did not drop"
+    );
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(s) = session() else { return };
+    // wrong arity
+    let err = s
+        .execute("mlp_synth", "init", &[])
+        .err()
+        .expect("arity error")
+        .to_string();
+    assert!(err.contains("expected 1 inputs"), "{err}");
+    // wrong element count
+    let err = s
+        .execute(
+            "mlp_synth",
+            "eval_chunk",
+            &[
+                lit_f32(&[0.0; 10], &[10]).unwrap(),
+                lit_f32(&[0.0; 64], &[2, 32]).unwrap(),
+                lit_i32(&[0, 0], &[2]).unwrap(),
+            ],
+        )
+        .err()
+        .expect("shape error")
+        .to_string();
+    assert!(err.contains("input 0"), "{err}");
+    // wrong dtype
+    let mm = s.manifest.model("mlp_synth").unwrap();
+    let p = mm.param_count;
+    let b = mm.batch;
+    let err = s
+        .execute(
+            "mlp_synth",
+            "eval_chunk",
+            &[
+                lit_f32(&vec![0.0; p], &[p]).unwrap(),
+                lit_f32(&vec![0.0; b * 32], &[b, 32]).unwrap(),
+                lit_f32(&vec![0.0; b], &[b]).unwrap(), // f32, wants i32
+            ],
+        )
+        .err()
+        .expect("dtype error")
+        .to_string();
+    assert!(err.contains("dtype mismatch"), "{err}");
+}
+
+#[test]
+fn unknown_model_and_step_error_cleanly() {
+    let Some(s) = session() else { return };
+    assert!(s.execute("no_such_model", "init", &[]).is_err());
+    assert!(s
+        .execute("mlp_synth", "no_such_step", &[lit_scalar_i32(0)])
+        .is_err());
+}
+
+#[test]
+fn predict_logits_shape() {
+    let Some(s) = session() else { return };
+    let mm = s.manifest.model("mlp_synth").unwrap().clone();
+    let p = mm.param_count;
+    let b = mm.batch;
+    let init = s.execute("mlp_synth", "init", &[lit_scalar_i32(2)]).unwrap();
+    let flat = parle::runtime::to_f32(&init[0]).unwrap();
+    let xb = lit_f32(&vec![0.1; b * 32], &[b, 32]).unwrap();
+    let outs = s
+        .execute("mlp_synth", "predict",
+                 &[lit_f32(&flat, &[p]).unwrap(), xb])
+        .unwrap();
+    let logits = parle::runtime::to_f32(&outs[0]).unwrap();
+    assert_eq!(logits.len(), b * mm.num_classes);
+}

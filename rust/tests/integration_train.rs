@@ -1,0 +1,208 @@
+//! Integration: the full coordinator loop per algorithm, on the small
+//! MLP so each case stays in seconds.
+//!
+//! Skipped (with a message) when artifacts are missing.
+
+use parle::config::{Algo, RunConfig};
+use parle::coordinator::train;
+use parle::opt::LrSchedule;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn base(algo: Algo) -> RunConfig {
+    let mut cfg = RunConfig::new("mlp_synth", algo);
+    // mlp_synth has 8 batches/epoch at train=1024: L=2 keeps enough
+    // communication rounds for the outer variable to track the inner one
+    cfg.epochs = 6.0;
+    cfg.l_steps = match algo {
+        Algo::Parle | Algo::EntropySgd => 2,
+        _ => 1,
+    };
+    cfg.data.train = 1024;
+    cfg.data.val = 256;
+    cfg.lr = LrSchedule::new(0.1, vec![4], 5.0);
+    cfg.eval_every_rounds = 4;
+    cfg.seed = 7;
+    cfg
+}
+
+#[test]
+fn all_algorithms_learn() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    for algo in [
+        Algo::Parle,
+        Algo::EntropySgd,
+        Algo::ElasticSgd,
+        Algo::Sgd,
+        Algo::SgdDataParallel,
+    ] {
+        let mut cfg = base(algo);
+        cfg.replicas = match algo {
+            Algo::Sgd | Algo::EntropySgd => 1,
+            _ => 2,
+        };
+        let out = train(&cfg, &format!("itest_{}", algo.name())).unwrap();
+        let err = out.record.final_val_err;
+        assert!(
+            err < 0.45,
+            "{}: val err {err} did not beat chance by 2x",
+            algo.name()
+        );
+        assert!(!out.record.curve.is_empty());
+        assert_eq!(out.final_params.len(), 6922);
+    }
+}
+
+#[test]
+fn split_data_trains_and_beats_chance() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let mut cfg = base(Algo::Parle);
+    cfg.replicas = 2;
+    cfg.split_data = true;
+    let out = train(&cfg, "itest_split").unwrap();
+    assert!(
+        out.record.final_val_err < 0.6,
+        "split parle err {}",
+        out.record.final_val_err
+    );
+}
+
+#[test]
+fn scan_path_matches_step_path() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    // mlp has dropout 0 => identical numerics modulo batching stream,
+    // which is shared; the two paths must land on the same curve.
+    let mut a = base(Algo::Parle);
+    a.replicas = 1;
+    a.l_steps = 5; // manifest scan_l for mlp_synth
+    a.epochs = 3.0;
+    a.use_scan = false;
+    let mut b = a.clone();
+    b.use_scan = true;
+    let oa = train(&a, "itest_scan_off").unwrap();
+    let ob = train(&b, "itest_scan_on").unwrap();
+    let ea = oa.record.final_val_err;
+    let eb = ob.record.final_val_err;
+    assert!(
+        (ea - eb).abs() < 1e-6,
+        "scan {eb} vs per-step {ea} diverged"
+    );
+    // parameters agree to float tolerance
+    let d: f64 = oa
+        .final_params
+        .iter()
+        .zip(&ob.final_params)
+        .map(|(&x, &y)| ((x - y) as f64).abs())
+        .sum::<f64>()
+        / oa.final_params.len() as f64;
+    assert!(d < 1e-5, "mean param divergence {d}");
+}
+
+#[test]
+fn deterministic_given_seed() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let mut cfg = base(Algo::Parle);
+    cfg.replicas = 2;
+    cfg.epochs = 1.0;
+    let a = train(&cfg, "itest_det_a").unwrap();
+    let b = train(&cfg, "itest_det_b").unwrap();
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(
+        a.record.final_val_err.to_bits(),
+        b.record.final_val_err.to_bits()
+    );
+}
+
+#[test]
+fn scoping_config_validation() {
+    let mut cfg = base(Algo::Parle);
+    cfg.replicas = 0;
+    assert!(cfg.validate().is_err());
+    let mut cfg = base(Algo::EntropySgd);
+    cfg.replicas = 4;
+    assert!(cfg.validate().is_err());
+}
+
+#[test]
+fn record_roundtrip_through_disk() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let mut cfg = base(Algo::Sgd);
+    cfg.replicas = 1;
+    cfg.epochs = 1.0;
+    let out = train(&cfg, "itest_record").unwrap();
+    let dir = std::env::temp_dir().join("parle_itest_records");
+    let path = out.record.save(dir.to_str().unwrap()).unwrap();
+    let loaded = parle::experiments::load_record(&path).unwrap();
+    assert_eq!(loaded.algo, "sgd");
+    assert_eq!(loaded.curve.len(), out.record.curve.len());
+    assert!((loaded.final_val_err - out.record.final_val_err).abs()
+            < 1e-12);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn hierarchy_trains_and_beats_chance() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let mut cfg = base(Algo::Parle);
+    cfg.l_steps = 2;
+    let out =
+        parle::coordinator::train_hierarchical(&cfg, 2, 2, "itest_hier")
+            .unwrap();
+    assert!(
+        out.record.final_val_err < 0.45,
+        "hierarchy val err {}",
+        out.record.final_val_err
+    );
+    assert_eq!(out.record.replicas, 4);
+    assert!(out.record.algo.starts_with("deputies-2x2"));
+}
+
+#[test]
+fn checkpoint_resume_roundtrip() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let mut cfg = base(Algo::Sgd);
+    cfg.replicas = 1;
+    cfg.epochs = 1.0;
+    let out = train(&cfg, "itest_ck").unwrap();
+    let dir = std::env::temp_dir().join("parle_itest_ck");
+    let path = dir.join("final.ck");
+    parle::coordinator::Checkpoint::new("mlp_synth",
+                                        out.final_params.clone())
+        .with("val_err", out.record.final_val_err)
+        .save(&path)
+        .unwrap();
+    let ck = parle::coordinator::Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.params, out.final_params);
+    assert_eq!(ck.model, "mlp_synth");
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -1,0 +1,188 @@
+//! Property-based tests over coordinator invariants (hand-rolled
+//! generator driven by the crate's own PCG — proptest is not in the
+//! offline vendor set, so shrinking is replaced by seed reporting: every
+//! failure message carries the case seed for replay).
+
+use parle::align::{greedy_assignment, hungarian};
+use parle::data::{build, split_shards, DataConfig, Dataset};
+use parle::opt::scoping::Scoping;
+use parle::opt::vecmath;
+use parle::util::json::Json;
+use parle::util::rng::Pcg64;
+use parle::util::stats::Stats;
+
+const CASES: usize = 40;
+
+/// Base seed; failures report `case` so any case replays exactly.
+const fn xp() -> u64 {
+    0xbadc0de
+}
+
+#[test]
+fn prop_mean_into_bounded_by_extremes() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 1);
+        let p = 1 + rng.next_below(300);
+        let n = 1 + rng.next_below(6);
+        let replicas: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; p];
+                rng.fill_normal(&mut v, 2.0);
+                v
+            })
+            .collect();
+        let views: Vec<&[f32]> =
+            replicas.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0.0f32; p];
+        vecmath::mean_into(&mut out, &views);
+        for i in 0..p {
+            let lo = views.iter().map(|v| v[i]).fold(f32::MAX, f32::min);
+            let hi = views.iter().map(|v| v[i]).fold(f32::MIN, f32::max);
+            assert!(
+                out[i] >= lo - 1e-4 && out[i] <= hi + 1e-4,
+                "case {case}: mean escapes [{lo}, {hi}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_outer_step_is_contraction_without_momentum() {
+    // with mu=0 and 0 < eta + eta/rho < 1, the outer step strictly
+    // shrinks the distance to the attractor set {z, xref}
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 2);
+        let p = 1 + rng.next_below(100);
+        let mut x = vec![0.0f32; p];
+        rng.fill_normal(&mut x, 1.0);
+        let mut v = vec![0.0f32; p];
+        let target = vec![0.0f32; p]; // z = xref = 0
+        let eta = 0.05 + 0.4 * rng.next_f32();
+        let elastic = 0.05 + 0.4 * rng.next_f32();
+        let before = vecmath::norm(&x);
+        vecmath::outer_step(&mut x, &mut v, &target, &target, eta,
+                            elastic, 0.0);
+        let after = vecmath::norm(&x);
+        assert!(
+            after < before + 1e-9,
+            "case {case}: ||x|| {before} -> {after} (eta {eta}, \
+             elastic {elastic})"
+        );
+    }
+}
+
+#[test]
+fn prop_scoping_monotone_and_clipped() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 3);
+        let b = 1 + rng.next_below(500);
+        let mut s = Scoping::paper(b);
+        let mut prev_g = f32::INFINITY;
+        let mut prev_r = f32::INFINITY;
+        for _ in 0..200 {
+            s.step();
+            let g = s.gamma();
+            let r = s.rho();
+            assert!(g <= prev_g && r <= prev_r, "case {case}: not monotone");
+            assert!(g >= 1.0 && r >= 0.1, "case {case}: clip violated");
+            prev_g = g;
+            prev_r = r;
+        }
+    }
+}
+
+#[test]
+fn prop_shards_partition_dataset() {
+    for case in 0..CASES / 2 {
+        let mut rng = Pcg64::new(xp() + case as u64, 4);
+        let n_examples = 20 + rng.next_below(200);
+        let n_shards = 1 + rng.next_below(7);
+        let cfg = DataConfig {
+            train: n_examples,
+            val: 8,
+            difficulty: 0.3,
+            seed: case as u64,
+        };
+        let (train, _) = build("synth_gauss", &cfg).unwrap();
+        let Dataset::Image(img) = &train else { unreachable!() };
+        let shards = split_shards(img, n_shards, case as u64);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, n_examples, "case {case}");
+        let max = shards.iter().map(|s| s.len()).max().unwrap();
+        let min = shards.iter().map(|s| s.len()).min().unwrap();
+        assert!(max - min <= 1, "case {case}: imbalance {min}..{max}");
+    }
+}
+
+#[test]
+fn prop_hungarian_at_least_greedy() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 5);
+        let n = 2 + rng.next_below(24);
+        let score: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n).map(|_| rng.next_f64()).collect())
+            .collect();
+        let h = hungarian(&score);
+        let g = greedy_assignment(&score);
+        let sh: f64 = h.iter().enumerate().map(|(i, &j)| score[i][j]).sum();
+        let sg: f64 = g.iter().enumerate().map(|(i, &j)| score[i][j]).sum();
+        assert!(sh >= sg - 1e-9, "case {case}: hungarian {sh} < greedy {sg}");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 6);
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}");
+    }
+}
+
+fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+    let kind = rng.next_below(if depth == 0 { 4 } else { 6 });
+    match kind {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f32() < 0.5),
+        2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0).round() / 8.0),
+        3 => {
+            let len = rng.next_below(12);
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.next_below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr(
+            (0..rng.next_below(4))
+                .map(|_| random_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.next_below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_stats_quantiles_ordered() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 7);
+        let n = 1 + rng.next_below(200);
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 100.0).collect();
+        let s = Stats::from_slice(&xs);
+        let q25 = s.quantile(0.25);
+        let q50 = s.quantile(0.5);
+        let q75 = s.quantile(0.75);
+        assert!(s.min() <= q25 && q25 <= q50 && q50 <= q75
+                && q75 <= s.max(), "case {case}");
+        assert!(s.mean() >= s.min() && s.mean() <= s.max(), "case {case}");
+    }
+}
