@@ -4,6 +4,8 @@
 //!   `inner_scan` (the L2 perf lever — 1 dispatch + 2 host copies per
 //!   round instead of L),
 //! * the reduce (flat-vector mean) at several P and replica counts,
+//!   plus a serial `mean_into` vs multi-threaded `mean_into_par`
+//!   comparison at P ∈ {1e5, 1e6, 1e7},
 //! * literal creation / extraction overhead (the host<->PJRT copies),
 //! * the data pipeline (batch synthesis + augmentation).
 //!
@@ -53,6 +55,52 @@ fn main() -> parle::Result<()> {
                 (p * n * 4) as f64 / r.mean_s / 1e9
             );
         }
+    }
+
+    section("reduce: serial mean_into vs parallel mean_into_par");
+    for p in [100_000usize, 1_000_000, 10_000_000] {
+        // effective worker count mean_into_par will pick for this P
+        let threads = vecmath::reduce_threads()
+            .min(p / vecmath::PAR_MIN_PER_THREAD)
+            .max(1);
+        let n = 8usize;
+        let mut rng = Pcg64::new(2, 1);
+        let replicas: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; p];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let views: Vec<&[f32]> =
+            replicas.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0.0f32; p];
+        let r_ser = bench_for(
+            &format!("serial   P={p} n={n}"),
+            0.3,
+            5,
+            || vecmath::mean_into(&mut out, &views),
+        );
+        println!(
+            "{}   ({:.2} GB/s)",
+            r_ser.row(),
+            (p * n * 4) as f64 / r_ser.mean_s / 1e9
+        );
+        let r_par = bench_for(
+            &format!("parallel P={p} n={n} t={threads}"),
+            0.3,
+            5,
+            || vecmath::mean_into_par(&mut out, &views),
+        );
+        println!(
+            "{}   ({:.2} GB/s)",
+            r_par.row(),
+            (p * n * 4) as f64 / r_par.mean_s / 1e9
+        );
+        println!(
+            "  -> parallel reduce speedup: {:.2}x",
+            r_ser.mean_s / r_par.mean_s
+        );
     }
 
     section("literal round-trip (host <-> PJRT)");

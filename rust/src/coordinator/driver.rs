@@ -1,21 +1,19 @@
 //! Master driver: spawns replicas, runs the round loop, owns the
 //! reference variable, scoping, evaluation and metrics.
 
-use std::sync::mpsc;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::config::{Algo, RunConfig, ScopingCfg};
-use crate::coordinator::comm::{CommMeter, ReplicaLink, RoundCmd,
-                               RoundReport};
+use crate::coordinator::comm::{ReduceFabric, RoundConsts};
 use crate::coordinator::replica::{batch_literals, run_replica, ReplicaCfg};
 use crate::coordinator::sgd_dp;
 use crate::coordinator::spec::CoupledSpec;
 use crate::data::batcher::{Augment, Batcher};
 use crate::data::{build, split_shards, Dataset};
 use crate::metrics::{Curve, CurvePoint, RunRecord};
-use crate::opt::{vecmath, Scoping};
+use crate::opt::Scoping;
 use crate::runtime::{lit_f32, Session};
 use crate::util::timer::{PhaseProfiler, Timer};
 use crate::info;
@@ -38,7 +36,6 @@ pub fn train(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
 fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
     let spec = CoupledSpec::from_algo(cfg.algo, cfg.replicas);
     let profiler = PhaseProfiler::new();
-    let meter = Arc::new(CommMeter::new());
 
     // --- master session + data -------------------------------------------
     let master = Session::open(&cfg.artifacts_dir)?;
@@ -72,13 +69,10 @@ fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
         ScopingCfg::Constant { gamma, rho } => Scoping::constant(gamma, rho),
     };
 
-    // --- spawn replicas ----------------------------------------------------
-    let mut links: Vec<ReplicaLink> = Vec::with_capacity(cfg.replicas);
-    let mut handles = Vec::with_capacity(cfg.replicas);
+    // --- spawn replicas onto the fabric ------------------------------------
+    let mut fabric = ReduceFabric::flat(cfg.replicas, cfg.comm);
+    let meter = fabric.meter();
     for a in 0..cfg.replicas {
-        let (cmd_tx, cmd_rx) = mpsc::channel::<RoundCmd>();
-        let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
-        links.push(ReplicaLink { cmd_tx, report_rx });
         let rcfg = ReplicaCfg {
             id: a,
             model: cfg.model.clone(),
@@ -99,20 +93,7 @@ fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
             },
         };
         let ds = replica_datasets[a].clone();
-        let m = meter.clone();
-        let comm = cfg.comm;
-        handles.push(std::thread::spawn(move || {
-            let id = rcfg.id;
-            let r = run_replica(rcfg, ds, cmd_rx, report_tx, m, comm);
-            if let Err(e) = &r {
-                crate::util::logging::log(
-                    crate::util::logging::Level::Error,
-                    "replica",
-                    &format!("replica {id} failed: {e:#}"),
-                );
-            }
-            r
-        }));
+        fabric.spawn_worker(move |ep| run_replica(rcfg, ds, ep));
     }
 
     // --- reference init ----------------------------------------------------
@@ -122,7 +103,6 @@ fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
         &[crate::runtime::lit_scalar_i32(cfg.seed as i32)],
     )?;
     let mut xref: Vec<f32> = crate::runtime::to_f32(&init[0])?;
-    let p = xref.len();
 
     let eval_batches = {
         let b = Batcher::new(
@@ -146,49 +126,26 @@ fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
         let epoch =
             round as f64 * cfg.l_steps as f64 / batches_per_epoch as f64;
         let lr = cfg.lr.at(epoch);
-        let xref_arc = Arc::new(xref.clone());
-        for link in &links {
-            meter.account(p * 4); // broadcast payload
-            link.cmd_tx
-                .send(RoundCmd::Round {
-                    round,
-                    xref: xref_arc.clone(),
-                    lr,
-                    gamma_inv: scoping.gamma_inv(),
-                    rho_inv: scoping.rho_inv(),
-                    eta_over_rho: lr * scoping.rho_inv(),
-                })
-                .ok();
-        }
-        // collect reports (barrier = synchronous reduce, like the paper)
-        let mut reports: Vec<RoundReport> = Vec::with_capacity(cfg.replicas);
-        for link in &links {
-            reports.push(
-                link.report_rx
-                    .recv()
-                    .context("replica died mid-round")?,
-            );
-        }
-        reports.sort_by_key(|r| r.replica);
-        step_seconds += reports
-            .iter()
-            .map(|r| r.step_s)
-            .fold(0.0f64, f64::max);
-        last_train = (
-            reports.iter().map(|r| r.train_loss).sum::<f64>()
-                / reports.len() as f64,
-            reports.iter().map(|r| r.train_err).sum::<f64>()
-                / reports.len() as f64,
+        fabric.broadcast(
+            RoundConsts {
+                lr,
+                gamma_inv: scoping.gamma_inv(),
+                rho_inv: scoping.rho_inv(),
+                eta_over_rho: lr * scoping.rho_inv(),
+            },
+            &[xref.as_slice()],
         );
+        // barrier = synchronous reduce, like the paper
+        let stats = fabric.collect()?;
+        step_seconds += stats.max_step_s;
+        last_train = (stats.mean_loss, stats.mean_err);
 
         // ---- (8d): x <- mean of replicas --------------------------------
         profiler.scope("reduce", || {
             if spec.reduce {
-                let views: Vec<&[f32]> =
-                    reports.iter().map(|r| r.params.as_slice()).collect();
-                vecmath::mean_into(&mut xref, &views);
+                fabric.reduce_into(&mut xref);
             } else {
-                xref.copy_from_slice(&reports[0].params);
+                xref.copy_from_slice(fabric.report_params(0));
             }
         });
         scoping.step();
@@ -226,13 +183,7 @@ fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
     }
 
     // --- shutdown -----------------------------------------------------------
-    for link in &links {
-        link.cmd_tx.send(RoundCmd::Stop).ok();
-    }
-    for h in handles {
-        h.join()
-            .map_err(|_| anyhow::anyhow!("replica thread panicked"))??;
-    }
+    fabric.shutdown()?;
 
     let wall_s = wall.elapsed_s();
     let comm_s = profiler.total("reduce");

@@ -12,20 +12,22 @@
 //! cost — which is what this driver does:
 //!
 //! * each worker thread runs L inner steps anchored to its deputy
-//!   (reference-anchored, γ-gain, reset-to-anchor each round),
+//!   (reference-anchored, γ-gain, reset-to-deputy each round),
 //! * the master updates each deputy toward the mean of its workers
 //!   plus the elastic pull toward the sheriff (8c with z := worker
 //!   mean), then sets the sheriff to the deputy mean (8d),
 //! * scoping (9) anneals both γ and ρ.
+//!
+//! Communication runs on the shared [`ReduceFabric`] with one broadcast
+//! group per deputy: workers receive their deputy (not the sheriff), and
+//! the deputy update reduces each group separately.
 
-use std::sync::mpsc;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::{RunConfig, ScopingCfg};
-use crate::coordinator::comm::{CommMeter, ReplicaLink, RoundCmd,
-                               RoundReport};
+use crate::coordinator::comm::{ReduceFabric, RoundConsts};
 use crate::coordinator::driver::{default_augment, evaluate, lm_seq_len,
                                  TrainOutput};
 use crate::coordinator::replica::{run_replica, ReplicaCfg};
@@ -38,6 +40,20 @@ use crate::runtime::Session;
 use crate::util::timer::{PhaseProfiler, Timer};
 use crate::info;
 
+/// Worker-level spec for eq. (10): reference-anchored (the reference a
+/// worker receives is its DEPUTY, not the sheriff), γ-gain, and — per
+/// the y^b update — reset to the deputy at the start of every round.
+pub fn worker_spec() -> CoupledSpec {
+    CoupledSpec {
+        anchor: Anchor::Reference,
+        gain: Gain::GammaInv,
+        outer_step: false,
+        reset_y: true,
+        reduce: true,
+        outer_elastic: false,
+    }
+}
+
 /// Train with `deputies` groups of `workers_per_deputy` workers each.
 /// `cfg.replicas` is ignored; total workers = deputies x workers_per.
 pub fn train_hierarchical(
@@ -48,7 +64,6 @@ pub fn train_hierarchical(
 ) -> Result<TrainOutput> {
     assert!(deputies >= 1 && workers_per_deputy >= 1);
     let profiler = PhaseProfiler::new();
-    let meter = Arc::new(CommMeter::new());
 
     let master = Session::open(&cfg.artifacts_dir)?;
     let mm = master.manifest.model(&cfg.model)?.clone();
@@ -67,24 +82,12 @@ pub fn train_hierarchical(
         ScopingCfg::Constant { gamma, rho } => Scoping::constant(gamma, rho),
     };
 
-    // workers: reference-anchored (the reference they receive is their
-    // DEPUTY, not the sheriff), gamma-gain, reset to the deputy each
-    // round — the y^b update of eq. (10).
-    let spec = CoupledSpec {
-        anchor: Anchor::Reference,
-        gain: Gain::GammaInv,
-        outer_step: false,
-        reset_y: false,
-        reduce: true,
-        outer_elastic: false,
-    };
-
-    let mut links: Vec<ReplicaLink> = Vec::with_capacity(n_workers);
-    let mut handles = Vec::with_capacity(n_workers);
+    let spec = worker_spec();
+    let groups: Vec<usize> =
+        (0..n_workers).map(|w| w / workers_per_deputy).collect();
+    let mut fabric = ReduceFabric::new(groups, cfg.comm);
+    let meter = fabric.meter();
     for w in 0..n_workers {
-        let (cmd_tx, cmd_rx) = mpsc::channel::<RoundCmd>();
-        let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
-        links.push(ReplicaLink { cmd_tx, report_rx });
         let rcfg = ReplicaCfg {
             id: w,
             model: cfg.model.clone(),
@@ -101,11 +104,7 @@ pub fn train_hierarchical(
             fixed_inner_lr: Some(cfg.lr.base),
         };
         let ds = shared.clone();
-        let m = meter.clone();
-        let comm = cfg.comm;
-        handles.push(std::thread::spawn(move || {
-            run_replica(rcfg, ds, cmd_rx, report_tx, m, comm)
-        }));
+        fabric.spawn_worker(move |ep| run_replica(rcfg, ds, ep));
     }
 
     // deputies + sheriff
@@ -119,6 +118,7 @@ pub fn train_hierarchical(
     let mut sheriff = x0.clone();
     let mut deps: Vec<Vec<f32>> = vec![x0; deputies];
     let mut dep_vel: Vec<Vec<f32>> = vec![vec![0.0; p]; deputies];
+    let mut group_mean = vec![0.0f32; p];
 
     let eval_batches = Batcher::new(&val_ds, mm.batch, lm_seq_len(&mm),
                                     Augment::none(), cfg.seed, 0xe)
@@ -126,8 +126,8 @@ pub fn train_hierarchical(
 
     let wall = Timer::new();
     let mut curve = Curve::new();
+    let mut step_seconds = 0.0f64;
     let mut last_train = (f64::NAN, f64::NAN);
-    let _ = &shared; // dataset kept alive via Arc clones in workers
 
     for round in 0..total_rounds {
         let epoch =
@@ -135,42 +135,27 @@ pub fn train_hierarchical(
         let lr = cfg.lr.at(epoch);
 
         // broadcast: each worker's "reference" is its deputy
-        for (w, link) in links.iter().enumerate() {
-            let d = w / workers_per_deputy;
-            meter.account(p * 4);
-            link.cmd_tx
-                .send(RoundCmd::Round {
-                    round,
-                    xref: Arc::new(deps[d].clone()),
+        {
+            let dep_refs: Vec<&[f32]> =
+                deps.iter().map(|d| d.as_slice()).collect();
+            fabric.broadcast(
+                RoundConsts {
                     lr,
                     gamma_inv: scoping.gamma_inv(),
                     rho_inv: scoping.rho_inv(),
                     eta_over_rho: lr * scoping.rho_inv(),
-                })
-                .ok();
+                },
+                &dep_refs,
+            );
         }
-        let mut reports: Vec<RoundReport> = Vec::with_capacity(n_workers);
-        for link in &links {
-            reports.push(link.report_rx.recv().context("worker died")?);
-        }
-        reports.sort_by_key(|r| r.replica);
-        last_train = (
-            reports.iter().map(|r| r.train_loss).sum::<f64>()
-                / reports.len() as f64,
-            reports.iter().map(|r| r.train_err).sum::<f64>()
-                / reports.len() as f64,
-        );
+        let stats = fabric.collect()?;
+        step_seconds += stats.max_step_s;
+        last_train = (stats.mean_loss, stats.mean_err);
 
         profiler.scope("reduce", || {
             // deputy update: toward its group's worker mean + sheriff
-            let mut group_mean = vec![0.0f32; p];
             for d in 0..deputies {
-                let group: Vec<&[f32]> = reports
-                    [d * workers_per_deputy..(d + 1) * workers_per_deputy]
-                    .iter()
-                    .map(|r| r.params.as_slice())
-                    .collect();
-                vecmath::mean_into(&mut group_mean, &group);
+                fabric.reduce_group_into(d, &mut group_mean);
                 vecmath::outer_step(
                     &mut deps[d],
                     &mut dep_vel[d],
@@ -184,7 +169,7 @@ pub fn train_hierarchical(
             // sheriff = mean of deputies (8d)
             let views: Vec<&[f32]> =
                 deps.iter().map(|d| d.as_slice()).collect();
-            vecmath::mean_into(&mut sheriff, &views);
+            vecmath::mean_into_par(&mut sheriff, &views);
         });
         scoping.step();
 
@@ -198,7 +183,9 @@ pub fn train_hierarchical(
             })?;
             curve.push(CurvePoint {
                 wall_s: wall.elapsed_s(),
-                epoch,
+                // end-of-round epoch, matching the other drivers
+                epoch: epoch
+                    + cfg.l_steps as f64 / batches_per_epoch as f64,
                 train_loss: last_train.0,
                 train_err: last_train.1,
                 val_err,
@@ -213,14 +200,10 @@ pub fn train_hierarchical(
         }
     }
 
-    for link in &links {
-        link.cmd_tx.send(RoundCmd::Stop).ok();
-    }
-    for h in handles {
-        h.join()
-            .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
-    }
+    fabric.shutdown()?;
 
+    let wall_s = wall.elapsed_s();
+    let comm_s = profiler.total("reduce");
     let last = curve.last().copied().unwrap();
     let record = RunRecord {
         label: label.to_string(),
@@ -228,16 +211,49 @@ pub fn train_hierarchical(
         algo: format!("deputies-{deputies}x{workers_per_deputy}"),
         replicas: n_workers,
         curve,
-        wall_s: wall.elapsed_s(),
+        wall_s,
         final_val_err: last.val_err,
         final_train_err: last.train_err,
         final_train_loss: last.train_loss,
         comm_bytes: meter.bytes(),
-        comm_ratio: f64::NAN,
+        comm_ratio: if step_seconds > 0.0 {
+            comm_s / step_seconds
+        } else {
+            f64::NAN
+        },
         phases: profiler.snapshot(),
     };
     Ok(TrainOutput {
         record,
         final_params: sheriff,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::replica::round_reset;
+
+    /// Regression for the eq. (10) coupling bug: the spec used to say
+    /// `reset_y: false` while the comment (and the y^b update it cites)
+    /// requires workers to restart from their deputy every round.
+    #[test]
+    fn workers_reset_to_their_deputy_each_round() {
+        let spec = worker_spec();
+        assert!(
+            spec.reset_y,
+            "eq. (10) workers must re-initialize from their deputy"
+        );
+        assert_eq!(spec.anchor, Anchor::Reference);
+        let deputy = vec![1.0f32, -2.0, 3.5];
+        let stale = vec![9.0f32, 9.0, 9.0];
+        let mut y = stale.clone();
+        let mut z = stale.clone();
+        // xref a hierarchy worker receives IS its deputy: after the
+        // round reset, the first inner anchor (y's starting point)
+        // equals the deputy, not last round's iterate
+        round_reset(&spec, &mut y, &mut z, &stale, &deputy);
+        assert_eq!(y, deputy);
+        assert_eq!(z, deputy);
+    }
 }

@@ -19,8 +19,14 @@
 //!
 //! All four algorithms in the paper are projections of this loop — see
 //! [`spec::CoupledSpec`]. Synchronous data-parallel SGD (the baseline)
-//! swaps the round body for per-minibatch gradient averaging
-//! ([`sgd_dp`]).
+//! runs the same fabric with L = 1 and gradients as payloads
+//! ([`sgd_dp`]); the hierarchical driver runs it with one broadcast
+//! group per deputy ([`hierarchy`]).
+//!
+//! All broadcast/collect plumbing lives in one place — the
+//! [`comm::ReduceFabric`]: double-buffered broadcast slabs, recycled
+//! report buffers, the multi-threaded (8d) reduce, and the simulated
+//! interconnect on both legs.
 
 pub mod checkpoint;
 pub mod comm;
@@ -31,6 +37,7 @@ pub mod sgd_dp;
 pub mod spec;
 
 pub use checkpoint::Checkpoint;
+pub use comm::ReduceFabric;
 pub use driver::{train, TrainOutput};
 pub use hierarchy::train_hierarchical;
 pub use spec::CoupledSpec;

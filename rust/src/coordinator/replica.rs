@@ -6,13 +6,11 @@
 //! velocity. All heavy math happens inside the AOT artifacts; this thread
 //! just moves flat vectors and talks to the master through channels.
 
-use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::CommCfg;
-use crate::coordinator::comm::{simulate_transfer, CommMeter, RoundCmd,
+use crate::coordinator::comm::{ReplicaEndpoint, RoundConsts, RoundMsg,
                                RoundReport};
 use crate::coordinator::spec::{Anchor, CoupledSpec, Gain};
 use crate::data::batcher::{Augment, Batcher};
@@ -45,15 +43,34 @@ pub struct ReplicaCfg {
     pub fixed_inner_lr: Option<f32>,
 }
 
-/// Thread body. Runs until `Stop`, then returns the final parameters.
+/// Start-of-round reset of the inner trajectory (y, z). Entropy-SGD and
+/// Parle restart from the replica's own outer variable x^a; hierarchical
+/// eq. (10) workers are reference-anchored and restart from the broadcast
+/// reference — their DEPUTY (the y^b update's re-initialization).
+pub fn round_reset(
+    spec: &CoupledSpec,
+    y: &mut [f32],
+    z: &mut [f32],
+    x_a: &[f32],
+    xref: &[f32],
+) {
+    if !spec.reset_y {
+        return;
+    }
+    let src = match spec.anchor {
+        Anchor::Reference => xref,
+        Anchor::SelfX | Anchor::None => x_a,
+    };
+    y.copy_from_slice(src);
+    z.copy_from_slice(src);
+}
+
+/// Thread body. Runs rounds off the fabric endpoint until `Stop`.
 pub fn run_replica(
     cfg: ReplicaCfg,
     dataset: Arc<Dataset>,
-    cmd_rx: Receiver<RoundCmd>,
-    report_tx: Sender<RoundReport>,
-    meter: Arc<CommMeter>,
-    comm: CommCfg,
-) -> Result<Vec<f32>> {
+    ep: ReplicaEndpoint,
+) -> Result<()> {
     let session = Session::open(&cfg.artifacts_dir)
         .with_context(|| format!("replica {} session", cfg.id))?;
     let mm = session.manifest.model(&cfg.model)?.clone();
@@ -99,23 +116,21 @@ pub fn run_replica(
     }
 
     // --- round loop -------------------------------------------------------
-    while let Ok(cmd) = cmd_rx.recv() {
-        let (round, xref, lr, gamma_inv, rho_inv, _eta_over_rho) = match cmd {
-            RoundCmd::Stop => break,
-            RoundCmd::Round {
-                round,
-                xref,
-                lr,
-                gamma_inv,
-                rho_inv,
-                eta_over_rho,
-            } => (round, xref, lr, gamma_inv, rho_inv, eta_over_rho),
-        };
+    while let Some(msg) = ep.recv() {
+        let RoundMsg {
+            round,
+            xref,
+            mut slab,
+            consts,
+        } = msg;
+        let RoundConsts {
+            lr,
+            gamma_inv,
+            rho_inv,
+            ..
+        } = consts;
 
-        if cfg.spec.reset_y {
-            y.copy_from_slice(&x_a);
-            z.copy_from_slice(&x_a);
-        }
+        round_reset(&cfg.spec, &mut y, &mut z, &x_a, &xref);
         // Elastic-SGD replicas track the reference between rounds through
         // the proximal term only; their iterate persists.
 
@@ -164,22 +179,19 @@ pub fn run_replica(
         }
 
         // ---- report back (the reduce payload) ----------------------------
-        let payload = x_a.clone();
-        let bytes = payload.len() * 4;
-        simulate_transfer(&comm, bytes);
-        meter.account(bytes);
-        report_tx
-            .send(RoundReport {
-                replica: cfg.id,
-                round,
-                params: payload,
-                train_loss: loss_sum / steps_done as f64,
-                train_err: err_sum / steps_done as f64,
-                step_s,
-            })
-            .ok();
+        // fill the recycled slab instead of cloning x_a
+        debug_assert_eq!(slab.len(), p);
+        slab.copy_from_slice(&x_a);
+        ep.report(RoundReport {
+            replica: cfg.id,
+            round,
+            params: slab,
+            train_loss: loss_sum / steps_done as f64,
+            train_err: err_sum / steps_done as f64,
+            step_s,
+        });
     }
-    Ok(x_a)
+    Ok(())
 }
 
 /// L dispatches of the per-step artifact.
@@ -316,6 +328,37 @@ fn run_scan_round(
         errs.iter().map(|&x| x as f64).sum(),
         l,
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+
+    #[test]
+    fn parle_resets_inner_state_to_own_outer_variable() {
+        let spec = CoupledSpec::from_algo(Algo::Parle, 3);
+        let x_a = vec![1.0f32, 2.0];
+        let xref = vec![-7.0f32, -7.0];
+        let mut y = vec![0.0f32; 2];
+        let mut z = vec![0.0f32; 2];
+        round_reset(&spec, &mut y, &mut z, &x_a, &xref);
+        assert_eq!(y, x_a);
+        assert_eq!(z, x_a);
+    }
+
+    #[test]
+    fn elastic_inner_state_persists_across_rounds() {
+        let spec = CoupledSpec::from_algo(Algo::ElasticSgd, 3);
+        let x_a = vec![1.0f32, 2.0];
+        let xref = vec![-7.0f32, -7.0];
+        let before = vec![0.5f32, 0.25];
+        let mut y = before.clone();
+        let mut z = before.clone();
+        round_reset(&spec, &mut y, &mut z, &x_a, &xref);
+        assert_eq!(y, before);
+        assert_eq!(z, before);
+    }
 }
 
 /// Build (xb, yb) literals for one per-step batch.

@@ -3,45 +3,33 @@
 //!
 //! Every minibatch: each worker computes a gradient on its own batch via
 //! the `grad_eval` artifact, the master averages the gradients (the
-//! all-reduce), applies one host-side Nesterov update, and broadcasts the
-//! new parameters. Communication is O(2nN) *per minibatch* — the cost
-//! structure Parle amortizes by a factor of L.
+//! all-reduce, here a [`ReduceFabric`] round with L = 1), applies one
+//! host-side Nesterov update, and broadcasts the new parameters.
+//! Communication is O(2nN) *per minibatch* — the cost structure Parle
+//! amortizes by a factor of L.
 
-use std::sync::mpsc;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::config::RunConfig;
-use crate::coordinator::comm::{simulate_transfer, CommMeter};
+use crate::coordinator::comm::{ReduceFabric, RoundConsts, RoundMsg,
+                               RoundReport};
 use crate::coordinator::driver::{default_augment, evaluate, lm_seq_len};
 use crate::coordinator::driver::TrainOutput;
+use crate::coordinator::replica::batch_literals;
 use crate::data::batcher::{Augment, Batcher};
 use crate::data::{build, split_shards, Dataset};
 use crate::metrics::{Curve, CurvePoint, RunRecord};
-use crate::opt::vecmath;
 use crate::runtime::{lit_f32, lit_scalar_i32, Session};
 use crate::util::timer::{PhaseProfiler, Timer};
 use crate::info;
-
-enum GradCmd {
-    Step { params: Arc<Vec<f32>>, seed: i32 },
-    Stop,
-}
-
-struct GradReport {
-    grad: Vec<f32>,
-    loss: f64,
-    err: f64,
-    step_s: f64,
-}
 
 /// Train with synchronous gradient averaging across `cfg.replicas`
 /// workers (effective batch = replicas x manifest batch).
 pub fn train_data_parallel(cfg: &RunConfig, label: &str)
                            -> Result<TrainOutput> {
     let profiler = PhaseProfiler::new();
-    let meter = Arc::new(CommMeter::new());
 
     let master = Session::open(&cfg.artifacts_dir)?;
     let mm = master.manifest.model(&cfg.model)?.clone();
@@ -72,22 +60,18 @@ pub fn train_data_parallel(cfg: &RunConfig, label: &str)
         ((cfg.epochs * batches_per_epoch as f64).ceil() as u64).max(1);
     let eval_every = (cfg.eval_every_rounds * cfg.l_steps.max(1)) as u64;
 
-    // --- workers -----------------------------------------------------------
-    let mut cmd_txs = Vec::new();
-    let mut report_rxs = Vec::new();
-    let mut handles = Vec::new();
+    // --- workers on the fabric ---------------------------------------------
+    // A round is one minibatch: the broadcast reference is the current
+    // parameter vector, the report payload is the worker's gradient.
+    let mut fabric = ReduceFabric::flat(cfg.replicas, cfg.comm);
+    let meter = fabric.meter();
     for a in 0..cfg.replicas {
-        let (ctx_, crx) = mpsc::channel::<GradCmd>();
-        let (rtx, rrx) = mpsc::channel::<GradReport>();
-        cmd_txs.push(ctx_);
-        report_rxs.push(rrx);
         let model = cfg.model.clone();
         let dir = cfg.artifacts_dir.clone();
         let ds = worker_datasets[a].clone();
         let seed = cfg.seed.wrapping_add(a as u64 * 104729);
-        let m = meter.clone();
-        let comm = cfg.comm;
-        handles.push(std::thread::spawn(move || -> Result<()> {
+        let base_seed = cfg.seed;
+        fabric.spawn_worker(move |ep| -> Result<()> {
             let session = Session::open(&dir)
                 .with_context(|| format!("worker {a} session"))?;
             let mm = session.manifest.model(&model)?.clone();
@@ -100,23 +84,28 @@ pub fn train_data_parallel(cfg: &RunConfig, label: &str)
                 0x200 + a as u64,
             );
             let p = mm.param_count;
-            while let Ok(cmd) = crx.recv() {
-                let (params, seed_step) = match cmd {
-                    GradCmd::Stop => break,
-                    GradCmd::Step { params, seed } => (params, seed),
-                };
+            while let Some(msg) = ep.recv() {
+                let RoundMsg {
+                    round,
+                    xref,
+                    slab,
+                    ..
+                } = msg;
                 let t = Timer::new();
                 let b = batcher.next();
-                let (xb, yb) =
-                    crate::coordinator::replica::batch_literals(&mm, &b)?;
+                let (xb, yb) = batch_literals(&mm, &b)?;
+                let step_seed = ((base_seed as i64
+                    ^ (round as i64) << 8
+                    ^ a as i64)
+                    & 0x7fff_ffff) as i32;
                 let outs = session.execute(
                     &model,
                     "grad_eval",
                     &[
-                        lit_f32(&params, &[p])?,
+                        lit_f32(&xref, &[p])?,
                         xb,
                         yb,
-                        lit_scalar_i32(seed_step),
+                        lit_scalar_i32(step_seed),
                     ],
                 )?;
                 let grad = crate::runtime::to_f32(&outs[0])?;
@@ -124,19 +113,22 @@ pub fn train_data_parallel(cfg: &RunConfig, label: &str)
                     crate::runtime::tensor::scalar_f32(&outs[1])? as f64;
                 let err =
                     crate::runtime::tensor::scalar_f32(&outs[2])? as f64;
-                let bytes = grad.len() * 4;
-                simulate_transfer(&comm, bytes);
-                m.account(bytes);
-                rtx.send(GradReport {
-                    grad,
-                    loss,
-                    err,
+                // the runtime hands the gradient back as an owned vector:
+                // ship it directly and let the master recycle it as the
+                // next round's slab (the incoming slab retires in its
+                // place — still no copy and no net allocation per round)
+                drop(slab);
+                ep.report(RoundReport {
+                    replica: a,
+                    round,
+                    params: grad,
+                    train_loss: loss,
+                    train_err: err,
                     step_s: t.elapsed_s(),
-                })
-                .ok();
+                });
             }
             Ok(())
-        }));
+        });
     }
 
     // --- master state -------------------------------------------------------
@@ -169,35 +161,21 @@ pub fn train_data_parallel(cfg: &RunConfig, label: &str)
     for step in 0..total_steps {
         let epoch = step as f64 / batches_per_epoch as f64;
         let lr = cfg.lr.at(epoch);
-        let params = Arc::new(x.clone());
-        for (a, tx) in cmd_txs.iter().enumerate() {
-            meter.account(p * 4);
-            tx.send(GradCmd::Step {
-                params: params.clone(),
-                seed: ((cfg.seed as i64 ^ (step as i64) << 8 ^ a as i64)
-                    & 0x7fff_ffff) as i32,
-            })
-            .ok();
-        }
-        let mut reports = Vec::with_capacity(cfg.replicas);
-        for rx in &report_rxs {
-            reports.push(rx.recv().context("worker died")?);
-        }
-        step_seconds += reports
-            .iter()
-            .map(|r| r.step_s)
-            .fold(0.0f64, f64::max);
-        last_train = (
-            reports.iter().map(|r| r.loss).sum::<f64>()
-                / reports.len() as f64,
-            reports.iter().map(|r| r.err).sum::<f64>()
-                / reports.len() as f64,
+        fabric.broadcast(
+            RoundConsts {
+                lr,
+                gamma_inv: 0.0,
+                rho_inv: 0.0,
+                eta_over_rho: 0.0,
+            },
+            &[x.as_slice()],
         );
+        let stats = fabric.collect()?;
+        step_seconds += stats.max_step_s;
+        last_train = (stats.mean_loss, stats.mean_err);
 
         profiler.scope("reduce", || {
-            let views: Vec<&[f32]> =
-                reports.iter().map(|r| r.grad.as_slice()).collect();
-            vecmath::mean_into(&mut gbar, &views);
+            fabric.reduce_into(&mut gbar);
             // Nesterov: v <- mu v - lr (g + wd x);  x <- x + mu v - lr g
             for i in 0..p {
                 let g = gbar[i] + cfg.weight_decay * x[i];
@@ -215,7 +193,9 @@ pub fn train_data_parallel(cfg: &RunConfig, label: &str)
             })?;
             curve.push(CurvePoint {
                 wall_s: wall.elapsed_s(),
-                epoch,
+                // end-of-step epoch, matching the coupled drivers'
+                // end-of-round convention so curves are comparable
+                epoch: (step + 1) as f64 / batches_per_epoch as f64,
                 train_loss: last_train.0,
                 train_err: last_train.1,
                 val_err,
@@ -234,13 +214,7 @@ pub fn train_data_parallel(cfg: &RunConfig, label: &str)
         }
     }
 
-    for tx in &cmd_txs {
-        tx.send(GradCmd::Stop).ok();
-    }
-    for h in handles {
-        h.join()
-            .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
-    }
+    fabric.shutdown()?;
 
     let wall_s = wall.elapsed_s();
     let comm_s = profiler.total("reduce");

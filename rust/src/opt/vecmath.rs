@@ -1,9 +1,15 @@
 //! Dense f32 vector kernels for the coordinator hot path.
 //!
 //! These run at every communication round over P-sized vectors (P up to
-//! ~1M here, 10-100M at paper scale), so they are written as simple
-//! chunk-free loops the compiler auto-vectorizes; `mean_into` is the
-//! reduce that stands in for the paper's NCCL all-reduce.
+//! ~1M here, 10-100M at paper scale). `mean_into` is the serial reduce
+//! that stands in for the paper's NCCL all-reduce; `mean_into_par` is the
+//! multi-threaded variant the [`crate::coordinator::comm::ReduceFabric`]
+//! uses on the master: it splits the parameter dimension into cache-sized
+//! chunks and fans them out over `std::thread::scope` workers while the
+//! replica threads are parked in `recv`. Per element, the accumulation
+//! order is identical to `mean_into`, so the parallel reduce is
+//! bit-identical to the serial one — determinism is load-bearing (the
+//! integration tests compare runs bit-for-bit).
 
 /// out += alpha * x
 pub fn axpy(out: &mut [f32], alpha: f32, x: &[f32]) {
@@ -34,6 +40,87 @@ pub fn mean_into(out: &mut [f32], replicas: &[&[f32]]) {
     for o in out.iter_mut() {
         *o *= inv;
     }
+}
+
+/// Chunk granularity for the parallel reduce: 32k f32 = 128 KiB, sized so
+/// a chunk of `out` plus one replica operand stay inside a per-core L2
+/// slice.
+pub const PAR_CHUNK: usize = 1 << 15;
+
+/// Worker-thread count for the parallel reduce. The reduce runs on the
+/// master while every replica thread is blocked in `recv`, so the cores
+/// are otherwise idle; capped so huge machines don't pay spawn overhead
+/// past memory-bandwidth saturation.
+pub fn reduce_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// Minimum elements of `out` per worker before the parallel reduce pays
+/// for itself: `thread::scope` spawns fresh OS threads every call, so
+/// small reduces (and sgd-dp's per-minibatch all-reduce at small P) must
+/// stay serial or the spawn/join overhead eats the speedup.
+pub const PAR_MIN_PER_THREAD: usize = 1 << 17;
+
+/// Multi-threaded `mean_into` with default tuning: thread count scales
+/// with the work (one worker per [`PAR_MIN_PER_THREAD`] elements, capped
+/// by [`reduce_threads`]), so small P degrades to the serial loop with no
+/// thread spawned at all.
+pub fn mean_into_par(out: &mut [f32], replicas: &[&[f32]]) {
+    let threads = reduce_threads().min(out.len() / PAR_MIN_PER_THREAD);
+    mean_into_chunked(out, replicas, threads, PAR_CHUNK);
+}
+
+/// Multi-threaded chunked mean reduce with explicit tuning knobs (tests
+/// use tiny chunks to exercise boundary handling).
+///
+/// The P dimension is split into `threads` contiguous regions, one scoped
+/// worker each; every worker walks its region in `chunk`-sized sub-slices,
+/// accumulating replica-by-replica per sub-slice (cache-friendly) in the
+/// same per-element order as [`mean_into`] (bit-exact equivalence).
+pub fn mean_into_chunked(
+    out: &mut [f32],
+    replicas: &[&[f32]],
+    threads: usize,
+    chunk: usize,
+) {
+    assert!(!replicas.is_empty());
+    assert!(chunk > 0);
+    let p = out.len();
+    for r in replicas {
+        debug_assert_eq!(r.len(), p);
+    }
+    // never more workers than chunks; degenerate cases go serial
+    let max_useful = ((p + chunk - 1) / chunk).max(1);
+    let threads = threads.min(max_useful).max(1);
+    if threads == 1 {
+        mean_into(out, replicas);
+        return;
+    }
+    let inv = 1.0 / replicas.len() as f32;
+    let per = (p + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (t, region) in out.chunks_mut(per).enumerate() {
+            let base = t * per;
+            s.spawn(move || {
+                for (c, sub) in region.chunks_mut(chunk).enumerate() {
+                    let lo = base + c * chunk;
+                    let hi = lo + sub.len();
+                    sub.copy_from_slice(&replicas[0][lo..hi]);
+                    for r in &replicas[1..] {
+                        for (o, &v) in sub.iter_mut().zip(&r[lo..hi]) {
+                            *o += v;
+                        }
+                    }
+                    for o in sub.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            });
+        }
+    });
 }
 
 /// The Parle outer step (8c) with Nesterov momentum (Remark 2):
@@ -109,6 +196,78 @@ mod tests {
         let mut out = vec![0.0; 2];
         mean_into(&mut out, &[&a]);
         assert_eq!(out, a);
+    }
+
+    fn random_replicas(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::rng::Pcg64::new(seed, 0x77);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; p];
+                rng.fill_normal(&mut v, 1.5);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mean_into_par_matches_serial_bit_exactly() {
+        // odd P so chunk boundaries never line up with the end
+        let p = 10_007;
+        let replicas = random_replicas(p, 5, 11);
+        let views: Vec<&[f32]> =
+            replicas.iter().map(|r| r.as_slice()).collect();
+        let mut serial = vec![0.0f32; p];
+        mean_into(&mut serial, &views);
+        for threads in [1usize, 2, 3, 5, 8] {
+            for chunk in [1usize, 7, 64, 1000, 1 << 15] {
+                let mut par = vec![0.0f32; p];
+                mean_into_chunked(&mut par, &views, threads, chunk);
+                for i in 0..p {
+                    assert_eq!(
+                        serial[i].to_bits(),
+                        par[i].to_bits(),
+                        "threads {threads} chunk {chunk} i {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mean_into_par_single_replica_identity() {
+        let replicas = random_replicas(4097, 1, 12);
+        let views: Vec<&[f32]> =
+            replicas.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0.0f32; 4097];
+        mean_into_chunked(&mut out, &views, 4, 128);
+        assert_eq!(out, replicas[0]);
+    }
+
+    #[test]
+    fn mean_into_par_p_not_divisible_by_chunks() {
+        // P = 103 with chunk 10 and 4 threads: regions of 26, last is 25,
+        // trailing sub-chunks of 6 and 5 elements
+        let replicas = random_replicas(103, 3, 13);
+        let views: Vec<&[f32]> =
+            replicas.iter().map(|r| r.as_slice()).collect();
+        let mut serial = vec![0.0f32; 103];
+        mean_into(&mut serial, &views);
+        let mut par = vec![0.0f32; 103];
+        mean_into_chunked(&mut par, &views, 4, 10);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn mean_into_par_default_knobs() {
+        let replicas = random_replicas(50_001, 4, 14);
+        let views: Vec<&[f32]> =
+            replicas.iter().map(|r| r.as_slice()).collect();
+        let mut serial = vec![0.0f32; 50_001];
+        mean_into(&mut serial, &views);
+        let mut par = vec![0.0f32; 50_001];
+        mean_into_par(&mut par, &views);
+        assert_eq!(serial, par);
+        assert!(reduce_threads() >= 1);
     }
 
     #[test]

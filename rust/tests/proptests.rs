@@ -4,6 +4,9 @@
 //! failure message carries the case seed for replay).
 
 use parle::align::{greedy_assignment, hungarian};
+use parle::config::CommCfg;
+use parle::coordinator::comm::{ReduceFabric, RoundConsts, RoundMsg,
+                               RoundReport};
 use parle::data::{build, split_shards, DataConfig, Dataset};
 use parle::opt::scoping::Scoping;
 use parle::opt::vecmath;
@@ -43,6 +46,101 @@ fn prop_mean_into_bounded_by_extremes() {
                 "case {case}: mean escapes [{lo}, {hi}]"
             );
         }
+    }
+}
+
+#[test]
+fn prop_mean_into_par_bit_identical_to_serial() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 8);
+        let p = 1 + rng.next_below(5000);
+        let n = 1 + rng.next_below(6);
+        let threads = 1 + rng.next_below(6);
+        let chunk = 1 + rng.next_below(700);
+        let replicas: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; p];
+                rng.fill_normal(&mut v, 2.0);
+                v
+            })
+            .collect();
+        let views: Vec<&[f32]> =
+            replicas.iter().map(|r| r.as_slice()).collect();
+        let mut serial = vec![0.0f32; p];
+        vecmath::mean_into(&mut serial, &views);
+        let mut par = vec![0.0f32; p];
+        vecmath::mean_into_chunked(&mut par, &views, threads, chunk);
+        for i in 0..p {
+            assert_eq!(
+                serial[i].to_bits(),
+                par[i].to_bits(),
+                "case {case}: p {p} n {n} threads {threads} chunk {chunk} \
+                 diverge at {i}"
+            );
+        }
+    }
+}
+
+/// The fabric must move parameter vectors without perturbing a single
+/// bit: broadcast a random reference, have echo workers report it back
+/// through the recycled slabs, and compare bitwise — across several
+/// rounds so the double-buffered broadcast slabs and recycled report
+/// buffers are both exercised.
+#[test]
+fn prop_fabric_round_trips_params_bit_exactly() {
+    for case in 0..8u64 {
+        let mut rng = Pcg64::new(xp() + case, 9);
+        let p = 1 + rng.next_below(3000);
+        let n = 1 + rng.next_below(5);
+        let mut fabric = ReduceFabric::flat(n, CommCfg::off());
+        for _ in 0..n {
+            fabric.spawn_worker(move |ep| {
+                while let Some(msg) = ep.recv() {
+                    let RoundMsg {
+                        round,
+                        xref,
+                        mut slab,
+                        ..
+                    } = msg;
+                    slab.copy_from_slice(&xref);
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round,
+                        params: slab,
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            });
+        }
+        for round in 0..4 {
+            let mut xref = vec![0.0f32; p];
+            rng.fill_normal(&mut xref, 3.0);
+            fabric.broadcast(
+                RoundConsts {
+                    lr: 0.1,
+                    gamma_inv: 0.01,
+                    rho_inv: 1.0,
+                    eta_over_rho: 0.1,
+                },
+                &[xref.as_slice()],
+            );
+            fabric.collect().unwrap();
+            for r in fabric.reports() {
+                for i in 0..p {
+                    assert_eq!(
+                        r.params[i].to_bits(),
+                        xref[i].to_bits(),
+                        "case {case} round {round} replica {} bit-flip \
+                         at {i}",
+                        r.replica
+                    );
+                }
+            }
+        }
+        fabric.shutdown().unwrap();
     }
 }
 
