@@ -26,6 +26,9 @@ fn main() -> parle::Result<()> {
     section("artifact dispatch: mlp_synth (P=6.9k)");
     bench_model_steps(&session, "mlp_synth")?;
 
+    section("dispatch: literal-marshal vs device-resident buffers");
+    bench_dispatch_paths(&session, "mlp_synth")?;
+
     section("artifact dispatch: lenet_mnist (P=431k)");
     bench_model_steps(&session, "lenet_mnist")?;
 
@@ -141,6 +144,139 @@ fn main() -> parle::Result<()> {
     Ok(())
 }
 
+/// One L-step inner round dispatched two ways: the old literal path
+/// (re-marshals y/z/mom/anchor up and y/z/mom down on every step) vs
+/// the buffer path (state device-resident across the round). Reports
+/// wall time and the transfer meter's actual host<->device bytes per
+/// round for each — the O(P*L) -> O(P) drop the replica loop relies on.
+fn bench_dispatch_paths(session: &Session, model: &str) -> parle::Result<()> {
+    let mm = session.manifest.model(model)?.clone();
+    let p = mm.param_count;
+    let l = 8usize;
+    let (train, _) = build(
+        &mm.dataset,
+        &DataConfig {
+            train: 256,
+            val: 64,
+            difficulty: 0.35,
+            seed: 3,
+        },
+    )?;
+    let seq = parle::coordinator::driver::lm_seq_len(&mm);
+    let mut batcher = Batcher::new(&train, mm.batch, seq, Augment::none(),
+                                   3, 1);
+    let batch = batcher.next();
+    let (xb, yb) =
+        parle::coordinator::replica::batch_literals(&mm, &batch)?;
+    let state = vec![0.05f32; p];
+    session.warm(model, "inner_step")?;
+    let meter = session.transfer_meter();
+
+    let mut literal_round = || {
+        let mut y = state.clone();
+        let mut z = state.clone();
+        let mut mom = vec![0.0f32; p];
+        for step in 0..l {
+            let outs = session
+                .execute(
+                    model,
+                    "inner_step",
+                    &[
+                        lit_f32(&y, &[p]).unwrap(),
+                        lit_f32(&z, &[p]).unwrap(),
+                        lit_f32(&mom, &[p]).unwrap(),
+                        lit_f32(&state, &[p]).unwrap(),
+                        xb.clone(),
+                        yb.clone(),
+                        lit_scalar_f32(0.1),
+                        lit_scalar_f32(0.01),
+                        lit_scalar_f32(0.75),
+                        lit_scalar_f32(0.9),
+                        lit_scalar_f32(0.0),
+                        lit_scalar_i32(step as i32),
+                    ],
+                )
+                .unwrap();
+            y = parle::runtime::to_f32(&outs[0]).unwrap();
+            z = parle::runtime::to_f32(&outs[1]).unwrap();
+            mom = parle::runtime::to_f32(&outs[2]).unwrap();
+        }
+    };
+    let mut buffer_round = || {
+        let mut y = session.upload(&lit_f32(&state, &[p]).unwrap()).unwrap();
+        let mut z = session.upload(&lit_f32(&state, &[p]).unwrap()).unwrap();
+        let mut mom =
+            session.upload(&lit_f32(&vec![0.0f32; p], &[p]).unwrap())
+                .unwrap();
+        let anchor =
+            session.upload(&lit_f32(&state, &[p]).unwrap()).unwrap();
+        let lr = session.upload(&lit_scalar_f32(0.1)).unwrap();
+        let gain = session.upload(&lit_scalar_f32(0.01)).unwrap();
+        let alpha = session.upload(&lit_scalar_f32(0.75)).unwrap();
+        let mu = session.upload(&lit_scalar_f32(0.9)).unwrap();
+        let wd = session.upload(&lit_scalar_f32(0.0)).unwrap();
+        for step in 0..l {
+            let xb_b = session.upload(&xb).unwrap();
+            let yb_b = session.upload(&yb).unwrap();
+            let seed =
+                session.upload(&lit_scalar_i32(step as i32)).unwrap();
+            let outs = session
+                .execute_buffers(
+                    model,
+                    "inner_step",
+                    &[
+                        &y, &z, &mom, &anchor, &xb_b, &yb_b, &lr, &gain,
+                        &alpha, &mu, &wd, &seed,
+                    ],
+                )
+                .unwrap();
+            let mut it = outs.into_iter();
+            y = it.next().unwrap();
+            z = it.next().unwrap();
+            mom = it.next().unwrap();
+        }
+        let _ = session.download(&y).unwrap();
+        let _ = session.download(&z).unwrap();
+        let _ = session.download(&mom).unwrap();
+    };
+
+    let before = meter.bytes();
+    literal_round();
+    let literal_bytes = meter.bytes() - before;
+    let before = meter.bytes();
+    buffer_round();
+    let buffer_bytes = meter.bytes() - before;
+
+    let r_lit = bench_for(
+        &format!("{model}/inner_step x{l} literal"),
+        0.5,
+        3,
+        &mut literal_round,
+    );
+    println!(
+        "{}   ({:.1} KB/round host<->device)",
+        r_lit.row(),
+        literal_bytes as f64 / 1e3
+    );
+    let r_buf = bench_for(
+        &format!("{model}/inner_step x{l} buffers"),
+        0.5,
+        3,
+        &mut buffer_round,
+    );
+    println!(
+        "{}   ({:.1} KB/round host<->device)",
+        r_buf.row(),
+        buffer_bytes as f64 / 1e3
+    );
+    println!(
+        "  -> device-resident round: {:.2}x time, {:.1}x fewer bytes",
+        r_lit.mean_s / r_buf.mean_s,
+        literal_bytes as f64 / buffer_bytes.max(1) as f64
+    );
+    Ok(())
+}
+
 fn bench_model_steps(session: &Session, model: &str) -> parle::Result<()> {
     let mm = session.manifest.model(model)?.clone();
     let p = mm.param_count;
@@ -154,11 +290,7 @@ fn bench_model_steps(session: &Session, model: &str) -> parle::Result<()> {
             seed: 1,
         },
     )?;
-    let seq = if mm.label_shape.is_empty() {
-        0
-    } else {
-        mm.input_shape[0]
-    };
+    let seq = parle::coordinator::driver::lm_seq_len(&mm);
     let mut batcher = Batcher::new(&train, mm.batch, seq, Augment::none(),
                                    1, 0);
 

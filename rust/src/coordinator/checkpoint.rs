@@ -5,12 +5,22 @@
 //! Deliberately dependency-free (no npy/serde in the offline vendor set)
 //! and versioned so future fields stay backward-compatible.
 
-use std::io::{Read, Write};
+use std::io::{Read, Seek, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 const MAGIC: &[u8; 8] = b"PARLECK1";
+
+/// Hard cap on the parameter count a header may declare: 2^28 params =
+/// 1 GiB of f32 payload, an order of magnitude above the largest model
+/// in the zoo. A corrupt header must never translate into a multi-GiB
+/// allocation (the old `1 << 33` bound admitted a 32 GiB one, and
+/// `p * 4` could overflow `usize` on 32-bit targets).
+const MAX_PARAMS: u64 = 1 << 28;
+
+/// Bulk-encoding chunk for the f32 payload (params per write).
+const CHUNK_PARAMS: usize = 4096;
 
 /// A saved training state.
 #[derive(Clone, Debug, PartialEq)]
@@ -56,8 +66,15 @@ impl Checkpoint {
             out.write_all(&v.to_le_bytes())?;
         }
         out.write_all(&(self.params.len() as u64).to_le_bytes())?;
-        for x in &self.params {
-            out.write_all(&x.to_le_bytes())?;
+        // bulk-encode the payload: one write per chunk, not one
+        // write_all (BufWriter branch + copy) per element
+        let mut chunk = [0u8; CHUNK_PARAMS * 4];
+        for params in self.params.chunks(CHUNK_PARAMS) {
+            let bytes = &mut chunk[..params.len() * 4];
+            for (dst, x) in bytes.chunks_exact_mut(4).zip(params) {
+                dst.copy_from_slice(&x.to_le_bytes());
+            }
+            out.write_all(bytes)?;
         }
         out.flush()?;
         Ok(())
@@ -88,11 +105,32 @@ impl Checkpoint {
         }
         let mut b = [0u8; 8];
         f.read_exact(&mut b)?;
-        let p = u64::from_le_bytes(b) as usize;
-        if p > (1 << 33) {
-            bail!("corrupt checkpoint: {p} parameters");
+        let declared = u64::from_le_bytes(b);
+        if declared > MAX_PARAMS {
+            bail!(
+                "corrupt checkpoint: {declared} parameters \
+                 (cap {MAX_PARAMS})"
+            );
         }
-        let mut raw = vec![0u8; p * 4];
+        let payload = declared
+            .checked_mul(4)
+            .ok_or_else(|| anyhow!("corrupt checkpoint: payload overflow"))?;
+        // the file must actually contain the declared payload before a
+        // single byte of it is allocated
+        let remaining = f
+            .get_ref()
+            .metadata()?
+            .len()
+            .saturating_sub(f.stream_position()?);
+        if remaining < payload {
+            bail!(
+                "corrupt checkpoint: payload truncated \
+                 ({remaining} bytes for {declared} parameters)"
+            );
+        }
+        let payload = usize::try_from(payload)
+            .map_err(|_| anyhow!("corrupt checkpoint: payload too large"))?;
+        let mut raw = vec![0u8; payload];
         f.read_exact(&mut raw)?;
         let params = raw
             .chunks_exact(4)
@@ -158,6 +196,46 @@ mod tests {
     #[test]
     fn missing_file_errors() {
         assert!(Checkpoint::load("/nonexistent/x.ck").is_err());
+    }
+
+    /// Header bytes up to (and excluding) the payload: magic, model
+    /// name, zero metadata entries, then the declared param count.
+    fn header_with_params(declared: u64) -> Vec<u8> {
+        let mut h = Vec::new();
+        h.extend_from_slice(MAGIC);
+        h.extend_from_slice(&1u32.to_le_bytes());
+        h.push(b'm');
+        h.extend_from_slice(&0u32.to_le_bytes());
+        h.extend_from_slice(&declared.to_le_bytes());
+        h
+    }
+
+    /// Regression: a corrupt header used to admit a 32 GiB allocation
+    /// (`p` up to 2^33) before the payload read failed.
+    #[test]
+    fn absurd_param_count_is_rejected_before_allocating() {
+        let path = std::env::temp_dir().join("parle_ck_test4/huge.ck");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        for declared in [MAX_PARAMS + 1, u64::MAX / 4, u64::MAX] {
+            std::fs::write(&path, header_with_params(declared)).unwrap();
+            let err = Checkpoint::load(&path).unwrap_err().to_string();
+            assert!(err.contains("corrupt checkpoint"), "{err}");
+        }
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    /// A declared count under the cap but past the end of the file must
+    /// error on the file length, not allocate and block on the read.
+    #[test]
+    fn truncated_payload_is_rejected_before_allocating() {
+        let path = std::env::temp_dir().join("parle_ck_test5/trunc.ck");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        let mut bytes = header_with_params(1_000_000);
+        bytes.extend_from_slice(&[0u8; 16]); // 4 of the 1M params
+        std::fs::write(&path, bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 
     #[test]

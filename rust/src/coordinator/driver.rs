@@ -43,6 +43,10 @@ fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
     let (train_ds, val_ds) = build(&mm.dataset, &cfg.data)?;
     let augment = default_augment(&mm.dataset);
 
+    // Epoch accounting is pinned to the GLOBAL dataset length before any
+    // sharding: see `epoch_batches`.
+    let train_len = train_ds.len();
+
     // shards
     let replica_datasets: Vec<Arc<Dataset>> = if cfg.split_data {
         match &train_ds {
@@ -57,8 +61,7 @@ fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
         (0..cfg.replicas).map(|_| shared.clone()).collect()
     };
 
-    let batches_per_epoch =
-        (replica_datasets[0].len() / mm.batch).max(1);
+    let batches_per_epoch = epoch_batches(train_len, mm.batch);
     let total_rounds = ((cfg.epochs * batches_per_epoch as f64
         / cfg.l_steps as f64)
         .ceil() as u64)
@@ -100,7 +103,9 @@ fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
     let init = master.execute(
         &cfg.model,
         "init",
-        &[crate::runtime::lit_scalar_i32(cfg.seed as i32)],
+        &[crate::runtime::lit_scalar_i32(
+            crate::util::rng::fold_seed_i32(cfg.seed),
+        )],
     )?;
     let mut xref: Vec<f32> = crate::runtime::to_f32(&init[0])?;
 
@@ -218,7 +223,22 @@ fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
     })
 }
 
+/// Batches per epoch under GLOBAL-dataset semantics: one epoch is one
+/// pass of the *whole* training set through the ensemble. Sharding (§5,
+/// `split_data`) divides the data between replicas but must not shrink
+/// the epoch — computing this from a shard's length would cut scoping's
+/// B and `total_rounds` by the replica count versus unsharded runs.
+pub fn epoch_batches(global_train_len: usize, batch: usize) -> usize {
+    (global_train_len / batch.max(1)).max(1)
+}
+
 /// Mean validation error of `params` over pre-built eval batches.
+///
+/// `params` — the P-sized vector, identical for every batch — is
+/// uploaded to the device exactly once per sweep; only the per-batch
+/// inputs cross the host boundary afterwards. (The old literal path
+/// re-marshalled all P floats on every batch.) Shared by the coupled,
+/// data-parallel and hierarchical drivers.
 pub fn evaluate(
     session: &Session,
     model: &str,
@@ -227,17 +247,23 @@ pub fn evaluate(
     batches: &[crate::data::batcher::Batch],
 ) -> Result<f64> {
     let p = mm.param_count;
+    let params_buf = session.upload(&lit_f32(params, &[p])?)?;
     let mut err_count = 0.0f64;
     let mut total = 0.0f64;
     for b in batches {
         let (xb, yb) = batch_literals(mm, b)?;
-        let outs = session.execute(
+        let xb_buf = session.upload(&xb)?;
+        let yb_buf = session.upload(&yb)?;
+        let outs = session.execute_buffers(
             model,
             "eval_chunk",
-            &[lit_f32(params, &[p])?, xb, yb],
+            &[&params_buf, &xb_buf, &yb_buf],
         )?;
+        let err = outs
+            .get(1)
+            .ok_or_else(|| anyhow::anyhow!("eval_chunk: missing error output"))?;
         err_count +=
-            crate::runtime::tensor::scalar_f32(&outs[1])? as f64;
+            crate::runtime::scalar_f32(&session.download(err)?)? as f64;
         total += (b.n * mm.labels_per_example()) as f64;
     }
     Ok(err_count / total.max(1.0))
@@ -264,6 +290,22 @@ pub fn lm_seq_len(mm: &crate::runtime::ModelManifest) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Pins the `split_data` epoch semantics: B comes from the global
+    /// dataset, so sharding (which divides examples between replicas)
+    /// leaves scoping's B and `total_rounds` identical to unsharded
+    /// runs. Computing from a shard's length (the old behavior) would
+    /// shrink both by the replica count.
+    #[test]
+    fn epoch_batches_uses_the_global_dataset() {
+        let (global_len, batch, replicas) = (1000, 10, 4);
+        assert_eq!(epoch_batches(global_len, batch), 100);
+        let shard_len = global_len / replicas;
+        assert_eq!(epoch_batches(shard_len, batch), 25);
+        // degenerate guards
+        assert_eq!(epoch_batches(0, batch), 1);
+        assert_eq!(epoch_batches(7, 0), 7);
+    }
 
     #[test]
     fn augment_policy() {

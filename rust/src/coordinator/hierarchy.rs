@@ -72,7 +72,10 @@ pub fn train_hierarchical(
     let shared = Arc::new(train_ds);
 
     let n_workers = deputies * workers_per_deputy;
-    let batches_per_epoch = (shared.len() / mm.batch).max(1);
+    // unsharded, so global == local; shared helper keeps the epoch
+    // semantics identical across all three drivers
+    let batches_per_epoch =
+        crate::coordinator::driver::epoch_batches(shared.len(), mm.batch);
     let total_rounds = ((cfg.epochs * batches_per_epoch as f64
         / cfg.l_steps as f64)
         .ceil() as u64)
@@ -111,7 +114,9 @@ pub fn train_hierarchical(
     let init = master.execute(
         &cfg.model,
         "init",
-        &[crate::runtime::lit_scalar_i32(cfg.seed as i32)],
+        &[crate::runtime::lit_scalar_i32(
+            crate::util::rng::fold_seed_i32(cfg.seed),
+        )],
     )?;
     let x0: Vec<f32> = crate::runtime::to_f32(&init[0])?;
     let p = x0.len();

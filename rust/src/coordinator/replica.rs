@@ -5,6 +5,15 @@
 //! algorithms with an outer step — the outer iterate x^a and its Nesterov
 //! velocity. All heavy math happens inside the AOT artifacts; this thread
 //! just moves flat vectors and talks to the master through channels.
+//!
+//! The inner loop is device-resident: (y, z, mom), the anchor and the
+//! round-constant scalars are uploaded once per round, each step's
+//! outputs feed the next dispatch as `PjRtBuffer`s, and the state comes
+//! back to the host once at round end for the outer step and the report.
+//! Per-round host<->device traffic is therefore O(P) per leg (plus the
+//! unavoidable per-step minibatches), not the O(P*L) the old
+//! literal-marshalling loop paid — the same compute/communication
+//! asymmetry the paper's outer loop exploits, applied one level down.
 
 use std::sync::Arc;
 
@@ -75,11 +84,7 @@ pub fn run_replica(
         .with_context(|| format!("replica {} session", cfg.id))?;
     let mm = session.manifest.model(&cfg.model)?.clone();
     let p = mm.param_count;
-    let seq_len = if mm.label_shape.is_empty() {
-        0
-    } else {
-        mm.input_shape[0]
-    };
+    let seq_len = crate::coordinator::driver::lm_seq_len(&mm);
     let mut batcher = Batcher::new(
         &dataset,
         mm.batch,
@@ -98,7 +103,7 @@ pub fn run_replica(
     let init = session.execute(
         &cfg.model,
         "init",
-        &[lit_scalar_i32(cfg.init_seed as i32)],
+        &[lit_scalar_i32(crate::util::rng::fold_seed_i32(cfg.init_seed))],
     )?;
     let mut x_a = crate::runtime::to_f32(&init[0])?;
     debug_assert_eq!(x_a.len(), p);
@@ -155,6 +160,17 @@ pub fn run_replica(
         };
         let step_s = timer.elapsed_s();
 
+        if round == 0
+            && cfg.id == 0
+            && session.device_residency() == Some(false)
+        {
+            crate::warn_log!(
+                "runtime returns tuple roots: inner-loop state cannot \
+                 stay device-resident (traffic degrades to literal-path \
+                 cost, still correct)"
+            );
+        }
+
         // ---- outer update (8c), host-side -------------------------------
         if cfg.spec.outer_step {
             // eta/rho gain of the elastic term in (8c)
@@ -194,7 +210,58 @@ pub fn run_replica(
     Ok(())
 }
 
-/// L dispatches of the per-step artifact.
+/// Per-step dropout/augment seed: mixes the (folded) replica stream
+/// seed, the global step index and the replica id into the artifact's
+/// 31-bit seed input.
+fn step_seed(cfg: &ReplicaCfg, round: u64, step: usize) -> i32 {
+    ((crate::util::rng::fold_seed_i32(cfg.seed) as i64
+        ^ ((round as i64 * cfg.l_steps as i64 + step as i64) << 16)
+        ^ cfg.id as i64)
+        & 0x7fff_ffff) as i32
+}
+
+/// Round-constant operands uploaded once per round for the buffer-path
+/// dispatches: the proximal anchor (None for `Anchor::None`, whose gain
+/// is 0 and content unused — the y buffer stands in) and the five
+/// scalar hyperparameters.
+struct RoundBuffers {
+    anchor: Option<xla::PjRtBuffer>,
+    lr: xla::PjRtBuffer,
+    gain: xla::PjRtBuffer,
+    alpha: xla::PjRtBuffer,
+    momentum: xla::PjRtBuffer,
+    weight_decay: xla::PjRtBuffer,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn upload_round_consts(
+    session: &Session,
+    cfg: &ReplicaCfg,
+    p: usize,
+    x_a: &[f32],
+    xref: &[f32],
+    inner_lr: f32,
+    gain: f32,
+) -> Result<RoundBuffers> {
+    let anchor = match cfg.spec.anchor {
+        Anchor::SelfX => Some(session.upload(&lit_f32(x_a, &[p])?)?),
+        Anchor::Reference => Some(session.upload(&lit_f32(xref, &[p])?)?),
+        Anchor::None => None,
+    };
+    Ok(RoundBuffers {
+        anchor,
+        lr: session.upload(&lit_scalar_f32(inner_lr))?,
+        gain: session.upload(&lit_scalar_f32(gain))?,
+        alpha: session.upload(&lit_scalar_f32(cfg.alpha))?,
+        momentum: session.upload(&lit_scalar_f32(cfg.momentum))?,
+        weight_decay: session.upload(&lit_scalar_f32(cfg.weight_decay))?,
+    })
+}
+
+/// L dispatches of the per-step artifact with device-resident state:
+/// (y, z, mom) and the round constants go up once, every step uploads
+/// only its minibatch + seed and downloads only the two loss/error
+/// scalars, and the state comes back once after the last step.
 #[allow(clippy::too_many_arguments)]
 fn run_step_round(
     session: &Session,
@@ -211,44 +278,58 @@ fn run_step_round(
     round: u64,
 ) -> Result<(f64, f64, usize)> {
     let p = mm.param_count;
+    let mut y_buf = session.upload(&lit_f32(y, &[p])?)?;
+    let mut z_buf = session.upload(&lit_f32(z, &[p])?)?;
+    let mut mom_buf = session.upload(&lit_f32(mom, &[p])?)?;
+    let consts =
+        upload_round_consts(session, cfg, p, x_a, xref, inner_lr, gain)?;
+
     let mut loss_sum = 0.0;
     let mut err_sum = 0.0;
     for step in 0..cfg.l_steps {
         let batch = batcher.next();
         let (xb, yb) = batch_literals(mm, &batch)?;
-        let anchor = match cfg.spec.anchor {
-            Anchor::SelfX => lit_f32(x_a, &[p])?,
-            Anchor::Reference => lit_f32(xref, &[p])?,
-            Anchor::None => lit_f32(y, &[p])?, // gain is 0; content unused
-        };
-        let seed = ((cfg.seed as i64
-            ^ ((round as i64 * cfg.l_steps as i64 + step as i64) << 16)
-            ^ cfg.id as i64)
-            & 0x7fff_ffff) as i32;
-        let outs = session.execute(
+        let xb_buf = session.upload(&xb)?;
+        let yb_buf = session.upload(&yb)?;
+        let seed_buf =
+            session.upload(&lit_scalar_i32(step_seed(cfg, round, step)))?;
+        let outs = session.execute_buffers(
             &cfg.model,
             "inner_step",
             &[
-                lit_f32(y, &[p])?,
-                lit_f32(z, &[p])?,
-                lit_f32(mom, &[p])?,
-                anchor,
-                xb,
-                yb,
-                lit_scalar_f32(inner_lr),
-                lit_scalar_f32(gain),
-                lit_scalar_f32(cfg.alpha),
-                lit_scalar_f32(cfg.momentum),
-                lit_scalar_f32(cfg.weight_decay),
-                lit_scalar_i32(seed),
+                &y_buf,
+                &z_buf,
+                &mom_buf,
+                consts.anchor.as_ref().unwrap_or(&y_buf),
+                &xb_buf,
+                &yb_buf,
+                &consts.lr,
+                &consts.gain,
+                &consts.alpha,
+                &consts.momentum,
+                &consts.weight_decay,
+                &seed_buf,
             ],
         )?;
-        *y = crate::runtime::to_f32(&outs[0])?;
-        *z = crate::runtime::to_f32(&outs[1])?;
-        *mom = crate::runtime::to_f32(&outs[2])?;
-        loss_sum += crate::runtime::tensor::scalar_f32(&outs[3])? as f64;
-        err_sum += crate::runtime::tensor::scalar_f32(&outs[4])? as f64;
+        let mut outs = outs.into_iter();
+        let mut take = |name: &str| {
+            outs.next()
+                .with_context(|| format!("inner_step: missing {name} output"))
+        };
+        // state stays on device: outputs feed the next dispatch directly
+        y_buf = take("y")?;
+        z_buf = take("z")?;
+        mom_buf = take("mom")?;
+        let loss = take("loss")?;
+        let err = take("err")?;
+        loss_sum +=
+            crate::runtime::scalar_f32(&session.download(&loss)?)? as f64;
+        err_sum +=
+            crate::runtime::scalar_f32(&session.download(&err)?)? as f64;
     }
+    *y = crate::runtime::to_f32(&session.download(&y_buf)?)?;
+    *z = crate::runtime::to_f32(&session.download(&z_buf)?)?;
+    *mom = crate::runtime::to_f32(&session.download(&mom_buf)?)?;
     Ok((loss_sum, err_sum, cfg.l_steps))
 }
 
@@ -293,36 +374,48 @@ fn run_scan_round(
         (lit_f32(&xs_f, &shape)?, lit_i32(&ys, &[l, mm.batch])?)
     };
 
-    let anchor = match cfg.spec.anchor {
-        Anchor::SelfX => lit_f32(x_a, &[p])?,
-        Anchor::Reference => lit_f32(xref, &[p])?,
-        Anchor::None => lit_f32(y, &[p])?,
-    };
-    let seed = ((cfg.seed as i64 ^ ((round as i64) << 20) ^ cfg.id as i64)
-        & 0x7fff_ffff) as i32;
-    let outs = session.execute(
+    let y_buf = session.upload(&lit_f32(y, &[p])?)?;
+    let z_buf = session.upload(&lit_f32(z, &[p])?)?;
+    let mom_buf = session.upload(&lit_f32(mom, &[p])?)?;
+    let consts =
+        upload_round_consts(session, cfg, p, x_a, xref, inner_lr, gain)?;
+    let xb_buf = session.upload(&xb)?;
+    let yb_buf = session.upload(&yb)?;
+    let seed =
+        ((crate::util::rng::fold_seed_i32(cfg.seed) as i64
+            ^ ((round as i64) << 20)
+            ^ cfg.id as i64)
+            & 0x7fff_ffff) as i32;
+    let seed_buf = session.upload(&lit_scalar_i32(seed))?;
+    let outs = session.execute_buffers(
         &cfg.model,
         "inner_scan",
         &[
-            lit_f32(y, &[p])?,
-            lit_f32(z, &[p])?,
-            lit_f32(mom, &[p])?,
-            anchor,
-            xb,
-            yb,
-            lit_scalar_f32(inner_lr),
-            lit_scalar_f32(gain),
-            lit_scalar_f32(cfg.alpha),
-            lit_scalar_f32(cfg.momentum),
-            lit_scalar_f32(cfg.weight_decay),
-            lit_scalar_i32(seed),
+            &y_buf,
+            &z_buf,
+            &mom_buf,
+            consts.anchor.as_ref().unwrap_or(&y_buf),
+            &xb_buf,
+            &yb_buf,
+            &consts.lr,
+            &consts.gain,
+            &consts.alpha,
+            &consts.momentum,
+            &consts.weight_decay,
+            &seed_buf,
         ],
     )?;
-    *y = crate::runtime::to_f32(&outs[0])?;
-    *z = crate::runtime::to_f32(&outs[1])?;
-    *mom = crate::runtime::to_f32(&outs[2])?;
-    let losses = crate::runtime::to_f32(&outs[3])?;
-    let errs = crate::runtime::to_f32(&outs[4])?;
+    let mut outs = outs.into_iter();
+    let mut take = |name: &str| {
+        outs.next()
+            .with_context(|| format!("inner_scan: missing {name} output"))
+    };
+    *y = crate::runtime::to_f32(&session.download(&take("y")?)?)?;
+    *z = crate::runtime::to_f32(&session.download(&take("z")?)?)?;
+    *mom = crate::runtime::to_f32(&session.download(&take("mom")?)?)?;
+    let losses =
+        crate::runtime::to_f32(&session.download(&take("losses")?)?)?;
+    let errs = crate::runtime::to_f32(&session.download(&take("errs")?)?)?;
     Ok((
         losses.iter().map(|&x| x as f64).sum(),
         errs.iter().map(|&x| x as f64).sum(),

@@ -35,6 +35,7 @@ pub fn train_data_parallel(cfg: &RunConfig, label: &str)
     let mm = master.manifest.model(&cfg.model)?.clone();
     let (train_ds, val_ds) = build(&mm.dataset, &cfg.data)?;
     let augment = default_augment(&mm.dataset);
+    let train_len = train_ds.len();
 
     let worker_datasets: Vec<Arc<Dataset>> = if cfg.split_data {
         match &train_ds {
@@ -52,10 +53,15 @@ pub fn train_data_parallel(cfg: &RunConfig, label: &str)
     };
 
     // Each worker draws its own batch: effective batch n*B, the paper's
-    // data-parallel setup. Epoch accounting uses the aggregate batch.
-    let batches_per_epoch = (worker_datasets[0].len()
-        / (mm.batch * cfg.replicas))
-        .max(1);
+    // data-parallel setup. Epoch accounting uses the aggregate batch
+    // over the GLOBAL dataset (see `driver::epoch_batches`): computing
+    // from a shard's length under split_data would shrink the epoch by
+    // the replica count a second time.
+    let batches_per_epoch =
+        crate::coordinator::driver::epoch_batches(
+            train_len,
+            mm.batch * cfg.replicas,
+        );
     let total_steps =
         ((cfg.epochs * batches_per_epoch as f64).ceil() as u64).max(1);
     let eval_every = (cfg.eval_every_rounds * cfg.l_steps.max(1)) as u64;
@@ -94,10 +100,11 @@ pub fn train_data_parallel(cfg: &RunConfig, label: &str)
                 let t = Timer::new();
                 let b = batcher.next();
                 let (xb, yb) = batch_literals(&mm, &b)?;
-                let step_seed = ((base_seed as i64
-                    ^ (round as i64) << 8
-                    ^ a as i64)
-                    & 0x7fff_ffff) as i32;
+                let step_seed =
+                    ((crate::util::rng::fold_seed_i32(base_seed) as i64
+                        ^ (round as i64) << 8
+                        ^ a as i64)
+                        & 0x7fff_ffff) as i32;
                 let outs = session.execute(
                     &model,
                     "grad_eval",
@@ -135,7 +142,7 @@ pub fn train_data_parallel(cfg: &RunConfig, label: &str)
     let init = master.execute(
         &cfg.model,
         "init",
-        &[lit_scalar_i32(cfg.seed as i32)],
+        &[lit_scalar_i32(crate::util::rng::fold_seed_i32(cfg.seed))],
     )?;
     let mut x: Vec<f32> = crate::runtime::to_f32(&init[0])?;
     let p = x.len();

@@ -5,32 +5,74 @@
 //! the session; `execute` validates input arity/shape against the
 //! manifest before dispatch so shape bugs surface as errors, not XLA
 //! aborts.
+//!
+//! # Two execution paths
+//!
+//! * **Literal path** ([`Session::execute`]) — host literals in, host
+//!   literals out. Every call re-marshals all inputs to the device and
+//!   fetches all outputs back; right for init, evaluation one-offs and
+//!   tests.
+//! * **Buffer path** ([`Session::upload`] / [`Session::execute_buffers`]
+//!   / [`Session::download`]) — operands live in device-resident
+//!   `PjRtBuffer`s; outputs come back as buffers that can feed the next
+//!   dispatch directly. This is the replica inner loop's path: the state
+//!   triple (y, z, mom) crosses the host boundary once per *round*, not
+//!   once per step.
+//!
+//! Both paths account every host<->device byte on the session's
+//! [`TransferMeter`], so the traffic asymmetry is measurable, not
+//! assumed.
+//!
+//! # Validation contract
+//!
+//! The literal path validates input arity, shape and dtype against the
+//! manifest before dispatch so shape bugs surface as errors, not XLA
+//! aborts. The buffer path validates **arity only**: buffer contents
+//! are device-side, so shape errors there surface from XLA itself —
+//! callers construct their operands through `lit_f32`/`lit_i32` (which
+//! reject length/shape mismatches at build time) before uploading.
+//!
+//! # Tupled vs untupled results
+//!
+//! AOT lowers with return_tuple=True. Depending on the runtime's
+//! execute options the result arrives either as one buffer per output
+//! leaf (untupled — the buffer path stays fully device-resident) or as
+//! a single intact tuple-root buffer. Both paths handle both shapes;
+//! in the tuple-root case [`Session::execute_buffers`] reconstructs
+//! the leaves through an accounted host round-trip, which costs no
+//! more than the literal path ever did but loses the O(P)-per-round
+//! property. [`Session::device_residency`] reports which world the
+//! session has observed so callers/tests can react.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient,
+          PjRtLoadedExecutable, XlaComputation};
 
 use super::artifact::{ArtifactSig, DType, Manifest};
+use super::tensor::{lit_bytes, TransferMeter};
 
 /// A per-thread runtime session.
 pub struct Session {
     client: PjRtClient,
     pub manifest: Manifest,
     cache: RefCell<HashMap<(String, String), PjRtLoadedExecutable>>,
+    meter: Arc<TransferMeter>,
+    /// Whether buffer-path dispatches have come back untupled (state
+    /// can stay device-resident) or as intact tuple roots (every
+    /// dispatch pays a host round-trip). Unset until the first
+    /// multi-output `execute_buffers` call resolves it.
+    residency: Cell<Option<bool>>,
 }
 
 impl Session {
     /// Open the artifacts directory (compiles nothing yet).
     pub fn open(artifacts_dir: &str) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Session {
-            client,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-        })
+        Self::with_manifest(manifest)
     }
 
     /// Open with an already-parsed manifest (tests).
@@ -40,7 +82,23 @@ impl Session {
             client,
             manifest,
             cache: RefCell::new(HashMap::new()),
+            meter: Arc::new(TransferMeter::new()),
+            residency: Cell::new(None),
         })
+    }
+
+    /// The session's host<->device transfer meter.
+    pub fn transfer_meter(&self) -> Arc<TransferMeter> {
+        self.meter.clone()
+    }
+
+    /// `Some(true)` once a multi-output buffer dispatch has come back
+    /// untupled (device-resident loops get their O(P)-per-round
+    /// traffic), `Some(false)` once one has come back as a tuple root
+    /// (each dispatch pays a host round-trip — no worse than the
+    /// literal path, but not O(P)), `None` before either was observed.
+    pub fn device_residency(&self) -> Option<bool> {
+        self.residency.get()
     }
 
     /// Ensure `(model, step)` is compiled; returns nothing (warms cache).
@@ -69,8 +127,30 @@ impl Session {
         Ok(())
     }
 
+    /// Copy a host literal into a device-resident buffer (accounted on
+    /// the transfer meter).
+    pub fn upload(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, lit)
+            .context("uploading literal to device")?;
+        self.meter.account_upload(lit_bytes(lit));
+        Ok(buf)
+    }
+
+    /// Copy a device-resident buffer back to a host literal (accounted
+    /// on the transfer meter).
+    pub fn download(&self, buf: &PjRtBuffer) -> Result<Literal> {
+        let lit = buf
+            .to_literal_sync()
+            .context("downloading device buffer to host")?;
+        self.meter.account_download(lit_bytes(&lit));
+        Ok(lit)
+    }
+
     /// Execute `(model, step)` with the given inputs; returns the
-    /// untupled outputs as host literals.
+    /// untupled outputs as host literals. Marshals every input up and
+    /// every output down on each call — use the buffer path for loops.
     pub fn execute(
         &self,
         model: &str,
@@ -80,16 +160,66 @@ impl Session {
         let mm = self.manifest.model(model)?;
         let art = mm.artifact(step)?;
         validate_inputs(model, step, art, inputs)?;
+        for lit in inputs {
+            self.meter.account_upload(lit_bytes(lit));
+        }
         self.compiled(model, step)?;
         let cache = self.cache.borrow();
         let exe = cache
             .get(&(model.to_string(), step.to_string()))
             .expect("compiled() populated the cache");
-        let result = exe.execute::<Literal>(inputs)?[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {model}/{step}"))?;
-        // AOT lowers with return_tuple=True: outputs arrive as one tuple.
-        let outs = result.to_tuple()?;
+        let mut per_device = exe.execute::<Literal>(inputs)?;
+        if per_device.is_empty() {
+            bail!("{model}/{step}: executable returned no per-device results");
+        }
+        let bufs = per_device.swap_remove(0);
+        let outs = match bufs.len() {
+            0 => bail!("{model}/{step}: executable yielded no result buffers"),
+            // Ambiguous single-output case: the one buffer is either an
+            // intact 1-tuple root or the untupled leaf itself. Probe by
+            // attempting the untuple; fall back to the raw literal.
+            1 if art.outputs.len() == 1 => {
+                match bufs[0]
+                    .to_literal_sync()
+                    .with_context(|| {
+                        format!("fetching result of {model}/{step}")
+                    })?
+                    .to_tuple()
+                {
+                    Ok(leaves) if leaves.len() == 1 => {
+                        self.meter.account_download(lit_bytes(&leaves[0]));
+                        leaves
+                    }
+                    _ => {
+                        let lit = bufs[0].to_literal_sync().with_context(
+                            || format!("fetching result of {model}/{step}"),
+                        )?;
+                        self.meter.account_download(lit_bytes(&lit));
+                        vec![lit]
+                    }
+                }
+            }
+            // AOT lowers with return_tuple=True: when the runtime hands
+            // the tuple root back as one buffer, untuple on the host.
+            1 => {
+                let leaves = bufs[0]
+                    .to_literal_sync()
+                    .with_context(|| {
+                        format!("fetching result of {model}/{step}")
+                    })?
+                    .to_tuple()?;
+                for l in &leaves {
+                    self.meter.account_download(lit_bytes(l));
+                }
+                leaves
+            }
+            // Runtimes that untuple on execute hand back one buffer per
+            // output leaf; fetch each.
+            _ => bufs
+                .iter()
+                .map(|b| self.download(b))
+                .collect::<Result<Vec<_>>>()?,
+        };
         if outs.len() != art.outputs.len() {
             bail!(
                 "{model}/{step}: manifest promises {} outputs, got {}",
@@ -98,6 +228,109 @@ impl Session {
             );
         }
         Ok(outs)
+    }
+
+    /// Execute `(model, step)` with device-resident inputs, returning
+    /// one device-resident buffer per manifest output. State threaded
+    /// through consecutive dispatches never crosses the host boundary.
+    ///
+    /// If the runtime returns the un-split tuple root as a single buffer
+    /// (instead of one buffer per output leaf), the leaves are
+    /// reconstructed through a host round-trip — correct, but at
+    /// literal-path transfer cost, and visibly so on the meter.
+    pub fn execute_buffers(
+        &self,
+        model: &str,
+        step: &str,
+        inputs: &[&PjRtBuffer],
+    ) -> Result<Vec<PjRtBuffer>> {
+        let mm = self.manifest.model(model)?;
+        let art = mm.artifact(step)?;
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "{model}/{step}: expected {} inputs, got {}",
+                art.inputs.len(),
+                inputs.len()
+            );
+        }
+        self.compiled(model, step)?;
+        let cache = self.cache.borrow();
+        let exe = cache
+            .get(&(model.to_string(), step.to_string()))
+            .expect("compiled() populated the cache");
+        let mut per_device = exe.execute_b(inputs)?;
+        if per_device.is_empty() {
+            bail!("{model}/{step}: executable returned no per-device results");
+        }
+        let bufs = per_device.swap_remove(0);
+        let arity = art.outputs.len();
+        match (bufs.len(), arity) {
+            (0, _) => {
+                bail!("{model}/{step}: executable yielded no result buffers")
+            }
+            (n, a) if n == a && n > 1 => {
+                self.residency.set(Some(true));
+                Ok(bufs)
+            }
+            // Ambiguous single-output case: either the untupled leaf or
+            // an intact 1-tuple root. Resolve from what this session
+            // has already learned; probe (one accounted host download)
+            // only while residency is still unknown.
+            (1, 1) => match self.residency.get() {
+                Some(true) => Ok(bufs),
+                Some(false) => {
+                    let leaves = bufs[0].to_literal_sync()?.to_tuple()?;
+                    if leaves.len() != 1 {
+                        bail!(
+                            "{model}/{step}: manifest promises 1 output, \
+                             tuple has {}",
+                            leaves.len()
+                        );
+                    }
+                    self.meter.account_download(lit_bytes(&leaves[0]));
+                    Ok(vec![self.upload(&leaves[0])?])
+                }
+                None => match bufs[0].to_literal_sync()?.to_tuple() {
+                    Ok(leaves) if leaves.len() == 1 => {
+                        self.residency.set(Some(false));
+                        self.meter.account_download(lit_bytes(&leaves[0]));
+                        Ok(vec![self.upload(&leaves[0])?])
+                    }
+                    _ => {
+                        self.residency.set(Some(true));
+                        // the probe still moved the payload down once
+                        self.meter
+                            .account_download(art.outputs[0].numel() * 4);
+                        Ok(bufs)
+                    }
+                },
+            },
+            (1, _) => {
+                // tuple root intact: untuple via the host and re-upload
+                self.residency.set(Some(false));
+                let leaves = bufs[0]
+                    .to_literal_sync()
+                    .with_context(|| {
+                        format!("fetching tupled result of {model}/{step}")
+                    })?
+                    .to_tuple()?;
+                if leaves.len() != arity {
+                    bail!(
+                        "{model}/{step}: manifest promises {arity} outputs, \
+                         tuple has {}",
+                        leaves.len()
+                    );
+                }
+                for l in &leaves {
+                    self.meter.account_download(lit_bytes(l));
+                }
+                leaves.iter().map(|l| self.upload(l)).collect()
+            }
+            (n, _) => bail!(
+                "{model}/{step}: manifest promises {arity} outputs, \
+                 runtime produced {n} buffers"
+            ),
+        }
     }
 }
 

@@ -8,6 +8,12 @@
 //! PJRT wrapper types hold raw pointers and are not `Send`: every worker
 //! thread owns its own [`Session`] (client + compiled executables), which
 //! mirrors a real one-device-per-replica deployment.
+//!
+//! Two execution paths (see `executor`): the literal path marshals host
+//! vectors on every dispatch; the buffer path
+//! (`Session::upload`/`execute_buffers`/`download`) keeps operands
+//! device-resident between dispatches. The per-session [`TransferMeter`]
+//! accounts every host<->device byte on both paths.
 
 pub mod artifact;
 pub mod executor;
@@ -15,4 +21,5 @@ pub mod tensor;
 
 pub use artifact::{ArtifactSig, LayerInfo, Manifest, ModelManifest, TensorSig};
 pub use executor::Session;
-pub use tensor::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_f32};
+pub use tensor::{lit_bytes, lit_f32, lit_i32, lit_scalar_f32,
+                 lit_scalar_i32, scalar_f32, to_f32, TransferMeter};

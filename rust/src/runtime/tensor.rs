@@ -1,4 +1,14 @@
-//! Host <-> `xla::Literal` conversion helpers.
+//! Host <-> `xla::Literal` conversion helpers and the host<->device
+//! [`TransferMeter`].
+//!
+//! The meter mirrors the fabric's `CommMeter` (coordinator/comm.rs): it
+//! counts every byte that crosses the host<->device boundary so the
+//! replica hot path can *prove* its traffic is O(P) per round instead of
+//! O(P*L). Both `Session::upload`/`Session::download` and the
+//! literal-marshalling `Session::execute` path account here, which makes
+//! the two dispatch strategies directly comparable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 use xla::Literal;
@@ -53,6 +63,65 @@ pub fn scalar_f32(lit: &Literal) -> Result<f32> {
     Ok(v[0])
 }
 
+/// Byte size of a (non-tuple) literal. Every dtype in the artifact
+/// contract is 4 bytes wide (f32/i32 — see `artifact::DType`), so the
+/// element count is enough.
+pub fn lit_bytes(lit: &Literal) -> usize {
+    lit.element_count() * 4
+}
+
+/// Counts every byte crossing the host<->device boundary, split by
+/// direction. Shared by a `Session` and its callers via `Arc`; all
+/// counters are relaxed atomics so worker threads can account without
+/// coordination (exact totals are only read at rest, e.g. in tests and
+/// bench reports).
+#[derive(Default)]
+pub struct TransferMeter {
+    up_bytes: AtomicU64,
+    down_bytes: AtomicU64,
+    uploads: AtomicU64,
+    downloads: AtomicU64,
+}
+
+impl TransferMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn account_upload(&self, bytes: usize) {
+        self.up_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn account_download(&self, bytes: usize) {
+        self.down_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.downloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Host -> device bytes so far.
+    pub fn upload_bytes(&self) -> u64 {
+        self.up_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Device -> host bytes so far.
+    pub fn download_bytes(&self) -> u64 {
+        self.down_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes, both directions.
+    pub fn bytes(&self) -> u64 {
+        self.upload_bytes() + self.download_bytes()
+    }
+
+    pub fn uploads(&self) -> u64 {
+        self.uploads.load(Ordering::Relaxed)
+    }
+
+    pub fn downloads(&self) -> u64 {
+        self.downloads.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +143,25 @@ mod tests {
     fn scalars() {
         let s = lit_scalar_f32(2.5);
         assert_eq!(scalar_f32(&s).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn literal_byte_size() {
+        let lit = lit_f32(&[0.0; 6], &[2, 3]).unwrap();
+        assert_eq!(lit_bytes(&lit), 24);
+        assert_eq!(lit_bytes(&lit_scalar_i32(1)), 4);
+    }
+
+    #[test]
+    fn meter_accumulates_per_direction() {
+        let m = TransferMeter::new();
+        m.account_upload(100);
+        m.account_upload(24);
+        m.account_download(8);
+        assert_eq!(m.upload_bytes(), 124);
+        assert_eq!(m.download_bytes(), 8);
+        assert_eq!(m.bytes(), 132);
+        assert_eq!(m.uploads(), 2);
+        assert_eq!(m.downloads(), 1);
     }
 }

@@ -93,9 +93,30 @@ impl Pcg64 {
     }
 }
 
+/// Fold a u64 seed into an i32 for artifact seed inputs. A plain
+/// `as i32` cast drops bits 32..64 entirely, so runs whose seeds differ
+/// only above bit 31 would collapse onto identical initializations and
+/// dropout streams; xor-folding the high half in keeps every seed bit
+/// influential.
+pub fn fold_seed_i32(seed: u64) -> i32 {
+    (((seed >> 32) ^ seed) as u32) as i32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fold_seed_keeps_high_bits_influential() {
+        let lo = 7u64;
+        let hi = 7u64 | (1 << 40);
+        assert_ne!(fold_seed_i32(lo), fold_seed_i32(hi));
+        // seeds already in i32 range are unchanged
+        assert_eq!(fold_seed_i32(7), 7);
+        assert_eq!(fold_seed_i32(0), 0);
+        // deterministic
+        assert_eq!(fold_seed_i32(hi), fold_seed_i32(hi));
+    }
 
     #[test]
     fn deterministic() {

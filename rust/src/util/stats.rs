@@ -49,10 +49,13 @@ impl Stats {
         (ss / (n - 1) as f64).sqrt()
     }
 
+    /// Smallest non-NaN sample (`f64::min` skips NaN operands, so a NaN
+    /// timing sample cannot poison the result).
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest non-NaN sample (NaN-tolerant, like [`Stats::min`]).
     pub fn max(&self) -> f64 {
         self.samples
             .iter()
@@ -60,13 +63,20 @@ impl Stats {
             .fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Linear-interpolated quantile, q in [0, 1].
+    /// Linear-interpolated quantile, q in [0, 1]. NaN samples are
+    /// ignored, matching `min`/`max` (a `partial_cmp().unwrap()` sort
+    /// used to panic on them); NaN only when no real samples exist.
     pub fn quantile(&self, q: f64) -> f64 {
-        if self.samples.is_empty() {
+        let mut sorted: Vec<f64> = self
+            .samples
+            .iter()
+            .copied()
+            .filter(|x| !x.is_nan())
+            .collect();
+        if sorted.is_empty() {
             return f64::NAN;
         }
-        let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -112,6 +122,21 @@ mod tests {
         assert!((s.median() - 2.5).abs() < 1e-12);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 4.0);
+    }
+
+    /// Regression: a NaN sample (e.g. a failed timing probe) used to
+    /// panic `quantile` via `partial_cmp().unwrap()`.
+    #[test]
+    fn nan_samples_are_ignored_not_fatal() {
+        let s = Stats::from_slice(&[2.0, f64::NAN, 1.0, 3.0]);
+        assert_eq!(s.median(), 2.0);
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert_eq!(s.quantile(1.0), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        // nothing but NaN -> NaN, still no panic
+        let all_nan = Stats::from_slice(&[f64::NAN, f64::NAN]);
+        assert!(all_nan.median().is_nan());
     }
 
     #[test]
