@@ -141,6 +141,41 @@ fn main() -> parle::Result<()> {
         64.0 / r.mean_s / 1e3
     );
 
+    section("evaluation: blocking vs overlapped round barrier");
+    bench_eval_overlap()?;
+
+    Ok(())
+}
+
+/// Two identical short training runs, evaluating every round: one with
+/// the sweep inside the round barrier (`overlap_eval = false`, the
+/// pre-engine behaviour), one on the dedicated eval thread. Reports
+/// wall time plus the profiler's eval split — `eval` is thread time,
+/// `eval_exposed` is what the master actually waited; the gap between
+/// the two runs' wall clocks is the barrier time the overlap reclaims.
+fn bench_eval_overlap() -> parle::Result<()> {
+    use parle::config::{Algo, RunConfig};
+    let mut cfg = RunConfig::new("mlp_synth", Algo::Parle);
+    cfg.replicas = 2;
+    cfg.epochs = 2.0;
+    cfg.l_steps = 2;
+    cfg.data.train = 1024;
+    cfg.data.val = 512;
+    cfg.eval_every_rounds = 1; // eval every round: worst case
+    cfg.seed = 11;
+    for overlap in [false, true] {
+        cfg.overlap_eval = overlap;
+        let label = if overlap { "overlapped" } else { "blocking " };
+        let out = parle::coordinator::train(&cfg, "bench_eval")?;
+        let ph = &out.record.phases;
+        let eval = ph.get("eval").copied().unwrap_or((0.0, 0));
+        let exposed = ph.get("eval_exposed").copied().unwrap_or((0.0, 0));
+        println!(
+            "{label}  wall {:7.3}s  eval {:6.3}s/{} sweeps  \
+             exposed {:6.3}s/{}",
+            out.record.wall_s, eval.0, eval.1, exposed.0, exposed.1
+        );
+    }
     Ok(())
 }
 

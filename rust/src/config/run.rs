@@ -125,6 +125,22 @@ pub struct RunConfig {
     pub comm: CommCfg,
     pub seed: u64,
     pub artifacts_dir: String,
+    /// Write a full-state checkpoint every this many communication
+    /// rounds (0 = never). See `checkpoint_path`.
+    pub checkpoint_every_rounds: usize,
+    /// Checkpoint destination; a `{round}` placeholder is substituted
+    /// with the 1-based round index (keeps history instead of
+    /// overwriting). Defaults to `checkpoints/<label>.ck`.
+    pub checkpoint_path: Option<String>,
+    /// Resume a run from a round-granular checkpoint written by
+    /// `checkpoint_every_rounds`; the resumed run reproduces the
+    /// uninterrupted run's final params and curve.
+    pub resume_from: Option<String>,
+    /// Run evaluation on a dedicated thread/session so the validation
+    /// sweep overlaps the next round's compute (default). `false`
+    /// evaluates inside the round barrier, as before the engine
+    /// refactor; both modes produce identical records up to wall-clock.
+    pub overlap_eval: bool,
 }
 
 impl RunConfig {
@@ -156,6 +172,10 @@ impl RunConfig {
             comm: CommCfg::off(),
             seed: 42,
             artifacts_dir: "artifacts".to_string(),
+            checkpoint_every_rounds: 0,
+            checkpoint_path: None,
+            resume_from: None,
+            overlap_eval: true,
         }
     }
 
@@ -179,6 +199,13 @@ impl RunConfig {
             "use_scan" => self.use_scan = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "artifacts" => self.artifacts_dir = value.to_string(),
+            "checkpoint_every" | "checkpoint_every_rounds" => {
+                self.checkpoint_every_rounds = value.parse()?
+            }
+            "checkpoint_path" => {
+                self.checkpoint_path = Some(value.to_string())
+            }
+            "overlap_eval" => self.overlap_eval = value.parse()?,
             "scoping" => {
                 self.scoping = match value {
                     "paper" => ScopingCfg::Paper,
@@ -200,6 +227,42 @@ impl RunConfig {
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
+    }
+
+    /// FNV-1a hash over every field that determines the training
+    /// trajectory's replay: data synthesis/sharding, hyperparameters,
+    /// the LR/scoping schedules, and the dispatch mode. Checkpoints
+    /// stamp it so `--resume` can refuse a run whose RNG streams or
+    /// schedules would silently diverge from the checkpointed one.
+    /// Deliberately excludes fields that do not change the parameter
+    /// trajectory: epochs (resuming with more epochs extends a run),
+    /// eval cadence, comm simulation, checkpoint/output settings.
+    pub fn replay_fingerprint(&self) -> u64 {
+        let canon = format!(
+            "model={};alpha={};momentum={};wd={};lr={}@{:?}/{};\
+             scoping={:?};train={};val={};difficulty={};dseed={};\
+             split={};scan={}",
+            self.model,
+            self.alpha,
+            self.momentum,
+            self.weight_decay,
+            self.lr.base,
+            self.lr.drop_epochs,
+            self.lr.drop_factor,
+            self.scoping,
+            self.data.train,
+            self.data.val,
+            self.data.difficulty,
+            self.data.seed,
+            self.split_data,
+            self.use_scan,
+        );
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in canon.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
     }
 
     /// Consistency checks before a run starts.
@@ -259,6 +322,49 @@ mod tests {
         assert_eq!(c.lr.base, 0.05);
         assert!(matches!(c.scoping, ScopingCfg::Constant { .. }));
         assert!(c.set("bogus", "1").is_err());
+    }
+
+    /// The fingerprint must move with replay-relevant fields and stay
+    /// put for the excluded ones (epochs, eval cadence, comm, output).
+    #[test]
+    fn replay_fingerprint_tracks_the_right_fields() {
+        let base = RunConfig::new("mlp_synth", Algo::Parle);
+        let fp = base.replay_fingerprint();
+        assert_eq!(fp, base.clone().replay_fingerprint());
+        let mut c = base.clone();
+        c.data.train = 999;
+        assert_ne!(fp, c.replay_fingerprint());
+        let mut c = base.clone();
+        c.use_scan = true;
+        assert_ne!(fp, c.replay_fingerprint());
+        let mut c = base.clone();
+        c.lr.base = 0.01;
+        assert_ne!(fp, c.replay_fingerprint());
+        let mut c = base.clone();
+        c.scoping = ScopingCfg::Constant {
+            gamma: 100.0,
+            rho: 1.0,
+        };
+        assert_ne!(fp, c.replay_fingerprint());
+        // excluded: a longer run or denser eval may resume freely
+        let mut c = base.clone();
+        c.epochs = 30.0;
+        c.eval_every_rounds = 1;
+        c.checkpoint_every_rounds = 7;
+        assert_eq!(fp, c.replay_fingerprint());
+    }
+
+    #[test]
+    fn checkpoint_and_eval_overrides() {
+        let mut c = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(c.checkpoint_every_rounds, 0);
+        assert!(c.overlap_eval);
+        c.set("checkpoint_every", "5").unwrap();
+        c.set("checkpoint_path", "out/ck_{round}.ck").unwrap();
+        c.set("overlap_eval", "false").unwrap();
+        assert_eq!(c.checkpoint_every_rounds, 5);
+        assert_eq!(c.checkpoint_path.as_deref(), Some("out/ck_{round}.ck"));
+        assert!(!c.overlap_eval);
     }
 
     #[test]

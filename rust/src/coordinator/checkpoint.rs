@@ -1,9 +1,18 @@
-//! Checkpointing: persist/restore flat parameter vectors (+ metadata).
+//! Checkpointing: persist/restore flat parameter vectors (+ metadata
+//! and, since the RoundEngine refactor, named auxiliary state vectors).
 //!
 //! Format: a small self-describing binary — magic, version, model name,
-//! param count, f64 metadata pairs, then raw little-endian f32 payload.
+//! param count, f64 metadata pairs, raw little-endian f32 payload, then
+//! an optional v2 section block of named vectors (f32 or f64). The v2
+//! block is appended after everything a v1 file contains, so v1 files
+//! load with empty sections and v1 readers ignore the trailing block.
 //! Deliberately dependency-free (no npy/serde in the offline vendor set)
 //! and versioned so future fields stay backward-compatible.
+//!
+//! The engine uses the sections to carry full round-granular training
+//! state: master auxiliary vectors (`master.*`), per-worker persistent
+//! state (`w<id>.*`), and the partial curve (`curve`, 5 f64 per point).
+//! See [`crate::coordinator::engine`] for the key layout.
 
 use std::io::{Read, Seek, Write};
 use std::path::Path;
@@ -16,19 +25,30 @@ const MAGIC: &[u8; 8] = b"PARLECK1";
 /// 1 GiB of f32 payload, an order of magnitude above the largest model
 /// in the zoo. A corrupt header must never translate into a multi-GiB
 /// allocation (the old `1 << 33` bound admitted a 32 GiB one, and
-/// `p * 4` could overflow `usize` on 32-bit targets).
+/// `p * 4` could overflow `usize` on 32-bit targets). The same cap
+/// bounds every v2 section length.
 const MAX_PARAMS: u64 = 1 << 28;
 
-/// Bulk-encoding chunk for the f32 payload (params per write).
+/// Cap on the number of v2 sections (engine writes ~6 per worker).
+const MAX_SECTIONS: u32 = 1 << 20;
+
+/// Bulk-encoding chunk for flat payloads (elements per write).
 const CHUNK_PARAMS: usize = 4096;
 
+const DTYPE_F32: u8 = 0;
+const DTYPE_F64: u8 = 1;
+
 /// A saved training state.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Default)]
 pub struct Checkpoint {
     pub model: String,
     pub params: Vec<f32>,
     /// free-form numeric metadata (epoch, val_err, lr, ...)
     pub meta: Vec<(String, f64)>,
+    /// named auxiliary f32 vectors (momentum, per-worker state, ...)
+    pub vecs_f32: Vec<(String, Vec<f32>)>,
+    /// named auxiliary f64 vectors (the partial curve payload)
+    pub vecs_f64: Vec<(String, Vec<f64>)>,
 }
 
 impl Checkpoint {
@@ -36,7 +56,7 @@ impl Checkpoint {
         Checkpoint {
             model: model.to_string(),
             params,
-            meta: Vec::new(),
+            ..Default::default()
         }
     }
 
@@ -45,8 +65,40 @@ impl Checkpoint {
         self
     }
 
+    pub fn with_vec_f32(mut self, name: &str, v: Vec<f32>) -> Self {
+        self.vecs_f32.push((name.to_string(), v));
+        self
+    }
+
+    pub fn with_vec_f64(mut self, name: &str, v: Vec<f64>) -> Self {
+        self.vecs_f64.push((name.to_string(), v));
+        self
+    }
+
     pub fn meta_value(&self, key: &str) -> Option<f64> {
         self.meta.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    /// Like [`Checkpoint::meta_value`] but an error when absent —
+    /// resume-critical fields use this so a truncated checkpoint fails
+    /// loudly instead of silently restarting from round 0.
+    pub fn require_meta(&self, key: &str) -> Result<f64> {
+        self.meta_value(key)
+            .ok_or_else(|| anyhow!("checkpoint missing meta key {key:?}"))
+    }
+
+    pub fn vec_f32(&self, name: &str) -> Option<&[f32]> {
+        self.vecs_f32
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_slice())
+    }
+
+    pub fn vec_f64(&self, name: &str) -> Option<&[f64]> {
+        self.vecs_f64
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_slice())
     }
 
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
@@ -66,18 +118,37 @@ impl Checkpoint {
             out.write_all(&v.to_le_bytes())?;
         }
         out.write_all(&(self.params.len() as u64).to_le_bytes())?;
-        // bulk-encode the payload: one write per chunk, not one
-        // write_all (BufWriter branch + copy) per element
-        let mut chunk = [0u8; CHUNK_PARAMS * 4];
-        for params in self.params.chunks(CHUNK_PARAMS) {
-            let bytes = &mut chunk[..params.len() * 4];
-            for (dst, x) in bytes.chunks_exact_mut(4).zip(params) {
-                dst.copy_from_slice(&x.to_le_bytes());
-            }
-            out.write_all(bytes)?;
+        write_f32_payload(&mut out, &self.params)?;
+        // ---- v2 section block (absent in v1 files) ---------------------
+        let n_sections = (self.vecs_f32.len() + self.vecs_f64.len()) as u32;
+        out.write_all(&n_sections.to_le_bytes())?;
+        for (name, v) in &self.vecs_f32 {
+            write_str(&mut out, name)?;
+            out.write_all(&[DTYPE_F32])?;
+            out.write_all(&(v.len() as u64).to_le_bytes())?;
+            write_f32_payload(&mut out, v)?;
+        }
+        for (name, v) in &self.vecs_f64 {
+            write_str(&mut out, name)?;
+            out.write_all(&[DTYPE_F64])?;
+            out.write_all(&(v.len() as u64).to_le_bytes())?;
+            write_f64_payload(&mut out, v)?;
         }
         out.flush()?;
         Ok(())
+    }
+
+    /// Crash-safe save: write to `<path>.tmp`, then rename over `path`
+    /// so a kill mid-write never corrupts the previous checkpoint.
+    pub fn save_atomic<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        self.save(&tmp)?;
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("renaming {} over {}", tmp.display(), path.display())
+        })
     }
 
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
@@ -86,6 +157,7 @@ impl Checkpoint {
                 format!("opening {}", path.as_ref().display())
             })?,
         );
+        let file_len = f.get_ref().metadata()?.len();
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         if &magic != MAGIC {
@@ -103,45 +175,120 @@ impl Checkpoint {
             f.read_exact(&mut b)?;
             meta.push((k, f64::from_le_bytes(b)));
         }
-        let mut b = [0u8; 8];
-        f.read_exact(&mut b)?;
-        let declared = u64::from_le_bytes(b);
-        if declared > MAX_PARAMS {
-            bail!(
-                "corrupt checkpoint: {declared} parameters \
-                 (cap {MAX_PARAMS})"
-            );
+        let params = read_flat_f32(&mut f, file_len)?;
+        // ---- v2 section block: absent in v1 files (clean EOF here) -----
+        let mut vecs_f32 = Vec::new();
+        let mut vecs_f64 = Vec::new();
+        if let Some(n_sections) = try_read_u32(&mut f)? {
+            if n_sections > MAX_SECTIONS {
+                bail!("corrupt checkpoint: {n_sections} sections");
+            }
+            for _ in 0..n_sections {
+                let name = read_str(&mut f)?;
+                let mut dtype = [0u8; 1];
+                f.read_exact(&mut dtype)?;
+                match dtype[0] {
+                    DTYPE_F32 => {
+                        vecs_f32.push((name, read_flat_f32(&mut f, file_len)?))
+                    }
+                    DTYPE_F64 => {
+                        vecs_f64.push((name, read_flat_f64(&mut f, file_len)?))
+                    }
+                    other => bail!(
+                        "corrupt checkpoint: unknown section dtype {other}"
+                    ),
+                }
+            }
         }
-        let payload = declared
-            .checked_mul(4)
-            .ok_or_else(|| anyhow!("corrupt checkpoint: payload overflow"))?;
-        // the file must actually contain the declared payload before a
-        // single byte of it is allocated
-        let remaining = f
-            .get_ref()
-            .metadata()?
-            .len()
-            .saturating_sub(f.stream_position()?);
-        if remaining < payload {
-            bail!(
-                "corrupt checkpoint: payload truncated \
-                 ({remaining} bytes for {declared} parameters)"
-            );
-        }
-        let payload = usize::try_from(payload)
-            .map_err(|_| anyhow!("corrupt checkpoint: payload too large"))?;
-        let mut raw = vec![0u8; payload];
-        f.read_exact(&mut raw)?;
-        let params = raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
         Ok(Checkpoint {
             model,
             params,
             meta,
+            vecs_f32,
+            vecs_f64,
         })
     }
+}
+
+fn write_f32_payload<W: Write>(out: &mut W, v: &[f32]) -> Result<()> {
+    // bulk-encode the payload: one write per chunk, not one
+    // write_all (BufWriter branch + copy) per element
+    let mut chunk = [0u8; CHUNK_PARAMS * 4];
+    for vals in v.chunks(CHUNK_PARAMS) {
+        let bytes = &mut chunk[..vals.len() * 4];
+        for (dst, x) in bytes.chunks_exact_mut(4).zip(vals) {
+            dst.copy_from_slice(&x.to_le_bytes());
+        }
+        out.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+fn write_f64_payload<W: Write>(out: &mut W, v: &[f64]) -> Result<()> {
+    let mut chunk = [0u8; CHUNK_PARAMS * 8];
+    for vals in v.chunks(CHUNK_PARAMS) {
+        let bytes = &mut chunk[..vals.len() * 8];
+        for (dst, x) in bytes.chunks_exact_mut(8).zip(vals) {
+            dst.copy_from_slice(&x.to_le_bytes());
+        }
+        out.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+/// Read a `u64 len` header and validate it against the cap *and* the
+/// actual file length before allocating a single payload byte.
+fn read_payload_len<R: Read + Seek>(
+    f: &mut R,
+    file_len: u64,
+    elem_bytes: u64,
+) -> Result<usize> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    let declared = u64::from_le_bytes(b);
+    if declared > MAX_PARAMS {
+        bail!("corrupt checkpoint: {declared} parameters (cap {MAX_PARAMS})")
+    }
+    let payload = declared
+        .checked_mul(elem_bytes)
+        .ok_or_else(|| anyhow!("corrupt checkpoint: payload overflow"))?;
+    // the file must actually contain the declared payload before a
+    // single byte of it is allocated
+    let remaining = file_len.saturating_sub(f.stream_position()?);
+    if remaining < payload {
+        bail!(
+            "corrupt checkpoint: payload truncated \
+             ({remaining} bytes for {declared} parameters)"
+        );
+    }
+    usize::try_from(declared)
+        .map_err(|_| anyhow!("corrupt checkpoint: payload too large"))
+}
+
+fn read_flat_f32<R: Read + Seek>(f: &mut R, file_len: u64)
+                                 -> Result<Vec<f32>> {
+    let n = read_payload_len(f, file_len, 4)?;
+    let mut raw = vec![0u8; n * 4];
+    f.read_exact(&mut raw)?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_flat_f64<R: Read + Seek>(f: &mut R, file_len: u64)
+                                 -> Result<Vec<f64>> {
+    let n = read_payload_len(f, file_len, 8)?;
+    let mut raw = vec![0u8; n * 8];
+    f.read_exact(&mut raw)?;
+    Ok(raw
+        .chunks_exact(8)
+        .map(|c| {
+            f64::from_le_bytes([
+                c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+            ])
+        })
+        .collect())
 }
 
 fn write_str<W: Write>(out: &mut W, s: &str) -> Result<()> {
@@ -154,6 +301,24 @@ fn read_u32<R: Read>(f: &mut R) -> Result<u32> {
     let mut b = [0u8; 4];
     f.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+/// Read a u32 if any bytes remain: `None` on clean EOF (a v1 file that
+/// ends after the params payload), an error on a partial word.
+fn try_read_u32<R: Read>(f: &mut R) -> Result<Option<u32>> {
+    let mut b = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = f.read(&mut b[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("corrupt checkpoint: truncated section count");
+        }
+        got += n;
+    }
+    Ok(Some(u32::from_le_bytes(b)))
 }
 
 fn read_str<R: Read>(f: &mut R) -> Result<String> {
@@ -181,6 +346,55 @@ mod tests {
         assert_eq!(ck, back);
         assert_eq!(back.meta_value("epoch"), Some(4.0));
         assert_eq!(back.meta_value("nope"), None);
+        assert!(back.require_meta("nope").is_err());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    /// v2 sections round-trip bit-exactly in both dtypes, in order.
+    #[test]
+    fn roundtrip_with_sections() {
+        let ck = Checkpoint::new("mlp_synth", vec![0.5; 7])
+            .with("round", 12.0)
+            .with_vec_f32("master.v", vec![1.0, f32::MIN_POSITIVE, -0.0])
+            .with_vec_f32("w0.mom", vec![-1.5; 5])
+            .with_vec_f64("curve", vec![0.125, 3.5, f64::EPSILON, 2.0, 0.25]);
+        let path = std::env::temp_dir().join("parle_ck_test_v2/s.ck");
+        ck.save_atomic(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        assert_eq!(back.vec_f32("w0.mom"), Some(&[-1.5f32; 5][..]));
+        assert_eq!(back.vec_f64("curve").unwrap().len(), 5);
+        assert_eq!(back.vec_f32("absent"), None);
+        // atomic save leaves no tmp file behind
+        assert!(!path.with_extension("ck.tmp").exists());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    /// A v1 file (no section block at all) still loads — with empty
+    /// sections — so pre-refactor checkpoints remain readable.
+    #[test]
+    fn v1_file_without_sections_loads() {
+        let path = std::env::temp_dir().join("parle_ck_test_v1/v1.ck");
+        let mut bytes = header_with_params(2);
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        bytes.extend_from_slice(&2.0f32.to_le_bytes());
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, bytes).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.params, vec![1.0, 2.0]);
+        assert!(ck.vecs_f32.is_empty() && ck.vecs_f64.is_empty());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn truncated_section_block_is_rejected() {
+        let path = std::env::temp_dir().join("parle_ck_test_v2t/t.ck");
+        let mut bytes = header_with_params(0);
+        bytes.extend_from_slice(&[1u8, 0]); // 2 of the 4 count bytes
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated section count"), "{err}");
         std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 

@@ -81,8 +81,47 @@ pub struct RoundMsg {
 pub enum RoundCmd {
     /// Run one communication round.
     Round(RoundMsg),
+    /// Reply with a [`WorkerState`] snapshot (checkpoint barrier).
+    Snapshot,
+    /// Install persistent state before the next round (resume).
+    Restore(Box<WorkerState>),
     /// Finish and exit.
     Stop,
+}
+
+/// What a worker's command loop sees (the non-terminal commands of
+/// [`RoundCmd`]). Stateful workers drive [`ReplicaEndpoint::recv_cmd`]
+/// and handle all three; stateless ones keep using
+/// [`ReplicaEndpoint::recv`], which answers snapshots with an empty
+/// state automatically.
+pub enum WorkerCmd {
+    Round(RoundMsg),
+    Snapshot,
+    Restore(Box<WorkerState>),
+}
+
+/// Full persistent state of one worker, as carried through checkpoints.
+///
+/// `vecs` holds whatever flat vectors the worker's algorithm persists
+/// across rounds (y, z, mom, x_a, v_outer for coupled replicas; nothing
+/// for the stateless gradient workers). `batches_drawn` counts training
+/// minibatches consumed so far: the data-order and augmentation RNG
+/// streams are pure functions of (seed, draw count), so resume replays
+/// them exactly via [`crate::data::Batcher::skip_batches`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerState {
+    pub replica: usize,
+    pub vecs: Vec<(String, Vec<f32>)>,
+    pub batches_drawn: u64,
+}
+
+impl WorkerState {
+    pub fn vec(&self, name: &str) -> Option<&[f32]> {
+        self.vecs
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_slice())
+    }
 }
 
 /// Replica -> master round report.
@@ -138,10 +177,13 @@ pub fn simulate_transfer(cfg: &CommCfg, bytes: usize) {
     }
 }
 
-/// Channel pair the master keeps per replica.
+/// Channels the master keeps per replica.
 pub struct ReplicaLink {
     pub cmd_tx: Sender<RoundCmd>,
     pub report_rx: Receiver<RoundReport>,
+    /// Snapshot replies (checkpoint path only — kept off the report
+    /// channel so round payload recycling is undisturbed).
+    pub snap_rx: Receiver<WorkerState>,
 }
 
 /// The worker-thread side of the fabric: receive rounds (paying the
@@ -151,6 +193,7 @@ pub struct ReplicaEndpoint {
     id: usize,
     cmd_rx: Receiver<RoundCmd>,
     report_tx: Sender<RoundReport>,
+    snap_tx: Sender<WorkerState>,
     meter: Arc<CommMeter>,
     comm: CommCfg,
 }
@@ -161,17 +204,42 @@ impl ReplicaEndpoint {
         self.id
     }
 
-    /// Blocking receive of the next round. Returns `None` on `Stop` or a
-    /// hung-up master. Applies the master -> replica transfer delay here,
-    /// on the replica thread, so per-replica delays overlap.
-    pub fn recv(&self) -> Option<RoundMsg> {
+    /// Blocking receive of the next command. Returns `None` on `Stop`
+    /// or a hung-up master. Round payloads pay the master -> replica
+    /// transfer delay here, on the replica thread, so per-replica
+    /// delays overlap; snapshot/restore traffic is control-plane and
+    /// free (checkpointing is not part of the simulated interconnect).
+    pub fn recv_cmd(&self) -> Option<WorkerCmd> {
         match self.cmd_rx.recv() {
             Ok(RoundCmd::Round(msg)) => {
                 simulate_transfer(&self.comm, msg.xref.len() * 4);
-                Some(msg)
+                Some(WorkerCmd::Round(msg))
             }
+            Ok(RoundCmd::Snapshot) => Some(WorkerCmd::Snapshot),
+            Ok(RoundCmd::Restore(st)) => Some(WorkerCmd::Restore(st)),
             Ok(RoundCmd::Stop) | Err(_) => None,
         }
+    }
+
+    /// Round-only receive for stateless workers (tests, probes): answers
+    /// snapshot requests with an empty state and ignores restores, so
+    /// such workers stay oblivious to the checkpoint protocol.
+    pub fn recv(&self) -> Option<RoundMsg> {
+        loop {
+            match self.recv_cmd()? {
+                WorkerCmd::Round(msg) => return Some(msg),
+                WorkerCmd::Snapshot => self.send_snapshot(WorkerState {
+                    replica: self.id,
+                    ..Default::default()
+                }),
+                WorkerCmd::Restore(_) => {}
+            }
+        }
+    }
+
+    /// Reply to a [`WorkerCmd::Snapshot`] request.
+    pub fn send_snapshot(&self, state: WorkerState) {
+        self.snap_tx.send(state).ok();
     }
 
     /// Send a round report; applies the replica -> master transfer delay
@@ -243,6 +311,13 @@ impl ReduceFabric {
         self.groups.len()
     }
 
+    /// Align the fabric's round counter (resume). `RoundMsg::round`
+    /// feeds the workers' per-step seed derivation, so a resumed run
+    /// must stamp rounds with their global index, not restart at 0.
+    pub fn set_round(&mut self, round: u64) {
+        self.round = round;
+    }
+
     pub fn meter(&self) -> Arc<CommMeter> {
         self.meter.clone()
     }
@@ -261,11 +336,17 @@ impl ReduceFabric {
         );
         let (cmd_tx, cmd_rx) = mpsc::channel::<RoundCmd>();
         let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
-        self.links.push(ReplicaLink { cmd_tx, report_rx });
+        let (snap_tx, snap_rx) = mpsc::channel::<WorkerState>();
+        self.links.push(ReplicaLink {
+            cmd_tx,
+            report_rx,
+            snap_rx,
+        });
         let ep = ReplicaEndpoint {
             id,
             cmd_rx,
             report_tx,
+            snap_tx,
             meter: self.meter.clone(),
             comm: self.comm,
         };
@@ -398,6 +479,54 @@ impl ReduceFabric {
     /// All collected reports of the last round, sorted by replica id.
     pub fn reports(&self) -> &[RoundReport] {
         &self.reports
+    }
+
+    /// Checkpoint barrier: request a [`WorkerState`] snapshot from every
+    /// worker and collect the replies, sorted by replica id. Callable
+    /// only between rounds (after [`ReduceFabric::collect`]), when every
+    /// worker is blocked in its command receive — the snapshot then
+    /// observes the exact post-round state.
+    pub fn snapshot_workers(&self) -> Result<Vec<WorkerState>> {
+        for link in &self.links {
+            link.cmd_tx.send(RoundCmd::Snapshot).ok();
+        }
+        let mut states = Vec::with_capacity(self.links.len());
+        for link in &self.links {
+            states.push(
+                link.snap_rx
+                    .recv()
+                    .context("replica died during snapshot")?,
+            );
+        }
+        states.sort_by_key(|s| s.replica);
+        Ok(states)
+    }
+
+    /// Resume: install a saved state into each worker. Must run before
+    /// the first broadcast so workers restore before drawing any data.
+    pub fn restore_workers(&self, states: Vec<WorkerState>) -> Result<()> {
+        if states.len() != self.links.len() {
+            anyhow::bail!(
+                "checkpoint has {} worker states, fabric has {} workers",
+                states.len(),
+                self.links.len()
+            );
+        }
+        for st in states {
+            let link = self
+                .links
+                .get(st.replica)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("worker state for unknown replica {}",
+                                    st.replica)
+                })?;
+            link.cmd_tx
+                .send(RoundCmd::Restore(Box::new(st)))
+                .map_err(|_| {
+                    anyhow::anyhow!("replica died before restore")
+                })?;
+        }
+        Ok(())
     }
 
     /// Stop every worker, join the threads, and propagate the first
@@ -615,5 +744,121 @@ mod tests {
         let mut fabric = ReduceFabric::flat(1, CommCfg::off());
         fabric.spawn_worker(|_ep| anyhow::bail!("boom"));
         assert!(fabric.shutdown().is_err());
+    }
+
+    /// Stateful worker: accumulates the broadcast sum into a persistent
+    /// register, snapshots/restores it through the checkpoint protocol.
+    fn counting_fabric(n: usize) -> ReduceFabric {
+        let mut fabric = ReduceFabric::flat(n, CommCfg::off());
+        for _ in 0..n {
+            fabric.spawn_worker(move |ep| {
+                let mut acc = vec![0.0f32; 2];
+                let mut drawn = 0u64;
+                while let Some(cmd) = ep.recv_cmd() {
+                    match cmd {
+                        WorkerCmd::Round(msg) => {
+                            acc[0] += msg.xref.iter().sum::<f32>();
+                            drawn += 1;
+                            let RoundMsg {
+                                round, mut slab, ..
+                            } = msg;
+                            slab.copy_from_slice(&acc);
+                            ep.report(RoundReport {
+                                replica: ep.id(),
+                                round,
+                                params: slab,
+                                train_loss: 0.0,
+                                train_err: 0.0,
+                                step_s: 0.0,
+                            });
+                        }
+                        WorkerCmd::Snapshot => {
+                            ep.send_snapshot(WorkerState {
+                                replica: ep.id(),
+                                vecs: vec![("acc".into(), acc.clone())],
+                                batches_drawn: drawn,
+                            })
+                        }
+                        WorkerCmd::Restore(st) => {
+                            acc = st.vec("acc").unwrap().to_vec();
+                            drawn = st.batches_drawn;
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+        fabric
+    }
+
+    /// Snapshot at round k, replay into a fresh fabric, and the restored
+    /// workers continue exactly where the originals left off.
+    #[test]
+    fn snapshot_restore_roundtrip_continues_state() {
+        let xref = vec![1.0f32, 2.0];
+        let run_rounds = |fabric: &mut ReduceFabric, n: usize| {
+            for _ in 0..n {
+                fabric.broadcast(consts(), &[xref.as_slice()]);
+                fabric.collect().unwrap();
+            }
+        };
+        let mut a = counting_fabric(2);
+        run_rounds(&mut a, 3);
+        let states = a.snapshot_workers().unwrap();
+        assert_eq!(states.len(), 2);
+        assert_eq!(states[0].replica, 0);
+        assert_eq!(states[0].batches_drawn, 3);
+        // 3 rounds x sum(1 + 2) accumulated into the first register
+        assert_eq!(states[0].vec("acc"), Some(&[9.0f32, 0.0][..]));
+        run_rounds(&mut a, 2);
+        let final_a = a.report_params(0).to_vec();
+        a.shutdown().unwrap();
+
+        let mut b = counting_fabric(2);
+        b.restore_workers(states).unwrap();
+        run_rounds(&mut b, 2);
+        assert_eq!(b.report_params(0), final_a.as_slice());
+        b.shutdown().unwrap();
+    }
+
+    /// Stateless workers (plain `recv`) answer snapshots with an empty
+    /// state instead of deadlocking the checkpoint barrier.
+    #[test]
+    fn stateless_workers_answer_snapshots() {
+        let mut fabric = echo_fabric(vec![0, 0], 0.0);
+        let a = vec![1.0f32; 4];
+        let b = vec![2.0f32; 4];
+        fabric.broadcast(consts(), &[a.as_slice()]);
+        fabric.collect().unwrap();
+        let states = fabric.snapshot_workers().unwrap();
+        assert_eq!(states.len(), 2);
+        assert!(states.iter().all(|s| s.vecs.is_empty()));
+        // and rounds keep flowing afterwards
+        fabric.broadcast(consts(), &[b.as_slice()]);
+        fabric.collect().unwrap();
+        assert_eq!(fabric.report_params(1), b.as_slice());
+        fabric.shutdown().unwrap();
+    }
+
+    /// Resume alignment: after `set_round`, broadcasts stamp global
+    /// round indices (workers derive per-step seeds from them).
+    #[test]
+    fn set_round_stamps_global_indices() {
+        let mut fabric = echo_fabric(vec![0], 0.0);
+        fabric.set_round(41);
+        let xref = vec![1.0f32, 2.0];
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        fabric.collect().unwrap();
+        assert_eq!(fabric.reports()[0].round, 41);
+        fabric.shutdown().unwrap();
+    }
+
+    #[test]
+    fn restore_rejects_worker_count_mismatch() {
+        let fabric = counting_fabric(2);
+        assert!(fabric
+            .restore_workers(vec![WorkerState::default()])
+            .is_err());
+        fabric.shutdown().unwrap();
     }
 }

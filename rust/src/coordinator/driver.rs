@@ -1,289 +1,151 @@
-//! Master driver: spawns replicas, runs the round loop, owns the
-//! reference variable, scoping, evaluation and metrics.
+//! The coupled-algorithm strategy (Parle / Entropy-SGD / Elastic-SGD /
+//! plain SGD) over the [`RoundEngine`], plus the `train` entry point
+//! that picks a strategy from the config.
+//!
+//! All lifecycle code — session/dataset setup, sharding, the round
+//! loop, eval cadence, checkpoint/resume, record assembly, shutdown —
+//! lives in [`crate::coordinator::engine`]; this module only describes
+//! what makes the coupled family itself: replica workers running L
+//! inner steps under a [`CoupledSpec`], a single broadcast group whose
+//! reference is the master variable x, and the (8d) reduce (or, for
+//! the unreduced sequential algorithms, adopting replica 0's params).
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::config::{Algo, RunConfig, ScopingCfg};
-use crate::coordinator::comm::{ReduceFabric, RoundConsts};
-use crate::coordinator::replica::{batch_literals, run_replica, ReplicaCfg};
-use crate::coordinator::sgd_dp;
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::comm::ReduceFabric;
+use crate::coordinator::engine::{RoundAlgo, RoundCtx, RoundEngine};
+use crate::coordinator::replica::{run_replica, ReplicaCfg};
+use crate::coordinator::sgd_dp::GradAvgAlgo;
 use crate::coordinator::spec::CoupledSpec;
-use crate::data::batcher::{Augment, Batcher};
-use crate::data::{build, split_shards, Dataset};
-use crate::metrics::{Curve, CurvePoint, RunRecord};
-use crate::opt::Scoping;
-use crate::runtime::{lit_f32, Session};
-use crate::util::timer::{PhaseProfiler, Timer};
-use crate::info;
+use crate::data::batcher::Augment;
+use crate::data::Dataset;
+use crate::runtime::ModelManifest;
 
-/// Result of a training run: record + final parameters.
-pub struct TrainOutput {
-    pub record: RunRecord,
-    pub final_params: Vec<f32>,
-}
+// Shared helpers re-exported from the engine (their historical home —
+// experiments, benches and examples import them from here).
+pub use crate::coordinator::engine::{default_augment, epoch_batches,
+                                     evaluate, lm_seq_len, TrainOutput};
 
 /// Train according to `cfg`; `label` names the run in records/CSVs.
 pub fn train(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
     cfg.validate()?;
+    let engine = RoundEngine::new(cfg, label);
     if cfg.algo == Algo::SgdDataParallel {
-        return sgd_dp::train_data_parallel(cfg, label);
+        engine.run(GradAvgAlgo::new(cfg))
+    } else {
+        engine.run(CoupledAlgo::new(cfg))
     }
-    train_coupled(cfg, label)
 }
 
-fn train_coupled(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
-    let spec = CoupledSpec::from_algo(cfg.algo, cfg.replicas);
-    let profiler = PhaseProfiler::new();
+/// Strategy for the paper's coupled family: `cfg.replicas` workers run
+/// L inner steps per round under one [`CoupledSpec`], all in a single
+/// broadcast group anchored to the master variable x.
+pub struct CoupledAlgo {
+    cfg: RunConfig,
+    spec: CoupledSpec,
+    xref: Vec<f32>,
+}
 
-    // --- master session + data -------------------------------------------
-    let master = Session::open(&cfg.artifacts_dir)?;
-    let mm = master.manifest.model(&cfg.model)?.clone();
-    let (train_ds, val_ds) = build(&mm.dataset, &cfg.data)?;
-    let augment = default_augment(&mm.dataset);
-
-    // Epoch accounting is pinned to the GLOBAL dataset length before any
-    // sharding: see `epoch_batches`.
-    let train_len = train_ds.len();
-
-    // shards
-    let replica_datasets: Vec<Arc<Dataset>> = if cfg.split_data {
-        match &train_ds {
-            Dataset::Image(img) => split_shards(img, cfg.replicas, cfg.seed)
-                .into_iter()
-                .map(|s| Arc::new(Dataset::Image(s)))
-                .collect(),
-            Dataset::Corpus(_) => bail!("split_data needs an image dataset"),
-        }
-    } else {
-        let shared = Arc::new(train_ds);
-        (0..cfg.replicas).map(|_| shared.clone()).collect()
-    };
-
-    let batches_per_epoch = epoch_batches(train_len, mm.batch);
-    let total_rounds = ((cfg.epochs * batches_per_epoch as f64
-        / cfg.l_steps as f64)
-        .ceil() as u64)
-        .max(1);
-
-    let mut scoping = match cfg.scoping {
-        ScopingCfg::Paper => Scoping::paper(batches_per_epoch),
-        ScopingCfg::Constant { gamma, rho } => Scoping::constant(gamma, rho),
-    };
-
-    // --- spawn replicas onto the fabric ------------------------------------
-    let mut fabric = ReduceFabric::flat(cfg.replicas, cfg.comm);
-    let meter = fabric.meter();
-    for a in 0..cfg.replicas {
-        let rcfg = ReplicaCfg {
-            id: a,
-            model: cfg.model.clone(),
-            artifacts_dir: cfg.artifacts_dir.clone(),
-            spec,
-            l_steps: cfg.l_steps,
-            alpha: cfg.alpha,
-            momentum: cfg.momentum,
-            weight_decay: cfg.weight_decay,
-            use_scan: cfg.use_scan,
-            augment,
-            seed: cfg.seed.wrapping_add(a as u64 * 7919),
-            init_seed: cfg.seed,
-            fixed_inner_lr: if spec.outer_step {
-                Some(cfg.lr.base)
-            } else {
-                None
-            },
-        };
-        let ds = replica_datasets[a].clone();
-        fabric.spawn_worker(move |ep| run_replica(rcfg, ds, ep));
-    }
-
-    // --- reference init ----------------------------------------------------
-    let init = master.execute(
-        &cfg.model,
-        "init",
-        &[crate::runtime::lit_scalar_i32(
-            crate::util::rng::fold_seed_i32(cfg.seed),
-        )],
-    )?;
-    let mut xref: Vec<f32> = crate::runtime::to_f32(&init[0])?;
-
-    let eval_batches = {
-        let b = Batcher::new(
-            &val_ds,
-            mm.batch,
-            lm_seq_len(&mm),
-            Augment::none(),
-            cfg.seed,
-            0xe,
-        );
-        b.eval_batches()
-    };
-
-    // --- round loop ---------------------------------------------------------
-    let wall = Timer::new();
-    let mut curve = Curve::new();
-    let mut step_seconds = 0.0f64;
-    let mut last_train = (f64::NAN, f64::NAN);
-
-    for round in 0..total_rounds {
-        let epoch =
-            round as f64 * cfg.l_steps as f64 / batches_per_epoch as f64;
-        let lr = cfg.lr.at(epoch);
-        fabric.broadcast(
-            RoundConsts {
-                lr,
-                gamma_inv: scoping.gamma_inv(),
-                rho_inv: scoping.rho_inv(),
-                eta_over_rho: lr * scoping.rho_inv(),
-            },
-            &[xref.as_slice()],
-        );
-        // barrier = synchronous reduce, like the paper
-        let stats = fabric.collect()?;
-        step_seconds += stats.max_step_s;
-        last_train = (stats.mean_loss, stats.mean_err);
-
-        // ---- (8d): x <- mean of replicas --------------------------------
-        profiler.scope("reduce", || {
-            if spec.reduce {
-                fabric.reduce_into(&mut xref);
-            } else {
-                xref.copy_from_slice(fabric.report_params(0));
-            }
-        });
-        scoping.step();
-
-        // ---- evaluation ---------------------------------------------------
-        let is_last = round + 1 == total_rounds;
-        if is_last
-            || (cfg.eval_every_rounds > 0
-                && (round + 1) % cfg.eval_every_rounds as u64 == 0)
-        {
-            let val_err = profiler.scope("eval", || {
-                evaluate(&master, &cfg.model, &mm, &xref, &eval_batches)
-            })?;
-            curve.push(CurvePoint {
-                wall_s: wall.elapsed_s(),
-                epoch: epoch + cfg.l_steps as f64 / batches_per_epoch as f64,
-                train_loss: last_train.0,
-                train_err: last_train.1,
-                val_err,
-            });
-            info!(
-                "{label} round {}/{} epoch {:.2} lr {:.4} γ {:.2} ρ {:.3} \
-                 train {:.3}/{:.1}% val {:.2}%",
-                round + 1,
-                total_rounds,
-                epoch,
-                lr,
-                scoping.gamma(),
-                scoping.rho(),
-                last_train.0,
-                last_train.1 * 100.0,
-                val_err * 100.0
-            );
+impl CoupledAlgo {
+    pub fn new(cfg: &RunConfig) -> Self {
+        CoupledAlgo {
+            cfg: cfg.clone(),
+            spec: CoupledSpec::from_algo(cfg.algo, cfg.replicas),
+            xref: Vec::new(),
         }
     }
+}
 
-    // --- shutdown -----------------------------------------------------------
-    fabric.shutdown()?;
+impl RoundAlgo for CoupledAlgo {
+    fn name(&self) -> String {
+        self.cfg.algo.name().to_string()
+    }
 
-    let wall_s = wall.elapsed_s();
-    let comm_s = profiler.total("reduce");
-    let last = curve.last().copied().unwrap_or(CurvePoint {
-        wall_s,
-        epoch: cfg.epochs,
-        train_loss: last_train.0,
-        train_err: last_train.1,
-        val_err: f64::NAN,
-    });
-    let record = RunRecord {
-        label: label.to_string(),
-        model: cfg.model.clone(),
-        algo: cfg.algo.name().to_string(),
-        replicas: cfg.replicas,
-        curve,
-        wall_s,
-        final_val_err: last.val_err,
-        final_train_err: last.train_err,
-        final_train_loss: last.train_loss,
-        comm_bytes: meter.bytes(),
-        comm_ratio: if step_seconds > 0.0 {
-            comm_s / step_seconds
+    fn groups(&self) -> Vec<usize> {
+        vec![0; self.cfg.replicas]
+    }
+
+    fn batches_per_epoch(&self, train_len: usize, mm: &ModelManifest)
+                         -> usize {
+        epoch_batches(train_len, mm.batch)
+    }
+
+    fn steps_per_round(&self) -> f64 {
+        self.cfg.l_steps as f64
+    }
+
+    fn eval_every_rounds(&self) -> u64 {
+        self.cfg.eval_every_rounds as u64
+    }
+
+    fn spawn_workers(
+        &self,
+        fabric: &mut ReduceFabric,
+        datasets: &[Arc<Dataset>],
+        augment: Augment,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        for a in 0..cfg.replicas {
+            let rcfg = ReplicaCfg {
+                id: a,
+                model: cfg.model.clone(),
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                spec: self.spec,
+                l_steps: cfg.l_steps,
+                alpha: cfg.alpha,
+                momentum: cfg.momentum,
+                weight_decay: cfg.weight_decay,
+                use_scan: cfg.use_scan,
+                augment,
+                seed: cfg.seed.wrapping_add(a as u64 * 7919),
+                init_seed: cfg.seed,
+                fixed_inner_lr: if self.spec.outer_step {
+                    Some(cfg.lr.base)
+                } else {
+                    None
+                },
+            };
+            let ds = datasets[a].clone();
+            fabric.spawn_worker(move |ep| run_replica(rcfg, ds, ep));
+        }
+        Ok(())
+    }
+
+    fn init_master(&mut self, x0: Vec<f32>) {
+        self.xref = x0;
+    }
+
+    fn refs(&self) -> Vec<&[f32]> {
+        vec![self.xref.as_slice()]
+    }
+
+    // consts(): the trait's default coupled-family constants.
+
+    fn master_update(&mut self, fabric: &ReduceFabric, _ctx: &RoundCtx) {
+        // (8d): x <- mean of replicas (or adopt the lone trajectory for
+        // the unreduced sequential algorithms)
+        if self.spec.reduce {
+            fabric.reduce_into(&mut self.xref);
         } else {
-            f64::NAN
-        },
-        phases: profiler.snapshot(),
-    };
-    Ok(TrainOutput {
-        record,
-        final_params: xref,
-    })
-}
-
-/// Batches per epoch under GLOBAL-dataset semantics: one epoch is one
-/// pass of the *whole* training set through the ensemble. Sharding (§5,
-/// `split_data`) divides the data between replicas but must not shrink
-/// the epoch — computing this from a shard's length would cut scoping's
-/// B and `total_rounds` by the replica count versus unsharded runs.
-pub fn epoch_batches(global_train_len: usize, batch: usize) -> usize {
-    (global_train_len / batch.max(1)).max(1)
-}
-
-/// Mean validation error of `params` over pre-built eval batches.
-///
-/// `params` — the P-sized vector, identical for every batch — is
-/// uploaded to the device exactly once per sweep; only the per-batch
-/// inputs cross the host boundary afterwards. (The old literal path
-/// re-marshalled all P floats on every batch.) Shared by the coupled,
-/// data-parallel and hierarchical drivers.
-pub fn evaluate(
-    session: &Session,
-    model: &str,
-    mm: &crate::runtime::ModelManifest,
-    params: &[f32],
-    batches: &[crate::data::batcher::Batch],
-) -> Result<f64> {
-    let p = mm.param_count;
-    let params_buf = session.upload(&lit_f32(params, &[p])?)?;
-    let mut err_count = 0.0f64;
-    let mut total = 0.0f64;
-    for b in batches {
-        let (xb, yb) = batch_literals(mm, b)?;
-        let xb_buf = session.upload(&xb)?;
-        let yb_buf = session.upload(&yb)?;
-        let outs = session.execute_buffers(
-            model,
-            "eval_chunk",
-            &[&params_buf, &xb_buf, &yb_buf],
-        )?;
-        let err = outs
-            .get(1)
-            .ok_or_else(|| anyhow::anyhow!("eval_chunk: missing error output"))?;
-        err_count +=
-            crate::runtime::scalar_f32(&session.download(err)?)? as f64;
-        total += (b.n * mm.labels_per_example()) as f64;
+            self.xref.copy_from_slice(fabric.report_params(0));
+        }
     }
-    Ok(err_count / total.max(1.0))
-}
 
-/// Augmentation policy per dataset tag (paper §4.2-§4.4: CIFAR gets
-/// flips+crops, MNIST and SVHN are raw).
-pub fn default_augment(dataset: &str) -> Augment {
-    match dataset {
-        "synth_cifar10" | "synth_cifar100" => Augment::cifar(),
-        _ => Augment::none(),
+    fn params(&self) -> &[f32] {
+        &self.xref
     }
-}
 
-/// Sequence length for LM models (0 for image models).
-pub fn lm_seq_len(mm: &crate::runtime::ModelManifest) -> usize {
-    if mm.label_shape.is_empty() {
-        0
-    } else {
-        mm.input_shape[0]
+    fn restore_state(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.xref.copy_from_slice(&ck.params);
+        Ok(())
+    }
+
+    fn into_params(self) -> Vec<f32> {
+        self.xref
     }
 }
 
@@ -291,26 +153,41 @@ pub fn lm_seq_len(mm: &crate::runtime::ModelManifest) -> usize {
 mod tests {
     use super::*;
 
-    /// Pins the `split_data` epoch semantics: B comes from the global
-    /// dataset, so sharding (which divides examples between replicas)
-    /// leaves scoping's B and `total_rounds` identical to unsharded
-    /// runs. Computing from a shard's length (the old behavior) would
-    /// shrink both by the replica count.
+    /// The strategy's accounting must match what `train_coupled`
+    /// hard-coded before the engine refactor.
     #[test]
-    fn epoch_batches_uses_the_global_dataset() {
-        let (global_len, batch, replicas) = (1000, 10, 4);
-        assert_eq!(epoch_batches(global_len, batch), 100);
-        let shard_len = global_len / replicas;
-        assert_eq!(epoch_batches(shard_len, batch), 25);
-        // degenerate guards
-        assert_eq!(epoch_batches(0, batch), 1);
-        assert_eq!(epoch_batches(7, 0), 7);
+    fn coupled_strategy_mirrors_the_legacy_driver() {
+        let mut cfg = RunConfig::new("mlp_synth", Algo::Parle);
+        cfg.replicas = 3;
+        cfg.l_steps = 25;
+        cfg.eval_every_rounds = 10;
+        let algo = CoupledAlgo::new(&cfg);
+        assert_eq!(algo.name(), "parle");
+        assert_eq!(algo.groups(), vec![0, 0, 0]);
+        assert!(algo.shards_data());
+        assert_eq!(algo.steps_per_round(), 25.0);
+        assert_eq!(algo.eval_every_rounds(), 10);
+        let mm_batch = 128;
+        // B from the GLOBAL dataset regardless of sharding
+        let mm = dummy_manifest(mm_batch);
+        assert_eq!(algo.batches_per_epoch(1024, &mm), 8);
     }
 
     #[test]
-    fn augment_policy() {
-        assert!(default_augment("synth_cifar10").mirror);
-        assert!(!default_augment("synth_mnist").mirror);
-        assert_eq!(default_augment("synth_svhn").crop_pad, 0);
+    fn master_params_track_init_and_restore() {
+        let cfg = RunConfig::new("mlp_synth", Algo::Parle);
+        let mut algo = CoupledAlgo::new(&cfg);
+        algo.init_master(vec![1.0, 2.0]);
+        assert_eq!(algo.params(), &[1.0, 2.0]);
+        assert_eq!(algo.refs().len(), 1);
+        let ck = Checkpoint::new("mlp_synth", vec![3.0, 4.0]);
+        // (params length is validated by the engine before restore)
+        algo.restore_state(&ck).unwrap();
+        assert_eq!(algo.params(), &[3.0, 4.0]);
+        assert_eq!(algo.into_params(), vec![3.0, 4.0]);
+    }
+
+    fn dummy_manifest(batch: usize) -> ModelManifest {
+        crate::runtime::artifact::test_manifest(batch)
     }
 }

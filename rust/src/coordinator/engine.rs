@@ -1,0 +1,1096 @@
+//! RoundEngine: the single owner of the training lifecycle.
+//!
+//! Every algorithm in this repo — Parle, Entropy-SGD, Elastic-SGD,
+//! plain SGD, synchronous data-parallel SGD, and the §3.2 hierarchy —
+//! is one communication-round loop: local steps on workers, a barrier,
+//! a master-side update, repeat. The engine owns everything that loop
+//! needs (master session, dataset build/shard, worker spawn onto the
+//! [`ReduceFabric`], scoping/LR schedules, eval cadence, curve and
+//! [`RunRecord`] assembly, profiler/meter wiring, checkpointing,
+//! shutdown); a [`RoundAlgo`] strategy owns only what distinguishes an
+//! algorithm (worker bodies, broadcast references, the master update,
+//! epoch accounting). `driver.rs`, `sgd_dp.rs` and `hierarchy.rs` are
+//! thin strategies over this engine.
+//!
+//! # Round-granular checkpoint/resume
+//!
+//! With `cfg.checkpoint_every_rounds > 0` the engine writes a
+//! [`Checkpoint`] at the matching round boundaries carrying the full
+//! training state: the next round index, master params + auxiliary
+//! vectors (`master.*` sections), every worker's persistent state
+//! (`w<id>.*` sections + `w<id>.batches_drawn` meta, gathered through
+//! the fabric's snapshot barrier), the scoping round counter, the
+//! partial curve (a `curve` f64 section, 5 values per point) and the
+//! accumulated wall/step/comm totals. `--resume <path>` restores all of
+//! it and continues the loop at the saved round; because worker RNG
+//! streams are replayed by draw count and every schedule is a pure
+//! function of the round index, a resumed run produces the same final
+//! params and curve as an uninterrupted one.
+//!
+//! # Overlapped evaluation
+//!
+//! Evaluation runs on a dedicated thread with its own PJRT session (one
+//! more "device", exactly like a replica): at an eval round the engine
+//! snapshots the master params and hands them over, then immediately
+//! broadcasts the next round — the validation sweep overlaps the next
+//! round's compute instead of extending the barrier. The
+//! [`PhaseProfiler`] splits the cost: `eval` is the sweep's thread
+//! time (overlapped), `eval_exposed` is the wall time the master
+//! actually spent blocked waiting for a result (at drain points, or
+//! when a sweep outlives a round). `cfg.overlap_eval = false` keeps the
+//! old blocking behaviour (the two modes produce identical records up
+//! to wall-clock).
+
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{RunConfig, ScopingCfg};
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::comm::{ReduceFabric, RoundConsts, WorkerState};
+use crate::data::batcher::{Augment, Batch, Batcher};
+use crate::data::{build, split_shards, Dataset};
+use crate::info;
+use crate::metrics::{Curve, CurvePoint, RunRecord};
+use crate::opt::Scoping;
+use crate::runtime::{lit_f32, ModelManifest, Session};
+use crate::util::timer::{PhaseProfiler, Timer};
+
+/// Result of a training run: record + final parameters.
+pub struct TrainOutput {
+    pub record: RunRecord,
+    pub final_params: Vec<f32>,
+}
+
+/// Per-round values the engine computes for the strategy.
+pub struct RoundCtx<'a> {
+    pub round: u64,
+    pub lr: f32,
+    pub scoping: &'a Scoping,
+}
+
+/// What distinguishes one algorithm from another under the engine: the
+/// master-side state, the worker bodies, and the per-round update.
+/// Everything else — the lifecycle — is the engine's.
+pub trait RoundAlgo {
+    /// Algorithm label recorded in [`RunRecord::algo`].
+    fn name(&self) -> String;
+
+    /// Replica -> broadcast-group map; its length is the worker count.
+    fn groups(&self) -> Vec<usize>;
+
+    /// Whether `cfg.split_data` shards the training set across workers
+    /// (the hierarchy keeps the set shared).
+    fn shards_data(&self) -> bool {
+        true
+    }
+
+    /// Minibatches per epoch (B in the scoping schedule (9)).
+    fn batches_per_epoch(&self, train_len: usize, mm: &ModelManifest)
+                         -> usize;
+
+    /// Epoch advance per communication round, in minibatches (L for the
+    /// coupled algorithms, 1 for gradient averaging).
+    fn steps_per_round(&self) -> f64;
+
+    /// Eval cadence in rounds (0 = only at the end).
+    fn eval_every_rounds(&self) -> u64;
+
+    /// Spawn one worker body per fabric slot; `datasets[w]` is worker
+    /// w's (possibly sharded) training set.
+    fn spawn_workers(
+        &self,
+        fabric: &mut ReduceFabric,
+        datasets: &[Arc<Dataset>],
+        augment: Augment,
+    ) -> Result<()>;
+
+    /// Install the seed initialization as the master state.
+    fn init_master(&mut self, x0: Vec<f32>);
+
+    /// Per-group broadcast references for the coming round.
+    fn refs(&self) -> Vec<&[f32]>;
+
+    /// Broadcast constants for the coming round: the annealed
+    /// coupled-family constants by default (every strategy that uses
+    /// scoping broadcasts exactly these); strategies without coupling
+    /// override.
+    fn consts(&self, ctx: &RoundCtx) -> RoundConsts {
+        RoundConsts {
+            lr: ctx.lr,
+            gamma_inv: ctx.scoping.gamma_inv(),
+            rho_inv: ctx.scoping.rho_inv(),
+            eta_over_rho: ctx.lr * ctx.scoping.rho_inv(),
+        }
+    }
+
+    /// The master-side update after the barrier (the profiler's
+    /// `reduce` phase): consume the fabric's collected reports.
+    fn master_update(&mut self, fabric: &ReduceFabric, ctx: &RoundCtx);
+
+    /// Current master parameters (evaluation + checkpoint snapshot).
+    fn params(&self) -> &[f32];
+
+    /// Auxiliary master state beyond [`RoundAlgo::params`], checkpointed
+    /// under `master.<name>` sections.
+    fn state_vecs(&self) -> Vec<(String, Vec<f32>)> {
+        Vec::new()
+    }
+
+    /// Restore master state from a checkpoint (params + `master.*`
+    /// sections; see [`master_vec`]). The engine has already verified
+    /// `ck.params.len()` against [`RoundAlgo::params`].
+    fn restore_state(&mut self, ck: &Checkpoint) -> Result<()>;
+
+    /// Consume the strategy, yielding the final parameters.
+    fn into_params(self) -> Vec<f32>
+    where
+        Self: Sized;
+}
+
+/// The engine itself: one run = `RoundEngine::new(cfg, label).run(algo)`.
+pub struct RoundEngine<'a> {
+    cfg: &'a RunConfig,
+    label: &'a str,
+}
+
+impl<'a> RoundEngine<'a> {
+    pub fn new(cfg: &'a RunConfig, label: &'a str) -> Self {
+        RoundEngine { cfg, label }
+    }
+
+    /// Run the full lifecycle with `algo` supplying the algorithm.
+    pub fn run<A: RoundAlgo>(self, mut algo: A) -> Result<TrainOutput> {
+        let cfg = self.cfg;
+        let label = self.label;
+        let profiler = Arc::new(PhaseProfiler::new());
+
+        // --- master session + data ---------------------------------------
+        let master = Session::open(&cfg.artifacts_dir)?;
+        let mm = master.manifest.model(&cfg.model)?.clone();
+        let (train_ds, val_ds) = build(&mm.dataset, &cfg.data)?;
+        let augment = default_augment(&mm.dataset);
+        // Epoch accounting is pinned to the GLOBAL dataset length before
+        // any sharding: see `epoch_batches`.
+        let train_len = train_ds.len();
+
+        let groups = algo.groups();
+        let n_workers = groups.len();
+
+        let datasets: Vec<Arc<Dataset>> =
+            if cfg.split_data && algo.shards_data() {
+                match &train_ds {
+                    Dataset::Image(img) => {
+                        split_shards(img, n_workers, cfg.seed)
+                            .into_iter()
+                            .map(|s| Arc::new(Dataset::Image(s)))
+                            .collect()
+                    }
+                    Dataset::Corpus(_) => {
+                        bail!("split_data needs an image dataset")
+                    }
+                }
+            } else {
+                let shared = Arc::new(train_ds);
+                (0..n_workers).map(|_| shared.clone()).collect()
+            };
+
+        let b = algo.batches_per_epoch(train_len, &mm);
+        let spr = algo.steps_per_round();
+        let total_rounds = total_rounds(cfg.epochs, b, spr);
+        let eval_every = algo.eval_every_rounds();
+
+        let mut scoping = match cfg.scoping {
+            ScopingCfg::Paper => Scoping::paper(b),
+            ScopingCfg::Constant { gamma, rho } => {
+                Scoping::constant(gamma, rho)
+            }
+        };
+
+        // --- workers onto the fabric -------------------------------------
+        let mut fabric = ReduceFabric::new(groups, cfg.comm);
+        let meter = fabric.meter();
+        algo.spawn_workers(&mut fabric, &datasets, augment)?;
+
+        // --- master init (same artifact + seed for every algorithm) ------
+        let init = master.execute(
+            &cfg.model,
+            "init",
+            &[crate::runtime::lit_scalar_i32(
+                crate::util::rng::fold_seed_i32(cfg.seed),
+            )],
+        )?;
+        algo.init_master(crate::runtime::to_f32(&init[0])?);
+
+        let eval_batches = Batcher::new(
+            &val_ds,
+            mm.batch,
+            lm_seq_len(&mm),
+            Augment::none(),
+            cfg.seed,
+            0xe,
+        )
+        .eval_batches();
+
+        // --- resume -------------------------------------------------------
+        let mut curve = Curve::new();
+        let mut start_round = 0u64;
+        let mut wall_offset = 0.0f64;
+        let mut step_seconds = 0.0f64;
+        let mut comm_offset = 0u64;
+        let mut last_train = (f64::NAN, f64::NAN);
+        if let Some(path) = &cfg.resume_from {
+            let ck = Checkpoint::load(path).with_context(|| {
+                format!("loading resume checkpoint {path}")
+            })?;
+            if ck.model != cfg.model {
+                bail!(
+                    "checkpoint model {:?} != run model {:?}",
+                    ck.model,
+                    cfg.model
+                );
+            }
+            let ck_workers = ck.require_meta("workers")? as usize;
+            if ck_workers != n_workers {
+                bail!(
+                    "checkpoint has {ck_workers} workers, run has \
+                     {n_workers}"
+                );
+            }
+            // seed / algorithm / L determine worker RNG streams and the
+            // round structure: resuming under different ones would
+            // continue from inconsistent state with no error
+            let ck_seed = ((ck.require_meta("seed_hi")? as u64) << 32)
+                | (ck.require_meta("seed_lo")? as u64);
+            if ck_seed != cfg.seed {
+                bail!(
+                    "checkpoint was written with seed {ck_seed}, run has \
+                     seed {}",
+                    cfg.seed
+                );
+            }
+            let ck_l = ck.require_meta("l_steps")? as usize;
+            if ck_l != cfg.l_steps {
+                bail!(
+                    "checkpoint was written with l_steps {ck_l}, run has \
+                     {}",
+                    cfg.l_steps
+                );
+            }
+            let ck_fp = ((ck.require_meta("cfg_hi")? as u64) << 32)
+                | (ck.require_meta("cfg_lo")? as u64);
+            if ck_fp != cfg.replay_fingerprint() {
+                bail!(
+                    "checkpoint was written under different replay-\
+                     relevant config (data/schedule/hyperparameters/\
+                     dispatch mode) — resuming would silently diverge \
+                     from the checkpointed run"
+                );
+            }
+            let algo_tag = format!("algo.{}", algo.name());
+            if ck.vec_f32(&algo_tag).is_none() {
+                bail!(
+                    "checkpoint algorithm does not match this run's \
+                     {:?} (checkpoint tags: {:?})",
+                    algo.name(),
+                    ck.vecs_f32
+                        .iter()
+                        .filter_map(|(k, _)| k.strip_prefix("algo."))
+                        .collect::<Vec<_>>()
+                );
+            }
+            start_round = ck.require_meta("round")? as u64;
+            if start_round > total_rounds {
+                bail!(
+                    "checkpoint round {start_round} is beyond this run's \
+                     {total_rounds} rounds"
+                );
+            }
+            scoping.set_rounds(ck.require_meta("scoping_rounds")? as u64);
+            wall_offset = ck.meta_value("wall_s").unwrap_or(0.0);
+            step_seconds = ck.meta_value("step_seconds").unwrap_or(0.0);
+            comm_offset = ck.meta_value("comm_bytes").unwrap_or(0.0) as u64;
+            last_train = (
+                ck.meta_value("train_loss").unwrap_or(f64::NAN),
+                ck.meta_value("train_err").unwrap_or(f64::NAN),
+            );
+            curve = curve_from_f64(ck.vec_f64("curve").unwrap_or(&[]))?;
+            // phase totals continue cumulatively, so the final record's
+            // comm_ratio and phases cover the whole run, not just the
+            // post-resume segment
+            restore_phases(&profiler, &ck);
+            if ck.params.len() != algo.params().len() {
+                bail!(
+                    "checkpoint has {} params, model has {}",
+                    ck.params.len(),
+                    algo.params().len()
+                );
+            }
+            algo.restore_state(&ck)?;
+            fabric.restore_workers(unpack_worker_states(
+                &ck,
+                n_workers,
+                algo.params().len(),
+            )?)?;
+            // RoundMsg.round feeds per-step seeds: stamp global indices
+            fabric.set_round(start_round);
+            info!(
+                "{label} resuming at round {start_round}/{total_rounds} \
+                 from {path}"
+            );
+        }
+
+        // The run's wall clock starts here; the overlapped evaluator
+        // shares it so curve points are stamped when a sweep completes,
+        // not when the master harvests the result a round later.
+        let wall = Timer::new();
+        // With eval_every == 0 the only sweep is the final one, which
+        // is drained immediately — no overlap is possible, so don't pay
+        // a second session/thread for it.
+        let mut evaluator = if cfg.overlap_eval && eval_every > 0 {
+            drop(master); // eval thread opens its own session
+            Evaluator::overlapped(
+                cfg,
+                eval_batches,
+                profiler.clone(),
+                wall.started_at(),
+                wall_offset,
+            )
+        } else {
+            Evaluator::inline(
+                master,
+                cfg.model.clone(),
+                mm.clone(),
+                eval_batches,
+                profiler.clone(),
+            )
+        };
+
+        // --- round loop ---------------------------------------------------
+        for round in start_round..total_rounds {
+            let epoch = round as f64 * spr / b as f64;
+            let lr = cfg.lr.at(epoch);
+            let ctx = RoundCtx {
+                round,
+                lr,
+                scoping: &scoping,
+            };
+            {
+                let refs = algo.refs();
+                fabric.broadcast(algo.consts(&ctx), &refs);
+            }
+            // barrier = synchronous reduce, like the paper
+            let stats = fabric.collect()?;
+            step_seconds += stats.max_step_s;
+            last_train = (stats.mean_loss, stats.mean_err);
+
+            profiler.scope("reduce", || algo.master_update(&fabric, &ctx));
+            scoping.step();
+
+            let is_last = round + 1 == total_rounds;
+            if is_last || eval_due(round, eval_every) {
+                let pending = Pending {
+                    round,
+                    total_rounds,
+                    lr,
+                    gamma: scoping.gamma(),
+                    rho: scoping.rho(),
+                    // end-of-round epoch, identical across strategies so
+                    // curves are comparable
+                    epoch: epoch + spr / b as f64,
+                    train_loss: last_train.0,
+                    train_err: last_train.1,
+                };
+                evaluator.request(
+                    algo.params(),
+                    pending,
+                    &mut curve,
+                    &wall,
+                    wall_offset,
+                    label,
+                )?;
+            }
+
+            if cfg.checkpoint_every_rounds > 0
+                && (round + 1) % cfg.checkpoint_every_rounds as u64 == 0
+            {
+                // the checkpoint must carry the curve up to this round
+                evaluator.drain(&mut curve, label)?;
+                let path = checkpoint_path(cfg, label, round + 1);
+                write_checkpoint(
+                    &path,
+                    cfg,
+                    &algo,
+                    &fabric,
+                    CkState {
+                        next_round: round + 1,
+                        scoping_rounds: scoping.rounds(),
+                        wall_s: wall_offset + wall.elapsed_s(),
+                        step_seconds,
+                        comm_bytes: comm_offset + meter.bytes(),
+                        last_train,
+                        curve: &curve,
+                        phases: profiler.snapshot(),
+                    },
+                )?;
+                info!("{label} checkpoint round {} -> {path}", round + 1);
+            }
+        }
+
+        // --- shutdown -----------------------------------------------------
+        evaluator.drain(&mut curve, label)?;
+        evaluator.shutdown()?;
+        fabric.shutdown()?;
+
+        let wall_s = wall_offset + wall.elapsed_s();
+        let comm_s = profiler.total("reduce");
+        let last = curve.last().copied().unwrap_or(CurvePoint {
+            wall_s,
+            epoch: cfg.epochs,
+            train_loss: last_train.0,
+            train_err: last_train.1,
+            val_err: f64::NAN,
+        });
+        let record = RunRecord {
+            label: label.to_string(),
+            model: cfg.model.clone(),
+            algo: algo.name(),
+            replicas: n_workers,
+            curve,
+            wall_s,
+            final_val_err: last.val_err,
+            final_train_err: last.train_err,
+            final_train_loss: last.train_loss,
+            comm_bytes: comm_offset + meter.bytes(),
+            comm_ratio: if step_seconds > 0.0 {
+                comm_s / step_seconds
+            } else {
+                f64::NAN
+            },
+            phases: profiler.snapshot(),
+        };
+        Ok(TrainOutput {
+            record,
+            final_params: algo.into_params(),
+        })
+    }
+}
+
+/// Total communication rounds for a run (pre-refactor formula, shared
+/// by every strategy): `ceil(epochs * B / steps_per_round)`, at least 1.
+pub fn total_rounds(epochs: f64, batches_per_epoch: usize,
+                    steps_per_round: f64) -> u64 {
+    ((epochs * batches_per_epoch as f64 / steps_per_round).ceil() as u64)
+        .max(1)
+}
+
+/// Whether round `round` (0-based) is on the eval cadence (the final
+/// round always evaluates, handled separately).
+pub fn eval_due(round: u64, eval_every: u64) -> bool {
+    eval_every > 0 && (round + 1) % eval_every == 0
+}
+
+/// Destination for the checkpoint written after round `round` (1-based):
+/// `cfg.checkpoint_path` with any `{round}` placeholder substituted, or
+/// `checkpoints/<label>.ck` when unset.
+pub fn checkpoint_path(cfg: &RunConfig, label: &str, round: u64) -> String {
+    let base = cfg.checkpoint_path.clone().unwrap_or_else(|| {
+        format!("checkpoints/{}.ck", label.replace('/', "_"))
+    });
+    base.replace("{round}", &round.to_string())
+}
+
+/// Auxiliary master vector `master.<name>` from a checkpoint (the
+/// counterpart of [`RoundAlgo::state_vecs`] for
+/// [`RoundAlgo::restore_state`] implementations).
+pub fn master_vec<'c>(ck: &'c Checkpoint, name: &str) -> Result<&'c [f32]> {
+    ck.vec_f32(&format!("master.{name}")).ok_or_else(|| {
+        anyhow::anyhow!("checkpoint missing master vector {name:?}")
+    })
+}
+
+/// Snapshot of the run's accumulated totals for a checkpoint write.
+struct CkState<'a> {
+    next_round: u64,
+    scoping_rounds: u64,
+    wall_s: f64,
+    step_seconds: f64,
+    comm_bytes: u64,
+    last_train: (f64, f64),
+    curve: &'a Curve,
+    phases: std::collections::BTreeMap<String, (f64, u64)>,
+}
+
+/// Merge checkpointed phase totals back into the profiler (resume):
+/// keys are `phase.<name>.s` / `phase.<name>.n` meta pairs.
+fn restore_phases(profiler: &PhaseProfiler, ck: &Checkpoint) {
+    for (k, v) in &ck.meta {
+        if let Some(name) = k
+            .strip_prefix("phase.")
+            .and_then(|rest| rest.strip_suffix(".s"))
+        {
+            let calls = ck
+                .meta_value(&format!("phase.{name}.n"))
+                .unwrap_or(0.0) as u64;
+            profiler.add_many(name, *v, calls);
+        }
+    }
+}
+
+fn write_checkpoint<A: RoundAlgo>(
+    path: &str,
+    cfg: &RunConfig,
+    algo: &A,
+    fabric: &ReduceFabric,
+    st: CkState,
+) -> Result<()> {
+    let states = fabric.snapshot_workers()?;
+    let fp = cfg.replay_fingerprint();
+    let mut ck = Checkpoint::new(&cfg.model, algo.params().to_vec())
+        .with("round", st.next_round as f64)
+        .with("scoping_rounds", st.scoping_rounds as f64)
+        .with("wall_s", st.wall_s)
+        .with("step_seconds", st.step_seconds)
+        .with("comm_bytes", st.comm_bytes as f64)
+        .with("train_loss", st.last_train.0)
+        .with("train_err", st.last_train.1)
+        .with("workers", states.len() as f64)
+        // resume-compatibility stamp: u64 seed split into exact f64
+        // halves, the round structure, and the algorithm tag
+        .with("seed_lo", (cfg.seed & 0xffff_ffff) as f64)
+        .with("seed_hi", (cfg.seed >> 32) as f64)
+        .with("l_steps", cfg.l_steps as f64)
+        .with("cfg_lo", (fp & 0xffff_ffff) as f64)
+        .with("cfg_hi", (fp >> 32) as f64)
+        .with_vec_f32(&format!("algo.{}", algo.name()), Vec::new())
+        .with_vec_f64("curve", curve_to_f64(st.curve));
+    for (name, (s, n)) in &st.phases {
+        ck = ck
+            .with(&format!("phase.{name}.s"), *s)
+            .with(&format!("phase.{name}.n"), *n as f64);
+    }
+    for (name, v) in algo.state_vecs() {
+        ck = ck.with_vec_f32(&format!("master.{name}"), v);
+    }
+    for ws in states {
+        ck = ck.with(
+            &format!("w{}.batches_drawn", ws.replica),
+            ws.batches_drawn as f64,
+        );
+        for (name, v) in ws.vecs {
+            ck = ck.with_vec_f32(&format!("w{}.{}", ws.replica, name), v);
+        }
+    }
+    ck.save_atomic(path)
+        .with_context(|| format!("writing checkpoint {path}"))
+}
+
+/// Rebuild every worker's [`WorkerState`] from the `w<id>.*` checkpoint
+/// sections. Vector lengths are validated against the model's param
+/// count here, on the master, so a mangled checkpoint fails fast with
+/// the real cause instead of killing a worker thread mid-restore (whose
+/// error would only surface as "replica died mid-round" at the next
+/// collect). Every current strategy persists only P-sized worker
+/// vectors; a future strategy with differently-sized worker state
+/// should move this invariant into the trait (e.g. a
+/// `worker_vec_len(name)` hook) rather than delete the check.
+fn unpack_worker_states(ck: &Checkpoint, n_workers: usize, p: usize)
+                        -> Result<Vec<WorkerState>> {
+    (0..n_workers)
+        .map(|w| {
+            let prefix = format!("w{w}.");
+            let vecs: Vec<(String, Vec<f32>)> = ck
+                .vecs_f32
+                .iter()
+                .filter(|(k, _)| k.starts_with(&prefix))
+                .map(|(k, v)| (k[prefix.len()..].to_string(), v.clone()))
+                .collect();
+            for (name, v) in &vecs {
+                if v.len() != p {
+                    bail!(
+                        "checkpoint worker vector w{w}.{name} has {} \
+                         params, model has {p}",
+                        v.len()
+                    );
+                }
+            }
+            let batches_drawn =
+                ck.require_meta(&format!("w{w}.batches_drawn"))? as u64;
+            Ok(WorkerState {
+                replica: w,
+                vecs,
+                batches_drawn,
+            })
+        })
+        .collect()
+}
+
+fn curve_to_f64(curve: &Curve) -> Vec<f64> {
+    curve
+        .points
+        .iter()
+        .flat_map(|p| {
+            [p.wall_s, p.epoch, p.train_loss, p.train_err, p.val_err]
+        })
+        .collect()
+}
+
+fn curve_from_f64(v: &[f64]) -> Result<Curve> {
+    if v.len() % 5 != 0 {
+        bail!("corrupt checkpoint curve: {} values", v.len());
+    }
+    let mut curve = Curve::new();
+    for c in v.chunks_exact(5) {
+        curve.push(CurvePoint {
+            wall_s: c[0],
+            epoch: c[1],
+            train_loss: c[2],
+            train_err: c[3],
+            val_err: c[4],
+        });
+    }
+    Ok(curve)
+}
+
+// ---------------------------------------------------------------------------
+// evaluation
+// ---------------------------------------------------------------------------
+
+/// Metadata of an in-flight evaluation: everything the curve point and
+/// the log line need besides the val error itself.
+struct Pending {
+    round: u64,
+    total_rounds: u64,
+    lr: f32,
+    /// Scoping values after this round's anneal step (what the legacy
+    /// coupled driver logged).
+    gamma: f32,
+    rho: f32,
+    epoch: f64,
+    train_loss: f64,
+    train_err: f64,
+}
+
+enum EvalMode {
+    /// Evaluate on the master thread (inside the round barrier).
+    Inline {
+        session: Session,
+        model: String,
+        mm: ModelManifest,
+        batches: Vec<Batch>,
+    },
+    /// Dedicated eval thread + session; sweeps overlap the next round.
+    /// Results arrive as `(val_err, wall_s at sweep completion)` so the
+    /// curve point carries the time the evaluation actually finished,
+    /// not the (up to one eval interval later) harvest time.
+    Overlap {
+        req_tx: mpsc::Sender<Vec<f32>>,
+        res_rx: mpsc::Receiver<(f64, f64)>,
+        handle: Option<JoinHandle<Result<()>>>,
+    },
+}
+
+struct Evaluator {
+    mode: EvalMode,
+    pending: Option<Pending>,
+    profiler: Arc<PhaseProfiler>,
+}
+
+impl Evaluator {
+    fn inline(
+        session: Session,
+        model: String,
+        mm: ModelManifest,
+        batches: Vec<Batch>,
+        profiler: Arc<PhaseProfiler>,
+    ) -> Self {
+        Evaluator {
+            mode: EvalMode::Inline {
+                session,
+                model,
+                mm,
+                batches,
+            },
+            pending: None,
+            profiler,
+        }
+    }
+
+    fn overlapped(
+        cfg: &RunConfig,
+        batches: Vec<Batch>,
+        profiler: Arc<PhaseProfiler>,
+        wall_start: std::time::Instant,
+        wall_offset: f64,
+    ) -> Self {
+        let (req_tx, req_rx) = mpsc::channel::<Vec<f32>>();
+        let (res_tx, res_rx) = mpsc::channel::<(f64, f64)>();
+        let dir = cfg.artifacts_dir.clone();
+        let model = cfg.model.clone();
+        let prof = profiler.clone();
+        // PJRT sessions are not Send: the thread opens its own.
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let session =
+                Session::open(&dir).context("eval thread session")?;
+            let mm = session.manifest.model(&model)?.clone();
+            while let Ok(params) = req_rx.recv() {
+                let t = Timer::new();
+                let val = evaluate(&session, &model, &mm, &params, &batches)?;
+                prof.add("eval", t.elapsed_s());
+                let wall_s =
+                    wall_offset + wall_start.elapsed().as_secs_f64();
+                if res_tx.send((val, wall_s)).is_err() {
+                    break;
+                }
+            }
+            Ok(())
+        });
+        Evaluator {
+            mode: EvalMode::Overlap {
+                req_tx,
+                res_rx,
+                handle: Some(handle),
+            },
+            pending: None,
+            profiler,
+        }
+    }
+
+    /// Evaluate `params` for the round described by `p`. Inline mode
+    /// blocks and pushes the curve point now; overlapped mode first
+    /// harvests any still-pending sweep (that wait is the `eval_exposed`
+    /// phase), then dispatches this one and returns immediately.
+    fn request(
+        &mut self,
+        params: &[f32],
+        p: Pending,
+        curve: &mut Curve,
+        wall: &Timer,
+        wall_offset: f64,
+        label: &str,
+    ) -> Result<()> {
+        match &mut self.mode {
+            EvalMode::Inline {
+                session,
+                model,
+                mm,
+                batches,
+            } => {
+                let val = self.profiler.scope("eval", || {
+                    evaluate(session, model, mm, params, batches)
+                })?;
+                push_point(curve, &p, val, wall_offset + wall.elapsed_s(),
+                           label);
+            }
+            EvalMode::Overlap {
+                req_tx,
+                res_rx,
+                handle,
+            } => {
+                if let Some(prev) = self.pending.take() {
+                    harvest(&self.profiler, res_rx, handle, prev, curve,
+                            label)?;
+                }
+                if req_tx.send(params.to_vec()).is_err() {
+                    return Err(eval_thread_error(handle));
+                }
+                self.pending = Some(p);
+            }
+        }
+        Ok(())
+    }
+
+    /// Block until no evaluation is in flight, pushing its curve point
+    /// (stamped with the sweep's completion time).
+    fn drain(&mut self, curve: &mut Curve, label: &str) -> Result<()> {
+        if let Some(prev) = self.pending.take() {
+            if let EvalMode::Overlap {
+                res_rx, handle, ..
+            } = &mut self.mode
+            {
+                harvest(&self.profiler, res_rx, handle, prev, curve,
+                        label)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Stop the eval thread (if any) and surface its error, if it died.
+    fn shutdown(self) -> Result<()> {
+        if let EvalMode::Overlap {
+            req_tx,
+            handle,
+            ..
+        } = self.mode
+        {
+            drop(req_tx);
+            if let Some(h) = handle {
+                match h.join() {
+                    Ok(r) => r?,
+                    Err(_) => bail!("eval thread panicked"),
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Receive one pending sweep's result — the exposed wait the profiler
+/// charges to `eval_exposed` — and push its curve point, stamped with
+/// the sweep's completion time. Shared by round-time harvests
+/// ([`Evaluator::request`]) and checkpoint/shutdown drains
+/// ([`Evaluator::drain`]) so the two paths cannot diverge.
+fn harvest(
+    profiler: &PhaseProfiler,
+    res_rx: &mpsc::Receiver<(f64, f64)>,
+    handle: &mut Option<JoinHandle<Result<()>>>,
+    prev: Pending,
+    curve: &mut Curve,
+    label: &str,
+) -> Result<()> {
+    let (val, at) = match profiler.scope("eval_exposed", || res_rx.recv())
+    {
+        Ok(v) => v,
+        Err(_) => return Err(eval_thread_error(handle)),
+    };
+    push_point(curve, &prev, val, at, label);
+    Ok(())
+}
+
+/// The eval thread hung up mid-run: join it so the error the user sees
+/// is the thread's root cause (artifact failure, session error), not a
+/// bare closed-channel message.
+fn eval_thread_error(handle: &mut Option<JoinHandle<Result<()>>>)
+                     -> anyhow::Error {
+    match handle.take() {
+        Some(h) => match h.join() {
+            Ok(Ok(())) => {
+                anyhow::anyhow!("eval thread exited unexpectedly")
+            }
+            Ok(Err(e)) => e.context("eval thread failed"),
+            Err(_) => anyhow::anyhow!("eval thread panicked"),
+        },
+        None => anyhow::anyhow!("eval thread died"),
+    }
+}
+
+fn push_point(curve: &mut Curve, p: &Pending, val_err: f64, wall_s: f64,
+              label: &str) {
+    curve.push(CurvePoint {
+        wall_s,
+        epoch: p.epoch,
+        train_loss: p.train_loss,
+        train_err: p.train_err,
+        val_err,
+    });
+    info!(
+        "{label} round {}/{} epoch {:.2} lr {:.4} γ {:.2} ρ {:.3} \
+         train {:.3}/{:.1}% val {:.2}%",
+        p.round + 1,
+        p.total_rounds,
+        p.epoch,
+        p.lr,
+        p.gamma,
+        p.rho,
+        p.train_loss,
+        p.train_err * 100.0,
+        val_err * 100.0
+    );
+}
+
+// ---------------------------------------------------------------------------
+// shared helpers (used by every strategy; re-exported through driver.rs)
+// ---------------------------------------------------------------------------
+
+/// Batches per epoch under GLOBAL-dataset semantics: one epoch is one
+/// pass of the *whole* training set through the ensemble. Sharding (§5,
+/// `split_data`) divides the data between replicas but must not shrink
+/// the epoch — computing this from a shard's length would cut scoping's
+/// B and `total_rounds` by the replica count versus unsharded runs.
+pub fn epoch_batches(global_train_len: usize, batch: usize) -> usize {
+    (global_train_len / batch.max(1)).max(1)
+}
+
+/// Mean validation error of `params` over pre-built eval batches.
+///
+/// `params` — the P-sized vector, identical for every batch — is
+/// uploaded to the device exactly once per sweep; only the per-batch
+/// inputs cross the host boundary afterwards. (The old literal path
+/// re-marshalled all P floats on every batch.) Shared by every strategy
+/// and by the engine's eval thread.
+pub fn evaluate(
+    session: &Session,
+    model: &str,
+    mm: &ModelManifest,
+    params: &[f32],
+    batches: &[Batch],
+) -> Result<f64> {
+    let p = mm.param_count;
+    let params_buf = session.upload(&lit_f32(params, &[p])?)?;
+    let mut err_count = 0.0f64;
+    let mut total = 0.0f64;
+    for b in batches {
+        let (xb, yb) = crate::coordinator::replica::batch_literals(mm, b)?;
+        let xb_buf = session.upload(&xb)?;
+        let yb_buf = session.upload(&yb)?;
+        let outs = session.execute_buffers(
+            model,
+            "eval_chunk",
+            &[&params_buf, &xb_buf, &yb_buf],
+        )?;
+        let err = outs.get(1).ok_or_else(|| {
+            anyhow::anyhow!("eval_chunk: missing error output")
+        })?;
+        err_count +=
+            crate::runtime::scalar_f32(&session.download(err)?)? as f64;
+        total += (b.n * mm.labels_per_example()) as f64;
+    }
+    Ok(err_count / total.max(1.0))
+}
+
+/// Augmentation policy per dataset tag (paper §4.2-§4.4: CIFAR gets
+/// flips+crops, MNIST and SVHN are raw).
+pub fn default_augment(dataset: &str) -> Augment {
+    match dataset {
+        "synth_cifar10" | "synth_cifar100" => Augment::cifar(),
+        _ => Augment::none(),
+    }
+}
+
+/// Sequence length for LM models (0 for image models).
+pub fn lm_seq_len(mm: &ModelManifest) -> usize {
+    if mm.label_shape.is_empty() {
+        0
+    } else {
+        mm.input_shape[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pins the `split_data` epoch semantics: B comes from the global
+    /// dataset, so sharding (which divides examples between replicas)
+    /// leaves scoping's B and `total_rounds` identical to unsharded
+    /// runs. Computing from a shard's length (the old behavior) would
+    /// shrink both by the replica count.
+    #[test]
+    fn epoch_batches_uses_the_global_dataset() {
+        let (global_len, batch, replicas) = (1000, 10, 4);
+        assert_eq!(epoch_batches(global_len, batch), 100);
+        let shard_len = global_len / replicas;
+        assert_eq!(epoch_batches(shard_len, batch), 25);
+        // degenerate guards
+        assert_eq!(epoch_batches(0, batch), 1);
+        assert_eq!(epoch_batches(7, 0), 7);
+    }
+
+    #[test]
+    fn augment_policy() {
+        assert!(default_augment("synth_cifar10").mirror);
+        assert!(!default_augment("synth_mnist").mirror);
+        assert_eq!(default_augment("synth_svhn").crop_pad, 0);
+    }
+
+    /// The round/eval accounting the three pre-refactor drivers each
+    /// computed by hand, pinned to their exact values.
+    #[test]
+    fn round_and_eval_cadence_match_the_legacy_drivers() {
+        // coupled: ceil(epochs * B / L)
+        assert_eq!(total_rounds(6.0, 8, 2.0), 24);
+        // data-parallel: one round per aggregate minibatch
+        assert_eq!(total_rounds(6.0, 8, 1.0), 48);
+        // fractional epochs round up; floor at one round
+        assert_eq!(total_rounds(0.5, 8, 25.0), 1);
+        assert_eq!(total_rounds(0.0, 8, 1.0), 1);
+        // eval every 4 rounds fires at rounds 3, 7, ... (0-based)
+        assert!(!eval_due(2, 4));
+        assert!(eval_due(3, 4));
+        assert!(!eval_due(4, 4));
+        // 0 disables the cadence entirely
+        assert!(!eval_due(3, 0));
+    }
+
+    #[test]
+    fn checkpoint_path_templating() {
+        let mut cfg = RunConfig::new("mlp_synth", crate::config::Algo::Parle);
+        assert_eq!(
+            checkpoint_path(&cfg, "a/b", 7),
+            "checkpoints/a_b.ck"
+        );
+        cfg.checkpoint_path = Some("out/ck_{round}.ck".into());
+        assert_eq!(checkpoint_path(&cfg, "x", 12), "out/ck_12.ck");
+    }
+
+    #[test]
+    fn curve_f64_roundtrip_is_bit_exact() {
+        let mut c = Curve::new();
+        for i in 0..3 {
+            c.push(CurvePoint {
+                wall_s: i as f64 + 0.125,
+                epoch: i as f64 * 0.5,
+                train_loss: 1.0 / (i + 1) as f64,
+                train_err: f64::NAN,
+                val_err: 0.25,
+            });
+        }
+        let back = curve_from_f64(&curve_to_f64(&c)).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in c.points.iter().zip(&back.points) {
+            assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits());
+            assert_eq!(a.train_err.to_bits(), b.train_err.to_bits());
+        }
+        assert!(curve_from_f64(&[1.0, 2.0]).is_err());
+    }
+
+    /// Resumed records must report whole-run phase accounting: the
+    /// checkpointed totals merge into the fresh profiler, so comm_ratio
+    /// (reduce seconds / step seconds, both cumulative) stays honest.
+    #[test]
+    fn checkpointed_phase_totals_merge_on_resume() {
+        let ck = Checkpoint::new("m", vec![])
+            .with("phase.reduce.s", 12.5)
+            .with("phase.reduce.n", 100.0)
+            .with("phase.eval.s", 3.0)
+            .with("phase.eval.n", 10.0)
+            .with("unrelated", 1.0);
+        let profiler = PhaseProfiler::new();
+        profiler.add("reduce", 0.5);
+        restore_phases(&profiler, &ck);
+        assert_eq!(profiler.snapshot()["reduce"], (13.0, 101));
+        assert_eq!(profiler.snapshot()["eval"], (3.0, 10));
+        assert!(!profiler.snapshot().contains_key("unrelated"));
+    }
+
+    /// Worker states written by `write_checkpoint`'s key layout come
+    /// back intact, including at double-digit worker ids (w1 must not
+    /// swallow w12's sections).
+    #[test]
+    fn worker_state_pack_unpack_roundtrip() {
+        let n = 13;
+        let mut ck = Checkpoint::new("m", vec![]).with("workers", n as f64);
+        for w in 0..n {
+            ck = ck.with(&format!("w{w}.batches_drawn"), (w * 10) as f64);
+            ck = ck
+                .with_vec_f32(&format!("w{w}.y"), vec![w as f32; 3])
+                .with_vec_f32(&format!("w{w}.mom"), vec![-(w as f32); 3]);
+        }
+        let states = unpack_worker_states(&ck, n, 3).unwrap();
+        assert_eq!(states.len(), n);
+        for (w, st) in states.iter().enumerate() {
+            assert_eq!(st.replica, w);
+            assert_eq!(st.batches_drawn, (w * 10) as u64);
+            assert_eq!(st.vecs.len(), 2, "worker {w}");
+            assert_eq!(st.vec("y"), Some(&[w as f32; 3][..]));
+            assert_eq!(st.vec("mom"), Some(&[-(w as f32); 3][..]));
+        }
+        // a missing worker errors instead of silently resuming
+        assert!(unpack_worker_states(&ck, n + 1, 3).is_err());
+        // a length-mismatched vector fails fast on the master with the
+        // real cause, not inside a worker thread
+        let err = unpack_worker_states(&ck, n, 4).unwrap_err().to_string();
+        assert!(err.contains("w0.y has 3 params"), "{err}");
+    }
+}

@@ -1,5 +1,6 @@
 //! §3.2 "Many deputies under one sheriff" — the fully-distributed Parle
-//! variant of eq. (10):
+//! variant of eq. (10) — as a two-level strategy over the
+//! [`RoundEngine`]:
 //!
 //! ```text
 //!   min  Σ_a [ Σ_b f(y^b) + 1/(2γ) ||y^b − x^a||²  +  1/(2ρ) ||x^a − x||² ]
@@ -9,7 +10,7 @@
 //! `x^a` (γ), deputies elastically tied to the sheriff `x` (ρ). The
 //! paper notes the naive formulation costs O(n²N) per update and that
 //! running it with the (6)/(7) updates keeps the amortized O(2nN/L)
-//! cost — which is what this driver does:
+//! cost — which is what this strategy does:
 //!
 //! * each worker thread runs L inner steps anchored to its deputy
 //!   (reference-anchored, γ-gain, reset-to-deputy each round),
@@ -26,19 +27,18 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::config::{RunConfig, ScopingCfg};
-use crate::coordinator::comm::{ReduceFabric, RoundConsts};
-use crate::coordinator::driver::{default_augment, evaluate, lm_seq_len,
-                                 TrainOutput};
+use crate::config::RunConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::comm::ReduceFabric;
+use crate::coordinator::driver::{epoch_batches, TrainOutput};
+use crate::coordinator::engine::{master_vec, RoundAlgo, RoundCtx,
+                                 RoundEngine};
 use crate::coordinator::replica::{run_replica, ReplicaCfg};
 use crate::coordinator::spec::{Anchor, CoupledSpec, Gain};
-use crate::data::batcher::{Augment, Batcher};
-use crate::data::{build, Dataset};
-use crate::metrics::{Curve, CurvePoint, RunRecord};
-use crate::opt::{vecmath, Scoping};
-use crate::runtime::Session;
-use crate::util::timer::{PhaseProfiler, Timer};
-use crate::info;
+use crate::data::batcher::Augment;
+use crate::data::Dataset;
+use crate::opt::vecmath;
+use crate::runtime::ModelManifest;
 
 /// Worker-level spec for eq. (10): reference-anchored (the reference a
 /// worker receives is its DEPUTY, not the sheriff), γ-gain, and — per
@@ -63,180 +63,173 @@ pub fn train_hierarchical(
     label: &str,
 ) -> Result<TrainOutput> {
     assert!(deputies >= 1 && workers_per_deputy >= 1);
-    let profiler = PhaseProfiler::new();
+    RoundEngine::new(cfg, label)
+        .run(HierarchyAlgo::new(cfg, deputies, workers_per_deputy))
+}
 
-    let master = Session::open(&cfg.artifacts_dir)?;
-    let mm = master.manifest.model(&cfg.model)?.clone();
-    let (train_ds, val_ds) = build(&mm.dataset, &cfg.data)?;
-    let augment = default_augment(&mm.dataset);
-    let shared = Arc::new(train_ds);
+/// Strategy: one broadcast group per deputy, deputies + sheriff as the
+/// master state, the two-level (8c)/(8d) update each round.
+pub struct HierarchyAlgo {
+    cfg: RunConfig,
+    deputies: usize,
+    workers_per_deputy: usize,
+    sheriff: Vec<f32>,
+    deps: Vec<Vec<f32>>,
+    dep_vel: Vec<Vec<f32>>,
+    group_mean: Vec<f32>,
+}
 
-    let n_workers = deputies * workers_per_deputy;
-    // unsharded, so global == local; shared helper keeps the epoch
-    // semantics identical across all three drivers
-    let batches_per_epoch =
-        crate::coordinator::driver::epoch_batches(shared.len(), mm.batch);
-    let total_rounds = ((cfg.epochs * batches_per_epoch as f64
-        / cfg.l_steps as f64)
-        .ceil() as u64)
-        .max(1);
-    let mut scoping = match cfg.scoping {
-        ScopingCfg::Paper => Scoping::paper(batches_per_epoch),
-        ScopingCfg::Constant { gamma, rho } => Scoping::constant(gamma, rho),
-    };
-
-    let spec = worker_spec();
-    let groups: Vec<usize> =
-        (0..n_workers).map(|w| w / workers_per_deputy).collect();
-    let mut fabric = ReduceFabric::new(groups, cfg.comm);
-    let meter = fabric.meter();
-    for w in 0..n_workers {
-        let rcfg = ReplicaCfg {
-            id: w,
-            model: cfg.model.clone(),
-            artifacts_dir: cfg.artifacts_dir.clone(),
-            spec,
-            l_steps: cfg.l_steps,
-            alpha: cfg.alpha,
-            momentum: cfg.momentum,
-            weight_decay: cfg.weight_decay,
-            use_scan: false,
-            augment,
-            seed: cfg.seed.wrapping_add(w as u64 * 7919),
-            init_seed: cfg.seed,
-            fixed_inner_lr: Some(cfg.lr.base),
-        };
-        let ds = shared.clone();
-        fabric.spawn_worker(move |ep| run_replica(rcfg, ds, ep));
+impl HierarchyAlgo {
+    pub fn new(cfg: &RunConfig, deputies: usize, workers_per_deputy: usize)
+               -> Self {
+        HierarchyAlgo {
+            cfg: cfg.clone(),
+            deputies,
+            workers_per_deputy,
+            sheriff: Vec::new(),
+            deps: Vec::new(),
+            dep_vel: Vec::new(),
+            group_mean: Vec::new(),
+        }
     }
 
-    // deputies + sheriff
-    let init = master.execute(
-        &cfg.model,
-        "init",
-        &[crate::runtime::lit_scalar_i32(
-            crate::util::rng::fold_seed_i32(cfg.seed),
-        )],
-    )?;
-    let x0: Vec<f32> = crate::runtime::to_f32(&init[0])?;
-    let p = x0.len();
-    let mut sheriff = x0.clone();
-    let mut deps: Vec<Vec<f32>> = vec![x0; deputies];
-    let mut dep_vel: Vec<Vec<f32>> = vec![vec![0.0; p]; deputies];
-    let mut group_mean = vec![0.0f32; p];
+    fn n_workers(&self) -> usize {
+        self.deputies * self.workers_per_deputy
+    }
+}
 
-    let eval_batches = Batcher::new(&val_ds, mm.batch, lm_seq_len(&mm),
-                                    Augment::none(), cfg.seed, 0xe)
-        .eval_batches();
+impl RoundAlgo for HierarchyAlgo {
+    fn name(&self) -> String {
+        format!("deputies-{}x{}", self.deputies, self.workers_per_deputy)
+    }
 
-    let wall = Timer::new();
-    let mut curve = Curve::new();
-    let mut step_seconds = 0.0f64;
-    let mut last_train = (f64::NAN, f64::NAN);
+    fn groups(&self) -> Vec<usize> {
+        (0..self.n_workers())
+            .map(|w| w / self.workers_per_deputy)
+            .collect()
+    }
 
-    for round in 0..total_rounds {
-        let epoch =
-            round as f64 * cfg.l_steps as f64 / batches_per_epoch as f64;
-        let lr = cfg.lr.at(epoch);
+    /// The hierarchy always trains on the shared set (global == local).
+    fn shards_data(&self) -> bool {
+        false
+    }
 
-        // broadcast: each worker's "reference" is its deputy
-        {
-            let dep_refs: Vec<&[f32]> =
-                deps.iter().map(|d| d.as_slice()).collect();
-            fabric.broadcast(
-                RoundConsts {
-                    lr,
-                    gamma_inv: scoping.gamma_inv(),
-                    rho_inv: scoping.rho_inv(),
-                    eta_over_rho: lr * scoping.rho_inv(),
-                },
-                &dep_refs,
+    fn batches_per_epoch(&self, train_len: usize, mm: &ModelManifest)
+                         -> usize {
+        epoch_batches(train_len, mm.batch)
+    }
+
+    fn steps_per_round(&self) -> f64 {
+        self.cfg.l_steps as f64
+    }
+
+    fn eval_every_rounds(&self) -> u64 {
+        self.cfg.eval_every_rounds as u64
+    }
+
+    fn spawn_workers(
+        &self,
+        fabric: &mut ReduceFabric,
+        datasets: &[Arc<Dataset>],
+        augment: Augment,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let spec = worker_spec();
+        for w in 0..self.n_workers() {
+            let rcfg = ReplicaCfg {
+                id: w,
+                model: cfg.model.clone(),
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                spec,
+                l_steps: cfg.l_steps,
+                alpha: cfg.alpha,
+                momentum: cfg.momentum,
+                weight_decay: cfg.weight_decay,
+                use_scan: false,
+                augment,
+                seed: cfg.seed.wrapping_add(w as u64 * 7919),
+                init_seed: cfg.seed,
+                fixed_inner_lr: Some(cfg.lr.base),
+            };
+            let ds = datasets[w].clone();
+            fabric.spawn_worker(move |ep| run_replica(rcfg, ds, ep));
+        }
+        Ok(())
+    }
+
+    fn init_master(&mut self, x0: Vec<f32>) {
+        let p = x0.len();
+        self.sheriff = x0.clone();
+        self.deps = vec![x0; self.deputies];
+        self.dep_vel = vec![vec![0.0; p]; self.deputies];
+        self.group_mean = vec![0.0; p];
+    }
+
+    /// Each worker's "reference" is its deputy.
+    fn refs(&self) -> Vec<&[f32]> {
+        self.deps.iter().map(|d| d.as_slice()).collect()
+    }
+
+    // consts(): the trait's default coupled-family constants.
+
+    fn master_update(&mut self, fabric: &ReduceFabric, ctx: &RoundCtx) {
+        // deputy update: toward its group's worker mean + sheriff
+        for d in 0..self.deputies {
+            fabric.reduce_group_into(d, &mut self.group_mean);
+            vecmath::outer_step(
+                &mut self.deps[d],
+                &mut self.dep_vel[d],
+                &self.group_mean,
+                &self.sheriff,
+                ctx.lr,
+                ctx.lr * ctx.scoping.rho_inv(),
+                self.cfg.momentum,
             );
         }
-        let stats = fabric.collect()?;
-        step_seconds += stats.max_step_s;
-        last_train = (stats.mean_loss, stats.mean_err);
+        // sheriff = mean of deputies (8d)
+        let views: Vec<&[f32]> =
+            self.deps.iter().map(|d| d.as_slice()).collect();
+        vecmath::mean_into_par(&mut self.sheriff, &views);
+    }
 
-        profiler.scope("reduce", || {
-            // deputy update: toward its group's worker mean + sheriff
-            for d in 0..deputies {
-                fabric.reduce_group_into(d, &mut group_mean);
-                vecmath::outer_step(
-                    &mut deps[d],
-                    &mut dep_vel[d],
-                    &group_mean,
-                    &sheriff,
-                    lr,
-                    lr * scoping.rho_inv(),
-                    cfg.momentum,
-                );
+    fn params(&self) -> &[f32] {
+        &self.sheriff
+    }
+
+    fn state_vecs(&self) -> Vec<(String, Vec<f32>)> {
+        let mut vecs = Vec::with_capacity(2 * self.deputies);
+        for d in 0..self.deputies {
+            vecs.push((format!("dep.{d}"), self.deps[d].clone()));
+            vecs.push((format!("dep_vel.{d}"), self.dep_vel[d].clone()));
+        }
+        vecs
+    }
+
+    fn restore_state(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.sheriff.copy_from_slice(&ck.params);
+        for d in 0..self.deputies {
+            let dep = master_vec(ck, &format!("dep.{d}"))?;
+            let vel = master_vec(ck, &format!("dep_vel.{d}"))?;
+            if dep.len() != self.sheriff.len()
+                || vel.len() != self.sheriff.len()
+            {
+                anyhow::bail!("checkpoint deputy {d} has wrong length");
             }
-            // sheriff = mean of deputies (8d)
-            let views: Vec<&[f32]> =
-                deps.iter().map(|d| d.as_slice()).collect();
-            vecmath::mean_into_par(&mut sheriff, &views);
-        });
-        scoping.step();
-
-        let is_last = round + 1 == total_rounds;
-        if is_last
-            || (cfg.eval_every_rounds > 0
-                && (round + 1) % cfg.eval_every_rounds as u64 == 0)
-        {
-            let val_err = profiler.scope("eval", || {
-                evaluate(&master, &cfg.model, &mm, &sheriff, &eval_batches)
-            })?;
-            curve.push(CurvePoint {
-                wall_s: wall.elapsed_s(),
-                // end-of-round epoch, matching the other drivers
-                epoch: epoch
-                    + cfg.l_steps as f64 / batches_per_epoch as f64,
-                train_loss: last_train.0,
-                train_err: last_train.1,
-                val_err,
-            });
-            info!(
-                "{label} round {}/{} sheriff val {:.2}% train {:.1}%",
-                round + 1,
-                total_rounds,
-                val_err * 100.0,
-                last_train.1 * 100.0
-            );
+            self.deps[d].copy_from_slice(dep);
+            self.dep_vel[d].copy_from_slice(vel);
         }
+        Ok(())
     }
 
-    fabric.shutdown()?;
-
-    let wall_s = wall.elapsed_s();
-    let comm_s = profiler.total("reduce");
-    let last = curve.last().copied().unwrap();
-    let record = RunRecord {
-        label: label.to_string(),
-        model: cfg.model.clone(),
-        algo: format!("deputies-{deputies}x{workers_per_deputy}"),
-        replicas: n_workers,
-        curve,
-        wall_s,
-        final_val_err: last.val_err,
-        final_train_err: last.train_err,
-        final_train_loss: last.train_loss,
-        comm_bytes: meter.bytes(),
-        comm_ratio: if step_seconds > 0.0 {
-            comm_s / step_seconds
-        } else {
-            f64::NAN
-        },
-        phases: profiler.snapshot(),
-    };
-    Ok(TrainOutput {
-        record,
-        final_params: sheriff,
-    })
+    fn into_params(self) -> Vec<f32> {
+        self.sheriff
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Algo;
     use crate::coordinator::replica::round_reset;
 
     /// Regression for the eq. (10) coupling bug: the spec used to say
@@ -260,5 +253,45 @@ mod tests {
         round_reset(&spec, &mut y, &mut z, &stale, &deputy);
         assert_eq!(y, deputy);
         assert_eq!(z, deputy);
+    }
+
+    /// The strategy's shape must match what `train_hierarchical`
+    /// hard-coded before the engine refactor: one group per deputy,
+    /// no sharding, deputies broadcast as the references.
+    #[test]
+    fn hierarchy_strategy_mirrors_the_legacy_driver() {
+        let cfg = RunConfig::new("mlp_synth", Algo::Parle);
+        let mut algo = HierarchyAlgo::new(&cfg, 2, 3);
+        assert_eq!(algo.name(), "deputies-2x3");
+        assert_eq!(algo.groups(), vec![0, 0, 0, 1, 1, 1]);
+        assert!(!algo.shards_data());
+        algo.init_master(vec![0.5f32; 4]);
+        assert_eq!(algo.refs().len(), 2);
+        assert_eq!(algo.params(), &[0.5f32; 4]);
+        // deputies start at the sheriff's initialization
+        assert_eq!(algo.refs()[0], &[0.5f32; 4]);
+    }
+
+    /// Deputies and their velocities survive the checkpoint key layout.
+    #[test]
+    fn deputy_state_survives_checkpoint_roundtrip() {
+        let cfg = RunConfig::new("mlp_synth", Algo::Parle);
+        let mut algo = HierarchyAlgo::new(&cfg, 2, 2);
+        algo.init_master(vec![1.0f32, 2.0]);
+        algo.deps[1] = vec![7.0, -7.0];
+        algo.dep_vel[0] = vec![0.25, 0.5];
+        let mut ck = Checkpoint::new("mlp_synth", algo.params().to_vec());
+        for (name, v) in algo.state_vecs() {
+            ck = ck.with_vec_f32(&format!("master.{name}"), v);
+        }
+        let mut fresh = HierarchyAlgo::new(&cfg, 2, 2);
+        fresh.init_master(vec![0.0f32; 2]);
+        fresh.restore_state(&ck).unwrap();
+        assert_eq!(fresh.sheriff, algo.sheriff);
+        assert_eq!(fresh.deps, algo.deps);
+        assert_eq!(fresh.dep_vel, algo.dep_vel);
+        // missing deputy section fails loudly
+        let bare = Checkpoint::new("mlp_synth", vec![0.0f32; 2]);
+        assert!(fresh.restore_state(&bare).is_err());
     }
 }

@@ -1,10 +1,38 @@
 //! L3 coordinator — the paper's system contribution.
 //!
+//! Since the RoundEngine refactor the layer splits into one **engine**
+//! that owns the training lifecycle and small **algorithm strategies**
+//! that parameterize it:
+//!
+//! ```text
+//!              RoundEngine (engine.rs)
+//!   session open · dataset build/shard · worker spawn
+//!   round loop · scoping/LR schedules · eval cadence
+//!   checkpoint/resume · curve + RunRecord · shutdown
+//!        │                                   ▲
+//!        │ RoundAlgo trait                   │ results
+//!        ▼                                   │
+//!   ┌───────────────┬───────────────┬────────────────┐
+//!   │ CoupledAlgo   │ GradAvgAlgo   │ HierarchyAlgo  │
+//!   │ (driver.rs)   │ (sgd_dp.rs)   │ (hierarchy.rs) │
+//!   │ Parle/Entropy │ sync data-    │ deputies under │
+//!   │ /Elastic/SGD  │ parallel SGD  │ a sheriff §3.2 │
+//!   └───────────────┴───────────────┴────────────────┘
+//!        │ workers: run_replica / grad_worker (replica.rs)
+//!        ▼
+//!              ReduceFabric (comm.rs)
+//!   broadcast/collect/reduce · snapshot/restore barrier
+//!   double-buffered slabs · recycled report buffers
+//!   simulated interconnect · byte metering
+//! ```
+//!
 //! Topology: `n` replica worker **threads**, each owning a private PJRT
 //! [`crate::runtime::Session`] (one "device" per replica, exactly the
 //! paper's one-GPU-per-replica layout), plus the master thread that owns
-//! the reference variable `x`, the scoping schedule, evaluation, and the
-//! reduce/broadcast fabric.
+//! the reference variable `x`, the scoping schedule, and the
+//! reduce/broadcast fabric. Evaluation gets its own thread + session
+//! (`overlap_eval`, default on) so the validation sweep overlaps the
+//! next round's compute instead of extending the round barrier.
 //!
 //! A communication **round** = `L` inner minibatch steps on every replica
 //! followed by one exchange with the master:
@@ -19,18 +47,20 @@
 //!
 //! All four algorithms in the paper are projections of this loop — see
 //! [`spec::CoupledSpec`]. Synchronous data-parallel SGD (the baseline)
-//! runs the same fabric with L = 1 and gradients as payloads
-//! ([`sgd_dp`]); the hierarchical driver runs it with one broadcast
-//! group per deputy ([`hierarchy`]).
+//! runs the same engine with L = 1 and gradients as payloads
+//! ([`sgd_dp::GradAvgAlgo`]); the hierarchical variant runs it with one
+//! broadcast group per deputy ([`hierarchy::HierarchyAlgo`]).
 //!
-//! All broadcast/collect plumbing lives in one place — the
-//! [`comm::ReduceFabric`]: double-buffered broadcast slabs, recycled
-//! report buffers, the multi-threaded (8d) reduce, and the simulated
-//! interconnect on both legs.
+//! **Checkpoint/resume** is round-granular: the engine periodically
+//! snapshots the full training state — master + per-worker vectors,
+//! RNG draw counts, scoping round, partial curve — through the fabric's
+//! snapshot barrier into a [`checkpoint::Checkpoint`], and `--resume`
+//! reproduces the uninterrupted run's final params and curve exactly.
 
 pub mod checkpoint;
 pub mod comm;
 pub mod driver;
+pub mod engine;
 pub mod hierarchy;
 pub mod replica;
 pub mod sgd_dp;
@@ -39,5 +69,6 @@ pub mod spec;
 pub use checkpoint::Checkpoint;
 pub use comm::ReduceFabric;
 pub use driver::{train, TrainOutput};
+pub use engine::{RoundAlgo, RoundEngine};
 pub use hierarchy::train_hierarchical;
 pub use spec::CoupledSpec;

@@ -20,7 +20,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::comm::{ReplicaEndpoint, RoundConsts, RoundMsg,
-                               RoundReport};
+                               RoundReport, WorkerCmd, WorkerState};
 use crate::coordinator::spec::{Anchor, CoupledSpec, Gain};
 use crate::data::batcher::{Augment, Batcher};
 use crate::data::Dataset;
@@ -121,7 +121,61 @@ pub fn run_replica(
     }
 
     // --- round loop -------------------------------------------------------
-    while let Some(msg) = ep.recv() {
+    // Minibatches drawn so far: the checkpoint carries this count so a
+    // resumed replica can replay its data/augment RNG streams exactly.
+    let mut batches_drawn = 0u64;
+    while let Some(cmd) = ep.recv_cmd() {
+        let msg = match cmd {
+            WorkerCmd::Round(msg) => msg,
+            WorkerCmd::Snapshot => {
+                ep.send_snapshot(WorkerState {
+                    replica: cfg.id,
+                    vecs: vec![
+                        ("y".into(), y.clone()),
+                        ("z".into(), z.clone()),
+                        ("mom".into(), mom.clone()),
+                        ("x_a".into(), x_a.clone()),
+                        ("v_outer".into(), v_outer.clone()),
+                    ],
+                    batches_drawn,
+                });
+                continue;
+            }
+            WorkerCmd::Restore(st) => {
+                for (name, dst) in [
+                    ("y", &mut y),
+                    ("z", &mut z),
+                    ("mom", &mut mom),
+                    ("x_a", &mut x_a),
+                    ("v_outer", &mut v_outer),
+                ] {
+                    let src = st.vec(name).with_context(|| {
+                        format!("replica {}: restore missing {name}", cfg.id)
+                    })?;
+                    if src.len() != p {
+                        bail!(
+                            "replica {}: restored {name} has {} params, \
+                             model has {p}",
+                            cfg.id,
+                            src.len()
+                        );
+                    }
+                    dst.copy_from_slice(src);
+                }
+                if st.batches_drawn < batches_drawn {
+                    bail!(
+                        "replica {}: cannot rewind batcher ({} drawn, \
+                         checkpoint says {})",
+                        cfg.id,
+                        batches_drawn,
+                        st.batches_drawn
+                    );
+                }
+                batcher.skip_batches(st.batches_drawn - batches_drawn);
+                batches_drawn = st.batches_drawn;
+                continue;
+            }
+        };
         let RoundMsg {
             round,
             xref,
@@ -158,6 +212,7 @@ pub fn run_replica(
                 &x_a, &xref, inner_lr, gain, round,
             )?
         };
+        batches_drawn += steps_done as u64;
         let step_s = timer.elapsed_s();
 
         if round == 0
@@ -210,14 +265,10 @@ pub fn run_replica(
     Ok(())
 }
 
-/// Per-step dropout/augment seed: mixes the (folded) replica stream
-/// seed, the global step index and the replica id into the artifact's
-/// 31-bit seed input.
+/// Per-step dropout/augment seed: the shared collision-resistant mixer
+/// over (replica stream seed, round, replica id, step-in-round).
 fn step_seed(cfg: &ReplicaCfg, round: u64, step: usize) -> i32 {
-    ((crate::util::rng::fold_seed_i32(cfg.seed) as i64
-        ^ ((round as i64 * cfg.l_steps as i64 + step as i64) << 16)
-        ^ cfg.id as i64)
-        & 0x7fff_ffff) as i32
+    crate::util::rng::step_seed(cfg.seed, round, cfg.id as u64, step as u64)
 }
 
 /// Round-constant operands uploaded once per round for the buffer-path
@@ -381,11 +432,8 @@ fn run_scan_round(
         upload_round_consts(session, cfg, p, x_a, xref, inner_lr, gain)?;
     let xb_buf = session.upload(&xb)?;
     let yb_buf = session.upload(&yb)?;
-    let seed =
-        ((crate::util::rng::fold_seed_i32(cfg.seed) as i64
-            ^ ((round as i64) << 20)
-            ^ cfg.id as i64)
-            & 0x7fff_ffff) as i32;
+    // one seed for the whole fused round: same mixer, step slot 0
+    let seed = crate::util::rng::step_seed(cfg.seed, round, cfg.id as u64, 0);
     let seed_buf = session.upload(&lit_scalar_i32(seed))?;
     let outs = session.execute_buffers(
         &cfg.model,

@@ -99,18 +99,12 @@ impl<'a> Batcher<'a> {
         let numel = img.image_numel();
         let mut x = Vec::with_capacity(self.batch * numel);
         let mut y = Vec::with_capacity(self.batch);
+        let aug = self.augment;
         for _ in 0..self.batch {
             let i = self.next_index();
             let src = img.image(i);
-            augment_into(
-                src,
-                img.h,
-                img.w,
-                img.c,
-                &self.augment,
-                &mut self.rng,
-                &mut x,
-            );
+            let draw = draw_augment(&aug, &mut self.rng);
+            augment_into(src, img.h, img.w, img.c, draw, &mut x);
             y.push(img.labels[i]);
         }
         Batch {
@@ -135,6 +129,34 @@ impl<'a> Batcher<'a> {
             x_i32: x,
             y,
             n: self.batch,
+        }
+    }
+
+    /// Fast-forward past `n` training batches without assembling them:
+    /// replays exactly the RNG draws `next` would make (shuffles at
+    /// epoch boundaries, per-example augmentation draws, corpus window
+    /// offsets), so a resumed run's data/augment streams continue
+    /// bit-exactly from where the checkpointed run stopped. Consumes
+    /// the draws through the same helpers the real path uses
+    /// ([`draw_augment`], [`CorpusDataset::draw_start`]) — the two
+    /// paths cannot desynchronize — and is pinned by
+    /// `skip_matches_consumed_batches`.
+    pub fn skip_batches(&mut self, n: u64) {
+        for _ in 0..n {
+            match self.ds {
+                Dataset::Image(_) => {
+                    let aug = self.augment;
+                    for _ in 0..self.batch {
+                        let _ = self.next_index();
+                        let _ = draw_augment(&aug, &mut self.rng);
+                    }
+                }
+                Dataset::Corpus(c) => {
+                    for _ in 0..self.batch {
+                        let _ = c.draw_start(self.seq_len, &mut self.rng);
+                    }
+                }
+            }
         }
     }
 
@@ -188,16 +210,19 @@ impl<'a> Batcher<'a> {
     }
 }
 
-/// Apply mirror/crop augmentation, appending HWC pixels to `out`.
-fn augment_into(
-    src: &[f32],
-    h: usize,
-    w: usize,
-    c: usize,
-    aug: &Augment,
-    rng: &mut Pcg64,
-    out: &mut Vec<f32>,
-) {
+/// One example's augmentation parameters, drawn by [`draw_augment`].
+#[derive(Clone, Copy, Debug)]
+struct AugDraw {
+    flip: bool,
+    dy: i64,
+    dx: i64,
+}
+
+/// Draw the per-example augmentation parameters. This is the *only*
+/// RNG consumption of the augmentation path: `Batcher::next` and
+/// `Batcher::skip_batches` both go through it, so the real and
+/// resume-replay draw schedules cannot desynchronize.
+fn draw_augment(aug: &Augment, rng: &mut Pcg64) -> AugDraw {
     let flip = aug.mirror && rng.next_f32() < 0.5;
     let (dy, dx) = if aug.crop_pad > 0 {
         let p = aug.crop_pad as i64;
@@ -208,6 +233,19 @@ fn augment_into(
     } else {
         (0, 0)
     };
+    AugDraw { flip, dy, dx }
+}
+
+/// Apply mirror/crop augmentation, appending HWC pixels to `out`.
+fn augment_into(
+    src: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    draw: AugDraw,
+    out: &mut Vec<f32>,
+) {
+    let AugDraw { flip, dy, dx } = draw;
     if !flip && dy == 0 && dx == 0 {
         out.extend_from_slice(src);
         return;
@@ -290,6 +328,46 @@ mod tests {
         let e2 = b.eval_batches();
         assert_eq!(e1.len(), 4);
         assert_eq!(e1[0].x_f32, e2[0].x_f32);
+    }
+
+    /// Resume contract: `skip_batches(n)` leaves the batcher in exactly
+    /// the state `n` real draws would — the (n+1)-th batch matches
+    /// bit-for-bit, including augmentation RNG draws and epoch-boundary
+    /// reshuffles (n=5 crosses the 4-batch epoch).
+    #[test]
+    fn skip_matches_consumed_batches() {
+        let ds = image_ds();
+        for aug in [Augment::none(), Augment::cifar()] {
+            for n in [0u64, 1, 3, 5, 9] {
+                let mut consumed = Batcher::new(&ds, 16, 0, aug, 7, 3);
+                for _ in 0..n {
+                    let _ = consumed.next();
+                }
+                let mut skipped = Batcher::new(&ds, 16, 0, aug, 7, 3);
+                skipped.skip_batches(n);
+                let a = consumed.next();
+                let b = skipped.next();
+                assert_eq!(a.y, b.y, "labels diverged at n={n}");
+                assert_eq!(a.x_f32, b.x_f32, "pixels diverged at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn skip_matches_consumed_token_batches() {
+        let cfg = DataConfig {
+            train: 32,
+            val: 16,
+            ..Default::default()
+        };
+        let (ds, _) = build("synth_corpus", &cfg).unwrap();
+        let mut consumed = Batcher::new(&ds, 4, 32, Augment::none(), 5, 1);
+        for _ in 0..6 {
+            let _ = consumed.next();
+        }
+        let mut skipped = Batcher::new(&ds, 4, 32, Augment::none(), 5, 1);
+        skipped.skip_batches(6);
+        assert_eq!(consumed.next().x_i32, skipped.next().x_i32);
     }
 
     #[test]

@@ -31,11 +31,19 @@ impl CorpusDataset {
         self.windows == 0
     }
 
+    /// Draw a window start offset — the *only* RNG consumption of
+    /// [`CorpusDataset::sample_window`]. The batcher's resume replay
+    /// (`Batcher::skip_batches`) calls this too, so the draw schedule
+    /// cannot diverge between the real and skip paths.
+    pub fn draw_start(&self, t: usize, rng: &mut Pcg64) -> usize {
+        let max_start = self.tokens.len() - t - 1;
+        rng.next_below(max_start)
+    }
+
     /// Sample an (input, target) window pair of length `t`.
     pub fn sample_window(&self, t: usize, rng: &mut Pcg64)
                          -> (Vec<i32>, Vec<i32>) {
-        let max_start = self.tokens.len() - t - 1;
-        let s = rng.next_below(max_start);
+        let s = self.draw_start(t, rng);
         (
             self.tokens[s..s + t].to_vec(),
             self.tokens[s + 1..s + t + 1].to_vec(),

@@ -5,6 +5,11 @@
 //! `runs/` and prints the table/series the paper reports. `--quick`
 //! shrinks datasets/epochs ~4x for smoke runs; full runs are what
 //! EXPERIMENTS.md records.
+//!
+//! All training goes through the [`crate::coordinator::RoundEngine`],
+//! so every experiment inherits overlapped evaluation and — for long
+//! runs — round-granular checkpointing (`cfg.checkpoint_every_rounds`
+//! + `--resume` on the `train` subcommand).
 
 pub mod ablations;
 pub mod fig1;
@@ -169,7 +174,7 @@ fn run_sec32(ctx: &ExpCtx) -> Result<()> {
 
     let mut flat = cfg.clone();
     flat.replicas = 4;
-    let rec = self::ExpCtx::run(ctx, flat, "sec32_flat_parle")?.record;
+    let rec = ctx.run(flat, "sec32_flat_parle")?.record;
     println!(
         "\nsec3.2: hierarchy {:.2}% vs flat parle {:.2}% (equivalent \
          objectives; eq. 10)",

@@ -82,6 +82,9 @@ fn run() -> Result<()> {
             for (k, v) in &sets {
                 cfg.set(k, v)?;
             }
+            if let Some(path) = flag("resume") {
+                cfg.resume_from = Some(path.to_string());
+            }
             let label = flag("label").unwrap_or("train").to_string();
             let out = train(&cfg, &label)?;
             out.record.save(flag("out").unwrap_or("runs"))?;
@@ -154,10 +157,23 @@ parle — Rust+JAX+Pallas reproduction of 'Parle: parallelizing SGD'
 USAGE:
   parle train --model <zoo> --algo <parle|elastic|entropy|sgd|sgd-dp>
               [--set key=value ...] [--label name] [--out runs]
+              [--resume <ckpt>]
   parle experiment <name|all> [--quick] [--out runs] [--seed N]
   parle perfmodel
   parle list
   parle selftest
+
+CHECKPOINT/RESUME:
+  --set checkpoint_every=N   write a full-state checkpoint every N
+                             communication rounds (default 0 = never)
+  --set checkpoint_path=P    destination; a {round} placeholder keeps
+                             per-round history (default
+                             checkpoints/<label>.ck, overwritten)
+  --resume <ckpt>            continue a run from such a checkpoint; the
+                             resumed run reproduces the uninterrupted
+                             run's final params and curve
+  --set overlap_eval=false   evaluate inside the round barrier instead
+                             of on the dedicated eval thread
 
 Run `make artifacts` first to AOT-compile the models.";
 

@@ -56,6 +56,17 @@ impl Scoping {
         self.rounds += 1;
     }
 
+    /// Rounds stepped so far (checkpointed by the engine).
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Restore the round counter (resume): the schedule is a pure
+    /// function of the counter, so this reproduces gamma/rho exactly.
+    pub fn set_rounds(&mut self, rounds: u64) {
+        self.rounds = rounds;
+    }
+
     fn factor(&self) -> f64 {
         self.decay.powf(self.rounds as f64)
     }
@@ -120,6 +131,21 @@ mod tests {
         }
         assert_eq!(s.gamma(), 50.0);
         assert_eq!(s.rho(), 0.5);
+    }
+
+    /// Resume contract: restoring the round counter reproduces the
+    /// annealed values bit-exactly (the schedule has no other state).
+    #[test]
+    fn set_rounds_reproduces_schedule() {
+        let mut a = Scoping::paper(50);
+        for _ in 0..37 {
+            a.step();
+        }
+        let mut b = Scoping::paper(50);
+        b.set_rounds(a.rounds());
+        assert_eq!(a.rounds(), 37);
+        assert_eq!(a.gamma().to_bits(), b.gamma().to_bits());
+        assert_eq!(a.rho().to_bits(), b.rho().to_bits());
     }
 
     #[test]

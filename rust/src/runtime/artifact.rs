@@ -108,6 +108,26 @@ impl ModelManifest {
     }
 }
 
+/// Minimal image-model manifest for unit tests that need shape/batch
+/// accounting without artifacts on disk (shared by the coordinator
+/// strategy tests).
+#[cfg(test)]
+pub fn test_manifest(batch: usize) -> ModelManifest {
+    ModelManifest {
+        name: "mlp_synth".into(),
+        param_count: 10,
+        batch,
+        scan_l: 1,
+        dataset: "synth_mnist".into(),
+        num_classes: 10,
+        input_shape: vec![28, 28, 1],
+        input_dtype: DType::F32,
+        label_shape: vec![],
+        layers: vec![],
+        artifacts: BTreeMap::new(),
+    }
+}
+
 /// The whole parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {

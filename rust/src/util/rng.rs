@@ -102,6 +102,33 @@ pub fn fold_seed_i32(seed: u64) -> i32 {
     (((seed >> 32) ^ seed) as u32) as i32
 }
 
+/// SplitMix64 finalizer: full-avalanche 64-bit mix.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-step artifact seed shared by every training driver: mixes
+/// (seed, round, replica, step) into the artifact's 31-bit seed space
+/// with a full-avalanche hash per word.
+///
+/// The old ad-hoc derivations xor-shifted the round/step counters into
+/// fixed bit positions (`round << 8 ^ replica`), which collides as soon
+/// as a replica id reaches the shifted round bits (replica >= 256) or a
+/// counter outgrows its field. Here every input word is avalanched and
+/// the combination is order-sensitive (multiply + rotate between
+/// words), so distinct (round, replica, step) tuples land on
+/// structurally unrelated seeds at any scale.
+pub fn step_seed(seed: u64, round: u64, replica: u64, step: u64) -> i32 {
+    let mut h = seed ^ 0x9E37_79B9_7F4A_7C15;
+    for w in [round, replica, step] {
+        h ^= mix64(w.wrapping_add(0x9E37_79B9_7F4A_7C15));
+        h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9).rotate_left(27);
+    }
+    (mix64(h) & 0x7fff_ffff) as i32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +143,38 @@ mod tests {
         assert_eq!(fold_seed_i32(0), 0);
         // deterministic
         assert_eq!(fold_seed_i32(hi), fold_seed_i32(hi));
+    }
+
+    /// The regression the shared helper exists for: the old
+    /// `(seed ^ round << 8 ^ replica)` derivation collided whenever a
+    /// replica id overlapped the shifted round bits (replica 256 at
+    /// round r == replica 0 at round r+1). Every tuple in a grid that
+    /// crosses those boundaries must get a distinct seed.
+    #[test]
+    fn step_seed_distinct_across_replica_and_round_boundaries() {
+        let mut seen = std::collections::HashMap::new();
+        for &round in &[0u64, 1, 2, 255, 256, 257, 65535, 65536, 1 << 30] {
+            for &replica in &[0u64, 1, 7, 255, 256, 257, 1023] {
+                for step in 0..4u64 {
+                    let s = step_seed(42, round, replica, step);
+                    assert!((0..=i32::MAX).contains(&s));
+                    if let Some(prev) =
+                        seen.insert(s, (round, replica, step))
+                    {
+                        panic!(
+                            "seed collision: {prev:?} vs \
+                             {:?} -> {s}",
+                            (round, replica, step)
+                        );
+                    }
+                }
+            }
+        }
+        // deterministic, and the base seed matters
+        assert_eq!(step_seed(1, 2, 3, 4), step_seed(1, 2, 3, 4));
+        assert_ne!(step_seed(1, 2, 3, 4), step_seed(2, 2, 3, 4));
+        // order-sensitive: swapping round and replica moves the seed
+        assert_ne!(step_seed(1, 5, 9, 0), step_seed(1, 9, 5, 0));
     }
 
     #[test]

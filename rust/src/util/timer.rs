@@ -31,6 +31,13 @@ impl Timer {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// The instant this timer started — for threads that must stamp
+    /// events on the same clock (e.g. the engine's eval thread stamping
+    /// curve points on the run's wall timer).
+    pub fn started_at(&self) -> Instant {
+        self.start
+    }
+
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed_s() * 1e3
     }
@@ -52,10 +59,16 @@ impl PhaseProfiler {
     }
 
     pub fn add(&self, phase: &str, seconds: f64) {
+        self.add_many(phase, seconds, 1);
+    }
+
+    /// Merge a pre-aggregated total (restoring checkpointed phase
+    /// accounting on resume).
+    pub fn add_many(&self, phase: &str, seconds: f64, calls: u64) {
         let mut m = self.acc.lock().unwrap();
         let e = m.entry(phase.to_string()).or_insert((0.0, 0));
         e.0 += seconds;
-        e.1 += 1;
+        e.1 += calls;
     }
 
     /// Run `f`, attributing its wall time to `phase`.
@@ -125,6 +138,14 @@ mod tests {
         assert_eq!(p.total("step"), 3.0);
         assert!((p.ratio("reduce", "step") - 0.5 / 3.0).abs() < 1e-12);
         assert!(p.report().contains("step"));
+    }
+
+    #[test]
+    fn add_many_merges_totals() {
+        let p = PhaseProfiler::new();
+        p.add("reduce", 1.0);
+        p.add_many("reduce", 4.0, 9);
+        assert_eq!(p.snapshot()["reduce"], (5.0, 10));
     }
 
     #[test]

@@ -183,6 +183,196 @@ fn hierarchy_trains_and_beats_chance() {
     assert!(out.record.algo.starts_with("deputies-2x2"));
 }
 
+/// Engine determinism across every strategy: the unified loop must
+/// reproduce itself bit-exactly given a seed — the executable parity
+/// contract the RoundEngine refactor is held to (the legacy drivers
+/// were seeded-deterministic; the engine paths must be too).
+#[test]
+fn deterministic_given_seed_all_strategies() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    for algo in [Algo::ElasticSgd, Algo::SgdDataParallel] {
+        let mut cfg = base(algo);
+        cfg.replicas = 2;
+        cfg.epochs = 1.0;
+        let a = train(&cfg, &format!("itest_det2_{}_a", algo.name()))
+            .unwrap();
+        let b = train(&cfg, &format!("itest_det2_{}_b", algo.name()))
+            .unwrap();
+        assert_eq!(a.final_params, b.final_params, "{}", algo.name());
+        assert_eq!(a.record.curve.len(), b.record.curve.len());
+        for (pa, pb) in a
+            .record
+            .curve
+            .points
+            .iter()
+            .zip(&b.record.curve.points)
+        {
+            assert_eq!(pa.val_err.to_bits(), pb.val_err.to_bits());
+            assert_eq!(pa.train_loss.to_bits(), pb.train_loss.to_bits());
+        }
+    }
+    // hierarchy too (its own strategy + per-deputy groups)
+    let mut cfg = base(Algo::Parle);
+    cfg.l_steps = 2;
+    cfg.epochs = 1.0;
+    let a = parle::coordinator::train_hierarchical(&cfg, 2, 2,
+                                                   "itest_det2_hier_a")
+        .unwrap();
+    let b = parle::coordinator::train_hierarchical(&cfg, 2, 2,
+                                                   "itest_det2_hier_b")
+        .unwrap();
+    assert_eq!(a.final_params, b.final_params, "hierarchy");
+}
+
+/// Interrupt-and-resume contract: training resumed from a round-k
+/// checkpoint must land on the same final params and the same curve
+/// (up to wall-clock) as the uninterrupted run, for every strategy.
+#[test]
+fn resume_reproduces_uninterrupted_run() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let dir = std::env::temp_dir().join("parle_itest_resume");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // (config, checkpoint round to resume from)
+    let mut parle_cfg = base(Algo::Parle);
+    parle_cfg.replicas = 2;
+    parle_cfg.epochs = 3.0; // 12 rounds at L=2, B=8
+    let mut dp_cfg = base(Algo::SgdDataParallel);
+    dp_cfg.replicas = 2;
+    dp_cfg.epochs = 3.0; // 12 rounds at aggregate batch 2*128, B=4
+    for (tag, cfg, ck_round) in
+        [("parle", parle_cfg, 8u64), ("sgd_dp", dp_cfg, 4u64)]
+    {
+        let mut full_cfg = cfg.clone();
+        full_cfg.checkpoint_every_rounds = 4;
+        full_cfg.checkpoint_path = Some(
+            dir.join(format!("{tag}_{{round}}.ck"))
+                .to_str()
+                .unwrap()
+                .to_string(),
+        );
+        let full =
+            train(&full_cfg, &format!("itest_resume_{tag}_full")).unwrap();
+
+        let mut resume_cfg = cfg.clone();
+        resume_cfg.resume_from = Some(
+            dir.join(format!("{tag}_{ck_round}.ck"))
+                .to_str()
+                .unwrap()
+                .to_string(),
+        );
+        let resumed =
+            train(&resume_cfg, &format!("itest_resume_{tag}_half"))
+                .unwrap();
+
+        assert_eq!(
+            resumed.final_params, full.final_params,
+            "{tag}: resumed params diverged"
+        );
+        assert_eq!(resumed.record.curve.len(), full.record.curve.len());
+        for (a, b) in resumed
+            .record
+            .curve
+            .points
+            .iter()
+            .zip(&full.record.curve.points)
+        {
+            assert_eq!(a.epoch.to_bits(), b.epoch.to_bits(), "{tag}");
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.train_err.to_bits(), b.train_err.to_bits());
+            assert_eq!(a.val_err.to_bits(), b.val_err.to_bits());
+        }
+        assert_eq!(
+            resumed.record.comm_bytes, full.record.comm_bytes,
+            "{tag}: per-round traffic is deterministic, totals must match"
+        );
+    }
+
+    // hierarchy: deputies + velocities + per-group workers restore too
+    let mut hcfg = base(Algo::Parle);
+    hcfg.l_steps = 2;
+    hcfg.epochs = 3.0;
+    let mut full_cfg = hcfg.clone();
+    full_cfg.checkpoint_every_rounds = 4;
+    full_cfg.checkpoint_path = Some(
+        dir.join("hier_{round}.ck").to_str().unwrap().to_string(),
+    );
+    let full = parle::coordinator::train_hierarchical(
+        &full_cfg, 2, 2, "itest_resume_hier_full",
+    )
+    .unwrap();
+    let mut resume_cfg = hcfg.clone();
+    resume_cfg.resume_from =
+        Some(dir.join("hier_8.ck").to_str().unwrap().to_string());
+    let resumed = parle::coordinator::train_hierarchical(
+        &resume_cfg, 2, 2, "itest_resume_hier_half",
+    )
+    .unwrap();
+    assert_eq!(resumed.final_params, full.final_params, "hierarchy");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Overlapped evaluation must change only wall-clock: records from the
+/// overlapped (default) and blocking paths agree bit-exactly in every
+/// deterministic field, and the profiler splits the eval cost into the
+/// overlapped sweep time (`eval`) and the exposed wait (`eval_exposed`).
+#[test]
+fn overlapped_eval_matches_blocking() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let mut cfg = base(Algo::Parle);
+    cfg.replicas = 2;
+    cfg.epochs = 2.0;
+    cfg.eval_every_rounds = 2;
+    cfg.overlap_eval = true;
+    let overlapped = train(&cfg, "itest_overlap").unwrap();
+    cfg.overlap_eval = false;
+    let blocking = train(&cfg, "itest_blocking").unwrap();
+
+    assert_eq!(overlapped.final_params, blocking.final_params);
+    assert_eq!(
+        overlapped.record.curve.len(),
+        blocking.record.curve.len()
+    );
+    for (a, b) in overlapped
+        .record
+        .curve
+        .points
+        .iter()
+        .zip(&blocking.record.curve.points)
+    {
+        assert_eq!(a.val_err.to_bits(), b.val_err.to_bits());
+        assert_eq!(a.train_err.to_bits(), b.train_err.to_bits());
+    }
+    // profiler split: sweeps ran on the eval thread ("eval"), the
+    // master only paid the exposed waits ("eval_exposed" — at least
+    // the final drain), and the blocking path has no exposed phase
+    let op = &overlapped.record.phases;
+    assert!(op.contains_key("eval"), "overlapped run missing eval phase");
+    assert!(
+        op.contains_key("eval_exposed"),
+        "overlapped run missing eval_exposed phase"
+    );
+    assert_eq!(
+        op["eval"].1,
+        blocking.record.phases["eval"].1,
+        "same number of sweeps either way"
+    );
+    assert!(!blocking.record.phases.contains_key("eval_exposed"));
+}
+
 #[test]
 fn checkpoint_resume_roundtrip() {
     if !have_artifacts() {
