@@ -1,5 +1,8 @@
 //! Hot-path microbenchmarks (§Perf of EXPERIMENTS.md):
 //!
+//! * the comm fabric: synchronous round barrier vs the asynchronous
+//!   event loop under a rotating-straggler delay skew (no artifacts
+//!   needed — pure fabric threads),
 //! * artifact dispatch: per-minibatch `inner_step` vs the fused
 //!   `inner_scan` (the L2 perf lever — 1 dispatch + 2 host copies per
 //!   round instead of L),
@@ -12,15 +15,26 @@
 //! Run: `cargo bench --bench runtime_hot_path`
 
 use parle::bench_util::{bench_for, section};
+use parle::config::CommCfg;
+use parle::coordinator::comm::{simulate_transfer, AsyncPacer,
+                               ReduceFabric, RoundConsts, RoundMsg,
+                               RoundReport};
 use parle::data::batcher::{Augment, Batcher};
 use parle::data::{build, DataConfig};
 use parle::opt::vecmath;
+use parle::runtime::round_driver::{self, InnerRound};
 use parle::runtime::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32,
                      Session};
 use parle::util::rng::Pcg64;
 
 fn main() -> parle::Result<()> {
     parle::util::logging::set_level(parle::util::logging::Level::Warn);
+
+    // fabric-only (no artifacts needed) — keep first so the straggler
+    // numbers print even on a checkout without `make artifacts`
+    section("comm fabric: sync barrier vs async event loop (straggler)");
+    bench_fabric_straggler();
+
     let session = Session::open("artifacts")?;
 
     section("artifact dispatch: mlp_synth (P=6.9k)");
@@ -179,11 +193,122 @@ fn bench_eval_overlap() -> parle::Result<()> {
     Ok(())
 }
 
+/// Sync barrier vs async event loop on the fabric itself, under a
+/// rotating straggler: every round a *different* replica pays a spike
+/// delay (injected with `simulate_transfer`, the same hook the training
+/// path uses), the rest are fast. The synchronous barrier pays the
+/// spike on every round (the barrier waits for the slowest); the async
+/// event loop pays it only on the straggler's own leg, overlapping it
+/// with the fast replicas' progress — bounded by `max_staleness`, which
+/// is asserted at every dispatch. This is the engine's `--comm-mode`
+/// choice measured in isolation.
+fn bench_fabric_straggler() {
+    let n = 3usize;
+    let rounds = 24u64;
+    let staleness = 2u64;
+    let p = 1024usize;
+    // per-replica skewed delays, applied through simulate_transfer
+    let spike = CommCfg {
+        latency_s: 0.012,
+        bandwidth_bps: f64::INFINITY,
+    };
+    let fast = CommCfg {
+        latency_s: 0.001,
+        bandwidth_bps: f64::INFINITY,
+    };
+    let consts = RoundConsts {
+        lr: 0.1,
+        gamma_inv: 0.01,
+        rho_inv: 1.0,
+        eta_over_rho: 0.1,
+    };
+    let spawn_workers = |fabric: &mut ReduceFabric| {
+        for _ in 0..n {
+            fabric.spawn_worker(move |ep| {
+                while let Some(msg) = ep.recv() {
+                    // rotating straggler: round r slows replica r % n
+                    let cfg = if msg.round % n as u64 == ep.id() as u64 {
+                        spike
+                    } else {
+                        fast
+                    };
+                    simulate_transfer(&cfg, 0);
+                    let RoundMsg {
+                        round,
+                        xref,
+                        mut slab,
+                        ..
+                    } = msg;
+                    slab.copy_from_slice(&xref);
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round,
+                        params: slab,
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            });
+        }
+    };
+    let xref = vec![0.5f32; p];
+
+    // synchronous round barrier
+    let mut fabric = ReduceFabric::flat(n, CommCfg::off());
+    spawn_workers(&mut fabric);
+    let t = std::time::Instant::now();
+    for _ in 0..rounds {
+        fabric.broadcast(consts, &[xref.as_slice()]);
+        fabric.collect().unwrap();
+    }
+    let sync_s = t.elapsed().as_secs_f64();
+    fabric.shutdown().unwrap();
+
+    // asynchronous event loop under the staleness bound
+    let mut fabric = ReduceFabric::flat(n, CommCfg::off());
+    spawn_workers(&mut fabric);
+    let mut pacer = AsyncPacer::new(n, rounds, staleness);
+    let t = std::time::Instant::now();
+    while !pacer.all_done() {
+        for r in pacer.dispatchable() {
+            let k = pacer.next_round(r);
+            assert!(
+                k - pacer.watermark() <= staleness,
+                "staleness bound violated at dispatch"
+            );
+            fabric.send_round_to(r, k, consts, &xref);
+            pacer.mark_dispatched(r);
+        }
+        let rep = fabric.recv_report().unwrap();
+        pacer.on_report(rep.replica);
+        fabric.recycle(rep);
+    }
+    let async_s = t.elapsed().as_secs_f64();
+    fabric.shutdown().unwrap();
+
+    println!(
+        "sync barrier    {:7.3}s  ({} rounds x {} replicas, \
+         12ms rotating spike)",
+        sync_s, rounds, n
+    );
+    println!(
+        "async events    {:7.3}s  (max_staleness {})",
+        async_s, staleness
+    );
+    println!(
+        "  -> async speedup under rotating straggler: {:.2}x",
+        sync_s / async_s
+    );
+}
+
 /// One L-step inner round dispatched two ways: the old literal path
 /// (re-marshals y/z/mom/anchor up and y/z/mom down on every step) vs
-/// the buffer path (state device-resident across the round). Reports
-/// wall time and the transfer meter's actual host<->device bytes per
-/// round for each — the O(P*L) -> O(P) drop the replica loop relies on.
+/// the buffer path (state device-resident across the round), both
+/// through the shared `runtime::round_driver` harness. Reports wall
+/// time and the transfer meter's actual host<->device bytes per round
+/// for each — the O(P*L) -> O(P) drop the replica loop relies on.
 fn bench_dispatch_paths(session: &Session, model: &str) -> parle::Result<()> {
     let mm = session.manifest.model(model)?.clone();
     let p = mm.param_count;
@@ -206,73 +331,19 @@ fn bench_dispatch_paths(session: &Session, model: &str) -> parle::Result<()> {
     let state = vec![0.05f32; p];
     session.warm(model, "inner_step")?;
     let meter = session.transfer_meter();
+    let round = InnerRound {
+        model,
+        l_steps: l,
+        state0: &state,
+        xb: &xb,
+        yb: &yb,
+    };
 
     let mut literal_round = || {
-        let mut y = state.clone();
-        let mut z = state.clone();
-        let mut mom = vec![0.0f32; p];
-        for step in 0..l {
-            let outs = session
-                .execute(
-                    model,
-                    "inner_step",
-                    &[
-                        lit_f32(&y, &[p]).unwrap(),
-                        lit_f32(&z, &[p]).unwrap(),
-                        lit_f32(&mom, &[p]).unwrap(),
-                        lit_f32(&state, &[p]).unwrap(),
-                        xb.clone(),
-                        yb.clone(),
-                        lit_scalar_f32(0.1),
-                        lit_scalar_f32(0.01),
-                        lit_scalar_f32(0.75),
-                        lit_scalar_f32(0.9),
-                        lit_scalar_f32(0.0),
-                        lit_scalar_i32(step as i32),
-                    ],
-                )
-                .unwrap();
-            y = parle::runtime::to_f32(&outs[0]).unwrap();
-            z = parle::runtime::to_f32(&outs[1]).unwrap();
-            mom = parle::runtime::to_f32(&outs[2]).unwrap();
-        }
+        round_driver::literal_round(session, &round).unwrap();
     };
     let mut buffer_round = || {
-        let mut y = session.upload(&lit_f32(&state, &[p]).unwrap()).unwrap();
-        let mut z = session.upload(&lit_f32(&state, &[p]).unwrap()).unwrap();
-        let mut mom =
-            session.upload(&lit_f32(&vec![0.0f32; p], &[p]).unwrap())
-                .unwrap();
-        let anchor =
-            session.upload(&lit_f32(&state, &[p]).unwrap()).unwrap();
-        let lr = session.upload(&lit_scalar_f32(0.1)).unwrap();
-        let gain = session.upload(&lit_scalar_f32(0.01)).unwrap();
-        let alpha = session.upload(&lit_scalar_f32(0.75)).unwrap();
-        let mu = session.upload(&lit_scalar_f32(0.9)).unwrap();
-        let wd = session.upload(&lit_scalar_f32(0.0)).unwrap();
-        for step in 0..l {
-            let xb_b = session.upload(&xb).unwrap();
-            let yb_b = session.upload(&yb).unwrap();
-            let seed =
-                session.upload(&lit_scalar_i32(step as i32)).unwrap();
-            let outs = session
-                .execute_buffers(
-                    model,
-                    "inner_step",
-                    &[
-                        &y, &z, &mom, &anchor, &xb_b, &yb_b, &lr, &gain,
-                        &alpha, &mu, &wd, &seed,
-                    ],
-                )
-                .unwrap();
-            let mut it = outs.into_iter();
-            y = it.next().unwrap();
-            z = it.next().unwrap();
-            mom = it.next().unwrap();
-        }
-        let _ = session.download(&y).unwrap();
-        let _ = session.download(&z).unwrap();
-        let _ = session.download(&mom).unwrap();
+        round_driver::buffer_round(session, &round).unwrap();
     };
 
     let before = meter.bytes();

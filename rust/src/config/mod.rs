@@ -6,4 +6,4 @@
 
 pub mod run;
 
-pub use run::{Algo, CommCfg, RunConfig, ScopingCfg};
+pub use run::{Algo, CommCfg, CommMode, RunConfig, ScopingCfg};

@@ -43,6 +43,37 @@ impl Algo {
     }
 }
 
+/// How the master exchanges with replicas each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommMode {
+    /// The paper's synchronous round barrier: broadcast, collect every
+    /// replica's report, reduce. Deterministic given a seed.
+    Sync,
+    /// Asynchronous elastic updates (EASGD-style): each replica runs
+    /// its L-step legs continuously against its last-seen reference
+    /// while the master applies partial updates per arriving report,
+    /// bounded by `max_staleness`. Wall-clock-robust to stragglers;
+    /// master update order (hence the trajectory) is not deterministic.
+    Async,
+}
+
+impl CommMode {
+    pub fn parse(s: &str) -> Result<CommMode> {
+        Ok(match s {
+            "sync" => CommMode::Sync,
+            "async" => CommMode::Async,
+            other => bail!("unknown comm mode {other:?} (sync|async)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommMode::Sync => "sync",
+            CommMode::Async => "async",
+        }
+    }
+}
+
 /// Scoping mode for gamma/rho (eq. 9).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ScopingCfg {
@@ -123,6 +154,13 @@ pub struct RunConfig {
     /// Use the fused L-step scan artifact instead of per-step dispatch.
     pub use_scan: bool,
     pub comm: CommCfg,
+    /// Synchronous round barrier (default) or asynchronous elastic
+    /// updates on the event fabric.
+    pub comm_mode: CommMode,
+    /// Async only: how many rounds a replica may run ahead of the
+    /// slowest unfinished replica before the master holds it back
+    /// (0 = lockstep). Ignored in sync mode.
+    pub max_staleness: usize,
     pub seed: u64,
     pub artifacts_dir: String,
     /// Write a full-state checkpoint every this many communication
@@ -170,6 +208,8 @@ impl RunConfig {
             eval_every_rounds: 10,
             use_scan: false,
             comm: CommCfg::off(),
+            comm_mode: CommMode::Sync,
+            max_staleness: 4,
             seed: 42,
             artifacts_dir: "artifacts".to_string(),
             checkpoint_every_rounds: 0,
@@ -206,6 +246,8 @@ impl RunConfig {
                 self.checkpoint_path = Some(value.to_string())
             }
             "overlap_eval" => self.overlap_eval = value.parse()?,
+            "comm_mode" => self.comm_mode = CommMode::parse(value)?,
+            "max_staleness" => self.max_staleness = value.parse()?,
             "scoping" => {
                 self.scoping = match value {
                     "paper" => ScopingCfg::Paper,
@@ -237,6 +279,10 @@ impl RunConfig {
     /// Deliberately excludes fields that do not change the parameter
     /// trajectory: epochs (resuming with more epochs extends a run),
     /// eval cadence, comm simulation, checkpoint/output settings.
+    /// `comm_mode`/`max_staleness` are also excluded: async runs are
+    /// not replay-deterministic anyway, and the one hazardous crossing
+    /// (resuming a sync run from an async checkpoint with uneven
+    /// per-replica round stamps) is rejected structurally by the engine.
     pub fn replay_fingerprint(&self) -> u64 {
         let canon = format!(
             "model={};alpha={};momentum={};wd={};lr={}@{:?}/{};\
@@ -352,6 +398,25 @@ mod tests {
         c.eval_every_rounds = 1;
         c.checkpoint_every_rounds = 7;
         assert_eq!(fp, c.replay_fingerprint());
+    }
+
+    #[test]
+    fn comm_mode_parse_and_overrides() {
+        assert_eq!(CommMode::parse("sync").unwrap(), CommMode::Sync);
+        assert_eq!(CommMode::parse("async").unwrap(), CommMode::Async);
+        assert!(CommMode::parse("gossip").is_err());
+        assert_eq!(CommMode::Async.name(), "async");
+        let mut c = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(c.comm_mode, CommMode::Sync);
+        c.set("comm_mode", "async").unwrap();
+        c.set("max_staleness", "2").unwrap();
+        assert_eq!(c.comm_mode, CommMode::Async);
+        assert_eq!(c.max_staleness, 2);
+        assert!(c.validate().is_ok());
+        // mode/staleness do not perturb the replay fingerprint (see
+        // replay_fingerprint doc)
+        let base = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(base.replay_fingerprint(), c.replay_fingerprint());
     }
 
     #[test]

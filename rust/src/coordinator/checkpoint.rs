@@ -11,8 +11,11 @@
 //!
 //! The engine uses the sections to carry full round-granular training
 //! state: master auxiliary vectors (`master.*`), per-worker persistent
-//! state (`w<id>.*`), and the partial curve (`curve`, 5 f64 per point).
-//! See [`crate::coordinator::engine`] for the key layout.
+//! state (`w<id>.*` vectors plus `w<id>.batches_drawn` and — since the
+//! async fabric — `w<id>.rounds_done` meta, the per-replica round
+//! stamps that let an asynchronous run resume each replica at its own
+//! round), and the partial curve (`curve`, 5 f64 per point). See
+//! [`crate::coordinator::engine`] for the key layout.
 
 use std::io::{Read, Seek, Write};
 use std::path::Path;

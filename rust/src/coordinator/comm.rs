@@ -1,10 +1,32 @@
-//! The reduce/broadcast fabric between master and replicas.
+//! The event-driven communication fabric between master and replicas.
 //!
-//! [`ReduceFabric`] owns the whole per-round exchange for every training
-//! driver (coupled, data-parallel, hierarchical): it spawns the worker
-//! threads, broadcasts the per-round references, barriers on the reports,
-//! and reduces the payloads with the multi-threaded
-//! [`vecmath::mean_into_par`] kernel.
+//! [`ReduceFabric`] owns the whole master <-> replica exchange for every
+//! training driver (coupled, data-parallel, hierarchical): it spawns the
+//! worker threads, ships per-round references, and funnels every
+//! [`RoundReport`] through **one MPSC event stream** the master consumes.
+//! Two consumption patterns sit on top of that stream:
+//!
+//! * **Synchronous barrier** ([`ReduceFabric::broadcast`] +
+//!   [`ReduceFabric::collect`]) — the paper's round: ship round `r` to
+//!   every replica, then collect events until all have reported, sort by
+//!   replica id, reduce with the multi-threaded
+//!   [`vecmath::mean_into_par`] kernel. Since the refactor this is the
+//!   *degenerate case* of the event loop (collect-until-all-reported);
+//!   its deterministic outputs are bit-identical to the old per-link
+//!   barrier because reports are sorted by replica id before any reduce.
+//! * **Asynchronous event loop** ([`ReduceFabric::send_round_to`] +
+//!   [`ReduceFabric::recv_report`] + [`ReduceFabric::recycle`]) — each
+//!   replica runs its L-step legs continuously against its last-seen
+//!   reference; the master applies elastic partial updates per arriving
+//!   report. [`AsyncPacer`] decides which replica may start which round,
+//!   bounding how far any replica runs ahead of the slowest
+//!   (`max_staleness`).
+//!
+//! Worker liveness on the shared stream: a per-link report channel used
+//! to error when its worker died; a shared stream would instead block
+//! forever waiting for a report that can never come. Every worker
+//! therefore pushes a final `Exited` event when its body returns, and
+//! the master turns an unexpected `Exited` into an error.
 //!
 //! # Buffer lifecycle (zero steady-state allocation)
 //!
@@ -12,18 +34,20 @@
 //! neither is ever reallocated:
 //!
 //! * **Broadcast slabs** — one *double-buffered* pair of `Arc<Vec<f32>>`
-//!   per broadcast group (one group for the flat drivers, one per deputy
-//!   in the hierarchy). Round `r` writes into the `r % 2` buffer via
-//!   `Arc::make_mut`: by the time round `r` is broadcast, every replica
-//!   has necessarily dropped its handle on the `r - 2` payload (it must
-//!   have re-entered `recv` to obtain round `r - 1`, which happens after
-//!   its previous loop iteration — and the Arc it held — ended), so the
+//!   per broadcast group (sync; one group for the flat drivers, one per
+//!   deputy in the hierarchy) or per replica (async, where replicas sit
+//!   on different rounds). Round `r` writes into the `r % 2` buffer via
+//!   `Arc::make_mut`: by the time round `r` is shipped, the receiver has
+//!   necessarily dropped its handle on the `r - 2` payload (it must have
+//!   re-entered `recv` to obtain round `r - 1`, which happens after its
+//!   previous loop iteration — and the Arc it held — ended), so the
 //!   write is a plain in-place `copy_from_slice`, never a clone.
 //! * **Report slabs** — each `RoundMsg` carries a recycled `Vec<f32>` the
 //!   replica fills with its parameters and moves back inside its
-//!   [`RoundReport`]. The next [`ReduceFabric::broadcast`] drains the
-//!   collected reports and ships the same vectors out again. Replicas
-//!   therefore never clone their parameter vector to report it.
+//!   [`RoundReport`]. The next [`ReduceFabric::broadcast`] (sync) or
+//!   [`ReduceFabric::recycle`] + [`ReduceFabric::send_round_to`] (async)
+//!   ships the same vectors out again. Replicas therefore never clone
+//!   their parameter vector to report it.
 //!
 //! # Which legs are simulated
 //!
@@ -32,18 +56,21 @@
 //! `latency + bytes/bandwidth`, each on the **replica** thread so delays
 //! overlap across replicas like real point-to-point links:
 //!
-//! * master → replica (broadcast): [`ReplicaEndpoint::recv`] sleeps
-//!   before handing the round to the worker, so the delay precedes
-//!   compute and is excluded from the worker's `step_s`;
-//! * replica → master (reduce): [`ReplicaEndpoint::report`] sleeps
-//!   before sending.
+//! * master → replica: [`ReplicaEndpoint::recv`] sleeps before handing
+//!   the round to the worker, so the delay precedes compute and is
+//!   excluded from the worker's `step_s`;
+//! * replica → master: [`ReplicaEndpoint::report`] sleeps before sending.
 //!
-//! # Byte accounting
+//! # Byte accounting and exposed waits
 //!
 //! The shared [`CommMeter`] counts every payload once per link per
-//! direction: the master accounts `P * 4` bytes per replica at broadcast
-//! time, each replica accounts its own report at send time. The totals
-//! feed the §4.1 comm/compute ratio.
+//! direction: the master accounts `P * 4` bytes per replica at send
+//! time, each replica accounts its own report. The totals feed the §4.1
+//! comm/compute ratio. When a [`PhaseProfiler`] is attached
+//! ([`ReduceFabric::set_profiler`]), every blocking master receive is
+//! attributed to the replica whose report ended the wait as a
+//! `wait.r<id>` phase — per-replica exposed wait instead of one opaque
+//! barrier number.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -54,6 +81,7 @@ use anyhow::{Context, Result};
 
 use crate::config::CommCfg;
 use crate::opt::vecmath;
+use crate::util::timer::{PhaseProfiler, Timer};
 
 /// Annealed per-round constants the master broadcasts alongside the
 /// reference (eq. (9) scoping plus the learning-rate schedule).
@@ -107,7 +135,9 @@ pub enum WorkerCmd {
 /// for the stateless gradient workers). `batches_drawn` counts training
 /// minibatches consumed so far: the data-order and augmentation RNG
 /// streams are pure functions of (seed, draw count), so resume replays
-/// them exactly via [`crate::data::Batcher::skip_batches`].
+/// them exactly via [`crate::data::Batcher::skip_batches`]. The rounds a
+/// worker has completed are tracked master-side (the async pacer) and
+/// checkpointed as `w<id>.rounds_done` stamps.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct WorkerState {
     pub replica: usize,
@@ -138,6 +168,16 @@ pub struct RoundReport {
     /// Seconds spent in artifact execution this round (excludes the
     /// simulated transfer delays).
     pub step_s: f64,
+}
+
+/// What replicas push onto the fabric's single master-bound stream.
+enum FabricEvent {
+    Report(RoundReport),
+    /// The worker's thread body returned (cleanly or with an error).
+    /// Receiving this mid-run means the replica can no longer report —
+    /// the master errors instead of blocking on the shared stream
+    /// forever.
+    Exited(usize),
 }
 
 /// Counts every byte the fabric moves (both directions).
@@ -177,12 +217,12 @@ pub fn simulate_transfer(cfg: &CommCfg, bytes: usize) {
     }
 }
 
-/// Channels the master keeps per replica.
+/// Channels the master keeps per replica (the control plane; reports
+/// arrive on the fabric's shared event stream).
 pub struct ReplicaLink {
     pub cmd_tx: Sender<RoundCmd>,
-    pub report_rx: Receiver<RoundReport>,
-    /// Snapshot replies (checkpoint path only — kept off the report
-    /// channel so round payload recycling is undisturbed).
+    /// Snapshot replies (checkpoint path only — kept off the event
+    /// stream so round payload recycling is undisturbed).
     pub snap_rx: Receiver<WorkerState>,
 }
 
@@ -192,7 +232,7 @@ pub struct ReplicaLink {
 pub struct ReplicaEndpoint {
     id: usize,
     cmd_rx: Receiver<RoundCmd>,
-    report_tx: Sender<RoundReport>,
+    event_tx: Sender<FabricEvent>,
     snap_tx: Sender<WorkerState>,
     meter: Arc<CommMeter>,
     comm: CommCfg,
@@ -248,7 +288,7 @@ impl ReplicaEndpoint {
         let bytes = report.params.len() * 4;
         simulate_transfer(&self.comm, bytes);
         self.meter.account(bytes);
-        self.report_tx.send(report).ok();
+        self.event_tx.send(FabricEvent::Report(report)).ok();
     }
 }
 
@@ -264,7 +304,9 @@ pub struct RoundStats {
     pub max_step_s: f64,
 }
 
-/// Master-side broadcast/reduce fabric shared by all training drivers.
+/// Master-side communication fabric shared by all training drivers:
+/// worker spawn, round dispatch (broadcast or per-replica), the single
+/// report event stream, reduces, and the snapshot/restore barrier.
 pub struct ReduceFabric {
     links: Vec<ReplicaLink>,
     handles: Vec<JoinHandle<Result<()>>>,
@@ -273,13 +315,29 @@ pub struct ReduceFabric {
     /// replica id -> broadcast group (deputy) index.
     groups: Vec<usize>,
     n_groups: usize,
+    /// Every report (and worker exit) funnels through this one stream.
+    event_tx: Sender<FabricEvent>,
+    event_rx: Receiver<FabricEvent>,
     /// Double-buffered broadcast slabs, one pair per group, indexed by
-    /// round parity. Allocated lazily at the first broadcast.
+    /// round parity (sync path). Allocated lazily at the first broadcast.
     bcast: Vec<[Arc<Vec<f32>>; 2]>,
+    /// Double-buffered dispatch slabs, one pair per replica, indexed by
+    /// that replica's own round parity (async path, where replicas sit
+    /// on different rounds). Allocated lazily per replica.
+    bcast_replica: Vec<Option<[Arc<Vec<f32>>; 2]>>,
+    /// Recycled report payloads awaiting their replica's next dispatch
+    /// (async path; the sync path recycles through `reports`).
+    slab_pool: Vec<Option<Vec<f32>>>,
     /// Last collected round, sorted by replica id; payloads are recycled
     /// as report slabs by the next broadcast.
     reports: Vec<RoundReport>,
     round: u64,
+    /// When attached, master receive waits are recorded as `wait.r<id>`
+    /// phases (per-replica exposed wait).
+    profiler: Option<Arc<PhaseProfiler>>,
+    /// Precomputed `wait.r<id>` phase keys, one per replica, so the
+    /// per-report attribution allocates nothing in the master loop.
+    wait_keys: Vec<String>,
 }
 
 impl ReduceFabric {
@@ -287,7 +345,9 @@ impl ReduceFabric {
     /// broadcast group worker `w` belongs to; groups must be a prefix of
     /// 0..n_groups).
     pub fn new(groups: Vec<usize>, comm: CommCfg) -> Self {
+        let n = groups.len();
         let n_groups = groups.iter().copied().max().map_or(1, |g| g + 1);
+        let (event_tx, event_rx) = mpsc::channel::<FabricEvent>();
         ReduceFabric {
             links: Vec::new(),
             handles: Vec::new(),
@@ -295,9 +355,15 @@ impl ReduceFabric {
             comm,
             groups,
             n_groups,
+            event_tx,
+            event_rx,
             bcast: Vec::new(),
+            bcast_replica: (0..n).map(|_| None).collect(),
+            slab_pool: (0..n).map(|_| None).collect(),
             reports: Vec::new(),
             round: 0,
+            profiler: None,
+            wait_keys: (0..n).map(|i| format!("wait.r{i}")).collect(),
         }
     }
 
@@ -311,9 +377,10 @@ impl ReduceFabric {
         self.groups.len()
     }
 
-    /// Align the fabric's round counter (resume). `RoundMsg::round`
+    /// Align the fabric's round counter (sync resume). `RoundMsg::round`
     /// feeds the workers' per-step seed derivation, so a resumed run
-    /// must stamp rounds with their global index, not restart at 0.
+    /// must stamp rounds with their global index, not restart at 0. The
+    /// async path stamps rounds explicitly per dispatch instead.
     pub fn set_round(&mut self, round: u64) {
         self.round = round;
     }
@@ -322,9 +389,17 @@ impl ReduceFabric {
         self.meter.clone()
     }
 
+    /// Attribute master receive waits to `wait.r<id>` phases on this
+    /// profiler (per-replica exposed wait).
+    pub fn set_profiler(&mut self, profiler: Arc<PhaseProfiler>) {
+        self.profiler = Some(profiler);
+    }
+
     /// Spawn one worker thread on the next replica slot. The body drives
     /// its [`ReplicaEndpoint`] until `recv` returns `None`; errors are
-    /// logged here and re-raised by [`ReduceFabric::shutdown`].
+    /// logged here and re-raised by [`ReduceFabric::shutdown`]. Every
+    /// exit — clean or not — pushes an `Exited` event so the master
+    /// never blocks on the shared stream waiting for a dead replica.
     pub fn spawn_worker<F>(&mut self, body: F)
     where
         F: FnOnce(ReplicaEndpoint) -> Result<()> + Send + 'static,
@@ -335,21 +410,17 @@ impl ReduceFabric {
             "spawned more workers than fabric slots"
         );
         let (cmd_tx, cmd_rx) = mpsc::channel::<RoundCmd>();
-        let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
         let (snap_tx, snap_rx) = mpsc::channel::<WorkerState>();
-        self.links.push(ReplicaLink {
-            cmd_tx,
-            report_rx,
-            snap_rx,
-        });
+        self.links.push(ReplicaLink { cmd_tx, snap_rx });
         let ep = ReplicaEndpoint {
             id,
             cmd_rx,
-            report_tx,
+            event_tx: self.event_tx.clone(),
             snap_tx,
             meter: self.meter.clone(),
             comm: self.comm,
         };
+        let exit_tx = self.event_tx.clone();
         self.handles.push(std::thread::spawn(move || {
             let r = body(ep);
             if let Err(e) = &r {
@@ -359,14 +430,15 @@ impl ReduceFabric {
                     &format!("replica {id} failed: {e:#}"),
                 );
             }
+            exit_tx.send(FabricEvent::Exited(id)).ok();
             r
         }));
     }
 
-    /// Broadcast one round: `refs[g]` is group g's reference. Copies each
-    /// reference into the round-parity slab (in place — see the module
-    /// doc for why the Arc is uniquely held) and hands every replica a
-    /// recycled report buffer.
+    /// Broadcast one round to every replica: `refs[g]` is group g's
+    /// reference. Copies each reference into the round-parity slab (in
+    /// place — see the module doc for why the Arc is uniquely held) and
+    /// hands every replica a recycled report buffer.
     pub fn broadcast(&mut self, consts: RoundConsts, refs: &[&[f32]]) {
         assert_eq!(refs.len(), self.n_groups, "one reference per group");
         assert_eq!(
@@ -411,19 +483,85 @@ impl ReduceFabric {
         self.round += 1;
     }
 
-    /// Barrier: receive every replica's report for the in-flight round
-    /// (synchronous reduce, like the paper). Payloads stay inside the
-    /// fabric for [`ReduceFabric::reduce_into`] /
+    /// Dispatch one round to a single replica (the asynchronous event
+    /// loop's send leg): `xref` is the replica's current reference and
+    /// `round` its own round stamp (feeds per-step seed derivation).
+    /// Uses a per-replica double-buffered slab pair indexed by the
+    /// replica's round parity and recycles the replica's last report
+    /// payload (see [`ReduceFabric::recycle`]) as its report slab.
+    pub fn send_round_to(
+        &mut self,
+        replica: usize,
+        round: u64,
+        consts: RoundConsts,
+        xref: &[f32],
+    ) {
+        let p = xref.len();
+        let parity = (round % 2) as usize;
+        let pair = self.bcast_replica[replica].get_or_insert_with(|| {
+            [Arc::new(vec![0.0f32; p]), Arc::new(vec![0.0f32; p])]
+        });
+        Arc::make_mut(&mut pair[parity]).copy_from_slice(xref);
+        let slab = self.slab_pool[replica]
+            .take()
+            .unwrap_or_else(|| vec![0.0f32; p]);
+        self.meter.account(p * 4);
+        self.links[replica]
+            .cmd_tx
+            .send(RoundCmd::Round(RoundMsg {
+                round,
+                xref: pair[parity].clone(),
+                slab,
+                consts,
+            }))
+            .ok();
+    }
+
+    /// Blocking receive of the next report off the shared event stream
+    /// (the asynchronous event loop's receive leg; [`collect`] is just
+    /// this, called once per replica). The wait is attributed to the
+    /// replica whose
+    /// report ended it (`wait.r<id>`) when a profiler is attached. An
+    /// `Exited` event — a worker whose body returned while rounds were
+    /// still expected — is an error, as is a fully hung-up stream.
+    ///
+    /// [`collect`]: ReduceFabric::collect
+    pub fn recv_report(&mut self) -> Result<RoundReport> {
+        let t = Timer::new();
+        match self.event_rx.recv() {
+            Ok(FabricEvent::Report(rep)) => {
+                if let Some(prof) = &self.profiler {
+                    prof.add(&self.wait_keys[rep.replica], t.elapsed_s());
+                }
+                Ok(rep)
+            }
+            Ok(FabricEvent::Exited(id)) => {
+                Err(anyhow::anyhow!("replica {id} exited mid-round"))
+            }
+            Err(_) => Err(anyhow::anyhow!("all replicas exited mid-round")),
+        }
+    }
+
+    /// Return a consumed report's payload to its replica's slab pool so
+    /// the next [`ReduceFabric::send_round_to`] ships the same heap
+    /// buffer (no steady-state allocation in the async loop either).
+    pub fn recycle(&mut self, report: RoundReport) {
+        self.slab_pool[report.replica] = Some(report.params);
+    }
+
+    /// Synchronous barrier, the degenerate case of the event loop:
+    /// consume events until every replica has reported the in-flight
+    /// round, then sort by replica id. Payloads stay inside the fabric
+    /// for [`ReduceFabric::reduce_into`] /
     /// [`ReduceFabric::report_params`] and are recycled by the next
     /// broadcast.
     pub fn collect(&mut self) -> Result<RoundStats> {
         self.reports.clear();
-        for link in &self.links {
-            self.reports.push(
-                link.report_rx
-                    .recv()
-                    .context("replica died mid-round")?,
-            );
+        for _ in 0..self.links.len() {
+            let rep = self
+                .recv_report()
+                .context("replica died mid-round")?;
+            self.reports.push(rep);
         }
         self.reports.sort_by_key(|r| r.replica);
         let n = self.reports.len() as f64;
@@ -483,8 +621,9 @@ impl ReduceFabric {
 
     /// Checkpoint barrier: request a [`WorkerState`] snapshot from every
     /// worker and collect the replies, sorted by replica id. Callable
-    /// only between rounds (after [`ReduceFabric::collect`]), when every
-    /// worker is blocked in its command receive — the snapshot then
+    /// only at a quiescent point — after [`ReduceFabric::collect`], or
+    /// in the async loop once no rounds are in flight — when every
+    /// worker is blocked in its command receive: the snapshot then
     /// observes the exact post-round state.
     pub fn snapshot_workers(&self) -> Result<Vec<WorkerState>> {
         for link in &self.links {
@@ -503,7 +642,7 @@ impl ReduceFabric {
     }
 
     /// Resume: install a saved state into each worker. Must run before
-    /// the first broadcast so workers restore before drawing any data.
+    /// the first dispatch so workers restore before drawing any data.
     pub fn restore_workers(&self, states: Vec<WorkerState>) -> Result<()> {
         if states.len() != self.links.len() {
             anyhow::bail!(
@@ -530,7 +669,10 @@ impl ReduceFabric {
     }
 
     /// Stop every worker, join the threads, and propagate the first
-    /// worker error (or panic) if any.
+    /// worker error (or panic) if any. Safe with reports still in
+    /// flight: workers never block on the (unbounded) event stream, so
+    /// they drain to their command receive, see `Stop`, and exit;
+    /// unconsumed events die with the fabric.
     pub fn shutdown(self) -> Result<()> {
         let ReduceFabric {
             links, handles, ..
@@ -560,6 +702,108 @@ impl ReduceFabric {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+}
+
+/// Master-side pacing state for the asynchronous event loop: which
+/// round each replica has completed, which replicas have a leg in
+/// flight, and — via `max_staleness` — which replicas may be handed
+/// their next round.
+///
+/// Invariant: a replica is only dispatched round `k` when
+/// `k - min(done)` (its lead over the slowest unfinished replica) is at
+/// most `max_staleness`. `max_staleness = 0` degenerates to lockstep:
+/// no replica starts round `k + 1` until every replica finished `k`.
+/// Replicas that have completed all their rounds stop gating the bound.
+#[derive(Clone, Debug)]
+pub struct AsyncPacer {
+    total_rounds: u64,
+    max_staleness: u64,
+    done: Vec<u64>,
+    inflight: Vec<bool>,
+}
+
+impl AsyncPacer {
+    pub fn new(replicas: usize, total_rounds: u64, max_staleness: u64)
+               -> Self {
+        Self::resume(vec![0; replicas], total_rounds, max_staleness)
+    }
+
+    /// Resume from per-replica completed-round stamps (the checkpoint's
+    /// `w<id>.rounds_done`).
+    pub fn resume(done: Vec<u64>, total_rounds: u64, max_staleness: u64)
+                  -> Self {
+        let n = done.len();
+        AsyncPacer {
+            total_rounds,
+            max_staleness,
+            done,
+            inflight: vec![false; n],
+        }
+    }
+
+    /// Completed rounds per replica.
+    pub fn done(&self) -> &[u64] {
+        &self.done
+    }
+
+    /// Rounds completed by *every* replica — the watermark that drives
+    /// scoping annealing, eval cadence and checkpoint cadence.
+    pub fn watermark(&self) -> u64 {
+        self.done.iter().copied().min().unwrap_or(0)
+    }
+
+    /// Min completed rounds among replicas that still have rounds left.
+    fn min_active(&self) -> Option<u64> {
+        self.done
+            .iter()
+            .copied()
+            .filter(|&d| d < self.total_rounds)
+            .min()
+    }
+
+    /// The round replica `r` would run next.
+    pub fn next_round(&self, r: usize) -> u64 {
+        self.done[r]
+    }
+
+    /// Replicas that may be handed their next round now: idle, rounds
+    /// remaining, and within the staleness bound of the slowest
+    /// unfinished replica.
+    pub fn dispatchable(&self) -> Vec<usize> {
+        let Some(min) = self.min_active() else {
+            return Vec::new();
+        };
+        (0..self.done.len())
+            .filter(|&r| {
+                !self.inflight[r]
+                    && self.done[r] < self.total_rounds
+                    && self.done[r] - min <= self.max_staleness
+            })
+            .collect()
+    }
+
+    /// Record that replica `r`'s next round was dispatched.
+    pub fn mark_dispatched(&mut self, r: usize) {
+        debug_assert!(!self.inflight[r]);
+        self.inflight[r] = true;
+    }
+
+    /// Record replica `r`'s report for its in-flight round.
+    pub fn on_report(&mut self, r: usize) {
+        debug_assert!(self.inflight[r], "report from idle replica {r}");
+        self.inflight[r] = false;
+        self.done[r] += 1;
+    }
+
+    /// Number of rounds currently in flight.
+    pub fn inflight(&self) -> usize {
+        self.inflight.iter().filter(|&&b| b).count()
+    }
+
+    /// Every replica has completed all its rounds.
+    pub fn all_done(&self) -> bool {
+        self.done.iter().all(|&d| d >= self.total_rounds)
     }
 }
 
@@ -746,6 +990,42 @@ mod tests {
         assert!(fabric.shutdown().is_err());
     }
 
+    /// A worker dying mid-round surfaces as a collect error, not a
+    /// deadlock: the shared event stream carries an `Exited` event the
+    /// master turns into an error. (With per-link channels this came
+    /// free from the dead link; the single-stream design must produce
+    /// it explicitly.)
+    #[test]
+    fn collect_errors_when_a_worker_dies_mid_round() {
+        let mut fabric = ReduceFabric::flat(2, CommCfg::off());
+        // replica 0 echoes, replica 1 dies on its first round
+        fabric.spawn_worker(move |ep| {
+            while let Some(msg) = ep.recv() {
+                let RoundMsg {
+                    round, mut slab, ..
+                } = msg;
+                slab.fill(0.0);
+                ep.report(RoundReport {
+                    replica: ep.id(),
+                    round,
+                    params: slab,
+                    train_loss: 0.0,
+                    train_err: 0.0,
+                    step_s: 0.0,
+                });
+            }
+            Ok(())
+        });
+        fabric.spawn_worker(|ep| {
+            let _ = ep.recv();
+            anyhow::bail!("boom")
+        });
+        let xref = vec![1.0f32; 8];
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        assert!(fabric.collect().is_err());
+        assert!(fabric.shutdown().is_err());
+    }
+
     /// Stateful worker: accumulates the broadcast sum into a persistent
     /// register, snapshots/restores it through the checkpoint protocol.
     fn counting_fabric(n: usize) -> ReduceFabric {
@@ -860,5 +1140,190 @@ mod tests {
             .restore_workers(vec![WorkerState::default()])
             .is_err());
         fabric.shutdown().unwrap();
+    }
+
+    // --- asynchronous event loop -------------------------------------
+
+    /// Drive a full async run over echo workers with a skewed
+    /// per-replica delay; every replica must complete every round with
+    /// correct stamps and payloads, and no dispatch may exceed the
+    /// staleness bound.
+    #[test]
+    fn async_event_loop_completes_and_honors_staleness() {
+        let n = 3usize;
+        let total = 7u64;
+        let staleness = 1u64;
+        let mut fabric = ReduceFabric::flat(n, CommCfg::off());
+        for _ in 0..n {
+            fabric.spawn_worker(move |ep| {
+                while let Some(msg) = ep.recv() {
+                    // replica 2 is a persistent straggler
+                    if ep.id() == 2 {
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(3),
+                        );
+                    }
+                    let RoundMsg {
+                        round,
+                        xref,
+                        mut slab,
+                        ..
+                    } = msg;
+                    slab.copy_from_slice(&xref);
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round,
+                        params: slab,
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            });
+        }
+        let mut pacer = AsyncPacer::new(n, total, staleness);
+        let mut reports_seen = vec![0u64; n];
+        while !pacer.all_done() {
+            for r in pacer.dispatchable() {
+                let k = pacer.next_round(r);
+                // the staleness invariant, checked at every dispatch
+                assert!(
+                    k - pacer.watermark() <= staleness,
+                    "replica {r} dispatched round {k} with watermark {}",
+                    pacer.watermark()
+                );
+                let xref = vec![k as f32; 16];
+                fabric.send_round_to(r, k, consts(), &xref);
+                pacer.mark_dispatched(r);
+            }
+            let rep = fabric.recv_report().unwrap();
+            // round stamps arrive in per-replica order and the payload
+            // echoes the reference of exactly that round
+            assert_eq!(rep.round, reports_seen[rep.replica]);
+            assert_eq!(rep.params, vec![rep.round as f32; 16]);
+            reports_seen[rep.replica] += 1;
+            pacer.on_report(rep.replica);
+            fabric.recycle(rep);
+        }
+        assert_eq!(pacer.done(), &[total; 3][..]);
+        fabric.shutdown().unwrap();
+    }
+
+    /// Async slab recycling: after the warmup dispatch, each replica's
+    /// report payload is the same heap buffer forever.
+    #[test]
+    fn async_dispatch_recycles_report_buffers() {
+        let mut fabric = echo_fabric(vec![0, 0], 0.0);
+        let xref = vec![1.0f32; 32];
+        let mut ptrs = [std::ptr::null::<f32>(); 2];
+        for round in 0..5u64 {
+            for r in 0..2 {
+                fabric.send_round_to(r, round, consts(), &xref);
+            }
+            for _ in 0..2 {
+                let rep = fabric.recv_report().unwrap();
+                if round == 0 {
+                    ptrs[rep.replica] = rep.params.as_ptr();
+                } else {
+                    assert_eq!(
+                        ptrs[rep.replica],
+                        rep.params.as_ptr(),
+                        "replica {} slab was reallocated",
+                        rep.replica
+                    );
+                }
+                fabric.recycle(rep);
+            }
+        }
+        fabric.shutdown().unwrap();
+    }
+
+    /// Shutdown with reports still in flight (dispatched rounds never
+    /// consumed) must neither deadlock nor error: workers drain to their
+    /// command receive, see Stop, and exit cleanly.
+    #[test]
+    fn async_shutdown_with_inflight_reports_is_clean() {
+        let mut fabric = echo_fabric(vec![0, 0, 0], 0.0);
+        let xref = vec![2.0f32; 64];
+        for r in 0..3 {
+            fabric.send_round_to(r, 0, consts(), &xref);
+        }
+        // no recv_report: the three reports stay queued on the stream
+        fabric.shutdown().unwrap();
+    }
+
+    /// Per-replica exposed waits land on the attached profiler as
+    /// `wait.r<id>` phases.
+    #[test]
+    fn recv_report_attributes_exposed_wait_per_replica() {
+        let mut fabric = echo_fabric(vec![0, 0], 0.0);
+        let profiler = Arc::new(PhaseProfiler::new());
+        fabric.set_profiler(profiler.clone());
+        let xref = vec![1.0f32; 8];
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        fabric.collect().unwrap();
+        let snap = profiler.snapshot();
+        assert_eq!(snap["wait.r0"].1, 1);
+        assert_eq!(snap["wait.r1"].1, 1);
+        fabric.shutdown().unwrap();
+    }
+
+    // --- pacer --------------------------------------------------------
+
+    #[test]
+    fn pacer_zero_staleness_is_lockstep() {
+        let mut p = AsyncPacer::new(2, 3, 0);
+        assert_eq!(p.dispatchable(), vec![0, 1]);
+        p.mark_dispatched(0);
+        p.mark_dispatched(1);
+        assert!(p.dispatchable().is_empty());
+        p.on_report(0);
+        // replica 0 finished round 0 but replica 1 hasn't: lockstep
+        // holds replica 0 back
+        assert!(p.dispatchable().is_empty());
+        p.on_report(1);
+        assert_eq!(p.dispatchable(), vec![0, 1]);
+        assert_eq!(p.watermark(), 1);
+    }
+
+    #[test]
+    fn pacer_bounds_the_lead_over_the_slowest() {
+        let mut p = AsyncPacer::new(2, 10, 2);
+        // replica 0 races ahead while replica 1 never reports
+        p.mark_dispatched(1);
+        for _ in 0..3 {
+            assert!(p.dispatchable().contains(&0));
+            p.mark_dispatched(0);
+            p.on_report(0);
+        }
+        // done = [3, 0]: replica 0's next round (3) would lead by 3 > 2
+        assert!(p.dispatchable().is_empty());
+        p.on_report(1); // done = [3, 1]
+        assert_eq!(p.dispatchable(), vec![0, 1]);
+        assert_eq!(p.watermark(), 1);
+    }
+
+    #[test]
+    fn pacer_finished_replicas_stop_gating() {
+        // replica 0 has finished all rounds; replica 1 must still be
+        // dispatchable even at staleness 0
+        let mut p = AsyncPacer::resume(vec![2, 1], 2, 0);
+        assert_eq!(p.dispatchable(), vec![1]);
+        p.mark_dispatched(1);
+        p.on_report(1);
+        assert!(p.all_done());
+        assert!(p.dispatchable().is_empty());
+    }
+
+    #[test]
+    fn pacer_resume_continues_from_uneven_stamps() {
+        let p = AsyncPacer::resume(vec![5, 3, 4], 8, 2);
+        assert_eq!(p.watermark(), 3);
+        // replica 0 would run round 5, lead 2 over the slowest: allowed;
+        // a lead of 3 would not be
+        assert_eq!(p.dispatchable(), vec![0, 1, 2]);
+        let tight = AsyncPacer::resume(vec![6, 3, 4], 8, 2);
+        assert_eq!(tight.dispatchable(), vec![1, 2]);
     }
 }

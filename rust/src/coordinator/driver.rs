@@ -16,13 +16,14 @@ use anyhow::Result;
 
 use crate::config::{Algo, RunConfig};
 use crate::coordinator::checkpoint::Checkpoint;
-use crate::coordinator::comm::ReduceFabric;
+use crate::coordinator::comm::{ReduceFabric, RoundReport};
 use crate::coordinator::engine::{RoundAlgo, RoundCtx, RoundEngine};
 use crate::coordinator::replica::{run_replica, ReplicaCfg};
 use crate::coordinator::sgd_dp::GradAvgAlgo;
 use crate::coordinator::spec::CoupledSpec;
 use crate::data::batcher::Augment;
 use crate::data::Dataset;
+use crate::opt::vecmath;
 use crate::runtime::ModelManifest;
 
 // Shared helpers re-exported from the engine (their historical home —
@@ -135,6 +136,23 @@ impl RoundAlgo for CoupledAlgo {
         }
     }
 
+    fn async_update(&mut self, report: &RoundReport, ctx: &RoundCtx)
+                    -> Result<()> {
+        if self.spec.reduce {
+            // eq. (5)-style elastic partial update, per replica instead
+            // of the full (8d) mean: x <- x + beta (x^a - x) with the
+            // coupling's moving rate beta = eta/rho (annealed by
+            // scoping, clamped so late rounds never overshoot)
+            let beta =
+                (ctx.lr * ctx.scoping.rho_inv()).clamp(0.0, 1.0);
+            vecmath::relax(&mut self.xref, &report.params, beta);
+        } else {
+            // unreduced sequential algorithms adopt the lone trajectory
+            self.xref.copy_from_slice(&report.params);
+        }
+        Ok(())
+    }
+
     fn params(&self) -> &[f32] {
         &self.xref
     }
@@ -185,6 +203,48 @@ mod tests {
         algo.restore_state(&ck).unwrap();
         assert_eq!(algo.params(), &[3.0, 4.0]);
         assert_eq!(algo.into_params(), vec![3.0, 4.0]);
+    }
+
+    /// The async partial update is the eq. (5) elastic relaxation:
+    /// x <- x + beta (x^a - x) with beta = eta/rho, clamped to [0, 1].
+    #[test]
+    fn async_update_relaxes_toward_the_report() {
+        let cfg = RunConfig::new("mlp_synth", Algo::Parle);
+        let mut algo = CoupledAlgo::new(&cfg);
+        algo.init_master(vec![0.0, 2.0]);
+        let scoping = crate::opt::Scoping::constant(1.0, 2.0); // 1/rho=0.5
+        let ctx = RoundCtx {
+            round: 3,
+            lr: 0.5,
+            scoping: &scoping,
+        };
+        let report = RoundReport {
+            replica: 1,
+            round: 3,
+            params: vec![4.0, -2.0],
+            train_loss: 0.0,
+            train_err: 0.0,
+            step_s: 0.0,
+        };
+        // beta = lr / rho = 0.25: x = x + 0.25 (x^a - x)
+        algo.async_update(&report, &ctx).unwrap();
+        assert_eq!(algo.params(), &[1.0, 1.0]);
+        // beta clamps at 1 (adopt) when eta/rho exceeds it
+        let hot = RoundCtx {
+            round: 4,
+            lr: 10.0,
+            scoping: &scoping,
+        };
+        algo.async_update(&report, &hot).unwrap();
+        assert_eq!(algo.params(), &[4.0, -2.0]);
+        // unreduced sequential specs adopt outright regardless of beta
+        let mut seq = CoupledAlgo::new(&RunConfig::new(
+            "mlp_synth",
+            Algo::EntropySgd,
+        ));
+        seq.init_master(vec![9.0, 9.0]);
+        seq.async_update(&report, &ctx).unwrap();
+        assert_eq!(seq.params(), &[4.0, -2.0]);
     }
 
     fn dummy_manifest(batch: usize) -> ModelManifest {

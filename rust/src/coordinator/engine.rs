@@ -27,6 +27,24 @@
 //! function of the round index, a resumed run produces the same final
 //! params and curve as an uninterrupted one.
 //!
+//! # Synchronous barrier vs asynchronous event loop
+//!
+//! With `cfg.comm_mode == Sync` (the default) the engine runs the
+//! paper's round barrier: broadcast, collect every report, one master
+//! update — now expressed as the degenerate case of the fabric's event
+//! stream (collect-until-all-reported), bit-identical in every
+//! deterministic field to the pre-refactor barrier. With `Async` the
+//! engine becomes an event loop: an [`AsyncPacer`] hands each replica
+//! its next L-step leg as soon as it is allowed to run one, the master
+//! applies an elastic partial update per arriving report
+//! ([`RoundAlgo::async_update`]), and `cfg.max_staleness` bounds how
+//! far any replica runs ahead of the slowest. Cadenced work — scoping
+//! annealing, evaluation, checkpoints — keys off the **watermark**
+//! (rounds completed by every replica), so cadence counts stay
+//! deterministic even though the update order is not. Checkpoints in
+//! either mode stamp per-replica `w<id>.rounds_done` so an async run
+//! resumes each replica at its own round.
+//!
 //! # Overlapped evaluation
 //!
 //! Evaluation runs on a dedicated thread with its own PJRT session (one
@@ -46,9 +64,10 @@ use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{RunConfig, ScopingCfg};
+use crate::config::{CommMode, RunConfig, ScopingCfg};
 use crate::coordinator::checkpoint::Checkpoint;
-use crate::coordinator::comm::{ReduceFabric, RoundConsts, WorkerState};
+use crate::coordinator::comm::{AsyncPacer, ReduceFabric, RoundConsts,
+                               RoundReport, WorkerState};
 use crate::data::batcher::{Augment, Batch, Batcher};
 use crate::data::{build, split_shards, Dataset};
 use crate::info;
@@ -128,6 +147,17 @@ pub trait RoundAlgo {
     /// The master-side update after the barrier (the profiler's
     /// `reduce` phase): consume the fabric's collected reports.
     fn master_update(&mut self, fabric: &ReduceFabric, ctx: &RoundCtx);
+
+    /// Asynchronous partial update for one arriving replica report
+    /// (`--comm-mode async`): apply the eq. (5)-style elastic coupling
+    /// for this single replica instead of the full-barrier reduce.
+    /// `ctx` is evaluated at the *report's* round stamp (replicas sit
+    /// on different rounds). Strategies that cannot update
+    /// incrementally keep the default error.
+    fn async_update(&mut self, _report: &RoundReport, _ctx: &RoundCtx)
+                    -> Result<()> {
+        bail!("{} does not support --comm-mode async", self.name())
+    }
 
     /// Current master parameters (evaluation + checkpoint snapshot).
     fn params(&self) -> &[f32];
@@ -209,7 +239,8 @@ impl<'a> RoundEngine<'a> {
         };
 
         // --- workers onto the fabric -------------------------------------
-        let mut fabric = ReduceFabric::new(groups, cfg.comm);
+        let mut fabric = ReduceFabric::new(groups.clone(), cfg.comm);
+        fabric.set_profiler(profiler.clone());
         let meter = fabric.meter();
         algo.spawn_workers(&mut fabric, &datasets, augment)?;
 
@@ -236,6 +267,9 @@ impl<'a> RoundEngine<'a> {
         // --- resume -------------------------------------------------------
         let mut curve = Curve::new();
         let mut start_round = 0u64;
+        // per-replica completed-round stamps (all equal in sync mode;
+        // the async pacer resumes each replica at its own round)
+        let mut worker_rounds: Vec<u64> = vec![0; n_workers];
         let mut wall_offset = 0.0f64;
         let mut step_seconds = 0.0f64;
         let mut comm_offset = 0u64;
@@ -307,6 +341,22 @@ impl<'a> RoundEngine<'a> {
                      {total_rounds} rounds"
                 );
             }
+            worker_rounds =
+                unpack_worker_rounds(&ck, n_workers, start_round)?;
+            if cfg.comm_mode == CommMode::Sync
+                && worker_rounds.iter().any(|&r| r != start_round)
+            {
+                // covers both uneven stamps and stamps that are even
+                // but ahead of the frozen checkpoint round — either way
+                // worker state is not at a synchronous barrier
+                bail!(
+                    "checkpoint per-replica round stamps \
+                     (w<id>.rounds_done = {worker_rounds:?}) are not \
+                     aligned with its round counter ({start_round}) — it \
+                     was written mid-async run; resume it with \
+                     --comm-mode async"
+                );
+            }
             scoping.set_rounds(ck.require_meta("scoping_rounds")? as u64);
             wall_offset = ck.meta_value("wall_s").unwrap_or(0.0);
             step_seconds = ck.meta_value("step_seconds").unwrap_or(0.0);
@@ -368,73 +418,222 @@ impl<'a> RoundEngine<'a> {
         };
 
         // --- round loop ---------------------------------------------------
-        for round in start_round..total_rounds {
-            let epoch = round as f64 * spr / b as f64;
-            let lr = cfg.lr.at(epoch);
-            let ctx = RoundCtx {
-                round,
-                lr,
-                scoping: &scoping,
-            };
-            {
-                let refs = algo.refs();
-                fabric.broadcast(algo.consts(&ctx), &refs);
+        if cfg.comm_mode == CommMode::Async {
+            // Asynchronous event loop: each replica runs legs at its own
+            // pace; the master consumes one report event at a time and
+            // applies the strategy's elastic partial update. Cadenced
+            // work keys off the watermark (rounds completed by EVERY
+            // replica) so eval/checkpoint/scoping counts stay
+            // deterministic even though the update order is not.
+            let staleness = cfg.max_staleness as u64;
+            let mut pacer =
+                AsyncPacer::resume(worker_rounds, total_rounds, staleness);
+            let mut completed = start_round;
+            // per-replica latest train stats (feed curve points and the
+            // final record; a replica that has not reported yet is NaN)
+            let mut rep_loss = vec![f64::NAN; n_workers];
+            let mut rep_err = vec![f64::NAN; n_workers];
+            // a due checkpoint quiesces the fabric (no dispatching)
+            // until every in-flight leg has drained, then writes
+            let mut ckpt_due = false;
+            loop {
+                // cadence work unlocked by the watermark. Frozen while a
+                // checkpoint is due: the drain below can advance the
+                // watermark further, and the write must happen (and be
+                // `{round}`-stamped) at exactly the round that requested
+                // it — deferred steps are processed right after the
+                // write, so nothing is skipped.
+                while !ckpt_due && completed < pacer.watermark() {
+                    completed += 1;
+                    scoping.step();
+                    if rep_loss.iter().any(|v| v.is_finite()) {
+                        last_train =
+                            (mean_finite(&rep_loss), mean_finite(&rep_err));
+                    }
+                    let is_last = completed == total_rounds;
+                    if is_last || eval_due(completed - 1, eval_every) {
+                        let epoch0 =
+                            (completed - 1) as f64 * spr / b as f64;
+                        let pending = Pending {
+                            round: completed - 1,
+                            total_rounds,
+                            lr: cfg.lr.at(epoch0),
+                            gamma: scoping.gamma(),
+                            rho: scoping.rho(),
+                            epoch: epoch0 + spr / b as f64,
+                            train_loss: last_train.0,
+                            train_err: last_train.1,
+                        };
+                        evaluator.request(
+                            algo.params(),
+                            pending,
+                            &mut curve,
+                            &wall,
+                            wall_offset,
+                            label,
+                        )?;
+                    }
+                    if cfg.checkpoint_every_rounds > 0
+                        && completed % cfg.checkpoint_every_rounds as u64
+                            == 0
+                    {
+                        ckpt_due = true;
+                    }
+                }
+                if ckpt_due {
+                    if pacer.inflight() == 0 {
+                        // quiescent: workers are parked in their command
+                        // receive, the snapshot barrier is safe
+                        evaluator.drain(&mut curve, label)?;
+                        let path = checkpoint_path(cfg, label, completed);
+                        write_checkpoint(
+                            &path,
+                            cfg,
+                            &algo,
+                            &fabric,
+                            CkState {
+                                next_round: completed,
+                                rounds_done: pacer.done(),
+                                scoping_rounds: scoping.rounds(),
+                                wall_s: wall_offset + wall.elapsed_s(),
+                                step_seconds,
+                                comm_bytes: comm_offset + meter.bytes(),
+                                last_train,
+                                curve: &curve,
+                                phases: profiler.snapshot(),
+                            },
+                        )?;
+                        info!(
+                            "{label} checkpoint round {completed} -> {path}"
+                        );
+                        ckpt_due = false;
+                        continue;
+                    }
+                    // else: stop dispatching and drain a report below
+                } else {
+                    if pacer.all_done() {
+                        break;
+                    }
+                    // refs are invariant within the iteration (updates
+                    // only happen per received report, below)
+                    let refs = algo.refs();
+                    for r in pacer.dispatchable() {
+                        let k = pacer.next_round(r);
+                        let sc = scoping_at(&scoping, k);
+                        let epoch = k as f64 * spr / b as f64;
+                        let ctx = RoundCtx {
+                            round: k,
+                            lr: cfg.lr.at(epoch),
+                            scoping: &sc,
+                        };
+                        let consts = algo.consts(&ctx);
+                        fabric.send_round_to(r, k, consts,
+                                             refs[groups[r]]);
+                        pacer.mark_dispatched(r);
+                    }
+                }
+                if pacer.inflight() == 0 {
+                    // unreachable: the slowest unfinished replica is
+                    // always dispatchable (lead 0 <= any staleness)
+                    bail!("async pacer stalled with no legs in flight");
+                }
+                let rep = fabric.recv_report()?;
+                // mean compute depth across replicas approximates the
+                // async run's critical path (no barrier to take a max
+                // over); comm_ratio stays comparable with sync runs
+                step_seconds += rep.step_s / n_workers as f64;
+                rep_loss[rep.replica] = rep.train_loss;
+                rep_err[rep.replica] = rep.train_err;
+                {
+                    let sc = scoping_at(&scoping, rep.round);
+                    let epoch = rep.round as f64 * spr / b as f64;
+                    let ctx = RoundCtx {
+                        round: rep.round,
+                        lr: cfg.lr.at(epoch),
+                        scoping: &sc,
+                    };
+                    profiler
+                        .scope("reduce", || algo.async_update(&rep, &ctx))?;
+                }
+                pacer.on_report(rep.replica);
+                fabric.recycle(rep);
             }
-            // barrier = synchronous reduce, like the paper
-            let stats = fabric.collect()?;
-            step_seconds += stats.max_step_s;
-            last_train = (stats.mean_loss, stats.mean_err);
-
-            profiler.scope("reduce", || algo.master_update(&fabric, &ctx));
-            scoping.step();
-
-            let is_last = round + 1 == total_rounds;
-            if is_last || eval_due(round, eval_every) {
-                let pending = Pending {
+            if rep_loss.iter().any(|v| v.is_finite()) {
+                last_train = (mean_finite(&rep_loss), mean_finite(&rep_err));
+            }
+        } else {
+            for round in start_round..total_rounds {
+                let epoch = round as f64 * spr / b as f64;
+                let lr = cfg.lr.at(epoch);
+                let ctx = RoundCtx {
                     round,
-                    total_rounds,
                     lr,
-                    gamma: scoping.gamma(),
-                    rho: scoping.rho(),
-                    // end-of-round epoch, identical across strategies so
-                    // curves are comparable
-                    epoch: epoch + spr / b as f64,
-                    train_loss: last_train.0,
-                    train_err: last_train.1,
+                    scoping: &scoping,
                 };
-                evaluator.request(
-                    algo.params(),
-                    pending,
-                    &mut curve,
-                    &wall,
-                    wall_offset,
-                    label,
-                )?;
-            }
+                {
+                    let refs = algo.refs();
+                    fabric.broadcast(algo.consts(&ctx), &refs);
+                }
+                // barrier = synchronous reduce, like the paper: the
+                // degenerate collect-until-all-reported of the event loop
+                let stats = fabric.collect()?;
+                step_seconds += stats.max_step_s;
+                last_train = (stats.mean_loss, stats.mean_err);
 
-            if cfg.checkpoint_every_rounds > 0
-                && (round + 1) % cfg.checkpoint_every_rounds as u64 == 0
-            {
-                // the checkpoint must carry the curve up to this round
-                evaluator.drain(&mut curve, label)?;
-                let path = checkpoint_path(cfg, label, round + 1);
-                write_checkpoint(
-                    &path,
-                    cfg,
-                    &algo,
-                    &fabric,
-                    CkState {
-                        next_round: round + 1,
-                        scoping_rounds: scoping.rounds(),
-                        wall_s: wall_offset + wall.elapsed_s(),
-                        step_seconds,
-                        comm_bytes: comm_offset + meter.bytes(),
-                        last_train,
-                        curve: &curve,
-                        phases: profiler.snapshot(),
-                    },
-                )?;
-                info!("{label} checkpoint round {} -> {path}", round + 1);
+                profiler
+                    .scope("reduce", || algo.master_update(&fabric, &ctx));
+                scoping.step();
+
+                let is_last = round + 1 == total_rounds;
+                if is_last || eval_due(round, eval_every) {
+                    let pending = Pending {
+                        round,
+                        total_rounds,
+                        lr,
+                        gamma: scoping.gamma(),
+                        rho: scoping.rho(),
+                        // end-of-round epoch, identical across strategies
+                        // so curves are comparable
+                        epoch: epoch + spr / b as f64,
+                        train_loss: last_train.0,
+                        train_err: last_train.1,
+                    };
+                    evaluator.request(
+                        algo.params(),
+                        pending,
+                        &mut curve,
+                        &wall,
+                        wall_offset,
+                        label,
+                    )?;
+                }
+
+                if cfg.checkpoint_every_rounds > 0
+                    && (round + 1) % cfg.checkpoint_every_rounds as u64 == 0
+                {
+                    // the checkpoint must carry the curve up to this round
+                    evaluator.drain(&mut curve, label)?;
+                    let path = checkpoint_path(cfg, label, round + 1);
+                    write_checkpoint(
+                        &path,
+                        cfg,
+                        &algo,
+                        &fabric,
+                        CkState {
+                            next_round: round + 1,
+                            rounds_done: &vec![round + 1; n_workers],
+                            scoping_rounds: scoping.rounds(),
+                            wall_s: wall_offset + wall.elapsed_s(),
+                            step_seconds,
+                            comm_bytes: comm_offset + meter.bytes(),
+                            last_train,
+                            curve: &curve,
+                            phases: profiler.snapshot(),
+                        },
+                    )?;
+                    info!("{label} checkpoint round {} -> {path}",
+                          round + 1);
+                }
             }
         }
 
@@ -513,6 +712,10 @@ pub fn master_vec<'c>(ck: &'c Checkpoint, name: &str) -> Result<&'c [f32]> {
 /// Snapshot of the run's accumulated totals for a checkpoint write.
 struct CkState<'a> {
     next_round: u64,
+    /// Per-replica completed-round stamps (`w<id>.rounds_done`): all
+    /// equal to `next_round` at a synchronous barrier, per-replica in
+    /// async mode so each replica resumes at its own round.
+    rounds_done: &'a [u64],
     scoping_rounds: u64,
     wall_s: f64,
     step_seconds: f64,
@@ -520,6 +723,54 @@ struct CkState<'a> {
     last_train: (f64, f64),
     curve: &'a Curve,
     phases: std::collections::BTreeMap<String, (f64, u64)>,
+}
+
+/// The scoping schedule's values at an arbitrary round index. The async
+/// loop dispatches replicas sitting on different rounds, so the annealed
+/// constants are computed per dispatch; the schedule is a pure function
+/// of its round counter, so a counter override reproduces it exactly.
+fn scoping_at(base: &Scoping, round: u64) -> Scoping {
+    let mut s = base.clone();
+    s.set_rounds(round);
+    s
+}
+
+/// Mean of the finite entries (per-replica stats where a replica may
+/// not have reported yet); NaN when none are finite.
+fn mean_finite(v: &[f64]) -> f64 {
+    let (sum, n) = v
+        .iter()
+        .filter(|x| x.is_finite())
+        .fold((0.0f64, 0u64), |(s, n), x| (s + x, n + 1));
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Per-replica completed-round stamps from a checkpoint's
+/// `w<id>.rounds_done` meta keys. Absent keys (checkpoints written
+/// before the async fabric) fall back to the global round — those were
+/// written at a synchronous barrier where every replica sat on the same
+/// round.
+fn unpack_worker_rounds(ck: &Checkpoint, n_workers: usize, round: u64)
+                        -> Result<Vec<u64>> {
+    (0..n_workers)
+        .map(|w| {
+            let r = ck
+                .meta_value(&format!("w{w}.rounds_done"))
+                .map(|v| v as u64)
+                .unwrap_or(round);
+            if r < round {
+                bail!(
+                    "checkpoint worker {w} rounds_done {r} is below the \
+                     global round {round}"
+                );
+            }
+            Ok(r)
+        })
+        .collect()
 }
 
 /// Merge checkpointed phase totals back into the profiler (resume):
@@ -546,6 +797,7 @@ fn write_checkpoint<A: RoundAlgo>(
     st: CkState,
 ) -> Result<()> {
     let states = fabric.snapshot_workers()?;
+    debug_assert_eq!(states.len(), st.rounds_done.len());
     let fp = cfg.replay_fingerprint();
     let mut ck = Checkpoint::new(&cfg.model, algo.params().to_vec())
         .with("round", st.next_round as f64)
@@ -574,10 +826,15 @@ fn write_checkpoint<A: RoundAlgo>(
         ck = ck.with_vec_f32(&format!("master.{name}"), v);
     }
     for ws in states {
-        ck = ck.with(
-            &format!("w{}.batches_drawn", ws.replica),
-            ws.batches_drawn as f64,
-        );
+        ck = ck
+            .with(
+                &format!("w{}.batches_drawn", ws.replica),
+                ws.batches_drawn as f64,
+            )
+            .with(
+                &format!("w{}.rounds_done", ws.replica),
+                st.rounds_done[ws.replica] as f64,
+            );
         for (name, v) in ws.vecs {
             ck = ck.with_vec_f32(&format!("w{}.{}", ws.replica, name), v);
         }
@@ -1062,6 +1319,51 @@ mod tests {
         assert_eq!(profiler.snapshot()["reduce"], (13.0, 101));
         assert_eq!(profiler.snapshot()["eval"], (3.0, 10));
         assert!(!profiler.snapshot().contains_key("unrelated"));
+    }
+
+    #[test]
+    fn scoping_at_reproduces_the_schedule_at_any_round() {
+        let mut base = Scoping::paper(50);
+        for _ in 0..10 {
+            base.step();
+        }
+        // values at round 37 are identical whether stepped to or jumped
+        // to — the async loop relies on this for per-dispatch constants
+        let mut stepped = Scoping::paper(50);
+        for _ in 0..37 {
+            stepped.step();
+        }
+        let jumped = scoping_at(&base, 37);
+        assert_eq!(jumped.gamma().to_bits(), stepped.gamma().to_bits());
+        assert_eq!(jumped.rho().to_bits(), stepped.rho().to_bits());
+        // and the base schedule is untouched
+        assert_eq!(base.rounds(), 10);
+    }
+
+    #[test]
+    fn mean_finite_skips_unreported_replicas() {
+        assert_eq!(mean_finite(&[1.0, f64::NAN, 3.0]), 2.0);
+        assert_eq!(mean_finite(&[4.0]), 4.0);
+        assert!(mean_finite(&[f64::NAN, f64::NAN]).is_nan());
+        assert!(mean_finite(&[]).is_nan());
+    }
+
+    /// Per-replica round stamps round-trip through the checkpoint meta
+    /// layout; checkpoints without them (pre-async) fall back to the
+    /// global round, and stamps below it are rejected.
+    #[test]
+    fn worker_rounds_unpack_and_fallback() {
+        let ck = Checkpoint::new("m", vec![])
+            .with("w0.rounds_done", 7.0)
+            .with("w1.rounds_done", 5.0);
+        assert_eq!(unpack_worker_rounds(&ck, 2, 5).unwrap(), vec![7, 5]);
+        // a third worker without a stamp falls back to the global round
+        assert_eq!(
+            unpack_worker_rounds(&ck, 3, 5).unwrap(),
+            vec![7, 5, 5]
+        );
+        // a stamp below the global round is corrupt
+        assert!(unpack_worker_rounds(&ck, 2, 6).is_err());
     }
 
     /// Worker states written by `write_checkpoint`'s key layout come

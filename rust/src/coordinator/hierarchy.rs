@@ -29,7 +29,7 @@ use anyhow::Result;
 
 use crate::config::RunConfig;
 use crate::coordinator::checkpoint::Checkpoint;
-use crate::coordinator::comm::ReduceFabric;
+use crate::coordinator::comm::{ReduceFabric, RoundReport};
 use crate::coordinator::driver::{epoch_batches, TrainOutput};
 use crate::coordinator::engine::{master_vec, RoundAlgo, RoundCtx,
                                  RoundEngine};
@@ -192,6 +192,28 @@ impl RoundAlgo for HierarchyAlgo {
         vecmath::mean_into_par(&mut self.sheriff, &views);
     }
 
+    fn async_update(&mut self, report: &RoundReport, ctx: &RoundCtx)
+                    -> Result<()> {
+        // Two-level eq. (5)-style relaxation per arriving worker: the
+        // worker's deputy moves toward the worker's iterate (the role
+        // the group-mean outer step plays at the barrier), feels the
+        // elastic pull toward the sheriff, and the sheriff tracks the
+        // deputy mean incrementally (1/deputies of the elastic rate —
+        // one full sweep of workers moves it by ~beta_s).
+        let d = report.replica / self.workers_per_deputy;
+        let beta_w = ctx.lr.clamp(0.0, 1.0);
+        let beta_s =
+            (ctx.lr * ctx.scoping.rho_inv()).clamp(0.0, 1.0);
+        vecmath::relax(&mut self.deps[d], &report.params, beta_w);
+        vecmath::relax(&mut self.deps[d], &self.sheriff, beta_s);
+        vecmath::relax(
+            &mut self.sheriff,
+            &self.deps[d],
+            beta_s / self.deputies as f32,
+        );
+        Ok(())
+    }
+
     fn params(&self) -> &[f32] {
         &self.sheriff
     }
@@ -270,6 +292,40 @@ mod tests {
         assert_eq!(algo.params(), &[0.5f32; 4]);
         // deputies start at the sheriff's initialization
         assert_eq!(algo.refs()[0], &[0.5f32; 4]);
+    }
+
+    /// The async per-worker relaxation touches exactly the reporting
+    /// worker's deputy (plus the sheriff), with the group map of the
+    /// barrier path.
+    #[test]
+    fn async_update_relaxes_the_right_deputy() {
+        let mut cfg = RunConfig::new("mlp_synth", Algo::Parle);
+        cfg.lr.base = 0.5;
+        let mut algo = HierarchyAlgo::new(&cfg, 2, 2);
+        algo.init_master(vec![0.0f32, 0.0]);
+        let scoping = crate::opt::Scoping::constant(1.0, 1.0);
+        let ctx = RoundCtx {
+            round: 0,
+            lr: 0.5,
+            scoping: &scoping,
+        };
+        // worker 3 belongs to deputy 1
+        let report = RoundReport {
+            replica: 3,
+            round: 0,
+            params: vec![4.0, 4.0],
+            train_loss: 0.0,
+            train_err: 0.0,
+            step_s: 0.0,
+        };
+        algo.async_update(&report, &ctx).unwrap();
+        // beta_w = 0.5 pulls deputy 1 to 2.0, beta_s = 0.5 pulls it
+        // halfway back to the sheriff (0) -> 1.0; the sheriff then
+        // tracks it by beta_s / deputies = 0.25 -> 0.25
+        assert_eq!(algo.deps[1], vec![1.0, 1.0]);
+        assert_eq!(algo.sheriff, vec![0.25, 0.25]);
+        // deputy 0 untouched
+        assert_eq!(algo.deps[0], vec![0.0, 0.0]);
     }
 
     /// Deputies and their velocities survive the checkpoint key layout.

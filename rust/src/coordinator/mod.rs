@@ -2,40 +2,49 @@
 //!
 //! Since the RoundEngine refactor the layer splits into one **engine**
 //! that owns the training lifecycle and small **algorithm strategies**
-//! that parameterize it:
+//! that parameterize it; since the event-fabric refactor the engine
+//! drives that lifecycle in one of two **communication modes** over a
+//! single report event stream:
 //!
 //! ```text
 //!              RoundEngine (engine.rs)
 //!   session open · dataset build/shard · worker spawn
-//!   round loop · scoping/LR schedules · eval cadence
-//!   checkpoint/resume · curve + RunRecord · shutdown
+//!   scoping/LR schedules · eval cadence · checkpoint/resume
+//!   curve + RunRecord · shutdown
+//!   ┌─ sync:  round barrier — broadcast · collect-all · reduce
+//!   └─ async: event loop — AsyncPacer dispatches per replica,
+//!             elastic partial update per arriving report,
+//!             max_staleness bounds the lead over the slowest
 //!        │                                   ▲
 //!        │ RoundAlgo trait                   │ results
 //!        ▼                                   │
 //!   ┌───────────────┬───────────────┬────────────────┐
 //!   │ CoupledAlgo   │ GradAvgAlgo   │ HierarchyAlgo  │
 //!   │ (driver.rs)   │ (sgd_dp.rs)   │ (hierarchy.rs) │
-//!   │ Parle/Entropy │ sync data-    │ deputies under │
-//!   │ /Elastic/SGD  │ parallel SGD  │ a sheriff §3.2 │
+//!   │ Parle/Entropy │ data-parallel │ deputies under │
+//!   │ /Elastic/SGD  │ SGD baseline  │ a sheriff §3.2 │
 //!   └───────────────┴───────────────┴────────────────┘
 //!        │ workers: run_replica / grad_worker (replica.rs)
 //!        ▼
 //!              ReduceFabric (comm.rs)
-//!   broadcast/collect/reduce · snapshot/restore barrier
-//!   double-buffered slabs · recycled report buffers
-//!   simulated interconnect · byte metering
+//!   one MPSC report event stream (id + round stamped)
+//!   broadcast / send_round_to · collect / recv_report · reduce
+//!   snapshot/restore barrier · double-buffered slabs
+//!   recycled report buffers · simulated interconnect
+//!   byte metering · per-replica exposed-wait (wait.r<id>)
 //! ```
 //!
 //! Topology: `n` replica worker **threads**, each owning a private PJRT
 //! [`crate::runtime::Session`] (one "device" per replica, exactly the
 //! paper's one-GPU-per-replica layout), plus the master thread that owns
 //! the reference variable `x`, the scoping schedule, and the
-//! reduce/broadcast fabric. Evaluation gets its own thread + session
+//! communication fabric. Evaluation gets its own thread + session
 //! (`overlap_eval`, default on) so the validation sweep overlaps the
 //! next round's compute instead of extending the round barrier.
 //!
-//! A communication **round** = `L` inner minibatch steps on every replica
-//! followed by one exchange with the master:
+//! A communication **round** = `L` inner minibatch steps on a replica
+//! followed by one exchange with the master. In `--comm-mode sync`
+//! (default, the paper's algorithm) the exchange is a barrier:
 //!
 //! ```text
 //!  master ──(xref, lr, 1/γ, 1/ρ)──▶ replica a      [broadcast, O(N)]
@@ -45,17 +54,31 @@
 //!  master: x ← mean_a x^a (8d), scoping.step() (9) [reduce]
 //! ```
 //!
+//! In `--comm-mode async` (the elastic averaging variant the paper's
+//! loose coupling admits — Zhang et al. 2015; staleness tolerance per
+//! Yu et al. 2018) there is no barrier: the master hands each replica
+//! its next leg the moment it reports, applies the eq. (5)-style
+//! partial update `x ← x + β (x^a − x)` per arriving report, and holds
+//! back any replica more than `max_staleness` rounds ahead of the
+//! slowest. Cadenced work (scoping, eval, checkpoints) keys off the
+//! *watermark* — rounds completed by every replica — so those counts
+//! stay deterministic even though the update order is not.
+//!
 //! All four algorithms in the paper are projections of this loop — see
 //! [`spec::CoupledSpec`]. Synchronous data-parallel SGD (the baseline)
 //! runs the same engine with L = 1 and gradients as payloads
-//! ([`sgd_dp::GradAvgAlgo`]); the hierarchical variant runs it with one
-//! broadcast group per deputy ([`hierarchy::HierarchyAlgo`]).
+//! ([`sgd_dp::GradAvgAlgo`]; its async mode is Downpour-style gradient
+//! application); the hierarchical variant runs it with one broadcast
+//! group per deputy ([`hierarchy::HierarchyAlgo`]).
 //!
 //! **Checkpoint/resume** is round-granular: the engine periodically
 //! snapshots the full training state — master + per-worker vectors,
-//! RNG draw counts, scoping round, partial curve — through the fabric's
-//! snapshot barrier into a [`checkpoint::Checkpoint`], and `--resume`
-//! reproduces the uninterrupted run's final params and curve exactly.
+//! RNG draw counts, per-replica round stamps (`w<id>.rounds_done`),
+//! scoping round, partial curve — through the fabric's snapshot barrier
+//! into a [`checkpoint::Checkpoint`]. A sync-mode `--resume` reproduces
+//! the uninterrupted run's final params and curve exactly; an async
+//! resume continues each replica at its own round stamp (cadence fields
+//! stay deterministic, the trajectory is not replayable by design).
 
 pub mod checkpoint;
 pub mod comm;

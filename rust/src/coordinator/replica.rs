@@ -14,6 +14,16 @@
 //! unavoidable per-step minibatches), not the O(P*L) the old
 //! literal-marshalling loop paid — the same compute/communication
 //! asymmetry the paper's outer loop exploits, applied one level down.
+//!
+//! The worker body is oblivious to the engine's communication mode: it
+//! runs whatever round the fabric hands it, against whatever reference
+//! that round carries. Under the synchronous barrier every replica gets
+//! the same round in lockstep; under `--comm-mode async` the master
+//! re-dispatches a replica the moment its report arrives, so this same
+//! loop runs legs continuously against its last-seen anchor, each
+//! stamped with the replica's own round index (which feeds the
+//! per-step seed mixer, keeping dropout/augment streams well-defined
+//! at any staleness).
 
 use std::sync::Arc;
 

@@ -56,6 +56,21 @@ impl GradAvgAlgo {
             gbar: Vec::new(),
         }
     }
+
+    /// One Nesterov master step on gradient `g`:
+    /// v <- mu v - lr (g + wd x);  x <- x + mu v - lr g.
+    /// Shared by the synchronous barrier (g = mean gradient) and the
+    /// asynchronous per-report path (g = one worker's gradient).
+    fn nesterov_step(&mut self, lr: f32, g: &[f32]) {
+        debug_assert_eq!(self.x.len(), g.len());
+        let (mu, wd) = (self.cfg.momentum, self.cfg.weight_decay);
+        for i in 0..self.x.len() {
+            let gi = g[i] + wd * self.x[i];
+            let v_prev = self.v[i];
+            self.v[i] = mu * v_prev - lr * gi;
+            self.x[i] += -mu * v_prev + (1.0 + mu) * self.v[i];
+        }
+    }
 }
 
 impl RoundAlgo for GradAvgAlgo {
@@ -131,16 +146,19 @@ impl RoundAlgo for GradAvgAlgo {
     }
 
     fn master_update(&mut self, fabric: &ReduceFabric, ctx: &RoundCtx) {
-        fabric.reduce_into(&mut self.gbar);
-        // Nesterov: v <- mu v - lr (g + wd x);  x <- x + mu v - lr g
-        let (lr, mu, wd) =
-            (ctx.lr, self.cfg.momentum, self.cfg.weight_decay);
-        for i in 0..self.x.len() {
-            let g = self.gbar[i] + wd * self.x[i];
-            let v_prev = self.v[i];
-            self.v[i] = mu * v_prev - lr * g;
-            self.x[i] += -mu * v_prev + (1.0 + mu) * self.v[i];
-        }
+        let mut gbar = std::mem::take(&mut self.gbar);
+        fabric.reduce_into(&mut gbar);
+        self.nesterov_step(ctx.lr, &gbar);
+        self.gbar = gbar;
+    }
+
+    fn async_update(&mut self, report: &RoundReport, ctx: &RoundCtx)
+                    -> Result<()> {
+        // Downpour-style asynchronous gradient descent: apply each
+        // worker's gradient as it arrives (effective batch B instead of
+        // the barrier's n*B; lr comes annealed at the report's round)
+        self.nesterov_step(ctx.lr, &report.params);
+        Ok(())
     }
 
     fn params(&self) -> &[f32] {
@@ -340,6 +358,46 @@ mod tests {
         assert!((algo.x[0] - 0.62).abs() < 1e-6, "{:?}", algo.x);
         assert!((algo.x[1] + 1.81).abs() < 1e-6, "{:?}", algo.x);
         fabric.shutdown().unwrap();
+    }
+
+    /// The async path applies one worker's gradient through the exact
+    /// Nesterov step the barrier path uses: with a single replica the
+    /// two must agree bit-for-bit.
+    #[test]
+    fn async_update_is_the_nesterov_step_on_one_gradient() {
+        let mut cfg = RunConfig::new("mlp_synth", Algo::SgdDataParallel);
+        cfg.replicas = 1;
+        cfg.momentum = 0.9;
+        cfg.weight_decay = 0.0;
+        let scoping = crate::opt::Scoping::constant(1.0, 1.0);
+        let ctx = RoundCtx {
+            round: 0,
+            lr: 0.5,
+            scoping: &scoping,
+        };
+        let g = vec![0.4f32, -0.2];
+
+        let mut sync = GradAvgAlgo::new(&cfg);
+        sync.init_master(vec![1.0, -2.0]);
+        sync.nesterov_step(ctx.lr, &g);
+
+        let mut async_ = GradAvgAlgo::new(&cfg);
+        async_.init_master(vec![1.0, -2.0]);
+        async_
+            .async_update(
+                &RoundReport {
+                    replica: 0,
+                    round: 0,
+                    params: g,
+                    train_loss: 0.0,
+                    train_err: 0.0,
+                    step_s: 0.0,
+                },
+                &ctx,
+            )
+            .unwrap();
+        assert_eq!(sync.x, async_.x);
+        assert_eq!(sync.v, async_.v);
     }
 
     #[test]

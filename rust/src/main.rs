@@ -82,6 +82,9 @@ fn run() -> Result<()> {
             for (k, v) in &sets {
                 cfg.set(k, v)?;
             }
+            if let Some(mode) = flag("comm-mode") {
+                cfg.comm_mode = parle::config::CommMode::parse(mode)?;
+            }
             if let Some(path) = flag("resume") {
                 cfg.resume_from = Some(path.to_string());
             }
@@ -157,11 +160,22 @@ parle — Rust+JAX+Pallas reproduction of 'Parle: parallelizing SGD'
 USAGE:
   parle train --model <zoo> --algo <parle|elastic|entropy|sgd|sgd-dp>
               [--set key=value ...] [--label name] [--out runs]
-              [--resume <ckpt>]
+              [--comm-mode sync|async] [--resume <ckpt>]
   parle experiment <name|all> [--quick] [--out runs] [--seed N]
   parle perfmodel
   parle list
   parle selftest
+
+COMMUNICATION:
+  --comm-mode sync           the paper's synchronous round barrier
+                             (default; deterministic given a seed)
+  --comm-mode async          asynchronous elastic updates: replicas run
+                             their L-step legs at their own pace, the
+                             master applies eq. (5)-style partial
+                             updates per arriving report
+  --set max_staleness=K      async only: a replica may run at most K
+                             rounds ahead of the slowest one (default
+                             4; 0 = lockstep)
 
 CHECKPOINT/RESUME:
   --set checkpoint_every=N   write a full-state checkpoint every N
@@ -169,9 +183,11 @@ CHECKPOINT/RESUME:
   --set checkpoint_path=P    destination; a {round} placeholder keeps
                              per-round history (default
                              checkpoints/<label>.ck, overwritten)
-  --resume <ckpt>            continue a run from such a checkpoint; the
-                             resumed run reproduces the uninterrupted
-                             run's final params and curve
+  --resume <ckpt>            continue a run from such a checkpoint; a
+                             sync-mode resume reproduces the
+                             uninterrupted run's final params and curve
+                             (async resumes continue each replica at its
+                             own round stamp but are not bit-replayable)
   --set overlap_eval=false   evaluate inside the round barrier instead
                              of on the dedicated eval thread
 

@@ -24,6 +24,17 @@ pub fn copy(out: &mut [f32], x: &[f32]) {
     out.copy_from_slice(x);
 }
 
+/// Elastic relaxation `x <- x + beta * (target - x)` — the eq. (5)-style
+/// partial master update the asynchronous fabric applies per arriving
+/// replica report (EASGD's "moving rate" step). `beta = 0` is a no-op,
+/// `beta = 1` adopts `target` outright.
+pub fn relax(x: &mut [f32], target: &[f32], beta: f32) {
+    debug_assert_eq!(x.len(), target.len());
+    for (o, &t) in x.iter_mut().zip(target) {
+        *o += beta * (t - *o);
+    }
+}
+
 /// Element-wise mean of several replicas into `out` (the (8d) reduce with
 /// the paper's eta'' = rho/n choice: x <- mean_a x^a).
 pub fn mean_into(out: &mut [f32], replicas: &[&[f32]]) {
@@ -179,6 +190,20 @@ mod tests {
         let mut o = vec![1.0, 2.0];
         axpy(&mut o, 0.5, &[2.0, 4.0]);
         assert_eq!(o, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn relax_moves_toward_target() {
+        let mut x = vec![0.0f32, 4.0];
+        let target = vec![2.0f32, 0.0];
+        relax(&mut x, &target, 0.25);
+        assert_eq!(x, vec![0.5, 3.0]);
+        // beta = 0 is a no-op, beta = 1 adopts the target
+        let before = x.clone();
+        relax(&mut x, &target, 0.0);
+        assert_eq!(x, before);
+        relax(&mut x, &target, 1.0);
+        assert_eq!(x, target);
     }
 
     #[test]

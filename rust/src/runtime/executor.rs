@@ -61,10 +61,11 @@ pub struct Session {
     pub manifest: Manifest,
     cache: RefCell<HashMap<(String, String), PjRtLoadedExecutable>>,
     meter: Arc<TransferMeter>,
-    /// Whether buffer-path dispatches have come back untupled (state
-    /// can stay device-resident) or as intact tuple roots (every
-    /// dispatch pays a host round-trip). Unset until the first
-    /// multi-output `execute_buffers` call resolves it.
+    /// Whether dispatches come back untupled (state can stay
+    /// device-resident) or as intact tuple roots (every dispatch pays a
+    /// host round-trip). Unset until the first dispatch that can tell
+    /// resolves it; both execution paths read and feed this cache, so
+    /// the ambiguous single-output probes run at most once per session.
     residency: Cell<Option<bool>>,
 }
 
@@ -176,32 +177,71 @@ impl Session {
         let outs = match bufs.len() {
             0 => bail!("{model}/{step}: executable yielded no result buffers"),
             // Ambiguous single-output case: the one buffer is either an
-            // intact 1-tuple root or the untupled leaf itself. Probe by
-            // attempting the untuple; fall back to the raw literal.
+            // intact 1-tuple root or the untupled leaf itself. Resolve
+            // from the session's cached residency answer; probe (and
+            // cache) only while it is still unknown. `to_tuple` consumes
+            // the literal, so a failed probe costs one extra download —
+            // but at most once per session now, not once per call, and
+            // every transfer lands on the meter.
             1 if art.outputs.len() == 1 => {
-                match bufs[0]
-                    .to_literal_sync()
-                    .with_context(|| {
-                        format!("fetching result of {model}/{step}")
-                    })?
-                    .to_tuple()
-                {
-                    Ok(leaves) if leaves.len() == 1 => {
-                        self.meter.account_download(lit_bytes(&leaves[0]));
-                        leaves
-                    }
-                    _ => {
-                        let lit = bufs[0].to_literal_sync().with_context(
-                            || format!("fetching result of {model}/{step}"),
-                        )?;
+                let lit = bufs[0].to_literal_sync().with_context(|| {
+                    format!("fetching result of {model}/{step}")
+                })?;
+                match self.residency.get() {
+                    Some(true) => {
                         self.meter.account_download(lit_bytes(&lit));
                         vec![lit]
                     }
+                    Some(false) => {
+                        let leaves = lit.to_tuple()?;
+                        if leaves.len() != 1 {
+                            return Err(arity1_violation(
+                                model,
+                                step,
+                                leaves.len(),
+                            ));
+                        }
+                        self.meter.account_download(lit_bytes(&leaves[0]));
+                        leaves
+                    }
+                    None => match lit.to_tuple() {
+                        Ok(leaves) if leaves.len() == 1 => {
+                            self.residency.set(Some(false));
+                            self.meter
+                                .account_download(lit_bytes(&leaves[0]));
+                            leaves
+                        }
+                        Ok(leaves) => {
+                            return Err(arity1_violation(
+                                model,
+                                step,
+                                leaves.len(),
+                            ))
+                        }
+                        Err(_) => {
+                            // not a tuple: the buffer IS the leaf, but
+                            // the probe consumed the literal — re-fetch
+                            // once (cached afterwards) and account both
+                            // transfers the probe cost
+                            self.residency.set(Some(true));
+                            let lit = bufs[0]
+                                .to_literal_sync()
+                                .with_context(|| {
+                                    format!(
+                                        "fetching result of {model}/{step}"
+                                    )
+                                })?;
+                            self.meter
+                                .account_download(2 * lit_bytes(&lit));
+                            vec![lit]
+                        }
+                    },
                 }
             }
             // AOT lowers with return_tuple=True: when the runtime hands
             // the tuple root back as one buffer, untuple on the host.
             1 => {
+                self.residency.set(Some(false));
                 let leaves = bufs[0]
                     .to_literal_sync()
                     .with_context(|| {
@@ -215,10 +255,12 @@ impl Session {
             }
             // Runtimes that untuple on execute hand back one buffer per
             // output leaf; fetch each.
-            _ => bufs
-                .iter()
-                .map(|b| self.download(b))
-                .collect::<Result<Vec<_>>>()?,
+            _ => {
+                self.residency.set(Some(true));
+                bufs.iter()
+                    .map(|b| self.download(b))
+                    .collect::<Result<Vec<_>>>()?
+            }
         };
         if outs.len() != art.outputs.len() {
             bail!(
@@ -281,11 +323,8 @@ impl Session {
                 Some(false) => {
                     let leaves = bufs[0].to_literal_sync()?.to_tuple()?;
                     if leaves.len() != 1 {
-                        bail!(
-                            "{model}/{step}: manifest promises 1 output, \
-                             tuple has {}",
-                            leaves.len()
-                        );
+                        return Err(arity1_violation(model, step,
+                                                    leaves.len()));
                     }
                     self.meter.account_download(lit_bytes(&leaves[0]));
                     Ok(vec![self.upload(&leaves[0])?])
@@ -296,7 +335,16 @@ impl Session {
                         self.meter.account_download(lit_bytes(&leaves[0]));
                         Ok(vec![self.upload(&leaves[0])?])
                     }
-                    _ => {
+                    // A multi-leaf tuple root under an arity-1 manifest
+                    // is a contract violation: error out instead of
+                    // classifying it as an untupled leaf (which would
+                    // poison the residency cache for every later
+                    // dispatch on this session).
+                    Ok(leaves) => {
+                        Err(arity1_violation(model, step, leaves.len()))
+                    }
+                    Err(_) => {
+                        // not a tuple: the buffer is the untupled leaf
                         self.residency.set(Some(true));
                         // the probe still moved the payload down once
                         self.meter
@@ -332,6 +380,15 @@ impl Session {
             ),
         }
     }
+}
+
+/// Contract violation shared by the ambiguous single-output probe
+/// branches of both execution paths: the manifest promises exactly one
+/// output but the runtime's tuple root carries a different leaf count.
+fn arity1_violation(model: &str, step: &str, got: usize) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{model}/{step}: manifest promises 1 output, tuple has {got}"
+    )
 }
 
 fn validate_inputs(

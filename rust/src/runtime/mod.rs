@@ -17,6 +17,7 @@
 
 pub mod artifact;
 pub mod executor;
+pub mod round_driver;
 pub mod tensor;
 
 pub use artifact::{ArtifactSig, LayerInfo, Manifest, ModelManifest, TensorSig};

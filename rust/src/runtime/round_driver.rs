@@ -1,0 +1,133 @@
+//! Shared L-step inner-round exercisers for benches and integration
+//! tests.
+//!
+//! Three call sites (the dispatch-path bench in
+//! `benches/runtime_hot_path.rs` and the two buffer-vs-literal tests in
+//! `tests/integration_runtime.rs`) used to carry their own ~70-line
+//! copy of the same loop: L dispatches of the `inner_step` artifact,
+//! once through the literal-marshalling path and once through the
+//! device-resident buffer path. This module is the single copy. It is
+//! *not* the training path — `coordinator::replica` owns that — just
+//! the standalone harness that proves the two dispatch paths agree
+//! bit-for-bit and differ in transfer bytes.
+//!
+//! Hyperparameters are fixed (`lr 0.1, gain 0.01, alpha 0.75, mu 0.9,
+//! wd 0`), the anchor is the start state, and step `i` uses seed `i` —
+//! exactly what every call site used, so the collapse changes no
+//! numbers.
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use super::executor::Session;
+use super::tensor::{lit_f32, lit_scalar_f32, lit_scalar_i32, scalar_f32,
+                    to_f32};
+
+/// One inner round's inputs: the model, the step count, the start state
+/// (y0 = z0 = anchor; momentum starts at zero) and a fixed minibatch
+/// reused for every step.
+pub struct InnerRound<'a> {
+    pub model: &'a str,
+    pub l_steps: usize,
+    pub state0: &'a [f32],
+    pub xb: &'a Literal,
+    pub yb: &'a Literal,
+}
+
+/// End-of-round state plus the per-step losses.
+pub struct RoundOut {
+    pub y: Vec<f32>,
+    pub z: Vec<f32>,
+    pub mom: Vec<f32>,
+    pub losses: Vec<f32>,
+}
+
+const LR: f32 = 0.1;
+const GAIN: f32 = 0.01;
+const ALPHA: f32 = 0.75;
+const MU: f32 = 0.9;
+const WD: f32 = 0.0;
+
+/// The literal path: re-marshals y/z/mom/anchor up and y/z/mom down on
+/// every step (O(P*L) parameter traffic per round).
+pub fn literal_round(session: &Session, r: &InnerRound) -> Result<RoundOut> {
+    let p = r.state0.len();
+    let mut y = r.state0.to_vec();
+    let mut z = r.state0.to_vec();
+    let mut mom = vec![0.0f32; p];
+    let mut losses = Vec::with_capacity(r.l_steps);
+    for step in 0..r.l_steps {
+        let outs = session.execute(
+            r.model,
+            "inner_step",
+            &[
+                lit_f32(&y, &[p])?,
+                lit_f32(&z, &[p])?,
+                lit_f32(&mom, &[p])?,
+                lit_f32(r.state0, &[p])?,
+                r.xb.clone(),
+                r.yb.clone(),
+                lit_scalar_f32(LR),
+                lit_scalar_f32(GAIN),
+                lit_scalar_f32(ALPHA),
+                lit_scalar_f32(MU),
+                lit_scalar_f32(WD),
+                lit_scalar_i32(step as i32),
+            ],
+        )?;
+        y = to_f32(&outs[0])?;
+        z = to_f32(&outs[1])?;
+        mom = to_f32(&outs[2])?;
+        losses.push(scalar_f32(&outs[3])?);
+    }
+    Ok(RoundOut { y, z, mom, losses })
+}
+
+/// The buffer path: (y, z, mom), the anchor and the scalar
+/// hyperparameters go up once, each step uploads only its seed and
+/// downloads only the loss scalar, and the state comes back once after
+/// the last step (O(P) parameter traffic per round).
+pub fn buffer_round(session: &Session, r: &InnerRound) -> Result<RoundOut> {
+    let p = r.state0.len();
+    let mut y_buf = session.upload(&lit_f32(r.state0, &[p])?)?;
+    let mut z_buf = session.upload(&lit_f32(r.state0, &[p])?)?;
+    let mut mom_buf =
+        session.upload(&lit_f32(&vec![0.0f32; p], &[p])?)?;
+    let anchor = session.upload(&lit_f32(r.state0, &[p])?)?;
+    let lr = session.upload(&lit_scalar_f32(LR))?;
+    let gain = session.upload(&lit_scalar_f32(GAIN))?;
+    let alpha = session.upload(&lit_scalar_f32(ALPHA))?;
+    let mu = session.upload(&lit_scalar_f32(MU))?;
+    let wd = session.upload(&lit_scalar_f32(WD))?;
+    let mut losses = Vec::with_capacity(r.l_steps);
+    for step in 0..r.l_steps {
+        let xb_buf = session.upload(r.xb)?;
+        let yb_buf = session.upload(r.yb)?;
+        let seed = session.upload(&lit_scalar_i32(step as i32))?;
+        let outs = session.execute_buffers(
+            r.model,
+            "inner_step",
+            &[
+                &y_buf, &z_buf, &mom_buf, &anchor, &xb_buf, &yb_buf, &lr,
+                &gain, &alpha, &mu, &wd, &seed,
+            ],
+        )?;
+        let mut it = outs.into_iter();
+        let mut take = |name: &str| {
+            it.next().with_context(|| {
+                format!("inner_step: missing {name} output")
+            })
+        };
+        y_buf = take("y")?;
+        z_buf = take("z")?;
+        mom_buf = take("mom")?;
+        let loss = take("loss")?;
+        losses.push(scalar_f32(&session.download(&loss)?)?);
+    }
+    Ok(RoundOut {
+        y: to_f32(&session.download(&y_buf)?)?,
+        z: to_f32(&session.download(&z_buf)?)?,
+        mom: to_f32(&session.download(&mom_buf)?)?,
+        losses,
+    })
+}

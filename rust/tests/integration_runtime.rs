@@ -3,6 +3,7 @@
 //! These tests need `make artifacts` to have run (they are skipped with a
 //! message otherwise, so `cargo test` stays green on a fresh clone).
 
+use parle::runtime::round_driver::{self, InnerRound};
 use parle::runtime::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32,
                      Session};
 
@@ -178,98 +179,35 @@ fn fixed_batch(b: usize) -> (xla::Literal, xla::Literal) {
 /// The tentpole's correctness half: L inner steps through the
 /// device-resident buffer path produce bit-identical (y, z, mom) and
 /// losses to the literal-marshalling path from the same start state.
+/// Both paths run through the shared `runtime::round_driver` harness.
 #[test]
 fn buffer_path_matches_literal_path_bit_exactly() {
     let Some(s) = session() else { return };
     let mm = s.manifest.model("mlp_synth").unwrap().clone();
-    let p = mm.param_count;
     let (xb, yb) = fixed_batch(mm.batch);
     let init = s.execute("mlp_synth", "init", &[lit_scalar_i32(3)]).unwrap();
     let x0 = parle::runtime::to_f32(&init[0]).unwrap();
-    let l = 5i32;
 
-    // literal path
-    let mut y = x0.clone();
-    let mut z = x0.clone();
-    let mut mom = vec![0.0f32; p];
-    let mut losses = Vec::new();
-    for step in 0..l {
-        let outs = s
-            .execute(
-                "mlp_synth",
-                "inner_step",
-                &[
-                    lit_f32(&y, &[p]).unwrap(),
-                    lit_f32(&z, &[p]).unwrap(),
-                    lit_f32(&mom, &[p]).unwrap(),
-                    lit_f32(&x0, &[p]).unwrap(),
-                    xb.clone(),
-                    yb.clone(),
-                    lit_scalar_f32(0.1),
-                    lit_scalar_f32(0.01),
-                    lit_scalar_f32(0.75),
-                    lit_scalar_f32(0.9),
-                    lit_scalar_f32(0.0),
-                    lit_scalar_i32(step),
-                ],
-            )
-            .unwrap();
-        y = parle::runtime::to_f32(&outs[0]).unwrap();
-        z = parle::runtime::to_f32(&outs[1]).unwrap();
-        mom = parle::runtime::to_f32(&outs[2]).unwrap();
-        losses.push(parle::runtime::scalar_f32(&outs[3]).unwrap());
-    }
+    let round = InnerRound {
+        model: "mlp_synth",
+        l_steps: 5,
+        state0: &x0,
+        xb: &xb,
+        yb: &yb,
+    };
+    let lit = round_driver::literal_round(&s, &round).unwrap();
+    let buf = round_driver::buffer_round(&s, &round).unwrap();
 
-    // buffer path, same start, same per-step seeds
-    let mut y_b = s.upload(&lit_f32(&x0, &[p]).unwrap()).unwrap();
-    let mut z_b = s.upload(&lit_f32(&x0, &[p]).unwrap()).unwrap();
-    let mut mom_b =
-        s.upload(&lit_f32(&vec![0.0f32; p], &[p]).unwrap()).unwrap();
-    let anchor = s.upload(&lit_f32(&x0, &[p]).unwrap()).unwrap();
-    let lr = s.upload(&lit_scalar_f32(0.1)).unwrap();
-    let gain = s.upload(&lit_scalar_f32(0.01)).unwrap();
-    let alpha = s.upload(&lit_scalar_f32(0.75)).unwrap();
-    let mu = s.upload(&lit_scalar_f32(0.9)).unwrap();
-    let wd = s.upload(&lit_scalar_f32(0.0)).unwrap();
-    let mut buf_losses = Vec::new();
-    for step in 0..l {
-        let xb_b = s.upload(&xb).unwrap();
-        let yb_b = s.upload(&yb).unwrap();
-        let seed = s.upload(&lit_scalar_i32(step)).unwrap();
-        let outs = s
-            .execute_buffers(
-                "mlp_synth",
-                "inner_step",
-                &[
-                    &y_b, &z_b, &mom_b, &anchor, &xb_b, &yb_b, &lr, &gain,
-                    &alpha, &mu, &wd, &seed,
-                ],
-            )
-            .unwrap();
-        let mut it = outs.into_iter();
-        y_b = it.next().unwrap();
-        z_b = it.next().unwrap();
-        mom_b = it.next().unwrap();
-        let loss = it.next().unwrap();
-        buf_losses.push(
-            parle::runtime::scalar_f32(&s.download(&loss).unwrap())
-                .unwrap(),
-        );
-    }
-    let y2 = parle::runtime::to_f32(&s.download(&y_b).unwrap()).unwrap();
-    let z2 = parle::runtime::to_f32(&s.download(&z_b).unwrap()).unwrap();
-    let mom2 =
-        parle::runtime::to_f32(&s.download(&mom_b).unwrap()).unwrap();
-
-    assert_eq!(y, y2, "y diverged between dispatch paths");
-    assert_eq!(z, z2, "z diverged between dispatch paths");
-    assert_eq!(mom, mom2, "mom diverged between dispatch paths");
-    assert_eq!(losses, buf_losses, "losses diverged between paths");
+    assert_eq!(lit.y, buf.y, "y diverged between dispatch paths");
+    assert_eq!(lit.z, buf.z, "z diverged between dispatch paths");
+    assert_eq!(lit.mom, buf.mom, "mom diverged between dispatch paths");
+    assert_eq!(lit.losses, buf.losses, "losses diverged between paths");
 }
 
 /// The tentpole's perf half, proven on the transfer meter: a device-
 /// resident L-step round moves O(P) parameter bytes per leg while the
-/// literal path moves O(P*L).
+/// literal path moves O(P*L). Both rounds run through the shared
+/// `runtime::round_driver` harness; only the byte assertions live here.
 #[test]
 fn device_resident_round_is_o_p_not_o_p_l() {
     let Some(s) = session() else { return };
@@ -280,73 +218,22 @@ fn device_resident_round_is_o_p_not_o_p_l() {
     let l = 6usize;
     let meter = s.transfer_meter();
     s.warm("mlp_synth", "inner_step").unwrap();
+    let round = InnerRound {
+        model: "mlp_synth",
+        l_steps: l,
+        state0: &state,
+        xb: &xb,
+        yb: &yb,
+    };
 
     // literal round: 4 P-vectors up + 3 down per STEP
     let before = meter.bytes();
-    let mut y = state.clone();
-    let mut z = state.clone();
-    let mut mom = vec![0.0f32; p];
-    for step in 0..l {
-        let outs = s
-            .execute(
-                "mlp_synth",
-                "inner_step",
-                &[
-                    lit_f32(&y, &[p]).unwrap(),
-                    lit_f32(&z, &[p]).unwrap(),
-                    lit_f32(&mom, &[p]).unwrap(),
-                    lit_f32(&state, &[p]).unwrap(),
-                    xb.clone(),
-                    yb.clone(),
-                    lit_scalar_f32(0.1),
-                    lit_scalar_f32(0.01),
-                    lit_scalar_f32(0.75),
-                    lit_scalar_f32(0.9),
-                    lit_scalar_f32(0.0),
-                    lit_scalar_i32(step as i32),
-                ],
-            )
-            .unwrap();
-        y = parle::runtime::to_f32(&outs[0]).unwrap();
-        z = parle::runtime::to_f32(&outs[1]).unwrap();
-        mom = parle::runtime::to_f32(&outs[2]).unwrap();
-    }
+    round_driver::literal_round(&s, &round).unwrap();
     let literal_bytes = meter.bytes() - before;
 
     // buffer round: 4 P-vectors up + 3 down per ROUND
     let before = meter.bytes();
-    let mut y_b = s.upload(&lit_f32(&state, &[p]).unwrap()).unwrap();
-    let mut z_b = s.upload(&lit_f32(&state, &[p]).unwrap()).unwrap();
-    let mut mom_b =
-        s.upload(&lit_f32(&vec![0.0f32; p], &[p]).unwrap()).unwrap();
-    let anchor = s.upload(&lit_f32(&state, &[p]).unwrap()).unwrap();
-    let lr = s.upload(&lit_scalar_f32(0.1)).unwrap();
-    let gain = s.upload(&lit_scalar_f32(0.01)).unwrap();
-    let alpha = s.upload(&lit_scalar_f32(0.75)).unwrap();
-    let mu = s.upload(&lit_scalar_f32(0.9)).unwrap();
-    let wd = s.upload(&lit_scalar_f32(0.0)).unwrap();
-    for step in 0..l {
-        let xb_b = s.upload(&xb).unwrap();
-        let yb_b = s.upload(&yb).unwrap();
-        let seed = s.upload(&lit_scalar_i32(step as i32)).unwrap();
-        let outs = s
-            .execute_buffers(
-                "mlp_synth",
-                "inner_step",
-                &[
-                    &y_b, &z_b, &mom_b, &anchor, &xb_b, &yb_b, &lr, &gain,
-                    &alpha, &mu, &wd, &seed,
-                ],
-            )
-            .unwrap();
-        let mut it = outs.into_iter();
-        y_b = it.next().unwrap();
-        z_b = it.next().unwrap();
-        mom_b = it.next().unwrap();
-    }
-    s.download(&y_b).unwrap();
-    s.download(&z_b).unwrap();
-    s.download(&mom_b).unwrap();
+    round_driver::buffer_round(&s, &round).unwrap();
     let buffer_bytes = meter.bytes() - before;
 
     // O(P) residency needs the runtime to untuple results on device;

@@ -3,7 +3,7 @@
 //!
 //! Skipped (with a message) when artifacts are missing.
 
-use parle::config::{Algo, RunConfig};
+use parle::config::{Algo, CommMode, RunConfig};
 use parle::coordinator::train;
 use parle::opt::LrSchedule;
 
@@ -371,6 +371,122 @@ fn overlapped_eval_matches_blocking() {
         "same number of sweeps either way"
     );
     assert!(!blocking.record.phases.contains_key("eval_exposed"));
+}
+
+/// `--comm-mode async`: replicas run their L-step legs at their own
+/// pace while the master applies per-report elastic updates. The
+/// trajectory is not bit-deterministic (update order is wall-clock),
+/// but every strategy must still learn, and the watermark-driven eval
+/// cadence keeps the curve's structure deterministic.
+#[test]
+fn async_mode_learns_across_strategies() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    for algo in [Algo::Parle, Algo::SgdDataParallel] {
+        let mut cfg = base(algo);
+        cfg.replicas = 2;
+        cfg.comm_mode = CommMode::Async;
+        cfg.max_staleness = 2;
+        let out =
+            train(&cfg, &format!("itest_async_{}", algo.name())).unwrap();
+        assert!(
+            out.record.final_val_err < 0.5,
+            "{} async: val err {} did not beat chance",
+            algo.name(),
+            out.record.final_val_err
+        );
+        assert!(!out.record.curve.is_empty());
+        assert_eq!(out.final_params.len(), 6922);
+    }
+    // the hierarchy relaxes per worker into its deputy + the sheriff
+    let mut cfg = base(Algo::Parle);
+    cfg.l_steps = 2;
+    cfg.comm_mode = CommMode::Async;
+    cfg.max_staleness = 2;
+    let out =
+        parle::coordinator::train_hierarchical(&cfg, 2, 2,
+                                               "itest_async_hier")
+            .unwrap();
+    assert!(
+        out.record.final_val_err < 0.5,
+        "hierarchy async val err {}",
+        out.record.final_val_err
+    );
+}
+
+/// Async resume-equals-continuation, structurally: a run resumed from a
+/// mid-async checkpoint continues each replica at its own round stamp
+/// and completes with the same deterministic cadence fields (curve
+/// point count and epochs) as the uninterrupted run — values are not
+/// bit-compared because async update order is not replayable. A sync
+/// resume of a checkpoint with uneven per-replica stamps is refused.
+#[test]
+fn async_resume_continues_per_replica_rounds() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let dir = std::env::temp_dir().join("parle_itest_async_resume");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut cfg = base(Algo::Parle);
+    cfg.replicas = 2;
+    cfg.epochs = 3.0; // 12 rounds at L=2, B=8
+    cfg.comm_mode = CommMode::Async;
+    cfg.max_staleness = 2;
+
+    let mut full_cfg = cfg.clone();
+    full_cfg.checkpoint_every_rounds = 4;
+    full_cfg.checkpoint_path = Some(
+        dir.join("async_{round}.ck").to_str().unwrap().to_string(),
+    );
+    let full = train(&full_cfg, "itest_async_resume_full").unwrap();
+
+    let ck_path = dir.join("async_8.ck");
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.resume_from =
+        Some(ck_path.to_str().unwrap().to_string());
+    let resumed = train(&resume_cfg, "itest_async_resume_half").unwrap();
+
+    assert_eq!(resumed.final_params.len(), full.final_params.len());
+    assert_eq!(resumed.record.curve.len(), full.record.curve.len());
+    for (a, b) in resumed
+        .record
+        .curve
+        .points
+        .iter()
+        .zip(&full.record.curve.points)
+    {
+        assert_eq!(a.epoch.to_bits(), b.epoch.to_bits());
+    }
+    assert!(
+        resumed.record.final_val_err < 0.6,
+        "resumed async run regressed: {}",
+        resumed.record.final_val_err
+    );
+
+    // uneven per-replica stamps must be refused by a sync-mode resume
+    let mut ck = parle::coordinator::Checkpoint::load(&ck_path).unwrap();
+    for (k, v) in ck.meta.iter_mut() {
+        if k == "w0.rounds_done" {
+            *v += 1.0;
+        }
+    }
+    let uneven = dir.join("uneven.ck");
+    ck.save(&uneven).unwrap();
+    let mut sync_cfg = cfg.clone();
+    sync_cfg.comm_mode = CommMode::Sync;
+    sync_cfg.resume_from = Some(uneven.to_str().unwrap().to_string());
+    assert!(
+        train(&sync_cfg, "itest_async_sync_refuse").is_err(),
+        "sync resume must refuse uneven per-replica round stamps"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
