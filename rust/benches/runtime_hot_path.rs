@@ -17,8 +17,9 @@
 use parle::bench_util::{bench_for, section};
 use parle::config::CommCfg;
 use parle::coordinator::comm::{simulate_transfer, AsyncPacer,
-                               ReduceFabric, RoundConsts, RoundMsg,
-                               RoundReport};
+                               ReduceFabric, ReplicaEndpoint, RoundConsts,
+                               RoundMsg, RoundReport};
+use parle::coordinator::transport::{TcpTransport, TcpWorkerLink};
 use parle::data::batcher::{Augment, Batcher};
 use parle::data::{build, DataConfig};
 use parle::opt::vecmath;
@@ -34,6 +35,9 @@ fn main() -> parle::Result<()> {
     // numbers print even on a checkout without `make artifacts`
     section("comm fabric: sync barrier vs async event loop (straggler)");
     bench_fabric_straggler();
+
+    section("comm fabric: in-process channels vs loopback TCP (sync round)");
+    bench_transport_round_latency();
 
     let session = Session::open("artifacts")?;
 
@@ -301,6 +305,113 @@ fn bench_fabric_straggler() {
         "  -> async speedup under rotating straggler: {:.2}x",
         sync_s / async_s
     );
+}
+
+/// One synchronous broadcast+collect round (echo workers, no compute)
+/// over the two transports at several P: the in-process channels move
+/// `Arc` pointers and recycled slabs (O(1) per message beyond the
+/// reduce-side copy), the loopback TCP wire serializes, copies through
+/// the kernel, and deserializes 2·n·P f32 per round. The gap is the
+/// per-round price of crossing a process boundary — small against an
+/// L-step compute leg, which is exactly the infrequent-communication
+/// bet the paper makes. No artifacts needed.
+fn bench_transport_round_latency() {
+    let n = 3usize;
+    let rounds = 50u64;
+    let consts = RoundConsts {
+        lr: 0.1,
+        gamma_inv: 0.01,
+        rho_inv: 1.0,
+        eta_over_rho: 0.1,
+    };
+    for p in [10_000usize, 100_000, 1_000_000] {
+        let xref = vec![0.5f32; p];
+
+        // in-process channels
+        let mut fabric = ReduceFabric::flat(n, CommCfg::off());
+        for _ in 0..n {
+            fabric.spawn_worker(move |ep| {
+                while let Some(msg) = ep.recv() {
+                    let RoundMsg {
+                        round, mut slab, xref, ..
+                    } = msg;
+                    slab.copy_from_slice(&xref);
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round,
+                        params: slab,
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            });
+        }
+        let t = std::time::Instant::now();
+        for _ in 0..rounds {
+            fabric.broadcast(consts, &[xref.as_slice()]);
+            fabric.collect().unwrap();
+        }
+        let chan_s = t.elapsed().as_secs_f64() / rounds as f64;
+        fabric.shutdown().unwrap();
+
+        // loopback TCP (workers = threads in this process, but every
+        // payload crosses real sockets)
+        let addr = "127.0.0.1:47699";
+        let workers: Vec<_> = (0..n)
+            .map(|_| {
+                std::thread::spawn(move || -> parle::Result<()> {
+                    let link = TcpWorkerLink::connect(
+                        addr,
+                        n,
+                        std::time::Duration::from_secs(10),
+                    )?;
+                    let ep = ReplicaEndpoint::remote(link);
+                    while let Some(msg) = ep.recv() {
+                        let RoundMsg {
+                            round,
+                            mut slab,
+                            xref,
+                            ..
+                        } = msg;
+                        slab.copy_from_slice(&xref);
+                        ep.report(RoundReport {
+                            replica: ep.id(),
+                            round,
+                            params: slab,
+                            train_loss: 0.0,
+                            train_err: 0.0,
+                            step_s: 0.0,
+                        });
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        let transport = TcpTransport::listen(addr, n).unwrap();
+        let mut fabric =
+            ReduceFabric::with_transport(vec![0; n], Box::new(transport));
+        let t = std::time::Instant::now();
+        for _ in 0..rounds {
+            fabric.broadcast(consts, &[xref.as_slice()]);
+            fabric.collect().unwrap();
+        }
+        let tcp_s = t.elapsed().as_secs_f64() / rounds as f64;
+        fabric.shutdown().unwrap();
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+
+        println!(
+            "P={p:<9} channels {:9.1} us/round   loopback-tcp {:9.1} \
+             us/round   ({:.1}x, {:.2} GB/s wire)",
+            chan_s * 1e6,
+            tcp_s * 1e6,
+            tcp_s / chan_s,
+            (2 * n * p * 4) as f64 / tcp_s / 1e9
+        );
+    }
 }
 
 /// One L-step inner round dispatched two ways: the old literal path

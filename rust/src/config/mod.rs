@@ -6,4 +6,5 @@
 
 pub mod run;
 
-pub use run::{Algo, CommCfg, CommMode, RunConfig, ScopingCfg};
+pub use run::{Algo, CommCfg, CommMode, RunConfig, ScopingCfg,
+              TransportCfg};

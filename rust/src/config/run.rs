@@ -74,6 +74,37 @@ impl CommMode {
     }
 }
 
+/// Which transport the communication fabric runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportCfg {
+    /// Zero-copy in-process MPSC channels (default): replicas are
+    /// worker threads of the master process.
+    InProcess,
+    /// Length-prefixed TCP: replicas are remote worker processes. The
+    /// master listens on `RunConfig::listen`; workers run
+    /// `--role worker --connect host:port` with the same config.
+    /// Sync-mode outputs are bit-identical to the in-process transport;
+    /// the simulated-interconnect model is skipped (wire time is real).
+    Tcp,
+}
+
+impl TransportCfg {
+    pub fn parse(s: &str) -> Result<TransportCfg> {
+        Ok(match s {
+            "in-process" | "channels" => TransportCfg::InProcess,
+            "tcp" => TransportCfg::Tcp,
+            other => bail!("unknown transport {other:?} (in-process|tcp)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportCfg::InProcess => "in-process",
+            TransportCfg::Tcp => "tcp",
+        }
+    }
+}
+
 /// Scoping mode for gamma/rho (eq. 9).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ScopingCfg {
@@ -126,6 +157,17 @@ impl CommCfg {
     }
 }
 
+/// Boolean `--set` flag accepting `1/0` as well as `true/false` (the
+/// documented spelling is `--set async_lr_rescale=1`).
+fn parse_flag(value: &str) -> Result<bool> {
+    match value {
+        "1" | "true" | "on" => Ok(true),
+        "0" | "false" | "off" => Ok(false),
+        other => bail!("expected a boolean flag (1/0/true/false), \
+                        got {other:?}"),
+    }
+}
+
 /// Full specification of one training run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -161,6 +203,17 @@ pub struct RunConfig {
     /// slowest unfinished replica before the master holds it back
     /// (0 = lockstep). Ignored in sync mode.
     pub max_staleness: usize,
+    /// Async `sgd-dp` only: rescale the per-gradient Nesterov LR by
+    /// 1/replicas (the Downpour effective-batch correction — n
+    /// single-batch async steps then match one barrier step on the
+    /// n-batch mean gradient to first order). `--set async_lr_rescale=1`.
+    pub async_lr_rescale: bool,
+    /// Fabric transport: in-process worker threads (default) or TCP to
+    /// remote worker processes.
+    pub transport: TransportCfg,
+    /// TCP master only: `host:port` to listen on for worker
+    /// connections (`--listen`).
+    pub listen: Option<String>,
     pub seed: u64,
     pub artifacts_dir: String,
     /// Write a full-state checkpoint every this many communication
@@ -210,6 +263,9 @@ impl RunConfig {
             comm: CommCfg::off(),
             comm_mode: CommMode::Sync,
             max_staleness: 4,
+            async_lr_rescale: false,
+            transport: TransportCfg::InProcess,
+            listen: None,
             seed: 42,
             artifacts_dir: "artifacts".to_string(),
             checkpoint_every_rounds: 0,
@@ -248,6 +304,11 @@ impl RunConfig {
             "overlap_eval" => self.overlap_eval = value.parse()?,
             "comm_mode" => self.comm_mode = CommMode::parse(value)?,
             "max_staleness" => self.max_staleness = value.parse()?,
+            "async_lr_rescale" => {
+                self.async_lr_rescale = parse_flag(value)?
+            }
+            "transport" => self.transport = TransportCfg::parse(value)?,
+            "listen" => self.listen = Some(value.to_string()),
             "scoping" => {
                 self.scoping = match value {
                     "paper" => ScopingCfg::Paper,
@@ -279,10 +340,13 @@ impl RunConfig {
     /// Deliberately excludes fields that do not change the parameter
     /// trajectory: epochs (resuming with more epochs extends a run),
     /// eval cadence, comm simulation, checkpoint/output settings.
-    /// `comm_mode`/`max_staleness` are also excluded: async runs are
-    /// not replay-deterministic anyway, and the one hazardous crossing
-    /// (resuming a sync run from an async checkpoint with uneven
-    /// per-replica round stamps) is rejected structurally by the engine.
+    /// `comm_mode`/`max_staleness`/`async_lr_rescale` are also
+    /// excluded: async runs are not replay-deterministic anyway, and
+    /// the one hazardous crossing (resuming a sync run from an async
+    /// checkpoint with uneven per-replica round stamps) is rejected
+    /// structurally by the engine. `transport`/`listen` are excluded
+    /// because sync-mode training is bit-identical across transports —
+    /// a checkpoint written over TCP resumes in-process and vice versa.
     pub fn replay_fingerprint(&self) -> u64 {
         let canon = format!(
             "model={};alpha={};momentum={};wd={};lr={}@{:?}/{};\
@@ -416,6 +480,47 @@ mod tests {
         // mode/staleness do not perturb the replay fingerprint (see
         // replay_fingerprint doc)
         let base = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(base.replay_fingerprint(), c.replay_fingerprint());
+    }
+
+    #[test]
+    fn transport_parse_and_overrides() {
+        assert_eq!(
+            TransportCfg::parse("tcp").unwrap(),
+            TransportCfg::Tcp
+        );
+        assert_eq!(
+            TransportCfg::parse("in-process").unwrap(),
+            TransportCfg::InProcess
+        );
+        assert!(TransportCfg::parse("carrier-pigeon").is_err());
+        let mut c = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(c.transport, TransportCfg::InProcess);
+        assert!(c.listen.is_none());
+        c.set("transport", "tcp").unwrap();
+        c.set("listen", "127.0.0.1:4700").unwrap();
+        assert_eq!(c.transport, TransportCfg::Tcp);
+        assert_eq!(c.listen.as_deref(), Some("127.0.0.1:4700"));
+        // transport choice must not move the replay fingerprint: sync
+        // runs are bit-identical across transports, so checkpoints
+        // resume across them
+        let base = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(base.replay_fingerprint(), c.replay_fingerprint());
+    }
+
+    #[test]
+    fn async_lr_rescale_flag_accepts_numeric_spelling() {
+        let mut c = RunConfig::new("mlp_synth", Algo::SgdDataParallel);
+        assert!(!c.async_lr_rescale);
+        c.set("async_lr_rescale", "1").unwrap();
+        assert!(c.async_lr_rescale);
+        c.set("async_lr_rescale", "0").unwrap();
+        assert!(!c.async_lr_rescale);
+        c.set("async_lr_rescale", "true").unwrap();
+        assert!(c.async_lr_rescale);
+        assert!(c.set("async_lr_rescale", "maybe").is_err());
+        // excluded from the replay fingerprint, like comm_mode
+        let base = RunConfig::new("mlp_synth", Algo::SgdDataParallel);
         assert_eq!(base.replay_fingerprint(), c.replay_fingerprint());
     }
 

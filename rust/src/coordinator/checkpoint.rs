@@ -29,16 +29,17 @@ const MAGIC: &[u8; 8] = b"PARLECK1";
 /// in the zoo. A corrupt header must never translate into a multi-GiB
 /// allocation (the old `1 << 33` bound admitted a 32 GiB one, and
 /// `p * 4` could overflow `usize` on 32-bit targets). The same cap
-/// bounds every v2 section length.
-const MAX_PARAMS: u64 = 1 << 28;
+/// bounds every v2 section length — and, through the shared helpers
+/// below, every named vector the TCP wire codec decodes.
+pub(crate) const MAX_PARAMS: u64 = 1 << 28;
 
 /// Cap on the number of v2 sections (engine writes ~6 per worker).
-const MAX_SECTIONS: u32 = 1 << 20;
+pub(crate) const MAX_SECTIONS: u32 = 1 << 20;
 
 /// Bulk-encoding chunk for flat payloads (elements per write).
 const CHUNK_PARAMS: usize = 4096;
 
-const DTYPE_F32: u8 = 0;
+pub(crate) const DTYPE_F32: u8 = 0;
 const DTYPE_F64: u8 = 1;
 
 /// A saved training state.
@@ -126,10 +127,7 @@ impl Checkpoint {
         let n_sections = (self.vecs_f32.len() + self.vecs_f64.len()) as u32;
         out.write_all(&n_sections.to_le_bytes())?;
         for (name, v) in &self.vecs_f32 {
-            write_str(&mut out, name)?;
-            out.write_all(&[DTYPE_F32])?;
-            out.write_all(&(v.len() as u64).to_le_bytes())?;
-            write_f32_payload(&mut out, v)?;
+            write_section_f32(&mut out, name, v)?;
         }
         for (name, v) in &self.vecs_f64 {
             write_str(&mut out, name)?;
@@ -213,7 +211,42 @@ impl Checkpoint {
     }
 }
 
-fn write_f32_payload<W: Write>(out: &mut W, v: &[f32]) -> Result<()> {
+/// One named f32 vector in the v2 section encoding: name, dtype byte,
+/// u64 element count, little-endian payload. Shared verbatim by the
+/// checkpoint section block and the TCP wire codec's `WorkerState`
+/// frames, so both speak the same bytes and enforce the same caps.
+pub(crate) fn write_section_f32<W: Write>(
+    out: &mut W,
+    name: &str,
+    v: &[f32],
+) -> Result<()> {
+    write_str(out, name)?;
+    out.write_all(&[DTYPE_F32])?;
+    out.write_all(&(v.len() as u64).to_le_bytes())?;
+    write_f32_payload(out, v)
+}
+
+/// Counterpart of [`write_section_f32`]: reads one named f32 section,
+/// rejecting any other dtype. `limit` is the total byte length of the
+/// underlying stream (file or frame), consulted before any allocation.
+pub(crate) fn read_section_f32<R: Read + Seek>(
+    f: &mut R,
+    limit: u64,
+) -> Result<(String, Vec<f32>)> {
+    let name = read_str(f)?;
+    let mut dtype = [0u8; 1];
+    f.read_exact(&mut dtype)?;
+    if dtype[0] != DTYPE_F32 {
+        bail!(
+            "corrupt section {name:?}: expected f32 dtype, got {}",
+            dtype[0]
+        );
+    }
+    Ok((name, read_flat_f32(f, limit)?))
+}
+
+pub(crate) fn write_f32_payload<W: Write>(out: &mut W, v: &[f32])
+                                          -> Result<()> {
     // bulk-encode the payload: one write per chunk, not one
     // write_all (BufWriter branch + copy) per element
     let mut chunk = [0u8; CHUNK_PARAMS * 4];
@@ -268,8 +301,8 @@ fn read_payload_len<R: Read + Seek>(
         .map_err(|_| anyhow!("corrupt checkpoint: payload too large"))
 }
 
-fn read_flat_f32<R: Read + Seek>(f: &mut R, file_len: u64)
-                                 -> Result<Vec<f32>> {
+pub(crate) fn read_flat_f32<R: Read + Seek>(f: &mut R, file_len: u64)
+                                            -> Result<Vec<f32>> {
     let n = read_payload_len(f, file_len, 4)?;
     let mut raw = vec![0u8; n * 4];
     f.read_exact(&mut raw)?;
@@ -294,7 +327,7 @@ fn read_flat_f64<R: Read + Seek>(f: &mut R, file_len: u64)
         .collect())
 }
 
-fn write_str<W: Write>(out: &mut W, s: &str) -> Result<()> {
+pub(crate) fn write_str<W: Write>(out: &mut W, s: &str) -> Result<()> {
     out.write_all(&(s.len() as u32).to_le_bytes())?;
     out.write_all(s.as_bytes())?;
     Ok(())
@@ -324,7 +357,7 @@ fn try_read_u32<R: Read>(f: &mut R) -> Result<Option<u32>> {
     Ok(Some(u32::from_le_bytes(b)))
 }
 
-fn read_str<R: Read>(f: &mut R) -> Result<String> {
+pub(crate) fn read_str<R: Read>(f: &mut R) -> Result<String> {
     let len = read_u32(f)? as usize;
     if len > (1 << 20) {
         bail!("corrupt checkpoint: string of {len} bytes");

@@ -49,6 +49,22 @@
 //!   ships the same vectors out again. Replicas therefore never clone
 //!   their parameter vector to report it.
 //!
+//! # The transport seam
+//!
+//! How messages physically move lives behind the
+//! [`crate::coordinator::transport::Transport`] trait: the fabric owns
+//! rounds, slabs, reduces and the snapshot barrier; the transport owns
+//! the dispatch leg (master -> replica commands) and the report leg
+//! (the single master-bound event stream). The default
+//! [`crate::coordinator::transport::ChannelTransport`] is the zero-copy
+//! in-process MPSC plumbing described above;
+//! [`crate::coordinator::transport::TcpTransport`] runs the same fabric
+//! over a length-prefixed wire for multi-process deployments, with
+//! worker processes driving the *same* [`ReplicaEndpoint`] API through
+//! a socket-backed link. Sync-mode training is bit-identical across
+//! transports (reports sort by replica id before any reduce; the wire
+//! codec moves raw IEEE bits).
+//!
 //! # Which legs are simulated
 //!
 //! A [`CommCfg`] latency model can be injected to emulate PCI-E or
@@ -61,25 +77,33 @@
 //!   excluded from the worker's `step_s`;
 //! * replica → master: [`ReplicaEndpoint::report`] sleeps before sending.
 //!
+//! The simulation applies to the in-process transport only: TCP wire
+//! time is real, so socket-backed endpoints skip `simulate_transfer`
+//! entirely.
+//!
 //! # Byte accounting and exposed waits
 //!
 //! The shared [`CommMeter`] counts every payload once per link per
 //! direction: the master accounts `P * 4` bytes per replica at send
-//! time, each replica accounts its own report. The totals feed the §4.1
-//! comm/compute ratio. When a [`PhaseProfiler`] is attached
-//! ([`ReduceFabric::set_profiler`]), every blocking master receive is
-//! attributed to the replica whose report ended the wait as a
-//! `wait.r<id>` phase — per-replica exposed wait instead of one opaque
-//! barrier number.
+//! time, each replica accounts its own report (the TCP transport
+//! accounts actual frame bytes, both directions, master-side). The
+//! totals feed the §4.1 comm/compute ratio. When a [`PhaseProfiler`] is
+//! attached ([`ReduceFabric::set_profiler`]), every blocking master
+//! receive is attributed to the replica whose report ended the wait as
+//! a `wait.r<id>` phase — per-replica exposed wait instead of one
+//! opaque barrier number.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
 use crate::config::CommCfg;
+use crate::coordinator::transport::{ChannelTransport, TcpWorkerLink,
+                                    Transport};
 use crate::opt::vecmath;
 use crate::util::timer::{PhaseProfiler, Timer};
 
@@ -171,13 +195,17 @@ pub struct RoundReport {
 }
 
 /// What replicas push onto the fabric's single master-bound stream.
-enum FabricEvent {
+pub enum FabricEvent {
     Report(RoundReport),
-    /// The worker's thread body returned (cleanly or with an error).
-    /// Receiving this mid-run means the replica can no longer report —
-    /// the master errors instead of blocking on the shared stream
-    /// forever.
+    /// The worker's thread body returned (cleanly or with an error) —
+    /// or, on the wire, its connection closed cleanly. Receiving this
+    /// mid-run means the replica can no longer report — the master
+    /// errors instead of blocking on the shared stream forever.
     Exited(usize),
+    /// The replica's transport leg broke: a truncated or garbled wire
+    /// frame, a mislabeled report. Carries the decode/transport error
+    /// message so the master fails with the root cause.
+    Failed(usize, String),
 }
 
 /// Counts every byte the fabric moves (both directions).
@@ -217,47 +245,107 @@ pub fn simulate_transfer(cfg: &CommCfg, bytes: usize) {
     }
 }
 
-/// Channels the master keeps per replica (the control plane; reports
-/// arrive on the fabric's shared event stream).
-pub struct ReplicaLink {
-    pub cmd_tx: Sender<RoundCmd>,
-    /// Snapshot replies (checkpoint path only — kept off the event
-    /// stream so round payload recycling is undisturbed).
-    pub snap_rx: Receiver<WorkerState>,
+/// What physically backs a [`ReplicaEndpoint`]: in-process channels
+/// (the default transport) or a TCP link to a remote master. The
+/// `RefCell` gives the socket link the interior mutability its buffer
+/// recycling needs while keeping the endpoint's `&self` API (worker
+/// bodies are single-threaded over their endpoint).
+enum EndpointLink {
+    Channel {
+        cmd_rx: Receiver<RoundCmd>,
+        event_tx: Sender<FabricEvent>,
+        snap_tx: Sender<WorkerState>,
+    },
+    Tcp(RefCell<TcpWorkerLink>),
 }
 
-/// The worker-thread side of the fabric: receive rounds (paying the
-/// simulated broadcast-leg delay), report results (paying the reduce-leg
-/// delay and accounting bytes).
+/// The worker side of the fabric: receive rounds (paying the simulated
+/// broadcast-leg delay on the in-process transport), report results
+/// (paying the reduce-leg delay and accounting bytes). The same API
+/// whether the master is a thread away or across the network.
 pub struct ReplicaEndpoint {
     id: usize,
-    cmd_rx: Receiver<RoundCmd>,
-    event_tx: Sender<FabricEvent>,
-    snap_tx: Sender<WorkerState>,
+    link: EndpointLink,
     meter: Arc<CommMeter>,
     comm: CommCfg,
 }
 
 impl ReplicaEndpoint {
-    /// This worker's replica id (its spawn index on the fabric).
+    /// In-process endpoint (built by the channel transport).
+    pub(crate) fn channel(
+        id: usize,
+        cmd_rx: Receiver<RoundCmd>,
+        event_tx: Sender<FabricEvent>,
+        snap_tx: Sender<WorkerState>,
+        meter: Arc<CommMeter>,
+        comm: CommCfg,
+    ) -> Self {
+        ReplicaEndpoint {
+            id,
+            link: EndpointLink::Channel {
+                cmd_rx,
+                event_tx,
+                snap_tx,
+            },
+            meter,
+            comm,
+        }
+    }
+
+    /// Endpoint over a connected TCP link — what a worker process (or a
+    /// loopback worker thread in tests) drives against a remote master.
+    /// Wire time is real, so no interconnect simulation applies; the
+    /// meter is process-local (the master meters the wire itself).
+    pub fn remote(link: TcpWorkerLink) -> Self {
+        ReplicaEndpoint {
+            id: link.replica(),
+            link: EndpointLink::Tcp(RefCell::new(link)),
+            meter: Arc::new(CommMeter::new()),
+            comm: CommCfg::off(),
+        }
+    }
+
+    /// This worker's replica id (its spawn index on the fabric, or the
+    /// slot the master assigned in the TCP handshake).
     pub fn id(&self) -> usize {
         self.id
     }
 
     /// Blocking receive of the next command. Returns `None` on `Stop`
-    /// or a hung-up master. Round payloads pay the master -> replica
-    /// transfer delay here, on the replica thread, so per-replica
-    /// delays overlap; snapshot/restore traffic is control-plane and
-    /// free (checkpointing is not part of the simulated interconnect).
+    /// or a hung-up master. On the in-process transport, round payloads
+    /// pay the master -> replica transfer delay here, on the replica
+    /// thread, so per-replica delays overlap; snapshot/restore traffic
+    /// is control-plane and free (checkpointing is not part of the
+    /// simulated interconnect). On the wire a decode failure is logged
+    /// and drains the worker out (`None`) — the master surfaces the
+    /// root cause through its reader's `Failed` event.
     pub fn recv_cmd(&self) -> Option<WorkerCmd> {
-        match self.cmd_rx.recv() {
-            Ok(RoundCmd::Round(msg)) => {
-                simulate_transfer(&self.comm, msg.xref.len() * 4);
-                Some(WorkerCmd::Round(msg))
+        match &self.link {
+            EndpointLink::Channel { cmd_rx, .. } => match cmd_rx.recv() {
+                Ok(RoundCmd::Round(msg)) => {
+                    simulate_transfer(&self.comm, msg.xref.len() * 4);
+                    Some(WorkerCmd::Round(msg))
+                }
+                Ok(RoundCmd::Snapshot) => Some(WorkerCmd::Snapshot),
+                Ok(RoundCmd::Restore(st)) => Some(WorkerCmd::Restore(st)),
+                Ok(RoundCmd::Stop) | Err(_) => None,
+            },
+            EndpointLink::Tcp(link) => {
+                match link.borrow_mut().recv_cmd() {
+                    Ok(cmd) => cmd,
+                    Err(e) => {
+                        crate::util::logging::log(
+                            crate::util::logging::Level::Error,
+                            "fabric",
+                            &format!(
+                                "replica {} wire receive failed: {e:#}",
+                                self.id
+                            ),
+                        );
+                        None
+                    }
+                }
             }
-            Ok(RoundCmd::Snapshot) => Some(WorkerCmd::Snapshot),
-            Ok(RoundCmd::Restore(st)) => Some(WorkerCmd::Restore(st)),
-            Ok(RoundCmd::Stop) | Err(_) => None,
         }
     }
 
@@ -279,16 +367,64 @@ impl ReplicaEndpoint {
 
     /// Reply to a [`WorkerCmd::Snapshot`] request.
     pub fn send_snapshot(&self, state: WorkerState) {
-        self.snap_tx.send(state).ok();
+        match &self.link {
+            EndpointLink::Channel { snap_tx, .. } => {
+                snap_tx.send(state).ok();
+            }
+            EndpointLink::Tcp(link) => {
+                let mut link = link.borrow_mut();
+                if let Err(e) = link.send_snapshot(&state) {
+                    crate::util::logging::log(
+                        crate::util::logging::Level::Error,
+                        "fabric",
+                        &format!(
+                            "replica {} snapshot send failed: {e:#}",
+                            self.id
+                        ),
+                    );
+                    // fail-stop: the master is blocked waiting for this
+                    // reply — close the link so it errors instead
+                    link.poison();
+                }
+            }
+        }
     }
 
-    /// Send a round report; applies the replica -> master transfer delay
-    /// and accounts the payload bytes.
+    /// Send a round report. In-process: applies the replica -> master
+    /// transfer delay and accounts the payload bytes. On the wire: no
+    /// simulation (transfer time is real), the frame bytes land on the
+    /// worker-local meter, and a send failure is logged and poisons the
+    /// link (fail-stop) — the master's reader raises `Exited` rather
+    /// than both sides blocking on a report that cannot arrive.
     pub fn report(&self, report: RoundReport) {
-        let bytes = report.params.len() * 4;
-        simulate_transfer(&self.comm, bytes);
-        self.meter.account(bytes);
-        self.event_tx.send(FabricEvent::Report(report)).ok();
+        match &self.link {
+            EndpointLink::Channel { event_tx, .. } => {
+                let bytes = report.params.len() * 4;
+                simulate_transfer(&self.comm, bytes);
+                self.meter.account(bytes);
+                event_tx.send(FabricEvent::Report(report)).ok();
+            }
+            EndpointLink::Tcp(link) => {
+                let id = self.id;
+                let mut link = link.borrow_mut();
+                match link.report(report) {
+                    Ok(bytes) => self.meter.account(bytes),
+                    Err(e) => {
+                        crate::util::logging::log(
+                            crate::util::logging::Level::Error,
+                            "fabric",
+                            &format!(
+                                "replica {id} report send failed: {e:#}"
+                            ),
+                        );
+                        // fail-stop: the master is waiting for this
+                        // report — close the link so its reader raises
+                        // Exited instead of both sides blocking forever
+                        link.poison();
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -307,17 +443,15 @@ pub struct RoundStats {
 /// Master-side communication fabric shared by all training drivers:
 /// worker spawn, round dispatch (broadcast or per-replica), the single
 /// report event stream, reduces, and the snapshot/restore barrier.
+/// Message movement is delegated to a pluggable [`Transport`].
 pub struct ReduceFabric {
-    links: Vec<ReplicaLink>,
+    transport: Box<dyn Transport>,
     handles: Vec<JoinHandle<Result<()>>>,
-    meter: Arc<CommMeter>,
-    comm: CommCfg,
+    /// Local worker threads spawned so far (in-process transport).
+    spawned: usize,
     /// replica id -> broadcast group (deputy) index.
     groups: Vec<usize>,
     n_groups: usize,
-    /// Every report (and worker exit) funnels through this one stream.
-    event_tx: Sender<FabricEvent>,
-    event_rx: Receiver<FabricEvent>,
     /// Double-buffered broadcast slabs, one pair per group, indexed by
     /// round parity (sync path). Allocated lazily at the first broadcast.
     bcast: Vec<[Arc<Vec<f32>>; 2]>,
@@ -343,20 +477,30 @@ pub struct ReduceFabric {
 impl ReduceFabric {
     /// Fabric with an explicit replica -> group map (`groups[w]` is the
     /// broadcast group worker `w` belongs to; groups must be a prefix of
-    /// 0..n_groups).
+    /// 0..n_groups), over the default zero-copy in-process transport.
     pub fn new(groups: Vec<usize>, comm: CommCfg) -> Self {
         let n = groups.len();
+        Self::with_transport(groups, Box::new(ChannelTransport::new(n, comm)))
+    }
+
+    /// Fabric over an explicit transport (e.g.
+    /// [`crate::coordinator::transport::TcpTransport`] with its remote
+    /// workers already connected).
+    pub fn with_transport(groups: Vec<usize>, transport: Box<dyn Transport>)
+                          -> Self {
+        let n = groups.len();
+        assert_eq!(
+            transport.replicas(),
+            n,
+            "transport replica slots must match the group map"
+        );
         let n_groups = groups.iter().copied().max().map_or(1, |g| g + 1);
-        let (event_tx, event_rx) = mpsc::channel::<FabricEvent>();
         ReduceFabric {
-            links: Vec::new(),
+            transport,
             handles: Vec::new(),
-            meter: Arc::new(CommMeter::new()),
-            comm,
+            spawned: 0,
             groups,
             n_groups,
-            event_tx,
-            event_rx,
             bcast: Vec::new(),
             bcast_replica: (0..n).map(|_| None).collect(),
             slab_pool: (0..n).map(|_| None).collect(),
@@ -386,7 +530,7 @@ impl ReduceFabric {
     }
 
     pub fn meter(&self) -> Arc<CommMeter> {
-        self.meter.clone()
+        self.transport.meter()
     }
 
     /// Attribute master receive waits to `wait.r<id>` phases on this
@@ -400,27 +544,22 @@ impl ReduceFabric {
     /// logged here and re-raised by [`ReduceFabric::shutdown`]. Every
     /// exit — clean or not — pushes an `Exited` event so the master
     /// never blocks on the shared stream waiting for a dead replica.
+    /// Only valid on transports with local endpoints (the in-process
+    /// default); wire transports get their workers by connection.
     pub fn spawn_worker<F>(&mut self, body: F)
     where
         F: FnOnce(ReplicaEndpoint) -> Result<()> + Send + 'static,
     {
-        let id = self.links.len();
+        let id = self.spawned;
         assert!(
             id < self.groups.len(),
             "spawned more workers than fabric slots"
         );
-        let (cmd_tx, cmd_rx) = mpsc::channel::<RoundCmd>();
-        let (snap_tx, snap_rx) = mpsc::channel::<WorkerState>();
-        self.links.push(ReplicaLink { cmd_tx, snap_rx });
-        let ep = ReplicaEndpoint {
-            id,
-            cmd_rx,
-            event_tx: self.event_tx.clone(),
-            snap_tx,
-            meter: self.meter.clone(),
-            comm: self.comm,
-        };
-        let exit_tx = self.event_tx.clone();
+        let (ep, exit_tx) = self
+            .transport
+            .take_endpoint(id)
+            .expect("transport has no local endpoint for this slot");
+        self.spawned += 1;
         self.handles.push(std::thread::spawn(move || {
             let r = body(ep);
             if let Err(e) = &r {
@@ -442,8 +581,8 @@ impl ReduceFabric {
     pub fn broadcast(&mut self, consts: RoundConsts, refs: &[&[f32]]) {
         assert_eq!(refs.len(), self.n_groups, "one reference per group");
         assert_eq!(
-            self.links.len(),
-            self.groups.len(),
+            self.spawned,
+            self.transport.local_endpoints(),
             "broadcast before all workers were spawned"
         );
         let p = refs[0].len();
@@ -467,18 +606,17 @@ impl ReduceFabric {
         } else {
             self.reports.drain(..).map(|r| r.params).collect()
         };
-        for ((g, link), slab) in
-            self.groups.iter().zip(&self.links).zip(slabs)
-        {
-            self.meter.account(p * 4);
-            link.cmd_tx
-                .send(RoundCmd::Round(RoundMsg {
-                    round: self.round,
-                    xref: self.bcast[*g][parity].clone(),
-                    slab,
-                    consts,
-                }))
-                .ok();
+        for (r, slab) in slabs.into_iter().enumerate() {
+            let g = self.groups[r];
+            let msg = RoundMsg {
+                round: self.round,
+                xref: self.bcast[g][parity].clone(),
+                slab,
+                consts,
+            };
+            // dispatch bytes are accounted inside the transport; a dead
+            // link is ignored here (its death surfaces as an event)
+            let _ = self.transport.send_cmd(r, RoundCmd::Round(msg));
         }
         self.round += 1;
     }
@@ -505,16 +643,13 @@ impl ReduceFabric {
         let slab = self.slab_pool[replica]
             .take()
             .unwrap_or_else(|| vec![0.0f32; p]);
-        self.meter.account(p * 4);
-        self.links[replica]
-            .cmd_tx
-            .send(RoundCmd::Round(RoundMsg {
-                round,
-                xref: pair[parity].clone(),
-                slab,
-                consts,
-            }))
-            .ok();
+        let msg = RoundMsg {
+            round,
+            xref: pair[parity].clone(),
+            slab,
+            consts,
+        };
+        let _ = self.transport.send_cmd(replica, RoundCmd::Round(msg));
     }
 
     /// Blocking receive of the next report off the shared event stream
@@ -528,7 +663,7 @@ impl ReduceFabric {
     /// [`collect`]: ReduceFabric::collect
     pub fn recv_report(&mut self) -> Result<RoundReport> {
         let t = Timer::new();
-        match self.event_rx.recv() {
+        match self.transport.recv_event() {
             Ok(FabricEvent::Report(rep)) => {
                 if let Some(prof) = &self.profiler {
                     prof.add(&self.wait_keys[rep.replica], t.elapsed_s());
@@ -538,7 +673,10 @@ impl ReduceFabric {
             Ok(FabricEvent::Exited(id)) => {
                 Err(anyhow::anyhow!("replica {id} exited mid-round"))
             }
-            Err(_) => Err(anyhow::anyhow!("all replicas exited mid-round")),
+            Ok(FabricEvent::Failed(id, msg)) => Err(anyhow::anyhow!(
+                "replica {id} transport failed: {msg}"
+            )),
+            Err(e) => Err(e),
         }
     }
 
@@ -557,7 +695,7 @@ impl ReduceFabric {
     /// broadcast.
     pub fn collect(&mut self) -> Result<RoundStats> {
         self.reports.clear();
-        for _ in 0..self.links.len() {
+        for _ in 0..self.replicas() {
             let rep = self
                 .recv_report()
                 .context("replica died mid-round")?;
@@ -622,18 +760,20 @@ impl ReduceFabric {
     /// Checkpoint barrier: request a [`WorkerState`] snapshot from every
     /// worker and collect the replies, sorted by replica id. Callable
     /// only at a quiescent point — after [`ReduceFabric::collect`], or
-    /// in the async loop once no rounds are in flight — when every
-    /// worker is blocked in its command receive: the snapshot then
-    /// observes the exact post-round state.
-    pub fn snapshot_workers(&self) -> Result<Vec<WorkerState>> {
-        for link in &self.links {
-            link.cmd_tx.send(RoundCmd::Snapshot).ok();
+    /// in the async loop once no rounds are in flight (in-flight remote
+    /// legs drained, on a wire transport) — when every worker is
+    /// blocked in its command receive: the snapshot then observes the
+    /// exact post-round state.
+    pub fn snapshot_workers(&mut self) -> Result<Vec<WorkerState>> {
+        let n = self.replicas();
+        for r in 0..n {
+            let _ = self.transport.send_cmd(r, RoundCmd::Snapshot);
         }
-        let mut states = Vec::with_capacity(self.links.len());
-        for link in &self.links {
+        let mut states = Vec::with_capacity(n);
+        for r in 0..n {
             states.push(
-                link.snap_rx
-                    .recv()
+                self.transport
+                    .recv_snapshot(r)
                     .context("replica died during snapshot")?,
             );
         }
@@ -643,42 +783,45 @@ impl ReduceFabric {
 
     /// Resume: install a saved state into each worker. Must run before
     /// the first dispatch so workers restore before drawing any data.
-    pub fn restore_workers(&self, states: Vec<WorkerState>) -> Result<()> {
-        if states.len() != self.links.len() {
+    pub fn restore_workers(&mut self, states: Vec<WorkerState>)
+                           -> Result<()> {
+        let n = self.replicas();
+        if states.len() != n {
             anyhow::bail!(
                 "checkpoint has {} worker states, fabric has {} workers",
                 states.len(),
-                self.links.len()
+                n
             );
         }
         for st in states {
-            let link = self
-                .links
-                .get(st.replica)
-                .ok_or_else(|| {
-                    anyhow::anyhow!("worker state for unknown replica {}",
-                                    st.replica)
-                })?;
-            link.cmd_tx
-                .send(RoundCmd::Restore(Box::new(st)))
-                .map_err(|_| {
-                    anyhow::anyhow!("replica died before restore")
+            let r = st.replica;
+            if r >= n {
+                anyhow::bail!("worker state for unknown replica {r}");
+            }
+            self.transport
+                .send_cmd(r, RoundCmd::Restore(Box::new(st)))
+                .map_err(|e| {
+                    e.context("replica died before restore")
                 })?;
         }
         Ok(())
     }
 
-    /// Stop every worker, join the threads, and propagate the first
-    /// worker error (or panic) if any. Safe with reports still in
-    /// flight: workers never block on the (unbounded) event stream, so
-    /// they drain to their command receive, see `Stop`, and exit;
-    /// unconsumed events die with the fabric.
+    /// Stop every worker, join the local threads, release the
+    /// transport, and propagate the first worker error (or panic) if
+    /// any. Safe with reports still in flight: workers never block on
+    /// the (unbounded) event stream, so they drain to their command
+    /// receive, see `Stop`, and exit; unconsumed events die with the
+    /// fabric. Remote workers exit the same way — their sockets close,
+    /// and the transport joins its readers.
     pub fn shutdown(self) -> Result<()> {
         let ReduceFabric {
-            links, handles, ..
+            mut transport,
+            handles,
+            ..
         } = self;
-        for link in &links {
-            link.cmd_tx.send(RoundCmd::Stop).ok();
+        for r in 0..transport.replicas() {
+            let _ = transport.send_cmd(r, RoundCmd::Stop);
         }
         let mut first: Option<anyhow::Error> = None;
         for h in handles {
@@ -696,6 +839,11 @@ impl ReduceFabric {
                         ));
                     }
                 }
+            }
+        }
+        if let Err(e) = transport.shutdown() {
+            if first.is_none() {
+                first = Some(e);
             }
         }
         match first {
@@ -1135,7 +1283,7 @@ mod tests {
 
     #[test]
     fn restore_rejects_worker_count_mismatch() {
-        let fabric = counting_fabric(2);
+        let mut fabric = counting_fabric(2);
         assert!(fabric
             .restore_workers(vec![WorkerState::default()])
             .is_err());

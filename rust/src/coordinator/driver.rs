@@ -17,7 +17,8 @@ use anyhow::Result;
 use crate::config::{Algo, RunConfig};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::comm::{ReduceFabric, RoundReport};
-use crate::coordinator::engine::{RoundAlgo, RoundCtx, RoundEngine};
+use crate::coordinator::engine::{serve_worker_as, RoundAlgo, RoundCtx,
+                                 RoundEngine, WorkerBody};
 use crate::coordinator::replica::{run_replica, ReplicaCfg};
 use crate::coordinator::sgd_dp::GradAvgAlgo;
 use crate::coordinator::spec::CoupledSpec;
@@ -39,6 +40,18 @@ pub fn train(cfg: &RunConfig, label: &str) -> Result<TrainOutput> {
         engine.run(GradAvgAlgo::new(cfg))
     } else {
         engine.run(CoupledAlgo::new(cfg))
+    }
+}
+
+/// Run one worker process of a distributed (`--transport tcp`) run:
+/// the `--role worker` entry point. Picks the same strategy `train`
+/// would and serves its replica leg against the master at `connect`.
+pub fn serve_worker(cfg: &RunConfig, connect: &str) -> Result<()> {
+    cfg.validate()?;
+    if cfg.algo == Algo::SgdDataParallel {
+        serve_worker_as(&GradAvgAlgo::new(cfg), cfg, connect)
+    } else {
+        serve_worker_as(&CoupledAlgo::new(cfg), cfg, connect)
     }
 }
 
@@ -83,37 +96,34 @@ impl RoundAlgo for CoupledAlgo {
         self.cfg.eval_every_rounds as u64
     }
 
-    fn spawn_workers(
+    fn worker_body(
         &self,
-        fabric: &mut ReduceFabric,
+        a: usize,
         datasets: &[Arc<Dataset>],
         augment: Augment,
-    ) -> Result<()> {
+    ) -> WorkerBody {
         let cfg = &self.cfg;
-        for a in 0..cfg.replicas {
-            let rcfg = ReplicaCfg {
-                id: a,
-                model: cfg.model.clone(),
-                artifacts_dir: cfg.artifacts_dir.clone(),
-                spec: self.spec,
-                l_steps: cfg.l_steps,
-                alpha: cfg.alpha,
-                momentum: cfg.momentum,
-                weight_decay: cfg.weight_decay,
-                use_scan: cfg.use_scan,
-                augment,
-                seed: cfg.seed.wrapping_add(a as u64 * 7919),
-                init_seed: cfg.seed,
-                fixed_inner_lr: if self.spec.outer_step {
-                    Some(cfg.lr.base)
-                } else {
-                    None
-                },
-            };
-            let ds = datasets[a].clone();
-            fabric.spawn_worker(move |ep| run_replica(rcfg, ds, ep));
-        }
-        Ok(())
+        let rcfg = ReplicaCfg {
+            id: a,
+            model: cfg.model.clone(),
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            spec: self.spec,
+            l_steps: cfg.l_steps,
+            alpha: cfg.alpha,
+            momentum: cfg.momentum,
+            weight_decay: cfg.weight_decay,
+            use_scan: cfg.use_scan,
+            augment,
+            seed: cfg.seed.wrapping_add(a as u64 * 7919),
+            init_seed: cfg.seed,
+            fixed_inner_lr: if self.spec.outer_step {
+                Some(cfg.lr.base)
+            } else {
+                None
+            },
+        };
+        let ds = datasets[a].clone();
+        Box::new(move |ep| run_replica(rcfg, ds, ep))
     }
 
     fn init_master(&mut self, x0: Vec<f32>) {

@@ -64,10 +64,11 @@ use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{CommMode, RunConfig, ScopingCfg};
+use crate::config::{CommMode, RunConfig, ScopingCfg, TransportCfg};
 use crate::coordinator::checkpoint::Checkpoint;
-use crate::coordinator::comm::{AsyncPacer, ReduceFabric, RoundConsts,
-                               RoundReport, WorkerState};
+use crate::coordinator::comm::{AsyncPacer, ReduceFabric, ReplicaEndpoint,
+                               RoundConsts, RoundReport, WorkerState};
+use crate::coordinator::transport::{TcpTransport, TcpWorkerLink};
 use crate::data::batcher::{Augment, Batch, Batcher};
 use crate::data::{build, split_shards, Dataset};
 use crate::info;
@@ -81,6 +82,14 @@ pub struct TrainOutput {
     pub record: RunRecord,
     pub final_params: Vec<f32>,
 }
+
+/// One worker's thread/process body: drive a [`ReplicaEndpoint`] until
+/// the master stops it. The engine spawns these as local threads on the
+/// in-process transport; [`serve_worker_as`] runs one against a remote
+/// master over TCP — the same body either way, which is what keeps
+/// sync-mode training bit-identical across transports.
+pub type WorkerBody =
+    Box<dyn FnOnce(ReplicaEndpoint) -> Result<()> + Send + 'static>;
 
 /// Per-round values the engine computes for the strategy.
 pub struct RoundCtx<'a> {
@@ -116,14 +125,16 @@ pub trait RoundAlgo {
     /// Eval cadence in rounds (0 = only at the end).
     fn eval_every_rounds(&self) -> u64;
 
-    /// Spawn one worker body per fabric slot; `datasets[w]` is worker
-    /// w's (possibly sharded) training set.
-    fn spawn_workers(
+    /// The worker body for fabric slot `w`; `datasets[w]` is that
+    /// worker's (possibly sharded) training set. The engine spawns one
+    /// per slot as local threads; a remote worker process runs exactly
+    /// one, against the slot the master assigned it.
+    fn worker_body(
         &self,
-        fabric: &mut ReduceFabric,
+        w: usize,
         datasets: &[Arc<Dataset>],
         augment: Augment,
-    ) -> Result<()>;
+    ) -> WorkerBody;
 
     /// Install the seed initialization as the master state.
     fn init_master(&mut self, x0: Vec<f32>);
@@ -208,24 +219,6 @@ impl<'a> RoundEngine<'a> {
         let groups = algo.groups();
         let n_workers = groups.len();
 
-        let datasets: Vec<Arc<Dataset>> =
-            if cfg.split_data && algo.shards_data() {
-                match &train_ds {
-                    Dataset::Image(img) => {
-                        split_shards(img, n_workers, cfg.seed)
-                            .into_iter()
-                            .map(|s| Arc::new(Dataset::Image(s)))
-                            .collect()
-                    }
-                    Dataset::Corpus(_) => {
-                        bail!("split_data needs an image dataset")
-                    }
-                }
-            } else {
-                let shared = Arc::new(train_ds);
-                (0..n_workers).map(|_| shared.clone()).collect()
-            };
-
         let b = algo.batches_per_epoch(train_len, &mm);
         let spr = algo.steps_per_round();
         let total_rounds = total_rounds(cfg.epochs, b, spr);
@@ -239,10 +232,53 @@ impl<'a> RoundEngine<'a> {
         };
 
         // --- workers onto the fabric -------------------------------------
-        let mut fabric = ReduceFabric::new(groups.clone(), cfg.comm);
+        // In-process (default): spawn one local worker thread per slot.
+        // TCP master: bind, wait for every remote worker to connect —
+        // the same bodies run in the worker processes (serve_worker),
+        // so sync-mode outputs stay bit-identical across transports.
+        let mut fabric = match cfg.transport {
+            TransportCfg::InProcess => {
+                // shards are only materialized where workers actually
+                // consume them: here, or in each remote worker process
+                // (serve_worker_as) on the TCP path
+                let datasets = shard_datasets(
+                    cfg,
+                    algo.shards_data(),
+                    train_ds,
+                    n_workers,
+                )?;
+                let mut fabric = ReduceFabric::new(groups.clone(), cfg.comm);
+                for w in 0..n_workers {
+                    fabric.spawn_worker(
+                        algo.worker_body(w, &datasets, augment),
+                    );
+                }
+                fabric
+            }
+            TransportCfg::Tcp => {
+                let addr = cfg.listen.as_deref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--transport tcp master needs --listen host:port"
+                    )
+                })?;
+                if !cfg.comm.is_off() {
+                    crate::warn_log!(
+                        "simulated interconnect profile ignored over \
+                         --transport tcp (wire time is real)"
+                    );
+                }
+                info!(
+                    "{label} waiting for {n_workers} workers on {addr}"
+                );
+                let transport = TcpTransport::listen(addr, n_workers)?;
+                ReduceFabric::with_transport(
+                    groups.clone(),
+                    Box::new(transport),
+                )
+            }
+        };
         fabric.set_profiler(profiler.clone());
         let meter = fabric.meter();
-        algo.spawn_workers(&mut fabric, &datasets, augment)?;
 
         // --- master init (same artifact + seed for every algorithm) ------
         let init = master.execute(
@@ -490,7 +526,7 @@ impl<'a> RoundEngine<'a> {
                             &path,
                             cfg,
                             &algo,
-                            &fabric,
+                            &mut fabric,
                             CkState {
                                 next_round: completed,
                                 rounds_done: pacer.done(),
@@ -618,7 +654,7 @@ impl<'a> RoundEngine<'a> {
                         &path,
                         cfg,
                         &algo,
-                        &fabric,
+                        &mut fabric,
                         CkState {
                             next_round: round + 1,
                             rounds_done: &vec![round + 1; n_workers],
@@ -674,6 +710,71 @@ impl<'a> RoundEngine<'a> {
             final_params: algo.into_params(),
         })
     }
+}
+
+/// Per-worker training sets: disjoint shards under `cfg.split_data`
+/// (when the strategy shards at all), otherwise the shared set. A pure
+/// function of (config, worker count), so a remote worker process
+/// rebuilds exactly the shard the in-process engine would have handed
+/// its slot — the data half of the cross-transport determinism
+/// guarantee.
+pub fn shard_datasets(
+    cfg: &RunConfig,
+    shards_data: bool,
+    train_ds: Dataset,
+    n_workers: usize,
+) -> Result<Vec<Arc<Dataset>>> {
+    if cfg.split_data && shards_data {
+        match &train_ds {
+            Dataset::Image(img) => Ok(split_shards(img, n_workers, cfg.seed)
+                .into_iter()
+                .map(|s| Arc::new(Dataset::Image(s)))
+                .collect()),
+            Dataset::Corpus(_) => {
+                bail!("split_data needs an image dataset")
+            }
+        }
+    } else {
+        let shared = Arc::new(train_ds);
+        Ok((0..n_workers).map(|_| shared.clone()).collect())
+    }
+}
+
+/// Run one replica leg of `algo` against a remote master over TCP: the
+/// `--role worker` side of a distributed run. Connects to `connect`
+/// (retrying while the master is still binding), learns its replica
+/// slot from the handshake, rebuilds its data shard locally from the
+/// shared config, and drives the exact worker body the in-process
+/// engine would have spawned as a thread. Returns when the master
+/// sends `Stop` or hangs up.
+///
+/// The config must match the master's run (model, algorithm, seed,
+/// replicas, hyperparameters): the master never ships config over the
+/// wire, it ships rounds — a mismatched worker silently computes the
+/// wrong trajectory, which is why the handshake at least cross-checks
+/// the world size.
+pub fn serve_worker_as(
+    algo: &dyn RoundAlgo,
+    cfg: &RunConfig,
+    connect: &str,
+) -> Result<()> {
+    let session = Session::open(&cfg.artifacts_dir)?;
+    let mm = session.manifest.model(&cfg.model)?.clone();
+    drop(session); // the worker body opens its own session
+    let (train_ds, _val) = build(&mm.dataset, &cfg.data)?;
+    let augment = default_augment(&mm.dataset);
+    let n_workers = algo.groups().len();
+    let datasets =
+        shard_datasets(cfg, algo.shards_data(), train_ds, n_workers)?;
+    let link = TcpWorkerLink::connect(
+        connect,
+        n_workers,
+        std::time::Duration::from_secs(30),
+    )?;
+    let id = link.replica();
+    info!("worker {id}/{n_workers} serving rounds from {connect}");
+    let body = algo.worker_body(id, &datasets, augment);
+    body(ReplicaEndpoint::remote(link))
 }
 
 /// Total communication rounds for a run (pre-refactor formula, shared
@@ -793,7 +894,7 @@ fn write_checkpoint<A: RoundAlgo>(
     path: &str,
     cfg: &RunConfig,
     algo: &A,
-    fabric: &ReduceFabric,
+    fabric: &mut ReduceFabric,
     st: CkState,
 ) -> Result<()> {
     let states = fabric.snapshot_workers()?;

@@ -32,7 +32,7 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::comm::{ReduceFabric, RoundReport};
 use crate::coordinator::driver::{epoch_batches, TrainOutput};
 use crate::coordinator::engine::{master_vec, RoundAlgo, RoundCtx,
-                                 RoundEngine};
+                                 RoundEngine, WorkerBody};
 use crate::coordinator::replica::{run_replica, ReplicaCfg};
 use crate::coordinator::spec::{Anchor, CoupledSpec, Gain};
 use crate::data::batcher::Augment;
@@ -127,34 +127,30 @@ impl RoundAlgo for HierarchyAlgo {
         self.cfg.eval_every_rounds as u64
     }
 
-    fn spawn_workers(
+    fn worker_body(
         &self,
-        fabric: &mut ReduceFabric,
+        w: usize,
         datasets: &[Arc<Dataset>],
         augment: Augment,
-    ) -> Result<()> {
+    ) -> WorkerBody {
         let cfg = &self.cfg;
-        let spec = worker_spec();
-        for w in 0..self.n_workers() {
-            let rcfg = ReplicaCfg {
-                id: w,
-                model: cfg.model.clone(),
-                artifacts_dir: cfg.artifacts_dir.clone(),
-                spec,
-                l_steps: cfg.l_steps,
-                alpha: cfg.alpha,
-                momentum: cfg.momentum,
-                weight_decay: cfg.weight_decay,
-                use_scan: false,
-                augment,
-                seed: cfg.seed.wrapping_add(w as u64 * 7919),
-                init_seed: cfg.seed,
-                fixed_inner_lr: Some(cfg.lr.base),
-            };
-            let ds = datasets[w].clone();
-            fabric.spawn_worker(move |ep| run_replica(rcfg, ds, ep));
-        }
-        Ok(())
+        let rcfg = ReplicaCfg {
+            id: w,
+            model: cfg.model.clone(),
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            spec: worker_spec(),
+            l_steps: cfg.l_steps,
+            alpha: cfg.alpha,
+            momentum: cfg.momentum,
+            weight_decay: cfg.weight_decay,
+            use_scan: false,
+            augment,
+            seed: cfg.seed.wrapping_add(w as u64 * 7919),
+            init_seed: cfg.seed,
+            fixed_inner_lr: Some(cfg.lr.base),
+        };
+        let ds = datasets[w].clone();
+        Box::new(move |ep| run_replica(rcfg, ds, ep))
     }
 
     fn init_master(&mut self, x0: Vec<f32>) {

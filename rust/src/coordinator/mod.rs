@@ -27,11 +27,22 @@
 //!        │ workers: run_replica / grad_worker (replica.rs)
 //!        ▼
 //!              ReduceFabric (comm.rs)
-//!   one MPSC report event stream (id + round stamped)
+//!   rounds · double-buffered slabs · recycled report buffers
 //!   broadcast / send_round_to · collect / recv_report · reduce
-//!   snapshot/restore barrier · double-buffered slabs
-//!   recycled report buffers · simulated interconnect
-//!   byte metering · per-replica exposed-wait (wait.r<id>)
+//!   snapshot/restore barrier · per-replica exposed-wait (wait.r<id>)
+//!        │
+//!        │ Transport trait (transport/) — the dispatch and report legs
+//!        ▼
+//!   ┌─────────────────────────────┬──────────────────────────────┐
+//!   │ ChannelTransport (default)  │ TcpTransport (transport/tcp) │
+//!   │ in-process MPSC channels    │ length-prefixed wire codec   │
+//!   │ zero-copy Arc payloads      │ (transport/wire, reuses the  │
+//!   │ simulated interconnect      │ checkpoint section encoding) │
+//!   │ P*4 bytes metered           │ real frame bytes metered;    │
+//!   │ workers = threads           │ workers = processes that     │
+//!   │                             │ connect (serve_worker) and   │
+//!   │                             │ run the SAME worker bodies   │
+//!   └─────────────────────────────┴──────────────────────────────┘
 //! ```
 //!
 //! Topology: `n` replica worker **threads**, each owning a private PJRT
@@ -79,6 +90,17 @@
 //! the uninterrupted run's final params and curve exactly; an async
 //! resume continues each replica at its own round stamp (cadence fields
 //! stay deterministic, the trajectory is not replayable by design).
+//! Over TCP the snapshot barrier runs at the same quiescent points —
+//! the engine drains every in-flight remote leg first — so remote
+//! worker state checkpoints and restores exactly like local state.
+//!
+//! **Distributed runs** (`--transport tcp`): the master process runs
+//! the engine over a [`transport::TcpTransport`]; each worker process
+//! runs [`driver::serve_worker`] (`--role worker --connect host:port`)
+//! with the same config, rebuilds its data shard locally from the slot
+//! the handshake assigns, and drives the same worker body it would run
+//! as a thread. Sync-mode final params and curves are bit-identical
+//! across transports.
 
 pub mod checkpoint;
 pub mod comm;
@@ -88,10 +110,12 @@ pub mod hierarchy;
 pub mod replica;
 pub mod sgd_dp;
 pub mod spec;
+pub mod transport;
 
 pub use checkpoint::Checkpoint;
 pub use comm::ReduceFabric;
-pub use driver::{train, TrainOutput};
-pub use engine::{RoundAlgo, RoundEngine};
+pub use driver::{serve_worker, train, TrainOutput};
+pub use engine::{serve_worker_as, RoundAlgo, RoundEngine};
 pub use hierarchy::train_hierarchical;
 pub use spec::CoupledSpec;
+pub use transport::{TcpTransport, TcpWorkerLink, Transport};

@@ -27,7 +27,7 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::comm::{ReduceFabric, ReplicaEndpoint, RoundConsts,
                                RoundReport, WorkerCmd, WorkerState};
 use crate::coordinator::engine::{epoch_batches, lm_seq_len, master_vec,
-                                 RoundAlgo, RoundCtx};
+                                 RoundAlgo, RoundCtx, WorkerBody};
 use crate::coordinator::replica::batch_literals;
 use crate::data::batcher::{Augment, Batcher};
 use crate::data::Dataset;
@@ -103,25 +103,21 @@ impl RoundAlgo for GradAvgAlgo {
         (self.cfg.eval_every_rounds * self.cfg.l_steps.max(1)) as u64
     }
 
-    fn spawn_workers(
+    fn worker_body(
         &self,
-        fabric: &mut ReduceFabric,
+        a: usize,
         datasets: &[Arc<Dataset>],
         augment: Augment,
-    ) -> Result<()> {
+    ) -> WorkerBody {
         let cfg = &self.cfg;
-        for a in 0..cfg.replicas {
-            let model = cfg.model.clone();
-            let dir = cfg.artifacts_dir.clone();
-            let ds = datasets[a].clone();
-            let seed = cfg.seed.wrapping_add(a as u64 * 104729);
-            let base_seed = cfg.seed;
-            fabric.spawn_worker(move |ep| {
-                grad_worker(a, &model, &dir, ds, augment, seed, base_seed,
-                            ep)
-            });
-        }
-        Ok(())
+        let model = cfg.model.clone();
+        let dir = cfg.artifacts_dir.clone();
+        let ds = datasets[a].clone();
+        let seed = cfg.seed.wrapping_add(a as u64 * 104729);
+        let base_seed = cfg.seed;
+        Box::new(move |ep| {
+            grad_worker(a, &model, &dir, ds, augment, seed, base_seed, ep)
+        })
     }
 
     fn init_master(&mut self, x0: Vec<f32>) {
@@ -156,8 +152,18 @@ impl RoundAlgo for GradAvgAlgo {
                     -> Result<()> {
         // Downpour-style asynchronous gradient descent: apply each
         // worker's gradient as it arrives (effective batch B instead of
-        // the barrier's n*B; lr comes annealed at the report's round)
-        self.nesterov_step(ctx.lr, &report.params);
+        // the barrier's n*B; lr comes annealed at the report's round).
+        // With `--set async_lr_rescale=1` the per-gradient LR divides
+        // by n: one sweep of n single-batch steps then moves x by the
+        // same first-order amount as the barrier's one step on the
+        // n-batch mean gradient, so a schedule tuned for sync data-
+        // parallel transfers to async without retuning.
+        let lr = if self.cfg.async_lr_rescale {
+            ctx.lr / self.cfg.replicas as f32
+        } else {
+            ctx.lr
+        };
+        self.nesterov_step(lr, &report.params);
         Ok(())
     }
 
@@ -398,6 +404,56 @@ mod tests {
             .unwrap();
         assert_eq!(sync.x, async_.x);
         assert_eq!(sync.v, async_.v);
+    }
+
+    /// `--set async_lr_rescale=1` (the Downpour effective-batch
+    /// correction): the async per-gradient update must be exactly
+    /// `nesterov_step` at lr/n — pinned against an explicit call — and
+    /// the default stays the unscaled step.
+    #[test]
+    fn async_lr_rescale_divides_the_step_by_replicas() {
+        let mut cfg = RunConfig::new("mlp_synth", Algo::SgdDataParallel);
+        cfg.replicas = 4;
+        cfg.momentum = 0.9;
+        cfg.weight_decay = 1e-3;
+        cfg.async_lr_rescale = true;
+        let scoping = crate::opt::Scoping::constant(1.0, 1.0);
+        let ctx = RoundCtx {
+            round: 2,
+            lr: 0.4,
+            scoping: &scoping,
+        };
+        let g = vec![0.8f32, -0.4];
+        let report = RoundReport {
+            replica: 1,
+            round: 2,
+            params: g.clone(),
+            train_loss: 0.0,
+            train_err: 0.0,
+            step_s: 0.0,
+        };
+
+        let mut rescaled = GradAvgAlgo::new(&cfg);
+        rescaled.init_master(vec![1.0, -2.0]);
+        rescaled.async_update(&report, &ctx).unwrap();
+
+        // reference: the shared Nesterov kernel at lr / n = 0.1
+        let mut pinned = GradAvgAlgo::new(&cfg);
+        pinned.init_master(vec![1.0, -2.0]);
+        pinned.nesterov_step(ctx.lr / 4.0, &g);
+        assert_eq!(rescaled.x, pinned.x);
+        assert_eq!(rescaled.v, pinned.v);
+
+        // default (rescale off) keeps the full-lr Downpour step
+        cfg.async_lr_rescale = false;
+        let mut plain = GradAvgAlgo::new(&cfg);
+        plain.init_master(vec![1.0, -2.0]);
+        plain.async_update(&report, &ctx).unwrap();
+        let mut full = GradAvgAlgo::new(&cfg);
+        full.init_master(vec![1.0, -2.0]);
+        full.nesterov_step(ctx.lr, &g);
+        assert_eq!(plain.x, full.x);
+        assert_ne!(plain.x, pinned.x);
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Pluggable fabric transports.
+//!
+//! [`crate::coordinator::comm::ReduceFabric`] owns round/slab
+//! bookkeeping, reduces, and the snapshot barrier; everything that
+//! actually *moves* a message lives behind the [`Transport`] trait:
+//!
+//! * the **dispatch leg** — master -> replica [`RoundCmd`]s
+//!   ([`Transport::send_cmd`]), and
+//! * the **report leg** — the single master-bound stream of
+//!   [`FabricEvent`]s ([`Transport::recv_event`]) plus the per-replica
+//!   snapshot replies ([`Transport::recv_snapshot`], kept off the event
+//!   stream so round payload recycling is undisturbed).
+//!
+//! Two backends:
+//!
+//! * [`ChannelTransport`] (default) — the zero-copy in-process MPSC
+//!   channels the fabric always used: `Arc`-shared broadcast slabs,
+//!   recycled report buffers, simulated-interconnect delays on the
+//!   replica threads, `P * 4` bytes metered per payload. Behaviorally
+//!   identical to the pre-trait fabric.
+//! * [`tcp::TcpTransport`] — a length-prefixed TCP wire
+//!   ([`wire`]) for multi-process / multi-machine runs: the master
+//!   listens, each worker process connects and is assigned a replica
+//!   slot in a tiny hello handshake, and one reader thread per
+//!   connection funnels decoded frames onto the same event stream.
+//!   Wire bytes are real, so `simulate_transfer` is skipped and the
+//!   meter counts actual frame bytes in both directions.
+//!
+//! Sync-mode training is **bit-identical across transports**: the wire
+//! codec moves every f32/f64 as raw IEEE bits, reports are sorted by
+//! replica id before any reduce either way, and worker bodies are the
+//! same code driving the same [`crate::coordinator::comm::
+//! ReplicaEndpoint`] API. The cross-transport determinism suite
+//! (`tests/integration_tcp.rs`) pins this.
+
+pub mod tcp;
+pub mod wire;
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::CommCfg;
+use crate::coordinator::comm::{CommMeter, FabricEvent, ReplicaEndpoint,
+                               RoundCmd, WorkerState};
+
+pub use tcp::{TcpTransport, TcpWorkerLink};
+
+/// A fabric transport: the dispatch leg (commands to each replica) and
+/// the report leg (the master-bound event stream + snapshot replies).
+/// Implementations own byte accounting for the payloads they move:
+/// `P * 4` per round payload on the in-process channels, real frame
+/// bytes on the wire.
+pub trait Transport: Send {
+    /// Replica slots this transport serves.
+    fn replicas(&self) -> usize;
+
+    /// How many of those slots are *local* — backed by an endpoint this
+    /// transport can hand out for an in-process worker thread. The
+    /// channel transport returns `replicas()`; wire transports return 0
+    /// (their workers live in other processes and connect themselves).
+    fn local_endpoints(&self) -> usize;
+
+    /// The meter this transport accounts its payload bytes on.
+    fn meter(&self) -> Arc<CommMeter>;
+
+    /// Hand out replica `r`'s local endpoint plus the exit-event sender
+    /// its thread wrapper signals on return. `None` for wire transports
+    /// and for slots already taken.
+    fn take_endpoint(&mut self, replica: usize)
+                     -> Option<(ReplicaEndpoint, Sender<FabricEvent>)>;
+
+    /// Dispatch one command to replica `r`. Round payloads are
+    /// accounted here (once per link per direction, as ever);
+    /// snapshot/restore/stop traffic is control-plane and free. An
+    /// error means the link is down — round dispatch ignores it (the
+    /// death surfaces as an `Exited`/`Failed` event), restore
+    /// propagates it.
+    fn send_cmd(&mut self, replica: usize, cmd: RoundCmd) -> Result<()>;
+
+    /// Blocking receive of the next master-bound event.
+    fn recv_event(&mut self) -> Result<FabricEvent>;
+
+    /// Blocking receive of replica `r`'s snapshot reply.
+    fn recv_snapshot(&mut self, replica: usize) -> Result<WorkerState>;
+
+    /// Release transport resources after `Stop` has been dispatched to
+    /// every replica (wire transports join their reader threads here).
+    fn shutdown(&mut self) -> Result<()>;
+}
+
+/// The default in-process backend: one MPSC command channel per
+/// replica, one shared event stream, zero-copy `Arc` payloads. All
+/// endpoints are created up front and handed out by
+/// [`Transport::take_endpoint`] as the fabric spawns worker threads.
+pub struct ChannelTransport {
+    cmd_tx: Vec<Sender<RoundCmd>>,
+    snap_rx: Vec<std::sync::mpsc::Receiver<WorkerState>>,
+    endpoints: Vec<Option<(ReplicaEndpoint, Sender<FabricEvent>)>>,
+    event_rx: std::sync::mpsc::Receiver<FabricEvent>,
+    meter: Arc<CommMeter>,
+}
+
+impl ChannelTransport {
+    pub fn new(n: usize, comm: CommCfg) -> Self {
+        let meter = Arc::new(CommMeter::new());
+        let (event_tx, event_rx) = std::sync::mpsc::channel::<FabricEvent>();
+        let mut cmd_txs = Vec::with_capacity(n);
+        let mut snap_rxs = Vec::with_capacity(n);
+        let mut endpoints = Vec::with_capacity(n);
+        for id in 0..n {
+            let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<RoundCmd>();
+            let (snap_tx, snap_rx) =
+                std::sync::mpsc::channel::<WorkerState>();
+            let ep = ReplicaEndpoint::channel(
+                id,
+                cmd_rx,
+                event_tx.clone(),
+                snap_tx,
+                meter.clone(),
+                comm,
+            );
+            cmd_txs.push(cmd_tx);
+            snap_rxs.push(snap_rx);
+            endpoints.push(Some((ep, event_tx.clone())));
+        }
+        ChannelTransport {
+            cmd_tx: cmd_txs,
+            snap_rx: snap_rxs,
+            endpoints,
+            event_rx,
+            meter,
+        }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn replicas(&self) -> usize {
+        self.cmd_tx.len()
+    }
+
+    fn local_endpoints(&self) -> usize {
+        self.cmd_tx.len()
+    }
+
+    fn meter(&self) -> Arc<CommMeter> {
+        self.meter.clone()
+    }
+
+    fn take_endpoint(&mut self, replica: usize)
+                     -> Option<(ReplicaEndpoint, Sender<FabricEvent>)> {
+        self.endpoints.get_mut(replica)?.take()
+    }
+
+    fn send_cmd(&mut self, replica: usize, cmd: RoundCmd) -> Result<()> {
+        if let RoundCmd::Round(msg) = &cmd {
+            // payload bytes, accounted at send time like the wire pays
+            // them — whether or not the receiver is still alive
+            self.meter.account(msg.xref.len() * 4);
+        }
+        self.cmd_tx[replica]
+            .send(cmd)
+            .map_err(|_| anyhow!("replica {replica} hung up"))
+    }
+
+    fn recv_event(&mut self) -> Result<FabricEvent> {
+        self.event_rx
+            .recv()
+            .map_err(|_| anyhow!("all replicas exited mid-round"))
+    }
+
+    fn recv_snapshot(&mut self, replica: usize) -> Result<WorkerState> {
+        self.snap_rx[replica]
+            .recv()
+            .map_err(|_| anyhow!("replica {replica} hung up"))
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        // channels release on drop; worker threads are joined (and
+        // their errors raised) by the fabric, which owns the handles
+        Ok(())
+    }
+}

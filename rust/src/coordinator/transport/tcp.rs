@@ -1,0 +1,396 @@
+//! TCP backend: the fabric over a real wire.
+//!
+//! Master side ([`TcpTransport`]): bind, accept exactly `n` worker
+//! connections (each opens with a [`wire::TAG_HELLO`] carrying magic +
+//! protocol version; the master replies with the worker's assigned
+//! replica slot), then spawn one **reader thread** per connection that
+//! decodes incoming frames and funnels them onto the same single
+//! master-bound event stream the in-process transport uses. A clean
+//! socket close becomes `FabricEvent::Exited` (mirroring an in-process
+//! worker's thread-exit event, so a killed worker errors the master
+//! instead of deadlocking it); a truncated or garbled frame becomes
+//! `FabricEvent::Failed` carrying the decode message.
+//!
+//! Worker side ([`TcpWorkerLink`]): connect (with retry, so workers may
+//! start before the master is listening), handshake, then serve as the
+//! byte pump under a [`crate::coordinator::comm::ReplicaEndpoint`] —
+//! the worker body code is identical to the in-process case.
+//!
+//! Byte accounting: wire bytes are real here, so `simulate_transfer`
+//! is **skipped** on both legs and the master's
+//! [`crate::coordinator::comm::CommMeter`] counts actual frame bytes —
+//! round dispatches at send time, report frames at receive time.
+//! Snapshot/restore traffic stays control-plane (unmetered), matching
+//! the in-process convention so comm/compute ratios are comparable.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::comm::{CommMeter, FabricEvent, ReplicaEndpoint,
+                               RoundCmd, RoundMsg, RoundReport, WorkerCmd,
+                               WorkerState};
+use crate::coordinator::transport::{wire, Transport};
+use crate::info;
+
+/// Master-side TCP transport: `n` accepted worker connections, one
+/// reader thread each, all feeding one event stream.
+pub struct TcpTransport {
+    streams: Vec<TcpStream>,
+    snap_rx: Vec<Receiver<WorkerState>>,
+    event_rx: Receiver<FabricEvent>,
+    readers: Vec<JoinHandle<()>>,
+    meter: Arc<CommMeter>,
+}
+
+impl TcpTransport {
+    /// Bind `addr` and block until `n` workers have connected and
+    /// completed the hello handshake. Replica slots are assigned in
+    /// accept order — each worker learns its slot from the ack and
+    /// derives its data shard and RNG streams from it, so the training
+    /// trajectory is independent of which physical worker lands where.
+    pub fn listen(addr: &str, n: usize) -> Result<TcpTransport> {
+        assert!(n >= 1, "a TCP fabric needs at least one worker");
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding fabric master on {addr}"))?;
+        let meter = Arc::new(CommMeter::new());
+        let (event_tx, event_rx) = mpsc::channel::<FabricEvent>();
+        let mut streams = Vec::with_capacity(n);
+        let mut snap_rxs = Vec::with_capacity(n);
+        let mut readers = Vec::with_capacity(n);
+        for id in 0..n {
+            let (mut stream, peer) = listener
+                .accept()
+                .context("accepting a worker connection")?;
+            stream.set_nodelay(true).ok();
+            let hello = wire::read_frame(&mut stream)
+                .with_context(|| format!("handshake with {peer}"))?
+                .ok_or_else(|| {
+                    anyhow!("{peer} hung up during the handshake")
+                })?;
+            if hello.tag != wire::TAG_HELLO {
+                bail!("{peer} sent frame tag {} before hello", hello.tag);
+            }
+            wire::decode_hello(&hello.payload)
+                .with_context(|| format!("handshake with {peer}"))?;
+            wire::write_frame(
+                &mut stream,
+                wire::TAG_HELLO_ACK,
+                &wire::encode_hello_ack(id, n),
+            )
+            .with_context(|| format!("acking {peer}"))?;
+            info!("fabric: worker {id}/{n} connected from {peer}");
+            let rd = stream
+                .try_clone()
+                .context("cloning a worker socket for the reader")?;
+            let (snap_tx, snap_rx) = mpsc::channel::<WorkerState>();
+            let ev = event_tx.clone();
+            let m = meter.clone();
+            readers.push(std::thread::spawn(move || {
+                reader_loop(rd, id, ev, snap_tx, m)
+            }));
+            streams.push(stream);
+            snap_rxs.push(snap_rx);
+        }
+        Ok(TcpTransport {
+            streams,
+            snap_rx: snap_rxs,
+            event_rx,
+            readers,
+            meter,
+        })
+    }
+}
+
+/// Decode worker frames onto the master's event stream until the
+/// connection ends. Every exit pushes a terminal event so the master
+/// can never block forever on a dead worker.
+fn reader_loop(
+    mut stream: TcpStream,
+    id: usize,
+    event_tx: Sender<FabricEvent>,
+    snap_tx: Sender<WorkerState>,
+    meter: Arc<CommMeter>,
+) {
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(None) => {
+                // clean close: the wire analog of a worker thread body
+                // returning
+                event_tx.send(FabricEvent::Exited(id)).ok();
+                return;
+            }
+            Ok(Some(frame)) => {
+                let res = match frame.tag {
+                    wire::TAG_REPORT => {
+                        wire::decode_report(&frame.payload).and_then(|rep| {
+                            if rep.replica != id {
+                                bail!(
+                                    "report stamped replica {} on \
+                                     connection {id}",
+                                    rep.replica
+                                );
+                            }
+                            meter.account(
+                                wire::frame_bytes(frame.payload.len()),
+                            );
+                            event_tx
+                                .send(FabricEvent::Report(rep))
+                                .ok();
+                            Ok(())
+                        })
+                    }
+                    wire::TAG_SNAPSHOT => {
+                        wire::decode_worker_state(&frame.payload).map(|st| {
+                            snap_tx.send(st).ok();
+                        })
+                    }
+                    other => Err(anyhow!(
+                        "unexpected frame tag {other} from worker"
+                    )),
+                };
+                if let Err(e) = res {
+                    event_tx
+                        .send(FabricEvent::Failed(id, format!("{e:#}")))
+                        .ok();
+                    return;
+                }
+            }
+            Err(e) => {
+                // truncated / garbled frame: surface the decode message
+                // instead of panicking or hanging
+                event_tx
+                    .send(FabricEvent::Failed(id, format!("{e:#}")))
+                    .ok();
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn replicas(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn local_endpoints(&self) -> usize {
+        0
+    }
+
+    fn meter(&self) -> Arc<CommMeter> {
+        self.meter.clone()
+    }
+
+    fn take_endpoint(&mut self, _replica: usize)
+                     -> Option<(ReplicaEndpoint, Sender<FabricEvent>)> {
+        None
+    }
+
+    /// Fail-stop on any dispatch failure: a command that cannot be
+    /// encoded (e.g. an over-[`wire::MAX_FRAME`] state) or written
+    /// would otherwise strand both sides — the worker never sees the
+    /// round, so it never reports, and the master's `let _ =` round
+    /// dispatch would wait forever on an event that cannot come.
+    /// Shutting the socket turns the failure into the reader's
+    /// `Exited` event, which the barrier surfaces as an error.
+    fn send_cmd(&mut self, replica: usize, cmd: RoundCmd) -> Result<()> {
+        let stop = matches!(cmd, RoundCmd::Stop);
+        let res = {
+            let stream = &mut self.streams[replica];
+            match cmd {
+                RoundCmd::Round(msg) => wire::encode_round(
+                    msg.round, &msg.consts, &msg.xref,
+                )
+                .and_then(|payload| {
+                    self.meter.account(wire::frame_bytes(payload.len()));
+                    wire::write_frame(stream, wire::TAG_ROUND, &payload)
+                })
+                .with_context(|| {
+                    format!("sending round to replica {replica}")
+                }),
+                RoundCmd::Snapshot => {
+                    wire::write_frame(stream, wire::TAG_SNAPSHOT_REQ, &[])
+                        .with_context(|| {
+                            format!(
+                                "requesting snapshot from replica {replica}"
+                            )
+                        })
+                }
+                RoundCmd::Restore(st) => wire::encode_worker_state(&st)
+                    .and_then(|payload| {
+                        wire::write_frame(stream, wire::TAG_RESTORE,
+                                          &payload)
+                    })
+                    .with_context(|| {
+                        format!("restoring replica {replica}")
+                    }),
+                RoundCmd::Stop => {
+                    wire::write_frame(stream, wire::TAG_STOP, &[])
+                        .with_context(|| {
+                            format!("stopping replica {replica}")
+                        })
+                }
+            }
+        };
+        if res.is_err() && !stop {
+            let _ = self.streams[replica]
+                .shutdown(std::net::Shutdown::Both);
+        }
+        res
+    }
+
+    fn recv_event(&mut self) -> Result<FabricEvent> {
+        self.event_rx
+            .recv()
+            .map_err(|_| anyhow!("all fabric readers exited"))
+    }
+
+    fn recv_snapshot(&mut self, replica: usize) -> Result<WorkerState> {
+        self.snap_rx[replica]
+            .recv()
+            .map_err(|_| anyhow!("replica {replica} hung up"))
+    }
+
+    /// Join the reader threads. Each exits on its connection's EOF,
+    /// which follows the `Stop` the fabric has already dispatched (or
+    /// has already happened for a worker that died mid-run).
+    fn shutdown(&mut self) -> Result<()> {
+        for h in self.readers.drain(..) {
+            h.join()
+                .map_err(|_| anyhow!("fabric reader thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Worker-process side of the wire: the connected, handshaken socket a
+/// remote [`ReplicaEndpoint`] pumps frames through.
+pub struct TcpWorkerLink {
+    stream: TcpStream,
+    replica: usize,
+    workers: usize,
+    /// Recycled report payload: each round's decoded command takes it
+    /// as the `RoundMsg::slab`, the report hands it back — the wire
+    /// analog of the fabric's slab pool.
+    slab: Option<Vec<f32>>,
+}
+
+impl TcpWorkerLink {
+    /// Connect to a listening master, retrying `ConnectionRefused`
+    /// until `timeout` so workers may start before the master binds.
+    /// `expect_workers` cross-checks the master's world size (pass 0 to
+    /// skip, e.g. for tooling).
+    pub fn connect(addr: &str, expect_workers: usize, timeout: Duration)
+                   -> Result<TcpWorkerLink> {
+        let deadline = Instant::now() + timeout;
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(_) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("connecting to fabric master at {addr}")
+                    })
+                }
+            }
+        };
+        stream.set_nodelay(true).ok();
+        wire::write_frame(&mut stream, wire::TAG_HELLO,
+                          &wire::encode_hello())
+            .context("sending hello")?;
+        let ack = wire::read_frame(&mut stream)
+            .context("handshake")?
+            .ok_or_else(|| anyhow!("master hung up during handshake"))?;
+        if ack.tag != wire::TAG_HELLO_ACK {
+            bail!("master sent frame tag {} before hello-ack", ack.tag);
+        }
+        let (replica, workers) = wire::decode_hello_ack(&ack.payload)?;
+        if expect_workers != 0 && workers != expect_workers {
+            bail!(
+                "master runs a {workers}-worker fabric, this process is \
+                 configured for {expect_workers}"
+            );
+        }
+        Ok(TcpWorkerLink {
+            stream,
+            replica,
+            workers,
+            slab: None,
+        })
+    }
+
+    /// The replica slot the master assigned in the handshake.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Total workers in the master's fabric.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Next command off the wire. `Ok(None)` on `Stop` or a master
+    /// hang-up (the worker drains out, like a closed command channel).
+    pub(crate) fn recv_cmd(&mut self) -> Result<Option<WorkerCmd>> {
+        let Some(frame) = wire::read_frame(&mut self.stream)
+            .context("receiving command from master")?
+        else {
+            return Ok(None);
+        };
+        match frame.tag {
+            wire::TAG_ROUND => {
+                let (round, consts, xref) =
+                    wire::decode_round(&frame.payload)?;
+                let p = xref.len();
+                let mut slab = self.slab.take().unwrap_or_default();
+                slab.resize(p, 0.0);
+                Ok(Some(WorkerCmd::Round(RoundMsg {
+                    round,
+                    xref: Arc::new(xref),
+                    slab,
+                    consts,
+                })))
+            }
+            wire::TAG_SNAPSHOT_REQ => Ok(Some(WorkerCmd::Snapshot)),
+            wire::TAG_RESTORE => {
+                Ok(Some(WorkerCmd::Restore(Box::new(
+                    wire::decode_worker_state(&frame.payload)?,
+                ))))
+            }
+            wire::TAG_STOP => Ok(None),
+            other => bail!("unexpected frame tag {other} from master"),
+        }
+    }
+
+    /// Ship a round report; returns the wire bytes written (for the
+    /// worker-local meter) and recycles the payload as the next round's
+    /// slab.
+    pub(crate) fn report(&mut self, rep: RoundReport) -> Result<usize> {
+        let payload = wire::encode_report(&rep)?;
+        wire::write_frame(&mut self.stream, wire::TAG_REPORT, &payload)
+            .context("sending report to master")?;
+        self.slab = Some(rep.params);
+        Ok(wire::frame_bytes(payload.len()))
+    }
+
+    pub(crate) fn send_snapshot(&mut self, st: &WorkerState) -> Result<()> {
+        let payload = wire::encode_worker_state(st)?;
+        wire::write_frame(&mut self.stream, wire::TAG_SNAPSHOT, &payload)
+            .context("sending snapshot to master")
+    }
+
+    /// Fail-stop: close the socket after an unrecoverable send failure
+    /// (e.g. a state too large to frame). The master's reader sees EOF
+    /// and raises `Exited`, so a blocked barrier or snapshot collect
+    /// errors instead of waiting forever on a reply that cannot come;
+    /// the worker's next receive drains out cleanly.
+    pub(crate) fn poison(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}

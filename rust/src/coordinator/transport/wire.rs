@@ -1,0 +1,455 @@
+//! Length-prefixed wire codec for the TCP transport.
+//!
+//! Every message is one **frame**: a `u32` little-endian length, one
+//! tag byte, then the payload (`length` counts the tag plus payload, so
+//! an empty-payload frame encodes as `1u32, tag`). Frames are read
+//! fully into a buffer before any decoding, the declared length is
+//! validated against [`MAX_FRAME`] before a byte of it is allocated,
+//! and every inner vector decodes through the checkpoint codec's
+//! length-capped readers ([`checkpoint::read_flat_f32`] /
+//! [`checkpoint::read_str`]) — so a corrupt or hostile peer produces a
+//! decode *error*, never a panic or an absurd allocation. Named-vector
+//! payloads ([`WorkerState::vecs`]) reuse the checkpoint v2 section
+//! encoding verbatim ([`checkpoint::write_section_f32`]), keeping the
+//! two formats — and their caps — one codec.
+//!
+//! The protocol is deliberately dumb: no compression, no pipelining
+//! metadata, fixed little-endian scalar encodings. `f32`/`f64` values
+//! travel as raw IEEE bits (`to_le_bytes`/`from_le_bytes`), so a
+//! parameter vector round-trips the wire bit-exactly — the property
+//! the cross-transport determinism suite pins.
+//!
+//! [`checkpoint`]: crate::coordinator::checkpoint
+
+use std::io::{Cursor, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint::{
+    read_flat_f32, read_section_f32, write_f32_payload, write_section_f32,
+    MAX_SECTIONS,
+};
+use crate::coordinator::comm::{RoundConsts, RoundReport, WorkerState};
+
+/// Handshake magic ("PRLW") + protocol version, sent in every `Hello`.
+pub const WIRE_MAGIC: u32 = 0x5052_4c57;
+pub const WIRE_VERSION: u32 = 1;
+
+/// Hard cap on one frame's declared length: the checkpoint param cap
+/// (2^28 f32 = 1 GiB) plus 64 KiB of message framing, so every frame
+/// carrying ONE maximum-size vector (round dispatch, report, a
+/// single-vector state) fits exactly when the checkpoint codec would
+/// accept it. A garbled length header must never translate into a
+/// multi-GiB allocation — the
+/// [`crate::coordinator::checkpoint::Checkpoint::load`] rule, applied
+/// at the frame boundary. Worker states carrying *several*
+/// checkpoint-cap vectors (a multi-GiB snapshot) exceed one frame and
+/// fail-stop with a clear error instead of being framed — chunked
+/// state frames are a noted follow-up, far beyond any model in the
+/// zoo.
+pub const MAX_FRAME: u32 = (1 << 30) + (1 << 16);
+
+// Frame tags. Master -> worker:
+/// Worker -> master greeting carrying magic + version.
+pub const TAG_HELLO: u8 = 1;
+/// Master -> worker reply assigning the replica slot.
+pub const TAG_HELLO_ACK: u8 = 2;
+/// One communication round (`RoundCmd::Round`).
+pub const TAG_ROUND: u8 = 3;
+/// Snapshot request (`RoundCmd::Snapshot`).
+pub const TAG_SNAPSHOT_REQ: u8 = 4;
+/// State restore (`RoundCmd::Restore`).
+pub const TAG_RESTORE: u8 = 5;
+/// Finish and exit (`RoundCmd::Stop`).
+pub const TAG_STOP: u8 = 6;
+// Worker -> master:
+/// One round report (`FabricEvent::Report`).
+pub const TAG_REPORT: u8 = 7;
+/// Snapshot reply (a `WorkerState`).
+pub const TAG_SNAPSHOT: u8 = 8;
+
+/// One decoded frame: tag + raw payload bytes.
+pub struct Frame {
+    pub tag: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Write one frame. `payload` excludes the tag byte.
+pub fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8])
+                             -> Result<()> {
+    let len = 1u64 + payload.len() as u64;
+    if len > MAX_FRAME as u64 {
+        bail!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap");
+    }
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[tag])?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Wire bytes one frame occupies (length header + tag + payload) —
+/// what the [`crate::coordinator::comm::CommMeter`] accounts on the
+/// TCP path, where bytes are real rather than simulated.
+pub fn frame_bytes(payload_len: usize) -> usize {
+    4 + 1 + payload_len
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF at a frame boundary (the
+/// peer closed its socket between messages); EOF mid-frame, a length
+/// header over [`MAX_FRAME`], or a zero-length frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut len_b = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = r
+            .read(&mut len_b[got..])
+            .context("reading frame length")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("connection closed mid-frame (partial length header)");
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_b);
+    if len == 0 {
+        bail!("corrupt frame: zero length");
+    }
+    if len > MAX_FRAME {
+        bail!("corrupt frame: {len} bytes exceeds the {MAX_FRAME}-byte cap");
+    }
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag).context("reading frame tag")?;
+    let mut payload = vec![0u8; len as usize - 1];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    Ok(Some(Frame {
+        tag: tag[0],
+        payload,
+    }))
+}
+
+// ---------------------------------------------------------------------------
+// payload encodings
+// ---------------------------------------------------------------------------
+
+pub fn encode_hello() -> Vec<u8> {
+    let mut out = Vec::with_capacity(8);
+    out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out
+}
+
+pub fn decode_hello(payload: &[u8]) -> Result<()> {
+    let mut c = Cursor::new(payload);
+    let magic = read_u32(&mut c).context("hello magic")?;
+    if magic != WIRE_MAGIC {
+        bail!("peer is not a parle worker (bad hello magic {magic:#x})");
+    }
+    let version = read_u32(&mut c).context("hello version")?;
+    if version != WIRE_VERSION {
+        bail!(
+            "wire protocol mismatch: peer speaks v{version}, this build \
+             speaks v{WIRE_VERSION}"
+        );
+    }
+    Ok(())
+}
+
+pub fn encode_hello_ack(replica: usize, workers: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8);
+    out.extend_from_slice(&(replica as u32).to_le_bytes());
+    out.extend_from_slice(&(workers as u32).to_le_bytes());
+    out
+}
+
+/// -> (replica slot, total workers the master expects).
+pub fn decode_hello_ack(payload: &[u8]) -> Result<(usize, usize)> {
+    let mut c = Cursor::new(payload);
+    let replica = read_u32(&mut c).context("hello-ack replica")? as usize;
+    let workers = read_u32(&mut c).context("hello-ack workers")? as usize;
+    if replica >= workers {
+        bail!("corrupt hello-ack: replica {replica} of {workers}");
+    }
+    Ok((replica, workers))
+}
+
+/// The dispatch leg of one round: stamp, broadcast constants, and the
+/// reference vector. (The in-process `RoundMsg::slab` is a buffer-
+/// recycling detail, not wire state — the receiving link supplies its
+/// own recycled slab.)
+pub fn encode_round(round: u64, consts: &RoundConsts, xref: &[f32])
+                    -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(8 + 16 + 8 + xref.len() * 4);
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&consts.lr.to_le_bytes());
+    out.extend_from_slice(&consts.gamma_inv.to_le_bytes());
+    out.extend_from_slice(&consts.rho_inv.to_le_bytes());
+    out.extend_from_slice(&consts.eta_over_rho.to_le_bytes());
+    out.extend_from_slice(&(xref.len() as u64).to_le_bytes());
+    write_f32_payload(&mut out, xref)?;
+    Ok(out)
+}
+
+pub fn decode_round(payload: &[u8])
+                    -> Result<(u64, RoundConsts, Vec<f32>)> {
+    let limit = payload.len() as u64;
+    let mut c = Cursor::new(payload);
+    let round = read_u64(&mut c).context("round stamp")?;
+    let consts = RoundConsts {
+        lr: read_f32(&mut c).context("round lr")?,
+        gamma_inv: read_f32(&mut c).context("round gamma_inv")?,
+        rho_inv: read_f32(&mut c).context("round rho_inv")?,
+        eta_over_rho: read_f32(&mut c).context("round eta_over_rho")?,
+    };
+    let xref = read_flat_f32(&mut c, limit).context("round reference")?;
+    Ok((round, consts, xref))
+}
+
+pub fn encode_report(rep: &RoundReport) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(4 + 8 + 24 + 8 + rep.params.len() * 4);
+    out.extend_from_slice(&(rep.replica as u32).to_le_bytes());
+    out.extend_from_slice(&rep.round.to_le_bytes());
+    out.extend_from_slice(&rep.train_loss.to_le_bytes());
+    out.extend_from_slice(&rep.train_err.to_le_bytes());
+    out.extend_from_slice(&rep.step_s.to_le_bytes());
+    out.extend_from_slice(&(rep.params.len() as u64).to_le_bytes());
+    write_f32_payload(&mut out, &rep.params)?;
+    Ok(out)
+}
+
+pub fn decode_report(payload: &[u8]) -> Result<RoundReport> {
+    let limit = payload.len() as u64;
+    let mut c = Cursor::new(payload);
+    let replica = read_u32(&mut c).context("report replica")? as usize;
+    let round = read_u64(&mut c).context("report round")?;
+    let train_loss = read_f64(&mut c).context("report loss")?;
+    let train_err = read_f64(&mut c).context("report err")?;
+    let step_s = read_f64(&mut c).context("report step_s")?;
+    let params = read_flat_f32(&mut c, limit).context("report params")?;
+    Ok(RoundReport {
+        replica,
+        round,
+        params,
+        train_loss,
+        train_err,
+        step_s,
+    })
+}
+
+/// `WorkerState` for restore commands and snapshot replies. The named
+/// vectors are checkpoint v2 sections byte-for-byte.
+pub fn encode_worker_state(st: &WorkerState) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(st.replica as u32).to_le_bytes());
+    out.extend_from_slice(&st.batches_drawn.to_le_bytes());
+    out.extend_from_slice(&(st.vecs.len() as u32).to_le_bytes());
+    for (name, v) in &st.vecs {
+        write_section_f32(&mut out, name, v)?;
+    }
+    Ok(out)
+}
+
+pub fn decode_worker_state(payload: &[u8]) -> Result<WorkerState> {
+    let limit = payload.len() as u64;
+    let mut c = Cursor::new(payload);
+    let replica = read_u32(&mut c).context("state replica")? as usize;
+    let batches_drawn = read_u64(&mut c).context("state batches")?;
+    let n_vecs = read_u32(&mut c).context("state vec count")?;
+    if n_vecs > MAX_SECTIONS {
+        bail!("corrupt worker state: {n_vecs} sections");
+    }
+    let mut vecs = Vec::with_capacity(n_vecs as usize);
+    for _ in 0..n_vecs {
+        vecs.push(read_section_f32(&mut c, limit)
+            .context("state section")?);
+    }
+    Ok(WorkerState {
+        replica,
+        vecs,
+        batches_drawn,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// scalar readers (cursor-side, context-free)
+// ---------------------------------------------------------------------------
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32<R: Read>(r: &mut R) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+fn read_f64<R: Read>(r: &mut R) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts() -> RoundConsts {
+        RoundConsts {
+            lr: 0.1,
+            gamma_inv: 0.01,
+            rho_inv: 1.0,
+            eta_over_rho: 0.1,
+        }
+    }
+
+    /// Frames round-trip through a byte pipe, including the empty
+    /// payload and the clean-EOF-at-boundary case.
+    #[test]
+    fn frame_round_trip_and_clean_eof() {
+        let mut pipe = Vec::new();
+        write_frame(&mut pipe, TAG_STOP, &[]).unwrap();
+        write_frame(&mut pipe, TAG_ROUND, &[1, 2, 3]).unwrap();
+        let mut r = Cursor::new(pipe.as_slice());
+        let f = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((f.tag, f.payload.len()), (TAG_STOP, 0));
+        let f = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((f.tag, f.payload.as_slice()), (TAG_ROUND, &[1u8, 2, 3][..]));
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    /// A partial length header or a truncated payload is a decode
+    /// error, not a silent EOF and not a panic.
+    #[test]
+    fn truncated_frames_error() {
+        let mut pipe = Vec::new();
+        write_frame(&mut pipe, TAG_REPORT, &[9; 10]).unwrap();
+        // cut mid-payload
+        let cut = pipe.len() - 4;
+        let mut r = Cursor::new(&pipe[..cut]);
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("payload"), "{err}");
+        // cut mid-length-header
+        let mut r = Cursor::new(&pipe[..2]);
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("mid-frame"), "{err}");
+    }
+
+    /// Over-cap and zero length headers are rejected before any
+    /// allocation — the checkpoint-loader rule at the frame boundary.
+    #[test]
+    fn absurd_frame_lengths_are_rejected() {
+        for len in [0u32, MAX_FRAME + 1, u32::MAX] {
+            let mut bytes = len.to_le_bytes().to_vec();
+            bytes.push(TAG_ROUND);
+            let mut r = Cursor::new(bytes.as_slice());
+            let err = read_frame(&mut r).unwrap_err().to_string();
+            assert!(err.contains("corrupt frame"), "{len}: {err}");
+        }
+    }
+
+    #[test]
+    fn hello_handshake_round_trips_and_validates() {
+        decode_hello(&encode_hello()).unwrap();
+        let mut bad = encode_hello();
+        bad[0] ^= 0xff;
+        assert!(decode_hello(&bad).is_err());
+        let mut stale = encode_hello();
+        stale[4] = 99;
+        let err = decode_hello(&stale).unwrap_err().to_string();
+        assert!(err.contains("protocol mismatch"), "{err}");
+
+        let (r, n) = decode_hello_ack(&encode_hello_ack(2, 5)).unwrap();
+        assert_eq!((r, n), (2, 5));
+        assert!(decode_hello_ack(&encode_hello_ack(5, 5)).is_err());
+    }
+
+    /// Round frames preserve every f32 bit of the reference, including
+    /// negative zero and subnormals.
+    #[test]
+    fn round_payload_is_bit_exact() {
+        let xref = vec![1.0f32, -0.0, f32::MIN_POSITIVE, -2.5e-40, 3.25];
+        let enc = encode_round(41, &consts(), &xref).unwrap();
+        let (round, c, back) = decode_round(&enc).unwrap();
+        assert_eq!(round, 41);
+        assert_eq!(c.lr.to_bits(), consts().lr.to_bits());
+        assert_eq!(c.eta_over_rho.to_bits(), consts().eta_over_rho.to_bits());
+        assert_eq!(back.len(), xref.len());
+        for (a, b) in back.iter().zip(&xref) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn report_round_trips_including_nan_stats() {
+        let rep = RoundReport {
+            replica: 3,
+            round: 17,
+            params: vec![0.5, -1.5, 4096.0],
+            train_loss: f64::NAN,
+            train_err: 0.25,
+            step_s: 0.125,
+        };
+        let back = decode_report(&encode_report(&rep).unwrap()).unwrap();
+        assert_eq!(back.replica, 3);
+        assert_eq!(back.round, 17);
+        assert_eq!(back.params, rep.params);
+        assert_eq!(back.train_loss.to_bits(), rep.train_loss.to_bits());
+        assert_eq!(back.step_s.to_bits(), rep.step_s.to_bits());
+    }
+
+    #[test]
+    fn worker_state_sections_round_trip() {
+        let st = WorkerState {
+            replica: 1,
+            vecs: vec![
+                ("y".into(), vec![1.0, 2.0, 3.0]),
+                ("mom".into(), vec![-0.5; 4]),
+            ],
+            batches_drawn: 77,
+        };
+        let back =
+            decode_worker_state(&encode_worker_state(&st).unwrap()).unwrap();
+        assert_eq!(back, st);
+        // empty state (stateless gradient workers)
+        let empty = WorkerState {
+            replica: 0,
+            vecs: Vec::new(),
+            batches_drawn: 0,
+        };
+        let back =
+            decode_worker_state(&encode_worker_state(&empty).unwrap())
+                .unwrap();
+        assert_eq!(back, empty);
+    }
+
+    /// Garbage payloads decode to errors with a message, never panics —
+    /// the master feeds whatever the socket produced straight in here.
+    #[test]
+    fn garbage_payloads_error_without_panicking() {
+        let junk = [0xffu8; 64];
+        assert!(decode_round(&junk).is_err());
+        assert!(decode_report(&junk).is_err());
+        assert!(decode_worker_state(&junk).is_err());
+        assert!(decode_hello(&junk[..3]).is_err());
+        assert!(decode_hello_ack(&junk[..5]).is_err());
+        // a declared vector length far past the payload end must be
+        // caught by the shared checkpoint cap/limit checks
+        let mut bomb = Vec::new();
+        bomb.extend_from_slice(&7u64.to_le_bytes()); // round
+        bomb.extend_from_slice(&[0u8; 16]); // consts
+        bomb.extend_from_slice(&(u64::MAX).to_le_bytes()); // xref len
+        let err = decode_round(&bomb).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+    }
+}

@@ -85,8 +85,28 @@ fn run() -> Result<()> {
             if let Some(mode) = flag("comm-mode") {
                 cfg.comm_mode = parle::config::CommMode::parse(mode)?;
             }
+            if let Some(t) = flag("transport") {
+                cfg.transport = parle::config::TransportCfg::parse(t)?;
+            }
+            if let Some(addr) = flag("listen") {
+                cfg.listen = Some(addr.to_string());
+            }
             if let Some(path) = flag("resume") {
                 cfg.resume_from = Some(path.to_string());
+            }
+            match flag("role").unwrap_or("master") {
+                "worker" => {
+                    // distributed worker process: serve replica legs
+                    // against a remote master; no record/checkpoint of
+                    // its own (the master owns the run's outputs)
+                    cfg.transport = parle::config::TransportCfg::Tcp;
+                    let connect = flag("connect").context(
+                        "--role worker needs --connect host:port",
+                    )?;
+                    return parle::coordinator::serve_worker(&cfg, connect);
+                }
+                "master" => {}
+                other => bail!("unknown --role {other:?} (master|worker)"),
             }
             let label = flag("label").unwrap_or("train").to_string();
             let out = train(&cfg, &label)?;
@@ -161,6 +181,8 @@ USAGE:
   parle train --model <zoo> --algo <parle|elastic|entropy|sgd|sgd-dp>
               [--set key=value ...] [--label name] [--out runs]
               [--comm-mode sync|async] [--resume <ckpt>]
+              [--transport tcp --role master|worker
+               --listen host:port | --connect host:port]
   parle experiment <name|all> [--quick] [--out runs] [--seed N]
   parle perfmodel
   parle list
@@ -176,6 +198,24 @@ COMMUNICATION:
   --set max_staleness=K      async only: a replica may run at most K
                              rounds ahead of the slowest one (default
                              4; 0 = lockstep)
+  --set async_lr_rescale=1   async sgd-dp only: divide the per-gradient
+                             LR by n replicas (Downpour effective-batch
+                             correction) so sync-tuned schedules
+                             transfer
+
+DISTRIBUTED (multi-process, TCP):
+  --transport tcp            run the fabric over a length-prefixed TCP
+                             wire instead of in-process channels;
+                             sync-mode results are bit-identical to the
+                             default transport. Simulated --set comm=
+                             profiles are skipped (wire time is real).
+  --role master --listen A   the master binds A (host:port) and waits
+                             for `replicas` workers to connect, then
+                             trains as usual and owns all outputs
+  --role worker --connect A  serve one replica (slot assigned by the
+                             master at connect) with the SAME model/
+                             algo/seed/--set flags as the master;
+                             exits when the master finishes
 
 CHECKPOINT/RESUME:
   --set checkpoint_every=N   write a full-state checkpoint every N

@@ -1,0 +1,480 @@
+//! The TCP transport, pinned against the in-process one.
+//!
+//! Fabric-level tests (echo/counting workers over real loopback
+//! sockets) need no artifacts and run everywhere; the training
+//! determinism tests self-skip when artifacts are missing, like the
+//! rest of the integration suite.
+//!
+//! Ports: every test uses its own fixed loopback port so the suite is
+//! safe under the default parallel test runner; CI additionally runs
+//! this file with `--test-threads=1` so port allocation stays
+//! deterministic. Workers retry their connects, so master-after-worker
+//! startup order is fine.
+
+use std::time::Duration;
+
+use parle::config::{Algo, RunConfig, TransportCfg};
+use parle::coordinator::comm::{ReduceFabric, ReplicaEndpoint, RoundConsts,
+                               RoundMsg, RoundReport, WorkerCmd,
+                               WorkerState};
+use parle::coordinator::transport::{wire, TcpTransport, TcpWorkerLink};
+use parle::coordinator::{serve_worker_as, train, train_hierarchical};
+use parle::opt::LrSchedule;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn consts() -> RoundConsts {
+    RoundConsts {
+        lr: 0.1,
+        gamma_inv: 0.01,
+        rho_inv: 1.0,
+        eta_over_rho: 0.1,
+    }
+}
+
+/// Spawn `n` echo worker threads connected to `addr`: each reports the
+/// broadcast reference back through the recycled slab, exactly like the
+/// in-process echo fixtures in comm.rs — but over real sockets.
+fn spawn_echo_workers(
+    addr: &str,
+    n: usize,
+) -> Vec<std::thread::JoinHandle<parle::Result<()>>> {
+    (0..n)
+        .map(|_| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let link = TcpWorkerLink::connect(
+                    &addr,
+                    n,
+                    Duration::from_secs(10),
+                )?;
+                let ep = ReplicaEndpoint::remote(link);
+                while let Some(msg) = ep.recv() {
+                    let RoundMsg {
+                        round,
+                        xref,
+                        mut slab,
+                        ..
+                    } = msg;
+                    slab.copy_from_slice(&xref);
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round,
+                        params: slab,
+                        train_loss: 0.25,
+                        train_err: 0.125,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            })
+        })
+        .collect()
+}
+
+/// Round payloads survive the wire bit-for-bit, rounds stamp correctly,
+/// the reduce matches, and the meter counts real frames both ways.
+#[test]
+fn tcp_fabric_round_trips_bit_exactly_over_loopback() {
+    let addr = "127.0.0.1:47631";
+    let n = 3usize;
+    let workers = spawn_echo_workers(addr, n);
+    let transport = TcpTransport::listen(addr, n).unwrap();
+    let mut fabric =
+        ReduceFabric::with_transport(vec![0; n], Box::new(transport));
+    let meter = fabric.meter();
+    for round in 0..4u64 {
+        let xref: Vec<f32> = (0..257)
+            .map(|i| {
+                (i as f32 - 128.0) * 0.015625 + round as f32 * 0.25
+            })
+            .collect();
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        let stats = fabric.collect().unwrap();
+        assert_eq!(stats.mean_loss, 0.25);
+        assert_eq!(stats.mean_err, 0.125);
+        for r in fabric.reports() {
+            assert_eq!(r.round, round);
+            for (a, b) in r.params.iter().zip(&xref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "replica {}", r.replica);
+            }
+        }
+        let mut out = vec![0.0f32; 257];
+        fabric.reduce_into(&mut out);
+        assert_eq!(out, xref, "mean of identical echoes");
+    }
+    // real wire frames, metered master-side: one dispatch + one report
+    // frame per replica per round
+    assert_eq!(meter.messages(), 2 * n as u64 * 4);
+    assert!(meter.bytes() > (257 * 4 * 2 * n * 4) as u64);
+    fabric.shutdown().unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+/// The snapshot/restore barrier works over the wire: stateful workers
+/// snapshot their accumulators through `WorkerState` frames and accept
+/// restores, mirroring the in-process counting-fabric test.
+#[test]
+fn tcp_snapshot_restore_round_trips_worker_state() {
+    let addr = "127.0.0.1:47632";
+    let n = 2usize;
+    let workers: Vec<_> = (0..n)
+        .map(|_| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || -> parle::Result<()> {
+                let link = TcpWorkerLink::connect(
+                    &addr,
+                    n,
+                    Duration::from_secs(10),
+                )?;
+                let ep = ReplicaEndpoint::remote(link);
+                let mut acc = vec![0.0f32; 2];
+                let mut drawn = 0u64;
+                while let Some(cmd) = ep.recv_cmd() {
+                    match cmd {
+                        WorkerCmd::Round(msg) => {
+                            acc[0] += msg.xref.iter().sum::<f32>();
+                            drawn += 1;
+                            let RoundMsg {
+                                round, mut slab, ..
+                            } = msg;
+                            slab.copy_from_slice(&acc);
+                            ep.report(RoundReport {
+                                replica: ep.id(),
+                                round,
+                                params: slab,
+                                train_loss: 0.0,
+                                train_err: 0.0,
+                                step_s: 0.0,
+                            });
+                        }
+                        WorkerCmd::Snapshot => {
+                            ep.send_snapshot(WorkerState {
+                                replica: ep.id(),
+                                vecs: vec![("acc".into(), acc.clone())],
+                                batches_drawn: drawn,
+                            });
+                        }
+                        WorkerCmd::Restore(st) => {
+                            acc = st.vec("acc").unwrap().to_vec();
+                            drawn = st.batches_drawn;
+                        }
+                    }
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    let transport = TcpTransport::listen(addr, n).unwrap();
+    let mut fabric =
+        ReduceFabric::with_transport(vec![0; n], Box::new(transport));
+    let xref = vec![1.0f32, 2.0];
+    for _ in 0..3 {
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        fabric.collect().unwrap();
+    }
+    let states = fabric.snapshot_workers().unwrap();
+    assert_eq!(states.len(), 2);
+    assert_eq!(states[0].replica, 0);
+    assert_eq!(states[0].batches_drawn, 3);
+    assert_eq!(states[0].vec("acc"), Some(&[9.0f32, 0.0][..]));
+
+    // restore a doctored state and watch the next round build on it
+    let doctored = (0..n)
+        .map(|r| WorkerState {
+            replica: r,
+            vecs: vec![("acc".into(), vec![100.0, 0.0])],
+            batches_drawn: 50,
+        })
+        .collect();
+    fabric.restore_workers(doctored).unwrap();
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    fabric.collect().unwrap();
+    assert_eq!(fabric.report_params(0), &[103.0f32, 0.0][..]);
+    fabric.shutdown().unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+/// Fault injection: a TCP worker that dies mid-round surfaces as a
+/// master-side error (through the reader's `Exited` event), never a
+/// deadlock — the wire analog of the in-process dead-worker test.
+#[test]
+fn tcp_worker_death_mid_round_errors_master() {
+    let addr = "127.0.0.1:47633";
+    let n = 2usize;
+    // worker 0: echoes forever; worker 1: takes one round and dies
+    // (closing its socket without reporting)
+    let healthy = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || -> parle::Result<()> {
+            let link =
+                TcpWorkerLink::connect(&addr, n, Duration::from_secs(10))?;
+            let ep = ReplicaEndpoint::remote(link);
+            while let Some(msg) = ep.recv() {
+                let RoundMsg {
+                    round, mut slab, ..
+                } = msg;
+                slab.fill(0.0);
+                ep.report(RoundReport {
+                    replica: ep.id(),
+                    round,
+                    params: slab,
+                    train_loss: 0.0,
+                    train_err: 0.0,
+                    step_s: 0.0,
+                });
+            }
+            Ok(())
+        })
+    };
+    let doomed = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || -> parle::Result<()> {
+            let link =
+                TcpWorkerLink::connect(&addr, n, Duration::from_secs(10))?;
+            let ep = ReplicaEndpoint::remote(link);
+            let _ = ep.recv(); // swallow one round, then hang up
+            Ok(())
+        })
+    };
+    let transport = TcpTransport::listen(addr, n).unwrap();
+    let mut fabric =
+        ReduceFabric::with_transport(vec![0; n], Box::new(transport));
+    let xref = vec![1.0f32; 16];
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    let err = fabric.collect().unwrap_err().to_string();
+    assert!(err.contains("died mid-round"), "{err}");
+    fabric.shutdown().unwrap();
+    healthy.join().unwrap().unwrap();
+    doomed.join().unwrap().unwrap();
+}
+
+/// Fault injection: garbled and over-cap frames from a worker surface
+/// as master errors carrying the decode message — no panic, no hang.
+#[test]
+fn tcp_garbled_frame_errors_with_decode_message() {
+    use std::io::Write;
+    let addr = "127.0.0.1:47634";
+    let evil = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            // handshake properly, then write garbage instead of frames
+            let deadline =
+                std::time::Instant::now() + Duration::from_secs(10);
+            let mut stream = loop {
+                match std::net::TcpStream::connect(&addr) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        if std::time::Instant::now() >= deadline {
+                            panic!("connect: {e}");
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            };
+            wire::write_frame(&mut stream, wire::TAG_HELLO,
+                              &wire::encode_hello())
+                .unwrap();
+            let ack = wire::read_frame(&mut stream).unwrap().unwrap();
+            assert_eq!(ack.tag, wire::TAG_HELLO_ACK);
+            // a frame whose declared length blows the cap
+            stream
+                .write_all(&(wire::MAX_FRAME + 7).to_le_bytes())
+                .unwrap();
+            stream.write_all(&[0xab; 32]).unwrap();
+            stream.flush().unwrap();
+            // hold the socket open until the master has seen the error
+            std::thread::sleep(Duration::from_millis(500));
+        })
+    };
+    let transport = TcpTransport::listen(addr, 1).unwrap();
+    let mut fabric =
+        ReduceFabric::with_transport(vec![0], Box::new(transport));
+    let xref = vec![0.5f32; 8];
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    // alternate format prints the whole context chain: the outer
+    // barrier error plus the reader's decode message
+    let err = format!("{:#}", fabric.collect().unwrap_err());
+    assert!(
+        err.contains("transport failed") && err.contains("corrupt frame"),
+        "{err}"
+    );
+    fabric.shutdown().unwrap();
+    evil.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// cross-transport determinism (artifact-gated, like the training suite)
+// ---------------------------------------------------------------------------
+
+fn base(algo: Algo) -> RunConfig {
+    let mut cfg = RunConfig::new("mlp_synth", algo);
+    cfg.epochs = 2.0;
+    cfg.l_steps = match algo {
+        Algo::Parle | Algo::EntropySgd => 2,
+        _ => 1,
+    };
+    cfg.replicas = 2;
+    cfg.data.train = 1024;
+    cfg.data.val = 256;
+    cfg.lr = LrSchedule::new(0.1, vec![4], 5.0);
+    cfg.eval_every_rounds = 4;
+    cfg.seed = 7;
+    cfg
+}
+
+/// Run `cfg` as a TCP master on `port` with `cfg.replicas` loopback
+/// worker threads driving `serve_worker_as` on `mk_algo`'s strategy —
+/// the exact code path of `--role worker`.
+fn tcp_train<F, M>(
+    cfg: &RunConfig,
+    port: u16,
+    label: &str,
+    mk_algo: F,
+    master: M,
+) -> parle::coordinator::TrainOutput
+where
+    F: Fn(&RunConfig) -> Box<dyn parle::coordinator::RoundAlgo>
+        + Send
+        + Sync
+        + 'static
+        + Clone,
+    M: FnOnce(&RunConfig, &str) -> parle::Result<
+        parle::coordinator::TrainOutput,
+    >,
+{
+    let addr = format!("127.0.0.1:{port}");
+    let n_workers = mk_algo(cfg).groups().len();
+    let mut mcfg = cfg.clone();
+    mcfg.transport = TransportCfg::Tcp;
+    mcfg.listen = Some(addr.clone());
+    let workers: Vec<_> = (0..n_workers)
+        .map(|_| {
+            let wcfg = cfg.clone();
+            let a = addr.clone();
+            let mk = mk_algo.clone();
+            std::thread::spawn(move || {
+                serve_worker_as(mk(&wcfg).as_ref(), &wcfg, &a)
+            })
+        })
+        .collect();
+    let out = master(&mcfg, label).unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+    out
+}
+
+fn assert_same_run(
+    a: &parle::coordinator::TrainOutput,
+    b: &parle::coordinator::TrainOutput,
+    tag: &str,
+) {
+    assert_eq!(a.final_params, b.final_params, "{tag}: params diverged");
+    assert_eq!(a.record.curve.len(), b.record.curve.len(), "{tag}");
+    for (pa, pb) in a
+        .record
+        .curve
+        .points
+        .iter()
+        .zip(&b.record.curve.points)
+    {
+        assert_eq!(pa.epoch.to_bits(), pb.epoch.to_bits(), "{tag}");
+        assert_eq!(
+            pa.train_loss.to_bits(),
+            pb.train_loss.to_bits(),
+            "{tag}"
+        );
+        assert_eq!(pa.train_err.to_bits(), pb.train_err.to_bits(), "{tag}");
+        assert_eq!(pa.val_err.to_bits(), pb.val_err.to_bits(), "{tag}");
+    }
+}
+
+/// THE determinism guarantee of the transport seam: a sync-mode run
+/// over loopback TCP produces bit-identical final params and curves to
+/// the in-process transport, for the coupled family and the gradient-
+/// averaging baseline. The parle leg also checkpoints mid-run over the
+/// wire (exercising remote quiesce + snapshot) — checkpointing must
+/// not perturb the trajectory either.
+#[test]
+fn tcp_sync_training_is_bit_identical_to_in_process() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let dir = std::env::temp_dir().join("parle_itest_tcp_det");
+    std::fs::remove_dir_all(&dir).ok();
+    for (algo, port) in
+        [(Algo::Parle, 47641u16), (Algo::SgdDataParallel, 47642)]
+    {
+        let cfg = base(algo);
+        let local =
+            train(&cfg, &format!("itest_tcpdet_{}_local", algo.name()))
+                .unwrap();
+        let mut tcfg = cfg.clone();
+        if algo == Algo::Parle {
+            // checkpoint over the wire mid-run: quiesce + remote
+            // snapshot must leave the trajectory untouched
+            tcfg.checkpoint_every_rounds = 4;
+            tcfg.checkpoint_path = Some(
+                dir.join("tcp_{round}.ck").to_str().unwrap().to_string(),
+            );
+        }
+        let remote = tcp_train(
+            &tcfg,
+            port,
+            &format!("itest_tcpdet_{}_tcp", algo.name()),
+            |c: &RunConfig| -> Box<dyn parle::coordinator::RoundAlgo> {
+                if c.algo == Algo::SgdDataParallel {
+                    Box::new(parle::coordinator::sgd_dp::GradAvgAlgo::new(c))
+                } else {
+                    Box::new(parle::coordinator::driver::CoupledAlgo::new(c))
+                }
+            },
+            train,
+        );
+        assert_same_run(&local, &remote, algo.name());
+        if algo == Algo::Parle {
+            assert!(
+                dir.join("tcp_4.ck").exists(),
+                "wire-run checkpoint missing"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Same pin for the two-level hierarchy: one broadcast group per
+/// deputy, deputies as references — over the wire, bit-identical.
+#[test]
+fn tcp_hierarchy_is_bit_identical_to_in_process() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let mut cfg = base(Algo::Parle);
+    cfg.l_steps = 2;
+    let local =
+        train_hierarchical(&cfg, 2, 2, "itest_tcpdet_hier_local").unwrap();
+    let remote = tcp_train(
+        &cfg,
+        47643,
+        "itest_tcpdet_hier_tcp",
+        |c: &RunConfig| -> Box<dyn parle::coordinator::RoundAlgo> {
+            Box::new(parle::coordinator::hierarchy::HierarchyAlgo::new(
+                c, 2, 2,
+            ))
+        },
+        |c, label| train_hierarchical(c, 2, 2, label),
+    );
+    assert_same_run(&local, &remote, "hierarchy");
+    assert_eq!(remote.record.replicas, 4);
+}

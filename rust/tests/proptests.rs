@@ -6,7 +6,8 @@
 use parle::align::{greedy_assignment, hungarian};
 use parle::config::CommCfg;
 use parle::coordinator::comm::{ReduceFabric, RoundConsts, RoundMsg,
-                               RoundReport};
+                               RoundReport, WorkerState};
+use parle::coordinator::transport::wire;
 use parle::data::{build, split_shards, DataConfig, Dataset};
 use parle::opt::scoping::Scoping;
 use parle::opt::vecmath;
@@ -141,6 +142,145 @@ fn prop_fabric_round_trips_params_bit_exactly() {
             }
         }
         fabric.shutdown().unwrap();
+    }
+}
+
+/// The TCP frame codec round-trips every message type bit-exactly:
+/// random rounds, reports (including non-finite stats) and worker
+/// states encode, frame, unframe and decode back to the same bits.
+#[test]
+fn prop_wire_codec_round_trips_all_message_types() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 10);
+        let p = 1 + rng.next_below(2000);
+        let mut xref = vec![0.0f32; p];
+        rng.fill_normal(&mut xref, 3.0);
+        if p > 2 {
+            xref[0] = -0.0;
+            xref[1] = f32::MIN_POSITIVE; // subnormal boundary
+        }
+        let consts = RoundConsts {
+            lr: rng.next_f32(),
+            gamma_inv: rng.next_f32(),
+            rho_inv: 1.0 + rng.next_f32(),
+            eta_over_rho: rng.next_f32(),
+        };
+        let round = rng.next_below(1 << 20) as u64;
+
+        // one byte pipe carrying all four frame kinds back to back
+        let mut pipe = Vec::new();
+        wire::write_frame(
+            &mut pipe,
+            wire::TAG_ROUND,
+            &wire::encode_round(round, &consts, &xref).unwrap(),
+        )
+        .unwrap();
+        let report = RoundReport {
+            replica: rng.next_below(64),
+            round,
+            params: xref.clone(),
+            train_loss: if case % 3 == 0 { f64::NAN } else { 0.5 },
+            train_err: rng.next_f64(),
+            step_s: rng.next_f64(),
+        };
+        wire::write_frame(
+            &mut pipe,
+            wire::TAG_REPORT,
+            &wire::encode_report(&report).unwrap(),
+        )
+        .unwrap();
+        let state = WorkerState {
+            replica: rng.next_below(64),
+            vecs: (0..rng.next_below(5))
+                .map(|i| {
+                    let mut v = vec![0.0f32; 1 + rng.next_below(300)];
+                    rng.fill_normal(&mut v, 1.0);
+                    (format!("vec{i}"), v)
+                })
+                .collect(),
+            batches_drawn: rng.next_below(1 << 30) as u64,
+        };
+        wire::write_frame(
+            &mut pipe,
+            wire::TAG_SNAPSHOT,
+            &wire::encode_worker_state(&state).unwrap(),
+        )
+        .unwrap();
+        wire::write_frame(&mut pipe, wire::TAG_STOP, &[]).unwrap();
+
+        let mut r = std::io::Cursor::new(pipe.as_slice());
+        let f = wire::read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(f.tag, wire::TAG_ROUND, "case {case}");
+        let (br, bc, bx) = wire::decode_round(&f.payload).unwrap();
+        assert_eq!(br, round, "case {case}");
+        assert_eq!(bc.lr.to_bits(), consts.lr.to_bits());
+        assert_eq!(bc.rho_inv.to_bits(), consts.rho_inv.to_bits());
+        assert_eq!(bx.len(), p);
+        for i in 0..p {
+            assert_eq!(
+                bx[i].to_bits(),
+                xref[i].to_bits(),
+                "case {case} xref bit-flip at {i}"
+            );
+        }
+        let f = wire::read_frame(&mut r).unwrap().unwrap();
+        let back = wire::decode_report(&f.payload).unwrap();
+        assert_eq!(back.replica, report.replica, "case {case}");
+        assert_eq!(back.round, report.round);
+        assert_eq!(back.train_loss.to_bits(), report.train_loss.to_bits());
+        assert_eq!(back.train_err.to_bits(), report.train_err.to_bits());
+        assert_eq!(back.step_s.to_bits(), report.step_s.to_bits());
+        for i in 0..p {
+            assert_eq!(back.params[i].to_bits(), xref[i].to_bits());
+        }
+        let f = wire::read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(
+            wire::decode_worker_state(&f.payload).unwrap(),
+            state,
+            "case {case}"
+        );
+        let f = wire::read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((f.tag, f.payload.len()), (wire::TAG_STOP, 0));
+        assert!(wire::read_frame(&mut r).unwrap().is_none());
+    }
+}
+
+/// Truncating or bit-flipping an encoded frame must produce a decode
+/// error, never a panic: the master feeds raw socket bytes into these.
+#[test]
+fn prop_wire_codec_rejects_mutations_without_panicking() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 11);
+        let p = 1 + rng.next_below(200);
+        let mut xref = vec![0.0f32; p];
+        rng.fill_normal(&mut xref, 1.0);
+        let payload = wire::encode_round(
+            7,
+            &RoundConsts {
+                lr: 0.1,
+                gamma_inv: 0.01,
+                rho_inv: 1.0,
+                eta_over_rho: 0.1,
+            },
+            &xref,
+        )
+        .unwrap();
+        // any strict truncation must error: either a scalar read hits
+        // EOF or the declared vector length exceeds the remaining bytes
+        let cut = rng.next_below(payload.len());
+        assert!(
+            wire::decode_round(&payload[..cut]).is_err(),
+            "case {case}: truncation at {cut} accepted"
+        );
+        // garbage header: u64 length far beyond the buffer
+        let mut mangled = payload.clone();
+        let off = 8 + 16; // the xref length header
+        mangled[off..off + 8]
+            .copy_from_slice(&(u64::MAX / 8).to_le_bytes());
+        assert!(
+            wire::decode_round(&mangled).is_err(),
+            "case {case}: absurd length accepted"
+        );
     }
 }
 
