@@ -254,7 +254,8 @@ fn bench_fabric_straggler() {
                     });
                 }
                 Ok(())
-            });
+            })
+            .unwrap();
         }
     };
     let xref = vec![0.5f32; p];
@@ -346,7 +347,8 @@ fn bench_transport_round_latency() {
                     });
                 }
                 Ok(())
-            });
+            })
+            .unwrap();
         }
         let t = std::time::Instant::now();
         for _ in 0..rounds {

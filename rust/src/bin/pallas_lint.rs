@@ -1,0 +1,96 @@
+//! `pallas-lint` — static invariant checker for the Parle codebase.
+//!
+//! Walks `rust/src` and `rust/benches`, enforces the D1/D2/A1/P1/W1
+//! rules (see `src/lint/rules.rs` and the README's "Invariants &
+//! linting" section), prints `file:line: [RULE] message` diagnostics,
+//! and exits nonzero on any violation. Works from the repo root or
+//! from `rust/`.
+//!
+//! Usage: `cargo run --bin pallas_lint [--quiet] [PATH...]`
+//!
+//! With no `PATH`, lints the crate's `src/` and `benches/`; explicit
+//! paths (files or directories) override the default roots — used by
+//! the fixture tests in `tests/lint_rules.rs`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use parle::lint::{lint_tree, report};
+
+/// Locate the `rust/` crate root: prefer the compile-time manifest dir
+/// (correct under `cargo run`), fall back to probing the cwd so a
+/// prebuilt binary still works from the repo root or `rust/`.
+fn crate_root() -> Option<PathBuf> {
+    let baked = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if baked.join("src").is_dir() {
+        return Some(baked);
+    }
+    let cwd = std::env::current_dir().ok()?;
+    for cand in [cwd.join("rust"), cwd] {
+        if cand.join("src").is_dir() && cand.join("Cargo.toml").is_file() {
+            return Some(cand);
+        }
+    }
+    None
+}
+
+fn main() -> ExitCode {
+    let mut quiet = false;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--quiet" | "-q" => quiet = true,
+            "--help" | "-h" => {
+                println!("usage: pallas_lint [--quiet] [PATH...]");
+                println!(
+                    "With no PATH, lints the crate's src/ and benches/."
+                );
+                return ExitCode::SUCCESS;
+            }
+            _ => roots.push(PathBuf::from(arg)),
+        }
+    }
+    let display_base = if roots.is_empty() {
+        let Some(root) = crate_root() else {
+            eprintln!(
+                "pallas-lint: cannot find the rust/ crate root \
+                 (run from the repo root or rust/)"
+            );
+            return ExitCode::FAILURE;
+        };
+        roots.push(root.join("src"));
+        let benches = root.join("benches");
+        if benches.is_dir() {
+            roots.push(benches);
+        }
+        root
+    } else {
+        std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."))
+    };
+    let root_refs: Vec<&Path> = roots.iter().map(PathBuf::as_path).collect();
+    let tree = match lint_tree(&root_refs, &display_base) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("pallas-lint: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if tree.is_clean() {
+        if !quiet {
+            println!(
+                "pallas-lint: {} files clean ({} suppressions)",
+                tree.files.len(),
+                tree.suppressions.iter().sum::<usize>()
+            );
+        }
+        ExitCode::SUCCESS
+    } else {
+        eprint!("{}", report::render(&tree.diagnostics));
+        eprintln!(
+            "pallas-lint: {} violation(s) in {} files scanned",
+            tree.diagnostics.len(),
+            tree.files.len()
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -36,6 +36,13 @@ pub(crate) const MAX_PARAMS: u64 = 1 << 28;
 /// Cap on the number of v2 sections (engine writes ~6 per worker).
 pub(crate) const MAX_SECTIONS: u32 = 1 << 20;
 
+/// Cap on one length-prefixed string (model names, section names,
+/// metadata keys — all tiny in practice).
+pub(crate) const MAX_STR: u32 = 1 << 20;
+
+/// Cap on the metadata entry count (engine writes a handful per worker).
+pub(crate) const MAX_META: u32 = 1_000_000;
+
 /// Bulk-encoding chunk for flat payloads (elements per write).
 const CHUNK_PARAMS: usize = 4096;
 
@@ -165,10 +172,11 @@ impl Checkpoint {
             bail!("not a parle checkpoint (bad magic)");
         }
         let model = read_str(&mut f)?;
-        let n_meta = read_u32(&mut f)? as usize;
-        if n_meta > 1_000_000 {
+        let n_meta = read_u32(&mut f)?;
+        if n_meta > MAX_META {
             bail!("corrupt checkpoint: {n_meta} metadata entries");
         }
+        let n_meta = n_meta as usize;
         let mut meta = Vec::with_capacity(n_meta);
         for _ in 0..n_meta {
             let k = read_str(&mut f)?;
@@ -303,13 +311,38 @@ fn read_payload_len<R: Read + Seek>(
 
 pub(crate) fn read_flat_f32<R: Read + Seek>(f: &mut R, file_len: u64)
                                             -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    read_flat_f32_into(f, file_len, &mut out)?;
+    Ok(out)
+}
+
+/// [`read_flat_f32`] decoding into a caller-owned buffer (cleared and
+/// refilled in place) through a fixed stack chunk: no scratch byte
+/// vector, and no output allocation once the buffer has warmed up to
+/// the model's parameter count. The wire codec's steady-state round
+/// decode rides on this.
+pub(crate) fn read_flat_f32_into<R: Read + Seek>(
+    f: &mut R,
+    file_len: u64,
+    out: &mut Vec<f32>,
+) -> Result<()> {
     let n = read_payload_len(f, file_len, 4)?;
-    let mut raw = vec![0u8; n * 4];
-    f.read_exact(&mut raw)?;
-    Ok(raw
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+    out.clear();
+    out.reserve(n);
+    let mut chunk = [0u8; CHUNK_PARAMS * 4];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(CHUNK_PARAMS);
+        let bytes = &mut chunk[..take * 4];
+        f.read_exact(bytes)?;
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        left -= take;
+    }
+    Ok(())
 }
 
 fn read_flat_f64<R: Read + Seek>(f: &mut R, file_len: u64)
@@ -358,11 +391,11 @@ fn try_read_u32<R: Read>(f: &mut R) -> Result<Option<u32>> {
 }
 
 pub(crate) fn read_str<R: Read>(f: &mut R) -> Result<String> {
-    let len = read_u32(f)? as usize;
-    if len > (1 << 20) {
+    let len = read_u32(f)?;
+    if len > MAX_STR {
         bail!("corrupt checkpoint: string of {len} bytes");
     }
-    let mut b = vec![0u8; len];
+    let mut b = vec![0u8; len as usize];
     f.read_exact(&mut b)?;
     Ok(String::from_utf8(b)?)
 }

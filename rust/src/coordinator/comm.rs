@@ -440,6 +440,13 @@ pub struct RoundStats {
     pub max_step_s: f64,
 }
 
+/// Allocate one zeroed P-sized slab. Deliberately a free function so
+/// warmup allocation sites sit outside `// lint: hot-path` regions —
+/// the steady state only ever reuses slabs this handed out once.
+fn fresh_slab(p: usize) -> Vec<f32> {
+    vec![0.0f32; p]
+}
+
 /// Master-side communication fabric shared by all training drivers:
 /// worker spawn, round dispatch (broadcast or per-replica), the single
 /// report event stream, reduces, and the snapshot/restore barrier.
@@ -546,19 +553,22 @@ impl ReduceFabric {
     /// never blocks on the shared stream waiting for a dead replica.
     /// Only valid on transports with local endpoints (the in-process
     /// default); wire transports get their workers by connection.
-    pub fn spawn_worker<F>(&mut self, body: F)
+    pub fn spawn_worker<F>(&mut self, body: F) -> Result<()>
     where
         F: FnOnce(ReplicaEndpoint) -> Result<()> + Send + 'static,
     {
         let id = self.spawned;
-        assert!(
-            id < self.groups.len(),
-            "spawned more workers than fabric slots"
-        );
-        let (ep, exit_tx) = self
-            .transport
-            .take_endpoint(id)
-            .expect("transport has no local endpoint for this slot");
+        if id >= self.groups.len() {
+            anyhow::bail!(
+                "spawned more workers than fabric slots ({})",
+                self.groups.len()
+            );
+        }
+        let (ep, exit_tx) = self.transport.take_endpoint(id).ok_or_else(|| {
+            anyhow::anyhow!(
+                "transport has no local endpoint for replica slot {id}"
+            )
+        })?;
         self.spawned += 1;
         self.handles.push(std::thread::spawn(move || {
             let r = body(ep);
@@ -572,6 +582,7 @@ impl ReduceFabric {
             exit_tx.send(FabricEvent::Exited(id)).ok();
             r
         }));
+        Ok(())
     }
 
     /// Broadcast one round to every replica: `refs[g]` is group g's
@@ -586,39 +597,61 @@ impl ReduceFabric {
             "broadcast before all workers were spawned"
         );
         let p = refs[0].len();
-        if self.bcast.is_empty() {
-            self.bcast = (0..self.n_groups)
-                .map(|_| {
-                    [
-                        Arc::new(vec![0.0f32; p]),
-                        Arc::new(vec![0.0f32; p]),
-                    ]
-                })
-                .collect();
-        }
+        self.ensure_bcast_slabs(p);
         let parity = (self.round % 2) as usize;
-        for (g, r) in refs.iter().enumerate() {
-            Arc::make_mut(&mut self.bcast[g][parity]).copy_from_slice(r);
-        }
-        // recycle last round's report payloads as this round's slabs
-        let slabs: Vec<Vec<f32>> = if self.reports.is_empty() {
-            (0..self.replicas()).map(|_| vec![0.0f32; p]).collect()
-        } else {
-            self.reports.drain(..).map(|r| r.params).collect()
-        };
-        for (r, slab) in slabs.into_iter().enumerate() {
-            let g = self.groups[r];
-            let msg = RoundMsg {
-                round: self.round,
-                xref: self.bcast[g][parity].clone(),
-                slab,
-                consts,
-            };
-            // dispatch bytes are accounted inside the transport; a dead
-            // link is ignored here (its death surfaces as an event)
-            let _ = self.transport.send_cmd(r, RoundCmd::Round(msg));
+        // lint: hot-path -- steady-state broadcast: slab writes + recycle
+        {
+            for (g, r) in refs.iter().enumerate() {
+                Arc::make_mut(&mut self.bcast[g][parity])
+                    .copy_from_slice(r);
+            }
+            // recycle last round's report payloads into the per-replica
+            // pool (the async leg's pool doubles as the sync one)
+            for rep in self.reports.drain(..) {
+                if let Some(slot) = self.slab_pool.get_mut(rep.replica) {
+                    *slot = Some(rep.params);
+                }
+            }
+            for r in 0..self.groups.len() {
+                let slab = match self.slab_pool[r].take() {
+                    Some(s) => s,
+                    None => fresh_slab(p), // first round only
+                };
+                let msg = RoundMsg {
+                    round: self.round,
+                    xref: Arc::clone(&self.bcast[self.groups[r]][parity]),
+                    slab,
+                    consts,
+                };
+                // dispatch bytes are accounted inside the transport; a
+                // dead link is ignored here (its death surfaces as an
+                // event)
+                let _ = self.transport.send_cmd(r, RoundCmd::Round(msg));
+            }
         }
         self.round += 1;
+    }
+
+    /// Warmup allocation for the broadcast slab pairs, hoisted out of
+    /// the hot path (runs once; every later round reuses the pairs via
+    /// `Arc::make_mut`).
+    fn ensure_bcast_slabs(&mut self, p: usize) {
+        if self.bcast.is_empty() {
+            self.bcast = (0..self.n_groups)
+                .map(|_| [Arc::new(fresh_slab(p)), Arc::new(fresh_slab(p))])
+                .collect();
+        }
+    }
+
+    /// Warmup allocation for one replica's async double-buffer pair,
+    /// hoisted out of [`ReduceFabric::send_round_to`]'s hot path.
+    fn ensure_replica_slabs(&mut self, replica: usize, p: usize) {
+        if let Some(slot) = self.bcast_replica.get_mut(replica) {
+            if slot.is_none() {
+                *slot =
+                    Some([Arc::new(fresh_slab(p)), Arc::new(fresh_slab(p))]);
+            }
+        }
     }
 
     /// Dispatch one round to a single replica (the asynchronous event
@@ -635,21 +668,28 @@ impl ReduceFabric {
         xref: &[f32],
     ) {
         let p = xref.len();
+        self.ensure_replica_slabs(replica, p);
         let parity = (round % 2) as usize;
-        let pair = self.bcast_replica[replica].get_or_insert_with(|| {
-            [Arc::new(vec![0.0f32; p]), Arc::new(vec![0.0f32; p])]
-        });
-        Arc::make_mut(&mut pair[parity]).copy_from_slice(xref);
-        let slab = self.slab_pool[replica]
-            .take()
-            .unwrap_or_else(|| vec![0.0f32; p]);
-        let msg = RoundMsg {
-            round,
-            xref: pair[parity].clone(),
-            slab,
-            consts,
-        };
-        let _ = self.transport.send_cmd(replica, RoundCmd::Round(msg));
+        // lint: hot-path -- async dispatch leg: in-place slab reuse only
+        {
+            let Some(Some(pair)) = self.bcast_replica.get_mut(replica)
+            else {
+                return;
+            };
+            Arc::make_mut(&mut pair[parity]).copy_from_slice(xref);
+            let xref_arc = Arc::clone(&pair[parity]);
+            let slab = match self.slab_pool[replica].take() {
+                Some(s) => s,
+                None => fresh_slab(p), // first dispatch only
+            };
+            let msg = RoundMsg {
+                round,
+                xref: xref_arc,
+                slab,
+                consts,
+            };
+            let _ = self.transport.send_cmd(replica, RoundCmd::Round(msg));
+        }
     }
 
     /// Blocking receive of the next report off the shared event stream
@@ -663,20 +703,33 @@ impl ReduceFabric {
     /// [`collect`]: ReduceFabric::collect
     pub fn recv_report(&mut self) -> Result<RoundReport> {
         let t = Timer::new();
-        match self.transport.recv_event() {
-            Ok(FabricEvent::Report(rep)) => {
-                if let Some(prof) = &self.profiler {
-                    prof.add(&self.wait_keys[rep.replica], t.elapsed_s());
+        // lint: panic-free -- master event loop: a panic here deadlocks
+        {
+            match self.transport.recv_event() {
+                Ok(FabricEvent::Report(rep)) => {
+                    if rep.replica >= self.groups.len() {
+                        return Err(anyhow::anyhow!(
+                            "report stamped with unknown replica {} \
+                             (fabric has {})",
+                            rep.replica,
+                            self.groups.len()
+                        ));
+                    }
+                    if let (Some(prof), Some(key)) =
+                        (&self.profiler, self.wait_keys.get(rep.replica))
+                    {
+                        prof.add(key, t.elapsed_s());
+                    }
+                    Ok(rep)
                 }
-                Ok(rep)
+                Ok(FabricEvent::Exited(id)) => {
+                    Err(anyhow::anyhow!("replica {id} exited mid-round"))
+                }
+                Ok(FabricEvent::Failed(id, msg)) => Err(anyhow::anyhow!(
+                    "replica {id} transport failed: {msg}"
+                )),
+                Err(e) => Err(e),
             }
-            Ok(FabricEvent::Exited(id)) => {
-                Err(anyhow::anyhow!("replica {id} exited mid-round"))
-            }
-            Ok(FabricEvent::Failed(id, msg)) => Err(anyhow::anyhow!(
-                "replica {id} transport failed: {msg}"
-            )),
-            Err(e) => Err(e),
         }
     }
 
@@ -684,7 +737,13 @@ impl ReduceFabric {
     /// the next [`ReduceFabric::send_round_to`] ships the same heap
     /// buffer (no steady-state allocation in the async loop either).
     pub fn recycle(&mut self, report: RoundReport) {
-        self.slab_pool[report.replica] = Some(report.params);
+        // lint: panic-free -- called from the async loop; an out-of-range
+        // stamp (already rejected by recv_report) must not panic here
+        {
+            if let Some(slot) = self.slab_pool.get_mut(report.replica) {
+                *slot = Some(report.params);
+            }
+        }
     }
 
     /// Synchronous barrier, the degenerate case of the event loop:
@@ -771,11 +830,18 @@ impl ReduceFabric {
         }
         let mut states = Vec::with_capacity(n);
         for r in 0..n {
-            states.push(
-                self.transport
-                    .recv_snapshot(r)
-                    .context("replica died during snapshot")?,
-            );
+            let st = self
+                .transport
+                .recv_snapshot(r)
+                .context("replica died during snapshot")?;
+            if st.replica >= n {
+                anyhow::bail!(
+                    "snapshot stamped with unknown replica {} \
+                     (fabric has {n})",
+                    st.replica
+                );
+            }
+            states.push(st);
         }
         states.sort_by_key(|s| s.replica);
         Ok(states)
@@ -1025,7 +1091,8 @@ mod tests {
                     });
                 }
                 Ok(())
-            });
+            })
+            .unwrap();
         }
         fabric
     }
@@ -1134,7 +1201,7 @@ mod tests {
     #[test]
     fn fabric_shutdown_propagates_worker_errors() {
         let mut fabric = ReduceFabric::flat(1, CommCfg::off());
-        fabric.spawn_worker(|_ep| anyhow::bail!("boom"));
+        fabric.spawn_worker(|_ep| anyhow::bail!("boom")).unwrap();
         assert!(fabric.shutdown().is_err());
     }
 
@@ -1163,15 +1230,45 @@ mod tests {
                 });
             }
             Ok(())
-        });
+        })
+        .unwrap();
         fabric.spawn_worker(|ep| {
             let _ = ep.recv();
             anyhow::bail!("boom")
-        });
+        })
+        .unwrap();
         let xref = vec![1.0f32; 8];
         fabric.broadcast(consts(), &[xref.as_slice()]);
         assert!(fabric.collect().is_err());
         assert!(fabric.shutdown().is_err());
+    }
+
+    /// A report stamped with a replica id the fabric doesn't know (a
+    /// corrupt or malicious worker) errors the master instead of
+    /// panicking it — a master panic would orphan every other worker.
+    #[test]
+    fn recv_report_rejects_unknown_replica_stamp() {
+        let mut fabric = ReduceFabric::flat(1, CommCfg::off());
+        fabric
+            .spawn_worker(|ep| {
+                while let Some(msg) = ep.recv() {
+                    ep.report(RoundReport {
+                        replica: 99, // forged stamp
+                        round: msg.round,
+                        params: msg.slab,
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            })
+            .unwrap();
+        let xref = vec![1.0f32; 4];
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        let err = fabric.recv_report().unwrap_err().to_string();
+        assert!(err.contains("unknown replica"), "got: {err}");
+        fabric.shutdown().unwrap();
     }
 
     /// Stateful worker: accumulates the broadcast sum into a persistent
@@ -1214,7 +1311,8 @@ mod tests {
                     }
                 }
                 Ok(())
-            });
+            })
+            .unwrap();
         }
         fabric
     }
@@ -1328,7 +1426,8 @@ mod tests {
                     });
                 }
                 Ok(())
-            });
+            })
+            .unwrap();
         }
         let mut pacer = AsyncPacer::new(n, total, staleness);
         let mut reports_seen = vec![0u64; n];

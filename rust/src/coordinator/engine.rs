@@ -251,7 +251,7 @@ impl<'a> RoundEngine<'a> {
                 for w in 0..n_workers {
                     fabric.spawn_worker(
                         algo.worker_body(w, &datasets, augment),
-                    );
+                    )?;
                 }
                 fabric
             }

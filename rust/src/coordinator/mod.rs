@@ -101,6 +101,32 @@
 //! the handshake assigns, and drives the same worker body it would run
 //! as a thread. Sync-mode final params and curves are bit-identical
 //! across transports.
+//!
+//! **Invariants (machine-checked).** This layer carries the invariants
+//! `pallas-lint` enforces (`cargo run --bin pallas_lint`, rules in
+//! [`crate::lint::rules`], CI-gated):
+//!
+//! * *Determinism (D1/D2)*: everything on the reduce path —
+//!   `comm.rs`, `engine.rs`, `checkpoint.rs`, `transport/wire.rs`,
+//!   `opt/vecmath.rs` — iterates in replica order, never through hash
+//!   containers, and never truncates a seed or replica id with `as`.
+//! * *Steady-state allocation (A1)*: the fabric's per-round legs
+//!   (`// lint: hot-path` regions in `comm.rs` and `transport/tcp.rs`)
+//!   only recycle — broadcast slabs via `Arc::make_mut`, report slabs
+//!   via the replica-indexed pool; warmup allocation lives in cold
+//!   `ensure_*` helpers.
+//! * *Panic-safety (P1)*: worker bodies (`replica.rs`), the TCP
+//!   reader threads and the master's event-loop receive
+//!   (`// lint: panic-free` regions) propagate errors as
+//!   `FabricEvent::Failed`/`Exited` — a panic there is observed as a
+//!   hang, never an error.
+//! * *Wire bounds (W1)*: every length decoded in `transport/wire.rs`
+//!   or `checkpoint.rs` passes a named `MAX_*` cap before it sizes an
+//!   allocation.
+//!
+//! The concurrency protocols themselves (AsyncPacer's staleness bound,
+//! shutdown with reports in flight) are exhaustively model-checked in
+//! `tests/loom_model.rs` (`--features loom-check`).
 
 pub mod checkpoint;
 pub mod comm;

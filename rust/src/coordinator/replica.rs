@@ -85,6 +85,8 @@ pub fn round_reset(
 }
 
 /// Thread body. Runs rounds off the fabric endpoint until `Stop`.
+// lint: panic-free -- worker body: a panic here bypasses the fabric's
+// Exited event path and shows up to the master as a hang, not an error
 pub fn run_replica(
     cfg: ReplicaCfg,
     dataset: Arc<Dataset>,
@@ -115,7 +117,10 @@ pub fn run_replica(
         "init",
         &[lit_scalar_i32(crate::util::rng::fold_seed_i32(cfg.init_seed))],
     )?;
-    let mut x_a = crate::runtime::to_f32(&init[0])?;
+    let init0 = init
+        .first()
+        .context("model init returned no outputs")?;
+    let mut x_a = crate::runtime::to_f32(init0)?;
     debug_assert_eq!(x_a.len(), p);
     let mut y = x_a.clone();
     let mut z = x_a.clone();
@@ -324,6 +329,7 @@ fn upload_round_consts(
 /// only its minibatch + seed and downloads only the two loss/error
 /// scalars, and the state comes back once after the last step.
 #[allow(clippy::too_many_arguments)]
+// lint: panic-free -- runs inside the worker body (see run_replica)
 fn run_step_round(
     session: &Session,
     cfg: &ReplicaCfg,
@@ -396,6 +402,7 @@ fn run_step_round(
 
 /// One dispatch of the fused L-step scan artifact.
 #[allow(clippy::too_many_arguments)]
+// lint: panic-free -- runs inside the worker body (see run_replica)
 fn run_scan_round(
     session: &Session,
     cfg: &ReplicaCfg,
@@ -424,7 +431,10 @@ fn run_scan_round(
     }
     // images: [L, B, H, W, C]; tokens: [L, B, T]
     let (xb, yb) = if mm.input_dtype == crate::runtime::artifact::DType::I32 {
-        let t = mm.input_shape[0];
+        let t = *mm
+            .input_shape
+            .first()
+            .context("token model manifest has an empty input shape")?;
         (
             lit_i32(&xs_i, &[l, mm.batch, t])?,
             lit_i32(&ys, &[l, mm.batch, t])?,
@@ -513,13 +523,18 @@ mod tests {
 }
 
 /// Build (xb, yb) literals for one per-step batch.
+// lint: panic-free -- called from worker bodies and the master's eval
+// thread; a malformed manifest must error, not panic
 pub fn batch_literals(
     mm: &crate::runtime::ModelManifest,
     batch: &crate::data::batcher::Batch,
 ) -> Result<(xla::Literal, xla::Literal)> {
     use crate::runtime::artifact::DType;
     if mm.input_dtype == DType::I32 {
-        let t = mm.input_shape[0];
+        let t = *mm
+            .input_shape
+            .first()
+            .context("token model manifest has an empty input shape")?;
         Ok((
             lit_i32(&batch.x_i32, &[batch.n, t])?,
             lit_i32(&batch.y, &[batch.n, t])?,

@@ -348,7 +348,8 @@ mod tests {
                     });
                 }
                 Ok(())
-            });
+            })
+            .unwrap();
         }
         let scoping = crate::opt::Scoping::constant(1.0, 1.0);
         let ctx = RoundCtx {

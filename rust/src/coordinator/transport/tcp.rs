@@ -47,26 +47,57 @@ pub struct TcpTransport {
     meter: Arc<CommMeter>,
 }
 
+/// How long [`TcpTransport::listen`] waits for all `n` workers to
+/// connect and handshake before giving up. Generous — it covers slow
+/// scheduler starts — but finite, so a mis-addressed or under-launched
+/// fleet fails with a clear error instead of blocking the master
+/// forever.
+pub const DEFAULT_ACCEPT_TIMEOUT: Duration = Duration::from_secs(120);
+
 impl TcpTransport {
     /// Bind `addr` and block until `n` workers have connected and
-    /// completed the hello handshake. Replica slots are assigned in
+    /// completed the hello handshake (bounded by
+    /// [`DEFAULT_ACCEPT_TIMEOUT`]). Replica slots are assigned in
     /// accept order — each worker learns its slot from the ack and
     /// derives its data shard and RNG streams from it, so the training
     /// trajectory is independent of which physical worker lands where.
     pub fn listen(addr: &str, n: usize) -> Result<TcpTransport> {
-        assert!(n >= 1, "a TCP fabric needs at least one worker");
+        Self::listen_timeout(addr, n, DEFAULT_ACCEPT_TIMEOUT)
+    }
+
+    /// [`TcpTransport::listen`] with an explicit accept deadline: if
+    /// fewer than `n` workers arrive (connect *and* finish the hello
+    /// handshake) within `timeout`, fails reporting how many made it.
+    pub fn listen_timeout(
+        addr: &str,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<TcpTransport> {
+        anyhow::ensure!(n >= 1, "a TCP fabric needs at least one worker");
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding fabric master on {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the fabric listener non-blocking")?;
+        let deadline = Instant::now() + timeout;
         let meter = Arc::new(CommMeter::new());
         let (event_tx, event_rx) = mpsc::channel::<FabricEvent>();
         let mut streams = Vec::with_capacity(n);
         let mut snap_rxs = Vec::with_capacity(n);
         let mut readers = Vec::with_capacity(n);
         for id in 0..n {
-            let (mut stream, peer) = listener
-                .accept()
-                .context("accepting a worker connection")?;
+            let (mut stream, peer) =
+                accept_deadline(&listener, deadline, id, n)?;
+            stream
+                .set_nonblocking(false)
+                .context("restoring blocking mode on a worker socket")?;
             stream.set_nodelay(true).ok();
+            // the handshake shares the accept deadline: a connected but
+            // silent peer must not stall the remaining accepts forever
+            let remaining = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(1));
+            stream.set_read_timeout(Some(remaining)).ok();
             let hello = wire::read_frame(&mut stream)
                 .with_context(|| format!("handshake with {peer}"))?
                 .ok_or_else(|| {
@@ -80,9 +111,11 @@ impl TcpTransport {
             wire::write_frame(
                 &mut stream,
                 wire::TAG_HELLO_ACK,
-                &wire::encode_hello_ack(id, n),
+                &wire::encode_hello_ack(id, n)?,
             )
             .with_context(|| format!("acking {peer}"))?;
+            // back to a blocking socket before the reader takes over
+            stream.set_read_timeout(None).ok();
             info!("fabric: worker {id}/{n} connected from {peer}");
             let rd = stream
                 .try_clone()
@@ -106,6 +139,33 @@ impl TcpTransport {
     }
 }
 
+/// Accept one connection before `deadline`, polling the non-blocking
+/// listener. `arrived`/`n` only feed the timeout message.
+fn accept_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+    arrived: usize,
+    n: usize,
+) -> Result<(TcpStream, std::net::SocketAddr)> {
+    loop {
+        match listener.accept() {
+            Ok(conn) => return Ok(conn),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "timed out waiting for workers to connect \
+                         ({arrived} of {n} arrived)"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                return Err(e).context("accepting a worker connection")
+            }
+        }
+    }
+}
+
 /// Decode worker frames onto the master's event stream until the
 /// connection ends. Every exit pushes a terminal event so the master
 /// can never block forever on a dead worker.
@@ -116,6 +176,8 @@ fn reader_loop(
     snap_tx: Sender<WorkerState>,
     meter: Arc<CommMeter>,
 ) {
+    // lint: panic-free -- a reader panic would silence this replica's
+    // Exited/Failed events and hang the master's barrier forever
     loop {
         match wire::read_frame(&mut stream) {
             Ok(None) => {
@@ -277,6 +339,12 @@ pub struct TcpWorkerLink {
     /// as the `RoundMsg::slab`, the report hands it back — the wire
     /// analog of the fabric's slab pool.
     slab: Option<Vec<f32>>,
+    /// Recycled reference buffer: each round decodes into this Arc in
+    /// place (`Arc::make_mut` — the worker body has dropped its clone
+    /// from the previous round by the time it re-enters `recv_cmd`), so
+    /// the steady state moves zero heap allocations per round on the
+    /// worker side too.
+    xref: Arc<Vec<f32>>,
 }
 
 impl TcpWorkerLink {
@@ -322,6 +390,7 @@ impl TcpWorkerLink {
             replica,
             workers,
             slab: None,
+            xref: Arc::new(Vec::new()),
         })
     }
 
@@ -344,15 +413,17 @@ impl TcpWorkerLink {
             return Ok(None);
         };
         match frame.tag {
+            // lint: hot-path -- per-round decode into recycled buffers
             wire::TAG_ROUND => {
-                let (round, consts, xref) =
-                    wire::decode_round(&frame.payload)?;
-                let p = xref.len();
+                let xref_buf = Arc::make_mut(&mut self.xref);
+                let (round, consts) =
+                    wire::decode_round_into(&frame.payload, xref_buf)?;
+                let p = xref_buf.len();
                 let mut slab = self.slab.take().unwrap_or_default();
                 slab.resize(p, 0.0);
                 Ok(Some(WorkerCmd::Round(RoundMsg {
                     round,
-                    xref: Arc::new(xref),
+                    xref: Arc::clone(&self.xref),
                     slab,
                     consts,
                 })))

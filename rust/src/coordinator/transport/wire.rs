@@ -26,8 +26,8 @@ use std::io::{Cursor, Read, Write};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::checkpoint::{
-    read_flat_f32, read_section_f32, write_f32_payload, write_section_f32,
-    MAX_SECTIONS,
+    read_flat_f32, read_flat_f32_into, read_section_f32, write_f32_payload,
+    write_section_f32, MAX_SECTIONS,
 };
 use crate::coordinator::comm::{RoundConsts, RoundReport, WorkerState};
 
@@ -157,11 +157,14 @@ pub fn decode_hello(payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
-pub fn encode_hello_ack(replica: usize, workers: usize) -> Vec<u8> {
+pub fn encode_hello_ack(replica: usize, workers: usize) -> Result<Vec<u8>> {
+    // try_from, not `as`: a slot id must never truncate on the wire
+    let replica = u32::try_from(replica).context("hello-ack replica")?;
+    let workers = u32::try_from(workers).context("hello-ack workers")?;
     let mut out = Vec::with_capacity(8);
-    out.extend_from_slice(&(replica as u32).to_le_bytes());
-    out.extend_from_slice(&(workers as u32).to_le_bytes());
-    out
+    out.extend_from_slice(&replica.to_le_bytes());
+    out.extend_from_slice(&workers.to_le_bytes());
+    Ok(out)
 }
 
 /// -> (replica slot, total workers the master expects).
@@ -194,6 +197,17 @@ pub fn encode_round(round: u64, consts: &RoundConsts, xref: &[f32])
 
 pub fn decode_round(payload: &[u8])
                     -> Result<(u64, RoundConsts, Vec<f32>)> {
+    let mut xref = Vec::new();
+    let (round, consts) = decode_round_into(payload, &mut xref)?;
+    Ok((round, consts, xref))
+}
+
+/// [`decode_round`] decoding the reference into a caller-owned buffer
+/// (cleared and resized in place), so a steady-state receive loop —
+/// the TCP worker link's `recv_cmd` — allocates nothing per round once
+/// the buffer has reached capacity.
+pub fn decode_round_into(payload: &[u8], xref: &mut Vec<f32>)
+                         -> Result<(u64, RoundConsts)> {
     let limit = payload.len() as u64;
     let mut c = Cursor::new(payload);
     let round = read_u64(&mut c).context("round stamp")?;
@@ -203,13 +217,14 @@ pub fn decode_round(payload: &[u8])
         rho_inv: read_f32(&mut c).context("round rho_inv")?,
         eta_over_rho: read_f32(&mut c).context("round eta_over_rho")?,
     };
-    let xref = read_flat_f32(&mut c, limit).context("round reference")?;
-    Ok((round, consts, xref))
+    read_flat_f32_into(&mut c, limit, xref).context("round reference")?;
+    Ok((round, consts))
 }
 
 pub fn encode_report(rep: &RoundReport) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(4 + 8 + 24 + 8 + rep.params.len() * 4);
-    out.extend_from_slice(&(rep.replica as u32).to_le_bytes());
+    let replica = u32::try_from(rep.replica).context("report replica")?;
+    out.extend_from_slice(&replica.to_le_bytes());
     out.extend_from_slice(&rep.round.to_le_bytes());
     out.extend_from_slice(&rep.train_loss.to_le_bytes());
     out.extend_from_slice(&rep.train_err.to_le_bytes());
@@ -242,7 +257,8 @@ pub fn decode_report(payload: &[u8]) -> Result<RoundReport> {
 /// vectors are checkpoint v2 sections byte-for-byte.
 pub fn encode_worker_state(st: &WorkerState) -> Result<Vec<u8>> {
     let mut out = Vec::new();
-    out.extend_from_slice(&(st.replica as u32).to_le_bytes());
+    let replica = u32::try_from(st.replica).context("state replica")?;
+    out.extend_from_slice(&replica.to_le_bytes());
     out.extend_from_slice(&st.batches_drawn.to_le_bytes());
     out.extend_from_slice(&(st.vecs.len() as u32).to_le_bytes());
     for (name, v) in &st.vecs {
@@ -369,9 +385,12 @@ mod tests {
         let err = decode_hello(&stale).unwrap_err().to_string();
         assert!(err.contains("protocol mismatch"), "{err}");
 
-        let (r, n) = decode_hello_ack(&encode_hello_ack(2, 5)).unwrap();
+        let (r, n) =
+            decode_hello_ack(&encode_hello_ack(2, 5).unwrap()).unwrap();
         assert_eq!((r, n), (2, 5));
-        assert!(decode_hello_ack(&encode_hello_ack(5, 5)).is_err());
+        assert!(
+            decode_hello_ack(&encode_hello_ack(5, 5).unwrap()).is_err()
+        );
     }
 
     /// Round frames preserve every f32 bit of the reference, including
@@ -388,6 +407,18 @@ mod tests {
         for (a, b) in back.iter().zip(&xref) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    /// `decode_round_into` overwrites a recycled buffer completely —
+    /// stale contents and stale length both disappear.
+    #[test]
+    fn decode_round_into_reuses_the_buffer() {
+        let xref = vec![4.0f32, -8.5];
+        let enc = encode_round(9, &consts(), &xref).unwrap();
+        let mut buf = vec![99.0f32; 7]; // longer, stale
+        let (round, _) = decode_round_into(&enc, &mut buf).unwrap();
+        assert_eq!(round, 9);
+        assert_eq!(buf, xref);
     }
 
     #[test]

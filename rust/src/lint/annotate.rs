@@ -1,0 +1,348 @@
+//! The `// lint:` annotation grammar and the token-region machinery
+//! built on it.
+//!
+//! Three directives:
+//!
+//! * `// lint: hot-path [-- note]` — marks the next `{ ... }` block as
+//!   a steady-state region: rule **A1** forbids allocation inside it.
+//! * `// lint: panic-free [-- note]` — marks the next block as a
+//!   region where rule **P1** forbids `unwrap`/`expect`/`panic!` and
+//!   slice indexing (a panic there poisons the shared fabric event
+//!   stream instead of surfacing `Exited`/`Failed`).
+//! * `// lint: allow(RULE) -- reason` — suppresses RULE on the
+//!   directive's line and the next code line. The reason is
+//!   **mandatory**: an unexplained suppression is itself a violation.
+//!
+//! Anything else after `// lint:` is an error — the directive channel
+//! stays small enough to audit by eye.
+
+use crate::lint::report::Diagnostic;
+use crate::lint::scanner::{Directive, Scan, Tok, Token};
+
+/// Rule names the annotation grammar accepts in `allow(...)`.
+pub const RULES: &[&str] = &["D1", "D2", "A1", "P1", "W1"];
+
+/// A parsed directive.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DirectiveKind {
+    HotPath,
+    PanicFree,
+    Allow { rule: String },
+}
+
+/// Parse one directive body (the text after `// lint:`).
+pub fn parse_directive(text: &str) -> Result<DirectiveKind, String> {
+    let (head, note) = match text.split_once("--") {
+        Some((h, n)) => (h.trim(), Some(n.trim())),
+        None => (text.trim(), None),
+    };
+    if let Some(rest) = head.strip_prefix("allow(") {
+        let Some(rule) = rest.strip_suffix(')').map(str::trim) else {
+            return Err(format!("unclosed allow(...) in {text:?}"));
+        };
+        if !RULES.contains(&rule) {
+            return Err(format!(
+                "unknown rule {rule:?} in allow (rules: {})",
+                RULES.join(", ")
+            ));
+        }
+        match note {
+            Some(r) if !r.is_empty() => Ok(DirectiveKind::Allow {
+                rule: rule.to_string(),
+            }),
+            _ => Err(format!(
+                "allow({rule}) needs a reason: \
+                 `// lint: allow({rule}) -- why this is sound`"
+            )),
+        }
+    } else {
+        match head {
+            "hot-path" => Ok(DirectiveKind::HotPath),
+            "panic-free" => Ok(DirectiveKind::PanicFree),
+            other => Err(format!(
+                "unknown lint directive {other:?} \
+                 (hot-path, panic-free, allow(RULE) -- reason)"
+            )),
+        }
+    }
+}
+
+/// Everything rules need besides the raw tokens: brace matching, the
+/// `#[cfg(test)] mod` mask, marked regions and the allow table.
+pub struct Annotated<'a> {
+    pub tokens: &'a [Token],
+    /// `in_test[i]` — token i sits inside a `#[cfg(test)] mod` block.
+    pub in_test: Vec<bool>,
+    /// `hot[i]` — token i sits inside a `// lint: hot-path` block.
+    pub hot: Vec<bool>,
+    /// `panic_free[i]` — token i sits inside a `// lint: panic-free`
+    /// block.
+    pub panic_free: Vec<bool>,
+    /// (rule, line) pairs with an active `allow`.
+    allows: Vec<(String, u32)>,
+    /// Number of `allow` directives (each expands to two `allows`
+    /// entries: its own line and the next code line).
+    allow_directives: usize,
+    /// Grammar errors to surface as diagnostics.
+    pub errors: Vec<(u32, String)>,
+}
+
+impl<'a> Annotated<'a> {
+    /// Is `rule` suppressed on `line`?
+    pub fn allowed(&self, rule: &str, line: u32) -> bool {
+        self.allows
+            .iter()
+            .any(|(r, l)| r == rule && line == *l)
+    }
+
+    /// Number of `allow` directives in the file (any rule).
+    pub fn allow_count(&self) -> usize {
+        self.allow_directives
+    }
+}
+
+/// Build the [`Annotated`] view of a scan.
+pub fn annotate<'a>(scan: &'a Scan) -> Annotated<'a> {
+    let tokens = &scan.tokens;
+    let matching = match_braces(tokens);
+    let mut a = Annotated {
+        tokens,
+        in_test: test_mask(tokens, &matching),
+        hot: vec![false; tokens.len()],
+        panic_free: vec![false; tokens.len()],
+        allows: Vec::new(),
+        allow_directives: 0,
+        errors: Vec::new(),
+    };
+    for d in &scan.directives {
+        match parse_directive(&d.text) {
+            Ok(DirectiveKind::HotPath) => {
+                mark_next_block(tokens, &matching, d, &mut a.hot)
+                    .unwrap_or_else(|e| a.errors.push((d.line, e)));
+            }
+            Ok(DirectiveKind::PanicFree) => {
+                mark_next_block(tokens, &matching, d, &mut a.panic_free)
+                    .unwrap_or_else(|e| a.errors.push((d.line, e)));
+            }
+            Ok(DirectiveKind::Allow { rule }) => {
+                // the directive's own line plus the next code line, so
+                // the annotation can sit above the statement it excuses
+                a.allow_directives += 1;
+                a.allows.push((rule.clone(), d.line));
+                if let Some(next) = tokens
+                    .iter()
+                    .map(|t| t.line)
+                    .filter(|&l| l > d.line)
+                    .min()
+                {
+                    a.allows.push((rule, next));
+                }
+            }
+            Err(e) => a.errors.push((d.line, e)),
+        }
+    }
+    a
+}
+
+/// `matching[i] = Some(j)` for brace tokens, pairing `{`...`}`.
+fn match_braces(tokens: &[Token]) -> Vec<Option<usize>> {
+    let mut matching = vec![None; tokens.len()];
+    let mut stack = Vec::new();
+    for (i, t) in tokens.iter().enumerate() {
+        if t.is_punct('{') {
+            stack.push(i);
+        } else if t.is_punct('}') {
+            if let Some(open) = stack.pop() {
+                matching[open] = Some(i);
+                matching[i] = Some(open);
+            }
+        }
+    }
+    matching
+}
+
+/// Mark the tokens of `#[cfg(test)] mod <name> { ... }` blocks (and
+/// any other `#[cfg(test)]`-attributed braced item). Test code is
+/// exempt from the steady-state rules — it is allowed to allocate,
+/// unwrap and index.
+fn test_mask(tokens: &[Token], matching: &[Option<usize>]) -> Vec<bool> {
+    let mut mask = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if is_cfg_test_at(tokens, i) {
+            // find the first `{` after the attribute and mask its block
+            let mut j = i;
+            while j < tokens.len() && !tokens[j].is_punct('{') {
+                j += 1;
+            }
+            if let Some(Some(close)) = matching.get(j) {
+                for slot in &mut mask[j..=*close] {
+                    *slot = true;
+                }
+                i = *close + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Does `#` `[` `cfg` `(` `test` `)` `]` start at token `i`?
+fn is_cfg_test_at(tokens: &[Token], i: usize) -> bool {
+    let pat: &[&dyn Fn(&Token) -> bool] = &[
+        &|t: &Token| t.is_punct('#'),
+        &|t: &Token| t.is_punct('['),
+        &|t: &Token| t.is_ident("cfg"),
+        &|t: &Token| t.is_punct('('),
+        &|t: &Token| t.is_ident("test"),
+        &|t: &Token| t.is_punct(')'),
+        &|t: &Token| t.is_punct(']'),
+    ];
+    tokens.len() >= i + pat.len()
+        && pat
+            .iter()
+            .zip(&tokens[i..])
+            .all(|(p, t)| p(t))
+}
+
+/// Mark the block opened by the first `{` at or after the directive's
+/// line.
+fn mark_next_block(
+    tokens: &[Token],
+    matching: &[Option<usize>],
+    d: &Directive,
+    mask: &mut [bool],
+) -> Result<(), String> {
+    let open = tokens
+        .iter()
+        .position(|t| t.is_punct('{') && t.line >= d.line)
+        .ok_or_else(|| {
+            format!("no `{{` block follows the directive {:?}", d.text)
+        })?;
+    let close = matching[open]
+        .ok_or_else(|| format!("unbalanced block after {:?}", d.text))?;
+    for slot in &mut mask[open..=close] {
+        *slot = true;
+    }
+    Ok(())
+}
+
+/// Turn this file's grammar errors into diagnostics.
+pub fn grammar_diagnostics(a: &Annotated, file: &str) -> Vec<Diagnostic> {
+    a.errors
+        .iter()
+        .map(|(line, msg)| Diagnostic {
+            file: file.to_string(),
+            line: *line,
+            rule: "LINT",
+            msg: msg.clone(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scanner::scan;
+
+    #[test]
+    fn directive_grammar_parses_and_rejects() {
+        assert_eq!(
+            parse_directive("hot-path").unwrap(),
+            DirectiveKind::HotPath
+        );
+        assert_eq!(
+            parse_directive("hot-path -- slab loop").unwrap(),
+            DirectiveKind::HotPath
+        );
+        assert_eq!(
+            parse_directive("panic-free -- reader thread").unwrap(),
+            DirectiveKind::PanicFree
+        );
+        assert_eq!(
+            parse_directive("allow(A1) -- warmup only").unwrap(),
+            DirectiveKind::Allow {
+                rule: "A1".into()
+            }
+        );
+        // reason is mandatory
+        assert!(parse_directive("allow(A1)").is_err());
+        assert!(parse_directive("allow(A1) -- ").is_err());
+        // unknown rule / unknown directive / unclosed paren
+        assert!(parse_directive("allow(Z9) -- x").is_err());
+        assert!(parse_directive("fast-path").is_err());
+        assert!(parse_directive("allow(A1 -- x").is_err());
+    }
+
+    #[test]
+    fn hot_region_covers_the_next_block_only() {
+        let src = "\
+fn cold() { before(); }
+// lint: hot-path
+{
+    inside();
+}
+fn after() { outside(); }
+";
+        let s = scan(src);
+        let a = annotate(&s);
+        assert!(a.errors.is_empty());
+        let hot_ids: Vec<&str> = s
+            .tokens
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| a.hot[*i] && t.kind == Tok::Ident)
+            .map(|(_, t)| t.text.as_str())
+            .collect();
+        assert_eq!(hot_ids, vec!["inside"]);
+    }
+
+    #[test]
+    fn cfg_test_mod_is_masked() {
+        let src = "\
+fn live() {}
+#[cfg(test)]
+mod tests {
+    fn helper() {}
+}
+";
+        let s = scan(src);
+        let a = annotate(&s);
+        let masked: Vec<&str> = s
+            .tokens
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| a.in_test[*i] && t.kind == Tok::Ident)
+            .map(|(_, t)| t.text.as_str())
+            .collect();
+        assert_eq!(masked, vec!["fn", "helper"]);
+    }
+
+    #[test]
+    fn allow_covers_directive_line_and_next_code_line() {
+        let src = "\
+let a = 1;
+// lint: allow(D2) -- legacy cast, tracked in ROADMAP
+let b = seed as i32;
+let c = 3;
+";
+        let s = scan(src);
+        let a = annotate(&s);
+        assert!(a.errors.is_empty());
+        assert!(a.allowed("D2", 2));
+        assert!(a.allowed("D2", 3));
+        assert!(!a.allowed("D2", 4));
+        assert!(!a.allowed("A1", 3));
+        assert_eq!(a.allow_count(), 1);
+    }
+
+    #[test]
+    fn unknown_directive_surfaces_as_error() {
+        let src = "// lint: hot-loop\nfn f() {}\n";
+        let a_scan = scan(src);
+        let a = annotate(&a_scan);
+        assert_eq!(a.errors.len(), 1);
+        assert!(a.errors[0].1.contains("unknown lint directive"));
+    }
+}

@@ -1,0 +1,121 @@
+//! `pallas-lint`: the repo's in-tree static invariant checker.
+//!
+//! Parle's reproducibility claims rest on invariants the type system
+//! cannot express: bit-exact total-order reduction, seed-derivation
+//! hygiene, zero steady-state allocation in the fabric loops,
+//! panic-free worker/reader threads, and cap-checked wire allocations.
+//! This module turns those house rules into machine-checked gates —
+//! see [`rules`] for the rule catalogue and [`annotate`] for the
+//! `// lint:` annotation grammar.
+//!
+//! Deliberately zero-dependency: a comment/string-stripping token
+//! scanner ([`scanner`]), not an AST. The rules are token patterns; a
+//! full parse buys nothing but a `syn` dependency.
+//!
+//! Run via `cargo run --bin pallas_lint` (exits nonzero on any
+//! violation) or programmatically through [`lint_tree`].
+
+pub mod annotate;
+pub mod report;
+pub mod rules;
+pub mod scanner;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+use anyhow::Context;
+use report::Diagnostic;
+
+/// Result of linting a directory tree.
+#[derive(Debug, Default)]
+pub struct TreeReport {
+    /// All diagnostics, across files.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Files scanned (lint-relative display paths, sorted).
+    pub files: Vec<String>,
+    /// Per-file `// lint: allow` suppression counts (same order as
+    /// `files`), for the no-suppression gate on the fabric.
+    pub suppressions: Vec<usize>,
+}
+
+impl TreeReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Total suppressions in files whose display path contains `frag`.
+    pub fn suppressions_in(&self, frag: &str) -> usize {
+        self.files
+            .iter()
+            .zip(&self.suppressions)
+            .filter(|(f, _)| f.contains(frag))
+            .map(|(_, n)| n)
+            .sum()
+    }
+}
+
+/// Lint every `.rs` file under the given roots (recursively; a root
+/// may also be a single file), in deterministic sorted order.
+/// `display_base` is stripped from paths in diagnostics so output is
+/// stable regardless of where the binary runs.
+pub fn lint_tree(roots: &[&Path], display_base: &Path) -> Result<TreeReport> {
+    let mut files = Vec::new();
+    for root in roots {
+        if root.is_file() {
+            files.push(root.to_path_buf());
+        } else {
+            collect_rs_files(root, &mut files)
+                .with_context(|| format!("walking {}", root.display()))?;
+        }
+    }
+    files.sort();
+    let mut report = TreeReport::default();
+    for path in files {
+        let src = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let display = path
+            .strip_prefix(display_base)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        report
+            .diagnostics
+            .extend(rules::lint_source(&display, &src));
+        report.suppressions.push(rules::suppression_count(&src));
+        report.files.push(display);
+    }
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_tree_walks_this_module_clean() {
+        // the lint module itself is not on the reduce path and has no
+        // marked regions, so it must lint clean
+        let base = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let lint_dir = base.join("src/lint");
+        let report = lint_tree(&[&lint_dir], base).unwrap();
+        assert!(
+            report.is_clean(),
+            "lint module has violations:\n{}",
+            report::render(&report.diagnostics)
+        );
+        assert!(report.files.iter().any(|f| f.ends_with("scanner.rs")));
+    }
+}

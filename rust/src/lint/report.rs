@@ -1,0 +1,68 @@
+//! Diagnostics: what a rule emits and how the binary prints it.
+
+use std::fmt;
+
+/// One rule violation (or annotation-grammar error) at a source line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    /// Rule id (`D1`, `D2`, `A1`, `P1`, `W1`) or `LINT` for grammar
+    /// errors.
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.msg
+        )
+    }
+}
+
+/// Render a batch, sorted by (file, line, rule) so output is stable
+/// across directory-walk orders.
+pub fn render(diags: &[Diagnostic]) -> String {
+    let mut sorted: Vec<&Diagnostic> = diags.iter().collect();
+    sorted.sort_by_key(|d| (d.file.clone(), d.line, d.rule));
+    let mut out = String::new();
+    for d in sorted {
+        out.push_str(&d.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_file_line_rule() {
+        let d = Diagnostic {
+            file: "src/a.rs".into(),
+            line: 7,
+            rule: "A1",
+            msg: "allocation in hot path".into(),
+        };
+        assert_eq!(d.to_string(), "src/a.rs:7: [A1] allocation in hot path");
+    }
+
+    #[test]
+    fn render_sorts_by_file_then_line() {
+        let mk = |f: &str, l: u32| Diagnostic {
+            file: f.into(),
+            line: l,
+            rule: "P1",
+            msg: "x".into(),
+        };
+        let out = render(&[mk("b.rs", 1), mk("a.rs", 9), mk("a.rs", 2)]);
+        let lines: Vec<&str> = out.lines().collect();
+        assert!(lines[0].starts_with("a.rs:2"));
+        assert!(lines[1].starts_with("a.rs:9"));
+        assert!(lines[2].starts_with("b.rs:1"));
+    }
+}

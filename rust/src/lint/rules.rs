@@ -1,0 +1,627 @@
+//! The five invariant rules.
+//!
+//! | rule | scope | invariant |
+//! |------|-------|-----------|
+//! | `D1` | reduce-path modules | no `HashMap`/`HashSet`, no `partial_cmp`, no float `sort_by` — reductions must be bit-exact and totally ordered |
+//! | `D2` | whole tree | no truncating `as` casts on seed/replica identifiers — use `fold_seed_i32` / `try_into` |
+//! | `A1` | `// lint: hot-path` regions | no steady-state allocation (`Vec::new`, `vec!`, `with_capacity`, `to_vec`, `.clone()`, `collect`) |
+//! | `P1` | `// lint: panic-free` regions | no `.unwrap()`, `.expect()`, `panic!`-family macros, or slice indexing |
+//! | `W1` | `wire.rs` / `checkpoint.rs` | every decoded length is cap-checked before it sizes an allocation |
+//!
+//! All rules skip `#[cfg(test)]` blocks and honor
+//! `// lint: allow(RULE) -- reason` suppressions (see
+//! [`crate::lint::annotate`]).
+
+use crate::lint::annotate::{annotate, grammar_diagnostics, Annotated};
+use crate::lint::report::Diagnostic;
+use crate::lint::scanner::{scan, Tok, Token};
+
+/// Modules on the bit-exact reduce path: rule D1 applies to files whose
+/// path ends in one of these.
+const REDUCE_PATH_MODULES: &[&str] = &[
+    "coordinator/comm.rs",
+    "opt/vecmath.rs",
+    "coordinator/engine.rs",
+    "coordinator/checkpoint.rs",
+    "transport/wire.rs",
+];
+
+/// Files rule W1 applies to (the two halves of the shared codec).
+const WIRE_BOUND_FILES: &[&str] = &["transport/wire.rs", "coordinator/checkpoint.rs"];
+
+/// Identifiers that prove a decoded length was cap-checked before the
+/// allocation it sizes: the named caps, plus the shared readers that
+/// perform the check internally.
+const CAP_GUARDS: &[&str] = &[
+    "MAX_FRAME",
+    "MAX_PARAMS",
+    "MAX_SECTIONS",
+    "MAX_STR",
+    "MAX_META",
+    "read_payload_len",
+    "read_flat_f32",
+    "read_flat_f32_into",
+    "read_flat_f64",
+    "read_str",
+];
+
+/// Integer types an `as` cast can silently truncate a u64 seed or a
+/// usize index into.
+const NARROW_INTS: &[&str] = &["i8", "u8", "i16", "u16", "i32", "u32"];
+
+/// Keywords that may directly precede `[` without it being an indexing
+/// expression (`for x in [..]`, `return [..]`, ...).
+const KEYWORDS_BEFORE_BRACKET: &[&str] = &[
+    "in", "as", "if", "else", "match", "return", "break", "continue",
+    "loop", "while", "for", "move", "ref", "mut", "let", "where",
+    "unsafe", "dyn", "box", "await", "async", "yield", "static",
+    "const", "impl", "use", "pub", "fn", "enum", "struct", "trait",
+    "type", "mod",
+];
+
+/// Lint one source file (already read into `src`); `file` is the path
+/// used in diagnostics and for path-scoped rules.
+pub fn lint_source(file: &str, src: &str) -> Vec<Diagnostic> {
+    let scanned = scan(src);
+    let a = annotate(&scanned);
+    let mut diags = grammar_diagnostics(&a, file);
+    let norm = file.replace('\\', "/");
+    if REDUCE_PATH_MODULES.iter().any(|m| norm.ends_with(m)) {
+        rule_d1(file, &a, &mut diags);
+    }
+    rule_d2(file, &a, &mut diags);
+    rule_a1(file, &a, &mut diags);
+    rule_p1(file, &a, &mut diags);
+    if WIRE_BOUND_FILES.iter().any(|m| norm.ends_with(m)) {
+        rule_w1(file, &a, &mut diags);
+    }
+    diags
+}
+
+/// Count of `// lint: allow` suppressions in a file (for the
+/// no-suppression gate on the fabric and transports).
+pub fn suppression_count(src: &str) -> usize {
+    let scanned = scan(src);
+    annotate(&scanned).allow_count()
+}
+
+fn push(
+    diags: &mut Vec<Diagnostic>,
+    a: &Annotated,
+    file: &str,
+    rule: &'static str,
+    t: &Token,
+    msg: String,
+) {
+    if !a.allowed(rule, t.line) {
+        diags.push(Diagnostic {
+            file: file.to_string(),
+            line: t.line,
+            rule,
+            msg,
+        });
+    }
+}
+
+/// Is token `i` live (outside `#[cfg(test)]` blocks)?
+fn live(a: &Annotated, i: usize) -> bool {
+    !a.in_test[i]
+}
+
+/// D1: determinism on the reduce path. Hash containers iterate in
+/// seed-dependent order; `partial_cmp` is not a total order over
+/// floats; a float `sort_by` without `total_cmp` is both. Reports are
+/// sorted by replica id (`sort_by_key`) before any reduce — that
+/// pattern stays legal.
+fn rule_d1(file: &str, a: &Annotated, diags: &mut Vec<Diagnostic>) {
+    let toks = a.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if !live(a, i) || t.kind != Tok::Ident {
+            continue;
+        }
+        match t.text.as_str() {
+            "HashMap" | "HashSet" => push(
+                diags,
+                a,
+                file,
+                "D1",
+                t,
+                format!(
+                    "{} in a reduce-path module: iteration order is \
+                     seed-dependent; use BTreeMap/BTreeSet or a \
+                     replica-indexed Vec",
+                    t.text
+                ),
+            ),
+            "partial_cmp" => push(
+                diags,
+                a,
+                file,
+                "D1",
+                t,
+                "partial_cmp on the reduce path: not a total order \
+                 over floats (NaN); use total_cmp or sort_by_key on \
+                 an integer key"
+                    .into(),
+            ),
+            "sort_by" | "sort_unstable_by" => {
+                // sanctioned form: an explicit total_cmp comparator
+                let uses_total_cmp = toks[i..]
+                    .iter()
+                    .take(20)
+                    .any(|n| n.is_ident("total_cmp"));
+                if !uses_total_cmp {
+                    push(
+                        diags,
+                        a,
+                        file,
+                        "D1",
+                        t,
+                        format!(
+                            "{} without total_cmp on the reduce path: \
+                             float comparators must be a total order; \
+                             sort_by_key(|r| r.replica) or total_cmp",
+                            t.text
+                        ),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// D2: seed/index hygiene. A plain `as i32`-style cast drops the high
+/// bits of a u64 seed (runs differing only above bit 31 collapse) or
+/// silently wraps an index; the sanctioned forms are
+/// `crate::util::rng::fold_seed_i32` (keeps every seed bit
+/// influential) and `try_into`/`try_from` (fails loudly).
+fn rule_d2(file: &str, a: &Annotated, diags: &mut Vec<Diagnostic>) {
+    let toks = a.tokens;
+    for i in 0..toks.len() {
+        if !live(a, i) {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != Tok::Ident {
+            continue;
+        }
+        let name = t.text.to_ascii_lowercase();
+        if !(name.contains("seed") || name.contains("replica")) {
+            continue;
+        }
+        let (Some(kw), Some(ty)) = (toks.get(i + 1), toks.get(i + 2))
+        else {
+            continue;
+        };
+        if kw.is_ident("as")
+            && ty.kind == Tok::Ident
+            && NARROW_INTS.contains(&ty.text.as_str())
+        {
+            push(
+                diags,
+                a,
+                file,
+                "D2",
+                t,
+                format!(
+                    "truncating cast `{} as {}`: use fold_seed_i32 \
+                     for seeds or try_into for indices",
+                    t.text, ty.text
+                ),
+            );
+        }
+    }
+}
+
+/// A1: no allocation inside `// lint: hot-path` regions. The fabric's
+/// steady state recycles every P-sized buffer (broadcast slabs via
+/// `Arc::make_mut`, report slabs via the pool); an allocation here is
+/// a regression the benches only catch as noise. `Arc::clone(&x)`
+/// (refcount bump, no heap) stays legal — only the method-call form
+/// `.clone()` is flagged.
+fn rule_a1(file: &str, a: &Annotated, diags: &mut Vec<Diagnostic>) {
+    let toks = a.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if !a.hot[i] || !live(a, i) || t.kind != Tok::Ident {
+            continue;
+        }
+        let prev = i.checked_sub(1).map(|p| &toks[p]);
+        let next = toks.get(i + 1);
+        let flagged = match t.text.as_str() {
+            "vec" => next.is_some_and(|n| n.is_punct('!')),
+            "Vec" => {
+                // Vec::new (with_capacity is caught by its own ident
+                // below, covering both Vec:: and method-call forms)
+                toks.get(i + 3).is_some_and(|m| {
+                    toks[i + 1].is_punct(':')
+                        && toks[i + 2].is_punct(':')
+                        && m.is_ident("new")
+                })
+            }
+            "to_vec" | "collect" | "with_capacity" => true,
+            "clone" => prev.is_some_and(|p| p.is_punct('.')),
+            _ => false,
+        };
+        if flagged {
+            push(
+                diags,
+                a,
+                file,
+                "A1",
+                t,
+                format!(
+                    "`{}` allocates inside a hot-path region: recycle \
+                     a slab, write through Arc::make_mut, or hoist the \
+                     warmup allocation into a cold helper",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// P1: no panics inside `// lint: panic-free` regions (worker bodies,
+/// TCP reader threads, the master's event-loop receive). A panic there
+/// tears down a thread whose death the fabric only learns about as a
+/// hang — errors must flow as `FabricEvent::Failed`/`Exited` instead.
+fn rule_p1(file: &str, a: &Annotated, diags: &mut Vec<Diagnostic>) {
+    let toks = a.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if !a.panic_free[i] || !live(a, i) {
+            continue;
+        }
+        let prev = i.checked_sub(1).map(|p| &toks[p]);
+        let next = toks.get(i + 1);
+        if t.kind == Tok::Ident {
+            let flagged = match t.text.as_str() {
+                "unwrap" | "expect" => {
+                    prev.is_some_and(|p| p.is_punct('.'))
+                }
+                "panic" | "unreachable" | "todo" | "unimplemented" => {
+                    next.is_some_and(|n| n.is_punct('!'))
+                }
+                _ => false,
+            };
+            if flagged {
+                push(
+                    diags,
+                    a,
+                    file,
+                    "P1",
+                    t,
+                    format!(
+                        "`{}` inside a panic-free region: propagate an \
+                         error (bail!/Context) so the fabric surfaces \
+                         Failed/Exited instead of hanging",
+                        t.text
+                    ),
+                );
+            }
+        } else if t.kind == Tok::Punct('[') {
+            // indexing expression: `[` directly after a value (ident
+            // that is not a keyword, `]`, or `)`) can panic; array
+            // literals / attributes / macros are preceded by
+            // punctuation and stay legal
+            let is_indexing = match prev {
+                Some(p) if p.kind == Tok::Ident => {
+                    !KEYWORDS_BEFORE_BRACKET
+                        .contains(&p.text.as_str())
+                }
+                Some(p) => p.is_punct(']') || p.is_punct(')'),
+                None => false,
+            };
+            if is_indexing {
+                push(
+                    diags,
+                    a,
+                    file,
+                    "P1",
+                    t,
+                    "slice indexing inside a panic-free region: use \
+                     .get()/.get_mut() and propagate the miss as an \
+                     error"
+                        .into(),
+                );
+            }
+        }
+    }
+}
+
+/// W1: every wire/checkpoint-decoded length must pass a named cap
+/// before it sizes an allocation. Applies to decode-side functions
+/// (`read_*`, `decode_*`, `load`, `try_read_*`) in `wire.rs` and
+/// `checkpoint.rs`: a dynamically-sized `vec!`/`with_capacity`/
+/// `reserve` there must be preceded, within the same function, by one
+/// of the shared caps or cap-checking readers ([`CAP_GUARDS`]).
+fn rule_w1(file: &str, a: &Annotated, diags: &mut Vec<Diagnostic>) {
+    let toks = a.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if !live(a, i) || t.kind != Tok::Ident {
+            continue;
+        }
+        let dynamic = match t.text.as_str() {
+            "vec" => toks.get(i + 1).is_some_and(|n| n.is_punct('!'))
+                && vec_macro_len_is_dynamic(toks, i),
+            "with_capacity" | "reserve" => {
+                call_args_have_ident(toks, i + 1)
+            }
+            _ => false,
+        };
+        if !dynamic {
+            continue;
+        }
+        let Some(fn_start) = enclosing_fn(toks, i) else {
+            continue;
+        };
+        let fn_name = toks
+            .get(fn_start + 1)
+            .filter(|n| n.kind == Tok::Ident)
+            .map(|n| n.text.as_str())
+            .unwrap_or("");
+        let decode_side = fn_name.starts_with("read_")
+            || fn_name.starts_with("decode_")
+            || fn_name.starts_with("try_read_")
+            || fn_name == "load";
+        if !decode_side {
+            continue;
+        }
+        let guarded = toks[fn_start..i].iter().any(|g| {
+            g.kind == Tok::Ident
+                && CAP_GUARDS.contains(&g.text.as_str())
+        });
+        if !guarded {
+            push(
+                diags,
+                a,
+                file,
+                "W1",
+                t,
+                format!(
+                    "dynamically-sized allocation in `{fn_name}` with \
+                     no cap check: validate the decoded length against \
+                     a shared MAX_* cap (or read through \
+                     read_payload_len) before allocating"
+                ),
+            );
+        }
+    }
+}
+
+/// For `vec!` at token `i`: does the repeat-length / element list
+/// contain an identifier (i.e. a runtime-sized allocation)?
+fn vec_macro_len_is_dynamic(toks: &[Token], i: usize) -> bool {
+    // vec! [ elem ; len ] or vec! ( ... ) — scan the bracketed group
+    let Some(open) = toks.get(i + 2) else {
+        return false;
+    };
+    let (open_c, close_c) = match open.kind {
+        Tok::Punct('[') => ('[', ']'),
+        Tok::Punct('(') => ('(', ')'),
+        Tok::Punct('{') => ('{', '}'),
+        _ => return false,
+    };
+    let mut depth = 0i32;
+    for t in &toks[i + 2..] {
+        match t.kind {
+            Tok::Punct(c) if c == open_c => depth += 1,
+            Tok::Punct(c) if c == close_c => {
+                depth -= 1;
+                if depth == 0 {
+                    return false;
+                }
+            }
+            Tok::Ident if depth >= 1 => {
+                // suffixed literals (`0.0f32`) lex as Num, so any
+                // ident in the macro body means a runtime size/value
+                return true;
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+/// For `with_capacity`/`reserve` at token `i`, `open_at = i + 1`: does
+/// the argument list contain an identifier?
+fn call_args_have_ident(toks: &[Token], open_at: usize) -> bool {
+    if !toks.get(open_at).is_some_and(|t| t.is_punct('(')) {
+        return false;
+    }
+    let mut depth = 0i32;
+    for t in &toks[open_at..] {
+        match t.kind {
+            Tok::Punct('(') => depth += 1,
+            Tok::Punct(')') => {
+                depth -= 1;
+                if depth == 0 {
+                    return false;
+                }
+            }
+            Tok::Ident if depth >= 1 => return true,
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Index of the nearest preceding `fn` keyword (the enclosing function
+/// item, to a close-enough approximation for a token linter).
+fn enclosing_fn(toks: &[Token], i: usize) -> Option<usize> {
+    toks[..i].iter().rposition(|t| t.is_ident("fn"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(file: &str, src: &str) -> Vec<&'static str> {
+        lint_source(file, src).iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn d1_only_fires_on_reduce_path_modules() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_hit("src/coordinator/comm.rs", src), vec!["D1"]);
+        assert!(rules_hit("src/experiments/fig1.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d1_sort_by_with_total_cmp_is_sanctioned() {
+        let flagged = "fn f(v: &mut Vec<f32>) { v.sort_by(|a, b| a.cmp(b)); }";
+        let sanctioned =
+            "fn f(v: &mut Vec<f32>) { v.sort_by(|a, b| a.total_cmp(b)); }";
+        let keyed = "fn f(v: &mut Vec<R>) { v.sort_by_key(|r| r.replica); }";
+        assert_eq!(rules_hit("opt/vecmath.rs", flagged), vec!["D1"]);
+        assert!(rules_hit("opt/vecmath.rs", sanctioned).is_empty());
+        assert!(rules_hit("opt/vecmath.rs", keyed).is_empty());
+    }
+
+    #[test]
+    fn d2_flags_truncating_seed_and_replica_casts() {
+        assert_eq!(
+            rules_hit("src/x.rs", "let s = seed as i32;"),
+            vec!["D2"]
+        );
+        assert_eq!(
+            rules_hit("src/x.rs", "let r = rep.replica as u32;"),
+            vec!["D2"]
+        );
+        // widening casts and unrelated identifiers stay legal
+        assert!(rules_hit("src/x.rs", "let s = seed as u64;").is_empty());
+        assert!(rules_hit("src/x.rs", "let s = step as i32;").is_empty());
+        // the sanctioned fold: the cast operand is an expression, not
+        // the bare seed
+        assert!(rules_hit(
+            "src/x.rs",
+            "let s = (((seed >> 32) ^ seed) as u32) as i32;"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn a1_fires_only_inside_hot_regions() {
+        let cold = "fn f() { let v = vec![0.0f32; p]; }";
+        assert!(rules_hit("src/x.rs", cold).is_empty());
+        let hot = "\
+fn f() {
+    // lint: hot-path
+    {
+        let v = vec![0.0f32; p];
+        let w = Vec::with_capacity(p);
+        let c = x.clone();
+        let s = y.to_vec();
+        let z: Vec<f32> = it.collect();
+    }
+}
+";
+        assert_eq!(
+            rules_hit("src/x.rs", hot),
+            vec!["A1", "A1", "A1", "A1", "A1"]
+        );
+    }
+
+    #[test]
+    fn a1_arc_clone_form_is_sanctioned() {
+        let src = "\
+fn f() {
+    // lint: hot-path
+    {
+        let x = Arc::clone(&slab);
+        let s = pool.take().unwrap_or_default();
+    }
+}
+";
+        assert!(rules_hit("src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn p1_fires_on_panics_and_indexing_in_regions() {
+        let src = "\
+fn f() {
+    // lint: panic-free
+    {
+        let a = x.unwrap();
+        let b = y.expect(\"msg\");
+        panic!(\"boom\");
+        let c = v[i];
+        let d = v.get(i);
+        let e = other.unwrap_or(0);
+        for q in [1, 2] { let _ = q; }
+    }
+}
+";
+        assert_eq!(rules_hit("src/x.rs", src), vec!["P1", "P1", "P1", "P1"]);
+    }
+
+    #[test]
+    fn w1_requires_a_cap_before_dynamic_decode_allocations() {
+        let bad = "\
+fn decode_thing(p: &[u8]) -> Vec<u8> {
+    let len = read_len(p);
+    vec![0u8; len]
+}
+";
+        let good = "\
+fn decode_thing(p: &[u8]) -> Vec<u8> {
+    let len = read_len(p);
+    if len > MAX_FRAME as usize { return Vec::new(); }
+    vec![0u8; len]
+}
+";
+        let encode_side = "\
+fn encode_thing(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    out
+}
+";
+        assert_eq!(rules_hit("transport/wire.rs", bad), vec!["W1"]);
+        assert!(rules_hit("transport/wire.rs", good).is_empty());
+        assert!(rules_hit("transport/wire.rs", encode_side).is_empty());
+        // literal-sized allocations never need a cap
+        let literal = "fn read_hdr() -> Vec<u8> { vec![0u8; 8] }";
+        assert!(rules_hit("transport/wire.rs", literal).is_empty());
+        // and the rule only runs in the codec files
+        assert!(rules_hit("src/other.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn allows_suppress_exactly_their_rule_and_line() {
+        let src = "\
+fn f() {
+    // lint: panic-free
+    {
+        // lint: allow(P1) -- checked two lines up, cannot be None
+        let a = x.unwrap();
+        let b = y.unwrap();
+    }
+}
+";
+        let diags = lint_source("src/x.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 6);
+        assert_eq!(suppression_count(src), 1);
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_exempt() {
+        let src = "\
+// lint: panic-free
+fn f() { good(); }
+#[cfg(test)]
+mod tests {
+    fn t() { let x = opt.unwrap(); let m = std::collections::HashMap::new(); }
+}
+";
+        assert!(lint_source("src/coordinator/comm.rs", src).is_empty());
+    }
+
+    #[test]
+    fn grammar_errors_surface_as_lint_diagnostics() {
+        let src = "// lint: allow(A1)\nfn f() {}\n";
+        let diags = lint_source("src/x.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "LINT");
+        assert!(diags[0].msg.contains("reason"));
+    }
+}

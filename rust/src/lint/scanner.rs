@@ -1,0 +1,397 @@
+//! Comment/string-stripping token scanner.
+//!
+//! `pallas-lint` deliberately does not parse Rust — no `syn`, no AST,
+//! matching the repo's nanoserde-style minimalism. The rules only need
+//! a faithful *token* stream with line numbers: identifiers, numbers
+//! and single-character punctuation, with comments, strings, chars and
+//! lifetimes lexed (so their contents can never fake a match) and
+//! collapsed into opaque tokens. The one thing comments contribute is
+//! the `// lint:` directive channel ([`Directive`]), which the
+//! annotation grammar consumes separately.
+
+/// What a token is. String/char literals are kept as opaque markers so
+/// rules can reason about positions without ever matching their bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`foo`, `fn`, `HashMap`).
+    Ident,
+    /// Numeric literal, suffix included (`1.0f32`, `0x_ff`).
+    Num,
+    /// One punctuation character (`{`, `.`, `!`, ...).
+    Punct(char),
+    /// String literal (normal, raw or byte), contents stripped.
+    Str,
+    /// Char or byte-char literal, contents stripped.
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: Tok,
+    /// Source text for `Ident`/`Num`; empty for everything else.
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Tok::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Tok::Punct(c)
+    }
+}
+
+/// A `// lint: ...` comment: everything after the `lint:` marker,
+/// trimmed, plus the line it sits on. Grammar is parsed by
+/// [`crate::lint::annotate`].
+#[derive(Clone, Debug)]
+pub struct Directive {
+    pub text: String,
+    pub line: u32,
+}
+
+/// A scanned file: the stripped token stream and the lint directives.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub tokens: Vec<Token>,
+    pub directives: Vec<Directive>,
+}
+
+/// Marker a line comment must open with (after `//` and whitespace) to
+/// enter the directive channel.
+const DIRECTIVE_MARKER: &str = "lint:";
+
+/// Lex `src` into a [`Scan`]. Never fails: unterminated literals lex
+/// to the end of the file (the compiler owns syntax errors; the linter
+/// only needs to stay sane on them).
+pub fn scan(src: &str) -> Scan {
+    let b = src.as_bytes();
+    let mut out = Scan::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i + 2;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                let comment = src[start..i].trim_start_matches('/').trim();
+                if let Some(rest) = comment.strip_prefix(DIRECTIVE_MARKER) {
+                    out.directives.push(Directive {
+                        text: rest.trim().to_string(),
+                        line,
+                    });
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                i += 2;
+                let mut depth = 1u32;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                let tline = line;
+                i = skip_string(b, i, &mut line);
+                out.tokens.push(tok(Tok::Str, tline));
+            }
+            b'\'' => {
+                // lifetime or char literal
+                let next = b.get(i + 1).copied();
+                let is_lifetime = matches!(
+                    next,
+                    Some(n) if n == b'_' || n.is_ascii_alphabetic()
+                ) && {
+                    // 'a' is a char, 'a + ident chars not followed by a
+                    // closing quote is a lifetime
+                    let mut j = i + 1;
+                    while j < b.len()
+                        && (b[j] == b'_' || b[j].is_ascii_alphanumeric())
+                    {
+                        j += 1;
+                    }
+                    b.get(j) != Some(&b'\'')
+                };
+                if is_lifetime {
+                    let mut j = i + 1;
+                    while j < b.len()
+                        && (b[j] == b'_' || b[j].is_ascii_alphanumeric())
+                    {
+                        j += 1;
+                    }
+                    out.tokens.push(tok(Tok::Lifetime, line));
+                    i = j;
+                } else {
+                    let tline = line;
+                    i = skip_char(b, i, &mut line);
+                    out.tokens.push(tok(Tok::Char, tline));
+                }
+            }
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                // raw/byte string prefixes lex as string literals, not
+                // as an ident followed by a stray quote
+                if let Some(end) = raw_or_byte_string(b, i) {
+                    let tline = line;
+                    line += src[i..end].matches('\n').count() as u32;
+                    out.tokens.push(tok(Tok::Str, tline));
+                    i = end;
+                    continue;
+                }
+                let start = i;
+                while i < b.len()
+                    && (b[i] == b'_' || b[i].is_ascii_alphanumeric())
+                {
+                    i += 1;
+                }
+                out.tokens.push(Token {
+                    kind: Tok::Ident,
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                loop {
+                    while i < b.len()
+                        && (b[i] == b'_' || b[i].is_ascii_alphanumeric())
+                    {
+                        i += 1;
+                    }
+                    // fractional part: `1.5` but not the range `1..5`
+                    if i < b.len()
+                        && b[i] == b'.'
+                        && b.get(i + 1)
+                            .is_some_and(|d| d.is_ascii_digit())
+                    {
+                        i += 1;
+                        continue;
+                    }
+                    // exponent sign: `1e-3`
+                    if i > start
+                        && (b[i - 1] == b'e' || b[i - 1] == b'E')
+                        && i < b.len()
+                        && (b[i] == b'+' || b[i] == b'-')
+                        && b.get(i + 1)
+                            .is_some_and(|d| d.is_ascii_digit())
+                    {
+                        i += 1;
+                        continue;
+                    }
+                    break;
+                }
+                out.tokens.push(Token {
+                    kind: Tok::Num,
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
+            c => {
+                out.tokens.push(Token {
+                    kind: Tok::Punct(c as char),
+                    text: String::new(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn tok(kind: Tok, line: u32) -> Token {
+    Token {
+        kind,
+        text: String::new(),
+        line,
+    }
+}
+
+/// Skip a normal `"..."` literal starting at the opening quote; returns
+/// the index past the closing quote and counts newlines into `line`.
+fn skip_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a `'x'` / `'\n'` char literal starting at the quote.
+fn skip_char(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'\'' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// If `i` starts a raw or byte string (`r"`, `r#"`, `b"`, `br#"`, ...),
+/// return the index past its end.
+fn raw_or_byte_string(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    let mut raw = false;
+    // prefix: r, b, br, rb
+    for _ in 0..2 {
+        match b.get(j) {
+            Some(b'r') => {
+                raw = true;
+                j += 1;
+            }
+            Some(b'b') if !raw => j += 1,
+            _ => break,
+        }
+    }
+    if j == i {
+        return None;
+    }
+    let mut hashes = 0usize;
+    if raw {
+        while b.get(j) == Some(&b'#') {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    if b.get(j) != Some(&b'"') {
+        return None;
+    }
+    j += 1;
+    if raw {
+        // ends at `"` followed by `hashes` hash marks, no escapes
+        while j < b.len() {
+            if b[j] == b'"'
+                && b[j + 1..].len() >= hashes
+                && b[j + 1..j + 1 + hashes].iter().all(|&h| h == b'#')
+            {
+                return Some(j + 1 + hashes);
+            }
+            j += 1;
+        }
+        Some(j)
+    } else {
+        // byte string with normal escape rules
+        while j < b.len() {
+            match b[j] {
+                b'\\' => j += 2,
+                b'"' => return Some(j + 1),
+                _ => j += 1,
+            }
+        }
+        Some(j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        scan(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == Tok::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_never_leak_tokens() {
+        let src = r##"
+            let a = "unwrap() inside a string"; // unwrap in a comment
+            /* block with panic!() inside */
+            let b = 'x';
+            let s = r#"raw with HashMap"#;
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|t| t == "unwrap" || t == "HashMap"
+            || t == "panic"));
+        assert_eq!(
+            ids,
+            vec!["let", "a", "let", "b", "let", "s"]
+        );
+    }
+
+    #[test]
+    fn directives_are_captured_with_lines() {
+        let src = "fn f() {}\n// lint: hot-path -- note\nfn g() {}\n";
+        let s = scan(src);
+        assert_eq!(s.directives.len(), 1);
+        assert_eq!(s.directives[0].line, 2);
+        assert_eq!(s.directives[0].text, "hot-path -- note");
+    }
+
+    #[test]
+    fn lines_are_tracked_through_literals() {
+        let src = "let a = \"two\nlines\";\nlet tail = 1;";
+        let s = scan(src);
+        let tail = s
+            .tokens
+            .iter()
+            .find(|t| t.is_ident("tail"))
+            .unwrap();
+        assert_eq!(tail.line, 3);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'y' }";
+        let s = scan(src);
+        let lifetimes =
+            s.tokens.iter().filter(|t| t.kind == Tok::Lifetime).count();
+        let chars =
+            s.tokens.iter().filter(|t| t.kind == Tok::Char).count();
+        assert_eq!((lifetimes, chars), (2, 1));
+    }
+
+    #[test]
+    fn numbers_swallow_suffixes_and_ranges_survive() {
+        let src = "let x = 1.5f32; for i in 0..n_max { }";
+        let s = scan(src);
+        let nums: Vec<&str> = s
+            .tokens
+            .iter()
+            .filter(|t| t.kind == Tok::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1.5f32", "0"]);
+        assert!(s.tokens.iter().any(|t| t.is_ident("n_max")));
+    }
+}

@@ -58,6 +58,15 @@ impl PhaseProfiler {
         Self::default()
     }
 
+    /// Lock the accumulator, shrugging off poison: a panicked thread
+    /// mid-`add` can at worst lose its own increment, and the profiler
+    /// is shared with the fabric's panic-free master loop — timing
+    /// attribution must never become a second panic there.
+    fn lock_acc(&self)
+                -> std::sync::MutexGuard<'_, BTreeMap<String, (f64, u64)>> {
+        self.acc.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     pub fn add(&self, phase: &str, seconds: f64) {
         self.add_many(phase, seconds, 1);
     }
@@ -65,7 +74,7 @@ impl PhaseProfiler {
     /// Merge a pre-aggregated total (restoring checkpointed phase
     /// accounting on resume).
     pub fn add_many(&self, phase: &str, seconds: f64, calls: u64) {
-        let mut m = self.acc.lock().unwrap();
+        let mut m = self.lock_acc();
         let e = m.entry(phase.to_string()).or_insert((0.0, 0));
         e.0 += seconds;
         e.1 += calls;
@@ -81,16 +90,11 @@ impl PhaseProfiler {
 
     /// (total seconds, call count) per phase.
     pub fn snapshot(&self) -> BTreeMap<String, (f64, u64)> {
-        self.acc.lock().unwrap().clone()
+        self.lock_acc().clone()
     }
 
     pub fn total(&self, phase: &str) -> f64 {
-        self.acc
-            .lock()
-            .unwrap()
-            .get(phase)
-            .map(|e| e.0)
-            .unwrap_or(0.0)
+        self.lock_acc().get(phase).map(|e| e.0).unwrap_or(0.0)
     }
 
     /// Ratio of `num` to `den` phase time (the paper's §4.1 comm/compute).
@@ -155,5 +159,25 @@ mod tests {
         assert_eq!(v, 42);
         assert!(p.total("x") >= 0.0);
         assert_eq!(p.snapshot()["x"].1, 1);
+    }
+
+    /// A thread panicking while holding the accumulator lock must not
+    /// cascade: later `add`/`snapshot` calls recover the poisoned mutex
+    /// instead of panicking the fabric's master loop.
+    #[test]
+    fn poisoned_lock_recovers() {
+        let p = PhaseProfiler::new();
+        p.add("step", 1.0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let _guard = p.acc.lock().unwrap();
+                panic!("poison the profiler");
+            },
+        ));
+        assert!(r.is_err());
+        assert!(p.acc.is_poisoned());
+        p.add("step", 2.0); // must not panic
+        assert_eq!(p.total("step"), 3.0);
+        assert_eq!(p.snapshot()["step"].1, 2);
     }
 }

@@ -309,6 +309,66 @@ fn tcp_garbled_frame_errors_with_decode_message() {
     evil.join().unwrap();
 }
 
+/// A master whose workers never show up fails with a clear accept
+/// timeout naming how many arrived — instead of blocking in `accept`
+/// forever (the pre-timeout behavior when a worker host dies before
+/// connecting).
+#[test]
+fn tcp_listen_times_out_when_workers_never_arrive() {
+    let err = TcpTransport::listen_timeout(
+        "127.0.0.1:47635",
+        2,
+        Duration::from_millis(200),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(
+        err.contains("timed out waiting for workers to connect"),
+        "{err}"
+    );
+    assert!(err.contains("0 of 2 arrived"), "{err}");
+}
+
+/// A worker that connects but never speaks (wedged before its hello)
+/// must not wedge the master with it: the handshake read times out
+/// within the accept deadline and surfaces as a handshake error.
+#[test]
+fn tcp_listen_times_out_on_silent_handshake() {
+    let addr = "127.0.0.1:47636";
+    let silent = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let deadline =
+                std::time::Instant::now() + Duration::from_secs(10);
+            let stream = loop {
+                match std::net::TcpStream::connect(&addr) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        if std::time::Instant::now() >= deadline {
+                            panic!("connect: {e}");
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            };
+            // hold the socket open, never send the hello
+            std::thread::sleep(Duration::from_millis(1500));
+            drop(stream);
+        })
+    };
+    let err = format!(
+        "{:#}",
+        TcpTransport::listen_timeout(
+            addr,
+            1,
+            Duration::from_millis(500),
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("handshake"), "{err}");
+    silent.join().unwrap();
+}
+
 // ---------------------------------------------------------------------------
 // cross-transport determinism (artifact-gated, like the training suite)
 // ---------------------------------------------------------------------------

@@ -1,0 +1,234 @@
+//! End-to-end tests for `pallas-lint`: the real binary against
+//! per-rule fixture trees (exit codes and diagnostics), and the
+//! library API against this repository itself — the tree must lint
+//! clean with zero suppressions on the fabric and transports.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use parle::lint::{lint_tree, report};
+
+/// A scratch directory for one fixture tree, unique per test process
+/// and recreated empty on every run.
+fn fixture_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("pallas_lint_fixtures_{}", std::process::id()))
+        .join(name);
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write(dir: &Path, rel: &str, src: &str) {
+    let path = dir.join(rel);
+    fs::create_dir_all(path.parent().unwrap()).unwrap();
+    fs::write(path, src).unwrap();
+}
+
+/// Run the actual `pallas_lint` binary over `root`; returns
+/// (exit-success, stdout, stderr).
+fn run_lint(root: &Path) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+        .arg(root)
+        .output()
+        .expect("spawn pallas_lint");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn binary_flags_d1_hash_containers_on_the_reduce_path() {
+    let dir = fixture_dir("d1");
+    write(
+        &dir,
+        "coordinator/comm.rs",
+        "use std::collections::HashMap;\n\
+         pub fn tally(m: &HashMap<u32, f32>) -> usize { m.len() }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "D1 fixture must fail the lint");
+    assert!(err.contains("[D1]"), "stderr: {err}");
+    assert!(err.contains("comm.rs:1"), "stderr: {err}");
+    // both the `use` and the parameter type are flagged
+    assert!(err.contains("2 violation(s)"), "stderr: {err}");
+}
+
+#[test]
+fn binary_flags_d2_truncating_seed_casts() {
+    let dir = fixture_dir("d2");
+    write(
+        &dir,
+        "derive.rs",
+        "pub fn device_seed(seed: u64) -> i32 {\n    seed as i32\n}\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "D2 fixture must fail the lint");
+    assert!(err.contains("[D2]"), "stderr: {err}");
+    assert!(err.contains("derive.rs:2"), "stderr: {err}");
+}
+
+#[test]
+fn binary_flags_a1_allocation_in_hot_regions() {
+    let dir = fixture_dir("a1");
+    write(
+        &dir,
+        "dispatch.rs",
+        "pub fn dispatch(p: usize) -> Vec<f32> {\n\
+         \x20   // lint: hot-path\n\
+         \x20   {\n\
+         \x20       vec![0.0f32; p]\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "A1 fixture must fail the lint");
+    assert!(err.contains("[A1]"), "stderr: {err}");
+}
+
+#[test]
+fn binary_flags_p1_panics_in_panic_free_regions() {
+    let dir = fixture_dir("p1");
+    write(
+        &dir,
+        "reader.rs",
+        "pub fn reader(x: Option<u32>) -> u32 {\n\
+         \x20   // lint: panic-free\n\
+         \x20   {\n\
+         \x20       x.unwrap()\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "P1 fixture must fail the lint");
+    assert!(err.contains("[P1]"), "stderr: {err}");
+    assert!(err.contains("reader.rs:4"), "stderr: {err}");
+}
+
+#[test]
+fn binary_flags_w1_uncapped_decode_allocations() {
+    let dir = fixture_dir("w1");
+    write(
+        &dir,
+        "transport/wire.rs",
+        "pub fn decode_blob(len: usize) -> Vec<u8> {\n\
+         \x20   vec![0u8; len]\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "W1 fixture must fail the lint");
+    assert!(err.contains("[W1]"), "stderr: {err}");
+    assert!(err.contains("decode_blob"), "stderr: {err}");
+}
+
+#[test]
+fn binary_exits_zero_on_a_clean_fixture() {
+    let dir = fixture_dir("clean");
+    write(&dir, "math.rs", "pub fn add(a: f32, b: f32) -> f32 { a + b }\n");
+    let (ok, out, err) = run_lint(&dir);
+    assert!(ok, "clean fixture must pass: {err}");
+    assert!(out.contains("1 files clean"), "stdout: {out}");
+
+    // --quiet silences the success summary
+    let quiet = Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+        .arg(&dir)
+        .arg("--quiet")
+        .output()
+        .unwrap();
+    assert!(quiet.status.success());
+    assert!(quiet.stdout.is_empty());
+}
+
+#[test]
+fn binary_honors_allow_with_reason_but_rejects_bare_allow() {
+    let dir = fixture_dir("allow");
+    write(
+        &dir,
+        "reader.rs",
+        "pub fn reader(x: Option<u32>) -> u32 {\n\
+         \x20   // lint: panic-free\n\
+         \x20   {\n\
+         \x20       // lint: allow(P1) -- fixture: caller checked is_some\n\
+         \x20       x.unwrap()\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, out, err) = run_lint(&dir);
+    assert!(ok, "reasoned allow must suppress the diagnostic: {err}");
+    assert!(out.contains("(1 suppressions)"), "stdout: {out}");
+
+    // a reasonless allow is itself a grammar violation
+    write(
+        &dir,
+        "reader.rs",
+        "pub fn reader(x: Option<u32>) -> u32 {\n\
+         \x20   // lint: panic-free\n\
+         \x20   {\n\
+         \x20       // lint: allow(P1)\n\
+         \x20       x.unwrap()\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "reasonless allow must fail the lint");
+    assert!(err.contains("[LINT]"), "stderr: {err}");
+}
+
+#[test]
+fn binary_reports_multiple_files_in_sorted_order() {
+    let dir = fixture_dir("multi");
+    write(&dir, "b.rs", "pub fn f(seed: u64) -> u8 { seed as u8 }\n");
+    write(&dir, "a.rs", "pub fn g(seed: u64) -> u8 { seed as u8 }\n");
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok);
+    let a_at = err.find("a.rs:1").expect("a.rs diagnostic");
+    let b_at = err.find("b.rs:1").expect("b.rs diagnostic");
+    assert!(a_at < b_at, "diagnostics must be sorted by file: {err}");
+    assert!(err.contains("2 violation(s)"), "stderr: {err}");
+}
+
+#[test]
+fn binary_exits_zero_on_the_real_tree() {
+    // the acceptance gate: `cargo run --bin pallas_lint` on this repo
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+        .output()
+        .expect("spawn pallas_lint");
+    assert!(
+        out.status.success(),
+        "the repo tree must lint clean:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("clean"));
+}
+
+#[test]
+fn repo_tree_is_clean_with_no_fabric_suppressions() {
+    let base = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src = base.join("src");
+    let benches = base.join("benches");
+    let tree = lint_tree(&[&src, &benches], base).unwrap();
+    assert!(
+        tree.is_clean(),
+        "repo lint violations:\n{}",
+        report::render(&tree.diagnostics)
+    );
+    // the fabric and transports must be FIXED, never suppressed
+    assert_eq!(
+        tree.suppressions_in("coordinator/comm.rs"),
+        0,
+        "no `lint: allow` in the fabric"
+    );
+    assert_eq!(
+        tree.suppressions_in("transport/"),
+        0,
+        "no `lint: allow` in the transports"
+    );
+    assert!(
+        tree.files.len() >= 20,
+        "walk looks truncated: {} files",
+        tree.files.len()
+    );
+}

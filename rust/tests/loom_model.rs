@@ -1,0 +1,327 @@
+//! Loom-style exhaustive interleaving checks for the fabric's two
+//! concurrency protocols, gated behind `--features loom-check`:
+//!
+//! 1. the `AsyncPacer` staleness bound — over *every* interleaving of
+//!    dispatch and report events, no replica is ever handed a round
+//!    more than `max_staleness` ahead of the slowest unfinished
+//!    replica, and the loop can always make progress until all rounds
+//!    are done;
+//! 2. fabric shutdown with reports still in flight — over every
+//!    interleaving of stop-sends, worker steps and joins, shutdown
+//!    reaches the all-joined terminal state (unconsumed reports die
+//!    with the event channel, they never deadlock the join).
+//!
+//! The crate deliberately has no `loom` dependency; these are
+//! hand-rolled DFS explorations of small, exact models. State spaces
+//! are tiny (hundreds of states), so the checks are exhaustive, not
+//! sampled. Run with:
+//!
+//! ```text
+//! cargo test --features loom-check --test loom_model
+//! ```
+#![cfg(feature = "loom-check")]
+
+use std::collections::HashSet;
+
+use parle::coordinator::comm::AsyncPacer;
+
+// ---------------------------------------------------------------- //
+// 1. AsyncPacer: staleness bound + deadlock freedom                //
+// ---------------------------------------------------------------- //
+
+/// One explored state: the real pacer plus the model's mirror of
+/// which replicas have a leg in flight (the pacer keeps its own copy
+/// private; the mirror is what the master's event loop knows).
+#[derive(Clone)]
+struct PacerState {
+    pacer: AsyncPacer,
+    inflight: Vec<bool>,
+}
+
+impl PacerState {
+    /// Canonical encoding for the visited-set.
+    fn key(&self) -> (Vec<u64>, Vec<bool>) {
+        (self.pacer.done().to_vec(), self.inflight.clone())
+    }
+}
+
+/// Exhaustively explore every interleaving of dispatches and report
+/// arrivals for `n` replicas x `total` rounds under `staleness`,
+/// asserting the dispatch-time staleness bound and that every
+/// quiescent state (no dispatchable replica, nothing in flight) is
+/// the completed state.
+fn explore_pacer(n: usize, total: u64, staleness: u64) {
+    let mut visited: HashSet<(Vec<u64>, Vec<bool>)> = HashSet::new();
+    let mut stack = vec![PacerState {
+        pacer: AsyncPacer::new(n, total, staleness),
+        inflight: vec![false; n],
+    }];
+    let mut states = 0usize;
+    while let Some(s) = stack.pop() {
+        if !visited.insert(s.key()) {
+            continue;
+        }
+        states += 1;
+        let done = s.pacer.done();
+        // the bound the pacer promises: min over *unfinished* replicas
+        let min_active =
+            done.iter().copied().filter(|&d| d < total).min();
+        let dispatchable = s.pacer.dispatchable();
+        let mut progressed = false;
+
+        for &r in &dispatchable {
+            assert!(
+                !s.inflight[r],
+                "pacer offered replica {r} while its leg is in flight"
+            );
+            let k = s.pacer.next_round(r);
+            assert!(k < total, "dispatched past total_rounds");
+            let min = min_active
+                .expect("dispatchable nonempty but no active replica");
+            assert!(
+                k - min <= staleness,
+                "staleness bound violated: round {k} vs min {min} \
+                 (bound {staleness}, n={n}, total={total})"
+            );
+            let mut next = s.clone();
+            next.pacer.mark_dispatched(r);
+            next.inflight[r] = true;
+            stack.push(next);
+            progressed = true;
+        }
+        for r in 0..n {
+            if s.inflight[r] {
+                let mut next = s.clone();
+                next.pacer.on_report(r);
+                next.inflight[r] = false;
+                stack.push(next);
+                progressed = true;
+            }
+        }
+        if !progressed {
+            // quiescence must mean completion, never a stall
+            assert!(
+                s.pacer.all_done(),
+                "deadlock: nothing dispatchable, nothing in flight, \
+                 done={done:?} (n={n}, total={total}, \
+                 staleness={staleness})"
+            );
+            assert_eq!(s.pacer.inflight(), 0);
+            assert_eq!(s.pacer.watermark(), total);
+        }
+    }
+    assert!(states > 1, "exploration never left the initial state");
+}
+
+#[test]
+fn pacer_staleness_bound_holds_on_every_interleaving() {
+    for staleness in 0..3u64 {
+        explore_pacer(2, 3, staleness);
+        explore_pacer(3, 2, staleness);
+    }
+}
+
+#[test]
+fn pacer_lockstep_never_spreads_rounds() {
+    // staleness 0 degenerates to a barrier: in every reachable state
+    // the spread between any two replicas' next rounds is at most 1
+    let (n, total) = (3usize, 3u64);
+    let mut visited: HashSet<(Vec<u64>, Vec<bool>)> = HashSet::new();
+    let mut stack = vec![PacerState {
+        pacer: AsyncPacer::new(n, total, 0),
+        inflight: vec![false; n],
+    }];
+    while let Some(s) = stack.pop() {
+        if !visited.insert(s.key()) {
+            continue;
+        }
+        let done = s.pacer.done();
+        let hi = done.iter().copied().max().unwrap();
+        let lo = done.iter().copied().min().unwrap();
+        assert!(
+            hi - lo <= 1,
+            "lockstep spread {hi}-{lo} exceeds one round: {done:?}"
+        );
+        for &r in &s.pacer.dispatchable() {
+            let mut next = s.clone();
+            next.pacer.mark_dispatched(r);
+            next.inflight[r] = true;
+            stack.push(next);
+        }
+        for r in 0..n {
+            if s.inflight[r] {
+                let mut next = s.clone();
+                next.pacer.on_report(r);
+                next.inflight[r] = false;
+                stack.push(next);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- //
+// 2. Shutdown with in-flight reports                               //
+// ---------------------------------------------------------------- //
+
+/// Worker-side command, as the model sees it: the FIFO per-worker
+/// channel carries in-flight rounds, then the master's `Stop`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum Cmd {
+    Round,
+    Stop,
+}
+
+/// One state of the shutdown protocol. Mirrors
+/// `ReduceFabric::shutdown`: the master sends `Stop` down every
+/// per-worker channel, then joins the worker threads in slot order.
+/// Workers drain their FIFO; a `Round` produces a report sent into
+/// the (unbounded, never-blocking) event channel; `Stop` makes the
+/// worker exit. Reports pending at join time are simply dropped.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct ShutdownState {
+    /// Per-worker command queue (front = next to process).
+    queues: Vec<Vec<Cmd>>,
+    /// Worker has seen `Stop` and exited.
+    exited: Vec<bool>,
+    /// Master has pushed `Stop` into this worker's queue.
+    stop_sent: Vec<bool>,
+    /// Master has joined this worker's thread.
+    joined: Vec<bool>,
+    /// Reports sitting unconsumed in the event channel.
+    pending_reports: usize,
+}
+
+impl ShutdownState {
+    fn initial(n: usize) -> Self {
+        ShutdownState {
+            // every worker has one round in flight when shutdown starts
+            queues: vec![vec![Cmd::Round]; n],
+            exited: vec![false; n],
+            stop_sent: vec![false; n],
+            joined: vec![false; n],
+            pending_reports: 0,
+        }
+    }
+
+    fn terminal(&self) -> bool {
+        self.joined.iter().all(|&j| j)
+    }
+
+    /// All states reachable in one step, in the protocol's real order:
+    /// stop-sends happen in slot order, joins happen in slot order
+    /// after every stop is sent; worker steps interleave freely.
+    fn successors(&self) -> Vec<ShutdownState> {
+        let n = self.queues.len();
+        let mut out = Vec::new();
+        // master: send the next Stop (slot order, like shutdown())
+        if let Some(r) = self.stop_sent.iter().position(|&s| !s) {
+            let mut next = self.clone();
+            next.queues[r].push(Cmd::Stop);
+            next.stop_sent[r] = true;
+            out.push(next);
+        }
+        // workers: process the head of their queue
+        for r in 0..n {
+            if !self.exited[r] && !self.queues[r].is_empty() {
+                let mut next = self.clone();
+                match next.queues[r].remove(0) {
+                    // the event channel is unbounded: sending a report
+                    // never blocks, so this step is always enabled
+                    Cmd::Round => next.pending_reports += 1,
+                    Cmd::Stop => next.exited[r] = true,
+                }
+                out.push(next);
+            }
+        }
+        // master: join the next worker in slot order, once all stops
+        // are out and that worker has exited
+        if self.stop_sent.iter().all(|&s| s) {
+            if let Some(r) = self.joined.iter().position(|&j| !j) {
+                if self.exited[r] {
+                    let mut next = self.clone();
+                    next.joined[r] = true;
+                    out.push(next);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn shutdown_with_inflight_reports_always_terminates() {
+    for n in 1..=3usize {
+        let mut visited: HashSet<ShutdownState> = HashSet::new();
+        let mut stack = vec![ShutdownState::initial(n)];
+        let mut terminal_with_dropped_reports = false;
+        while let Some(s) = stack.pop() {
+            if !visited.insert(s.clone()) {
+                continue;
+            }
+            let succ = s.successors();
+            if succ.is_empty() {
+                // a stuck state must be the fully-joined terminal —
+                // this is exactly the "shutdown hangs on an in-flight
+                // report" bug class the model exists to exclude
+                assert!(
+                    s.terminal(),
+                    "shutdown deadlock with n={n}: \
+                     exited={:?} stop_sent={:?} joined={:?}",
+                    s.exited, s.stop_sent, s.joined
+                );
+                if s.pending_reports == n {
+                    terminal_with_dropped_reports = true;
+                }
+            }
+            stack.extend(succ);
+        }
+        // the interesting witness exists: every worker completed its
+        // round, nobody consumed the reports, shutdown still finished
+        assert!(
+            terminal_with_dropped_reports,
+            "model never reached the all-reports-dropped terminal \
+             (n={n})"
+        );
+    }
+}
+
+/// The model's claim, checked against the real fabric: broadcast a
+/// round, never collect, shut down — must return cleanly with the
+/// reports still in the channel.
+#[test]
+fn real_fabric_shuts_down_with_reports_in_flight() {
+    use parle::config::CommCfg;
+    use parle::coordinator::comm::{ReduceFabric, RoundConsts, RoundReport};
+
+    let n = 3usize;
+    let mut fabric = ReduceFabric::flat(n, CommCfg::off());
+    for _ in 0..n {
+        fabric
+            .spawn_worker(move |ep| {
+                while let Some(msg) = ep.recv() {
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round: msg.round,
+                        params: msg.slab,
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            })
+            .unwrap();
+    }
+    let xref = vec![1.0f32; 64];
+    fabric.broadcast(
+        RoundConsts {
+            lr: 0.1,
+            gamma_inv: 0.01,
+            rho_inv: 1.0,
+            eta_over_rho: 0.1,
+        },
+        &[xref.as_slice()],
+    );
+    // no collect(): all n reports are (or will be) in flight
+    fabric.shutdown().unwrap();
+}

@@ -114,7 +114,8 @@ fn prop_fabric_round_trips_params_bit_exactly() {
                     });
                 }
                 Ok(())
-            });
+            })
+            .unwrap();
         }
         for round in 0..4 {
             let mut xref = vec![0.0f32; p];
