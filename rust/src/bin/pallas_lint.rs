@@ -1,16 +1,19 @@
 //! `pallas-lint` — static invariant checker for the Parle codebase.
 //!
-//! Walks `rust/src` and `rust/benches`, enforces the D1/D2/A1/P1/W1
-//! rules (see `src/lint/rules.rs` and the README's "Invariants &
-//! linting" section), prints `file:line: [RULE] message` diagnostics,
-//! and exits nonzero on any violation. Works from the repo root or
-//! from `rust/`.
+//! Walks `rust/src` and `rust/benches`, enforces the
+//! D1/D2/A1/P1/W1/S1/R1/D3 rules (see `src/lint/rules.rs` and the
+//! README's "Invariants & linting" section), prints
+//! `file:line: [RULE] message` diagnostics, and exits nonzero on any
+//! violation. Works from the repo root or from `rust/`.
 //!
-//! Usage: `cargo run --bin pallas_lint [--quiet] [PATH...]`
+//! Usage: `cargo run --bin pallas_lint [--quiet] [--format json] [PATH...]`
 //!
 //! With no `PATH`, lints the crate's `src/` and `benches/`; explicit
 //! paths (files or directories) override the default roots — used by
-//! the fixture tests in `tests/lint_rules.rs`.
+//! the fixture tests in `tests/lint_rules.rs`. `--format json` emits
+//! one machine-readable report object on stdout (exit code unchanged)
+//! for tooling; the default text format is what the CI problem
+//! matcher (`.github/problem-matchers/pallas-lint.json`) parses.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -36,12 +39,33 @@ fn crate_root() -> Option<PathBuf> {
 
 fn main() -> ExitCode {
     let mut quiet = false;
+    let mut json = false;
+    let mut want_format = false;
     let mut roots: Vec<PathBuf> = Vec::new();
     for arg in std::env::args().skip(1) {
+        if want_format {
+            want_format = false;
+            match arg.as_str() {
+                "json" => json = true,
+                "text" => json = false,
+                other => {
+                    eprintln!(
+                        "pallas-lint: unknown format {other:?} \
+                         (json, text)"
+                    );
+                    return ExitCode::FAILURE;
+                }
+            }
+            continue;
+        }
         match arg.as_str() {
             "--quiet" | "-q" => quiet = true,
+            "--format" => want_format = true,
             "--help" | "-h" => {
-                println!("usage: pallas_lint [--quiet] [PATH...]");
+                println!(
+                    "usage: pallas_lint [--quiet] [--format json|text] \
+                     [PATH...]"
+                );
                 println!(
                     "With no PATH, lints the crate's src/ and benches/."
                 );
@@ -49,6 +73,10 @@ fn main() -> ExitCode {
             }
             _ => roots.push(PathBuf::from(arg)),
         }
+    }
+    if want_format {
+        eprintln!("pallas-lint: --format needs a value (json, text)");
+        return ExitCode::FAILURE;
     }
     let display_base = if roots.is_empty() {
         let Some(root) = crate_root() else {
@@ -75,6 +103,14 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    if json {
+        println!("{}", report::render_json(&tree));
+        return if tree.is_clean() {
+            ExitCode::SUCCESS
+        } else {
+            ExitCode::FAILURE
+        };
+    }
     if tree.is_clean() {
         if !quiet {
             println!(

@@ -102,8 +102,9 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::config::CommCfg;
-use crate::coordinator::transport::{ChannelTransport, TcpWorkerLink,
-                                    Transport};
+use crate::coordinator::transport::protocol::{Dir, ProtocolMonitor};
+use crate::coordinator::transport::{cmd_tag, wire, ChannelTransport,
+                                    TcpWorkerLink, Transport};
 use crate::opt::vecmath;
 use crate::util::timer::{PhaseProfiler, Timer};
 
@@ -268,6 +269,12 @@ pub struct ReplicaEndpoint {
     link: EndpointLink,
     meter: Arc<CommMeter>,
     comm: CommCfg,
+    /// Worker-side protocol oracle for the in-process link. The TCP
+    /// link validates inside [`TcpWorkerLink`] (it sees the raw frame
+    /// tags); this monitor covers the channel path, where commands
+    /// arrive pre-decoded. See
+    /// [`crate::coordinator::transport::protocol`].
+    monitor: RefCell<ProtocolMonitor>,
 }
 
 impl ReplicaEndpoint {
@@ -289,6 +296,9 @@ impl ReplicaEndpoint {
             },
             meter,
             comm,
+            monitor: RefCell::new(ProtocolMonitor::established(
+                "worker", id,
+            )),
         }
     }
 
@@ -297,11 +307,17 @@ impl ReplicaEndpoint {
     /// Wire time is real, so no interconnect simulation applies; the
     /// meter is process-local (the master meters the wire itself).
     pub fn remote(link: TcpWorkerLink) -> Self {
+        let id = link.replica();
         ReplicaEndpoint {
-            id: link.replica(),
+            id,
             link: EndpointLink::Tcp(RefCell::new(link)),
             meter: Arc::new(CommMeter::new()),
             comm: CommCfg::off(),
+            // unused on this link kind: the socket link validates the
+            // raw frame tags itself, before they are decoded
+            monitor: RefCell::new(ProtocolMonitor::established(
+                "worker", id,
+            )),
         }
     }
 
@@ -321,15 +337,33 @@ impl ReplicaEndpoint {
     /// root cause through its reader's `Failed` event.
     pub fn recv_cmd(&self) -> Option<WorkerCmd> {
         match &self.link {
-            EndpointLink::Channel { cmd_rx, .. } => match cmd_rx.recv() {
-                Ok(RoundCmd::Round(msg)) => {
-                    simulate_transfer(&self.comm, msg.xref.len() * 4);
-                    Some(WorkerCmd::Round(msg))
+            EndpointLink::Channel { cmd_rx, .. } => {
+                let cmd = cmd_rx.recv().ok()?;
+                if let Err(v) = self
+                    .monitor
+                    .borrow_mut()
+                    .observe(Dir::ToWorker, cmd_tag(&cmd))
+                {
+                    // drain out like a closed command channel: the
+                    // master's own monitor already refused to send this,
+                    // so hitting it means the link itself is corrupt
+                    crate::util::logging::log(
+                        crate::util::logging::Level::Error,
+                        "fabric",
+                        &format!("replica {}: {v}", self.id),
+                    );
+                    return None;
                 }
-                Ok(RoundCmd::Snapshot) => Some(WorkerCmd::Snapshot),
-                Ok(RoundCmd::Restore(st)) => Some(WorkerCmd::Restore(st)),
-                Ok(RoundCmd::Stop) | Err(_) => None,
-            },
+                match cmd {
+                    RoundCmd::Round(msg) => {
+                        simulate_transfer(&self.comm, msg.xref.len() * 4);
+                        Some(WorkerCmd::Round(msg))
+                    }
+                    RoundCmd::Snapshot => Some(WorkerCmd::Snapshot),
+                    RoundCmd::Restore(st) => Some(WorkerCmd::Restore(st)),
+                    RoundCmd::Stop => None,
+                }
+            }
             EndpointLink::Tcp(link) => {
                 match link.borrow_mut().recv_cmd() {
                     Ok(cmd) => cmd,
@@ -369,6 +403,20 @@ impl ReplicaEndpoint {
     pub fn send_snapshot(&self, state: WorkerState) {
         match &self.link {
             EndpointLink::Channel { snap_tx, .. } => {
+                // on violation, log but send anyway: the master's
+                // monitor raises the typed error on its side, and
+                // withholding the reply would hang its snapshot barrier
+                if let Err(v) = self
+                    .monitor
+                    .borrow_mut()
+                    .observe(Dir::ToMaster, wire::TAG_SNAPSHOT)
+                {
+                    crate::util::logging::log(
+                        crate::util::logging::Level::Error,
+                        "fabric",
+                        &format!("replica {}: {v}", self.id),
+                    );
+                }
                 snap_tx.send(state).ok();
             }
             EndpointLink::Tcp(link) => {
@@ -399,6 +447,20 @@ impl ReplicaEndpoint {
     pub fn report(&self, report: RoundReport) {
         match &self.link {
             EndpointLink::Channel { event_tx, .. } => {
+                // as with snapshots: log a violation but send anyway so
+                // the master's monitor fails its receive with a typed
+                // error instead of its barrier hanging on nothing
+                if let Err(v) = self
+                    .monitor
+                    .borrow_mut()
+                    .observe(Dir::ToMaster, wire::TAG_REPORT)
+                {
+                    crate::util::logging::log(
+                        crate::util::logging::Level::Error,
+                        "fabric",
+                        &format!("replica {}: {v}", self.id),
+                    );
+                }
                 let bytes = report.params.len() * 4;
                 simulate_transfer(&self.comm, bytes);
                 self.meter.account(bytes);
@@ -600,6 +662,8 @@ impl ReduceFabric {
         self.ensure_bcast_slabs(p);
         let parity = (self.round % 2) as usize;
         // lint: hot-path -- steady-state broadcast: slab writes + recycle
+        // lint: pooled -- drained report payloads and pool slabs must all
+        // reach a RoundMsg or go back to the pool
         {
             for (g, r) in refs.iter().enumerate() {
                 Arc::make_mut(&mut self.bcast[g][parity])
@@ -671,6 +735,7 @@ impl ReduceFabric {
         self.ensure_replica_slabs(replica, p);
         let parity = (round % 2) as usize;
         // lint: hot-path -- async dispatch leg: in-place slab reuse only
+        // lint: pooled -- the replica's pool slab must reach its RoundMsg
         {
             let Some(Some(pair)) = self.bcast_replica.get_mut(replica)
             else {
@@ -785,6 +850,9 @@ impl ReduceFabric {
 
     /// The (8d) reduce: `out <- mean` of every collected payload, via the
     /// multi-threaded kernel.
+    // lint: deterministic -- reports are sorted by replica id, the mean
+    // kernel owns the summation order; nothing here may consult the
+    // clock or thread identity
     pub fn reduce_into(&self, out: &mut [f32]) {
         let views: Vec<&[f32]> = self
             .reports
@@ -796,6 +864,7 @@ impl ReduceFabric {
 
     /// Group-restricted reduce: mean of group g's payloads (the deputy
     /// update's worker mean in the hierarchy).
+    // lint: deterministic -- same contract as reduce_into, per group
     pub fn reduce_group_into(&self, g: usize, out: &mut [f32]) {
         let views: Vec<&[f32]> = self
             .reports

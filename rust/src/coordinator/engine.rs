@@ -580,6 +580,8 @@ impl<'a> RoundEngine<'a> {
                 step_seconds += rep.step_s / n_workers as f64;
                 rep_loss[rep.replica] = rep.train_loss;
                 rep_err[rep.replica] = rep.train_err;
+                // lint: deterministic -- the elastic update must depend
+                // only on the report and round, never on wall clock
                 {
                     let sc = scoping_at(&scoping, rep.round);
                     let epoch = rep.round as f64 * spr / b as f64;
@@ -616,8 +618,13 @@ impl<'a> RoundEngine<'a> {
                 step_seconds += stats.max_step_s;
                 last_train = (stats.mean_loss, stats.mean_err);
 
-                profiler
-                    .scope("reduce", || algo.master_update(&fabric, &ctx));
+                // lint: deterministic -- the synchronous reduce is the
+                // bit-exactness anchor; no clock reads inside
+                {
+                    profiler.scope("reduce", || {
+                        algo.master_update(&fabric, &ctx)
+                    });
+                }
                 scoping.step();
 
                 let is_last = round + 1 == total_rounds;

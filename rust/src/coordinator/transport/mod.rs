@@ -32,7 +32,40 @@
 //! same code driving the same [`crate::coordinator::comm::
 //! ReplicaEndpoint`] API. The cross-transport determinism suite
 //! (`tests/integration_tcp.rs`) pins this.
+//!
+//! # Protocol state machine
+//!
+//! Both backends speak the master↔worker protocol declared once as
+//! [`protocol::TRANSITIONS`]. The diagram below is rendered from that
+//! table by [`protocol::render_state_diagram`] and pinned against it
+//! by a unit test, so these docs cannot drift from the spec:
+//!
+//! ```text
+//! Hello --[HELLO w->m]--> Hello
+//! Hello --[HELLO_ACK m->w]--> RoundLoop
+//! RoundLoop --[ROUND m->w]--> InFlight
+//! RoundLoop --[SNAPSHOT_REQ m->w]--> SnapshotQuiesce
+//! RoundLoop --[RESTORE m->w]--> Restore
+//! RoundLoop --[STOP m->w]--> Draining
+//! InFlight --[REPORT w->m]--> RoundLoop
+//! InFlight --[STOP m->w]--> Draining
+//! SnapshotQuiesce --[SNAPSHOT w->m]--> RoundLoop
+//! Restore --[ROUND m->w]--> InFlight
+//! Restore --[SNAPSHOT_REQ m->w]--> SnapshotQuiesce
+//! Restore --[STOP m->w]--> Draining
+//! Draining --[REPORT w->m]--> Draining
+//! ```
+//!
+//! Debug-oriented [`protocol::ProtocolMonitor`]s sit on both endpoints
+//! of both transports and validate every frame against the table, so
+//! an illegal sequence (a round before the handshake, a report during
+//! snapshot quiesce, a double restore) surfaces as a typed
+//! [`protocol::ProtocolViolation`] instead of a hang or a silently
+//! accepted frame. The same table feeds the `pallas-lint` S1 pass,
+//! which checks every `// lint: proto(STATE)` region's tag handling
+//! statically.
 
+pub mod protocol;
 pub mod tcp;
 pub mod wire;
 
@@ -44,7 +77,9 @@ use anyhow::{anyhow, Result};
 use crate::config::CommCfg;
 use crate::coordinator::comm::{CommMeter, FabricEvent, ReplicaEndpoint,
                                RoundCmd, WorkerState};
+use protocol::Dir;
 
+pub use protocol::{ProtocolMonitor, ProtocolViolation};
 pub use tcp::{TcpTransport, TcpWorkerLink};
 
 /// A fabric transport: the dispatch leg (commands to each replica) and
@@ -90,6 +125,18 @@ pub trait Transport: Send {
     fn shutdown(&mut self) -> Result<()>;
 }
 
+/// The wire tag a master-side dispatch of `cmd` would carry — the
+/// shared mapping both transports feed their [`ProtocolMonitor`]s.
+// lint: proto(RoundLoop|Restore|InFlight)
+pub(crate) fn cmd_tag(cmd: &RoundCmd) -> u8 {
+    match cmd {
+        RoundCmd::Round(_) => wire::TAG_ROUND,
+        RoundCmd::Snapshot => wire::TAG_SNAPSHOT_REQ,
+        RoundCmd::Restore(_) => wire::TAG_RESTORE,
+        RoundCmd::Stop => wire::TAG_STOP,
+    }
+}
+
 /// The default in-process backend: one MPSC command channel per
 /// replica, one shared event stream, zero-copy `Arc` payloads. All
 /// endpoints are created up front and handed out by
@@ -100,6 +147,9 @@ pub struct ChannelTransport {
     endpoints: Vec<Option<(ReplicaEndpoint, Sender<FabricEvent>)>>,
     event_rx: std::sync::mpsc::Receiver<FabricEvent>,
     meter: Arc<CommMeter>,
+    /// One protocol monitor per replica link. In-process channels have
+    /// no handshake, so every link is born established.
+    monitors: Vec<ProtocolMonitor>,
 }
 
 impl ChannelTransport {
@@ -131,6 +181,9 @@ impl ChannelTransport {
             endpoints,
             event_rx,
             meter,
+            monitors: (0..n)
+                .map(|id| ProtocolMonitor::established("master", id))
+                .collect(),
         }
     }
 }
@@ -154,6 +207,10 @@ impl Transport for ChannelTransport {
     }
 
     fn send_cmd(&mut self, replica: usize, cmd: RoundCmd) -> Result<()> {
+        // validate the dispatch against the protocol table before it
+        // leaves: an illegal command is refused with a typed
+        // [`ProtocolViolation`] instead of being put on the link
+        self.monitors[replica].observe(Dir::ToWorker, cmd_tag(&cmd))?;
         if let RoundCmd::Round(msg) = &cmd {
             // payload bytes, accounted at send time like the wire pays
             // them — whether or not the receiver is still alive
@@ -164,21 +221,136 @@ impl Transport for ChannelTransport {
             .map_err(|_| anyhow!("replica {replica} hung up"))
     }
 
+    // lint: proto(InFlight|Draining)
     fn recv_event(&mut self) -> Result<FabricEvent> {
-        self.event_rx
+        let ev = self
+            .event_rx
             .recv()
-            .map_err(|_| anyhow!("all replicas exited mid-round"))
+            .map_err(|_| anyhow!("all replicas exited mid-round"))?;
+        match &ev {
+            FabricEvent::Report(rep) => {
+                // a forged out-of-range stamp has no monitor; it is
+                // rejected by the fabric's own bookkeeping instead
+                if let Some(m) = self.monitors.get_mut(rep.replica) {
+                    m.observe(Dir::ToMaster, wire::TAG_REPORT)?;
+                }
+            }
+            FabricEvent::Exited(id) | FabricEvent::Failed(id, _) => {
+                if let Some(m) = self.monitors.get_mut(*id) {
+                    m.close();
+                }
+            }
+        }
+        Ok(ev)
     }
 
+    // lint: proto(SnapshotQuiesce)
     fn recv_snapshot(&mut self, replica: usize) -> Result<WorkerState> {
-        self.snap_rx[replica]
+        let st = self
+            .snap_rx[replica]
             .recv()
-            .map_err(|_| anyhow!("replica {replica} hung up"))
+            .map_err(|_| anyhow!("replica {replica} hung up"))?;
+        if let Some(m) = self.monitors.get_mut(replica) {
+            m.observe(Dir::ToMaster, wire::TAG_SNAPSHOT)?;
+        }
+        Ok(st)
     }
 
     fn shutdown(&mut self) -> Result<()> {
         // channels release on drop; worker threads are joined (and
         // their errors raised) by the fabric, which owns the handles
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::comm::{RoundReport, WorkerState};
+    use protocol::State;
+
+    fn violation(e: &anyhow::Error) -> &ProtocolViolation {
+        e.downcast_ref::<ProtocolViolation>()
+            .unwrap_or_else(|| panic!("not a protocol violation: {e:#}"))
+    }
+
+    /// A round dispatched before the handshake finishes is refused with
+    /// a typed violation — the pre-hello analog a TCP link would hit.
+    #[test]
+    fn round_before_hello_is_a_typed_violation() {
+        let mut m = ProtocolMonitor::handshaking("master");
+        let err = m.observe(Dir::ToWorker, wire::TAG_ROUND).unwrap_err();
+        assert_eq!(err.state, State::Hello);
+        assert_eq!(err.tag, wire::TAG_ROUND);
+        assert_eq!(err.endpoint, "master");
+        // the monitor holds its state, so the handshake can still
+        // complete on a link whose caller tolerates the refusal
+        assert_eq!(m.state(), State::Hello);
+        m.observe(Dir::ToMaster, wire::TAG_HELLO).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_HELLO_ACK).unwrap();
+        assert_eq!(m.state(), State::RoundLoop);
+    }
+
+    /// A report arriving while the link is quiesced for a snapshot is
+    /// an out-of-state frame: the master's receive leg fails with a
+    /// typed violation instead of silently accepting the report.
+    #[test]
+    fn report_during_snapshot_quiesce_is_refused() {
+        let mut t = ChannelTransport::new(1, CommCfg::off());
+        let (ep, _exit_tx) = t.take_endpoint(0).unwrap();
+        t.send_cmd(0, RoundCmd::Snapshot).unwrap();
+        // a buggy worker reports instead of snapshotting
+        ep.report(RoundReport {
+            replica: 0,
+            round: 0,
+            params: vec![0.0; 2],
+            train_loss: 0.0,
+            train_err: 0.0,
+            step_s: 0.0,
+        });
+        let err = t.recv_event().unwrap_err();
+        let v = violation(&err);
+        assert_eq!(v.state, State::SnapshotQuiesce);
+        assert_eq!(v.tag, wire::TAG_REPORT);
+        assert_eq!(v.replica, Some(0));
+    }
+
+    /// Installing a second state on a link whose restore nothing has
+    /// consumed yet is the classic double-restore bug: the second
+    /// dispatch is refused before it reaches the worker.
+    #[test]
+    fn double_restore_is_refused_before_dispatch() {
+        let mut t = ChannelTransport::new(1, CommCfg::off());
+        let (_ep, _exit_tx) = t.take_endpoint(0).unwrap();
+        t.send_cmd(0, RoundCmd::Restore(Box::new(WorkerState::default())))
+            .unwrap();
+        let err = t
+            .send_cmd(0, RoundCmd::Restore(Box::new(WorkerState::default())))
+            .unwrap_err();
+        let v = violation(&err);
+        assert_eq!(v.state, State::Restore);
+        assert_eq!(v.tag, wire::TAG_RESTORE);
+        // a round consumes the pending restore and reopens the loop
+        ep_round(&mut t);
+        assert_eq!(t.monitors[0].state(), State::InFlight);
+    }
+
+    fn ep_round(t: &mut ChannelTransport) {
+        use crate::coordinator::comm::{RoundConsts, RoundMsg};
+        t.send_cmd(
+            0,
+            RoundCmd::Round(RoundMsg {
+                round: 0,
+                xref: Arc::new(vec![0.0; 2]),
+                slab: vec![0.0; 2],
+                consts: RoundConsts {
+                    lr: 0.1,
+                    gamma_inv: 0.01,
+                    rho_inv: 1.0,
+                    eta_over_rho: 0.1,
+                },
+            }),
+        )
+        .unwrap();
     }
 }

@@ -1,0 +1,420 @@
+//! The master↔worker protocol as a machine-checked artifact.
+//!
+//! [`TRANSITIONS`] declares the whole wire protocol once: which message
+//! tags may travel in which direction from which link state, and which
+//! state the link is in afterwards. Three consumers read it, so the
+//! spec cannot drift from any of them:
+//!
+//! * the **static S1 checker** (`lint/proto.rs`) parses the table out
+//!   of this file's *source text* at lint time and checks every
+//!   `// lint: proto(STATE)` region against it — see
+//!   [`table_matches_lint_parser`](self::tests) for the no-drift pin;
+//! * the **runtime [`ProtocolMonitor`]s** on both endpoints of
+//!   `ChannelTransport` and `TcpTransport` validate every frame they
+//!   send or receive with [`legal`], turning an out-of-state frame
+//!   into a typed [`ProtocolViolation`] instead of a hang or a
+//!   silently corrupted trajectory;
+//! * the **state diagram** in the `transport` module docs is rendered
+//!   by [`render_state_diagram`] and pinned against those docs by a
+//!   unit test.
+//!
+//! The state machine describes ONE link (master↔one worker); the
+//! master holds one monitor per replica. `Restore` means "a full
+//! worker state was just installed and nothing has consumed it yet" —
+//! a second restore before any dispatch is the classic double-restore
+//! bug and is deliberately absent from the table.
+
+use std::fmt;
+
+use super::wire;
+
+/// Link state of one master↔worker connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum State {
+    /// TCP handshake: the worker's hello is in flight, no ack yet.
+    /// (The in-process channel transport is born past this state.)
+    Hello,
+    /// Quiescent between rounds: nothing in flight on this link.
+    RoundLoop,
+    /// A round was dispatched; the worker owes a report.
+    InFlight,
+    /// A snapshot was requested at a quiescent point; the worker owes
+    /// a `WorkerState` frame and may receive nothing else meanwhile.
+    SnapshotQuiesce,
+    /// A restore was just installed; the next frame must consume it
+    /// (dispatch/snapshot/stop) — a second restore here is illegal.
+    Restore,
+    /// Stop was sent; only an already-in-flight report may still land.
+    Draining,
+    /// The link is gone (EOF, failure, or clean drain).
+    Closed,
+}
+
+/// Direction a frame travels on the link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// master → worker
+    ToWorker,
+    /// worker → master
+    ToMaster,
+}
+
+/// Every state, for table-coverage checks and doc rendering.
+pub const STATES: &[State] = &[
+    State::Hello,
+    State::RoundLoop,
+    State::InFlight,
+    State::SnapshotQuiesce,
+    State::Restore,
+    State::Draining,
+    State::Closed,
+];
+
+/// The protocol table: every legal `(state, direction, tag) -> next`.
+/// Anything not listed is a protocol violation.
+///
+/// NOTE: `lint/proto.rs` parses these rows token-by-token from this
+/// file's source. Keep every row in the literal
+/// `(State::X, Dir::Y, wire::TAG_Z, State::W)` shape — no variables,
+/// no computed entries.
+pub const TRANSITIONS: &[(State, Dir, u8, State)] = &[
+    (State::Hello, Dir::ToMaster, wire::TAG_HELLO, State::Hello),
+    (State::Hello, Dir::ToWorker, wire::TAG_HELLO_ACK, State::RoundLoop),
+    (State::RoundLoop, Dir::ToWorker, wire::TAG_ROUND, State::InFlight),
+    (
+        State::RoundLoop,
+        Dir::ToWorker,
+        wire::TAG_SNAPSHOT_REQ,
+        State::SnapshotQuiesce,
+    ),
+    (State::RoundLoop, Dir::ToWorker, wire::TAG_RESTORE, State::Restore),
+    (State::RoundLoop, Dir::ToWorker, wire::TAG_STOP, State::Draining),
+    (State::InFlight, Dir::ToMaster, wire::TAG_REPORT, State::RoundLoop),
+    (State::InFlight, Dir::ToWorker, wire::TAG_STOP, State::Draining),
+    (
+        State::SnapshotQuiesce,
+        Dir::ToMaster,
+        wire::TAG_SNAPSHOT,
+        State::RoundLoop,
+    ),
+    (State::Restore, Dir::ToWorker, wire::TAG_ROUND, State::InFlight),
+    (
+        State::Restore,
+        Dir::ToWorker,
+        wire::TAG_SNAPSHOT_REQ,
+        State::SnapshotQuiesce,
+    ),
+    (State::Restore, Dir::ToWorker, wire::TAG_STOP, State::Draining),
+    (State::Draining, Dir::ToMaster, wire::TAG_REPORT, State::Draining),
+];
+
+impl State {
+    /// The variant's source name — what the lint parser sees in the
+    /// table rows and what `proto(STATE)` annotations use.
+    pub const fn name(self) -> &'static str {
+        match self {
+            State::Hello => "Hello",
+            State::RoundLoop => "RoundLoop",
+            State::InFlight => "InFlight",
+            State::SnapshotQuiesce => "SnapshotQuiesce",
+            State::Restore => "Restore",
+            State::Draining => "Draining",
+            State::Closed => "Closed",
+        }
+    }
+}
+
+impl Dir {
+    pub const fn name(self) -> &'static str {
+        match self {
+            Dir::ToWorker => "ToWorker",
+            Dir::ToMaster => "ToMaster",
+        }
+    }
+
+    /// Compact arrow label for diagrams and error messages.
+    pub const fn arrow(self) -> &'static str {
+        match self {
+            Dir::ToWorker => "m->w",
+            Dir::ToMaster => "w->m",
+        }
+    }
+}
+
+/// Source-level name of a wire tag (the `wire::TAG_*` constant).
+pub const fn tag_name(tag: u8) -> &'static str {
+    match tag {
+        wire::TAG_HELLO => "TAG_HELLO",
+        wire::TAG_HELLO_ACK => "TAG_HELLO_ACK",
+        wire::TAG_ROUND => "TAG_ROUND",
+        wire::TAG_SNAPSHOT_REQ => "TAG_SNAPSHOT_REQ",
+        wire::TAG_RESTORE => "TAG_RESTORE",
+        wire::TAG_STOP => "TAG_STOP",
+        wire::TAG_REPORT => "TAG_REPORT",
+        wire::TAG_SNAPSHOT => "TAG_SNAPSHOT",
+        _ => "TAG_UNKNOWN",
+    }
+}
+
+/// Look up `(state, dir, tag)` in [`TRANSITIONS`]: the next state if
+/// the frame is legal, `None` if the protocol forbids it.
+pub fn legal(state: State, dir: Dir, tag: u8) -> Option<State> {
+    TRANSITIONS
+        .iter()
+        .find(|&&(s, d, t, _)| s == state && d == dir && t == tag)
+        .map(|&(_, _, _, next)| next)
+}
+
+/// Render the table as the fixed-format state diagram embedded in the
+/// `transport` module docs (one line per transition, table order).
+pub fn render_state_diagram() -> String {
+    let mut out = String::new();
+    for &(from, dir, tag, to) in TRANSITIONS {
+        out.push_str(&format!(
+            "{} --[{} {}]--> {}\n",
+            from.name(),
+            tag_name(tag).trim_start_matches("TAG_"),
+            dir.arrow(),
+            to.name(),
+        ));
+    }
+    out
+}
+
+/// A frame observed outside the protocol table: the typed error the
+/// monitors raise (and tests downcast to) instead of letting the link
+/// hang or silently accept an out-of-state frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProtocolViolation {
+    /// Which endpoint observed it ("master" / "worker").
+    pub endpoint: &'static str,
+    /// Replica slot of the link, when the endpoint knows it.
+    pub replica: Option<usize>,
+    /// Link state at the time of the frame.
+    pub state: State,
+    pub dir: Dir,
+    pub tag: u8,
+}
+
+impl fmt::Display for ProtocolViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "protocol violation at {}{}: {} ({}) is illegal in state \
+             {}",
+            self.endpoint,
+            match self.replica {
+                Some(r) => format!(" (replica {r})"),
+                None => String::new(),
+            },
+            tag_name(self.tag).trim_start_matches("TAG_"),
+            self.dir.arrow(),
+            self.state.name(),
+        )
+    }
+}
+
+impl std::error::Error for ProtocolViolation {}
+
+/// Runtime oracle over [`TRANSITIONS`]: one per link endpoint, fed
+/// every frame the endpoint sends or receives. O(|table|) per frame —
+/// a dozen tuple compares, noise next to a P-sized memcpy.
+#[derive(Clone, Debug)]
+pub struct ProtocolMonitor {
+    endpoint: &'static str,
+    replica: Option<usize>,
+    state: State,
+}
+
+impl ProtocolMonitor {
+    /// Monitor for a link that still owes the hello handshake (TCP).
+    pub fn handshaking(endpoint: &'static str) -> Self {
+        ProtocolMonitor {
+            endpoint,
+            replica: None,
+            state: State::Hello,
+        }
+    }
+
+    /// Monitor for a link born established (the in-process channel
+    /// transport has no handshake: construction is the handshake).
+    pub fn established(endpoint: &'static str, replica: usize) -> Self {
+        ProtocolMonitor {
+            endpoint,
+            replica: Some(replica),
+            state: State::RoundLoop,
+        }
+    }
+
+    /// Stamp the replica slot once the handshake assigns it.
+    pub fn set_replica(&mut self, replica: usize) {
+        self.replica = Some(replica);
+    }
+
+    pub fn state(&self) -> State {
+        self.state
+    }
+
+    /// Validate one frame against the table and advance. On violation
+    /// the state is left unchanged so the caller decides whether the
+    /// link survives (send-side callers refuse to emit the frame;
+    /// receive-side callers fail the link).
+    pub fn observe(&mut self, dir: Dir, tag: u8)
+                   -> Result<(), ProtocolViolation> {
+        match legal(self.state, dir, tag) {
+            Some(next) => {
+                self.state = next;
+                Ok(())
+            }
+            None => Err(ProtocolViolation {
+                endpoint: self.endpoint,
+                replica: self.replica,
+                state: self.state,
+                dir,
+                tag,
+            }),
+        }
+    }
+
+    /// The link is gone (EOF / failure / drained): nothing further is
+    /// legal on it.
+    pub fn close(&mut self) {
+        self.state = State::Closed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_live_state_appears_and_closed_never_does() {
+        for &s in STATES {
+            let present = TRANSITIONS
+                .iter()
+                .any(|&(from, _, _, to)| from == s || to == s);
+            if s == State::Closed {
+                assert!(!present, "Closed must have no table rows");
+            } else {
+                assert!(present, "{} missing from the table", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn table_has_no_duplicate_or_ambiguous_rows() {
+        for (i, &(s, d, t, _)) in TRANSITIONS.iter().enumerate() {
+            let dup = TRANSITIONS
+                .iter()
+                .skip(i + 1)
+                .any(|&(s2, d2, t2, _)| s == s2 && d == d2 && t == t2);
+            assert!(
+                !dup,
+                "duplicate row for ({}, {}, {})",
+                s.name(),
+                d.name(),
+                tag_name(t)
+            );
+        }
+    }
+
+    #[test]
+    fn the_three_canonical_illegal_sequences_are_absent() {
+        // round frame before hello
+        assert_eq!(legal(State::Hello, Dir::ToWorker, wire::TAG_ROUND),
+                   None);
+        // report during snapshot quiesce
+        assert_eq!(
+            legal(State::SnapshotQuiesce, Dir::ToMaster, wire::TAG_REPORT),
+            None
+        );
+        // double restore
+        assert_eq!(
+            legal(State::Restore, Dir::ToWorker, wire::TAG_RESTORE),
+            None
+        );
+    }
+
+    #[test]
+    fn monitor_walks_a_full_lifecycle_clean() {
+        let mut m = ProtocolMonitor::handshaking("master");
+        m.observe(Dir::ToMaster, wire::TAG_HELLO).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_HELLO_ACK).unwrap();
+        m.set_replica(0);
+        for _ in 0..3 {
+            m.observe(Dir::ToWorker, wire::TAG_ROUND).unwrap();
+            m.observe(Dir::ToMaster, wire::TAG_REPORT).unwrap();
+        }
+        m.observe(Dir::ToWorker, wire::TAG_SNAPSHOT_REQ).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_SNAPSHOT).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_RESTORE).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_ROUND).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_STOP).unwrap();
+        // the in-flight report still drains after Stop
+        m.observe(Dir::ToMaster, wire::TAG_REPORT).unwrap();
+        assert_eq!(m.state(), State::Draining);
+        m.close();
+        assert_eq!(m.state(), State::Closed);
+    }
+
+    #[test]
+    fn monitor_raises_typed_violations_and_keeps_state() {
+        let mut m = ProtocolMonitor::handshaking("master");
+        let v = m.observe(Dir::ToWorker, wire::TAG_ROUND).unwrap_err();
+        assert_eq!(v.state, State::Hello);
+        assert_eq!(v.tag, wire::TAG_ROUND);
+        assert_eq!(v.endpoint, "master");
+        assert!(v.to_string().contains("illegal in state Hello"),
+                "{v}");
+        // state unchanged: the handshake can still complete
+        m.observe(Dir::ToMaster, wire::TAG_HELLO).unwrap();
+        assert_eq!(m.state(), State::Hello);
+    }
+
+    /// The typed error must survive an anyhow boundary: that is what
+    /// the transport tests downcast through.
+    #[test]
+    fn violation_downcasts_through_anyhow() {
+        let mut m = ProtocolMonitor::established("worker", 1);
+        let v = m.observe(Dir::ToMaster, wire::TAG_SNAPSHOT).unwrap_err();
+        let any: anyhow::Error = v.clone().into();
+        let back = any
+            .downcast_ref::<ProtocolViolation>()
+            .expect("downcast ProtocolViolation");
+        assert_eq!(*back, v);
+        assert_eq!(back.replica, Some(1));
+    }
+
+    /// No-drift pin: the lint-side parser reads this file's SOURCE and
+    /// must reconstruct exactly the compiled table — same rows, same
+    /// order, same names.
+    #[test]
+    fn table_matches_lint_parser() {
+        let table = crate::lint::proto::parse_table(
+            include_str!("protocol.rs"),
+        )
+        .expect("parse TRANSITIONS from source");
+        assert_eq!(table.rows.len(), TRANSITIONS.len());
+        for (row, &(s, d, t, to)) in
+            table.rows.iter().zip(TRANSITIONS.iter())
+        {
+            assert_eq!(row.from, s.name());
+            assert_eq!(row.dir, d.name());
+            assert_eq!(row.tag, tag_name(t));
+            assert_eq!(row.to, to.name());
+        }
+    }
+
+    /// Docs pin: every diagram line rendered from the table appears
+    /// verbatim in the transport module docs (`//! ` prefixed).
+    #[test]
+    fn diagram_matches_transport_module_docs() {
+        let docs = include_str!("mod.rs");
+        for line in render_state_diagram().lines() {
+            assert!(
+                docs.contains(&format!("//! {line}")),
+                "transport/mod.rs docs are missing diagram line: {line}"
+            );
+        }
+    }
+}

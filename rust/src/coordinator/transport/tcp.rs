@@ -34,7 +34,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::comm::{CommMeter, FabricEvent, ReplicaEndpoint,
                                RoundCmd, RoundMsg, RoundReport, WorkerCmd,
                                WorkerState};
-use crate::coordinator::transport::{wire, Transport};
+use crate::coordinator::transport::protocol::{Dir, ProtocolMonitor};
+use crate::coordinator::transport::{cmd_tag, wire, Transport};
 use crate::info;
 
 /// Master-side TCP transport: `n` accepted worker connections, one
@@ -45,6 +46,9 @@ pub struct TcpTransport {
     event_rx: Receiver<FabricEvent>,
     readers: Vec<JoinHandle<()>>,
     meter: Arc<CommMeter>,
+    /// One master-side protocol monitor per accepted link, advanced
+    /// through the handshake by [`TcpTransport::listen_timeout`].
+    monitors: Vec<ProtocolMonitor>,
 }
 
 /// How long [`TcpTransport::listen`] waits for all `n` workers to
@@ -85,6 +89,7 @@ impl TcpTransport {
         let mut streams = Vec::with_capacity(n);
         let mut snap_rxs = Vec::with_capacity(n);
         let mut readers = Vec::with_capacity(n);
+        let mut monitors = Vec::with_capacity(n);
         for id in 0..n {
             let (mut stream, peer) =
                 accept_deadline(&listener, deadline, id, n)?;
@@ -98,22 +103,7 @@ impl TcpTransport {
                 .saturating_duration_since(Instant::now())
                 .max(Duration::from_millis(1));
             stream.set_read_timeout(Some(remaining)).ok();
-            let hello = wire::read_frame(&mut stream)
-                .with_context(|| format!("handshake with {peer}"))?
-                .ok_or_else(|| {
-                    anyhow!("{peer} hung up during the handshake")
-                })?;
-            if hello.tag != wire::TAG_HELLO {
-                bail!("{peer} sent frame tag {} before hello", hello.tag);
-            }
-            wire::decode_hello(&hello.payload)
-                .with_context(|| format!("handshake with {peer}"))?;
-            wire::write_frame(
-                &mut stream,
-                wire::TAG_HELLO_ACK,
-                &wire::encode_hello_ack(id, n)?,
-            )
-            .with_context(|| format!("acking {peer}"))?;
+            let monitor = handshake_accept(&mut stream, peer, id, n)?;
             // back to a blocking socket before the reader takes over
             stream.set_read_timeout(None).ok();
             info!("fabric: worker {id}/{n} connected from {peer}");
@@ -128,6 +118,7 @@ impl TcpTransport {
             }));
             streams.push(stream);
             snap_rxs.push(snap_rx);
+            monitors.push(monitor);
         }
         Ok(TcpTransport {
             streams,
@@ -135,8 +126,44 @@ impl TcpTransport {
             event_rx,
             readers,
             meter,
+            monitors,
         })
     }
+}
+
+/// Hello handshake on a freshly accepted connection: the worker's
+/// opening frame is validated against the protocol table — a round (or
+/// anything else) before hello fails `listen` with a typed
+/// [`crate::coordinator::transport::ProtocolViolation`] — then the
+/// peer is assigned slot `id` and the link's monitor comes back parked
+/// in the round loop.
+// lint: proto(Hello)
+fn handshake_accept(
+    stream: &mut TcpStream,
+    peer: std::net::SocketAddr,
+    id: usize,
+    n: usize,
+) -> Result<ProtocolMonitor> {
+    let mut monitor = ProtocolMonitor::handshaking("master");
+    let hello = wire::read_frame(stream)
+        .with_context(|| format!("handshake with {peer}"))?
+        .ok_or_else(|| {
+            anyhow!("{peer} hung up during the handshake")
+        })?;
+    monitor
+        .observe(Dir::ToMaster, hello.tag)
+        .with_context(|| format!("handshake with {peer}"))?;
+    wire::decode_hello(&hello.payload)
+        .with_context(|| format!("handshake with {peer}"))?;
+    monitor.observe(Dir::ToWorker, wire::TAG_HELLO_ACK)?;
+    wire::write_frame(
+        stream,
+        wire::TAG_HELLO_ACK,
+        &wire::encode_hello_ack(id, n)?,
+    )
+    .with_context(|| format!("acking {peer}"))?;
+    monitor.set_replica(id);
+    Ok(monitor)
 }
 
 /// Accept one connection before `deadline`, polling the non-blocking
@@ -178,6 +205,7 @@ fn reader_loop(
 ) {
     // lint: panic-free -- a reader panic would silence this replica's
     // Exited/Failed events and hang the master's barrier forever
+    // lint: proto(InFlight|SnapshotQuiesce|Draining)
     loop {
         match wire::read_frame(&mut stream) {
             Ok(None) => {
@@ -259,7 +287,12 @@ impl Transport for TcpTransport {
     /// dispatch would wait forever on an event that cannot come.
     /// Shutting the socket turns the failure into the reader's
     /// `Exited` event, which the barrier surfaces as an error.
+    // lint: proto(RoundLoop|Restore|InFlight)
     fn send_cmd(&mut self, replica: usize, cmd: RoundCmd) -> Result<()> {
+        // an out-of-state dispatch is refused with a typed violation
+        // before any bytes hit the wire; the socket stays healthy (this
+        // is the master's bug, not the link's)
+        self.monitors[replica].observe(Dir::ToWorker, cmd_tag(&cmd))?;
         let stop = matches!(cmd, RoundCmd::Stop);
         let res = {
             let stream = &mut self.streams[replica];
@@ -305,16 +338,39 @@ impl Transport for TcpTransport {
         res
     }
 
+    // lint: proto(InFlight|Draining)
     fn recv_event(&mut self) -> Result<FabricEvent> {
-        self.event_rx
+        let ev = self
+            .event_rx
             .recv()
-            .map_err(|_| anyhow!("all fabric readers exited"))
+            .map_err(|_| anyhow!("all fabric readers exited"))?;
+        match &ev {
+            FabricEvent::Report(rep) => {
+                // the reader already pinned rep.replica to its
+                // connection; out-of-range stamps never get here
+                if let Some(m) = self.monitors.get_mut(rep.replica) {
+                    m.observe(Dir::ToMaster, wire::TAG_REPORT)?;
+                }
+            }
+            FabricEvent::Exited(id) | FabricEvent::Failed(id, _) => {
+                if let Some(m) = self.monitors.get_mut(*id) {
+                    m.close();
+                }
+            }
+        }
+        Ok(ev)
     }
 
+    // lint: proto(SnapshotQuiesce)
     fn recv_snapshot(&mut self, replica: usize) -> Result<WorkerState> {
-        self.snap_rx[replica]
+        let st = self
+            .snap_rx[replica]
             .recv()
-            .map_err(|_| anyhow!("replica {replica} hung up"))
+            .map_err(|_| anyhow!("replica {replica} hung up"))?;
+        if let Some(m) = self.monitors.get_mut(replica) {
+            m.observe(Dir::ToMaster, wire::TAG_SNAPSHOT)?;
+        }
+        Ok(st)
     }
 
     /// Join the reader threads. Each exits on its connection's EOF,
@@ -345,6 +401,10 @@ pub struct TcpWorkerLink {
     /// the steady state moves zero heap allocations per round on the
     /// worker side too.
     xref: Arc<Vec<f32>>,
+    /// Worker-side protocol oracle, advanced through the handshake by
+    /// [`TcpWorkerLink::connect`] and then fed every frame this link
+    /// sends or receives.
+    monitor: ProtocolMonitor,
 }
 
 impl TcpWorkerLink {
@@ -369,29 +429,39 @@ impl TcpWorkerLink {
             }
         };
         stream.set_nodelay(true).ok();
-        wire::write_frame(&mut stream, wire::TAG_HELLO,
-                          &wire::encode_hello())
-            .context("sending hello")?;
-        let ack = wire::read_frame(&mut stream)
-            .context("handshake")?
-            .ok_or_else(|| anyhow!("master hung up during handshake"))?;
-        if ack.tag != wire::TAG_HELLO_ACK {
-            bail!("master sent frame tag {} before hello-ack", ack.tag);
+        // lint: proto(Hello)
+        {
+            let mut monitor = ProtocolMonitor::handshaking("worker");
+            monitor.observe(Dir::ToMaster, wire::TAG_HELLO)?;
+            wire::write_frame(&mut stream, wire::TAG_HELLO,
+                              &wire::encode_hello())
+                .context("sending hello")?;
+            let ack = wire::read_frame(&mut stream)
+                .context("handshake")?
+                .ok_or_else(|| {
+                    anyhow!("master hung up during handshake")
+                })?;
+            // anything but the hello-ack (a round, a restore) is an
+            // out-of-state frame: fail with the typed violation
+            monitor.observe(Dir::ToWorker, ack.tag)
+                .context("handshake")?;
+            let (replica, workers) = wire::decode_hello_ack(&ack.payload)?;
+            if expect_workers != 0 && workers != expect_workers {
+                bail!(
+                    "master runs a {workers}-worker fabric, this process \
+                     is configured for {expect_workers}"
+                );
+            }
+            monitor.set_replica(replica);
+            Ok(TcpWorkerLink {
+                stream,
+                replica,
+                workers,
+                slab: None,
+                xref: Arc::new(Vec::new()),
+                monitor,
+            })
         }
-        let (replica, workers) = wire::decode_hello_ack(&ack.payload)?;
-        if expect_workers != 0 && workers != expect_workers {
-            bail!(
-                "master runs a {workers}-worker fabric, this process is \
-                 configured for {expect_workers}"
-            );
-        }
-        Ok(TcpWorkerLink {
-            stream,
-            replica,
-            workers,
-            slab: None,
-            xref: Arc::new(Vec::new()),
-        })
     }
 
     /// The replica slot the master assigned in the handshake.
@@ -406,12 +476,18 @@ impl TcpWorkerLink {
 
     /// Next command off the wire. `Ok(None)` on `Stop` or a master
     /// hang-up (the worker drains out, like a closed command channel).
+    // lint: proto(RoundLoop|Restore|InFlight)
+    // lint: pooled
     pub(crate) fn recv_cmd(&mut self) -> Result<Option<WorkerCmd>> {
         let Some(frame) = wire::read_frame(&mut self.stream)
             .context("receiving command from master")?
         else {
+            self.monitor.close();
             return Ok(None);
         };
+        // validate the raw tag before touching the payload: an
+        // out-of-state frame is a typed error, not a decode attempt
+        self.monitor.observe(Dir::ToWorker, frame.tag)?;
         match frame.tag {
             // lint: hot-path -- per-round decode into recycled buffers
             wire::TAG_ROUND => {
@@ -442,7 +518,11 @@ impl TcpWorkerLink {
     /// Ship a round report; returns the wire bytes written (for the
     /// worker-local meter) and recycles the payload as the next round's
     /// slab.
+    // lint: proto(InFlight|Draining)
     pub(crate) fn report(&mut self, rep: RoundReport) -> Result<usize> {
+        // refuse to emit an out-of-state report: the typed violation
+        // propagates to the endpoint, which poisons the link (fail-stop)
+        self.monitor.observe(Dir::ToMaster, wire::TAG_REPORT)?;
         let payload = wire::encode_report(&rep)?;
         wire::write_frame(&mut self.stream, wire::TAG_REPORT, &payload)
             .context("sending report to master")?;
@@ -450,7 +530,9 @@ impl TcpWorkerLink {
         Ok(wire::frame_bytes(payload.len()))
     }
 
+    // lint: proto(SnapshotQuiesce)
     pub(crate) fn send_snapshot(&mut self, st: &WorkerState) -> Result<()> {
+        self.monitor.observe(Dir::ToMaster, wire::TAG_SNAPSHOT)?;
         let payload = wire::encode_worker_state(st)?;
         wire::write_frame(&mut self.stream, wire::TAG_SNAPSHOT, &payload)
             .context("sending snapshot to master")

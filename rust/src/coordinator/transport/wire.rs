@@ -19,6 +19,12 @@
 //! parameter vector round-trips the wire bit-exactly — the property
 //! the cross-transport determinism suite pins.
 //!
+//! This module owns the *encoding* only. Which tag may legally appear
+//! when, per direction, is declared once as the state-machine table in
+//! [`super::protocol`] — the single source of truth consumed by the
+//! runtime [`super::protocol::ProtocolMonitor`]s, the `pallas-lint` S1
+//! pass, and the state diagram in the transport module docs.
+//!
 //! [`checkpoint`]: crate::coordinator::checkpoint
 
 use std::io::{Cursor, Read, Write};

@@ -1,7 +1,7 @@
 //! The `// lint:` annotation grammar and the token-region machinery
 //! built on it.
 //!
-//! Three directives:
+//! Six directives:
 //!
 //! * `// lint: hot-path [-- note]` — marks the next `{ ... }` block as
 //!   a steady-state region: rule **A1** forbids allocation inside it.
@@ -9,24 +9,42 @@
 //!   region where rule **P1** forbids `unwrap`/`expect`/`panic!` and
 //!   slice indexing (a panic there poisons the shared fabric event
 //!   stream instead of surfacing `Exited`/`Failed`).
+//! * `// lint: proto(STATE[|STATE...]) [-- note]` — marks the next
+//!   block as a protocol region: rule **S1** checks every wire tag the
+//!   block mentions (and every `match` on a frame tag) against the
+//!   `transport/protocol.rs` state-machine table for those states.
+//! * `// lint: pooled [-- note]` — marks the next block as a region
+//!   where rule **R1** requires every slab taken from a pool to be
+//!   recycled on every exit path, including `?` and early returns.
+//! * `// lint: deterministic [-- note]` — marks the next block as a
+//!   region where rule **D3** forbids wall-clock and thread-identity
+//!   reads (`Instant::now`, `SystemTime`, `thread::current().id()`).
 //! * `// lint: allow(RULE) -- reason` — suppresses RULE on the
 //!   directive's line and the next code line. The reason is
 //!   **mandatory**: an unexplained suppression is itself a violation.
 //!
 //! Anything else after `// lint:` is an error — the directive channel
 //! stays small enough to audit by eye.
+//!
+//! Besides the masks, [`Annotated`] exposes the per-file
+//! function/region graph ([`Annotated::fn_spans`], the marked-region
+//! span lists and the brace-matching table) that the function-level
+//! rules S1 and R1 walk.
 
 use crate::lint::report::Diagnostic;
 use crate::lint::scanner::{Directive, Scan, Tok, Token};
 
 /// Rule names the annotation grammar accepts in `allow(...)`.
-pub const RULES: &[&str] = &["D1", "D2", "A1", "P1", "W1"];
+pub const RULES: &[&str] = &["D1", "D2", "A1", "P1", "W1", "S1", "R1", "D3"];
 
 /// A parsed directive.
 #[derive(Clone, Debug, PartialEq)]
 pub enum DirectiveKind {
     HotPath,
     PanicFree,
+    Proto { states: Vec<String> },
+    Pooled,
+    Deterministic,
     Allow { rule: String },
 }
 
@@ -55,22 +73,76 @@ pub fn parse_directive(text: &str) -> Result<DirectiveKind, String> {
                  `// lint: allow({rule}) -- why this is sound`"
             )),
         }
+    } else if let Some(rest) = head.strip_prefix("proto(") {
+        let Some(list) = rest.strip_suffix(')') else {
+            return Err(format!("unclosed proto(...) in {text:?}"));
+        };
+        let states: Vec<String> = list
+            .split('|')
+            .map(|s| s.trim().to_string())
+            .collect();
+        let ok = !states.is_empty()
+            && states.iter().all(|s| {
+                !s.is_empty()
+                    && s.chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_')
+            });
+        if !ok {
+            return Err(format!(
+                "proto(...) wants `|`-separated state names, got \
+                 {list:?}"
+            ));
+        }
+        Ok(DirectiveKind::Proto { states })
     } else {
         match head {
             "hot-path" => Ok(DirectiveKind::HotPath),
             "panic-free" => Ok(DirectiveKind::PanicFree),
+            "pooled" => Ok(DirectiveKind::Pooled),
+            "deterministic" => Ok(DirectiveKind::Deterministic),
             other => Err(format!(
                 "unknown lint directive {other:?} \
-                 (hot-path, panic-free, allow(RULE) -- reason)"
+                 (hot-path, panic-free, proto(STATE|...), pooled, \
+                 deterministic, allow(RULE) -- reason)"
             )),
         }
     }
+}
+
+/// A `proto(...)`-marked token span: the states the region may sit in
+/// and the `{`/`}` token indices that bound it.
+#[derive(Clone, Debug)]
+pub struct ProtoRegion {
+    pub states: Vec<String>,
+    pub open: usize,
+    pub close: usize,
+    pub line: u32,
+}
+
+/// A `pooled`-marked token span.
+#[derive(Clone, Debug)]
+pub struct PooledRegion {
+    pub open: usize,
+    pub close: usize,
+    pub line: u32,
+}
+
+/// One function body in the per-file function graph: `fn name`'s `{`
+/// and `}` token indices. Trait-method declarations without a body are
+/// not listed.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub open: usize,
+    pub close: usize,
 }
 
 /// Everything rules need besides the raw tokens: brace matching, the
 /// `#[cfg(test)] mod` mask, marked regions and the allow table.
 pub struct Annotated<'a> {
     pub tokens: &'a [Token],
+    /// Brace pairing: `matching[i] = Some(j)` for `{`/`}` tokens.
+    pub matching: Vec<Option<usize>>,
     /// `in_test[i]` — token i sits inside a `#[cfg(test)] mod` block.
     pub in_test: Vec<bool>,
     /// `hot[i]` — token i sits inside a `// lint: hot-path` block.
@@ -78,6 +150,13 @@ pub struct Annotated<'a> {
     /// `panic_free[i]` — token i sits inside a `// lint: panic-free`
     /// block.
     pub panic_free: Vec<bool>,
+    /// `deterministic[i]` — token i sits inside a
+    /// `// lint: deterministic` block.
+    pub deterministic: Vec<bool>,
+    /// `proto(...)` regions, in directive order.
+    pub proto_regions: Vec<ProtoRegion>,
+    /// `pooled` regions, in directive order.
+    pub pooled_regions: Vec<PooledRegion>,
     /// (rule, line) pairs with an active `allow`.
     allows: Vec<(String, u32)>,
     /// Number of `allow` directives (each expands to two `allows`
@@ -99,6 +178,69 @@ impl<'a> Annotated<'a> {
     pub fn allow_count(&self) -> usize {
         self.allow_directives
     }
+
+    /// The per-file function graph: every `fn name ... { ... }` body,
+    /// in source order (nested fns included — each is its own node).
+    pub fn fn_spans(&self) -> Vec<FnSpan> {
+        let mut out = Vec::new();
+        let toks = self.tokens;
+        for i in 0..toks.len() {
+            if !toks[i].is_ident("fn") {
+                continue;
+            }
+            let Some(name_tok) = toks.get(i + 1) else {
+                continue;
+            };
+            if name_tok.kind != Tok::Ident {
+                continue;
+            }
+            // the body `{` is the first brace before any top-level `;`
+            // (a `;` first means a bodiless trait/extern declaration;
+            // `;` inside `(..)`/`[..]` — e.g. `[u8; 4]` — doesn't count)
+            let mut j = i + 2;
+            let mut depth = 0i32;
+            let open = loop {
+                match toks.get(j) {
+                    Some(t) if t.is_punct('(') || t.is_punct('[') => {
+                        depth += 1;
+                        j += 1;
+                    }
+                    Some(t) if t.is_punct(')') || t.is_punct(']') => {
+                        depth -= 1;
+                        j += 1;
+                    }
+                    Some(t) if t.is_punct('{') && depth == 0 => {
+                        break Some(j)
+                    }
+                    Some(t) if t.is_punct(';') && depth == 0 => {
+                        break None
+                    }
+                    Some(_) => j += 1,
+                    None => break None,
+                }
+            };
+            if let Some(open) = open {
+                if let Some(Some(close)) = self.matching.get(open) {
+                    out.push(FnSpan {
+                        name: name_tok.text.clone(),
+                        open,
+                        close: *close,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Name of the function whose body contains token `i`, preferring
+    /// the innermost enclosing `fn`.
+    pub fn enclosing_fn_name(&self, i: usize) -> Option<String> {
+        self.fn_spans()
+            .into_iter()
+            .filter(|f| f.open <= i && i <= f.close)
+            .min_by_key(|f| f.close - f.open)
+            .map(|f| f.name)
+    }
 }
 
 /// Build the [`Annotated`] view of a scan.
@@ -110,6 +252,10 @@ pub fn annotate<'a>(scan: &'a Scan) -> Annotated<'a> {
         in_test: test_mask(tokens, &matching),
         hot: vec![false; tokens.len()],
         panic_free: vec![false; tokens.len()],
+        deterministic: vec![false; tokens.len()],
+        proto_regions: Vec::new(),
+        pooled_regions: Vec::new(),
+        matching,
         allows: Vec::new(),
         allow_directives: 0,
         errors: Vec::new(),
@@ -117,12 +263,44 @@ pub fn annotate<'a>(scan: &'a Scan) -> Annotated<'a> {
     for d in &scan.directives {
         match parse_directive(&d.text) {
             Ok(DirectiveKind::HotPath) => {
-                mark_next_block(tokens, &matching, d, &mut a.hot)
+                mark_next_block(tokens, &a.matching, d, &mut a.hot)
+                    .map(|_| ())
                     .unwrap_or_else(|e| a.errors.push((d.line, e)));
             }
             Ok(DirectiveKind::PanicFree) => {
-                mark_next_block(tokens, &matching, d, &mut a.panic_free)
+                mark_next_block(tokens, &a.matching, d, &mut a.panic_free)
+                    .map(|_| ())
                     .unwrap_or_else(|e| a.errors.push((d.line, e)));
+            }
+            Ok(DirectiveKind::Deterministic) => {
+                mark_next_block(tokens, &a.matching, d, &mut a.deterministic)
+                    .map(|_| ())
+                    .unwrap_or_else(|e| a.errors.push((d.line, e)));
+            }
+            Ok(DirectiveKind::Proto { states }) => {
+                let mut scratch = vec![false; tokens.len()];
+                match mark_next_block(tokens, &a.matching, d, &mut scratch)
+                {
+                    Ok((open, close)) => a.proto_regions.push(ProtoRegion {
+                        states,
+                        open,
+                        close,
+                        line: d.line,
+                    }),
+                    Err(e) => a.errors.push((d.line, e)),
+                }
+            }
+            Ok(DirectiveKind::Pooled) => {
+                let mut scratch = vec![false; tokens.len()];
+                match mark_next_block(tokens, &a.matching, d, &mut scratch)
+                {
+                    Ok((open, close)) => a.pooled_regions.push(PooledRegion {
+                        open,
+                        close,
+                        line: d.line,
+                    }),
+                    Err(e) => a.errors.push((d.line, e)),
+                }
             }
             Ok(DirectiveKind::Allow { rule }) => {
                 // the directive's own line plus the next code line, so
@@ -207,13 +385,13 @@ fn is_cfg_test_at(tokens: &[Token], i: usize) -> bool {
 }
 
 /// Mark the block opened by the first `{` at or after the directive's
-/// line.
+/// line; returns the `(open, close)` token span.
 fn mark_next_block(
     tokens: &[Token],
     matching: &[Option<usize>],
     d: &Directive,
     mask: &mut [bool],
-) -> Result<(), String> {
+) -> Result<(usize, usize), String> {
     let open = tokens
         .iter()
         .position(|t| t.is_punct('{') && t.line >= d.line)
@@ -225,7 +403,7 @@ fn mark_next_block(
     for slot in &mut mask[open..=close] {
         *slot = true;
     }
-    Ok(())
+    Ok((open, close))
 }
 
 /// Turn this file's grammar errors into diagnostics.
@@ -344,5 +522,108 @@ let c = 3;
         let a = annotate(&a_scan);
         assert_eq!(a.errors.len(), 1);
         assert!(a.errors[0].1.contains("unknown lint directive"));
+    }
+
+    #[test]
+    fn proto_and_pooled_directives_carry_region_spans() {
+        let src = "\
+fn handshake() {
+    // lint: proto(Hello|RoundLoop) -- connect path
+    {
+        observe();
+    }
+    // lint: pooled
+    {
+        take();
+    }
+}
+";
+        let s = scan(src);
+        let a = annotate(&s);
+        assert!(a.errors.is_empty(), "{:?}", a.errors);
+        assert_eq!(a.proto_regions.len(), 1);
+        let pr = &a.proto_regions[0];
+        assert_eq!(pr.states, vec!["Hello", "RoundLoop"]);
+        let in_proto: Vec<&str> = s.tokens[pr.open..=pr.close]
+            .iter()
+            .filter(|t| t.kind == Tok::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(in_proto, vec!["observe"]);
+        assert_eq!(a.pooled_regions.len(), 1);
+        let po = &a.pooled_regions[0];
+        let in_pool: Vec<&str> = s.tokens[po.open..=po.close]
+            .iter()
+            .filter(|t| t.kind == Tok::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(in_pool, vec!["take"]);
+    }
+
+    #[test]
+    fn deterministic_region_masks_like_the_others() {
+        let src = "\
+fn cold() { now(); }
+// lint: deterministic -- reduce kernel
+{
+    reduce();
+}
+";
+        let s = scan(src);
+        let a = annotate(&s);
+        assert!(a.errors.is_empty());
+        let marked: Vec<&str> = s
+            .tokens
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| a.deterministic[*i] && t.kind == Tok::Ident)
+            .map(|(_, t)| t.text.as_str())
+            .collect();
+        assert_eq!(marked, vec!["reduce"]);
+    }
+
+    #[test]
+    fn proto_grammar_rejects_bad_state_lists() {
+        assert!(parse_directive("proto()").is_err());
+        assert!(parse_directive("proto(A|)").is_err());
+        assert!(parse_directive("proto(A B)").is_err());
+        assert!(parse_directive("proto(Hello").is_err());
+        let ok = parse_directive("proto(InFlight|Draining) -- reader")
+            .unwrap();
+        assert_eq!(
+            ok,
+            DirectiveKind::Proto {
+                states: vec!["InFlight".into(), "Draining".into()]
+            }
+        );
+    }
+
+    #[test]
+    fn fn_spans_build_the_function_graph() {
+        let src = "\
+trait T { fn decl(&self) -> [u8; 4]; }
+fn outer(x: [u8; 2]) {
+    fn inner() { body(); }
+    tail();
+}
+";
+        let s = scan(src);
+        let a = annotate(&s);
+        let spans = a.fn_spans();
+        let names: Vec<&str> =
+            spans.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner"]);
+        let body_at = s
+            .tokens
+            .iter()
+            .position(|t| t.is_ident("body"))
+            .unwrap();
+        assert_eq!(a.enclosing_fn_name(body_at).as_deref(), Some("inner"));
+        let tail_at = s
+            .tokens
+            .iter()
+            .position(|t| t.is_ident("tail"))
+            .unwrap();
+        assert_eq!(a.enclosing_fn_name(tail_at).as_deref(), Some("outer"));
     }
 }

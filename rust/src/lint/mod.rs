@@ -16,6 +16,7 @@
 //! violation) or programmatically through [`lint_tree`].
 
 pub mod annotate;
+pub mod proto;
 pub mod report;
 pub mod rules;
 pub mod scanner;
@@ -71,6 +72,31 @@ pub fn lint_tree(roots: &[&Path], display_base: &Path) -> Result<TreeReport> {
     }
     files.sort();
     let mut report = TreeReport::default();
+    // the protocol table is context for every file's S1 pass: parse it
+    // once, out of the same file set being linted, so the spec the
+    // checker enforces is the one the tree compiles
+    let mut table = None;
+    for path in &files {
+        let display = path
+            .strip_prefix(display_base)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if !display.ends_with("transport/protocol.rs") {
+            continue;
+        }
+        let src = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        match proto::parse_table(&src) {
+            Ok(t) => table = Some(t),
+            Err(e) => report.diagnostics.push(Diagnostic {
+                file: display,
+                line: 1,
+                rule: "S1",
+                msg: e,
+            }),
+        }
+    }
     for path in files {
         let src = fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -79,9 +105,11 @@ pub fn lint_tree(roots: &[&Path], display_base: &Path) -> Result<TreeReport> {
             .unwrap_or(&path)
             .to_string_lossy()
             .replace('\\', "/");
-        report
-            .diagnostics
-            .extend(rules::lint_source(&display, &src));
+        report.diagnostics.extend(rules::lint_source_with(
+            &display,
+            &src,
+            table.as_ref(),
+        ));
         report.suppressions.push(rules::suppression_count(&src));
         report.files.push(display);
     }

@@ -1,0 +1,244 @@
+//! The wire-protocol table, parsed from `transport/protocol.rs`
+//! SOURCE text.
+//!
+//! The S1 rule checks `// lint: proto(STATE)` regions against the
+//! protocol state machine. To make drift impossible, the checker does
+//! not embed its own copy of the machine: it re-reads the
+//! `TRANSITIONS` const out of `protocol.rs` with the same token
+//! scanner the linter already uses, so the table the compiler builds
+//! into the runtime monitors and the table the linter enforces are one
+//! artifact. A unit test in `protocol.rs`
+//! (`table_matches_lint_parser`) pins the two byte-for-byte.
+//!
+//! The parser is deliberately rigid: rows must be literal
+//! `(State::X, Dir::Y, wire::TAG_Z, State::W)` tuples. A row the
+//! parser cannot read is a lint error, not a silent skip — a protocol
+//! table that cannot be machine-checked is itself a violation.
+
+use std::collections::BTreeSet;
+
+use crate::lint::scanner::{scan, Tok, Token};
+
+/// One `(from, dir, tag, to)` table row, names exactly as written.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProtoRow {
+    pub from: String,
+    pub dir: String,
+    pub tag: String,
+    pub to: String,
+}
+
+/// The parsed protocol table.
+#[derive(Clone, Debug, Default)]
+pub struct ProtoTable {
+    pub rows: Vec<ProtoRow>,
+}
+
+impl ProtoTable {
+    /// Whether `name` appears as a state anywhere in the table.
+    pub fn has_state(&self, name: &str) -> bool {
+        self.rows
+            .iter()
+            .any(|r| r.from == name || r.to == name)
+    }
+
+    /// Tags legal in any of `states`, either direction: the complete
+    /// vocabulary a protocol region for those states may mention.
+    pub fn tags_in(&self, states: &[String]) -> BTreeSet<String> {
+        self.rows
+            .iter()
+            .filter(|r| states.iter().any(|s| *s == r.from))
+            .map(|r| r.tag.clone())
+            .collect()
+    }
+
+    /// Tags an endpoint may RECEIVE across `states`: `dir` is the
+    /// table's direction name ("ToWorker" for a worker-side dispatch
+    /// site, "ToMaster" for a master-side one).
+    pub fn tags_in_dir(&self, states: &[String], dir: &str)
+                       -> BTreeSet<String> {
+        self.rows
+            .iter()
+            .filter(|r| {
+                r.dir == dir && states.iter().any(|s| *s == r.from)
+            })
+            .map(|r| r.tag.clone())
+            .collect()
+    }
+}
+
+/// Token cursor with rigid expectations and line-stamped errors.
+struct Cur<'a> {
+    toks: &'a [Token],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn peek(&self) -> Option<&'a Token> {
+        self.toks.get(self.i)
+    }
+
+    fn line(&self) -> u32 {
+        self.peek().map(|t| t.line).unwrap_or(0)
+    }
+
+    fn bump(&mut self) -> Option<&'a Token> {
+        let t = self.toks.get(self.i);
+        self.i += 1;
+        t
+    }
+
+    fn expect_punct(&mut self, c: char) -> Result<(), String> {
+        match self.bump() {
+            Some(t) if t.is_punct(c) => Ok(()),
+            Some(t) => Err(format!(
+                "protocol table: expected `{c}` at line {}, found {:?}",
+                t.line, t.kind
+            )),
+            None => Err(format!(
+                "protocol table: expected `{c}`, found end of file"
+            )),
+        }
+    }
+
+    fn expect_ident(&mut self, s: &str) -> Result<(), String> {
+        match self.bump() {
+            Some(t) if t.is_ident(s) => Ok(()),
+            Some(t) => Err(format!(
+                "protocol table: expected `{s}` at line {}, found \
+                 {:?} {:?}",
+                t.line, t.kind, t.text
+            )),
+            None => Err(format!(
+                "protocol table: expected `{s}`, found end of file"
+            )),
+        }
+    }
+
+    fn ident(&mut self) -> Result<&'a str, String> {
+        match self.bump() {
+            Some(t) if t.kind == Tok::Ident => Ok(&t.text),
+            Some(t) => Err(format!(
+                "protocol table: expected an identifier at line {}, \
+                 found {:?}",
+                t.line, t.kind
+            )),
+            None => Err(
+                "protocol table: expected an identifier, found end of \
+                 file"
+                    .to_string(),
+            ),
+        }
+    }
+
+    /// `State::Name` / `Dir::Name` — returns `Name`.
+    fn path(&mut self, head: &str) -> Result<String, String> {
+        self.expect_ident(head)?;
+        self.expect_punct(':')?;
+        self.expect_punct(':')?;
+        Ok(self.ident()?.to_string())
+    }
+}
+
+/// Parse the `TRANSITIONS` const out of `protocol.rs` source.
+pub fn parse_table(src: &str) -> Result<ProtoTable, String> {
+    let scanned = scan(src);
+    let toks = &scanned.tokens;
+    let at = toks
+        .iter()
+        .position(|t| t.is_ident("TRANSITIONS"))
+        .ok_or("protocol table: no TRANSITIONS const in protocol.rs")?;
+    // skip the type annotation to the initializer: `= &[`
+    let mut cur = Cur { toks, i: at + 1 };
+    while let Some(t) = cur.peek() {
+        if t.is_punct('=') {
+            break;
+        }
+        cur.i += 1;
+    }
+    cur.expect_punct('=')?;
+    cur.expect_punct('&')?;
+    cur.expect_punct('[')?;
+    let mut rows = Vec::new();
+    loop {
+        match cur.peek() {
+            Some(t) if t.is_punct(']') => break,
+            Some(t) if t.is_punct(',') => {
+                cur.i += 1;
+                continue;
+            }
+            Some(_) => {}
+            None => {
+                return Err(
+                    "protocol table: unterminated TRANSITIONS array"
+                        .to_string(),
+                )
+            }
+        }
+        let line = cur.line();
+        cur.expect_punct('(')?;
+        let from = cur.path("State")?;
+        cur.expect_punct(',')?;
+        let dir = cur.path("Dir")?;
+        cur.expect_punct(',')?;
+        let tag = cur.path("wire")?;
+        if !tag.starts_with("TAG_") {
+            return Err(format!(
+                "protocol table: row at line {line} names `{tag}`, \
+                 expected a wire::TAG_* constant"
+            ));
+        }
+        cur.expect_punct(',')?;
+        let to = cur.path("State")?;
+        cur.expect_punct(')')?;
+        rows.push(ProtoRow { from, dir, tag, to });
+    }
+    if rows.is_empty() {
+        return Err("protocol table: TRANSITIONS is empty".to_string());
+    }
+    Ok(ProtoTable { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = "\
+        pub const TRANSITIONS: &[(State, Dir, u8, State)] = &[\n\
+            (State::Hello, Dir::ToMaster, wire::TAG_HELLO, State::Idle),\n\
+            (State::Idle, Dir::ToWorker, wire::TAG_ROUND, State::Busy),\n\
+            (State::Busy, Dir::ToMaster, wire::TAG_REPORT, State::Idle),\n\
+        ];\n";
+
+    #[test]
+    fn parses_rows_in_order() {
+        let t = parse_table(MINI).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0].from, "Hello");
+        assert_eq!(t.rows[0].dir, "ToMaster");
+        assert_eq!(t.rows[0].tag, "TAG_HELLO");
+        assert_eq!(t.rows[0].to, "Idle");
+        assert!(t.has_state("Busy"));
+        assert!(!t.has_state("Draining"));
+    }
+
+    #[test]
+    fn tag_queries_respect_states_and_direction() {
+        let t = parse_table(MINI).unwrap();
+        let states = vec!["Idle".to_string(), "Busy".to_string()];
+        let both: Vec<_> = t.tags_in(&states).into_iter().collect();
+        assert_eq!(both, vec!["TAG_REPORT", "TAG_ROUND"]);
+        let to_master: Vec<_> =
+            t.tags_in_dir(&states, "ToMaster").into_iter().collect();
+        assert_eq!(to_master, vec!["TAG_REPORT"]);
+    }
+
+    #[test]
+    fn rejects_missing_table_and_computed_rows() {
+        assert!(parse_table("pub fn f() {}").is_err());
+        let computed = "pub const TRANSITIONS: &[(State, Dir, u8, \
+                        State)] = &[(State::A, Dir::ToMaster, \
+                        my_tag(), State::B)];";
+        assert!(parse_table(computed).is_err());
+    }
+}

@@ -2,13 +2,16 @@
 
 use std::fmt;
 
+use crate::lint::TreeReport;
+use crate::util::json::Json;
+
 /// One rule violation (or annotation-grammar error) at a source line.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Diagnostic {
     pub file: String,
     pub line: u32,
-    /// Rule id (`D1`, `D2`, `A1`, `P1`, `W1`) or `LINT` for grammar
-    /// errors.
+    /// Rule id (`D1`, `D2`, `A1`, `P1`, `W1`, `S1`, `R1`, `D3`) or
+    /// `LINT` for grammar errors.
     pub rule: &'static str,
     pub msg: String,
 }
@@ -36,6 +39,36 @@ pub fn render(diags: &[Diagnostic]) -> String {
     out
 }
 
+/// Machine-readable report for `--format json`: a stable schema
+/// (`version` bumps on breaking change) with the same (file, line,
+/// rule) ordering as [`render`].
+pub fn render_json(tree: &TreeReport) -> String {
+    let mut sorted: Vec<&Diagnostic> = tree.diagnostics.iter().collect();
+    sorted.sort_by_key(|d| (d.file.clone(), d.line, d.rule));
+    let diags: Vec<Json> = sorted
+        .iter()
+        .map(|d| {
+            Json::obj(vec![
+                ("file", Json::Str(d.file.clone())),
+                ("line", Json::Num(d.line as f64)),
+                ("rule", Json::Str(d.rule.to_string())),
+                ("msg", Json::Str(d.msg.clone())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("files", Json::Num(tree.files.len() as f64)),
+        (
+            "suppressions",
+            Json::Num(tree.suppressions.iter().sum::<usize>() as f64),
+        ),
+        ("violations", Json::Num(tree.diagnostics.len() as f64)),
+        ("diagnostics", Json::Arr(diags)),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -49,6 +82,32 @@ mod tests {
             msg: "allocation in hot path".into(),
         };
         assert_eq!(d.to_string(), "src/a.rs:7: [A1] allocation in hot path");
+    }
+
+    #[test]
+    fn json_report_round_trips_and_sorts() {
+        let mk = |f: &str, l: u32| Diagnostic {
+            file: f.into(),
+            line: l,
+            rule: "P1",
+            msg: "boom \"quoted\"".into(),
+        };
+        let tree = TreeReport {
+            diagnostics: vec![mk("b.rs", 1), mk("a.rs", 2)],
+            files: vec!["a.rs".into(), "b.rs".into()],
+            suppressions: vec![1, 2],
+        };
+        let j = Json::parse(&render_json(&tree)).unwrap();
+        assert_eq!(j.usize_of("version").unwrap(), 1);
+        assert_eq!(j.usize_of("files").unwrap(), 2);
+        assert_eq!(j.usize_of("suppressions").unwrap(), 3);
+        assert_eq!(j.usize_of("violations").unwrap(), 2);
+        let d = j.req("diagnostics").unwrap().as_arr().unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].str_of("file").unwrap(), "a.rs");
+        assert_eq!(d[0].usize_of("line").unwrap(), 2);
+        assert_eq!(d[1].str_of("rule").unwrap(), "P1");
+        assert_eq!(d[1].str_of("msg").unwrap(), "boom \"quoted\"");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The five invariant rules.
+//! The invariant rules.
 //!
 //! | rule | scope | invariant |
 //! |------|-------|-----------|
@@ -7,12 +7,24 @@
 //! | `A1` | `// lint: hot-path` regions | no steady-state allocation (`Vec::new`, `vec!`, `with_capacity`, `to_vec`, `.clone()`, `collect`) |
 //! | `P1` | `// lint: panic-free` regions | no `.unwrap()`, `.expect()`, `panic!`-family macros, or slice indexing |
 //! | `W1` | `wire.rs` / `checkpoint.rs` | every decoded length is cap-checked before it sizes an allocation |
+//! | `S1` | `// lint: proto(STATE\|...)` regions | every wire tag mentioned is legal in the region's states per the `transport/protocol.rs` table, and every `match` on a frame tag handles exactly one direction's legal tag set |
+//! | `R1` | `// lint: pooled` regions | a slab taken from a pool is recycled on every exit path — no `?`/`return` between take and release |
+//! | `D3` | `// lint: deterministic` regions | no wall-clock or thread-identity reads (`Instant::now`, `SystemTime`, `thread::current()`) |
+//!
+//! S1 and R1 are function-level passes: they walk the marked region
+//! spans from the brace-matched annotator rather than single tokens.
+//! The S1 state-machine table is not duplicated here — it is parsed
+//! out of `transport/protocol.rs` source by [`crate::lint::proto`], so
+//! the spec and the check cannot drift.
 //!
 //! All rules skip `#[cfg(test)]` blocks and honor
 //! `// lint: allow(RULE) -- reason` suppressions (see
 //! [`crate::lint::annotate`]).
 
+use std::collections::BTreeSet;
+
 use crate::lint::annotate::{annotate, grammar_diagnostics, Annotated};
+use crate::lint::proto::ProtoTable;
 use crate::lint::report::Diagnostic;
 use crate::lint::scanner::{scan, Tok, Token};
 
@@ -59,9 +71,22 @@ const KEYWORDS_BEFORE_BRACKET: &[&str] = &[
     "type", "mod",
 ];
 
-/// Lint one source file (already read into `src`); `file` is the path
-/// used in diagnostics and for path-scoped rules.
+/// Lint one source file with no protocol table in scope: any
+/// `proto(...)` region is then an S1 error (the table is mandatory
+/// context for protocol regions). Tree walks use [`lint_source_with`].
 pub fn lint_source(file: &str, src: &str) -> Vec<Diagnostic> {
+    lint_source_with(file, src, None)
+}
+
+/// Lint one source file (already read into `src`); `file` is the path
+/// used in diagnostics and for path-scoped rules. `table` is the
+/// protocol state machine parsed from `transport/protocol.rs`, if the
+/// tree being linted contains one.
+pub fn lint_source_with(
+    file: &str,
+    src: &str,
+    table: Option<&ProtoTable>,
+) -> Vec<Diagnostic> {
     let scanned = scan(src);
     let a = annotate(&scanned);
     let mut diags = grammar_diagnostics(&a, file);
@@ -75,6 +100,10 @@ pub fn lint_source(file: &str, src: &str) -> Vec<Diagnostic> {
     if WIRE_BOUND_FILES.iter().any(|m| norm.ends_with(m)) {
         rule_w1(file, &a, &mut diags);
     }
+    rule_s1(file, &a, table, &mut diags);
+    rule_r1(file, &a, &mut diags);
+    rule_d3(file, &a, &mut diags);
+    diags.sort_by(|x, y| (x.line, x.rule).cmp(&(y.line, y.rule)));
     diags
 }
 
@@ -451,6 +480,377 @@ fn enclosing_fn(toks: &[Token], i: usize) -> Option<usize> {
     toks[..i].iter().rposition(|t| t.is_ident("fn"))
 }
 
+/// Report a region-level diagnostic at a specific line, honoring
+/// suppressions.
+fn push_at(
+    diags: &mut Vec<Diagnostic>,
+    a: &Annotated,
+    file: &str,
+    rule: &'static str,
+    line: u32,
+    msg: String,
+) {
+    if !a.allowed(rule, line) {
+        diags.push(Diagnostic {
+            file: file.to_string(),
+            line,
+            rule,
+            msg,
+        });
+    }
+}
+
+/// S1: protocol conformance. Inside a `// lint: proto(STATE|...)`
+/// region, (a) every `wire::TAG_*` identifier must be a tag the
+/// protocol table allows in at least one of the region's states
+/// (either direction — a region is one endpoint's view of those
+/// states), and (b) every `match` whose scrutinee is a frame tag
+/// (`match frame.tag { ... }`) must pattern-match **exactly** the tag
+/// set one direction allows across the region's states: a missing arm
+/// is an unhandled legal message, a surplus arm is a message this
+/// endpoint can never legally see. Wildcard/binding fallback arms stay
+/// legal — that is where illegal tags become typed errors.
+fn rule_s1(
+    file: &str,
+    a: &Annotated,
+    table: Option<&ProtoTable>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let toks = a.tokens;
+    for region in &a.proto_regions {
+        if a.in_test[region.open] {
+            continue;
+        }
+        let Some(table) = table else {
+            push_at(
+                diags,
+                a,
+                file,
+                "S1",
+                region.line,
+                "proto(...) region with no protocol table in scope: \
+                 the linted tree must include \
+                 coordinator/transport/protocol.rs"
+                    .into(),
+            );
+            continue;
+        };
+        let mut states_ok = true;
+        for s in &region.states {
+            if !table.has_state(s) {
+                states_ok = false;
+                push_at(
+                    diags,
+                    a,
+                    file,
+                    "S1",
+                    region.line,
+                    format!(
+                        "proto({s}) names a state the protocol table \
+                         does not define"
+                    ),
+                );
+            }
+        }
+        if !states_ok {
+            continue;
+        }
+        let legal_any = table.tags_in(&region.states);
+        let here = region.states.join("|");
+        // (a) soundness: every tag the region mentions must be legal
+        for i in region.open..=region.close {
+            let t = &toks[i];
+            if !live(a, i)
+                || t.kind != Tok::Ident
+                || !t.text.starts_with("TAG_")
+            {
+                continue;
+            }
+            if !legal_any.contains(&t.text) {
+                let in_fn = a
+                    .enclosing_fn_name(i)
+                    .map(|f| format!(" (in fn {f})"))
+                    .unwrap_or_default();
+                push(
+                    diags,
+                    a,
+                    file,
+                    "S1",
+                    t,
+                    format!(
+                        "`{}` is illegal in protocol state(s) {here}: \
+                         the table allows {}{}",
+                        t.text,
+                        join_tags(&legal_any),
+                        in_fn
+                    ),
+                );
+            }
+        }
+        // (b) exactness of frame-tag dispatch sites
+        for m in region.open..=region.close {
+            if !live(a, m) || !toks[m].is_ident("match") {
+                continue;
+            }
+            let Some((body_open, arms)) = tag_match_at(a, m) else {
+                continue;
+            };
+            let to_worker =
+                table.tags_in_dir(&region.states, "ToWorker");
+            let to_master =
+                table.tags_in_dir(&region.states, "ToMaster");
+            let expected = if arms.is_subset(&to_worker) {
+                &to_worker
+            } else if arms.is_subset(&to_master) {
+                &to_master
+            } else {
+                push(
+                    diags,
+                    a,
+                    file,
+                    "S1",
+                    &toks[m],
+                    format!(
+                        "frame-tag match mixes directions in state(s) \
+                         {here}: arms {} fit neither the to-worker set \
+                         {} nor the to-master set {}",
+                        join_tags(&arms),
+                        join_tags(&to_worker),
+                        join_tags(&to_master)
+                    ),
+                );
+                continue;
+            };
+            for missing in expected.difference(&arms) {
+                push(
+                    diags,
+                    a,
+                    file,
+                    "S1",
+                    &toks[body_open],
+                    format!(
+                        "frame-tag match does not handle `{missing}`, \
+                         which is legal in state(s) {here}"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// If the `match` at token `m` dispatches on a frame tag (scrutinee
+/// ends `.tag` or is a `tag` binding), return its body-`{` index and
+/// the set of `TAG_*` idents used as arm patterns (tokens between the
+/// body start / an arm separator and the arm's `=>`).
+fn tag_match_at(
+    a: &Annotated,
+    m: usize,
+) -> Option<(usize, BTreeSet<String>)> {
+    let toks = a.tokens;
+    // scrutinee: tokens up to the match's own `{`
+    let mut j = m + 1;
+    let body_open = loop {
+        match toks.get(j) {
+            Some(t) if t.is_punct('{') => break j,
+            Some(t) if t.is_punct(';') => return None,
+            Some(_) => j += 1,
+            None => return None,
+        }
+    };
+    let dispatches_on_tag = toks[m + 1..body_open]
+        .last()
+        .is_some_and(|t| t.is_ident("tag"));
+    if !dispatches_on_tag {
+        return None;
+    }
+    let body_close = (*a.matching.get(body_open)?)?;
+    let mut arms = BTreeSet::new();
+    let mut depth = 0i32;
+    let mut in_pattern = true;
+    for t in &toks[body_open + 1..body_close] {
+        match t.kind {
+            Tok::Punct('{') | Tok::Punct('(') | Tok::Punct('[') => {
+                depth += 1
+            }
+            Tok::Punct('}') => {
+                depth -= 1;
+                // a block arm body ended: next tokens open a pattern
+                if depth == 0 {
+                    in_pattern = true;
+                }
+            }
+            Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+            // `=>` terminates the pattern (the `>` is a separate punct
+            // token; flipping on `=` alone is fine since a bare `=`
+            // cannot appear in a pattern at depth 0)
+            Tok::Punct('=') if depth == 0 => in_pattern = false,
+            Tok::Punct(',') if depth == 0 => in_pattern = true,
+            Tok::Ident
+                if in_pattern
+                    && depth == 0
+                    && t.text.starts_with("TAG_") =>
+            {
+                arms.insert(t.text.clone());
+            }
+            _ => {}
+        }
+    }
+    Some((body_open, arms))
+}
+
+fn join_tags(set: &BTreeSet<String>) -> String {
+    if set.is_empty() {
+        "nothing".to_string()
+    } else {
+        set.iter()
+            .map(String::as_str)
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// Identifiers that take a slab out of a pool inside `pooled` regions
+/// (method-call position: preceded by `.`).
+const POOL_TAKES: &[&str] = &["take", "drain"];
+
+/// Identifiers that hand a taken slab on to an owner that recycles it:
+/// the wire send (`send_cmd`), wrapping it into the round message that
+/// the receiver recycles (`RoundMsg`), and the pool itself
+/// (`recycle`, `slab_pool`, `push`).
+const POOL_RELEASES: &[&str] =
+    &["send_cmd", "RoundMsg", "recycle", "slab_pool", "push"];
+
+/// R1: pool discipline. Inside a `// lint: pooled` region, once a slab
+/// is taken (`.take()` / `.drain()`), every exit path must hand it
+/// back before leaving: a `?` or `return` while holding can leak the
+/// slab out of the pool (the steady state then allocates — the class
+/// of leak A1 cannot see, because the allocation happens rounds
+/// later). Reaching the end of the region still holding is the same
+/// leak.
+fn rule_r1(file: &str, a: &Annotated, diags: &mut Vec<Diagnostic>) {
+    let toks = a.tokens;
+    for region in &a.pooled_regions {
+        if a.in_test[region.open] {
+            continue;
+        }
+        let mut holding: Option<usize> = None;
+        for i in region.open + 1..region.close {
+            if !live(a, i) {
+                continue;
+            }
+            let t = &toks[i];
+            match t.kind {
+                Tok::Ident
+                    if POOL_TAKES.contains(&t.text.as_str())
+                        && i > 0
+                        && toks[i - 1].is_punct('.') =>
+                {
+                    holding = Some(i);
+                }
+                Tok::Ident
+                    if POOL_RELEASES.contains(&t.text.as_str()) =>
+                {
+                    holding = None;
+                }
+                Tok::Punct('?') if holding.is_some() => {
+                    let taken = &toks[holding.unwrap_or(i)];
+                    push(
+                        diags,
+                        a,
+                        file,
+                        "R1",
+                        t,
+                        format!(
+                            "`?` while holding the slab taken on line \
+                             {}: an error here leaks it out of the \
+                             pool; recycle (or stash) before \
+                             propagating",
+                            taken.line
+                        ),
+                    );
+                }
+                Tok::Ident
+                    if t.text == "return" && holding.is_some() =>
+                {
+                    let taken = &toks[holding.unwrap_or(i)];
+                    push(
+                        diags,
+                        a,
+                        file,
+                        "R1",
+                        t,
+                        format!(
+                            "early return while holding the slab taken \
+                             on line {}: recycle it before leaving the \
+                             pooled region",
+                            taken.line
+                        ),
+                    );
+                }
+                _ => {}
+            }
+        }
+        if let Some(at) = holding {
+            push(
+                diags,
+                a,
+                file,
+                "R1",
+                &toks[at],
+                "slab taken from the pool is never handed back inside \
+                 this pooled region"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// D3: no wall-clock or thread-identity reads inside
+/// `// lint: deterministic` regions. `Instant::now`/`SystemTime`
+/// values that leak into reduce-path arithmetic make runs
+/// unreproducible in a way D1's container/ordering checks cannot see;
+/// `thread::current()` identity has the same property under work
+/// stealing. Timing belongs in the profiler, outside these regions.
+fn rule_d3(file: &str, a: &Annotated, diags: &mut Vec<Diagnostic>) {
+    let toks = a.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if !a.deterministic[i] || !live(a, i) || t.kind != Tok::Ident {
+            continue;
+        }
+        let flagged = match t.text.as_str() {
+            "SystemTime" => true,
+            "Instant" => {
+                toks.get(i + 1).is_some_and(|x| x.is_punct(':'))
+                    && toks.get(i + 2).is_some_and(|x| x.is_punct(':'))
+                    && toks.get(i + 3).is_some_and(|x| x.is_ident("now"))
+            }
+            "current" => {
+                i >= 3
+                    && toks[i - 1].is_punct(':')
+                    && toks[i - 2].is_punct(':')
+                    && toks[i - 3].is_ident("thread")
+            }
+            _ => false,
+        };
+        if flagged {
+            push(
+                diags,
+                a,
+                file,
+                "D3",
+                t,
+                format!(
+                    "`{}` inside a deterministic region: wall-clock / \
+                     thread-identity reads must not influence \
+                     reduce-path values; time belongs in the profiler \
+                     outside this region",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -623,5 +1023,217 @@ mod tests {
         assert_eq!(diags.len(), 1);
         assert_eq!(diags[0].rule, "LINT");
         assert!(diags[0].msg.contains("reason"));
+    }
+
+    fn mini_table() -> ProtoTable {
+        crate::lint::proto::parse_table(
+            "pub const TRANSITIONS: &[(State, Dir, u8, State)] = &[\n\
+             (State::Hello, Dir::ToMaster, wire::TAG_HELLO, State::Run),\n\
+             (State::Run, Dir::ToWorker, wire::TAG_ROUND, State::Busy),\n\
+             (State::Busy, Dir::ToMaster, wire::TAG_REPORT, State::Run),\n\
+             (State::Run, Dir::ToWorker, wire::TAG_STOP, State::Done),\n\
+             ];",
+        )
+        .unwrap()
+    }
+
+    fn rules_hit_with(
+        file: &str,
+        src: &str,
+        table: &ProtoTable,
+    ) -> Vec<&'static str> {
+        lint_source_with(file, src, Some(table))
+            .iter()
+            .map(|d| d.rule)
+            .collect()
+    }
+
+    #[test]
+    fn s1_flags_tags_illegal_in_the_region_states() {
+        let table = mini_table();
+        let bad = "\
+fn f(w: &mut W) {
+    // lint: proto(Hello)
+    {
+        w.send(TAG_ROUND);
+    }
+}
+";
+        assert_eq!(rules_hit_with("src/t.rs", bad, &table), vec!["S1"]);
+        let good = "\
+fn f(w: &mut W) {
+    // lint: proto(Hello)
+    {
+        w.send(TAG_HELLO);
+    }
+}
+";
+        assert!(rules_hit_with("src/t.rs", good, &table).is_empty());
+    }
+
+    #[test]
+    fn s1_requires_tag_matches_to_be_exact() {
+        let table = mini_table();
+        // Run's to-worker set is {ROUND, STOP}: a dispatch missing
+        // STOP leaves a legal message unhandled
+        let missing = "\
+fn recv(frame: Frame) {
+    // lint: proto(Run)
+    {
+        match frame.tag {
+            TAG_ROUND => round(),
+            other => bail(other),
+        }
+    }
+}
+";
+        let diags =
+            lint_source_with("src/t.rs", missing, Some(&table));
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "S1");
+        assert!(diags[0].msg.contains("TAG_STOP"));
+        let exact = "\
+fn recv(frame: Frame) {
+    // lint: proto(Run)
+    {
+        match frame.tag {
+            TAG_ROUND => round(),
+            TAG_STOP => stop(),
+            other => bail(other),
+        }
+    }
+}
+";
+        assert!(rules_hit_with("src/t.rs", exact, &table).is_empty());
+        // an arm from the wrong direction can fit neither set
+        let mixed = "\
+fn recv(frame: Frame) {
+    // lint: proto(Run)
+    {
+        match frame.tag {
+            TAG_ROUND => round(),
+            TAG_REPORT => report(),
+            other => bail(other),
+        }
+    }
+}
+";
+        let diags = lint_source_with("src/t.rs", mixed, Some(&table));
+        assert!(diags.iter().any(|d| d.rule == "S1"
+            && d.msg.contains("mixes directions")));
+    }
+
+    #[test]
+    fn s1_errors_on_unknown_states_and_missing_table() {
+        let table = mini_table();
+        let unknown = "\
+fn f() {
+    // lint: proto(Warp)
+    {
+        g();
+    }
+}
+";
+        let diags =
+            lint_source_with("src/t.rs", unknown, Some(&table));
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("does not define"));
+        // the plain entry point has no table: proto regions then error
+        let diags = lint_source("src/t.rs", unknown);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("no protocol table"));
+    }
+
+    #[test]
+    fn r1_flags_question_marks_and_returns_while_holding() {
+        let leaky = "\
+fn send(&mut self) -> Result<()> {
+    // lint: pooled
+    {
+        let mut slab = self.pool.take();
+        encode_into(&mut slab)?;
+        self.transport.send_cmd(0, slab);
+    }
+    Ok(())
+}
+";
+        let diags = lint_source("src/t.rs", leaky);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "R1");
+        assert!(diags[0].msg.contains('?'));
+        let early = "\
+fn send(&mut self) -> Result<()> {
+    // lint: pooled
+    {
+        let slab = self.pool.take();
+        if bad() { return Err(anyhow(\"no\")); }
+        self.transport.send_cmd(0, slab);
+    }
+    Ok(())
+}
+";
+        let diags = lint_source("src/t.rs", early);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "R1");
+        assert!(diags[0].msg.contains("return"));
+    }
+
+    #[test]
+    fn r1_clean_paths_and_end_of_region_leaks() {
+        let clean = "\
+fn send(&mut self) -> Result<()> {
+    // lint: pooled
+    {
+        fallible()?;
+        let mut slab = self.pool.take();
+        encode_into(&mut slab);
+        self.transport.send_cmd(0, slab);
+    }
+    Ok(())
+}
+";
+        assert!(lint_source("src/t.rs", clean).is_empty());
+        let lost = "\
+fn send(&mut self) {
+    // lint: pooled
+    {
+        let slab = self.pool.take();
+        sink(slab);
+    }
+}
+";
+        let diags = lint_source("src/t.rs", lost);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "R1");
+        assert!(diags[0].msg.contains("never handed back"));
+    }
+
+    #[test]
+    fn d3_flags_clock_and_thread_identity_in_regions() {
+        let src = "\
+fn reduce(&mut self) {
+    // lint: deterministic
+    {
+        let t = Instant::now();
+        let s = SystemTime::now();
+        let id = thread::current().id();
+    }
+    let outside = Instant::now();
+}
+";
+        assert_eq!(
+            rules_hit("src/t.rs", src),
+            vec!["D3", "D3", "D3"]
+        );
+        // mentioning the types without reading a clock stays legal
+        let typed = "\
+fn reduce(&mut self, started: Instant) {
+    // lint: deterministic
+    {
+        let x = elapsed_of(started);
+    }
+}
+";
+        assert!(rules_hit("src/t.rs", typed).is_empty());
     }
 }

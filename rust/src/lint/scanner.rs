@@ -87,12 +87,23 @@ pub fn scan(src: &str) -> Scan {
                 while i < b.len() && b[i] != b'\n' {
                     i += 1;
                 }
-                let comment = src[start..i].trim_start_matches('/').trim();
-                if let Some(rest) = comment.strip_prefix(DIRECTIVE_MARKER) {
-                    out.directives.push(Directive {
-                        text: rest.trim().to_string(),
-                        line,
-                    });
+                let body = &src[start..i];
+                // `///` outer and `//!` inner doc comments are
+                // documentation, never directives — rustdoc prose
+                // quoting the `lint:` grammar must not open a region
+                let is_doc = (body.starts_with('/')
+                    && !body.starts_with("//"))
+                    || body.starts_with('!');
+                if !is_doc {
+                    let comment = body.trim_start_matches('/').trim();
+                    if let Some(rest) =
+                        comment.strip_prefix(DIRECTIVE_MARKER)
+                    {
+                        out.directives.push(Directive {
+                            text: rest.trim().to_string(),
+                            line,
+                        });
+                    }
                 }
             }
             b'/' if b.get(i + 1) == Some(&b'*') => {
@@ -151,6 +162,37 @@ pub fn scan(src: &str) -> Scan {
                 }
             }
             c if c == b'_' || c.is_ascii_alphabetic() => {
+                // byte-char literal `b'x'`: one Char token, not an
+                // ident `b` followed by a stray quote
+                if c == b'b' && b.get(i + 1) == Some(&b'\'') {
+                    let tline = line;
+                    i = skip_char(b, i + 1, &mut line);
+                    out.tokens.push(tok(Tok::Char, tline));
+                    continue;
+                }
+                // raw identifier `r#match`: one ident carrying the
+                // bare name (that is its meaning to the compiler)
+                if c == b'r'
+                    && b.get(i + 1) == Some(&b'#')
+                    && b.get(i + 2).is_some_and(|&n| {
+                        n == b'_' || n.is_ascii_alphabetic()
+                    })
+                {
+                    let start = i + 2;
+                    let mut j = start;
+                    while j < b.len()
+                        && (b[j] == b'_' || b[j].is_ascii_alphanumeric())
+                    {
+                        j += 1;
+                    }
+                    out.tokens.push(Token {
+                        kind: Tok::Ident,
+                        text: src[start..j].to_string(),
+                        line,
+                    });
+                    i = j;
+                    continue;
+                }
                 // raw/byte string prefixes lex as string literals, not
                 // as an ident followed by a stray quote
                 if let Some(end) = raw_or_byte_string(b, i) {
@@ -235,7 +277,13 @@ fn skip_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
     i += 1;
     while i < b.len() {
         match b[i] {
-            b'\\' => i += 2,
+            b'\\' => {
+                // a `\`+newline continuation is still a source line
+                if b.get(i + 1) == Some(&b'\n') {
+                    *line += 1;
+                }
+                i += 2;
+            }
             b'"' => return i + 1,
             b'\n' => {
                 *line += 1;
@@ -252,7 +300,12 @@ fn skip_char(b: &[u8], mut i: usize, line: &mut u32) -> usize {
     i += 1;
     while i < b.len() {
         match b[i] {
-            b'\\' => i += 2,
+            b'\\' => {
+                if b.get(i + 1) == Some(&b'\n') {
+                    *line += 1;
+                }
+                i += 2;
+            }
             b'\'' => return i + 1,
             b'\n' => {
                 *line += 1;
@@ -379,6 +432,108 @@ mod tests {
         let chars =
             s.tokens.iter().filter(|t| t.kind == Tok::Char).count();
         assert_eq!((lifetimes, chars), (2, 1));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_quotes_and_newlines_stay_opaque() {
+        // embedded `"#` (fewer hashes than the guard), trigger idents,
+        // comment- and directive-lookalikes, and a newline — the whole
+        // literal must collapse to ONE Str token with lines tracked
+        let src = "let a = r##\"quote \" hash # \"# unwrap() HashMap\n\
+                   /* no comment */ // lint: hot-path\"##;\n\
+                   let tail = 0;";
+        let s = scan(src);
+        assert!(!s
+            .tokens
+            .iter()
+            .any(|t| t.is_ident("unwrap") || t.is_ident("HashMap")));
+        assert!(s.directives.is_empty());
+        assert_eq!(
+            s.tokens.iter().filter(|t| t.kind == Tok::Str).count(),
+            1
+        );
+        let tail =
+            s.tokens.iter().find(|t| t.is_ident("tail")).unwrap();
+        assert_eq!(tail.line, 3);
+    }
+
+    #[test]
+    fn byte_and_byte_raw_strings_are_single_tokens() {
+        let src = "let a = b\"escaped \\\" unwrap()\";\n\
+                   let c = br#\"hash # panic!()\"#;";
+        let s = scan(src);
+        assert!(!s
+            .tokens
+            .iter()
+            .any(|t| t.is_ident("unwrap") || t.is_ident("panic")));
+        assert_eq!(
+            s.tokens.iter().filter(|t| t.kind == Tok::Str).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn nested_block_comments_strip_fully_and_track_lines() {
+        let src = "/* outer /* inner panic!() */ still stripped\n\
+                   lint: hot-path */\n\
+                   let tail = 1;";
+        let s = scan(src);
+        assert!(s.directives.is_empty());
+        assert!(!s.tokens.iter().any(|t| t.is_ident("panic")
+            || t.is_ident("still")
+            || t.is_ident("lint")));
+        let tail =
+            s.tokens.iter().find(|t| t.is_ident("tail")).unwrap();
+        assert_eq!(tail.line, 3);
+    }
+
+    #[test]
+    fn doc_comments_never_enter_the_directive_channel() {
+        // rustdoc prose about the grammar must not open regions; a
+        // plain `// lint:` on the next line still does
+        let src = "/// lint: hot-path\n\
+                   //! lint: panic-free\n\
+                   // lint: hot-path\n\
+                   fn f() {}\n";
+        let s = scan(src);
+        assert_eq!(s.directives.len(), 1);
+        assert_eq!(s.directives[0].line, 3);
+        assert_eq!(s.directives[0].text, "hot-path");
+    }
+
+    #[test]
+    fn byte_char_literals_do_not_fabricate_idents() {
+        let src = "let x = b'x'; let y = b'\\n'; let z = b'\\'';";
+        let s = scan(src);
+        assert!(!s.tokens.iter().any(|t| t.is_ident("b")));
+        assert_eq!(
+            s.tokens.iter().filter(|t| t.kind == Tok::Char).count(),
+            3
+        );
+        assert!(s.tokens.iter().any(|t| t.is_ident("z")));
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_their_bare_name() {
+        let src = "let r#type = 1; r#loop(); let s = r#\"raw\"#;";
+        let s = scan(src);
+        assert!(s.tokens.iter().any(|t| t.is_ident("type")));
+        assert!(s.tokens.iter().any(|t| t.is_ident("loop")));
+        assert!(!s.tokens.iter().any(|t| t.is_ident("r")));
+        assert_eq!(
+            s.tokens.iter().filter(|t| t.kind == Tok::Str).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn escaped_newlines_in_literals_keep_line_numbers() {
+        // `\`+newline string continuation is still a source line
+        let src = "let a = \"one\\\ntwo\";\nlet tail = 1;";
+        let s = scan(src);
+        let tail =
+            s.tokens.iter().find(|t| t.is_ident("tail")).unwrap();
+        assert_eq!(tail.line, 3);
     }
 
     #[test]

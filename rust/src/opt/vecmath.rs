@@ -37,6 +37,8 @@ pub fn relax(x: &mut [f32], target: &[f32], beta: f32) {
 
 /// Element-wise mean of several replicas into `out` (the (8d) reduce with
 /// the paper's eta'' = rho/n choice: x <- mean_a x^a).
+// lint: deterministic -- the reduce path's summation order IS the
+// reproducibility contract; no clock or thread-identity reads
 pub fn mean_into(out: &mut [f32], replicas: &[&[f32]]) {
     assert!(!replicas.is_empty());
     let n = replicas.len() as f32;
@@ -79,6 +81,7 @@ pub const PAR_MIN_PER_THREAD: usize = 1 << 17;
 /// with the work (one worker per [`PAR_MIN_PER_THREAD`] elements, capped
 /// by [`reduce_threads`]), so small P degrades to the serial loop with no
 /// thread spawned at all.
+// lint: deterministic -- thread count may vary; element order may not
 pub fn mean_into_par(out: &mut [f32], replicas: &[&[f32]]) {
     let threads = reduce_threads().min(out.len() / PAR_MIN_PER_THREAD);
     mean_into_chunked(out, replicas, threads, PAR_CHUNK);
@@ -91,6 +94,8 @@ pub fn mean_into_par(out: &mut [f32], replicas: &[&[f32]]) {
 /// worker each; every worker walks its region in `chunk`-sized sub-slices,
 /// accumulating replica-by-replica per sub-slice (cache-friendly) in the
 /// same per-element order as [`mean_into`] (bit-exact equivalence).
+// lint: deterministic -- chunk/thread splits change scheduling only;
+// per-element accumulation order stays identical to mean_into
 pub fn mean_into_chunked(
     out: &mut [f32],
     replicas: &[&[f32]],

@@ -14,10 +14,12 @@
 use std::time::Duration;
 
 use parle::config::{Algo, RunConfig, TransportCfg};
-use parle::coordinator::comm::{ReduceFabric, ReplicaEndpoint, RoundConsts,
-                               RoundMsg, RoundReport, WorkerCmd,
-                               WorkerState};
-use parle::coordinator::transport::{wire, TcpTransport, TcpWorkerLink};
+use parle::coordinator::comm::{ReduceFabric, ReplicaEndpoint, RoundCmd,
+                               RoundConsts, RoundMsg, RoundReport,
+                               WorkerCmd, WorkerState};
+use parle::coordinator::transport::protocol::State;
+use parle::coordinator::transport::{wire, ProtocolViolation, TcpTransport,
+                                    TcpWorkerLink, Transport};
 use parle::coordinator::{serve_worker_as, train, train_hierarchical};
 use parle::opt::LrSchedule;
 
@@ -367,6 +369,149 @@ fn tcp_listen_times_out_on_silent_handshake() {
     );
     assert!(err.contains("handshake"), "{err}");
     silent.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// protocol-monitor fault injection: illegal sequences over the wire
+// ---------------------------------------------------------------------------
+
+/// Raw connect with retry — for tests that speak the wire format by
+/// hand instead of going through `TcpWorkerLink`.
+fn connect_retry(addr: &str) -> std::net::TcpStream {
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(e) => {
+                if std::time::Instant::now() >= deadline {
+                    panic!("connect: {e}");
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Drive the hello handshake by hand on a raw socket.
+fn raw_handshake(stream: &mut std::net::TcpStream) {
+    wire::write_frame(stream, wire::TAG_HELLO, &wire::encode_hello())
+        .unwrap();
+    let ack = wire::read_frame(stream).unwrap().unwrap();
+    assert_eq!(ack.tag, wire::TAG_HELLO_ACK);
+}
+
+fn violation(e: &anyhow::Error) -> &ProtocolViolation {
+    e.downcast_ref::<ProtocolViolation>()
+        .unwrap_or_else(|| panic!("not a protocol violation: {e:#}"))
+}
+
+/// A peer whose first frame is a round (not a hello) fails the accept
+/// loop with a typed [`ProtocolViolation`] naming the handshake state —
+/// not a garbled-decode error, not a hang.
+#[test]
+fn tcp_round_before_hello_is_a_typed_violation() {
+    let addr = "127.0.0.1:47651";
+    let rogue = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let mut stream = connect_retry(&addr);
+            // a round before the hello: out-of-state from frame one
+            wire::write_frame(&mut stream, wire::TAG_ROUND, &[]).unwrap();
+            std::thread::sleep(Duration::from_millis(500));
+        })
+    };
+    let err = TcpTransport::listen_timeout(
+        addr,
+        1,
+        Duration::from_secs(10),
+    )
+    .unwrap_err();
+    let v = violation(&err);
+    assert_eq!(v.state, State::Hello);
+    assert_eq!(v.tag, wire::TAG_ROUND);
+    assert_eq!(v.endpoint, "master");
+    rogue.join().unwrap();
+}
+
+/// A report frame arriving while the link is quiesced for a snapshot is
+/// refused by the master's receive leg with a typed violation — the
+/// wire analog of the in-process test in `transport/mod.rs`.
+#[test]
+fn tcp_report_during_snapshot_quiesce_is_refused() {
+    let addr = "127.0.0.1:47652";
+    let fake = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let mut stream = connect_retry(&addr);
+            raw_handshake(&mut stream);
+            let req = wire::read_frame(&mut stream).unwrap().unwrap();
+            assert_eq!(req.tag, wire::TAG_SNAPSHOT_REQ);
+            // misbehave: answer the quiesce with a report
+            let payload = wire::encode_report(&RoundReport {
+                replica: 0,
+                round: 0,
+                params: vec![0.0; 4],
+                train_loss: 0.0,
+                train_err: 0.0,
+                step_s: 0.0,
+            })
+            .unwrap();
+            wire::write_frame(&mut stream, wire::TAG_REPORT, &payload)
+                .unwrap();
+            std::thread::sleep(Duration::from_millis(500));
+        })
+    };
+    let mut transport = TcpTransport::listen(addr, 1).unwrap();
+    transport.send_cmd(0, RoundCmd::Snapshot).unwrap();
+    let err = transport.recv_event().unwrap_err();
+    let v = violation(&err);
+    assert_eq!(v.state, State::SnapshotQuiesce);
+    assert_eq!(v.tag, wire::TAG_REPORT);
+    assert_eq!(v.replica, Some(0));
+    fake.join().unwrap();
+    transport.shutdown().unwrap();
+}
+
+/// A second restore while the first is still pending is refused before
+/// any bytes hit the wire: the master's dispatch leg returns the typed
+/// violation and the socket stays healthy.
+#[test]
+fn tcp_double_restore_is_refused_before_the_wire() {
+    let addr = "127.0.0.1:47653";
+    let fake = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let mut stream = connect_retry(&addr);
+            raw_handshake(&mut stream);
+            // absorb whatever the master writes, then hang up
+            std::thread::sleep(Duration::from_millis(500));
+        })
+    };
+    let mut transport = TcpTransport::listen(addr, 1).unwrap();
+    transport
+        .send_cmd(0, RoundCmd::Restore(Box::new(WorkerState::default())))
+        .unwrap();
+    let err = transport
+        .send_cmd(0, RoundCmd::Restore(Box::new(WorkerState::default())))
+        .unwrap_err();
+    let v = violation(&err);
+    assert_eq!(v.state, State::Restore);
+    assert_eq!(v.tag, wire::TAG_RESTORE);
+    // the link survives the refusal: a round consumes the pending
+    // restore and moves the protocol on
+    transport
+        .send_cmd(
+            0,
+            RoundCmd::Round(RoundMsg {
+                round: 0,
+                xref: std::sync::Arc::new(vec![0.0f32; 4]),
+                slab: vec![0.0f32; 4],
+                consts: consts(),
+            }),
+        )
+        .unwrap();
+    fake.join().unwrap();
+    transport.shutdown().unwrap();
 }
 
 // ---------------------------------------------------------------------------

@@ -190,6 +190,238 @@ fn binary_reports_multiple_files_in_sorted_order() {
     assert!(err.contains("2 violation(s)"), "stderr: {err}");
 }
 
+/// A minimal `transport/protocol.rs` whose TRANSITIONS table the S1
+/// pass can parse: Hello -> Run on hello, Run <-> Busy on round/report,
+/// stop self-loops on Run.
+const MINI_PROTOCOL: &str = "\
+pub enum State { Hello, Run, Busy }\n\
+pub enum Dir { ToWorker, ToMaster }\n\
+pub const TRANSITIONS: &[(State, Dir, u8, State)] = &[\n\
+    (State::Hello, Dir::ToMaster, wire::TAG_HELLO, State::Run),\n\
+    (State::Run, Dir::ToWorker, wire::TAG_ROUND, State::Busy),\n\
+    (State::Run, Dir::ToWorker, wire::TAG_STOP, State::Run),\n\
+    (State::Busy, Dir::ToMaster, wire::TAG_REPORT, State::Run),\n\
+];\n";
+
+#[test]
+fn binary_flags_s1_tags_outside_the_region_states() {
+    let dir = fixture_dir("s1_tag");
+    write(&dir, "transport/protocol.rs", MINI_PROTOCOL);
+    write(
+        &dir,
+        "transport/peer.rs",
+        "pub fn drive(tag: u8) {\n\
+         \x20   // lint: proto(Run)\n\
+         \x20   {\n\
+         \x20       if tag == wire::TAG_HELLO { hello(); }\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "S1 fixture must fail the lint");
+    assert!(err.contains("[S1]"), "stderr: {err}");
+    assert!(err.contains("TAG_HELLO"), "stderr: {err}");
+    assert!(err.contains("peer.rs:4"), "stderr: {err}");
+}
+
+#[test]
+fn binary_flags_s1_inexhaustive_tag_matches() {
+    let dir = fixture_dir("s1_match");
+    write(&dir, "transport/protocol.rs", MINI_PROTOCOL);
+    write(
+        &dir,
+        "transport/peer.rs",
+        "pub fn recv(frame: Frame) {\n\
+         \x20   // lint: proto(Run)\n\
+         \x20   {\n\
+         \x20       match frame.tag {\n\
+         \x20           wire::TAG_ROUND => round(),\n\
+         \x20           other => ignore(other),\n\
+         \x20       }\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "inexhaustive tag match must fail S1");
+    assert!(err.contains("[S1]"), "stderr: {err}");
+    assert!(err.contains("TAG_STOP"), "stderr: {err}");
+
+    // handling every legal tag of the region's states passes
+    write(
+        &dir,
+        "transport/peer.rs",
+        "pub fn recv(frame: Frame) {\n\
+         \x20   // lint: proto(Run)\n\
+         \x20   {\n\
+         \x20       match frame.tag {\n\
+         \x20           wire::TAG_ROUND => round(),\n\
+         \x20           wire::TAG_STOP => stop(),\n\
+         \x20           other => ignore(other),\n\
+         \x20       }\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(ok, "exact tag match must pass S1: {err}");
+}
+
+#[test]
+fn binary_flags_s1_regions_with_no_table_or_unknown_states() {
+    // a proto region with no transport/protocol.rs in the tree
+    let dir = fixture_dir("s1_notable");
+    write(
+        &dir,
+        "peer.rs",
+        "pub fn f() {\n\
+         \x20   // lint: proto(Run)\n\
+         \x20   { }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "proto region without a table must fail");
+    assert!(err.contains("[S1]"), "stderr: {err}");
+    assert!(err.contains("no protocol table"), "stderr: {err}");
+
+    // a state the table does not define
+    let dir = fixture_dir("s1_state");
+    write(&dir, "transport/protocol.rs", MINI_PROTOCOL);
+    write(
+        &dir,
+        "transport/peer.rs",
+        "pub fn f() {\n\
+         \x20   // lint: proto(Warp)\n\
+         \x20   { }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "unknown proto state must fail");
+    assert!(err.contains("[S1]"), "stderr: {err}");
+    assert!(err.contains("Warp"), "stderr: {err}");
+
+    // an unparseable table is itself an S1 diagnostic
+    let dir = fixture_dir("s1_badtable");
+    write(&dir, "transport/protocol.rs", "pub fn nothing() {}\n");
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "a protocol.rs without TRANSITIONS must fail");
+    assert!(err.contains("[S1]"), "stderr: {err}");
+    assert!(err.contains("protocol.rs:1"), "stderr: {err}");
+}
+
+#[test]
+fn binary_flags_r1_slabs_lost_on_early_exits() {
+    let dir = fixture_dir("r1");
+    write(
+        &dir,
+        "pool.rs",
+        "pub fn leak(p: &mut Pool, bad: bool) -> Result<()> {\n\
+         \x20   // lint: pooled\n\
+         \x20   {\n\
+         \x20       let slab = p.slot.take();\n\
+         \x20       if bad {\n\
+         \x20           return Err(boom());\n\
+         \x20       }\n\
+         \x20       send_cmd(slab);\n\
+         \x20   }\n\
+         \x20   Ok(())\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "R1 fixture must fail the lint");
+    assert!(err.contains("[R1]"), "stderr: {err}");
+    assert!(err.contains("pool.rs:6"), "stderr: {err}");
+
+    // recycling on every path passes
+    write(
+        &dir,
+        "pool.rs",
+        "pub fn clean(p: &mut Pool, bad: bool) -> Result<()> {\n\
+         \x20   // lint: pooled\n\
+         \x20   {\n\
+         \x20       let slab = p.slot.take();\n\
+         \x20       if bad {\n\
+         \x20           p.slot.recycle(slab);\n\
+         \x20           return Err(boom());\n\
+         \x20       }\n\
+         \x20       send_cmd(slab);\n\
+         \x20   }\n\
+         \x20   Ok(())\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(ok, "recycled-on-every-path fixture must pass: {err}");
+}
+
+#[test]
+fn binary_flags_d3_clock_reads_in_deterministic_regions() {
+    let dir = fixture_dir("d3");
+    write(
+        &dir,
+        "reduce.rs",
+        "pub fn reduce(xs: &[f32]) -> f32 {\n\
+         \x20   // lint: deterministic\n\
+         \x20   {\n\
+         \x20       let t = std::time::Instant::now();\n\
+         \x20       xs.iter().sum::<f32>() + t.elapsed().as_secs_f32()\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "D3 fixture must fail the lint");
+    assert!(err.contains("[D3]"), "stderr: {err}");
+    assert!(err.contains("reduce.rs:4"), "stderr: {err}");
+
+    // the same clock read outside the region is fine
+    write(
+        &dir,
+        "reduce.rs",
+        "pub fn timed(xs: &[f32]) -> f32 {\n\
+         \x20   let t = std::time::Instant::now();\n\
+         \x20   // lint: deterministic\n\
+         \x20   {\n\
+         \x20       xs.iter().sum::<f32>()\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(ok, "clock outside the region must pass: {err}");
+}
+
+#[test]
+fn binary_emits_machine_readable_json_reports() {
+    use parle::util::json::Json;
+    let dir = fixture_dir("json");
+    write(
+        &dir,
+        "derive.rs",
+        "pub fn device_seed(seed: u64) -> i32 {\n    seed as i32\n}\n",
+    );
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+        .arg(&dir)
+        .arg("--format")
+        .arg("json")
+        .output()
+        .expect("spawn pallas_lint");
+    assert!(!out.status.success(), "violating tree must exit nonzero");
+    let j = Json::parse(&String::from_utf8_lossy(&out.stdout))
+        .expect("stdout must be one JSON object");
+    assert_eq!(j.usize_of("version").unwrap(), 1);
+    assert_eq!(j.usize_of("files").unwrap(), 1);
+    assert_eq!(j.usize_of("violations").unwrap(), 1);
+    let d = j.req("diagnostics").unwrap().as_arr().unwrap();
+    assert_eq!(d[0].str_of("rule").unwrap(), "D2");
+    assert_eq!(d[0].usize_of("line").unwrap(), 2);
+    assert!(d[0].str_of("file").unwrap().ends_with("derive.rs"));
+
+    // an unknown format is a usage error, not a silent default
+    let bad = Command::new(env!("CARGO_BIN_EXE_pallas_lint"))
+        .arg(&dir)
+        .arg("--format")
+        .arg("yaml")
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+}
+
 #[test]
 fn binary_exits_zero_on_the_real_tree() {
     // the acceptance gate: `cargo run --bin pallas_lint` on this repo

@@ -410,6 +410,260 @@ fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
     }
 }
 
+/// The brace-matching region annotator under random nesting: its
+/// pairing table agrees with a reference recursive-descent matcher,
+/// and every region mask (`hot-path`, `deterministic`, `pooled`,
+/// `proto(...)`, `#[cfg(test)]`) covers exactly the sentinel
+/// statements generated inside that region — including directives
+/// nested in other regions, regions inside test mods, and fn items
+/// threaded through both.
+#[test]
+fn prop_annotator_regions_match_reference_matcher() {
+    use parle::lint::annotate::annotate;
+    use parle::lint::scanner::{scan, Tok, Token};
+    use std::collections::BTreeSet;
+
+    #[derive(Clone, Copy, Default)]
+    struct Ctx {
+        hot: bool,
+        det: bool,
+        pooled: bool,
+        proto: bool,
+        test: bool,
+    }
+
+    #[derive(Default)]
+    struct Gen {
+        src: String,
+        next_id: usize,
+        hot: BTreeSet<String>,
+        det: BTreeSet<String>,
+        pooled: BTreeSet<String>,
+        proto: BTreeSet<String>,
+        test: BTreeSet<String>,
+        pooled_regions: usize,
+        proto_regions: usize,
+    }
+
+    impl Gen {
+        fn line(&mut self, s: &str) {
+            self.src.push_str(s);
+            self.src.push('\n');
+        }
+        fn fresh(&mut self, prefix: &str) -> String {
+            let name = format!("{prefix}{}", self.next_id);
+            self.next_id += 1;
+            name
+        }
+        /// Emit one sentinel statement and record which regions the
+        /// generator knows it sits in.
+        fn stmt(&mut self, ctx: Ctx) {
+            let id = self.fresh("id_");
+            if ctx.hot {
+                self.hot.insert(id.clone());
+            }
+            if ctx.det {
+                self.det.insert(id.clone());
+            }
+            if ctx.pooled {
+                self.pooled.insert(id.clone());
+            }
+            if ctx.proto {
+                self.proto.insert(id.clone());
+            }
+            if ctx.test {
+                self.test.insert(id.clone());
+            }
+            let s = format!("{id}();");
+            self.line(&s);
+        }
+    }
+
+    fn gen_items(rng: &mut Pcg64, g: &mut Gen, depth: usize, ctx: Ctx) {
+        for _ in 0..1 + rng.next_below(3) {
+            match rng.next_below(7) {
+                0 | 1 if depth < 3 => {
+                    // plain block, possibly region-marked
+                    let mut c = ctx;
+                    match rng.next_below(5) {
+                        0 => {
+                            g.line("// lint: hot-path");
+                            c.hot = true;
+                        }
+                        1 => {
+                            g.line("// lint: deterministic -- gen");
+                            c.det = true;
+                        }
+                        2 => {
+                            g.line("// lint: pooled");
+                            c.pooled = true;
+                            g.pooled_regions += 1;
+                        }
+                        3 => {
+                            g.line("// lint: proto(Run) -- gen");
+                            c.proto = true;
+                            g.proto_regions += 1;
+                        }
+                        _ => {}
+                    }
+                    g.line("{");
+                    gen_items(rng, g, depth + 1, c);
+                    g.line("}");
+                }
+                2 if depth < 3 => {
+                    let name = g.fresh("fn_");
+                    let hdr = format!("fn {name}() {{");
+                    g.line(&hdr);
+                    gen_items(rng, g, depth + 1, ctx);
+                    g.line("}");
+                }
+                3 if depth < 2 => {
+                    let name = g.fresh("tmod_");
+                    g.line("#[cfg(test)]");
+                    let hdr = format!("mod {name} {{");
+                    g.line(&hdr);
+                    let mut c = ctx;
+                    c.test = true;
+                    gen_items(rng, g, depth + 1, c);
+                    g.line("}");
+                }
+                _ => g.stmt(ctx),
+            }
+        }
+    }
+
+    /// Reference matcher: recursive descent instead of the annotator's
+    /// explicit stack.
+    fn reference_match(toks: &[Token]) -> Vec<Option<usize>> {
+        fn rec(
+            toks: &[Token],
+            mut i: usize,
+            out: &mut Vec<Option<usize>>,
+        ) -> usize {
+            while i < toks.len() {
+                if toks[i].is_punct('{') {
+                    let close = rec(toks, i + 1, out);
+                    if close < toks.len() {
+                        out[i] = Some(close);
+                        out[close] = Some(i);
+                    }
+                    i = close + 1;
+                } else if toks[i].is_punct('}') {
+                    return i;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.len()
+        }
+        let mut out = vec![None; toks.len()];
+        rec(toks, 0, &mut out);
+        out
+    }
+
+    fn mask_ids(toks: &[Token], mask: &[bool]) -> BTreeSet<String> {
+        toks.iter()
+            .enumerate()
+            .filter(|(i, t)| {
+                mask[*i]
+                    && t.kind == Tok::Ident
+                    && t.text.starts_with("id_")
+            })
+            .map(|(_, t)| t.text.clone())
+            .collect()
+    }
+
+    fn span_ids(
+        toks: &[Token],
+        spans: &[(usize, usize)],
+    ) -> BTreeSet<String> {
+        let mut out = BTreeSet::new();
+        for &(open, close) in spans {
+            for t in &toks[open..=close] {
+                if t.kind == Tok::Ident && t.text.starts_with("id_") {
+                    out.insert(t.text.clone());
+                }
+            }
+        }
+        out
+    }
+
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 12);
+        let mut g = Gen::default();
+        gen_items(&mut rng, &mut g, 0, Ctx::default());
+        let s = scan(&g.src);
+        let a = annotate(&s);
+        assert!(
+            a.errors.is_empty(),
+            "case {case}: {:?}\n{}",
+            a.errors,
+            g.src
+        );
+        assert_eq!(
+            a.matching,
+            reference_match(&s.tokens),
+            "case {case}: brace pairing diverges\n{}",
+            g.src
+        );
+        assert_eq!(
+            mask_ids(&s.tokens, &a.hot),
+            g.hot,
+            "case {case}: hot mask\n{}",
+            g.src
+        );
+        assert_eq!(
+            mask_ids(&s.tokens, &a.deterministic),
+            g.det,
+            "case {case}: deterministic mask\n{}",
+            g.src
+        );
+        assert_eq!(
+            mask_ids(&s.tokens, &a.in_test),
+            g.test,
+            "case {case}: cfg(test) mask\n{}",
+            g.src
+        );
+        assert_eq!(
+            a.pooled_regions.len(),
+            g.pooled_regions,
+            "case {case}: pooled region count\n{}",
+            g.src
+        );
+        assert_eq!(
+            a.proto_regions.len(),
+            g.proto_regions,
+            "case {case}: proto region count\n{}",
+            g.src
+        );
+        let pooled: Vec<(usize, usize)> = a
+            .pooled_regions
+            .iter()
+            .map(|r| (r.open, r.close))
+            .collect();
+        assert_eq!(
+            span_ids(&s.tokens, &pooled),
+            g.pooled,
+            "case {case}: pooled spans\n{}",
+            g.src
+        );
+        let proto: Vec<(usize, usize)> = a
+            .proto_regions
+            .iter()
+            .map(|r| (r.open, r.close))
+            .collect();
+        assert_eq!(
+            span_ids(&s.tokens, &proto),
+            g.proto,
+            "case {case}: proto spans\n{}",
+            g.src
+        );
+        for r in &a.proto_regions {
+            assert_eq!(r.states, vec!["Run".to_string()], "case {case}");
+        }
+    }
+}
+
 #[test]
 fn prop_stats_quantiles_ordered() {
     for case in 0..CASES {
