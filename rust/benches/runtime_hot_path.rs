@@ -3,6 +3,9 @@
 //! * the comm fabric: synchronous round barrier vs the asynchronous
 //!   event loop under a rotating-straggler delay skew (no artifacts
 //!   needed — pure fabric threads),
+//! * the bucketed streaming reduce vs the monolithic round at P >= 1e6
+//!   on both transports — rows also persisted machine-readably to
+//!   `BENCH_roundtrip.json` (CI uploads it as an artifact),
 //! * artifact dispatch: per-minibatch `inner_step` vs the fused
 //!   `inner_scan` (the L2 perf lever — 1 dispatch + 2 host copies per
 //!   round instead of L),
@@ -19,13 +22,15 @@ use parle::config::CommCfg;
 use parle::coordinator::comm::{simulate_transfer, AsyncPacer,
                                ReduceFabric, ReplicaEndpoint, RoundConsts,
                                RoundMsg, RoundReport};
-use parle::coordinator::transport::{TcpTransport, TcpWorkerLink};
+use parle::coordinator::transport::{ephemeral_listener, TcpTransport,
+                                    TcpWorkerLink};
 use parle::data::batcher::{Augment, Batcher};
 use parle::data::{build, DataConfig};
 use parle::opt::vecmath;
 use parle::runtime::round_driver::{self, InnerRound};
 use parle::runtime::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32,
                      Session};
+use parle::util::json::Json;
 use parle::util::rng::Pcg64;
 
 fn main() -> parle::Result<()> {
@@ -38,6 +43,9 @@ fn main() -> parle::Result<()> {
 
     section("comm fabric: in-process channels vs loopback TCP (sync round)");
     bench_transport_round_latency();
+
+    section("comm fabric: bucketed streaming reduce vs monolithic round");
+    bench_bucketed_overlap()?;
 
     let session = Session::open("artifacts")?;
 
@@ -360,12 +368,13 @@ fn bench_transport_round_latency() {
 
         // loopback TCP (workers = threads in this process, but every
         // payload crosses real sockets)
-        let addr = "127.0.0.1:47699";
+        let (listener, addr) = ephemeral_listener().unwrap();
         let workers: Vec<_> = (0..n)
             .map(|_| {
+                let addr = addr.clone();
                 std::thread::spawn(move || -> parle::Result<()> {
                     let link = TcpWorkerLink::connect(
-                        addr,
+                        &addr,
                         n,
                         std::time::Duration::from_secs(10),
                     )?;
@@ -391,7 +400,12 @@ fn bench_transport_round_latency() {
                 })
             })
             .collect();
-        let transport = TcpTransport::listen(addr, n).unwrap();
+        let transport = TcpTransport::accept_workers(
+            listener,
+            n,
+            std::time::Duration::from_secs(10),
+        )
+        .unwrap();
         let mut fabric =
             ReduceFabric::with_transport(vec![0; n], Box::new(transport));
         let t = std::time::Instant::now();
@@ -414,6 +428,200 @@ fn bench_transport_round_latency() {
             (2 * n * p * 4) as f64 / tcp_s / 1e9
         );
     }
+}
+
+struct RoundTrial {
+    round_s: f64,
+    collect_s: f64,
+    reduce_s: f64,
+    bytes_per_round: f64,
+}
+
+/// One transport × bucket-size configuration of the streamed sync
+/// round: echo workers with a small per-replica report skew (like
+/// slightly uneven compute legs), timed over `rounds` barriers after a
+/// warmup. `collect_s` is the exposed barrier wait (which, bucketed,
+/// already absorbed the per-bucket mean reduces), `reduce_s` the mean
+/// time still exposed after it when the engine asks for the reduced
+/// reference.
+fn roundtrip_trial(
+    transport: &str,
+    p: usize,
+    n: usize,
+    bucket_bytes: usize,
+    rounds: u64,
+) -> parle::Result<RoundTrial> {
+    let consts = RoundConsts {
+        lr: 0.1,
+        gamma_inv: 0.01,
+        rho_inv: 1.0,
+        eta_over_rho: 0.1,
+    };
+    let mut tcp_workers = Vec::new();
+    let mut fabric = if transport == "tcp" {
+        let (listener, addr) = ephemeral_listener()?;
+        for _ in 0..n {
+            let addr = addr.clone();
+            tcp_workers.push(std::thread::spawn(
+                move || -> parle::Result<()> {
+                    let link = TcpWorkerLink::connect(
+                        &addr,
+                        n,
+                        std::time::Duration::from_secs(10),
+                    )?;
+                    let ep = ReplicaEndpoint::remote(link);
+                    while let Some(msg) = ep.recv() {
+                        std::thread::sleep(
+                            std::time::Duration::from_micros(
+                                1500 * ep.id() as u64,
+                            ),
+                        );
+                        let RoundMsg {
+                            round,
+                            xref,
+                            mut slab,
+                            ..
+                        } = msg;
+                        slab.copy_from_slice(&xref);
+                        ep.report(RoundReport {
+                            replica: ep.id(),
+                            round,
+                            params: slab,
+                            train_loss: 0.0,
+                            train_err: 0.0,
+                            step_s: 0.0,
+                        });
+                    }
+                    Ok(())
+                },
+            ));
+        }
+        ReduceFabric::with_transport(
+            vec![0; n],
+            Box::new(TcpTransport::accept_workers(
+                listener,
+                n,
+                std::time::Duration::from_secs(10),
+            )?),
+        )
+    } else {
+        let mut f = ReduceFabric::flat(n, CommCfg::off());
+        for _ in 0..n {
+            f.spawn_worker(move |ep| {
+                while let Some(msg) = ep.recv() {
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        1500 * ep.id() as u64,
+                    ));
+                    let RoundMsg {
+                        round,
+                        xref,
+                        mut slab,
+                        ..
+                    } = msg;
+                    slab.copy_from_slice(&xref);
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round,
+                        params: slab,
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            })?;
+        }
+        f
+    };
+    fabric.set_bucket_bytes(bucket_bytes);
+    let meter = fabric.meter();
+    let xref = vec![0.5f32; p];
+    let mut out = vec![0.0f32; p];
+    for _ in 0..2 {
+        fabric.broadcast(consts, &[xref.as_slice()]);
+        fabric.collect()?;
+        fabric.reduce_into(&mut out);
+    }
+    let bytes0 = meter.bytes();
+    let (mut collect_s, mut reduce_s) = (0.0f64, 0.0f64);
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        fabric.broadcast(consts, &[xref.as_slice()]);
+        let t = std::time::Instant::now();
+        fabric.collect()?;
+        collect_s += t.elapsed().as_secs_f64();
+        let t = std::time::Instant::now();
+        fabric.reduce_into(&mut out);
+        reduce_s += t.elapsed().as_secs_f64();
+    }
+    let round_s = t0.elapsed().as_secs_f64() / rounds as f64;
+    let bytes_per_round =
+        (meter.bytes() - bytes0) as f64 / rounds as f64;
+    fabric.shutdown()?;
+    for w in tcp_workers {
+        w.join().expect("bench worker panicked")?;
+    }
+    Ok(RoundTrial {
+        round_s,
+        collect_s: collect_s / rounds as f64,
+        reduce_s: reduce_s / rounds as f64,
+        bytes_per_round,
+    })
+}
+
+/// The tentpole measurement: synchronous rounds at P = 1e6 with the
+/// parameter stream split into buckets, against the legacy whole-vector
+/// round — on both transports. Bucketed, the master reduces each bucket
+/// as soon as every replica's copy has landed, overlapping the mean
+/// with the wait for later arrivals (and, over TCP, with the wire
+/// itself); monolithic, the whole reduce sits exposed after the last
+/// report. Rows are persisted to `BENCH_roundtrip.json` for machine
+/// consumption (CI uploads it as an artifact).
+fn bench_bucketed_overlap() -> parle::Result<()> {
+    let n = 3usize;
+    let p = 1_000_000usize;
+    let mut rows = Vec::new();
+    for transport in ["channels", "tcp"] {
+        for bucket_bytes in [0usize, 1 << 20, 4 << 20] {
+            let rounds = if transport == "tcp" { 10u64 } else { 20 };
+            let trial =
+                roundtrip_trial(transport, p, n, bucket_bytes, rounds)?;
+            println!(
+                "{transport:<8} bucket={bucket_bytes:>8}  round \
+                 {:8.2} ms  collect {:8.2} ms  reduce-exposed {:6.3} ms  \
+                 ({:.1} MB/round)",
+                trial.round_s * 1e3,
+                trial.collect_s * 1e3,
+                trial.reduce_s * 1e3,
+                trial.bytes_per_round / 1e6
+            );
+            rows.push(Json::Obj(vec![
+                ("transport".into(), Json::Str(transport.into())),
+                ("bucket_bytes".into(), Json::Num(bucket_bytes as f64)),
+                ("rounds".into(), Json::Num(rounds as f64)),
+                ("round_s".into(), Json::Num(trial.round_s)),
+                ("collect_s".into(), Json::Num(trial.collect_s)),
+                (
+                    "reduce_exposed_s".into(),
+                    Json::Num(trial.reduce_s),
+                ),
+                (
+                    "bytes_per_round".into(),
+                    Json::Num(trial.bytes_per_round),
+                ),
+            ]));
+        }
+    }
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("fabric_roundtrip".into())),
+        ("p".into(), Json::Num(p as f64)),
+        ("replicas".into(), Json::Num(n as f64)),
+        ("rows".into(), Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_roundtrip.json", doc.to_string())
+        .map_err(anyhow::Error::from)?;
+    println!("  -> wrote BENCH_roundtrip.json");
+    Ok(())
 }
 
 /// One L-step inner round dispatched two ways: the old literal path

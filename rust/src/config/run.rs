@@ -208,6 +208,13 @@ pub struct RunConfig {
     /// single-batch async steps then match one barrier step on the
     /// n-batch mean gradient to first order). `--set async_lr_rescale=1`.
     pub async_lr_rescale: bool,
+    /// Sync mode: split each round's parameter vector into buckets of
+    /// this many **bytes** so the master reduces early buckets while
+    /// later ones are still in flight (streaming reduce). `0` restores
+    /// the legacy whole-vector round. Purely a comm-layer knob: the
+    /// reduced means are bit-identical for every value, so it is
+    /// excluded from the replay fingerprint. Ignored in async mode.
+    pub reduce_bucket_bytes: usize,
     /// Fabric transport: in-process worker threads (default) or TCP to
     /// remote worker processes.
     pub transport: TransportCfg,
@@ -264,6 +271,7 @@ impl RunConfig {
             comm_mode: CommMode::Sync,
             max_staleness: 4,
             async_lr_rescale: false,
+            reduce_bucket_bytes: 16 << 20,
             transport: TransportCfg::InProcess,
             listen: None,
             seed: 42,
@@ -307,6 +315,9 @@ impl RunConfig {
             "async_lr_rescale" => {
                 self.async_lr_rescale = parse_flag(value)?
             }
+            "reduce_bucket_bytes" | "bucket_bytes" => {
+                self.reduce_bucket_bytes = value.parse()?
+            }
             "transport" => self.transport = TransportCfg::parse(value)?,
             "listen" => self.listen = Some(value.to_string()),
             "scoping" => {
@@ -347,6 +358,10 @@ impl RunConfig {
     /// structurally by the engine. `transport`/`listen` are excluded
     /// because sync-mode training is bit-identical across transports —
     /// a checkpoint written over TCP resumes in-process and vice versa.
+    /// `reduce_bucket_bytes` is likewise excluded: the streaming
+    /// bucketed reduce is bit-identical to the monolithic one for every
+    /// bucket size (pinned by the fabric's cross-bucket-size equality
+    /// tests), so a checkpoint resumes under any bucketing.
     pub fn replay_fingerprint(&self) -> u64 {
         let canon = format!(
             "model={};alpha={};momentum={};wd={};lr={}@{:?}/{};\
@@ -521,6 +536,22 @@ mod tests {
         assert!(c.set("async_lr_rescale", "maybe").is_err());
         // excluded from the replay fingerprint, like comm_mode
         let base = RunConfig::new("mlp_synth", Algo::SgdDataParallel);
+        assert_eq!(base.replay_fingerprint(), c.replay_fingerprint());
+    }
+
+    #[test]
+    fn reduce_bucket_bytes_overrides_and_fingerprint() {
+        let mut c = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(c.reduce_bucket_bytes, 16 << 20);
+        c.set("reduce_bucket_bytes", "4096").unwrap();
+        assert_eq!(c.reduce_bucket_bytes, 4096);
+        c.set("bucket_bytes", "0").unwrap();
+        assert_eq!(c.reduce_bucket_bytes, 0);
+        assert!(c.set("reduce_bucket_bytes", "lots").is_err());
+        assert!(c.validate().is_ok());
+        // a comm-layer knob: the bucketed reduce is bit-identical to
+        // the monolithic one, so the replay fingerprint ignores it
+        let base = RunConfig::new("mlp_synth", Algo::Parle);
         assert_eq!(base.replay_fingerprint(), c.replay_fingerprint());
     }
 

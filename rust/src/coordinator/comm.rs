@@ -49,6 +49,29 @@
 //!   ships the same vectors out again. Replicas therefore never clone
 //!   their parameter vector to report it.
 //!
+//! # Bucketed streaming (sync rounds)
+//!
+//! With [`ReduceFabric::set_bucket_bytes`] set, the sync round is
+//! *pipelined* instead of monolithic: report payloads ship as
+//! fixed-size buckets ([`vecmath::bucket_count`] /
+//! [`vecmath::bucket_range`] own the geometry), the fabric keeps a
+//! per-replica arrival bitmap, and the moment a group's last copy of
+//! bucket `k` lands, that bucket's range mean reduces
+//! ([`vecmath::mean_range_into`]) — while later buckets are still on
+//! the wire and slower replicas still compute. By the time the round
+//! barrier closes, [`ReduceFabric::reduce_into`] is usually a plain
+//! copy of the already-streamed mean. Each replica still sends a
+//! closing [`RoundReport`] (stats, empty params) after its buckets;
+//! the fabric reinstalls the assembled P-slab into it so recycling and
+//! [`ReduceFabric::report_params`] behave exactly as in monolithic
+//! mode. Bit-exactness is by construction: the range kernel keeps
+//! `mean_into`'s per-element accumulation order, so bucketed and
+//! monolithic rounds agree bitwise regardless of arrival order. The
+//! channel transport streams buckets as `Arc` handles onto one shared
+//! slab (zero copy); the TCP transport splits real frames
+//! (`TAG_BUCKET_REPORT` / `TAG_BUCKET_BCAST`) and scatters them into
+//! pooled slabs master-side. Async legs are always monolithic.
+//!
 //! # The transport seam
 //!
 //! How messages physically move lives behind the
@@ -93,7 +116,7 @@
 //! a `wait.r<id>` phase — per-replica exposed wait instead of one
 //! opaque barrier number.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -127,6 +150,11 @@ pub struct RoundMsg {
     /// Recycled report buffer (length P) the replica fills with its
     /// parameters instead of allocating/cloning a fresh vector.
     pub slab: Vec<f32>,
+    /// Bucket size, in f32 elements, this round streams its payloads
+    /// at (0 = legacy whole-vector frames). The worker mirrors the
+    /// same bucket geometry in its report so the master can reduce
+    /// each bucket as soon as every replica delivered it.
+    pub bucket_elems: usize,
     pub consts: RoundConsts,
 }
 
@@ -195,9 +223,44 @@ pub struct RoundReport {
     pub step_s: f64,
 }
 
+/// How one bucket's elements reach the master.
+pub enum BucketPayload {
+    /// The replica's full P-slab, shared zero-copy (in-process
+    /// channels): this bucket is the `[offset, offset + len)` window
+    /// into it. The master keeps one handle per replica and drops the
+    /// rest, so the closing report's `Arc::try_unwrap` recovers the
+    /// slab for the pool without a copy.
+    Shared(Arc<Vec<f32>>),
+    /// Just this bucket's elements, decoded into a pooled buffer (wire
+    /// transports). The fabric copies them into the replica's assembly
+    /// slab and hands the spent buffer back via
+    /// [`Transport::recycle_bucket`].
+    Owned(Vec<f32>),
+}
+
+/// One bucket of a replica's report (the streaming-reduce path):
+/// element range `[offset, offset + len)` of the replica's P-vector
+/// for the stamped round. The round still closes with a stats-only
+/// [`RoundReport`] carrying empty params once every bucket was sent.
+pub struct BucketReport {
+    pub replica: usize,
+    pub round: u64,
+    /// Bucket index within the round (0-based).
+    pub bucket: u32,
+    /// Total buckets this round splits into.
+    pub n_buckets: u32,
+    /// Element offset of this bucket within the P-vector.
+    pub offset: usize,
+    pub data: BucketPayload,
+}
+
 /// What replicas push onto the fabric's single master-bound stream.
 pub enum FabricEvent {
     Report(RoundReport),
+    /// One bucket of an in-flight round's report (bucketed streaming
+    /// reduce); the master reduces bucket `k` the moment every replica
+    /// of the group delivered its copy of `k`.
+    BucketReport(BucketReport),
     /// The worker's thread body returned (cleanly or with an error) —
     /// or, on the wire, its connection closed cleanly. Receiving this
     /// mid-run means the replica can no longer report — the master
@@ -275,6 +338,12 @@ pub struct ReplicaEndpoint {
     /// arrive pre-decoded. See
     /// [`crate::coordinator::transport::protocol`].
     monitor: RefCell<ProtocolMonitor>,
+    /// Bucket geometry of the last received round (from
+    /// [`RoundMsg::bucket_elems`]): when nonzero, reports on the
+    /// channel link stream out as per-bucket events. The TCP link
+    /// tracks its own copy (it learns the geometry from the raw bucket
+    /// frames).
+    bucket_elems: Cell<usize>,
 }
 
 impl ReplicaEndpoint {
@@ -299,6 +368,7 @@ impl ReplicaEndpoint {
             monitor: RefCell::new(ProtocolMonitor::established(
                 "worker", id,
             )),
+            bucket_elems: Cell::new(0),
         }
     }
 
@@ -318,6 +388,7 @@ impl ReplicaEndpoint {
             monitor: RefCell::new(ProtocolMonitor::established(
                 "worker", id,
             )),
+            bucket_elems: Cell::new(0),
         }
     }
 
@@ -357,6 +428,7 @@ impl ReplicaEndpoint {
                 match cmd {
                     RoundCmd::Round(msg) => {
                         simulate_transfer(&self.comm, msg.xref.len() * 4);
+                        self.bucket_elems.set(msg.bucket_elems);
                         Some(WorkerCmd::Round(msg))
                     }
                     RoundCmd::Snapshot => Some(WorkerCmd::Snapshot),
@@ -447,6 +519,14 @@ impl ReplicaEndpoint {
     pub fn report(&self, report: RoundReport) {
         match &self.link {
             EndpointLink::Channel { event_tx, .. } => {
+                let bytes = report.params.len() * 4;
+                simulate_transfer(&self.comm, bytes);
+                self.meter.account(bytes);
+                let be = self.bucket_elems.get();
+                if be > 0 && !report.params.is_empty() {
+                    self.report_bucketed(event_tx, report, be);
+                    return;
+                }
                 // as with snapshots: log a violation but send anyway so
                 // the master's monitor fails its receive with a typed
                 // error instead of its barrier hanging on nothing
@@ -461,9 +541,6 @@ impl ReplicaEndpoint {
                         &format!("replica {}: {v}", self.id),
                     );
                 }
-                let bytes = report.params.len() * 4;
-                simulate_transfer(&self.comm, bytes);
-                self.meter.account(bytes);
                 event_tx.send(FabricEvent::Report(report)).ok();
             }
             EndpointLink::Tcp(link) => {
@@ -488,6 +565,82 @@ impl ReplicaEndpoint {
             }
         }
     }
+
+    /// Stream a report as per-bucket events (channel link): the full
+    /// P-slab moves into one `Arc` shared by every bucket event — zero
+    /// copy; the master keeps a single handle and its closing
+    /// `Arc::try_unwrap` recovers the slab for the pool — followed by
+    /// the stats-only closing report with empty params.
+    // lint: hot-path -- steady-state allocation is the Arc control
+    // block only; the P-sized slab itself is moved, never copied
+    fn report_bucketed(
+        &self,
+        event_tx: &Sender<FabricEvent>,
+        mut report: RoundReport,
+        bucket_elems: usize,
+    ) {
+        let params = std::mem::take(&mut report.params);
+        let p = params.len();
+        let n = vecmath::bucket_count(p, bucket_elems);
+        if u32::try_from(n).is_err() {
+            // bucket index would not fit the wire header: degrade to a
+            // monolithic report (the master accepts either shape)
+            report.params = params;
+            if let Err(v) = self
+                .monitor
+                .borrow_mut()
+                .observe(Dir::ToMaster, wire::TAG_REPORT)
+            {
+                crate::util::logging::log(
+                    crate::util::logging::Level::Error,
+                    "fabric",
+                    &format!("replica {}: {v}", self.id),
+                );
+            }
+            event_tx.send(FabricEvent::Report(report)).ok();
+            return;
+        }
+        let shared = Arc::new(params);
+        for k in 0..n {
+            if let Err(v) = self
+                .monitor
+                .borrow_mut()
+                .observe(Dir::ToMaster, wire::TAG_BUCKET_REPORT)
+            {
+                crate::util::logging::log(
+                    crate::util::logging::Level::Error,
+                    "fabric",
+                    &format!("replica {}: {v}", self.id),
+                );
+            }
+            let (lo, _hi) = vecmath::bucket_range(p, bucket_elems, k);
+            event_tx
+                .send(FabricEvent::BucketReport(BucketReport {
+                    replica: report.replica,
+                    round: report.round,
+                    bucket: k as u32,
+                    n_buckets: n as u32,
+                    offset: lo,
+                    data: BucketPayload::Shared(Arc::clone(&shared)),
+                }))
+                .ok();
+        }
+        // every handle is on the stream now; the master holds the last
+        // one once these sends are consumed
+        drop(shared);
+        if let Err(v) = self
+            .monitor
+            .borrow_mut()
+            .observe(Dir::ToMaster, wire::TAG_REPORT)
+        {
+            crate::util::logging::log(
+                crate::util::logging::Level::Error,
+                "fabric",
+                &format!("replica {}: {v}", self.id),
+            );
+        }
+        event_tx.send(FabricEvent::Report(report)).ok();
+    }
 }
 
 /// Per-round aggregate statistics from [`ReduceFabric::collect`].
@@ -507,6 +660,52 @@ pub struct RoundStats {
 /// the steady state only ever reuses slabs this handed out once.
 fn fresh_slab(p: usize) -> Vec<f32> {
     vec![0.0f32; p]
+}
+
+/// Recover the slab out of a shared bucket payload. The fast path is
+/// `Arc::try_unwrap`: the master drops its duplicate handles as buckets
+/// arrive, so by the closing report the worker-side `Arc` is uniquely
+/// held and the P-slab moves out without a copy.
+fn unwrap_shared(arc: Arc<Vec<f32>>) -> Vec<f32> {
+    match Arc::try_unwrap(arc) {
+        Ok(v) => v,
+        Err(a) => clone_shared(&a),
+    }
+}
+
+/// Copy-out fallback for a still-shared bucket payload (a worker that
+/// kept a handle past its closing report — never the fabric's own
+/// endpoints). Split out and marked cold so the hot path stays a move.
+#[cold]
+fn clone_shared(a: &Arc<Vec<f32>>) -> Vec<f32> {
+    a.as_ref().clone()
+}
+
+/// One replica's in-flight bucket payload during a streamed round.
+/// Channel workers ship the whole slab behind one `Arc` (every bucket
+/// event carries a handle to it); wire readers deliver owned per-bucket
+/// buffers that the master scatters into a pooled P-slab.
+enum AsmBuf {
+    Shared(Arc<Vec<f32>>),
+    Owned(Vec<f32>),
+}
+
+impl AsmBuf {
+    fn view(&self) -> &[f32] {
+        match self {
+            AsmBuf::Shared(a) => a.as_slice(),
+            AsmBuf::Owned(v) => v.as_slice(),
+        }
+    }
+}
+
+/// Per-replica bucket arrival state for the in-flight streamed round:
+/// the payload being assembled and a per-bucket arrival bitmap.
+#[derive(Default)]
+struct BucketAsm {
+    buf: Option<AsmBuf>,
+    got: Vec<bool>,
+    n_got: u32,
 }
 
 /// Master-side communication fabric shared by all training drivers:
@@ -541,6 +740,38 @@ pub struct ReduceFabric {
     /// Precomputed `wait.r<id>` phase keys, one per replica, so the
     /// per-report attribution allocates nothing in the master loop.
     wait_keys: Vec<String>,
+    /// Bucket size in f32 elements for the streaming sync reduce
+    /// (0 = legacy whole-vector rounds). Set via
+    /// [`ReduceFabric::set_bucket_bytes`]; stamped on every sync
+    /// `RoundMsg` so workers mirror the geometry in their reports.
+    bucket_elems: usize,
+    /// Per-replica bucket assembly state for the in-flight streamed
+    /// round (allocated at the first bucketed broadcast, recycled
+    /// after).
+    asm: Vec<BucketAsm>,
+    /// `pending[g][k]`: replicas in group g whose copy of bucket k has
+    /// not arrived yet. Hitting zero triggers the streamed reduce of
+    /// bucket k for that group — communication overlapping compute on
+    /// the still-outstanding buckets.
+    pending: Vec<Vec<u32>>,
+    /// Buckets (summed over groups) still missing this round; zero
+    /// means every [`ReduceFabric::reduce_into`] answer is ready before
+    /// the round barrier even closes.
+    pending_total: usize,
+    /// Per-group streamed means, written bucket-by-bucket as arrivals
+    /// complete; served by the reduce calls when `means_complete`.
+    bucket_means: Vec<Vec<f32>>,
+    /// Every bucket of the in-flight round arrived and reduced.
+    means_complete: bool,
+    /// Replicas per broadcast group (fixed at construction): the
+    /// initial value of every `pending[g][k]` countdown.
+    group_size: Vec<u32>,
+    /// Round stamp the assembly state was armed for.
+    asm_round: u64,
+    /// Parameter count the assembly state was armed for.
+    asm_p: usize,
+    /// Bucket count the assembly state was armed for.
+    asm_buckets: u32,
 }
 
 impl ReduceFabric {
@@ -564,6 +795,10 @@ impl ReduceFabric {
             "transport replica slots must match the group map"
         );
         let n_groups = groups.iter().copied().max().map_or(1, |g| g + 1);
+        let mut group_size = vec![0u32; n_groups];
+        for &g in &groups {
+            group_size[g] += 1;
+        }
         ReduceFabric {
             transport,
             handles: Vec::new(),
@@ -577,6 +812,16 @@ impl ReduceFabric {
             round: 0,
             profiler: None,
             wait_keys: (0..n).map(|i| format!("wait.r{i}")).collect(),
+            bucket_elems: 0,
+            asm: Vec::new(),
+            pending: Vec::new(),
+            pending_total: 0,
+            bucket_means: Vec::new(),
+            means_complete: false,
+            group_size,
+            asm_round: 0,
+            asm_p: 0,
+            asm_buckets: 0,
         }
     }
 
@@ -606,6 +851,20 @@ impl ReduceFabric {
     /// profiler (per-replica exposed wait).
     pub fn set_profiler(&mut self, profiler: Arc<PhaseProfiler>) {
         self.profiler = Some(profiler);
+    }
+
+    /// Enable bucketed streaming for synchronous rounds: parameter
+    /// payloads ship as `ceil(bytes / 4)`-element buckets and each
+    /// bucket's group mean reduces the moment its last copy arrives,
+    /// overlapping communication with the reduce. `bytes == 0` keeps
+    /// the legacy whole-vector round. Purely a comm-layer knob — the
+    /// streamed means are bit-identical to the monolithic reduce, since
+    /// [`vecmath::mean_range_into`] keeps the per-element accumulation
+    /// order of [`vecmath::mean_into`]. The async path
+    /// ([`ReduceFabric::send_round_to`]) always stays monolithic.
+    pub fn set_bucket_bytes(&mut self, bytes: usize) {
+        self.bucket_elems = if bytes == 0 { 0 } else { (bytes / 4).max(1) };
+        self.transport.set_bucket_elems(self.bucket_elems);
     }
 
     /// Spawn one worker thread on the next replica slot. The body drives
@@ -660,6 +919,12 @@ impl ReduceFabric {
         );
         let p = refs[0].len();
         self.ensure_bcast_slabs(p);
+        if self.bucket_elems > 0 {
+            // (re)arm the per-replica arrival bitmaps and per-group
+            // countdowns for the round about to go out; warmup-only
+            // allocations, steady state just rewrites counters
+            self.arm_bucket_round(p);
+        }
         let parity = (self.round % 2) as usize;
         // lint: hot-path -- steady-state broadcast: slab writes + recycle
         // lint: pooled -- drained report payloads and pool slabs must all
@@ -685,6 +950,7 @@ impl ReduceFabric {
                     round: self.round,
                     xref: Arc::clone(&self.bcast[self.groups[r]][parity]),
                     slab,
+                    bucket_elems: self.bucket_elems,
                     consts,
                 };
                 // dispatch bytes are accounted inside the transport; a
@@ -751,6 +1017,9 @@ impl ReduceFabric {
                 round,
                 xref: xref_arc,
                 slab,
+                // async legs stay monolithic: replicas sit on different
+                // rounds, so there is no shared barrier to stream into
+                bucket_elems: 0,
                 consts,
             };
             let _ = self.transport.send_cmd(replica, RoundCmd::Round(msg));
@@ -770,32 +1039,297 @@ impl ReduceFabric {
         let t = Timer::new();
         // lint: panic-free -- master event loop: a panic here deadlocks
         {
-            match self.transport.recv_event() {
-                Ok(FabricEvent::Report(rep)) => {
-                    if rep.replica >= self.groups.len() {
+            loop {
+                match self.transport.recv_event() {
+                    Ok(FabricEvent::Report(rep)) => {
+                        if rep.replica >= self.groups.len() {
+                            return Err(anyhow::anyhow!(
+                                "report stamped with unknown replica {} \
+                                 (fabric has {})",
+                                rep.replica,
+                                self.groups.len()
+                            ));
+                        }
+                        if let (Some(prof), Some(key)) =
+                            (&self.profiler, self.wait_keys.get(rep.replica))
+                        {
+                            prof.add(key, t.elapsed_s());
+                        }
+                        return self.finish_report(rep);
+                    }
+                    Ok(FabricEvent::BucketReport(b)) => {
+                        if self.bucket_elems == 0 {
+                            return Err(anyhow::anyhow!(
+                                "stray bucket report from replica {} \
+                                 (bucketing is off)",
+                                b.replica
+                            ));
+                        }
+                        // streamed arrival: fold the bucket in (reducing
+                        // it if it was the group's last copy) and keep
+                        // waiting for a closing report
+                        self.apply_bucket(b)?;
+                    }
+                    Ok(FabricEvent::Exited(id)) => {
                         return Err(anyhow::anyhow!(
-                            "report stamped with unknown replica {} \
-                             (fabric has {})",
-                            rep.replica,
-                            self.groups.len()
+                            "replica {id} exited mid-round"
                         ));
                     }
-                    if let (Some(prof), Some(key)) =
-                        (&self.profiler, self.wait_keys.get(rep.replica))
-                    {
-                        prof.add(key, t.elapsed_s());
+                    Ok(FabricEvent::Failed(id, msg)) => {
+                        return Err(anyhow::anyhow!(
+                            "replica {id} transport failed: {msg}"
+                        ));
                     }
-                    Ok(rep)
+                    Err(e) => return Err(e),
                 }
-                Ok(FabricEvent::Exited(id)) => {
-                    Err(anyhow::anyhow!("replica {id} exited mid-round"))
-                }
-                Ok(FabricEvent::Failed(id, msg)) => Err(anyhow::anyhow!(
-                    "replica {id} transport failed: {msg}"
-                )),
-                Err(e) => Err(e),
             }
         }
+    }
+
+    /// Arm the bucket-assembly state for the sync round about to be
+    /// broadcast: reset arrival bitmaps, per-group countdowns, and the
+    /// per-group streamed-mean slabs. Allocates only at warmup (or when
+    /// `p` changes); the steady state rewrites counters in place.
+    fn arm_bucket_round(&mut self, p: usize) {
+        let n = self.groups.len();
+        let n_buckets = vecmath::bucket_count(p, self.bucket_elems);
+        self.means_complete = false;
+        let Ok(nb32) = u32::try_from(n_buckets) else {
+            // geometry the wire header cannot carry: workers degrade to
+            // monolithic reports, so don't arm streaming at all
+            self.asm_buckets = 0;
+            self.pending_total = 0;
+            return;
+        };
+        self.asm_round = self.round;
+        self.asm_p = p;
+        self.asm_buckets = nb32;
+        // one reduce per (group, bucket) cell still outstanding
+        self.pending_total = n_buckets.saturating_mul(self.n_groups);
+        if self.asm.len() != n {
+            self.asm = (0..n).map(|_| BucketAsm::default()).collect();
+        }
+        for a in &mut self.asm {
+            a.buf = None;
+            a.got.clear();
+            a.got.resize(n_buckets, false);
+            a.n_got = 0;
+        }
+        if self.pending.len() != self.n_groups {
+            self.pending = (0..self.n_groups).map(|_| Vec::new()).collect();
+        }
+        for (g, pk) in self.pending.iter_mut().enumerate() {
+            pk.clear();
+            pk.resize(n_buckets, self.group_size[g]);
+        }
+        if self.bucket_means.len() != self.n_groups {
+            self.bucket_means =
+                (0..self.n_groups).map(|_| fresh_slab(p)).collect();
+        }
+        for m in &mut self.bucket_means {
+            if m.len() != p {
+                m.clear();
+                m.resize(p, 0.0);
+            }
+        }
+    }
+
+    /// Fold one streamed bucket arrival into the in-flight round: stash
+    /// (or scatter) the payload, mark the arrival bitmap, and — when
+    /// this was the group's last outstanding copy of the bucket — run
+    /// the range reduce immediately, overlapping it with the buckets
+    /// still on the wire.
+    fn apply_bucket(&mut self, b: BucketReport) -> Result<()> {
+        let n = self.groups.len();
+        if b.replica >= n {
+            anyhow::bail!(
+                "bucket report stamped with unknown replica {} \
+                 (fabric has {n})",
+                b.replica
+            );
+        }
+        if b.round != self.asm_round || b.n_buckets != self.asm_buckets {
+            anyhow::bail!(
+                "replica {} sent bucket {}/{} for round {}, but the \
+                 fabric is collecting round {} ({} buckets)",
+                b.replica,
+                b.bucket,
+                b.n_buckets,
+                b.round,
+                self.asm_round,
+                self.asm_buckets
+            );
+        }
+        if b.bucket >= self.asm_buckets {
+            anyhow::bail!(
+                "replica {} sent bucket index {} out of range ({} \
+                 buckets)",
+                b.replica,
+                b.bucket,
+                self.asm_buckets
+            );
+        }
+        let k = b.bucket as usize;
+        let (lo, hi) = vecmath::bucket_range(self.asm_p, self.bucket_elems, k);
+        if b.offset != lo {
+            anyhow::bail!(
+                "replica {} bucket {} offset {} disagrees with the \
+                 armed geometry (expected {lo})",
+                b.replica,
+                b.bucket,
+                b.offset
+            );
+        }
+        if self.asm[b.replica].got[k] {
+            anyhow::bail!(
+                "replica {} delivered bucket {} twice in round {}",
+                b.replica,
+                b.bucket,
+                b.round
+            );
+        }
+        match b.data {
+            BucketPayload::Shared(arc) => {
+                if arc.len() != self.asm_p {
+                    anyhow::bail!(
+                        "replica {} shared bucket payload holds {} \
+                         elements, round has {}",
+                        b.replica,
+                        arc.len(),
+                        self.asm_p
+                    );
+                }
+                let a = &mut self.asm[b.replica];
+                match &a.buf {
+                    None => a.buf = Some(AsmBuf::Shared(arc)),
+                    // duplicate handle to the same slab: dropping it
+                    // here is what keeps the closing report's
+                    // `Arc::try_unwrap` a zero-copy move
+                    Some(AsmBuf::Shared(_)) => drop(arc),
+                    Some(AsmBuf::Owned(_)) => anyhow::bail!(
+                        "replica {} mixed shared and owned bucket \
+                         payloads",
+                        b.replica
+                    ),
+                }
+            }
+            BucketPayload::Owned(data) => {
+                if data.len() != hi - lo {
+                    anyhow::bail!(
+                        "replica {} bucket {} carries {} elements, \
+                         geometry says {}",
+                        b.replica,
+                        b.bucket,
+                        data.len(),
+                        hi - lo
+                    );
+                }
+                if self.asm[b.replica].buf.is_none() {
+                    // assemble into the replica's pooled P-slab
+                    // (fresh only on the very first streamed round)
+                    let mut v = self
+                        .slab_pool
+                        .get_mut(b.replica)
+                        .and_then(|s| s.take())
+                        .unwrap_or_default();
+                    v.resize(self.asm_p, 0.0);
+                    self.asm[b.replica].buf = Some(AsmBuf::Owned(v));
+                }
+                match self.asm[b.replica].buf.as_mut() {
+                    Some(AsmBuf::Owned(v)) => {
+                        v[lo..hi].copy_from_slice(&data);
+                    }
+                    _ => anyhow::bail!(
+                        "replica {} mixed shared and owned bucket \
+                         payloads",
+                        b.replica
+                    ),
+                }
+                // hand the per-bucket buffer back to the wire reader's
+                // pool so the next frame decodes into it
+                self.transport.recycle_bucket(b.replica, data);
+            }
+        }
+        let a = &mut self.asm[b.replica];
+        a.got[k] = true;
+        a.n_got += 1;
+        let g = self.groups[b.replica];
+        self.pending[g][k] -= 1;
+        if self.pending[g][k] == 0 {
+            self.reduce_bucket(g, lo, hi);
+            self.pending_total -= 1;
+            if self.pending_total == 0 {
+                self.means_complete = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Range-reduce one completed bucket for group `g` into that
+    /// group's streamed-mean slab.
+    // lint: deterministic -- group members are visited in replica-id
+    // order and the range kernel keeps mean_into's per-element
+    // accumulation order, so streamed means are bit-identical to the
+    // monolithic reduce no matter which order buckets completed in
+    fn reduce_bucket(&mut self, g: usize, lo: usize, hi: usize) {
+        let views: Vec<&[f32]> = self
+            .groups
+            .iter()
+            .enumerate()
+            .filter(|&(_, &gr)| gr == g)
+            .filter_map(|(r, _)| self.asm[r].buf.as_ref())
+            .map(AsmBuf::view)
+            .collect();
+        if views.len() != self.group_size[g] as usize {
+            // unreachable: the countdown only hits zero once every
+            // member installed a payload — but never panic here
+            return;
+        }
+        if let Some(out) = self.bucket_means.get_mut(g) {
+            vecmath::mean_range_into(out, &views, lo, hi);
+        }
+    }
+
+    /// Close out one replica's round report. Monolithic reports (legacy
+    /// mode, or a worker that degraded to one) pass through; a streamed
+    /// report — empty params after a trail of bucket events — must have
+    /// delivered every bucket, and gets the assembled P-slab
+    /// reinstalled so downstream recycling and [`report_params`] see
+    /// the same full payload as a monolithic round.
+    ///
+    /// [`report_params`]: ReduceFabric::report_params
+    fn finish_report(&mut self, mut rep: RoundReport) -> Result<RoundReport> {
+        if self.bucket_elems == 0 || !rep.params.is_empty() || self.asm_p == 0
+        {
+            return Ok(rep);
+        }
+        let Some(a) = self.asm.get_mut(rep.replica) else {
+            anyhow::bail!(
+                "replica {} closed a streamed round before any \
+                 broadcast armed it",
+                rep.replica
+            );
+        };
+        if rep.round != self.asm_round || a.n_got != self.asm_buckets {
+            anyhow::bail!(
+                "replica {} closed round {} with {}/{} buckets \
+                 delivered",
+                rep.replica,
+                rep.round,
+                a.n_got,
+                self.asm_buckets
+            );
+        }
+        match a.buf.take() {
+            Some(AsmBuf::Owned(v)) => rep.params = v,
+            Some(AsmBuf::Shared(arc)) => rep.params = unwrap_shared(arc),
+            None => anyhow::bail!(
+                "replica {} closed round {} with no bucket payload",
+                rep.replica,
+                rep.round
+            ),
+        }
+        Ok(rep)
     }
 
     /// Return a consumed report's payload to its replica's slab pool so
@@ -848,12 +1382,36 @@ impl ReduceFabric {
         })
     }
 
-    /// The (8d) reduce: `out <- mean` of every collected payload, via the
-    /// multi-threaded kernel.
+    /// The streamed mean for group `g`, if the in-flight round was
+    /// bucketed and every bucket already arrived and reduced — in which
+    /// case the reduce happened overlapped with the collection wait and
+    /// the answer is just sitting in the per-group slab.
+    fn streamed_mean(&self, g: usize, out_len: usize) -> Option<&[f32]> {
+        if self.bucket_elems == 0 || !self.means_complete {
+            return None;
+        }
+        let m = self.bucket_means.get(g)?;
+        if m.len() != out_len {
+            return None;
+        }
+        Some(m.as_slice())
+    }
+
+    /// The (8d) reduce: `out <- mean` of every collected payload. On a
+    /// bucketed round with a single group this is a copy of the
+    /// streamed mean (already reduced, bucket by bucket, while reports
+    /// were still arriving); otherwise the multi-threaded kernel runs
+    /// here. Both paths are bit-identical by construction.
     // lint: deterministic -- reports are sorted by replica id, the mean
     // kernel owns the summation order; nothing here may consult the
     // clock or thread identity
     pub fn reduce_into(&self, out: &mut [f32]) {
+        if self.n_groups == 1 {
+            if let Some(m) = self.streamed_mean(0, out.len()) {
+                out.copy_from_slice(m);
+                return;
+            }
+        }
         let views: Vec<&[f32]> = self
             .reports
             .iter()
@@ -863,9 +1421,14 @@ impl ReduceFabric {
     }
 
     /// Group-restricted reduce: mean of group g's payloads (the deputy
-    /// update's worker mean in the hierarchy).
+    /// update's worker mean in the hierarchy). Served from the streamed
+    /// per-group mean when the bucketed round already finished it.
     // lint: deterministic -- same contract as reduce_into, per group
     pub fn reduce_group_into(&self, g: usize, out: &mut [f32]) {
+        if let Some(m) = self.streamed_mean(g, out.len()) {
+            out.copy_from_slice(m);
+            return;
+        }
         let views: Vec<&[f32]> = self
             .reports
             .iter()
@@ -1337,6 +1900,120 @@ mod tests {
         fabric.broadcast(consts(), &[xref.as_slice()]);
         let err = fabric.recv_report().unwrap_err().to_string();
         assert!(err.contains("unknown replica"), "got: {err}");
+        fabric.shutdown().unwrap();
+    }
+
+    /// The tentpole pin: bucketed streaming rounds produce bit-identical
+    /// reduces and report payloads to the monolithic path, across bucket
+    /// sizes that divide P, don't divide P, round oddly to elements, and
+    /// exceed P entirely.
+    #[test]
+    fn bucketed_rounds_are_bit_identical_to_monolithic() {
+        let p = 1003; // most bucket sizes below don't divide it
+        let xref: Vec<f32> =
+            (0..p).map(|i| (i as f32 - 311.0) * 0.037).collect();
+        let run = |bucket_bytes: usize| {
+            let mut fabric = echo_fabric(vec![0, 0, 0], 1.0);
+            fabric.set_bucket_bytes(bucket_bytes);
+            let mut out = vec![0.0f32; p];
+            for _ in 0..2 {
+                fabric.broadcast(consts(), &[xref.as_slice()]);
+                fabric.collect().unwrap();
+                fabric.reduce_into(&mut out);
+            }
+            let params: Vec<Vec<u32>> = fabric
+                .reports()
+                .iter()
+                .map(|r| r.params.iter().map(|v| v.to_bits()).collect())
+                .collect();
+            fabric.shutdown().unwrap();
+            let mean: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+            (mean, params)
+        };
+        let (base_mean, base_params) = run(0);
+        for bytes in [4, 10, 28, 4096, 4 * p, 4 * p + 64] {
+            let (mean, params) = run(bytes);
+            assert_eq!(mean, base_mean, "bucket_bytes={bytes}");
+            assert_eq!(params, base_params, "bucket_bytes={bytes}");
+        }
+    }
+
+    /// Streamed per-group means serve the hierarchical reduce exactly
+    /// like the monolithic group reduce.
+    #[test]
+    fn bucketed_groups_stream_their_own_means() {
+        // replica scales 1,2,3,4; groups {0,1} and {2,3}
+        let mut fabric = echo_fabric(vec![0, 0, 1, 1], 1.0);
+        fabric.set_bucket_bytes(8); // 2-element buckets over p = 5
+        let ref_a: Vec<f32> = (0..5).map(|i| i as f32).collect();
+        let ref_b: Vec<f32> = (0..5).map(|i| -(i as f32) * 0.5).collect();
+        fabric.broadcast(consts(), &[ref_a.as_slice(), ref_b.as_slice()]);
+        fabric.collect().unwrap();
+        let mut out = vec![0.0f32; 5];
+        fabric.reduce_group_into(0, &mut out);
+        let want: Vec<f32> = ref_a.iter().map(|v| v * 1.5).collect();
+        assert_eq!(out, want);
+        fabric.reduce_group_into(1, &mut out);
+        let want: Vec<f32> = ref_b.iter().map(|v| v * 3.5).collect();
+        assert_eq!(out, want);
+        fabric.shutdown().unwrap();
+    }
+
+    /// Bucketed rounds keep the zero-copy promise on the channel
+    /// transport: the same heap buffers circulate forever (worker slab
+    /// -> shared Arc -> master `try_unwrap` -> pool -> next RoundMsg).
+    #[test]
+    fn bucketed_rounds_reuse_report_buffers() {
+        let mut fabric = echo_fabric(vec![0, 0], 0.0);
+        fabric.set_bucket_bytes(16); // 4-element buckets over p = 37
+        let xref = vec![1.0f32; 37];
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        fabric.collect().unwrap();
+        let ptrs: Vec<*const f32> = fabric
+            .reports()
+            .iter()
+            .map(|r| r.params.as_ptr())
+            .collect();
+        for _ in 0..3 {
+            fabric.broadcast(consts(), &[xref.as_slice()]);
+            fabric.collect().unwrap();
+            let now: Vec<*const f32> = fabric
+                .reports()
+                .iter()
+                .map(|r| r.params.as_ptr())
+                .collect();
+            assert_eq!(ptrs, now);
+        }
+        fabric.shutdown().unwrap();
+    }
+
+    /// Fault injection: a replica that closes a streamed round without
+    /// delivering its buckets surfaces as a typed error naming the
+    /// shortfall — never a hang on the round barrier.
+    #[test]
+    fn bucketed_collect_errors_on_partial_bucket_delivery() {
+        let mut fabric = ReduceFabric::flat(1, CommCfg::off());
+        fabric
+            .spawn_worker(|ep| {
+                while let Some(msg) = ep.recv() {
+                    // stats-only report, payload dropped on the floor
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round: msg.round,
+                        params: Vec::new(),
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            })
+            .unwrap();
+        fabric.set_bucket_bytes(8); // 2-element buckets over p = 10
+        let xref = vec![1.0f32; 10];
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        let err = format!("{:#}", fabric.recv_report().unwrap_err());
+        assert!(err.contains("0/5 buckets"), "got: {err}");
         fabric.shutdown().unwrap();
     }
 

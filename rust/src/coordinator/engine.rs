@@ -278,6 +278,13 @@ impl<'a> RoundEngine<'a> {
             }
         };
         fabric.set_profiler(profiler.clone());
+        if cfg.comm_mode == CommMode::Sync {
+            // stream the sync barrier in buckets so the master reduces
+            // while later reports are still in flight; async dispatches
+            // stay monolithic (each reply reduces alone — nothing to
+            // overlap with)
+            fabric.set_bucket_bytes(cfg.reduce_bucket_bytes);
+        }
         let meter = fabric.meter();
 
         // --- master init (same artifact + seed for every algorithm) ------

@@ -29,6 +29,7 @@
 //!              ReduceFabric (comm.rs)
 //!   rounds · double-buffered slabs · recycled report buffers
 //!   broadcast / send_round_to · collect / recv_report · reduce
+//!   bucketed streaming reduce in sync mode (--reduce-bucket-bytes)
 //!   snapshot/restore barrier · per-replica exposed-wait (wait.r<id>)
 //!        │
 //!        │ Transport trait (transport/) — the dispatch and report legs
@@ -64,6 +65,16 @@
 //!  replica a ──(x^a, loss stats)──▶ master         [reduce, O(N)]
 //!  master: x ← mean_a x^a (8d), scoping.step() (9) [reduce]
 //! ```
+//!
+//! With `--reduce-bucket-bytes N` (default 16 MiB) the sync exchange
+//! *streams*: both legs split the parameter vector into fixed-size
+//! buckets, and the master folds bucket `k` into the running mean the
+//! moment every replica's copy of `k` has arrived — the reduce
+//! overlaps the collection wait instead of following it. Per-element
+//! accumulation order is unchanged, so the bucketed round is
+//! bit-identical to the monolithic one for every bucket size (`0`
+//! restores whole-vector rounds). Async dispatches stay monolithic:
+//! each reply reduces alone, so there is nothing to overlap with.
 //!
 //! In `--comm-mode async` (the elastic averaging variant the paper's
 //! loose coupling admits — Zhang et al. 2015; staleness tolerance per

@@ -54,7 +54,32 @@
 //! Restore --[SNAPSHOT_REQ m->w]--> SnapshotQuiesce
 //! Restore --[STOP m->w]--> Draining
 //! Draining --[REPORT w->m]--> Draining
+//! RoundLoop --[BUCKET_BCAST m->w]--> InFlight
+//! InFlight --[BUCKET_BCAST m->w]--> InFlight
+//! InFlight --[BUCKET_REPORT w->m]--> InFlight
+//! Restore --[BUCKET_BCAST m->w]--> InFlight
+//! Draining --[BUCKET_REPORT w->m]--> Draining
+//! RoundLoop --[STATE_CHUNK m->w]--> RoundLoop
+//! SnapshotQuiesce --[STATE_CHUNK w->m]--> SnapshotQuiesce
 //! ```
+//!
+//! # Bucketed streaming (wire v2)
+//!
+//! With `--reduce-bucket-bytes > 0` the fabric streams round payloads
+//! as fixed-size buckets instead of one whole-`P` frame per leg: the
+//! master's dispatch is a run of `BUCKET_BCAST` frames in index order
+//! (the link is `InFlight` from bucket 0, so next-round broadcast can
+//! start while late reports still reduce), each worker answers with a
+//! run of `BUCKET_REPORT` frames, and the plain stats-only `REPORT`
+//! frame closes the round. The same chunk framing ships oversized
+//! snapshot/restore state as `STATE_CHUNK` runs, dissolving the 1 GiB
+//! one-frame cap. On the in-process channels the dispatch leg stays a
+//! single zero-copy `Arc` hand-off (bucketing it would only add
+//! events); the report leg streams per-bucket events so the master
+//! reduces bucket *k* the moment every replica's copy of *k* arrived.
+//! Bucket boundaries are fixed and reports reduce in replica-id order
+//! within each bucket, so results are bit-identical to the monolithic
+//! path — pinned across bucket sizes by the determinism suite.
 //!
 //! Debug-oriented [`protocol::ProtocolMonitor`]s sit on both endpoints
 //! of both transports and validate every frame against the table, so
@@ -80,7 +105,7 @@ use crate::coordinator::comm::{CommMeter, FabricEvent, ReplicaEndpoint,
 use protocol::Dir;
 
 pub use protocol::{ProtocolMonitor, ProtocolViolation};
-pub use tcp::{TcpTransport, TcpWorkerLink};
+pub use tcp::{ephemeral_listener, TcpTransport, TcpWorkerLink};
 
 /// A fabric transport: the dispatch leg (commands to each replica) and
 /// the report leg (the master-bound event stream + snapshot replies).
@@ -116,6 +141,20 @@ pub trait Transport: Send {
 
     /// Blocking receive of the next master-bound event.
     fn recv_event(&mut self) -> Result<FabricEvent>;
+
+    /// Bucket size, in f32 elements, the dispatch leg should stream
+    /// round payloads at (0 = whole-vector frames). Wire transports
+    /// split round and oversized state payloads into bucket frames;
+    /// the in-process channels ignore it — an `Arc` clone is already
+    /// zero-copy, so bucketing the dispatch would only add events.
+    fn set_bucket_elems(&mut self, _elems: usize) {}
+
+    /// Hand a spent bucket buffer back to replica `r`'s link for
+    /// reuse. Wire transports feed it to the reader thread's pool (A1:
+    /// zero steady-state allocation on the bucket receive path); the
+    /// default drops it, which is correct for transports whose bucket
+    /// payloads are shared rather than owned.
+    fn recycle_bucket(&mut self, _replica: usize, _buf: Vec<f32>) {}
 
     /// Blocking receive of replica `r`'s snapshot reply.
     fn recv_snapshot(&mut self, replica: usize) -> Result<WorkerState>;
@@ -235,6 +274,11 @@ impl Transport for ChannelTransport {
                     m.observe(Dir::ToMaster, wire::TAG_REPORT)?;
                 }
             }
+            FabricEvent::BucketReport(b) => {
+                if let Some(m) = self.monitors.get_mut(b.replica) {
+                    m.observe(Dir::ToMaster, wire::TAG_BUCKET_REPORT)?;
+                }
+            }
             FabricEvent::Exited(id) | FabricEvent::Failed(id, _) => {
                 if let Some(m) = self.monitors.get_mut(*id) {
                     m.close();
@@ -343,6 +387,7 @@ mod tests {
                 round: 0,
                 xref: Arc::new(vec![0.0; 2]),
                 slab: vec![0.0; 2],
+                bucket_elems: 0,
                 consts: RoundConsts {
                     lr: 0.1,
                     gamma_inv: 0.01,

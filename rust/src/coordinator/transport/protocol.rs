@@ -106,6 +106,57 @@ pub const TRANSITIONS: &[(State, Dir, u8, State)] = &[
     ),
     (State::Restore, Dir::ToWorker, wire::TAG_STOP, State::Draining),
     (State::Draining, Dir::ToMaster, wire::TAG_REPORT, State::Draining),
+    // Bucketed streaming rounds (wire v2): a dispatch is a run of
+    // TAG_BUCKET_BCAST frames in index order (the first one arms the
+    // round, so the link is InFlight from bucket 0 onward); the worker
+    // answers with a run of TAG_BUCKET_REPORT frames and the round
+    // still completes on the plain TAG_REPORT row above (stats only,
+    // empty params). Chunked snapshot/restore state: every non-final
+    // chunk travels as TAG_STATE_CHUNK (a self-transition — the run is
+    // not "done" until the final chunk arrives under TAG_RESTORE /
+    // TAG_SNAPSHOT, which reuses the rows above).
+    (
+        State::RoundLoop,
+        Dir::ToWorker,
+        wire::TAG_BUCKET_BCAST,
+        State::InFlight,
+    ),
+    (
+        State::InFlight,
+        Dir::ToWorker,
+        wire::TAG_BUCKET_BCAST,
+        State::InFlight,
+    ),
+    (
+        State::InFlight,
+        Dir::ToMaster,
+        wire::TAG_BUCKET_REPORT,
+        State::InFlight,
+    ),
+    (
+        State::Restore,
+        Dir::ToWorker,
+        wire::TAG_BUCKET_BCAST,
+        State::InFlight,
+    ),
+    (
+        State::Draining,
+        Dir::ToMaster,
+        wire::TAG_BUCKET_REPORT,
+        State::Draining,
+    ),
+    (
+        State::RoundLoop,
+        Dir::ToWorker,
+        wire::TAG_STATE_CHUNK,
+        State::RoundLoop,
+    ),
+    (
+        State::SnapshotQuiesce,
+        Dir::ToMaster,
+        wire::TAG_STATE_CHUNK,
+        State::SnapshotQuiesce,
+    ),
 ];
 
 impl State {
@@ -152,6 +203,9 @@ pub const fn tag_name(tag: u8) -> &'static str {
         wire::TAG_STOP => "TAG_STOP",
         wire::TAG_REPORT => "TAG_REPORT",
         wire::TAG_SNAPSHOT => "TAG_SNAPSHOT",
+        wire::TAG_BUCKET_REPORT => "TAG_BUCKET_REPORT",
+        wire::TAG_BUCKET_BCAST => "TAG_BUCKET_BCAST",
+        wire::TAG_STATE_CHUNK => "TAG_STATE_CHUNK",
         _ => "TAG_UNKNOWN",
     }
 }
@@ -369,6 +423,45 @@ mod tests {
         // state unchanged: the handshake can still complete
         m.observe(Dir::ToMaster, wire::TAG_HELLO).unwrap();
         assert_eq!(m.state(), State::Hello);
+    }
+
+    #[test]
+    fn monitor_walks_a_bucketed_round_and_chunked_state_clean() {
+        let mut m = ProtocolMonitor::established("master", 0);
+        // bucketed dispatch: three bcast buckets, then three report
+        // buckets, then the stats-only report completes the round.
+        for _ in 0..3 {
+            m.observe(Dir::ToWorker, wire::TAG_BUCKET_BCAST).unwrap();
+        }
+        assert_eq!(m.state(), State::InFlight);
+        for _ in 0..3 {
+            m.observe(Dir::ToMaster, wire::TAG_BUCKET_REPORT).unwrap();
+        }
+        m.observe(Dir::ToMaster, wire::TAG_REPORT).unwrap();
+        assert_eq!(m.state(), State::RoundLoop);
+        // chunked snapshot: non-final chunks are self-transitions, the
+        // final chunk travels under the plain snapshot tag.
+        m.observe(Dir::ToWorker, wire::TAG_SNAPSHOT_REQ).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_STATE_CHUNK).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_STATE_CHUNK).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_SNAPSHOT).unwrap();
+        assert_eq!(m.state(), State::RoundLoop);
+        // chunked restore, then a bucketed dispatch straight out of
+        // the Restore state.
+        m.observe(Dir::ToWorker, wire::TAG_STATE_CHUNK).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_RESTORE).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_BUCKET_BCAST).unwrap();
+        assert_eq!(m.state(), State::InFlight);
+        // a bucket report cannot land once the round has completed
+        assert_eq!(
+            legal(State::RoundLoop, Dir::ToMaster, wire::TAG_BUCKET_REPORT),
+            None
+        );
+        // state chunks may not masquerade as a report leg
+        assert_eq!(
+            legal(State::InFlight, Dir::ToMaster, wire::TAG_STATE_CHUNK),
+            None
+        );
     }
 
     /// The typed error must survive an anyhow boundary: that is what

@@ -31,12 +31,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::comm::{CommMeter, FabricEvent, ReplicaEndpoint,
-                               RoundCmd, RoundMsg, RoundReport, WorkerCmd,
+use crate::coordinator::comm::{BucketPayload, BucketReport, CommMeter,
+                               FabricEvent, ReplicaEndpoint, RoundCmd,
+                               RoundMsg, RoundReport, WorkerCmd,
                                WorkerState};
-use crate::coordinator::transport::protocol::{Dir, ProtocolMonitor};
-use crate::coordinator::transport::{cmd_tag, wire, Transport};
+use crate::coordinator::transport::protocol::{Dir, ProtocolMonitor,
+                                              ProtocolViolation};
+use crate::coordinator::transport::{wire, Transport};
 use crate::info;
+use crate::opt::vecmath;
 
 /// Master-side TCP transport: `n` accepted worker connections, one
 /// reader thread each, all feeding one event stream.
@@ -49,6 +52,14 @@ pub struct TcpTransport {
     /// One master-side protocol monitor per accepted link, advanced
     /// through the handshake by [`TcpTransport::listen_timeout`].
     monitors: Vec<ProtocolMonitor>,
+    /// Per-reader bucket-buffer return channels: consumed report
+    /// buckets flow back so each reader decodes the next bucket frame
+    /// into a recycled buffer instead of allocating.
+    pool_tx: Vec<Sender<Vec<f32>>>,
+    /// Bucket size in f32 elements the fabric runs at (0 = monolithic);
+    /// also sizes state chunks so snapshot/restore payloads larger than
+    /// one frame ship in bucket-sized pieces.
+    bucket_elems: usize,
 }
 
 /// How long [`TcpTransport::listen`] waits for all `n` workers to
@@ -77,9 +88,20 @@ impl TcpTransport {
         n: usize,
         timeout: Duration,
     ) -> Result<TcpTransport> {
-        anyhow::ensure!(n >= 1, "a TCP fabric needs at least one worker");
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding fabric master on {addr}"))?;
+        Self::accept_workers(listener, n, timeout)
+    }
+
+    /// Accept `n` workers on an already-bound listener (see
+    /// [`ephemeral_listener`] for the port-0 pattern tests and benches
+    /// use to avoid hardcoded-port collisions).
+    pub fn accept_workers(
+        listener: TcpListener,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<TcpTransport> {
+        anyhow::ensure!(n >= 1, "a TCP fabric needs at least one worker");
         listener
             .set_nonblocking(true)
             .context("setting the fabric listener non-blocking")?;
@@ -90,6 +112,7 @@ impl TcpTransport {
         let mut snap_rxs = Vec::with_capacity(n);
         let mut readers = Vec::with_capacity(n);
         let mut monitors = Vec::with_capacity(n);
+        let mut pool_txs = Vec::with_capacity(n);
         for id in 0..n {
             let (mut stream, peer) =
                 accept_deadline(&listener, deadline, id, n)?;
@@ -111,14 +134,16 @@ impl TcpTransport {
                 .try_clone()
                 .context("cloning a worker socket for the reader")?;
             let (snap_tx, snap_rx) = mpsc::channel::<WorkerState>();
+            let (pool_tx, pool_rx) = mpsc::channel::<Vec<f32>>();
             let ev = event_tx.clone();
             let m = meter.clone();
             readers.push(std::thread::spawn(move || {
-                reader_loop(rd, id, ev, snap_tx, m)
+                reader_loop(rd, id, ev, snap_tx, pool_rx, m)
             }));
             streams.push(stream);
             snap_rxs.push(snap_rx);
             monitors.push(monitor);
+            pool_txs.push(pool_tx);
         }
         Ok(TcpTransport {
             streams,
@@ -127,8 +152,167 @@ impl TcpTransport {
             readers,
             meter,
             monitors,
+            pool_tx: pool_txs,
+            bucket_elems: 0,
         })
     }
+
+    /// State-chunk size for snapshot/restore traffic: bucket-sized when
+    /// the fabric runs bucketed (so checkpoint frames pipeline like
+    /// round frames), otherwise one maximal chunk — which keeps a
+    /// state under [`wire::MAX_FRAME`] on the classic single-frame
+    /// path, while anything larger now chunks instead of failing.
+    fn state_chunk_bytes(&self) -> usize {
+        if self.bucket_elems > 0 {
+            self.bucket_elems.saturating_mul(4)
+        } else {
+            wire::MAX_STATE_CHUNK
+        }
+    }
+
+    /// Encode-and-write leg of [`Transport::send_cmd`]: each arm
+    /// advances the link monitor with the exact frame tags it emits
+    /// (chunked restores step frame-by-frame through the
+    /// [`wire::write_state_chunked`] observe callback).
+    // lint: proto(RoundLoop|Restore|InFlight)
+    fn dispatch_cmd(&mut self, replica: usize, cmd: RoundCmd) -> Result<()> {
+        match cmd {
+            RoundCmd::Round(msg) => {
+                if msg.bucket_elems > 0 && !msg.xref.is_empty() {
+                    return self.write_round_buckets(replica, &msg);
+                }
+                self.monitors[replica]
+                    .observe(Dir::ToWorker, wire::TAG_ROUND)?;
+                let payload =
+                    wire::encode_round(msg.round, &msg.consts, &msg.xref)
+                        .with_context(|| {
+                            format!("sending round to replica {replica}")
+                        })?;
+                self.meter.account(wire::frame_bytes(payload.len()));
+                wire::write_frame(
+                    &mut self.streams[replica],
+                    wire::TAG_ROUND,
+                    &payload,
+                )
+                .with_context(|| {
+                    format!("sending round to replica {replica}")
+                })
+            }
+            RoundCmd::Snapshot => {
+                self.monitors[replica]
+                    .observe(Dir::ToWorker, wire::TAG_SNAPSHOT_REQ)?;
+                wire::write_frame(
+                    &mut self.streams[replica],
+                    wire::TAG_SNAPSHOT_REQ,
+                    &[],
+                )
+                .with_context(|| {
+                    format!("requesting snapshot from replica {replica}")
+                })
+            }
+            RoundCmd::Restore(st) => {
+                let chunk = self.state_chunk_bytes();
+                let monitor = &mut self.monitors[replica];
+                wire::write_state_chunked(
+                    &mut self.streams[replica],
+                    wire::TAG_RESTORE,
+                    &st,
+                    chunk,
+                    |tag| {
+                        monitor
+                            .observe(Dir::ToWorker, tag)
+                            .map_err(anyhow::Error::from)
+                    },
+                )
+                .with_context(|| format!("restoring replica {replica}"))
+            }
+            RoundCmd::Stop => {
+                self.monitors[replica]
+                    .observe(Dir::ToWorker, wire::TAG_STOP)?;
+                wire::write_frame(
+                    &mut self.streams[replica],
+                    wire::TAG_STOP,
+                    &[],
+                )
+                .with_context(|| format!("stopping replica {replica}"))
+            }
+        }
+    }
+
+    /// Stream one sync round as a run of [`wire::TAG_BUCKET_BCAST`]
+    /// frames in index order. The first observe happens before any
+    /// bytes, so an out-of-state dispatch is refused with the socket
+    /// untouched, exactly like the monolithic round; later buckets are
+    /// `InFlight` self-transitions. A geometry the u32 wire header
+    /// cannot carry falls back to one monolithic frame.
+    // lint: proto(RoundLoop|Restore|InFlight)
+    fn write_round_buckets(&mut self, replica: usize, msg: &RoundMsg)
+                           -> Result<()> {
+        let p = msg.xref.len();
+        let n = vecmath::bucket_count(p, msg.bucket_elems);
+        let Ok(n_buckets) = u32::try_from(n) else {
+            self.monitors[replica]
+                .observe(Dir::ToWorker, wire::TAG_ROUND)?;
+            let payload =
+                wire::encode_round(msg.round, &msg.consts, &msg.xref)
+                    .with_context(|| {
+                        format!("sending round to replica {replica}")
+                    })?;
+            self.meter.account(wire::frame_bytes(payload.len()));
+            return wire::write_frame(
+                &mut self.streams[replica],
+                wire::TAG_ROUND,
+                &payload,
+            )
+            .with_context(|| {
+                format!("sending round to replica {replica}")
+            });
+        };
+        for k in 0..n {
+            self.monitors[replica]
+                .observe(Dir::ToWorker, wire::TAG_BUCKET_BCAST)?;
+            let (lo, hi) = vecmath::bucket_range(p, msg.bucket_elems, k);
+            let meta = wire::BucketMeta {
+                round: msg.round,
+                bucket: k as u32,
+                n_buckets,
+                offset: lo as u64,
+                total_len: p as u64,
+            };
+            let payload = wire::encode_bucket_bcast(
+                &msg.consts,
+                &meta,
+                &msg.xref[lo..hi],
+            )
+            .with_context(|| {
+                format!("sending round bucket {k} to replica {replica}")
+            })?;
+            self.meter.account(wire::frame_bytes(payload.len()));
+            wire::write_frame(
+                &mut self.streams[replica],
+                wire::TAG_BUCKET_BCAST,
+                &payload,
+            )
+            .with_context(|| {
+                format!("sending round bucket {k} to replica {replica}")
+            })?;
+        }
+        Ok(())
+    }
+}
+
+/// Bind an OS-assigned loopback port and report the concrete address
+/// peers should dial. Tests and benches use this instead of hardcoded
+/// ports, so parallel runs (and port-scavenging CI machines) never
+/// collide on a fixed number.
+pub fn ephemeral_listener() -> Result<(TcpListener, String)> {
+    let listener = TcpListener::bind("127.0.0.1:0")
+        .context("binding an ephemeral loopback port")?;
+    let addr = listener
+        .local_addr()
+        .context("reading back the ephemeral port")?
+        .to_string();
+    Ok((listener, addr))
 }
 
 /// Hello handshake on a freshly accepted connection: the worker's
@@ -195,14 +379,20 @@ fn accept_deadline(
 
 /// Decode worker frames onto the master's event stream until the
 /// connection ends. Every exit pushes a terminal event so the master
-/// can never block forever on a dead worker.
+/// can never block forever on a dead worker. Bucket frames decode into
+/// buffers recycled through `pool_rx` (the fabric returns each
+/// consumed bucket); state chunks accumulate in a [`wire::
+/// StateAssembler`] until the final [`wire::TAG_SNAPSHOT`] frame
+/// completes the decode.
 fn reader_loop(
     mut stream: TcpStream,
     id: usize,
     event_tx: Sender<FabricEvent>,
     snap_tx: Sender<WorkerState>,
+    pool_rx: Receiver<Vec<f32>>,
     meter: Arc<CommMeter>,
 ) {
+    let mut asm = wire::StateAssembler::default();
     // lint: panic-free -- a reader panic would silence this replica's
     // Exited/Failed events and hang the master's barrier forever
     // lint: proto(InFlight|SnapshotQuiesce|Draining)
@@ -234,8 +424,52 @@ fn reader_loop(
                             Ok(())
                         })
                     }
+                    wire::TAG_BUCKET_REPORT => {
+                        // decode into a recycled bucket buffer; the
+                        // fabric sends each consumed one back, so the
+                        // steady state allocates nothing here
+                        let mut buf =
+                            pool_rx.try_recv().unwrap_or_default();
+                        wire::decode_bucket_report_into(
+                            &frame.payload,
+                            &mut buf,
+                        )
+                        .and_then(|(replica, m)| {
+                            if replica != id {
+                                bail!(
+                                    "bucket stamped replica {replica} \
+                                     on connection {id}",
+                                );
+                            }
+                            let offset = usize::try_from(m.offset)
+                                .map_err(|_| {
+                                    anyhow!(
+                                        "bucket offset {} overflows \
+                                         this host",
+                                        m.offset
+                                    )
+                                })?;
+                            meter.account(
+                                wire::frame_bytes(frame.payload.len()),
+                            );
+                            event_tx
+                                .send(FabricEvent::BucketReport(
+                                    BucketReport {
+                                        replica,
+                                        round: m.round,
+                                        bucket: m.bucket,
+                                        n_buckets: m.n_buckets,
+                                        offset,
+                                        data: BucketPayload::Owned(buf),
+                                    },
+                                ))
+                                .ok();
+                            Ok(())
+                        })
+                    }
+                    wire::TAG_STATE_CHUNK => asm.push(&frame.payload),
                     wire::TAG_SNAPSHOT => {
-                        wire::decode_worker_state(&frame.payload).map(|st| {
+                        asm.finish(&frame.payload).map(|st| {
                             snap_tx.send(st).ok();
                         })
                     }
@@ -281,59 +515,26 @@ impl Transport for TcpTransport {
     }
 
     /// Fail-stop on any dispatch failure: a command that cannot be
-    /// encoded (e.g. an over-[`wire::MAX_FRAME`] state) or written
+    /// encoded (e.g. an over-[`wire::MAX_FRAME`] payload) or written
     /// would otherwise strand both sides — the worker never sees the
     /// round, so it never reports, and the master's `let _ =` round
     /// dispatch would wait forever on an event that cannot come.
     /// Shutting the socket turns the failure into the reader's
-    /// `Exited` event, which the barrier surfaces as an error.
-    // lint: proto(RoundLoop|Restore|InFlight)
+    /// `Exited` event, which the barrier surfaces as an error. An
+    /// out-of-state dispatch is the one exception: the monitor refuses
+    /// it *before any bytes hit the wire* (for chunked/bucketed runs,
+    /// before the first frame — later frames in a run are
+    /// self-transitions that cannot violate), so the typed
+    /// [`ProtocolViolation`] propagates with the socket left healthy —
+    /// this is the master's bug, not the link's.
     fn send_cmd(&mut self, replica: usize, cmd: RoundCmd) -> Result<()> {
-        // an out-of-state dispatch is refused with a typed violation
-        // before any bytes hit the wire; the socket stays healthy (this
-        // is the master's bug, not the link's)
-        self.monitors[replica].observe(Dir::ToWorker, cmd_tag(&cmd))?;
         let stop = matches!(cmd, RoundCmd::Stop);
-        let res = {
-            let stream = &mut self.streams[replica];
-            match cmd {
-                RoundCmd::Round(msg) => wire::encode_round(
-                    msg.round, &msg.consts, &msg.xref,
-                )
-                .and_then(|payload| {
-                    self.meter.account(wire::frame_bytes(payload.len()));
-                    wire::write_frame(stream, wire::TAG_ROUND, &payload)
-                })
-                .with_context(|| {
-                    format!("sending round to replica {replica}")
-                }),
-                RoundCmd::Snapshot => {
-                    wire::write_frame(stream, wire::TAG_SNAPSHOT_REQ, &[])
-                        .with_context(|| {
-                            format!(
-                                "requesting snapshot from replica {replica}"
-                            )
-                        })
-                }
-                RoundCmd::Restore(st) => wire::encode_worker_state(&st)
-                    .and_then(|payload| {
-                        wire::write_frame(stream, wire::TAG_RESTORE,
-                                          &payload)
-                    })
-                    .with_context(|| {
-                        format!("restoring replica {replica}")
-                    }),
-                RoundCmd::Stop => {
-                    wire::write_frame(stream, wire::TAG_STOP, &[])
-                        .with_context(|| {
-                            format!("stopping replica {replica}")
-                        })
-                }
+        let res = self.dispatch_cmd(replica, cmd);
+        if let Err(e) = &res {
+            if !stop && e.downcast_ref::<ProtocolViolation>().is_none() {
+                let _ = self.streams[replica]
+                    .shutdown(std::net::Shutdown::Both);
             }
-        };
-        if res.is_err() && !stop {
-            let _ = self.streams[replica]
-                .shutdown(std::net::Shutdown::Both);
         }
         res
     }
@@ -352,6 +553,11 @@ impl Transport for TcpTransport {
                     m.observe(Dir::ToMaster, wire::TAG_REPORT)?;
                 }
             }
+            FabricEvent::BucketReport(b) => {
+                if let Some(m) = self.monitors.get_mut(b.replica) {
+                    m.observe(Dir::ToMaster, wire::TAG_BUCKET_REPORT)?;
+                }
+            }
             FabricEvent::Exited(id) | FabricEvent::Failed(id, _) => {
                 if let Some(m) = self.monitors.get_mut(*id) {
                     m.close();
@@ -359,6 +565,19 @@ impl Transport for TcpTransport {
             }
         }
         Ok(ev)
+    }
+
+    fn set_bucket_elems(&mut self, elems: usize) {
+        self.bucket_elems = elems;
+    }
+
+    /// Feed a consumed bucket buffer back to its connection's reader
+    /// pool. A hung-up reader just drops the buffer — the link is dead
+    /// and its error is already on the event stream.
+    fn recycle_bucket(&mut self, replica: usize, buf: Vec<f32>) {
+        if let Some(tx) = self.pool_tx.get(replica) {
+            tx.send(buf).ok();
+        }
     }
 
     // lint: proto(SnapshotQuiesce)
@@ -405,6 +624,23 @@ pub struct TcpWorkerLink {
     /// [`TcpWorkerLink::connect`] and then fed every frame this link
     /// sends or receives.
     monitor: ProtocolMonitor,
+    /// Bucket size (f32 elements) of the last dispatch, learned from
+    /// bucket 0 of a [`wire::TAG_BUCKET_BCAST`] run (a monolithic
+    /// [`wire::TAG_ROUND`] resets it to 0). The report leg mirrors this
+    /// geometry back, and state chunks size themselves from it.
+    bucket_elems: usize,
+    /// Next expected bucket index of the in-progress dispatch run.
+    next_bucket: u32,
+    /// Round stamp of the in-progress dispatch run.
+    pending_round: u64,
+    /// Bucket count of the in-progress dispatch run.
+    pending_n: u32,
+    /// Recycled scratch for decoding one dispatch bucket before it is
+    /// scattered into the reference buffer.
+    bucket_buf: Vec<f32>,
+    /// Reassembles chunked restore state across
+    /// [`wire::TAG_STATE_CHUNK`] frames.
+    state_asm: wire::StateAssembler,
 }
 
 impl TcpWorkerLink {
@@ -460,6 +696,12 @@ impl TcpWorkerLink {
                 slab: None,
                 xref: Arc::new(Vec::new()),
                 monitor,
+                bucket_elems: 0,
+                next_bucket: 0,
+                pending_round: 0,
+                pending_n: 0,
+                bucket_buf: Vec::new(),
+                state_asm: wire::StateAssembler::default(),
             })
         }
     }
@@ -476,50 +718,154 @@ impl TcpWorkerLink {
 
     /// Next command off the wire. `Ok(None)` on `Stop` or a master
     /// hang-up (the worker drains out, like a closed command channel).
+    /// Bucketed dispatches and chunked restores span several frames:
+    /// the loop folds the intermediate ones into this link's assembly
+    /// state and only returns once a full command has landed.
     // lint: proto(RoundLoop|Restore|InFlight)
     // lint: pooled
     pub(crate) fn recv_cmd(&mut self) -> Result<Option<WorkerCmd>> {
-        let Some(frame) = wire::read_frame(&mut self.stream)
-            .context("receiving command from master")?
-        else {
-            self.monitor.close();
-            return Ok(None);
-        };
-        // validate the raw tag before touching the payload: an
-        // out-of-state frame is a typed error, not a decode attempt
-        self.monitor.observe(Dir::ToWorker, frame.tag)?;
-        match frame.tag {
-            // lint: hot-path -- per-round decode into recycled buffers
-            wire::TAG_ROUND => {
-                let xref_buf = Arc::make_mut(&mut self.xref);
-                let (round, consts) =
-                    wire::decode_round_into(&frame.payload, xref_buf)?;
-                let p = xref_buf.len();
-                let mut slab = self.slab.take().unwrap_or_default();
-                slab.resize(p, 0.0);
-                Ok(Some(WorkerCmd::Round(RoundMsg {
-                    round,
-                    xref: Arc::clone(&self.xref),
-                    slab,
-                    consts,
-                })))
+        loop {
+            let Some(frame) = wire::read_frame(&mut self.stream)
+                .context("receiving command from master")?
+            else {
+                self.monitor.close();
+                return Ok(None);
+            };
+            // validate the raw tag before touching the payload: an
+            // out-of-state frame is a typed error, not a decode attempt
+            self.monitor.observe(Dir::ToWorker, frame.tag)?;
+            match frame.tag {
+                // lint: hot-path -- per-round decode into recycled
+                // buffers
+                wire::TAG_ROUND => {
+                    let xref_buf = Arc::make_mut(&mut self.xref);
+                    let (round, consts) =
+                        wire::decode_round_into(&frame.payload, xref_buf)?;
+                    let p = xref_buf.len();
+                    let mut slab = self.slab.take().unwrap_or_default();
+                    slab.resize(p, 0.0);
+                    // a monolithic round means a monolithic report
+                    self.bucket_elems = 0;
+                    return Ok(Some(WorkerCmd::Round(RoundMsg {
+                        round,
+                        xref: Arc::clone(&self.xref),
+                        slab,
+                        bucket_elems: 0,
+                        consts,
+                    })));
+                }
+                wire::TAG_BUCKET_BCAST => {
+                    if let Some(msg) =
+                        self.apply_bcast_bucket(&frame.payload)?
+                    {
+                        return Ok(Some(WorkerCmd::Round(msg)));
+                    }
+                }
+                wire::TAG_STATE_CHUNK => {
+                    self.state_asm.push(&frame.payload)?;
+                }
+                wire::TAG_SNAPSHOT_REQ => {
+                    return Ok(Some(WorkerCmd::Snapshot));
+                }
+                wire::TAG_RESTORE => {
+                    return Ok(Some(WorkerCmd::Restore(Box::new(
+                        self.state_asm.finish(&frame.payload)?,
+                    ))));
+                }
+                wire::TAG_STOP => return Ok(None),
+                other => bail!("unexpected frame tag {other} from master"),
             }
-            wire::TAG_SNAPSHOT_REQ => Ok(Some(WorkerCmd::Snapshot)),
-            wire::TAG_RESTORE => {
-                Ok(Some(WorkerCmd::Restore(Box::new(
-                    wire::decode_worker_state(&frame.payload)?,
-                ))))
-            }
-            wire::TAG_STOP => Ok(None),
-            other => bail!("unexpected frame tag {other} from master"),
         }
+    }
+
+    /// Fold one dispatch bucket into the recycled reference buffer;
+    /// returns the completed round once the final bucket lands. Bucket
+    /// 0 arms the run (sizing the reference and learning the bucket
+    /// geometry the report leg will mirror); every later frame must
+    /// continue it in index order — TCP preserves the master's write
+    /// order, so a gap means a corrupt or hostile peer.
+    fn apply_bcast_bucket(&mut self, payload: &[u8])
+                          -> Result<Option<RoundMsg>> {
+        let mut data = std::mem::take(&mut self.bucket_buf);
+        let (consts, meta) =
+            wire::decode_bucket_bcast_into(payload, &mut data)?;
+        let total = usize::try_from(meta.total_len)
+            .context("bucket total_len overflows this host")?;
+        let offset = usize::try_from(meta.offset)
+            .context("bucket offset overflows this host")?;
+        if meta.bucket == 0 {
+            self.pending_round = meta.round;
+            self.pending_n = meta.n_buckets;
+            self.next_bucket = 0;
+            // bucket 0's extent IS the bucket size (the final bucket is
+            // the only short one); a single-bucket round uses its own
+            // full length so the report mirrors as one bucket too
+            self.bucket_elems = data.len().max(1);
+            Arc::make_mut(&mut self.xref).resize(total, 0.0);
+        } else if meta.round != self.pending_round
+            || meta.n_buckets != self.pending_n
+            || meta.bucket != self.next_bucket
+        {
+            bail!(
+                "bucket {}/{} of round {} arrived mid-run (expected \
+                 bucket {} of round {})",
+                meta.bucket,
+                meta.n_buckets,
+                meta.round,
+                self.next_bucket,
+                self.pending_round
+            );
+        }
+        let xref_buf = Arc::make_mut(&mut self.xref);
+        if xref_buf.len() != total {
+            bail!(
+                "bucket run declares {total} parameters, reference \
+                 holds {}",
+                xref_buf.len()
+            );
+        }
+        let Some(dst) =
+            xref_buf.get_mut(offset..offset + data.len())
+        else {
+            bail!(
+                "bucket {} ({} elements at offset {offset}) overruns \
+                 the {total}-parameter reference",
+                meta.bucket,
+                data.len()
+            );
+        };
+        dst.copy_from_slice(&data);
+        self.next_bucket = meta.bucket + 1;
+        self.bucket_buf = data;
+        if meta.bucket + 1 < meta.n_buckets {
+            return Ok(None);
+        }
+        let mut slab = self.slab.take().unwrap_or_default();
+        slab.resize(total, 0.0);
+        Ok(Some(RoundMsg {
+            round: meta.round,
+            xref: Arc::clone(&self.xref),
+            slab,
+            bucket_elems: self.bucket_elems,
+            consts,
+        }))
     }
 
     /// Ship a round report; returns the wire bytes written (for the
     /// worker-local meter) and recycles the payload as the next round's
-    /// slab.
+    /// slab. Bucketed rounds mirror the dispatch geometry back: the
+    /// parameters stream as `TAG_BUCKET_REPORT` frames the master can
+    /// start reducing immediately, closed by an empty `TAG_REPORT`
+    /// carrying the scalar round stats.
     // lint: proto(InFlight|Draining)
     pub(crate) fn report(&mut self, rep: RoundReport) -> Result<usize> {
+        if self.bucket_elems > 0 && !rep.params.is_empty() {
+            let n =
+                vecmath::bucket_count(rep.params.len(), self.bucket_elems);
+            if u32::try_from(n).is_ok() {
+                return self.report_bucketed(rep, n);
+            }
+        }
         // refuse to emit an out-of-state report: the typed violation
         // propagates to the endpoint, which poisons the link (fail-stop)
         self.monitor.observe(Dir::ToMaster, wire::TAG_REPORT)?;
@@ -530,12 +876,76 @@ impl TcpWorkerLink {
         Ok(wire::frame_bytes(payload.len()))
     }
 
+    /// Stream one report as `n` parameter buckets plus the closing
+    /// stats frame. Bucket boundaries reuse the dispatch geometry, so
+    /// the master's per-bucket countdowns line up without negotiation.
+    // lint: proto(InFlight|Draining)
+    fn report_bucketed(&mut self, mut rep: RoundReport, n: usize)
+                       -> Result<usize> {
+        let params = std::mem::take(&mut rep.params);
+        let p = params.len();
+        let mut bytes = 0usize;
+        for k in 0..n {
+            self.monitor
+                .observe(Dir::ToMaster, wire::TAG_BUCKET_REPORT)?;
+            let (lo, hi) = vecmath::bucket_range(p, self.bucket_elems, k);
+            let meta = wire::BucketMeta {
+                round: rep.round,
+                bucket: k as u32,
+                n_buckets: n as u32,
+                offset: lo as u64,
+                total_len: p as u64,
+            };
+            let payload = wire::encode_bucket_report(
+                self.replica,
+                &meta,
+                &params[lo..hi],
+            )?;
+            wire::write_frame(
+                &mut self.stream,
+                wire::TAG_BUCKET_REPORT,
+                &payload,
+            )
+            .context("sending report bucket to master")?;
+            bytes += wire::frame_bytes(payload.len());
+        }
+        // the closing frame carries the scalar stats; its empty params
+        // tell the master "the payload already streamed"
+        self.monitor.observe(Dir::ToMaster, wire::TAG_REPORT)?;
+        let payload = wire::encode_report(&rep)?;
+        wire::write_frame(&mut self.stream, wire::TAG_REPORT, &payload)
+            .context("sending report to master")?;
+        bytes += wire::frame_bytes(payload.len());
+        self.slab = Some(params);
+        Ok(bytes)
+    }
+
+    /// Bytes per state chunk: align with the round's bucket size when
+    /// bucketed, else the single-frame cap.
+    fn state_chunk_bytes(&self) -> usize {
+        if self.bucket_elems > 0 {
+            self.bucket_elems * 4
+        } else {
+            wire::MAX_STATE_CHUNK
+        }
+    }
+
     // lint: proto(SnapshotQuiesce)
     pub(crate) fn send_snapshot(&mut self, st: &WorkerState) -> Result<()> {
-        self.monitor.observe(Dir::ToMaster, wire::TAG_SNAPSHOT)?;
-        let payload = wire::encode_worker_state(st)?;
-        wire::write_frame(&mut self.stream, wire::TAG_SNAPSHOT, &payload)
-            .context("sending snapshot to master")
+        let chunk = self.state_chunk_bytes();
+        let monitor = &mut self.monitor;
+        wire::write_state_chunked(
+            &mut self.stream,
+            wire::TAG_SNAPSHOT,
+            st,
+            chunk,
+            |tag| {
+                monitor
+                    .observe(Dir::ToMaster, tag)
+                    .map_err(anyhow::Error::from)
+            },
+        )
+        .context("sending snapshot to master")
     }
 
     /// Fail-stop: close the socket after an unrecoverable send failure

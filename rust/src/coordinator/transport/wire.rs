@@ -33,13 +33,15 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::checkpoint::{
     read_flat_f32, read_flat_f32_into, read_section_f32, write_f32_payload,
-    write_section_f32, MAX_SECTIONS,
+    write_section_f32, MAX_PARAMS, MAX_SECTIONS,
 };
 use crate::coordinator::comm::{RoundConsts, RoundReport, WorkerState};
 
 /// Handshake magic ("PRLW") + protocol version, sent in every `Hello`.
+/// v2 added the bucketed round frames (`TAG_BUCKET_REPORT` /
+/// `TAG_BUCKET_BCAST`) and chunked state frames (`TAG_STATE_CHUNK`).
 pub const WIRE_MAGIC: u32 = 0x5052_4c57;
-pub const WIRE_VERSION: u32 = 1;
+pub const WIRE_VERSION: u32 = 2;
 
 /// Hard cap on one frame's declared length: the checkpoint param cap
 /// (2^28 f32 = 1 GiB) plus 64 KiB of message framing, so every frame
@@ -49,11 +51,19 @@ pub const WIRE_VERSION: u32 = 1;
 /// multi-GiB allocation — the
 /// [`crate::coordinator::checkpoint::Checkpoint::load`] rule, applied
 /// at the frame boundary. Worker states carrying *several*
-/// checkpoint-cap vectors (a multi-GiB snapshot) exceed one frame and
-/// fail-stop with a clear error instead of being framed — chunked
-/// state frames are a noted follow-up, far beyond any model in the
-/// zoo.
+/// checkpoint-cap vectors (a multi-GiB snapshot) no longer need to fit
+/// one frame: they ship as a run of [`TAG_STATE_CHUNK`] frames (each
+/// under this cap) reassembled against [`MAX_STATE_BYTES`].
 pub const MAX_FRAME: u32 = (1 << 30) + (1 << 16);
+
+/// Cap on the *total* byte length a chunked-state run may declare
+/// (16 GiB): the multi-frame analog of [`MAX_FRAME`], consulted before
+/// the reassembly buffer grows toward a hostile header's total.
+pub const MAX_STATE_BYTES: u64 = 1 << 34;
+
+/// Largest chunk payload the state-chunk sender will emit: 1 GiB of
+/// state bytes plus the 16-byte chunk header stays under [`MAX_FRAME`].
+pub const MAX_STATE_CHUNK: usize = 1 << 30;
 
 // Frame tags. Master -> worker:
 /// Worker -> master greeting carrying magic + version.
@@ -69,10 +79,26 @@ pub const TAG_RESTORE: u8 = 5;
 /// Finish and exit (`RoundCmd::Stop`).
 pub const TAG_STOP: u8 = 6;
 // Worker -> master:
-/// One round report (`FabricEvent::Report`).
+/// One round report (`FabricEvent::Report`). With bucketing on, this
+/// is the round's *final* frame: stats only, empty params (the payload
+/// already arrived as `TAG_BUCKET_REPORT` frames).
 pub const TAG_REPORT: u8 = 7;
-/// Snapshot reply (a `WorkerState`).
+/// Snapshot reply (a `WorkerState`), or — since v2 — the final chunk
+/// of one when the state spans several `TAG_STATE_CHUNK` frames.
 pub const TAG_SNAPSHOT: u8 = 8;
+/// Worker -> master: one bucket of a round report
+/// (`FabricEvent::BucketReport`) — `(round, bucket_idx, offset, len)`
+/// plus that range of the parameter vector.
+pub const TAG_BUCKET_REPORT: u8 = 9;
+/// Master -> worker: one bucket of a round dispatch — the bucketed
+/// form of `TAG_ROUND`, sent in bucket-index order.
+pub const TAG_BUCKET_BCAST: u8 = 10;
+/// Either direction: one non-final chunk of a `WorkerState` too large
+/// for a single frame. The *final* chunk travels under the command's
+/// own tag (`TAG_RESTORE` master->worker, `TAG_SNAPSHOT` worker->
+/// master) with the same chunk header, so a single-frame state is just
+/// the `n_chunks == 1` case.
+pub const TAG_STATE_CHUNK: u8 = 11;
 
 /// One decoded frame: tag + raw payload bytes.
 pub struct Frame {
@@ -295,6 +321,341 @@ pub fn decode_worker_state(payload: &[u8]) -> Result<WorkerState> {
 }
 
 // ---------------------------------------------------------------------------
+// bucketed round frames (v2)
+// ---------------------------------------------------------------------------
+
+/// Placement header shared by both bucket directions: which bucket of
+/// which round, where it sits in the full vector, and how long the
+/// full vector is — everything the receiver needs to validate the
+/// frame against its own fixed bucket boundaries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BucketMeta {
+    pub round: u64,
+    pub bucket: u32,
+    pub n_buckets: u32,
+    /// Element offset of this bucket in the full parameter vector.
+    pub offset: u64,
+    /// Element count of the full parameter vector.
+    pub total_len: u64,
+}
+
+fn write_bucket_meta(out: &mut Vec<u8>, m: &BucketMeta) {
+    out.extend_from_slice(&m.round.to_le_bytes());
+    out.extend_from_slice(&m.bucket.to_le_bytes());
+    out.extend_from_slice(&m.n_buckets.to_le_bytes());
+    out.extend_from_slice(&m.offset.to_le_bytes());
+    out.extend_from_slice(&m.total_len.to_le_bytes());
+}
+
+fn read_bucket_meta<R: Read>(c: &mut R) -> Result<BucketMeta> {
+    let m = BucketMeta {
+        round: read_u64(c).context("bucket round")?,
+        bucket: read_u32(c).context("bucket index")?,
+        n_buckets: read_u32(c).context("bucket count")?,
+        offset: read_u64(c).context("bucket offset")?,
+        total_len: read_u64(c).context("bucket total_len")?,
+    };
+    if m.n_buckets == 0 || m.bucket >= m.n_buckets {
+        bail!(
+            "corrupt bucket frame: bucket {} of {}",
+            m.bucket,
+            m.n_buckets
+        );
+    }
+    if m.total_len > MAX_PARAMS {
+        bail!(
+            "corrupt bucket frame: total_len {} exceeds the {MAX_PARAMS} \
+             parameter cap",
+            m.total_len
+        );
+    }
+    if m.offset > m.total_len {
+        bail!(
+            "corrupt bucket frame: offset {} past total_len {}",
+            m.offset,
+            m.total_len
+        );
+    }
+    Ok(m)
+}
+
+/// One worker->master report bucket: replica stamp, placement header,
+/// then that range of the parameter vector.
+pub fn encode_bucket_report(replica: usize, meta: &BucketMeta, data: &[f32])
+                            -> Result<Vec<u8>> {
+    let replica = u32::try_from(replica).context("bucket replica")?;
+    let mut out = Vec::with_capacity(4 + 32 + 8 + data.len() * 4);
+    out.extend_from_slice(&replica.to_le_bytes());
+    write_bucket_meta(&mut out, meta);
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    write_f32_payload(&mut out, data)?;
+    Ok(out)
+}
+
+/// Decode a report bucket into a caller-owned (recycled) buffer. The
+/// payload length rides through the checkpoint codec's capped reader,
+/// and the placement header is cross-checked against it.
+pub fn decode_bucket_report_into(payload: &[u8], out: &mut Vec<f32>)
+                                 -> Result<(usize, BucketMeta)> {
+    let limit = payload.len() as u64;
+    let mut c = Cursor::new(payload);
+    let replica = read_u32(&mut c).context("bucket replica")? as usize;
+    let meta = read_bucket_meta(&mut c)?;
+    read_flat_f32_into(&mut c, limit, out).context("bucket payload")?;
+    check_bucket_extent(&meta, out.len())?;
+    Ok((replica, meta))
+}
+
+/// One master->worker dispatch bucket: round constants, placement
+/// header, then that range of the reference vector. Buckets of one
+/// round are sent in index order; the receiver rebuilds the reference
+/// in place and surfaces the round once bucket `n_buckets - 1` lands.
+pub fn encode_bucket_bcast(consts: &RoundConsts, meta: &BucketMeta,
+                           data: &[f32]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(16 + 32 + 8 + data.len() * 4);
+    out.extend_from_slice(&consts.lr.to_le_bytes());
+    out.extend_from_slice(&consts.gamma_inv.to_le_bytes());
+    out.extend_from_slice(&consts.rho_inv.to_le_bytes());
+    out.extend_from_slice(&consts.eta_over_rho.to_le_bytes());
+    write_bucket_meta(&mut out, meta);
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    write_f32_payload(&mut out, data)?;
+    Ok(out)
+}
+
+/// Decode a dispatch bucket into a caller-owned (recycled) buffer.
+pub fn decode_bucket_bcast_into(payload: &[u8], out: &mut Vec<f32>)
+                                -> Result<(RoundConsts, BucketMeta)> {
+    let limit = payload.len() as u64;
+    let mut c = Cursor::new(payload);
+    let consts = RoundConsts {
+        lr: read_f32(&mut c).context("bucket lr")?,
+        gamma_inv: read_f32(&mut c).context("bucket gamma_inv")?,
+        rho_inv: read_f32(&mut c).context("bucket rho_inv")?,
+        eta_over_rho: read_f32(&mut c).context("bucket eta_over_rho")?,
+    };
+    let meta = read_bucket_meta(&mut c)?;
+    read_flat_f32_into(&mut c, limit, out).context("bucket payload")?;
+    check_bucket_extent(&meta, out.len())?;
+    Ok((consts, meta))
+}
+
+/// The decoded payload must sit inside the declared full vector, and a
+/// non-final bucket may not be empty (an empty non-final bucket would
+/// let a hostile peer spin the reassembly loop forever).
+fn check_bucket_extent(meta: &BucketMeta, len: usize) -> Result<()> {
+    let end = meta
+        .offset
+        .checked_add(len as u64)
+        .filter(|&e| e <= meta.total_len);
+    if end.is_none() {
+        bail!(
+            "corrupt bucket frame: {} elements at offset {} overrun \
+             total_len {}",
+            len,
+            meta.offset,
+            meta.total_len
+        );
+    }
+    if len == 0 && meta.n_buckets > 1 {
+        bail!("corrupt bucket frame: empty non-final bucket");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// chunked state frames (v2)
+// ---------------------------------------------------------------------------
+
+/// Number of chunks a `total_bytes`-long encoded state splits into at
+/// `chunk_bytes` per chunk (at least one, so an empty state still
+/// travels as a single final frame).
+pub fn state_chunk_count(total_bytes: usize, chunk_bytes: usize) -> usize {
+    let chunk = chunk_bytes.clamp(1, MAX_STATE_CHUNK);
+    ((total_bytes + chunk - 1) / chunk).max(1)
+}
+
+/// One chunk of an encoded `WorkerState`: `u32 chunk`, `u32 n_chunks`,
+/// `u64 total_bytes`, then this chunk's raw bytes (the rest of the
+/// payload — no inner length, the frame bounds it).
+pub fn encode_state_chunk(chunk: usize, n_chunks: usize, total_bytes: usize,
+                          data: &[u8]) -> Result<Vec<u8>> {
+    let chunk = u32::try_from(chunk).context("state chunk index")?;
+    let n_chunks = u32::try_from(n_chunks).context("state chunk count")?;
+    let mut out = Vec::with_capacity(16 + data.len());
+    out.extend_from_slice(&chunk.to_le_bytes());
+    out.extend_from_slice(&n_chunks.to_le_bytes());
+    out.extend_from_slice(&(total_bytes as u64).to_le_bytes());
+    out.extend_from_slice(data);
+    Ok(out)
+}
+
+/// -> `(chunk, n_chunks, total_bytes, data)`. The declared total is
+/// capped by [`MAX_STATE_BYTES`] before the caller sizes any
+/// reassembly buffer from it; `data` borrows the payload (no copy).
+pub fn decode_state_chunk(payload: &[u8])
+                          -> Result<(u32, u32, u64, &[u8])> {
+    let mut c = Cursor::new(payload);
+    let chunk = read_u32(&mut c).context("state chunk index")?;
+    let n_chunks = read_u32(&mut c).context("state chunk count")?;
+    let total = read_u64(&mut c).context("state chunk total")?;
+    if n_chunks == 0 || chunk >= n_chunks {
+        bail!("corrupt state chunk: chunk {chunk} of {n_chunks}");
+    }
+    if total > MAX_STATE_BYTES {
+        bail!(
+            "corrupt state chunk: {total} total bytes exceeds the \
+             {MAX_STATE_BYTES}-byte cap"
+        );
+    }
+    let data = &payload[16.min(payload.len())..];
+    if data.len() as u64 > total {
+        bail!(
+            "corrupt state chunk: {} chunk bytes overrun the declared \
+             {total}-byte total",
+            data.len()
+        );
+    }
+    Ok((chunk, n_chunks, total, data))
+}
+
+/// Write one `WorkerState` as a run of chunked frames: `n_chunks - 1`
+/// [`TAG_STATE_CHUNK`] frames followed by the final chunk under
+/// `final_tag` ([`TAG_RESTORE`] or [`TAG_SNAPSHOT`]). A state that
+/// fits one chunk is a single `final_tag` frame — the common case.
+/// `observe` sees each frame's tag before it is written, so the
+/// sender's protocol monitor steps exactly as the receiver's will.
+pub fn write_state_chunked<W, F>(w: &mut W, final_tag: u8, st: &WorkerState,
+                                 chunk_bytes: usize, mut observe: F)
+                                 -> Result<()>
+where
+    W: Write,
+    F: FnMut(u8) -> Result<()>,
+{
+    let bytes = encode_worker_state(st)?;
+    let chunk = chunk_bytes.clamp(1, MAX_STATE_CHUNK);
+    let n = state_chunk_count(bytes.len(), chunk);
+    for k in 0..n {
+        let lo = k * chunk;
+        let hi = (lo + chunk).min(bytes.len());
+        let tag = if k + 1 == n { final_tag } else { TAG_STATE_CHUNK };
+        observe(tag)?;
+        let payload =
+            encode_state_chunk(k, n, bytes.len(), &bytes[lo..hi])?;
+        write_frame(w, tag, &payload)?;
+    }
+    Ok(())
+}
+
+/// Reassembles a chunked `WorkerState` run. Chunks must arrive in
+/// index order on one connection (TCP preserves it); the final chunk —
+/// the one under the command's own tag — completes the decode.
+#[derive(Default)]
+pub struct StateAssembler {
+    buf: Vec<u8>,
+    next: u32,
+    n_chunks: u32,
+    total: u64,
+}
+
+impl StateAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Validate one chunk header against the run so far: index order,
+    /// stable `n_chunks`/`total`, and the capped total.
+    fn accept(&mut self, payload: &[u8])
+              -> Result<(u32, u32, u64, &[u8])> {
+        let (chunk, n_chunks, total, _) = decode_state_chunk(payload)?;
+        if chunk != self.next {
+            bail!(
+                "corrupt state run: chunk {chunk} arrived, expected \
+                 {}",
+                self.next
+            );
+        }
+        if chunk > 0 && (n_chunks, total) != (self.n_chunks, self.total) {
+            bail!(
+                "corrupt state run: chunk header changed mid-run \
+                 ({n_chunks} chunks/{total} bytes, was {}/{})",
+                self.n_chunks,
+                self.total
+            );
+        }
+        self.n_chunks = n_chunks;
+        self.total = total;
+        decode_state_chunk(payload)
+    }
+
+    /// Accept one non-final [`TAG_STATE_CHUNK`] frame.
+    pub fn push(&mut self, payload: &[u8]) -> Result<()> {
+        let (chunk, n_chunks, total, data) = self.accept(payload)?;
+        if chunk + 1 == n_chunks {
+            bail!(
+                "corrupt state run: final chunk {chunk} arrived under \
+                 TAG_STATE_CHUNK instead of its command tag"
+            );
+        }
+        if self.buf.len() as u64 + data.len() as u64 >= total {
+            // every non-final chunk must leave room for the final one
+            bail!(
+                "corrupt state run: chunks overrun the declared \
+                 {total}-byte total"
+            );
+        }
+        if self.buf.capacity() == 0 {
+            let total = usize::try_from(total)
+                .context("state run total on this target")?;
+            self.buf.reserve(total);
+        }
+        self.buf.extend_from_slice(data);
+        self.next += 1;
+        Ok(())
+    }
+
+    /// Accept the final chunk (the `TAG_RESTORE`/`TAG_SNAPSHOT` frame)
+    /// and decode the assembled state. Resets the assembler for the
+    /// next run either way.
+    pub fn finish(&mut self, payload: &[u8]) -> Result<WorkerState> {
+        let done = (|| {
+            let (chunk, n_chunks, total, data) = self.accept(payload)?;
+            if chunk + 1 != n_chunks {
+                bail!(
+                    "corrupt state run: command tag on chunk {chunk} \
+                     of {n_chunks}"
+                );
+            }
+            if n_chunks == 1 {
+                // single-frame state: decode straight from the payload
+                if data.len() as u64 != total {
+                    bail!(
+                        "corrupt state run: {} bytes for a declared \
+                         {total}",
+                        data.len()
+                    );
+                }
+                return decode_worker_state(data);
+            }
+            self.buf.extend_from_slice(data);
+            if self.buf.len() as u64 != total {
+                bail!(
+                    "corrupt state run: assembled {} bytes of a \
+                     declared {total}",
+                    self.buf.len()
+                );
+            }
+            decode_worker_state(&self.buf)
+        })();
+        self.buf = Vec::new();
+        self.next = 0;
+        self.n_chunks = 0;
+        self.total = 0;
+        done
+    }
+}
+
+// ---------------------------------------------------------------------------
 // scalar readers (cursor-side, context-free)
 // ---------------------------------------------------------------------------
 
@@ -470,6 +831,156 @@ mod tests {
         assert_eq!(back, empty);
     }
 
+    fn meta(bucket: u32, n: u32, offset: u64, total: u64) -> BucketMeta {
+        BucketMeta {
+            round: 5,
+            bucket,
+            n_buckets: n,
+            offset,
+            total_len: total,
+        }
+    }
+
+    /// Bucket report frames round-trip bit-exactly into a recycled
+    /// buffer, stale contents included.
+    #[test]
+    fn bucket_report_round_trips_into_recycled_buffer() {
+        let data = vec![1.0f32, -0.0, f32::MIN_POSITIVE, -2.5e-40];
+        let m = meta(1, 3, 4, 12);
+        let enc = encode_bucket_report(2, &m, &data).unwrap();
+        let mut buf = vec![9.0f32; 99]; // stale recycled buffer
+        let (replica, back) =
+            decode_bucket_report_into(&enc, &mut buf).unwrap();
+        assert_eq!(replica, 2);
+        assert_eq!(back, m);
+        assert_eq!(buf.len(), data.len());
+        for (a, b) in buf.iter().zip(&data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// Bucket dispatch frames carry the round constants bit-exactly.
+    #[test]
+    fn bucket_bcast_round_trips_with_consts() {
+        let data = vec![0.5f32; 7];
+        let m = meta(0, 2, 0, 10);
+        let enc = encode_bucket_bcast(&consts(), &m, &data).unwrap();
+        let mut buf = Vec::new();
+        let (c, back) = decode_bucket_bcast_into(&enc, &mut buf).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(c.lr.to_bits(), consts().lr.to_bits());
+        assert_eq!(c.eta_over_rho.to_bits(), consts().eta_over_rho.to_bits());
+        assert_eq!(buf, data);
+    }
+
+    /// Hostile bucket headers are rejected before the placement is
+    /// trusted: index out of range, total over the parameter cap, a
+    /// payload overrunning the declared vector, an empty non-final
+    /// bucket.
+    #[test]
+    fn bucket_frames_reject_corrupt_headers() {
+        let mut buf = Vec::new();
+        for (m, data_len) in [
+            (meta(3, 3, 0, 10), 1usize),       // bucket == n_buckets
+            (meta(0, 0, 0, 10), 1),            // zero buckets
+            (meta(0, 2, 0, MAX_PARAMS + 1), 1), // total over cap
+            (meta(0, 2, 8, 10), 4),            // offset + len overrun
+            (meta(0, 2, 0, 10), 0),            // empty non-final
+        ] {
+            let data = vec![0.0f32; data_len];
+            let enc = encode_bucket_report(0, &m, &data).unwrap();
+            let err = decode_bucket_report_into(&enc, &mut buf)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("corrupt bucket frame"), "{m:?}: {err}");
+        }
+    }
+
+    fn chunked_state_roundtrip(st: &WorkerState, chunk_bytes: usize)
+                               -> WorkerState {
+        let mut pipe = Vec::new();
+        write_state_chunked(&mut pipe, TAG_SNAPSHOT, st, chunk_bytes,
+                            |_| Ok(()))
+            .unwrap();
+        let mut r = Cursor::new(pipe.as_slice());
+        let mut asm = StateAssembler::new();
+        loop {
+            let f = read_frame(&mut r).unwrap().unwrap();
+            match f.tag {
+                TAG_STATE_CHUNK => asm.push(&f.payload).unwrap(),
+                TAG_SNAPSHOT => {
+                    let back = asm.finish(&f.payload).unwrap();
+                    assert!(read_frame(&mut r).unwrap().is_none());
+                    return back;
+                }
+                other => panic!("unexpected tag {other}"),
+            }
+        }
+    }
+
+    /// A state round-trips identically whether it fits one frame or is
+    /// forced through many tiny chunks, and the final-tag framing means
+    /// a small state is exactly one frame.
+    #[test]
+    fn chunked_state_round_trips_at_any_chunk_size() {
+        let st = WorkerState {
+            replica: 1,
+            vecs: vec![
+                ("y".into(), vec![1.0, -0.0, f32::MIN_POSITIVE, 3.25]),
+                ("mom".into(), (0..300).map(|i| i as f32 * 0.5).collect()),
+            ],
+            batches_drawn: 77,
+        };
+        for chunk_bytes in [1usize, 7, 64, 1 << 20] {
+            assert_eq!(chunked_state_roundtrip(&st, chunk_bytes), st);
+        }
+        // single-frame case: one frame on the pipe, no chunk frames
+        let mut pipe = Vec::new();
+        write_state_chunked(&mut pipe, TAG_SNAPSHOT, &st, 1 << 20,
+                            |_| Ok(()))
+            .unwrap();
+        let mut r = Cursor::new(pipe.as_slice());
+        let f = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(f.tag, TAG_SNAPSHOT);
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    /// Reassembly rejects out-of-order chunks, a final chunk smuggled
+    /// under TAG_STATE_CHUNK, and totals over the state cap.
+    #[test]
+    fn state_chunk_runs_reject_protocol_abuse() {
+        let p0 = encode_state_chunk(0, 3, 100, &[0u8; 10]).unwrap();
+        let p2 = encode_state_chunk(2, 3, 100, &[0u8; 10]).unwrap();
+        let mut asm = StateAssembler::new();
+        asm.push(&p0).unwrap();
+        let err = asm.push(&p2).unwrap_err().to_string();
+        assert!(err.contains("expected 1"), "{err}");
+
+        // final chunk must arrive under the command tag
+        let last = encode_state_chunk(2, 3, 100, &[0u8; 10]).unwrap();
+        let mut asm = StateAssembler::new();
+        asm.push(&encode_state_chunk(0, 3, 100, &[0u8; 45]).unwrap())
+            .unwrap();
+        asm.push(&encode_state_chunk(1, 3, 100, &[0u8; 45]).unwrap())
+            .unwrap();
+        let err = asm.push(&last).unwrap_err().to_string();
+        assert!(err.contains("command tag"), "{err}");
+
+        // a declared total over the cap is refused at the header
+        let mut big = encode_state_chunk(0, 2, 100, &[0u8; 4]).unwrap();
+        big[8..16].copy_from_slice(&(MAX_STATE_BYTES + 1).to_le_bytes());
+        let err = StateAssembler::new().push(&big).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+
+        // non-final chunks may not consume the whole declared total
+        let mut asm = StateAssembler::new();
+        let err = asm
+            .push(&encode_state_chunk(0, 2, 10, &[0u8; 10]).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overrun"), "{err}");
+    }
+
     /// Garbage payloads decode to errors with a message, never panics —
     /// the master feeds whatever the socket produced straight in here.
     #[test]
@@ -480,6 +991,10 @@ mod tests {
         assert!(decode_worker_state(&junk).is_err());
         assert!(decode_hello(&junk[..3]).is_err());
         assert!(decode_hello_ack(&junk[..5]).is_err());
+        let mut scratch = Vec::new();
+        assert!(decode_bucket_report_into(&junk, &mut scratch).is_err());
+        assert!(decode_bucket_bcast_into(&junk, &mut scratch).is_err());
+        assert!(decode_state_chunk(&junk).is_err());
         // a declared vector length far past the payload end must be
         // caught by the shared checkpoint cap/limit checks
         let mut bomb = Vec::new();

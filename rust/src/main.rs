@@ -88,6 +88,12 @@ fn run() -> Result<()> {
             if let Some(t) = flag("transport") {
                 cfg.transport = parle::config::TransportCfg::parse(t)?;
             }
+            if let Some(b) = flag("reduce-bucket-bytes") {
+                cfg.reduce_bucket_bytes = b.parse().context(
+                    "--reduce-bucket-bytes needs a byte count (0 = \
+                     whole-vector rounds)",
+                )?;
+            }
             if let Some(addr) = flag("listen") {
                 cfg.listen = Some(addr.to_string());
             }
@@ -202,6 +208,12 @@ COMMUNICATION:
                              LR by n replicas (Downpour effective-batch
                              correction) so sync-tuned schedules
                              transfer
+  --reduce-bucket-bytes N    sync only: stream each round's parameters
+                             in N-byte buckets so the master reduces
+                             early buckets while later ones are still
+                             in flight (default 16 MiB; 0 = legacy
+                             whole-vector rounds). Bit-identical results
+                             for every value, on both transports
 
 DISTRIBUTED (multi-process, TCP):
   --transport tcp            run the fabric over a length-prefixed TCP

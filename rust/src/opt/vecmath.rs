@@ -139,6 +139,52 @@ pub fn mean_into_chunked(
     });
 }
 
+/// Buckets a `p`-element vector splits into at `bucket_elems` elements
+/// per bucket (the last bucket may be short). `bucket_elems = 0` is the
+/// legacy whole-vector path: one bucket spanning everything.
+pub const fn bucket_count(p: usize, bucket_elems: usize) -> usize {
+    if bucket_elems == 0 || p == 0 {
+        1
+    } else {
+        (p + bucket_elems - 1) / bucket_elems
+    }
+}
+
+/// Element range `[lo, hi)` of bucket `k` in a `p`-element vector. For
+/// `bucket_elems = 0` (or any `k` past the end) the range degenerates
+/// to the tail, so callers iterating `0..bucket_count(..)` always cover
+/// exactly `[0, p)` with no overlap.
+pub fn bucket_range(p: usize, bucket_elems: usize, k: usize)
+                    -> (usize, usize) {
+    if bucket_elems == 0 {
+        return (0, p);
+    }
+    let lo = (k * bucket_elems).min(p);
+    let hi = (lo + bucket_elems).min(p);
+    (lo, hi)
+}
+
+/// Mean-reduce one bucket: element range `[lo, hi)` of every replica
+/// into the same range of `out`, leaving the rest of `out` untouched.
+/// Per element this is exactly [`mean_into`]'s accumulation order
+/// (copy replica 0, add each subsequent replica in slice order, scale),
+/// so reducing a vector bucket-by-bucket — any bucket size, any bucket
+/// completion order — is bit-identical to one monolithic reduce. That
+/// equivalence is what lets the fabric stream buckets as they arrive.
+// lint: deterministic -- bucket boundaries change scheduling only; the
+// per-element accumulation order stays identical to mean_into
+pub fn mean_range_into(
+    out: &mut [f32],
+    replicas: &[&[f32]],
+    lo: usize,
+    hi: usize,
+) {
+    assert!(lo <= hi && hi <= out.len());
+    let views: Vec<&[f32]> =
+        replicas.iter().map(|r| &r[lo..hi]).collect();
+    mean_into_par(&mut out[lo..hi], &views);
+}
+
 /// The Parle outer step (8c) with Nesterov momentum (Remark 2):
 ///   v    <- mu * v - eta*(x - z) - (eta/rho)*(x - xref)
 ///   x    <- x + v
@@ -298,6 +344,56 @@ mod tests {
         mean_into_par(&mut par, &views);
         assert_eq!(serial, par);
         assert!(reduce_threads() >= 1);
+    }
+
+    #[test]
+    fn bucket_geometry_covers_exactly_once() {
+        // non-dividing, dividing, degenerate and legacy cases
+        for &(p, b) in &[(103usize, 10usize), (100, 10), (7, 64),
+                         (0, 8), (103, 0)] {
+            let n = bucket_count(p, b);
+            assert!(n >= 1, "p {p} b {b}");
+            let mut covered = 0;
+            for k in 0..n {
+                let (lo, hi) = bucket_range(p, b, k);
+                assert_eq!(lo, covered, "p {p} b {b} k {k}");
+                assert!(hi >= lo);
+                covered = hi;
+            }
+            assert_eq!(covered, p, "p {p} b {b}");
+            // one past the end degenerates to an empty tail range
+            assert_eq!(bucket_range(p, b, n), (p, p));
+        }
+    }
+
+    #[test]
+    fn bucketed_reduce_is_bit_identical_to_monolithic() {
+        // odd P and bucket sizes that don't divide it, reduced in a
+        // scrambled bucket order — must match the whole-vector reduce
+        // bit for bit
+        let p = 10_007;
+        let replicas = random_replicas(p, 5, 15);
+        let views: Vec<&[f32]> =
+            replicas.iter().map(|r| r.as_slice()).collect();
+        let mut whole = vec![0.0f32; p];
+        mean_into(&mut whole, &views);
+        for bucket_elems in [1usize, 7, 1000, 4096, p, p + 5] {
+            let n = bucket_count(p, bucket_elems);
+            let mut order: Vec<usize> = (0..n).collect();
+            order.reverse(); // completion order must not matter
+            let mut bucketed = vec![0.0f32; p];
+            for &k in &order {
+                let (lo, hi) = bucket_range(p, bucket_elems, k);
+                mean_range_into(&mut bucketed, &views, lo, hi);
+            }
+            for i in 0..p {
+                assert_eq!(
+                    whole[i].to_bits(),
+                    bucketed[i].to_bits(),
+                    "bucket_elems {bucket_elems} i {i}"
+                );
+            }
+        }
     }
 
     #[test]

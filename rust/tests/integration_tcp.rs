@@ -5,11 +5,13 @@
 //! determinism tests self-skip when artifacts are missing, like the
 //! rest of the integration suite.
 //!
-//! Ports: every test uses its own fixed loopback port so the suite is
-//! safe under the default parallel test runner; CI additionally runs
-//! this file with `--test-threads=1` so port allocation stays
-//! deterministic. Workers retry their connects, so master-after-worker
-//! startup order is fine.
+//! Ports: every test binds an OS-assigned ephemeral loopback port
+//! (`ephemeral_listener`) and dials the address it reads back, so the
+//! suite never collides with itself, parallel runners, or whatever else
+//! squats on the machine. Fabric-level tests hand the bound listener
+//! straight to [`TcpTransport::accept_workers`]; the training tests
+//! release the reservation and let the engine re-bind the same address
+//! (workers retry their connects, so the gap is harmless).
 
 use std::time::Duration;
 
@@ -18,7 +20,8 @@ use parle::coordinator::comm::{ReduceFabric, ReplicaEndpoint, RoundCmd,
                                RoundConsts, RoundMsg, RoundReport,
                                WorkerCmd, WorkerState};
 use parle::coordinator::transport::protocol::State;
-use parle::coordinator::transport::{wire, ProtocolViolation, TcpTransport,
+use parle::coordinator::transport::{ephemeral_listener, wire,
+                                    ProtocolViolation, TcpTransport,
                                     TcpWorkerLink, Transport};
 use parle::coordinator::{serve_worker_as, train, train_hierarchical};
 use parle::opt::LrSchedule;
@@ -34,6 +37,13 @@ fn consts() -> RoundConsts {
         rho_inv: 1.0,
         eta_over_rho: 0.1,
     }
+}
+
+/// Accept `n` workers on an ephemeral listener with the suite's
+/// standard deadline.
+fn accept(listener: std::net::TcpListener, n: usize) -> TcpTransport {
+    TcpTransport::accept_workers(listener, n, Duration::from_secs(10))
+        .unwrap()
 }
 
 /// Spawn `n` echo worker threads connected to `addr`: each reports the
@@ -80,12 +90,13 @@ fn spawn_echo_workers(
 /// the reduce matches, and the meter counts real frames both ways.
 #[test]
 fn tcp_fabric_round_trips_bit_exactly_over_loopback() {
-    let addr = "127.0.0.1:47631";
+    let (listener, addr) = ephemeral_listener().unwrap();
     let n = 3usize;
-    let workers = spawn_echo_workers(addr, n);
-    let transport = TcpTransport::listen(addr, n).unwrap();
-    let mut fabric =
-        ReduceFabric::with_transport(vec![0; n], Box::new(transport));
+    let workers = spawn_echo_workers(&addr, n);
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0; n],
+        Box::new(accept(listener, n)),
+    );
     let meter = fabric.meter();
     for round in 0..4u64 {
         let xref: Vec<f32> = (0..257)
@@ -122,7 +133,7 @@ fn tcp_fabric_round_trips_bit_exactly_over_loopback() {
 /// restores, mirroring the in-process counting-fabric test.
 #[test]
 fn tcp_snapshot_restore_round_trips_worker_state() {
-    let addr = "127.0.0.1:47632";
+    let (listener, addr) = ephemeral_listener().unwrap();
     let n = 2usize;
     let workers: Vec<_> = (0..n)
         .map(|_| {
@@ -171,9 +182,10 @@ fn tcp_snapshot_restore_round_trips_worker_state() {
             })
         })
         .collect();
-    let transport = TcpTransport::listen(addr, n).unwrap();
-    let mut fabric =
-        ReduceFabric::with_transport(vec![0; n], Box::new(transport));
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0; n],
+        Box::new(accept(listener, n)),
+    );
     let xref = vec![1.0f32, 2.0];
     for _ in 0..3 {
         fabric.broadcast(consts(), &[xref.as_slice()]);
@@ -203,12 +215,130 @@ fn tcp_snapshot_restore_round_trips_worker_state() {
     }
 }
 
+/// The tentpole pin over the real wire: streamed bucket rounds produce
+/// bit-identical report params and reduced means to the legacy
+/// whole-vector round, for bucket sizes that divide P, straddle it
+/// unevenly, and exceed it (single-bucket degenerate).
+#[test]
+fn tcp_bucketed_fabric_matches_monolithic_bit_exactly() {
+    let n = 2usize;
+    let p = 257usize;
+    let run = |bucket_bytes: usize| -> (Vec<Vec<u32>>, Vec<u32>) {
+        let (listener, addr) = ephemeral_listener().unwrap();
+        let workers = spawn_echo_workers(&addr, n);
+        let mut fabric = ReduceFabric::with_transport(
+            vec![0; n],
+            Box::new(accept(listener, n)),
+        );
+        fabric.set_bucket_bytes(bucket_bytes);
+        let mut mean = vec![0.0f32; p];
+        let mut params = Vec::new();
+        for round in 0..2u64 {
+            let xref: Vec<f32> = (0..p)
+                .map(|i| (i as f32).sin() + round as f32 * 0.125)
+                .collect();
+            fabric.broadcast(consts(), &[xref.as_slice()]);
+            fabric.collect().unwrap();
+            for r in fabric.reports() {
+                params.push(
+                    r.params.iter().map(|v| v.to_bits()).collect(),
+                );
+            }
+            fabric.reduce_into(&mut mean);
+        }
+        fabric.shutdown().unwrap();
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        (params, mean.iter().map(|v| v.to_bits()).collect())
+    };
+    let baseline = run(0);
+    for bytes in [4usize, 100, 1024, 4 * p, 16 << 20] {
+        assert_eq!(run(bytes), baseline, "bucket_bytes={bytes}");
+    }
+}
+
+/// With bucketing on, snapshot and restore state rides the wire as a
+/// run of bucket-sized `TAG_STATE_CHUNK` frames in both directions,
+/// reassembling bit-exactly with the protocol monitors clean.
+#[test]
+fn tcp_bucketed_state_chunks_round_trip_both_directions() {
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let worker = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || -> parle::Result<()> {
+            let link =
+                TcpWorkerLink::connect(&addr, 1, Duration::from_secs(10))?;
+            let ep = ReplicaEndpoint::remote(link);
+            let mut acc = vec![0.0f32; 8];
+            let mut drawn = 0u64;
+            while let Some(cmd) = ep.recv_cmd() {
+                match cmd {
+                    WorkerCmd::Round(msg) => {
+                        acc[0] += msg.xref.iter().sum::<f32>();
+                        drawn += 1;
+                        let RoundMsg {
+                            round, mut slab, ..
+                        } = msg;
+                        slab.copy_from_slice(&acc);
+                        ep.report(RoundReport {
+                            replica: ep.id(),
+                            round,
+                            params: slab,
+                            train_loss: 0.0,
+                            train_err: 0.0,
+                            step_s: 0.0,
+                        });
+                    }
+                    WorkerCmd::Snapshot => {
+                        ep.send_snapshot(WorkerState {
+                            replica: ep.id(),
+                            vecs: vec![("acc".into(), acc.clone())],
+                            batches_drawn: drawn,
+                        });
+                    }
+                    WorkerCmd::Restore(st) => {
+                        acc = st.vec("acc").unwrap().to_vec();
+                        drawn = st.batches_drawn;
+                    }
+                }
+            }
+            Ok(())
+        })
+    };
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0],
+        Box::new(accept(listener, 1)),
+    );
+    // 8-byte buckets: the ~100-byte encoded state splits into a dozen
+    // chunk frames each way
+    fabric.set_bucket_bytes(8);
+    let xref = vec![0.5f32; 8];
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    fabric.collect().unwrap();
+    let states = fabric.snapshot_workers().unwrap();
+    assert_eq!(states[0].batches_drawn, 1);
+    assert_eq!(states[0].vec("acc").unwrap()[0], 4.0);
+    fabric
+        .restore_workers(vec![WorkerState {
+            replica: 0,
+            vecs: vec![("acc".into(), vec![100.0; 8])],
+            batches_drawn: 50,
+        }])
+        .unwrap();
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    fabric.collect().unwrap();
+    assert_eq!(fabric.report_params(0)[0], 104.0);
+    fabric.shutdown().unwrap();
+    worker.join().unwrap().unwrap();
+}
+
 /// Fault injection: a TCP worker that dies mid-round surfaces as a
 /// master-side error (through the reader's `Exited` event), never a
 /// deadlock — the wire analog of the in-process dead-worker test.
 #[test]
 fn tcp_worker_death_mid_round_errors_master() {
-    let addr = "127.0.0.1:47633";
+    let (listener, addr) = ephemeral_listener().unwrap();
     let n = 2usize;
     // worker 0: echoes forever; worker 1: takes one round and dies
     // (closing its socket without reporting)
@@ -245,9 +375,10 @@ fn tcp_worker_death_mid_round_errors_master() {
             Ok(())
         })
     };
-    let transport = TcpTransport::listen(addr, n).unwrap();
-    let mut fabric =
-        ReduceFabric::with_transport(vec![0; n], Box::new(transport));
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0; n],
+        Box::new(accept(listener, n)),
+    );
     let xref = vec![1.0f32; 16];
     fabric.broadcast(consts(), &[xref.as_slice()]);
     let err = fabric.collect().unwrap_err().to_string();
@@ -257,12 +388,109 @@ fn tcp_worker_death_mid_round_errors_master() {
     doomed.join().unwrap().unwrap();
 }
 
+/// Fault injection for the streamed reduce: a worker that ships part of
+/// its bucket set and dies must error the barrier (via the reader's
+/// `Exited` event), never deadlock the per-bucket countdowns.
+#[test]
+fn tcp_worker_death_after_partial_bucket_report_errors_master() {
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let doomed = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let mut stream = connect_retry(&addr);
+            raw_handshake(&mut stream);
+            // absorb the bucketed dispatch: p=10 at 2 elements per
+            // bucket is 5 frames
+            for _ in 0..5 {
+                let f = wire::read_frame(&mut stream).unwrap().unwrap();
+                assert_eq!(f.tag, wire::TAG_BUCKET_BCAST);
+            }
+            // report two of five buckets, then hang up mid-stream
+            for k in 0..2u32 {
+                let meta = wire::BucketMeta {
+                    round: 0,
+                    bucket: k,
+                    n_buckets: 5,
+                    offset: u64::from(k) * 2,
+                    total_len: 10,
+                };
+                let payload =
+                    wire::encode_bucket_report(0, &meta, &[0.5, 0.5])
+                        .unwrap();
+                wire::write_frame(
+                    &mut stream,
+                    wire::TAG_BUCKET_REPORT,
+                    &payload,
+                )
+                .unwrap();
+            }
+        })
+    };
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0],
+        Box::new(accept(listener, 1)),
+    );
+    fabric.set_bucket_bytes(8);
+    let xref = vec![1.0f32; 10];
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    let err = fabric.collect().unwrap_err().to_string();
+    assert!(err.contains("died mid-round"), "{err}");
+    fabric.shutdown().unwrap();
+    doomed.join().unwrap();
+}
+
+/// The chunked-state path at its reason-for-being scale: a worker state
+/// whose encoded payload exceeds [`wire::MAX_FRAME`] used to kill the
+/// link ("state too large to frame"); it now ships as a run of
+/// `TAG_STATE_CHUNK` frames and reassembles bit-exactly. Ignored by
+/// default for its ~3 GiB footprint; CI's tcp-transport job runs it
+/// via `--include-ignored --test-threads=1`.
+#[test]
+#[ignore = "allocates ~3 GiB; CI's tcp job runs it with --include-ignored"]
+fn tcp_chunked_snapshot_ships_state_over_the_frame_cap() {
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let elems = wire::MAX_FRAME as usize / 4 + (1 << 20);
+    let worker = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || -> parle::Result<()> {
+            let link =
+                TcpWorkerLink::connect(&addr, 1, Duration::from_secs(10))?;
+            let ep = ReplicaEndpoint::remote(link);
+            while let Some(cmd) = ep.recv_cmd() {
+                if let WorkerCmd::Snapshot = cmd {
+                    let mut big = vec![0.0f32; elems];
+                    big[0] = 1.5;
+                    big[elems - 1] = -2.5;
+                    ep.send_snapshot(WorkerState {
+                        replica: ep.id(),
+                        vecs: vec![("big".into(), big)],
+                        batches_drawn: 7,
+                    });
+                }
+            }
+            Ok(())
+        })
+    };
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0],
+        Box::new(accept(listener, 1)),
+    );
+    let states = fabric.snapshot_workers().unwrap();
+    assert_eq!(states[0].batches_drawn, 7);
+    let v = states[0].vec("big").unwrap();
+    assert_eq!(v.len(), elems);
+    assert_eq!(v[0], 1.5);
+    assert_eq!(v[elems - 1], -2.5);
+    fabric.shutdown().unwrap();
+    worker.join().unwrap().unwrap();
+}
+
 /// Fault injection: garbled and over-cap frames from a worker surface
 /// as master errors carrying the decode message — no panic, no hang.
 #[test]
 fn tcp_garbled_frame_errors_with_decode_message() {
     use std::io::Write;
-    let addr = "127.0.0.1:47634";
+    let (listener, addr) = ephemeral_listener().unwrap();
     let evil = {
         let addr = addr.to_string();
         std::thread::spawn(move || {
@@ -295,9 +523,10 @@ fn tcp_garbled_frame_errors_with_decode_message() {
             std::thread::sleep(Duration::from_millis(500));
         })
     };
-    let transport = TcpTransport::listen(addr, 1).unwrap();
-    let mut fabric =
-        ReduceFabric::with_transport(vec![0], Box::new(transport));
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0],
+        Box::new(accept(listener, 1)),
+    );
     let xref = vec![0.5f32; 8];
     fabric.broadcast(consts(), &[xref.as_slice()]);
     // alternate format prints the whole context chain: the outer
@@ -317,8 +546,9 @@ fn tcp_garbled_frame_errors_with_decode_message() {
 /// connecting).
 #[test]
 fn tcp_listen_times_out_when_workers_never_arrive() {
-    let err = TcpTransport::listen_timeout(
-        "127.0.0.1:47635",
+    let (listener, _addr) = ephemeral_listener().unwrap();
+    let err = TcpTransport::accept_workers(
+        listener,
         2,
         Duration::from_millis(200),
     )
@@ -336,7 +566,7 @@ fn tcp_listen_times_out_when_workers_never_arrive() {
 /// within the accept deadline and surfaces as a handshake error.
 #[test]
 fn tcp_listen_times_out_on_silent_handshake() {
-    let addr = "127.0.0.1:47636";
+    let (listener, addr) = ephemeral_listener().unwrap();
     let silent = {
         let addr = addr.to_string();
         std::thread::spawn(move || {
@@ -360,8 +590,8 @@ fn tcp_listen_times_out_on_silent_handshake() {
     };
     let err = format!(
         "{:#}",
-        TcpTransport::listen_timeout(
-            addr,
+        TcpTransport::accept_workers(
+            listener,
             1,
             Duration::from_millis(500),
         )
@@ -410,7 +640,7 @@ fn violation(e: &anyhow::Error) -> &ProtocolViolation {
 /// not a garbled-decode error, not a hang.
 #[test]
 fn tcp_round_before_hello_is_a_typed_violation() {
-    let addr = "127.0.0.1:47651";
+    let (listener, addr) = ephemeral_listener().unwrap();
     let rogue = {
         let addr = addr.to_string();
         std::thread::spawn(move || {
@@ -420,8 +650,8 @@ fn tcp_round_before_hello_is_a_typed_violation() {
             std::thread::sleep(Duration::from_millis(500));
         })
     };
-    let err = TcpTransport::listen_timeout(
-        addr,
+    let err = TcpTransport::accept_workers(
+        listener,
         1,
         Duration::from_secs(10),
     )
@@ -438,7 +668,7 @@ fn tcp_round_before_hello_is_a_typed_violation() {
 /// wire analog of the in-process test in `transport/mod.rs`.
 #[test]
 fn tcp_report_during_snapshot_quiesce_is_refused() {
-    let addr = "127.0.0.1:47652";
+    let (listener, addr) = ephemeral_listener().unwrap();
     let fake = {
         let addr = addr.to_string();
         std::thread::spawn(move || {
@@ -461,7 +691,7 @@ fn tcp_report_during_snapshot_quiesce_is_refused() {
             std::thread::sleep(Duration::from_millis(500));
         })
     };
-    let mut transport = TcpTransport::listen(addr, 1).unwrap();
+    let mut transport = accept(listener, 1);
     transport.send_cmd(0, RoundCmd::Snapshot).unwrap();
     let err = transport.recv_event().unwrap_err();
     let v = violation(&err);
@@ -477,7 +707,7 @@ fn tcp_report_during_snapshot_quiesce_is_refused() {
 /// violation and the socket stays healthy.
 #[test]
 fn tcp_double_restore_is_refused_before_the_wire() {
-    let addr = "127.0.0.1:47653";
+    let (listener, addr) = ephemeral_listener().unwrap();
     let fake = {
         let addr = addr.to_string();
         std::thread::spawn(move || {
@@ -487,7 +717,7 @@ fn tcp_double_restore_is_refused_before_the_wire() {
             std::thread::sleep(Duration::from_millis(500));
         })
     };
-    let mut transport = TcpTransport::listen(addr, 1).unwrap();
+    let mut transport = accept(listener, 1);
     transport
         .send_cmd(0, RoundCmd::Restore(Box::new(WorkerState::default())))
         .unwrap();
@@ -506,6 +736,7 @@ fn tcp_double_restore_is_refused_before_the_wire() {
                 round: 0,
                 xref: std::sync::Arc::new(vec![0.0f32; 4]),
                 slab: vec![0.0f32; 4],
+                bucket_elems: 0,
                 consts: consts(),
             }),
         )
@@ -534,12 +765,11 @@ fn base(algo: Algo) -> RunConfig {
     cfg
 }
 
-/// Run `cfg` as a TCP master on `port` with `cfg.replicas` loopback
-/// worker threads driving `serve_worker_as` on `mk_algo`'s strategy —
-/// the exact code path of `--role worker`.
+/// Run `cfg` as a TCP master on a fresh ephemeral port with
+/// `cfg.replicas` loopback worker threads driving `serve_worker_as` on
+/// `mk_algo`'s strategy — the exact code path of `--role worker`.
 fn tcp_train<F, M>(
     cfg: &RunConfig,
-    port: u16,
     label: &str,
     mk_algo: F,
     master: M,
@@ -554,7 +784,11 @@ where
         parle::coordinator::TrainOutput,
     >,
 {
-    let addr = format!("127.0.0.1:{port}");
+    // reserve an OS-assigned port, release it, and let the engine
+    // re-bind the same address; workers retry their connects across
+    // the tiny rebind gap
+    let (reservation, addr) = ephemeral_listener().unwrap();
+    drop(reservation);
     let n_workers = mk_algo(cfg).groups().len();
     let mut mcfg = cfg.clone();
     mcfg.transport = TransportCfg::Tcp;
@@ -616,14 +850,18 @@ fn tcp_sync_training_is_bit_identical_to_in_process() {
     parle::util::logging::set_level(parle::util::logging::Level::Warn);
     let dir = std::env::temp_dir().join("parle_itest_tcp_det");
     std::fs::remove_dir_all(&dir).ok();
-    for (algo, port) in
-        [(Algo::Parle, 47641u16), (Algo::SgdDataParallel, 47642)]
-    {
-        let cfg = base(algo);
+    for algo in [Algo::Parle, Algo::SgdDataParallel] {
+        let mut cfg = base(algo);
+        // the local leg runs the legacy whole-vector barrier...
+        cfg.reduce_bucket_bytes = 0;
         let local =
             train(&cfg, &format!("itest_tcpdet_{}_local", algo.name()))
                 .unwrap();
         let mut tcfg = cfg.clone();
+        // ...the wire leg streams tiny buckets (many frames per round),
+        // pinning monolithic-vs-bucketed AND in-process-vs-TCP equality
+        // in one comparison
+        tcfg.reduce_bucket_bytes = 256;
         if algo == Algo::Parle {
             // checkpoint over the wire mid-run: quiesce + remote
             // snapshot must leave the trajectory untouched
@@ -634,7 +872,6 @@ fn tcp_sync_training_is_bit_identical_to_in_process() {
         }
         let remote = tcp_train(
             &tcfg,
-            port,
             &format!("itest_tcpdet_{}_tcp", algo.name()),
             |c: &RunConfig| -> Box<dyn parle::coordinator::RoundAlgo> {
                 if c.algo == Algo::SgdDataParallel {
@@ -671,7 +908,6 @@ fn tcp_hierarchy_is_bit_identical_to_in_process() {
         train_hierarchical(&cfg, 2, 2, "itest_tcpdet_hier_local").unwrap();
     let remote = tcp_train(
         &cfg,
-        47643,
         "itest_tcpdet_hier_tcp",
         |c: &RunConfig| -> Box<dyn parle::coordinator::RoundAlgo> {
             Box::new(parle::coordinator::hierarchy::HierarchyAlgo::new(

@@ -192,7 +192,9 @@ fn binary_reports_multiple_files_in_sorted_order() {
 
 /// A minimal `transport/protocol.rs` whose TRANSITIONS table the S1
 /// pass can parse: Hello -> Run on hello, Run <-> Busy on round/report,
-/// stop self-loops on Run.
+/// stop self-loops on Run, and a streamed bucket tag that self-loops on
+/// Busy (legal nowhere else — mirroring the real table's mid-round
+/// `TAG_BUCKET_REPORT` rows).
 const MINI_PROTOCOL: &str = "\
 pub enum State { Hello, Run, Busy }\n\
 pub enum Dir { ToWorker, ToMaster }\n\
@@ -200,6 +202,7 @@ pub const TRANSITIONS: &[(State, Dir, u8, State)] = &[\n\
     (State::Hello, Dir::ToMaster, wire::TAG_HELLO, State::Run),\n\
     (State::Run, Dir::ToWorker, wire::TAG_ROUND, State::Busy),\n\
     (State::Run, Dir::ToWorker, wire::TAG_STOP, State::Run),\n\
+    (State::Busy, Dir::ToMaster, wire::TAG_BUCKET_REPORT, State::Busy),\n\
     (State::Busy, Dir::ToMaster, wire::TAG_REPORT, State::Run),\n\
 ];\n";
 
@@ -222,6 +225,42 @@ fn binary_flags_s1_tags_outside_the_region_states() {
     assert!(err.contains("[S1]"), "stderr: {err}");
     assert!(err.contains("TAG_HELLO"), "stderr: {err}");
     assert!(err.contains("peer.rs:4"), "stderr: {err}");
+}
+
+#[test]
+fn binary_flags_s1_bucket_tag_outside_its_states() {
+    let dir = fixture_dir("s1_bucket");
+    write(&dir, "transport/protocol.rs", MINI_PROTOCOL);
+    // the streamed bucket tag is legal only mid-round (Busy); touching
+    // it from a Run-state region must fail
+    write(
+        &dir,
+        "transport/peer.rs",
+        "pub fn drain(tag: u8) {\n\
+         \x20   // lint: proto(Run)\n\
+         \x20   {\n\
+         \x20       if tag == wire::TAG_BUCKET_REPORT { bucket(); }\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "bucket tag outside Busy must fail S1");
+    assert!(err.contains("[S1]"), "stderr: {err}");
+    assert!(err.contains("TAG_BUCKET_REPORT"), "stderr: {err}");
+
+    // the same probe inside a Busy-state region is clean
+    write(
+        &dir,
+        "transport/peer.rs",
+        "pub fn drain(tag: u8) {\n\
+         \x20   // lint: proto(Busy)\n\
+         \x20   {\n\
+         \x20       if tag == wire::TAG_BUCKET_REPORT { bucket(); }\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(ok, "bucket tag inside Busy must pass S1: {err}");
 }
 
 #[test]

@@ -146,6 +146,145 @@ fn prop_fabric_round_trips_params_bit_exactly() {
     }
 }
 
+/// Streamed bucket reassembly is bit-identical to the monolithic
+/// reduce no matter the completion order: reduce each bucket range in
+/// a random permutation (simulating arbitrary cross-replica arrival
+/// interleavings — the master reduces whichever bucket fills first)
+/// and compare the stitched mean bitwise to `mean_into`, including
+/// bucket sizes that do not divide P and buckets larger than P.
+#[test]
+fn prop_bucket_order_reduce_bit_identical_to_monolithic() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 13);
+        let p = 1 + rng.next_below(4000);
+        let n = 1 + rng.next_below(6);
+        let bucket_elems = 1 + rng.next_below(p + 64);
+        let replicas: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; p];
+                rng.fill_normal(&mut v, 2.0);
+                v
+            })
+            .collect();
+        let views: Vec<&[f32]> =
+            replicas.iter().map(|r| r.as_slice()).collect();
+        let mut mono = vec![0.0f32; p];
+        vecmath::mean_into(&mut mono, &views);
+        let nb = vecmath::bucket_count(p, bucket_elems);
+        // the buckets tile [0, p) exactly
+        let mut covered = 0usize;
+        for k in 0..nb {
+            let (lo, hi) = vecmath::bucket_range(p, bucket_elems, k);
+            assert_eq!(lo, covered, "case {case}: gap before bucket {k}");
+            assert!(hi > lo || p == 0, "case {case}: empty bucket {k}");
+            covered = hi;
+        }
+        assert_eq!(covered, p, "case {case}: tail uncovered");
+        // reduce in a random completion order
+        let mut order: Vec<usize> = (0..nb).collect();
+        for i in (1..nb).rev() {
+            let j = rng.next_below(i + 1);
+            order.swap(i, j);
+        }
+        let mut streamed = vec![0.0f32; p];
+        for &k in &order {
+            let (lo, hi) = vecmath::bucket_range(p, bucket_elems, k);
+            vecmath::mean_range_into(&mut streamed, &views, lo, hi);
+        }
+        for i in 0..p {
+            assert_eq!(
+                mono[i].to_bits(),
+                streamed[i].to_bits(),
+                "case {case}: p {p} n {n} bucket_elems {bucket_elems} \
+                 diverge at {i}"
+            );
+        }
+    }
+}
+
+/// The streaming fabric end to end under random geometry: workers that
+/// scale the reference by a per-replica constant report through
+/// bucketed rounds; report params and the reduced mean must be
+/// bit-identical to a monolithic fabric fed the same references —
+/// across non-dividing bucket counts and multi-round buffer recycling,
+/// with whatever cross-replica arrival interleaving the scheduler
+/// produces.
+#[test]
+fn prop_fabric_bucketed_rounds_match_monolithic() {
+    for case in 0..8u64 {
+        let mut rng = Pcg64::new(xp() + case, 14);
+        let p = 1 + rng.next_below(2000);
+        let n = 1 + rng.next_below(5);
+        let bucket_bytes = 4 * (1 + rng.next_below(p + 16));
+        let xrefs: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                let mut v = vec![0.0f32; p];
+                rng.fill_normal(&mut v, 3.0);
+                v
+            })
+            .collect();
+        let run = |bytes: usize| -> (Vec<Vec<u32>>, Vec<u32>) {
+            let mut fabric = ReduceFabric::flat(n, CommCfg::off());
+            fabric.set_bucket_bytes(bytes);
+            for w in 0..n {
+                fabric
+                    .spawn_worker(move |ep| {
+                        while let Some(msg) = ep.recv() {
+                            let RoundMsg {
+                                round,
+                                xref,
+                                mut slab,
+                                ..
+                            } = msg;
+                            for (d, s) in slab.iter_mut().zip(xref.iter())
+                            {
+                                *d = s * (w as f32 + 0.5);
+                            }
+                            ep.report(RoundReport {
+                                replica: ep.id(),
+                                round,
+                                params: slab,
+                                train_loss: 0.0,
+                                train_err: 0.0,
+                                step_s: 0.0,
+                            });
+                        }
+                        Ok(())
+                    })
+                    .unwrap();
+            }
+            let mut params = Vec::new();
+            let mut mean = vec![0.0f32; p];
+            for xref in &xrefs {
+                fabric.broadcast(
+                    RoundConsts {
+                        lr: 0.1,
+                        gamma_inv: 0.01,
+                        rho_inv: 1.0,
+                        eta_over_rho: 0.1,
+                    },
+                    &[xref.as_slice()],
+                );
+                fabric.collect().unwrap();
+                for r in fabric.reports() {
+                    params.push(
+                        r.params.iter().map(|v| v.to_bits()).collect(),
+                    );
+                }
+                fabric.reduce_into(&mut mean);
+            }
+            fabric.shutdown().unwrap();
+            (params, mean.iter().map(|v| v.to_bits()).collect())
+        };
+        let mono = run(0);
+        let bucketed = run(bucket_bytes);
+        assert_eq!(
+            mono, bucketed,
+            "case {case}: p {p} n {n} bucket_bytes {bucket_bytes}"
+        );
+    }
+}
+
 /// The TCP frame codec round-trips every message type bit-exactly:
 /// random rounds, reports (including non-finite stats) and worker
 /// states encode, frame, unframe and decode back to the same bits.
