@@ -6,6 +6,11 @@
 //! * the bucketed streaming reduce vs the monolithic round at P >= 1e6
 //!   on both transports — rows also persisted machine-readably to
 //!   `BENCH_roundtrip.json` (CI uploads it as an artifact),
+//! * the `--wire-codec` matrix: post-encode bytes/round per codec at
+//!   P = 1e6 over loopback TCP (plus, with artifacts, a per-codec
+//!   learn sweep recording final validation error) -> `BENCH_wire.json`,
+//! * the EASGD beta/n scaling ablation (1412.6651 §5) on the async
+//!   elastic event loop -> `BENCH_easgd.json`,
 //! * artifact dispatch: per-minibatch `inner_step` vs the fused
 //!   `inner_scan` (the L2 perf lever — 1 dispatch + 2 host copies per
 //!   round instead of L),
@@ -18,7 +23,7 @@
 //! Run: `cargo bench --bench runtime_hot_path`
 
 use parle::bench_util::{bench_for, section};
-use parle::config::CommCfg;
+use parle::config::{CommCfg, WireCodec};
 use parle::coordinator::comm::{simulate_transfer, AsyncPacer,
                                ReduceFabric, ReplicaEndpoint, RoundConsts,
                                RoundMsg, RoundReport};
@@ -46,6 +51,12 @@ fn main() -> parle::Result<()> {
 
     section("comm fabric: bucketed streaming reduce vs monolithic round");
     bench_bucketed_overlap()?;
+
+    section("wire codecs: bytes/round vs validation error (codec x transport)");
+    bench_wire_codecs()?;
+
+    section("EASGD async elastic: beta/n scaling ablation (1412.6651 §5)");
+    bench_easgd_beta_scaling()?;
 
     let session = Session::open("artifacts")?;
 
@@ -595,32 +606,402 @@ fn bench_bucketed_overlap() -> parle::Result<()> {
                 trial.reduce_s * 1e3,
                 trial.bytes_per_round / 1e6
             );
-            rows.push(Json::Obj(vec![
-                ("transport".into(), Json::Str(transport.into())),
-                ("bucket_bytes".into(), Json::Num(bucket_bytes as f64)),
-                ("rounds".into(), Json::Num(rounds as f64)),
-                ("round_s".into(), Json::Num(trial.round_s)),
-                ("collect_s".into(), Json::Num(trial.collect_s)),
+            rows.push(Json::obj(vec![
+                ("transport", Json::Str(transport.into())),
+                ("bucket_bytes", Json::Num(bucket_bytes as f64)),
+                ("rounds", Json::Num(rounds as f64)),
+                ("round_s", Json::Num(trial.round_s)),
+                ("collect_s", Json::Num(trial.collect_s)),
                 (
-                    "reduce_exposed_s".into(),
+                    "reduce_exposed_s",
                     Json::Num(trial.reduce_s),
                 ),
                 (
-                    "bytes_per_round".into(),
+                    "bytes_per_round",
                     Json::Num(trial.bytes_per_round),
                 ),
             ]));
         }
     }
-    let doc = Json::Obj(vec![
-        ("bench".into(), Json::Str("fabric_roundtrip".into())),
-        ("p".into(), Json::Num(p as f64)),
-        ("replicas".into(), Json::Num(n as f64)),
-        ("rows".into(), Json::Arr(rows)),
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("fabric_roundtrip".into())),
+        ("p", Json::Num(p as f64)),
+        ("replicas", Json::Num(n as f64)),
+        ("rows", Json::Arr(rows)),
     ]);
     std::fs::write("BENCH_roundtrip.json", doc.to_string())
         .map_err(anyhow::Error::from)?;
     println!("  -> wrote BENCH_roundtrip.json");
+    Ok(())
+}
+
+/// One wire-codec trial: echo workers over loopback TCP (or the
+/// in-process channels, which ignore the codec) with a per-replica
+/// latency skew injected through `simulate_transfer`, and ~1% of the
+/// reference mutated every round so delta encoding faces a realistic
+/// mostly-static stream rather than a frozen one. Returns post-encode
+/// wire bytes per round (the meter counts what actually crossed the
+/// socket) and wall time per round.
+fn coded_trial(
+    transport: &str,
+    wc: WireCodec,
+    p: usize,
+    n: usize,
+    rounds: u64,
+) -> parle::Result<(f64, f64)> {
+    let consts = RoundConsts {
+        lr: 0.1,
+        gamma_inv: 0.01,
+        rho_inv: 1.0,
+        eta_over_rho: 0.1,
+    };
+    let mut tcp_workers = Vec::new();
+    let mut fabric = if transport == "tcp" {
+        let (listener, addr) = ephemeral_listener()?;
+        for _ in 0..n {
+            let addr = addr.clone();
+            tcp_workers.push(std::thread::spawn(
+                move || -> parle::Result<()> {
+                    let link = TcpWorkerLink::connect_with_codec(
+                        &addr,
+                        n,
+                        std::time::Duration::from_secs(10),
+                        wc,
+                    )?;
+                    let ep = ReplicaEndpoint::remote(link);
+                    let skew = CommCfg {
+                        latency_s: 0.0008 * ep.id() as f64,
+                        bandwidth_bps: f64::INFINITY,
+                    };
+                    while let Some(msg) = ep.recv() {
+                        simulate_transfer(&skew, 0);
+                        let RoundMsg {
+                            round,
+                            xref,
+                            mut slab,
+                            ..
+                        } = msg;
+                        slab.copy_from_slice(&xref);
+                        ep.report(RoundReport {
+                            replica: ep.id(),
+                            round,
+                            params: slab,
+                            train_loss: 0.0,
+                            train_err: 0.0,
+                            step_s: 0.0,
+                        });
+                    }
+                    Ok(())
+                },
+            ));
+        }
+        ReduceFabric::with_transport(
+            vec![0; n],
+            Box::new(TcpTransport::accept_workers_with_codec(
+                listener,
+                n,
+                std::time::Duration::from_secs(10),
+                wc,
+            )?),
+        )
+    } else {
+        let mut f = ReduceFabric::flat(n, CommCfg::off());
+        for _ in 0..n {
+            f.spawn_worker(move |ep| {
+                let skew = CommCfg {
+                    latency_s: 0.0008 * ep.id() as f64,
+                    bandwidth_bps: f64::INFINITY,
+                };
+                while let Some(msg) = ep.recv() {
+                    simulate_transfer(&skew, 0);
+                    let RoundMsg {
+                        round,
+                        xref,
+                        mut slab,
+                        ..
+                    } = msg;
+                    slab.copy_from_slice(&xref);
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round,
+                        params: slab,
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            })?;
+        }
+        f
+    };
+    fabric.set_bucket_bytes(1 << 20);
+    let meter = fabric.meter();
+    let mut rng = Pcg64::new(42, 1);
+    let mut xref = vec![0.0f32; p];
+    rng.fill_normal(&mut xref, 1.0);
+    let mut mutate = |xref: &mut [f32], round: u64| {
+        for j in 0..p / 100 {
+            let at = (round as usize * 9973 + j * 101) % p;
+            xref[at] = (round as f32 * 0.11 + j as f32 * 0.013).sin();
+        }
+    };
+    for r in 0..2u64 {
+        mutate(&mut xref, r);
+        fabric.broadcast(consts, &[xref.as_slice()]);
+        fabric.collect()?;
+    }
+    let bytes0 = meter.bytes();
+    let t0 = std::time::Instant::now();
+    for r in 2..2 + rounds {
+        mutate(&mut xref, r);
+        fabric.broadcast(consts, &[xref.as_slice()]);
+        fabric.collect()?;
+    }
+    let round_s = t0.elapsed().as_secs_f64() / rounds as f64;
+    let bytes_per_round =
+        (meter.bytes() - bytes0) as f64 / rounds as f64;
+    fabric.shutdown()?;
+    for w in tcp_workers {
+        w.join().expect("bench worker panicked")?;
+    }
+    Ok((bytes_per_round, round_s))
+}
+
+/// The codec matrix (satellite of the `--wire-codec` tentpole):
+/// bytes/round at P = 1e6 for every codec over loopback TCP against
+/// the raw wire and the in-process channels (which ship logical
+/// `Arc`-passed payloads and ignore codecs), plus — when artifacts are
+/// built — a short `mlp_synth` training run per codec over TCP
+/// recording the final validation error. Rows land in
+/// `BENCH_wire.json` (CI uploads it as an artifact).
+fn bench_wire_codecs() -> parle::Result<()> {
+    let n = 3usize;
+    let p = 1_000_000usize;
+    let rounds = 6u64;
+    let codecs: &[WireCodec] = &[
+        WireCodec::Raw,
+        WireCodec::Bf16,
+        WireCodec::F16,
+        WireCodec::TopK(0.01),
+        WireCodec::Delta,
+        WireCodec::DeltaBf16,
+    ];
+    let mut rows = Vec::new();
+    let (chan_bytes, chan_round_s) =
+        coded_trial("channels", WireCodec::Raw, p, n, rounds)?;
+    println!(
+        "channels (codec ignored)   {:8.2} MB/round logical  \
+         {:8.2} ms/round",
+        chan_bytes / 1e6,
+        chan_round_s * 1e3
+    );
+    rows.push(Json::obj(vec![
+        ("transport", Json::Str("channels".into())),
+        ("codec", Json::Str("raw".into())),
+        ("bytes_per_round", Json::Num(chan_bytes)),
+        ("round_s", Json::Num(chan_round_s)),
+    ]));
+    let mut raw_bytes = 0.0f64;
+    for wc in codecs {
+        let (bytes, round_s) = coded_trial("tcp", *wc, p, n, rounds)?;
+        if *wc == WireCodec::Raw {
+            raw_bytes = bytes;
+        }
+        let ratio = raw_bytes / bytes;
+        println!(
+            "tcp {:<11} {:8.2} MB/round wire     {:8.2} ms/round   \
+             ({:.2}x vs raw)",
+            wc.name(),
+            bytes / 1e6,
+            round_s * 1e3,
+            ratio
+        );
+        rows.push(Json::obj(vec![
+            ("transport", Json::Str("tcp".into())),
+            ("codec", Json::Str(wc.name())),
+            ("bytes_per_round", Json::Num(bytes)),
+            ("round_s", Json::Num(round_s)),
+            ("bytes_vs_raw", Json::Num(ratio)),
+        ]));
+    }
+
+    // final validation error per codec: a short real training run over
+    // loopback TCP (the exact --role worker path), artifact-gated like
+    // the rest of the artifact benches
+    let mut learn = Vec::new();
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use parle::config::{Algo, RunConfig, TransportCfg};
+        for wc in codecs {
+            let mut cfg = RunConfig::new("mlp_synth", Algo::Parle);
+            cfg.replicas = 2;
+            cfg.epochs = 1.0;
+            cfg.l_steps = 2;
+            cfg.data.train = 1024;
+            cfg.data.val = 256;
+            cfg.seed = 7;
+            cfg.reduce_bucket_bytes = 1 << 16;
+            cfg.wire_codec = *wc;
+            let (reservation, addr) = ephemeral_listener()?;
+            drop(reservation);
+            let workers: Vec<_> = (0..cfg.replicas)
+                .map(|_| {
+                    let wcfg = cfg.clone();
+                    let a = addr.clone();
+                    std::thread::spawn(move || {
+                        let algo =
+                            parle::coordinator::driver::CoupledAlgo::new(
+                                &wcfg,
+                            );
+                        parle::coordinator::serve_worker_as(
+                            &algo, &wcfg, &a,
+                        )
+                    })
+                })
+                .collect();
+            let mut mcfg = cfg.clone();
+            mcfg.transport = TransportCfg::Tcp;
+            mcfg.listen = Some(addr);
+            let out = parle::coordinator::train(&mcfg, "bench_wire")?;
+            for w in workers {
+                w.join().expect("bench worker panicked")?;
+            }
+            println!(
+                "tcp {:<11} final val err {:.2}%",
+                wc.name(),
+                out.record.final_val_err * 100.0
+            );
+            learn.push(Json::obj(vec![
+                ("codec", Json::Str(wc.name())),
+                (
+                    "final_val_err",
+                    Json::Num(out.record.final_val_err),
+                ),
+            ]));
+        }
+    } else {
+        println!("(no artifacts: skipping the per-codec learn sweep)");
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("wire_codecs".into())),
+        ("p", Json::Num(p as f64)),
+        ("replicas", Json::Num(n as f64)),
+        ("rows", Json::Arr(rows)),
+        ("learn", Json::Arr(learn)),
+    ]);
+    std::fs::write("BENCH_wire.json", doc.to_string())
+        .map_err(anyhow::Error::from)?;
+    println!("  -> wrote BENCH_wire.json");
+    Ok(())
+}
+
+/// The EASGD beta/n scaling ablation (1412.6651 §5): the paper's
+/// stability analysis prescribes splitting a total elastic gain beta
+/// across n replicas as alpha = beta/n — in our async event loop that
+/// is exactly rho scaled by n, since the master's per-report moving
+/// rate is beta = eta/rho clamped to [0, 1] (driver.rs,
+/// `async_update`). Sweep n in {2, 4, 8} with and without the 1/n
+/// scaling on a consensus quadratic (replica a pulls toward its own
+/// minimizer plus the elastic term, the master relaxes toward each
+/// report as it lands) and record consensus error and overshoot to
+/// `BENCH_easgd.json`. Unscaled, the total per-cycle gain n·beta grows
+/// with n and the master rings around the consensus mean; scaled, the
+/// total gain stays at the paper's beta and the sweep is flat in n.
+fn bench_easgd_beta_scaling() -> parle::Result<()> {
+    let p = 1024usize;
+    let rounds = 60u64;
+    let staleness = 2u64;
+    let eta = 0.45f32;
+    let rho0 = 0.5f32; // unscaled: beta = eta/rho0 = 0.9, the paper's pick
+    let mut rows = Vec::new();
+    for n in [2usize, 4, 8] {
+        for scaled in [false, true] {
+            let rho = if scaled { rho0 * n as f32 } else { rho0 };
+            // the same clamped moving rate async_update applies
+            let beta = (eta / rho).clamp(0.0, 1.0);
+            let consts = RoundConsts {
+                lr: eta,
+                gamma_inv: 0.0,
+                rho_inv: 1.0 / rho,
+                eta_over_rho: eta / rho,
+            };
+            let mut fabric = ReduceFabric::flat(n, CommCfg::off());
+            for i in 0..n {
+                // minimizers spread symmetrically around 0
+                let a = i as f32 - (n as f32 - 1.0) / 2.0;
+                fabric.spawn_worker(move |ep| {
+                    let mut x = vec![a; p];
+                    while let Some(msg) = ep.recv() {
+                        let RoundMsg {
+                            round,
+                            xref,
+                            mut slab,
+                            consts,
+                            ..
+                        } = msg;
+                        for (xi, xr) in x.iter_mut().zip(xref.iter()) {
+                            *xi -= consts.lr * (*xi - a)
+                                + consts.eta_over_rho * (*xi - *xr);
+                        }
+                        slab.copy_from_slice(&x);
+                        ep.report(RoundReport {
+                            replica: ep.id(),
+                            round,
+                            params: slab,
+                            train_loss: 0.0,
+                            train_err: 0.0,
+                            step_s: 0.0,
+                        });
+                    }
+                    Ok(())
+                })?;
+            }
+            let mut xref = vec![5.0f32; p]; // start far off-consensus
+            let mut pacer = AsyncPacer::new(n, rounds, staleness);
+            let mut overshoot = 0.0f64;
+            while !pacer.all_done() {
+                for r in pacer.dispatchable() {
+                    let k = pacer.next_round(r);
+                    fabric.send_round_to(r, k, consts, &xref);
+                    pacer.mark_dispatched(r);
+                }
+                let rep = fabric.recv_report()?;
+                vecmath::relax(&mut xref, &rep.params, beta);
+                // consensus mean is 0 by construction
+                overshoot = overshoot.max(xref[0].abs() as f64);
+                pacer.on_report(rep.replica);
+                fabric.recycle(rep);
+            }
+            fabric.shutdown()?;
+            let consensus_err = xref[0].abs() as f64;
+            println!(
+                "n={n}  {}  beta {:.4}  n*beta {:.2}  consensus err \
+                 {:9.2e}  overshoot {:7.3}",
+                if scaled { "rho*n (scaled)  " } else { "rho0  (unscaled)" },
+                beta,
+                beta * n as f32,
+                consensus_err,
+                overshoot
+            );
+            rows.push(Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("scaled", Json::Bool(scaled)),
+                ("beta", Json::Num(beta as f64)),
+                ("n_beta", Json::Num((beta * n as f32) as f64)),
+                ("consensus_err", Json::Num(consensus_err)),
+                ("overshoot", Json::Num(overshoot)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("easgd_beta_scaling".into())),
+        ("rounds", Json::Num(rounds as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_easgd.json", doc.to_string())
+        .map_err(anyhow::Error::from)?;
+    println!("  -> wrote BENCH_easgd.json");
     Ok(())
 }
 

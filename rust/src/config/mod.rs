@@ -7,4 +7,4 @@
 pub mod run;
 
 pub use run::{Algo, CommCfg, CommMode, RunConfig, ScopingCfg,
-              TransportCfg};
+              TransportCfg, WireCodec};

@@ -105,6 +105,75 @@ impl TransportCfg {
     }
 }
 
+/// Payload codec applied to the TCP wire legs (`--wire-codec`). Purely
+/// a transport-representation knob: `raw` ships LE f32 frames exactly
+/// as before (the determinism-suite default), the lossy codecs
+/// quantize/sparsify the report leg under per-replica error feedback
+/// and compress the broadcast leg. Negotiated in the hello handshake —
+/// a codec-mismatched worker is refused at connect. In-process
+/// channels ignore it (no wire to compress).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WireCodec {
+    /// Bit-identical LE f32 frames on both legs (default).
+    Raw,
+    /// bf16 quantization on both legs; the report leg carries an
+    /// error-feedback residual so the elastic mean doesn't drift.
+    Bf16,
+    /// IEEE binary16 on both legs; report leg error-fed like `Bf16`.
+    F16,
+    /// Top-k sparsification of the report leg (k = this fraction of P,
+    /// residual-fed); the broadcast leg ships bf16.
+    TopK(f32),
+    /// XOR-delta broadcast leg against the previous dispatch slab; the
+    /// report leg stays raw, so the trajectory is bit-identical to
+    /// `Raw` — pure byte savings.
+    Delta,
+    /// Delta-encoded bf16 broadcast leg plus the `Bf16` report leg:
+    /// trajectory bit-identical to `Bf16` with fewer broadcast bytes.
+    DeltaBf16,
+}
+
+impl WireCodec {
+    pub fn parse(s: &str) -> Result<WireCodec> {
+        Ok(match s {
+            "raw" => WireCodec::Raw,
+            "bf16" => WireCodec::Bf16,
+            "f16" => WireCodec::F16,
+            "delta" => WireCodec::Delta,
+            "delta+bf16" | "delta-bf16" => WireCodec::DeltaBf16,
+            other => {
+                let Some(frac) = other.strip_prefix("topk") else {
+                    bail!(
+                        "unknown wire codec {other:?} \
+                         (raw|bf16|f16|topk<K>|delta|delta+bf16)"
+                    );
+                };
+                let k: f32 = frac.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "bad top-k fraction {frac:?} in {other:?} \
+                         (e.g. topk0.01)"
+                    )
+                })?;
+                if !(k > 0.0 && k <= 1.0) {
+                    bail!("top-k fraction must be in (0, 1], got {k}");
+                }
+                WireCodec::TopK(k)
+            }
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            WireCodec::Raw => "raw".to_string(),
+            WireCodec::Bf16 => "bf16".to_string(),
+            WireCodec::F16 => "f16".to_string(),
+            WireCodec::TopK(k) => format!("topk{k}"),
+            WireCodec::Delta => "delta".to_string(),
+            WireCodec::DeltaBf16 => "delta+bf16".to_string(),
+        }
+    }
+}
+
 /// Scoping mode for gamma/rho (eq. 9).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ScopingCfg {
@@ -218,6 +287,10 @@ pub struct RunConfig {
     /// Fabric transport: in-process worker threads (default) or TCP to
     /// remote worker processes.
     pub transport: TransportCfg,
+    /// TCP payload codec (`--wire-codec`): `raw` (default) ships LE f32
+    /// both ways; lossy codecs compress the legs under error feedback.
+    /// Negotiated at connect; ignored by in-process channels.
+    pub wire_codec: WireCodec,
     /// TCP master only: `host:port` to listen on for worker
     /// connections (`--listen`).
     pub listen: Option<String>,
@@ -273,6 +346,7 @@ impl RunConfig {
             async_lr_rescale: false,
             reduce_bucket_bytes: 16 << 20,
             transport: TransportCfg::InProcess,
+            wire_codec: WireCodec::Raw,
             listen: None,
             seed: 42,
             artifacts_dir: "artifacts".to_string(),
@@ -319,6 +393,9 @@ impl RunConfig {
                 self.reduce_bucket_bytes = value.parse()?
             }
             "transport" => self.transport = TransportCfg::parse(value)?,
+            "wire_codec" | "codec" => {
+                self.wire_codec = WireCodec::parse(value)?
+            }
             "listen" => self.listen = Some(value.to_string()),
             "scoping" => {
                 self.scoping = match value {
@@ -362,6 +439,14 @@ impl RunConfig {
     /// bucketed reduce is bit-identical to the monolithic one for every
     /// bucket size (pinned by the fabric's cross-bucket-size equality
     /// tests), so a checkpoint resumes under any bucketing.
+    /// `wire_codec` is excluded for the same transport-layer reason:
+    /// it is negotiated per connection, the error-feedback residuals a
+    /// lossy codec carries are checkpointed as worker state (so resume
+    /// stays trajectory-stable under the *same* codec), and `raw` /
+    /// `delta` don't perturb the trajectory at all. Resuming under a
+    /// different lossy codec changes future rounding, exactly like
+    /// resuming on different BLAS hardware — permitted, not
+    /// fingerprinted.
     pub fn replay_fingerprint(&self) -> u64 {
         let canon = format!(
             "model={};alpha={};momentum={};wd={};lr={}@{:?}/{};\
@@ -551,6 +636,48 @@ mod tests {
         assert!(c.validate().is_ok());
         // a comm-layer knob: the bucketed reduce is bit-identical to
         // the monolithic one, so the replay fingerprint ignores it
+        let base = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(base.replay_fingerprint(), c.replay_fingerprint());
+    }
+
+    #[test]
+    fn wire_codec_parse_overrides_and_fingerprint() {
+        for (s, c) in [
+            ("raw", WireCodec::Raw),
+            ("bf16", WireCodec::Bf16),
+            ("f16", WireCodec::F16),
+            ("delta", WireCodec::Delta),
+            ("delta+bf16", WireCodec::DeltaBf16),
+            ("topk0.01", WireCodec::TopK(0.01)),
+        ] {
+            assert_eq!(WireCodec::parse(s).unwrap(), c, "{s}");
+        }
+        // name() round-trips, including the parametrized spelling
+        for c in [
+            WireCodec::Raw,
+            WireCodec::Bf16,
+            WireCodec::F16,
+            WireCodec::Delta,
+            WireCodec::DeltaBf16,
+            WireCodec::TopK(0.125),
+        ] {
+            assert_eq!(WireCodec::parse(&c.name()).unwrap(), c);
+        }
+        assert!(WireCodec::parse("gzip").is_err());
+        assert!(WireCodec::parse("topk").is_err());
+        assert!(WireCodec::parse("topk0").is_err());
+        assert!(WireCodec::parse("topk1.5").is_err());
+        let mut c = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(c.wire_codec, WireCodec::Raw);
+        c.set("wire_codec", "bf16").unwrap();
+        assert_eq!(c.wire_codec, WireCodec::Bf16);
+        c.set("codec", "topk0.05").unwrap();
+        assert_eq!(c.wire_codec, WireCodec::TopK(0.05));
+        assert!(c.set("wire_codec", "morse").is_err());
+        assert!(c.validate().is_ok());
+        // a transport-representation knob: excluded from the replay
+        // fingerprint like transport/reduce_bucket_bytes (see the
+        // replay_fingerprint doc for the lossy-resume caveat)
         let base = RunConfig::new("mlp_synth", Algo::Parle);
         assert_eq!(base.replay_fingerprint(), c.replay_fingerprint());
     }

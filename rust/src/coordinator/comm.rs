@@ -493,7 +493,7 @@ impl ReplicaEndpoint {
             }
             EndpointLink::Tcp(link) => {
                 let mut link = link.borrow_mut();
-                if let Err(e) = link.send_snapshot(&state) {
+                if let Err(e) = link.send_snapshot(state) {
                     crate::util::logging::log(
                         crate::util::logging::Level::Error,
                         "fabric",

@@ -257,6 +257,63 @@ mod tests {
         assert_eq!(seq.params(), &[4.0, -2.0]);
     }
 
+    /// The EASGD (1412.6651 §5) stability prescription: split the
+    /// total elastic gain across n replicas as alpha = beta/n. In our
+    /// terms that is rho scaled by n — the clamped async moving rate
+    /// observed through `async_update` then scales exactly 1/n, so the
+    /// total per-sweep gain n·alpha stays at the paper's beta for
+    /// every n, and the clamp still saturates at 1 when eta/rho
+    /// overshoots it.
+    #[test]
+    fn easgd_beta_over_n_scaling_bounds_the_total_async_gain() {
+        let cfg = RunConfig::new("mlp_synth", Algo::Parle);
+        let report = RoundReport {
+            replica: 0,
+            round: 0,
+            params: vec![1.0],
+            train_loss: 0.0,
+            train_err: 0.0,
+            step_s: 0.0,
+        };
+        let eta = 0.45f32;
+        let rho0 = 0.5f32; // unscaled beta = eta/rho0 = 0.9
+        for n in [2usize, 4, 8] {
+            let scoping =
+                crate::opt::Scoping::constant(1.0, rho0 * n as f32);
+            let ctx = RoundCtx {
+                round: 0,
+                lr: eta,
+                scoping: &scoping,
+            };
+            let mut algo = CoupledAlgo::new(&cfg);
+            algo.init_master(vec![0.0]);
+            algo.async_update(&report, &ctx).unwrap();
+            // x = 0 + alpha·(1 - 0): the observed moving rate IS alpha
+            let alpha = algo.params()[0];
+            let want = eta / (rho0 * n as f32);
+            assert!(
+                (alpha - want).abs() < 1e-6,
+                "n={n}: alpha {alpha} vs {want}"
+            );
+            assert!(
+                (alpha * n as f32 - eta / rho0).abs() < 1e-5,
+                "n={n}: total gain drifted off the paper's beta"
+            );
+        }
+        // unscaled at large n the per-report rate stays 0.9 — the
+        // clamp bounds it at full adoption, never beyond
+        let scoping = crate::opt::Scoping::constant(1.0, 0.01);
+        let ctx = RoundCtx {
+            round: 0,
+            lr: eta,
+            scoping: &scoping,
+        };
+        let mut algo = CoupledAlgo::new(&cfg);
+        algo.init_master(vec![0.0]);
+        algo.async_update(&report, &ctx).unwrap();
+        assert_eq!(algo.params(), &[1.0]);
+    }
+
     fn dummy_manifest(batch: usize) -> ModelManifest {
         crate::runtime::artifact::test_manifest(batch)
     }

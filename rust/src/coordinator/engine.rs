@@ -270,7 +270,11 @@ impl<'a> RoundEngine<'a> {
                 info!(
                     "{label} waiting for {n_workers} workers on {addr}"
                 );
-                let transport = TcpTransport::listen(addr, n_workers)?;
+                let transport = TcpTransport::listen_with_codec(
+                    addr,
+                    n_workers,
+                    cfg.wire_codec,
+                )?;
                 ReduceFabric::with_transport(
                     groups.clone(),
                     Box::new(transport),
@@ -780,10 +784,11 @@ pub fn serve_worker_as(
     let n_workers = algo.groups().len();
     let datasets =
         shard_datasets(cfg, algo.shards_data(), train_ds, n_workers)?;
-    let link = TcpWorkerLink::connect(
+    let link = TcpWorkerLink::connect_with_codec(
         connect,
         n_workers,
         std::time::Duration::from_secs(30),
+        cfg.wire_codec,
     )?;
     let id = link.replica();
     info!("worker {id}/{n_workers} serving rounds from {connect}");

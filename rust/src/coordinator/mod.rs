@@ -39,7 +39,9 @@
 //!   │ in-process MPSC channels    │ length-prefixed wire codec   │
 //!   │ zero-copy Arc payloads      │ (transport/wire, reuses the  │
 //!   │ simulated interconnect      │ checkpoint section encoding) │
-//!   │ P*4 bytes metered           │ real frame bytes metered;    │
+//!   │ P*4 logical bytes metered   │ post-encode bytes metered;   │
+//!   │ --wire-codec ignored:       │ --wire-codec payload         │
+//!   │ no wire to compress         │ transforms (transport/codec) │
 //!   │ workers = threads           │ workers = processes that     │
 //!   │                             │ connect (serve_worker) and   │
 //!   │                             │ run the SAME worker bodies   │
@@ -111,7 +113,14 @@
 //! with the same config, rebuilds its data shard locally from the slot
 //! the handshake assigns, and drives the same worker body it would run
 //! as a thread. Sync-mode final params and curves are bit-identical
-//! across transports.
+//! across transports. `--wire-codec` (negotiated in the handshake;
+//! mismatched workers are refused at connect) applies a payload
+//! transform to both wire legs — bf16/f16 quantization, top-k report
+//! sparsification, XOR-delta broadcasts — with per-replica
+//! error-feedback residuals on the lossy report leg that ride worker
+//! snapshots (`wire.ef`), so checkpoint/resume stays
+//! trajectory-stable; `raw` (default) and `delta` are bit-identical
+//! to the uncoded wire.
 //!
 //! **Invariants (machine-checked).** This layer carries the invariants
 //! `pallas-lint` enforces (`cargo run --bin pallas_lint`, rules in
@@ -131,9 +140,9 @@
 //!   (`// lint: panic-free` regions) propagate errors as
 //!   `FabricEvent::Failed`/`Exited` — a panic there is observed as a
 //!   hang, never an error.
-//! * *Wire bounds (W1)*: every length decoded in `transport/wire.rs`
-//!   or `checkpoint.rs` passes a named `MAX_*` cap before it sizes an
-//!   allocation.
+//! * *Wire bounds (W1)*: every length decoded in `transport/wire.rs`,
+//!   `transport/codec.rs` or `checkpoint.rs` passes a named `MAX_*`
+//!   cap before it sizes an allocation.
 //!
 //! The concurrency protocols themselves (AsyncPacer's staleness bound,
 //! shutdown with reports in flight) are exhaustively model-checked in

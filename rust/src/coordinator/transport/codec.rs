@@ -1,0 +1,1082 @@
+//! Payload transforms between the fabric and the wire (`--wire-codec`).
+//!
+//! [`wire`] frames say *where* a payload goes (placement headers,
+//! length caps); this module says *what the bytes are*: bf16/f16
+//! codewords, top-k index/value pairs, or XOR deltas against the
+//! previous dispatch. Four small state machines cover the two legs:
+//!
+//! * [`BcastEncoder`] (master, per connection) / [`BcastDecoder`]
+//!   (worker) — the dispatch leg. Quantizing codecs ship a freshly
+//!   quantized reference each round; the delta codecs ship XOR diffs
+//!   of the (possibly quantized) words against the previous dispatch,
+//!   falling back to a dense frame whenever the diff wouldn't be
+//!   smaller or no base exists yet. The mode byte travels in the
+//!   frame, so the receiver never predicts the sender's choice — and
+//!   dense-vs-sparse is representation only: both reconstruct the
+//!   identical words, which is why `delta` stays bit-identical to
+//!   `raw` and `delta+bf16` to `bf16`.
+//! * [`ReportEncoder`] (worker) / [`ReportDecoder`] (master reader) —
+//!   the report leg. Lossy transforms run under **error feedback**:
+//!   the encoder quantizes `payload + residual` and carries the
+//!   quantization error into the next round, so the elastic mean sees
+//!   every bit of mass eventually and doesn't drift. The residual is
+//!   replica state: it snapshots/restores with the worker (under the
+//!   [`EF_RESIDUAL_VEC`] section name) so resume stays
+//!   trajectory-stable.
+//!
+//! Everything here works on pooled scratch buffers: encode/decode per
+//! bucket allocates nothing in steady state (the warm-up growth
+//! happens on the first full vector). Decoders re-check every length
+//! against the checkpoint parameter cap before sizing anything —
+//! codec headers arrive off the wire and get the same hostile-peer
+//! treatment as frame headers.
+
+use anyhow::{bail, Result};
+
+use crate::config::WireCodec;
+use crate::coordinator::checkpoint::MAX_PARAMS;
+use crate::coordinator::transport::wire::{
+    CodedBlock, CODEC_BF16, CODEC_DELTA, CODEC_DELTA_BF16, CODEC_F16,
+    CODEC_RAW, CODEC_TOPK, CODED_DENSE, CODED_SPARSE,
+};
+use crate::opt::vecmath::{
+    bf16_to_f32, dequantize_into, f16_to_f32, f32_to_bf16, f32_to_f16,
+    quantize_ef, quantize_into, scatter_topk, top_k_ef,
+};
+
+/// Checkpoint section name the report leg's error-feedback residual
+/// travels under inside a `WorkerState`. The TCP worker link injects
+/// it at snapshot and strips it at restore; worker bodies look their
+/// vectors up by name, so the extra section is inert everywhere else.
+pub const EF_RESIDUAL_VEC: &str = "wire.ef";
+
+/// `WireCodec` -> the `(id, param)` pair the hello handshake carries.
+pub fn to_wire(c: WireCodec) -> (u8, u32) {
+    match c {
+        WireCodec::Raw => (CODEC_RAW, 0),
+        WireCodec::Bf16 => (CODEC_BF16, 0),
+        WireCodec::F16 => (CODEC_F16, 0),
+        WireCodec::TopK(k) => (CODEC_TOPK, k.to_bits()),
+        WireCodec::Delta => (CODEC_DELTA, 0),
+        WireCodec::DeltaBf16 => (CODEC_DELTA_BF16, 0),
+    }
+}
+
+/// The handshake's `(id, param)` pair -> `WireCodec`, refusing ids
+/// this build doesn't speak and top-k fractions outside (0, 1].
+pub fn from_wire(id: u8, param: u32) -> Result<WireCodec> {
+    Ok(match id {
+        CODEC_RAW => WireCodec::Raw,
+        CODEC_BF16 => WireCodec::Bf16,
+        CODEC_F16 => WireCodec::F16,
+        CODEC_TOPK => {
+            let k = f32::from_bits(param);
+            if !(k > 0.0 && k <= 1.0) {
+                bail!("corrupt codec negotiation: top-k fraction {k}");
+            }
+            WireCodec::TopK(k)
+        }
+        CODEC_DELTA => WireCodec::Delta,
+        CODEC_DELTA_BF16 => WireCodec::DeltaBf16,
+        other => bail!("corrupt codec negotiation: unknown codec id \
+                        {other}"),
+    })
+}
+
+/// Does the negotiated codec transform the broadcast leg? (`raw`
+/// doesn't; everything else does — top-k broadcasts bf16.)
+pub fn bcast_is_coded(c: WireCodec) -> bool {
+    !matches!(c, WireCodec::Raw)
+}
+
+/// Does the negotiated codec transform the report leg? (`raw` and
+/// `delta` don't: delta is broadcast-only, which is what keeps its
+/// trajectory bit-identical to raw.)
+pub fn report_is_coded(c: WireCodec) -> bool {
+    !matches!(c, WireCodec::Raw | WireCodec::Delta)
+}
+
+/// The block-header codec id a coded *dispatch* bucket carries under
+/// this negotiated codec (top-k's broadcast leg is plain bf16).
+pub fn bcast_block_id(c: WireCodec) -> u8 {
+    match c {
+        WireCodec::Raw => CODEC_RAW, // never sent; raw has no blocks
+        WireCodec::Bf16 | WireCodec::TopK(_) => CODEC_BF16,
+        WireCodec::F16 => CODEC_F16,
+        WireCodec::Delta => CODEC_DELTA,
+        WireCodec::DeltaBf16 => CODEC_DELTA_BF16,
+    }
+}
+
+/// The block-header codec id a coded *report* bucket carries under
+/// this negotiated codec (delta's report leg is raw and sends none;
+/// delta+bf16 reports plain bf16).
+pub fn report_block_id(c: WireCodec) -> u8 {
+    match c {
+        WireCodec::Raw | WireCodec::Delta => CODEC_RAW, // never sent
+        WireCodec::Bf16 | WireCodec::DeltaBf16 => CODEC_BF16,
+        WireCodec::F16 => CODEC_F16,
+        WireCodec::TopK(_) => CODEC_TOPK,
+    }
+}
+
+/// Elements top-k ships for a `len`-element bucket at fraction `frac`:
+/// `ceil(frac * len)`, at least one so every bucket makes progress.
+pub fn topk_bucket_k(frac: f32, len: usize) -> usize {
+    if len == 0 {
+        return 0;
+    }
+    let k = (frac as f64 * len as f64).ceil() as usize;
+    k.clamp(1, len)
+}
+
+fn push_u16s(bytes: &mut Vec<u8>, codes: &[u16]) {
+    for &c in codes {
+        bytes.extend_from_slice(&c.to_le_bytes());
+    }
+}
+
+fn read_u16s(bytes: &[u8], out: &mut Vec<u16>) {
+    out.clear();
+    for p in bytes.chunks_exact(2) {
+        out.push(u16::from_le_bytes([p[0], p[1]]));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// broadcast leg
+// ---------------------------------------------------------------------------
+
+/// Master-side dispatch-leg encoder, one per worker connection. Owns
+/// the delta base (last dispatched words over the full vector) and the
+/// scratch the coded bytes are built in; [`Self::encode`] borrows its
+/// result, so the caller frames and writes it with zero copies.
+pub struct BcastEncoder {
+    codec: WireCodec,
+    /// Delta base: f32 bit patterns (`delta`) over the full vector.
+    base32: Vec<u32>,
+    /// Delta base: bf16 codewords (`delta+bf16`) over the full vector.
+    base16: Vec<u16>,
+    /// No valid base yet: the next round dispatches dense throughout.
+    fresh: bool,
+    /// Force-dense flag for the round in flight (set by `begin_round`).
+    round_dense: bool,
+    code16: Vec<u16>,
+    bytes: Vec<u8>,
+}
+
+impl BcastEncoder {
+    pub fn new(codec: WireCodec) -> Self {
+        BcastEncoder {
+            codec,
+            base32: Vec::new(),
+            base16: Vec::new(),
+            fresh: true,
+            round_dense: true,
+            code16: Vec::new(),
+            bytes: Vec::new(),
+        }
+    }
+
+    /// Drop the delta base: the next dispatch is dense throughout.
+    /// Called at connect and whenever a restore is dispatched, so both
+    /// ends restart from the same (empty) base and a resumed run's wire
+    /// needs no history.
+    pub fn reset_base(&mut self) {
+        self.fresh = true;
+    }
+
+    /// Start one round's dispatch over a `total`-element vector. The
+    /// dense/sparse choice is frozen per round here so every bucket of
+    /// the round sees a consistent base.
+    pub fn begin_round(&mut self, total: usize) {
+        match self.codec {
+            WireCodec::Delta => {
+                self.round_dense = self.fresh || self.base32.len() != total;
+                if self.base32.len() != total {
+                    self.base32.clear();
+                    self.base32.resize(total, 0);
+                }
+            }
+            WireCodec::DeltaBf16 => {
+                self.round_dense = self.fresh || self.base16.len() != total;
+                if self.base16.len() != total {
+                    self.base16.clear();
+                    self.base16.resize(total, 0);
+                }
+            }
+            _ => self.round_dense = true,
+        }
+        self.fresh = false;
+    }
+
+    /// Encode one dispatch bucket (`data` = that range of the
+    /// reference, `offset` its element offset). Returns the mode byte
+    /// and the coded bytes to frame. Deterministic in (data, state):
+    /// the sparse fallback fires iff the diff is strictly smaller than
+    /// the dense form, a pure function both ends could replay.
+    pub fn encode(&mut self, data: &[f32], offset: usize) -> (u8, &[u8]) {
+        self.bytes.clear();
+        match self.codec {
+            WireCodec::Raw => (CODED_DENSE, &self.bytes[..]),
+            WireCodec::Bf16 | WireCodec::TopK(_) => {
+                quantize_into(data, &mut self.code16, f32_to_bf16);
+                push_u16s(&mut self.bytes, &self.code16);
+                (CODED_DENSE, &self.bytes[..])
+            }
+            WireCodec::F16 => {
+                quantize_into(data, &mut self.code16, f32_to_f16);
+                push_u16s(&mut self.bytes, &self.code16);
+                (CODED_DENSE, &self.bytes[..])
+            }
+            WireCodec::Delta => {
+                let base = &mut self.base32[offset..offset + data.len()];
+                let dense = self.round_dense || {
+                    let ndiff = data
+                        .iter()
+                        .zip(base.iter())
+                        .filter(|(x, &b)| x.to_bits() != b)
+                        .count();
+                    ndiff * 8 >= data.len() * 4
+                };
+                if dense {
+                    for (b, &x) in base.iter_mut().zip(data) {
+                        let w = x.to_bits();
+                        self.bytes.extend_from_slice(&w.to_le_bytes());
+                        *b = w;
+                    }
+                    (CODED_DENSE, &self.bytes[..])
+                } else {
+                    for (i, (b, &x)) in
+                        base.iter_mut().zip(data).enumerate()
+                    {
+                        let w = x.to_bits();
+                        if w != *b {
+                            let d = w ^ *b;
+                            self.bytes.extend_from_slice(
+                                &(i as u32).to_le_bytes(),
+                            );
+                            self.bytes.extend_from_slice(&d.to_le_bytes());
+                            *b = w;
+                        }
+                    }
+                    (CODED_SPARSE, &self.bytes[..])
+                }
+            }
+            WireCodec::DeltaBf16 => {
+                quantize_into(data, &mut self.code16, f32_to_bf16);
+                let base = &mut self.base16[offset..offset + data.len()];
+                let dense = self.round_dense || {
+                    let ndiff = self
+                        .code16
+                        .iter()
+                        .zip(base.iter())
+                        .filter(|(c, b)| c != b)
+                        .count();
+                    ndiff * 6 >= self.code16.len() * 2
+                };
+                if dense {
+                    for (b, &c) in base.iter_mut().zip(&self.code16) {
+                        self.bytes.extend_from_slice(&c.to_le_bytes());
+                        *b = c;
+                    }
+                    (CODED_DENSE, &self.bytes[..])
+                } else {
+                    for (i, (b, &c)) in
+                        base.iter_mut().zip(&self.code16).enumerate()
+                    {
+                        if c != *b {
+                            let d = c ^ *b;
+                            self.bytes.extend_from_slice(
+                                &(i as u32).to_le_bytes(),
+                            );
+                            self.bytes.extend_from_slice(&d.to_le_bytes());
+                            *b = c;
+                        }
+                    }
+                    (CODED_SPARSE, &self.bytes[..])
+                }
+            }
+        }
+    }
+}
+
+/// Worker-side dispatch-leg decoder: mirrors [`BcastEncoder`]'s base
+/// so sparse deltas apply against the same words the master diffed.
+pub struct BcastDecoder {
+    codec: WireCodec,
+    base32: Vec<u32>,
+    base16: Vec<u16>,
+    /// A dense frame has landed for every element since the last
+    /// reset, so sparse frames have a base to apply against.
+    have_base: bool,
+    code16: Vec<u16>,
+}
+
+impl BcastDecoder {
+    pub fn new(codec: WireCodec) -> Self {
+        BcastDecoder {
+            codec,
+            base32: Vec::new(),
+            base16: Vec::new(),
+            have_base: false,
+            code16: Vec::new(),
+        }
+    }
+
+    /// Drop the base — the receive side of [`BcastEncoder::reset_base`]
+    /// (called at connect and when a restore arrives).
+    pub fn reset_base(&mut self) {
+        self.have_base = false;
+    }
+
+    /// Decode one coded dispatch bucket into `out` (the bucket's slice
+    /// of the reference vector). `offset`/`total` come from the frame's
+    /// placement header, already extent-checked by the wire layer.
+    pub fn decode(&mut self, block: &CodedBlock<'_>, offset: usize,
+                  total: usize, out: &mut [f32]) -> Result<()> {
+        // lengths were capped at the frame layer (MAX_PARAMS via
+        // read_coded_block); re-pin before sizing the delta base
+        if total as u64 > MAX_PARAMS || block.n_elems > out.len() {
+            bail!(
+                "corrupt coded bcast: {} elements / total {total} past \
+                 the decoded extent",
+                block.n_elems
+            );
+        }
+        if block.codec != bcast_block_id(self.codec) {
+            bail!(
+                "corrupt coded bcast: block codec id {} under \
+                 negotiated codec {}",
+                block.codec,
+                self.codec.name()
+            );
+        }
+        if block.n_elems != out.len() {
+            bail!(
+                "corrupt coded bcast: {} elements for a {}-element \
+                 bucket",
+                block.n_elems,
+                out.len()
+            );
+        }
+        match self.codec {
+            WireCodec::Raw => {
+                bail!("coded bcast under the raw codec")
+            }
+            WireCodec::Bf16 | WireCodec::TopK(_) | WireCodec::F16 => {
+                if block.mode != CODED_DENSE
+                    || block.bytes.len() != out.len() * 2
+                {
+                    bail!(
+                        "corrupt coded bcast: {} quantized bytes for \
+                         {} elements",
+                        block.bytes.len(),
+                        out.len()
+                    );
+                }
+                read_u16s(block.bytes, &mut self.code16);
+                let dq = if matches!(self.codec, WireCodec::F16) {
+                    f16_to_f32
+                } else {
+                    bf16_to_f32
+                };
+                dequantize_into(&self.code16, out, dq);
+                Ok(())
+            }
+            WireCodec::Delta => {
+                if self.base32.len() != total {
+                    self.base32.clear();
+                    self.base32.resize(total, 0);
+                    self.have_base = false;
+                }
+                let base =
+                    &mut self.base32[offset..offset + out.len()];
+                match block.mode {
+                    CODED_DENSE => {
+                        if block.bytes.len() != out.len() * 4 {
+                            bail!(
+                                "corrupt coded bcast: {} delta bytes \
+                                 for {} elements",
+                                block.bytes.len(),
+                                out.len()
+                            );
+                        }
+                        for (i, p) in
+                            block.bytes.chunks_exact(4).enumerate()
+                        {
+                            let w = u32::from_le_bytes([
+                                p[0], p[1], p[2], p[3],
+                            ]);
+                            base[i] = w;
+                        }
+                        self.have_base = true;
+                    }
+                    _ => {
+                        if !self.have_base {
+                            bail!(
+                                "corrupt coded bcast: sparse delta \
+                                 with no base installed"
+                            );
+                        }
+                        apply_sparse32(block.bytes, base)?;
+                    }
+                }
+                for (o, &w) in out.iter_mut().zip(base.iter()) {
+                    *o = f32::from_bits(w);
+                }
+                Ok(())
+            }
+            WireCodec::DeltaBf16 => {
+                if self.base16.len() != total {
+                    self.base16.clear();
+                    self.base16.resize(total, 0);
+                    self.have_base = false;
+                }
+                let base =
+                    &mut self.base16[offset..offset + out.len()];
+                match block.mode {
+                    CODED_DENSE => {
+                        if block.bytes.len() != out.len() * 2 {
+                            bail!(
+                                "corrupt coded bcast: {} delta bytes \
+                                 for {} elements",
+                                block.bytes.len(),
+                                out.len()
+                            );
+                        }
+                        for (i, p) in
+                            block.bytes.chunks_exact(2).enumerate()
+                        {
+                            base[i] = u16::from_le_bytes([p[0], p[1]]);
+                        }
+                        self.have_base = true;
+                    }
+                    _ => {
+                        if !self.have_base {
+                            bail!(
+                                "corrupt coded bcast: sparse delta \
+                                 with no base installed"
+                            );
+                        }
+                        apply_sparse16(block.bytes, base)?;
+                    }
+                }
+                for (o, &c) in out.iter_mut().zip(base.iter()) {
+                    *o = bf16_to_f32(c);
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Apply `(u32 index, u32 xor)` pairs to a bucket's base words.
+/// Indices must be strictly increasing and in range — anything else is
+/// a garbled frame, refused before any word is touched further.
+fn apply_sparse32(bytes: &[u8], base: &mut [u32]) -> Result<()> {
+    if bytes.len() % 8 != 0 {
+        bail!("corrupt sparse delta: {} bytes is not whole pairs",
+              bytes.len());
+    }
+    let mut prev: Option<u32> = None;
+    for p in bytes.chunks_exact(8) {
+        let i = u32::from_le_bytes([p[0], p[1], p[2], p[3]]);
+        let d = u32::from_le_bytes([p[4], p[5], p[6], p[7]]);
+        if prev.is_some_and(|q| i <= q) {
+            bail!("corrupt sparse delta: indices not strictly \
+                   increasing at {i}");
+        }
+        prev = Some(i);
+        let Some(b) = base.get_mut(i as usize) else {
+            bail!("corrupt sparse delta: index {i} past the bucket");
+        };
+        *b ^= d;
+    }
+    Ok(())
+}
+
+/// Apply `(u32 index, u16 xor)` pairs — the bf16-delta sparse form.
+fn apply_sparse16(bytes: &[u8], base: &mut [u16]) -> Result<()> {
+    if bytes.len() % 6 != 0 {
+        bail!("corrupt sparse delta: {} bytes is not whole pairs",
+              bytes.len());
+    }
+    let mut prev: Option<u32> = None;
+    for p in bytes.chunks_exact(6) {
+        let i = u32::from_le_bytes([p[0], p[1], p[2], p[3]]);
+        let d = u16::from_le_bytes([p[4], p[5]]);
+        if prev.is_some_and(|q| i <= q) {
+            bail!("corrupt sparse delta: indices not strictly \
+                   increasing at {i}");
+        }
+        prev = Some(i);
+        let Some(b) = base.get_mut(i as usize) else {
+            bail!("corrupt sparse delta: index {i} past the bucket");
+        };
+        *b ^= d;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// report leg
+// ---------------------------------------------------------------------------
+
+/// Worker-side report-leg encoder. Owns the full-P error-feedback
+/// residual (sliced per bucket) and the scratch the coded bytes are
+/// built in. The residual is trajectory state: it is injected into
+/// snapshots under [`EF_RESIDUAL_VEC`] and reinstalled at restore.
+pub struct ReportEncoder {
+    codec: WireCodec,
+    residual: Vec<f32>,
+    code16: Vec<u16>,
+    idx: Vec<u32>,
+    vals: Vec<f32>,
+    sel: Vec<(u32, u32)>,
+    bytes: Vec<u8>,
+}
+
+impl ReportEncoder {
+    pub fn new(codec: WireCodec) -> Self {
+        ReportEncoder {
+            codec,
+            residual: Vec::new(),
+            code16: Vec::new(),
+            idx: Vec::new(),
+            vals: Vec::new(),
+            sel: Vec::new(),
+            bytes: Vec::new(),
+        }
+    }
+
+    /// Cold warm-up: size the residual to the parameter count. A size
+    /// change (first round, or a restore to a different model) resets
+    /// the accumulator to zero.
+    pub fn ensure_p(&mut self, p: usize) {
+        if self.residual.len() != p {
+            self.residual.clear();
+            self.residual.resize(p, 0.0);
+        }
+    }
+
+    /// The residual as a checkpointable vector (empty until the first
+    /// coded report).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// Reinstall a checkpointed residual (restore path).
+    pub fn set_residual(&mut self, r: Vec<f32>) {
+        self.residual = r;
+    }
+
+    /// Encode one report bucket (`data` = that range of the replica's
+    /// parameters, `offset` its element offset into the full vector).
+    /// Returns the mode byte and the coded bytes to frame; the
+    /// residual slice for this bucket is updated in place.
+    pub fn encode(&mut self, data: &[f32], offset: usize) -> (u8, &[u8]) {
+        self.bytes.clear();
+        let res = &mut self.residual[offset..offset + data.len()];
+        match self.codec {
+            WireCodec::Raw | WireCodec::Delta => {
+                (CODED_DENSE, &self.bytes[..]) // raw report leg: unused
+            }
+            WireCodec::Bf16 | WireCodec::DeltaBf16 => {
+                quantize_ef(data, res, &mut self.code16, f32_to_bf16,
+                            bf16_to_f32);
+                push_u16s(&mut self.bytes, &self.code16);
+                (CODED_DENSE, &self.bytes[..])
+            }
+            WireCodec::F16 => {
+                quantize_ef(data, res, &mut self.code16, f32_to_f16,
+                            f16_to_f32);
+                push_u16s(&mut self.bytes, &self.code16);
+                (CODED_DENSE, &self.bytes[..])
+            }
+            WireCodec::TopK(frac) => {
+                let k = topk_bucket_k(frac, data.len());
+                top_k_ef(data, res, k, &mut self.sel, &mut self.idx,
+                         &mut self.vals);
+                for (&i, &v) in self.idx.iter().zip(&self.vals) {
+                    self.bytes.extend_from_slice(&i.to_le_bytes());
+                    self.bytes
+                        .extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+                (CODED_SPARSE, &self.bytes[..])
+            }
+        }
+    }
+}
+
+/// Master-side report-leg decoder (one per reader thread): stateless
+/// apart from pooled scratch — error feedback lives on the sender.
+pub struct ReportDecoder {
+    codec: WireCodec,
+    code16: Vec<u16>,
+}
+
+impl ReportDecoder {
+    pub fn new(codec: WireCodec) -> Self {
+        ReportDecoder {
+            codec,
+            code16: Vec::new(),
+        }
+    }
+
+    /// Decode one coded report bucket into `out` (cleared and resized
+    /// to the bucket length — a recycled buffer in steady state).
+    pub fn decode(&mut self, block: &CodedBlock<'_>, out: &mut Vec<f32>)
+                  -> Result<()> {
+        // the frame layer capped n_elems against MAX_PARAMS; re-pin
+        // here before this fn sizes `out` from it
+        if block.n_elems as u64 > MAX_PARAMS {
+            bail!(
+                "corrupt coded report: {} elements exceeds the \
+                 {MAX_PARAMS} parameter cap",
+                block.n_elems
+            );
+        }
+        if block.codec != report_block_id(self.codec) {
+            bail!(
+                "corrupt coded report: block codec id {} under \
+                 negotiated codec {}",
+                block.codec,
+                self.codec.name()
+            );
+        }
+        out.clear();
+        out.resize(block.n_elems, 0.0);
+        match self.codec {
+            WireCodec::Raw | WireCodec::Delta => {
+                bail!("coded report under a raw-report codec")
+            }
+            WireCodec::Bf16 | WireCodec::DeltaBf16 | WireCodec::F16 => {
+                if block.mode != CODED_DENSE
+                    || block.bytes.len() != block.n_elems * 2
+                {
+                    bail!(
+                        "corrupt coded report: {} quantized bytes for \
+                         {} elements",
+                        block.bytes.len(),
+                        block.n_elems
+                    );
+                }
+                read_u16s(block.bytes, &mut self.code16);
+                let dq = if matches!(self.codec, WireCodec::F16) {
+                    f16_to_f32
+                } else {
+                    bf16_to_f32
+                };
+                dequantize_into(&self.code16, out, dq);
+                Ok(())
+            }
+            WireCodec::TopK(frac) => {
+                if block.mode != CODED_SPARSE
+                    || block.bytes.len() % 8 != 0
+                {
+                    bail!(
+                        "corrupt coded report: {} top-k bytes",
+                        block.bytes.len()
+                    );
+                }
+                let pairs = block.bytes.len() / 8;
+                let k = topk_bucket_k(frac, block.n_elems);
+                if pairs != k {
+                    bail!(
+                        "corrupt coded report: {pairs} top-k pairs, \
+                         expected {k}"
+                    );
+                }
+                let mut prev: Option<u32> = None;
+                for p in block.bytes.chunks_exact(8) {
+                    let i = u32::from_le_bytes([p[0], p[1], p[2], p[3]]);
+                    let v = f32::from_bits(u32::from_le_bytes([
+                        p[4], p[5], p[6], p[7],
+                    ]));
+                    if prev.is_some_and(|q| i <= q) {
+                        bail!(
+                            "corrupt coded report: top-k indices not \
+                             strictly increasing at {i}"
+                        );
+                    }
+                    if i as usize >= block.n_elems {
+                        bail!(
+                            "corrupt coded report: top-k index {i} \
+                             past the bucket"
+                        );
+                    }
+                    prev = Some(i);
+                    out[i as usize] = v;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Wire bytes a coded dispatch of one `len`-element bucket would not
+/// exceed (used only by size-reasoning tests; the real byte counts are
+/// metered off the actual frames).
+#[cfg(test)]
+fn worst_case_bcast_bytes(c: WireCodec, len: usize) -> usize {
+    match c {
+        WireCodec::Raw => len * 4,
+        WireCodec::Bf16 | WireCodec::F16 | WireCodec::TopK(_) => len * 2,
+        WireCodec::Delta => len * 4,
+        WireCodec::DeltaBf16 => len * 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_bcast(codec: WireCodec, rounds: &[Vec<f32>],
+                       bucket_elems: usize) -> Vec<Vec<f32>> {
+        let p = rounds[0].len();
+        let mut enc = BcastEncoder::new(codec);
+        let mut dec = BcastDecoder::new(codec);
+        let mut out = Vec::new();
+        for xref in rounds {
+            assert_eq!(xref.len(), p);
+            enc.begin_round(p);
+            let mut decoded = vec![0.0f32; p];
+            let n = crate::opt::vecmath::bucket_count(p, bucket_elems);
+            for k in 0..n {
+                let (lo, hi) = crate::opt::vecmath::bucket_range(
+                    p,
+                    bucket_elems,
+                    k,
+                );
+                let (mode, bytes) = enc.encode(&xref[lo..hi], lo);
+                assert!(
+                    bytes.len()
+                        <= worst_case_bcast_bytes(codec, hi - lo),
+                    "{codec:?} bucket {k}: {} bytes",
+                    bytes.len()
+                );
+                let block = CodedBlock {
+                    codec: bcast_block_id(codec),
+                    mode,
+                    n_elems: hi - lo,
+                    bytes,
+                };
+                let owned: Vec<u8> = block.bytes.to_vec();
+                let block = CodedBlock {
+                    bytes: &owned,
+                    ..block
+                };
+                dec.decode(&block, lo, p, &mut decoded[lo..hi])
+                    .unwrap();
+            }
+            out.push(decoded);
+        }
+        out
+    }
+
+    fn seq(p: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Pcg64::new(seed, 0x7);
+        let mut v = vec![0.0f32; p];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn wire_id_round_trips_every_codec() {
+        for c in [
+            WireCodec::Raw,
+            WireCodec::Bf16,
+            WireCodec::F16,
+            WireCodec::TopK(0.05),
+            WireCodec::Delta,
+            WireCodec::DeltaBf16,
+        ] {
+            let (id, param) = to_wire(c);
+            assert_eq!(from_wire(id, param).unwrap(), c, "{c:?}");
+        }
+        assert!(from_wire(99, 0).is_err());
+        assert!(from_wire(CODEC_TOPK, 0.0f32.to_bits()).is_err());
+        assert!(from_wire(CODEC_TOPK, 7.5f32.to_bits()).is_err());
+    }
+
+    /// `delta` reconstructs the dispatched f32s bit-exactly across
+    /// rounds and bucket sizes — including the sparse rounds, which is
+    /// what makes its trajectory identical to `raw`.
+    #[test]
+    fn delta_bcast_is_bit_exact_across_rounds() {
+        let p = 1001;
+        let mut r1 = seq(p, 1);
+        // round 2 perturbs a few elements (sparse-friendly), round 3
+        // perturbs everything (dense fallback fires)
+        let mut r2 = r1.clone();
+        for i in (0..p).step_by(97) {
+            r2[i] += 1.0;
+        }
+        let r3: Vec<f32> = r2.iter().map(|x| x * 1.5).collect();
+        r1[0] = -0.0; // signed zero must survive
+        let rounds = vec![r1.clone(), r2.clone(), r3.clone()];
+        for bucket in [0usize, 64, 1000, 2048] {
+            let got = roundtrip_bcast(WireCodec::Delta, &rounds, bucket);
+            for (g, want) in got.iter().zip(&rounds) {
+                for i in 0..p {
+                    assert_eq!(
+                        g[i].to_bits(),
+                        want[i].to_bits(),
+                        "bucket {bucket} i {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The sparse round really is smaller on the wire than dense.
+    #[test]
+    fn delta_sparse_rounds_save_bytes() {
+        let p = 4096;
+        let r1 = seq(p, 2);
+        let mut r2 = r1.clone();
+        for i in (0..p).step_by(101) {
+            r2[i] += 0.5;
+        }
+        let mut enc = BcastEncoder::new(WireCodec::Delta);
+        enc.begin_round(p);
+        let (mode, bytes) = enc.encode(&r1, 0);
+        assert_eq!(mode, CODED_DENSE);
+        let dense_len = bytes.len();
+        assert_eq!(dense_len, p * 4);
+        enc.begin_round(p);
+        let (mode, bytes) = enc.encode(&r2, 0);
+        assert_eq!(mode, CODED_SPARSE);
+        assert!(bytes.len() < dense_len / 10, "{}", bytes.len());
+        // an identical redispatch is an empty sparse frame
+        enc.begin_round(p);
+        let (mode, bytes) = enc.encode(&r2, 0);
+        assert_eq!((mode, bytes.len()), (CODED_SPARSE, 0));
+    }
+
+    /// `delta+bf16` decodes to exactly what plain `bf16` would decode
+    /// to — the equivalence its trajectory claim rests on.
+    #[test]
+    fn delta_bf16_matches_plain_bf16_decode() {
+        let p = 513;
+        let r1 = seq(p, 3);
+        let mut r2 = r1.clone();
+        for i in (0..p).step_by(37) {
+            r2[i] *= 2.0;
+        }
+        let rounds = vec![r1, r2];
+        for bucket in [0usize, 100] {
+            let a =
+                roundtrip_bcast(WireCodec::DeltaBf16, &rounds, bucket);
+            let b = roundtrip_bcast(WireCodec::Bf16, &rounds, bucket);
+            for (x, y) in a.iter().zip(&b) {
+                for i in 0..p {
+                    assert_eq!(x[i].to_bits(), y[i].to_bits(), "i {i}");
+                }
+            }
+        }
+    }
+
+    /// Quantizing bcast codecs round every element to its format and
+    /// ship exactly 2 bytes per element.
+    #[test]
+    fn quantized_bcast_decodes_to_the_rounded_reference() {
+        let p = 257;
+        let xref = seq(p, 4);
+        for codec in
+            [WireCodec::Bf16, WireCodec::F16, WireCodec::TopK(0.1)]
+        {
+            let got =
+                roundtrip_bcast(codec, &[xref.clone()], 64).remove(0);
+            for i in 0..p {
+                let want = match codec {
+                    WireCodec::F16 => f16_to_f32(f32_to_f16(xref[i])),
+                    _ => bf16_to_f32(f32_to_bf16(xref[i])),
+                };
+                assert_eq!(got[i].to_bits(), want.to_bits(), "i {i}");
+            }
+        }
+    }
+
+    /// A decoder that never saw a dense round refuses sparse frames
+    /// instead of applying deltas to a made-up base; after a reset the
+    /// encoder goes dense again so both ends re-anchor.
+    #[test]
+    fn sparse_without_base_is_refused_and_reset_reanchors() {
+        let p = 64;
+        let r = seq(p, 5);
+        let mut enc = BcastEncoder::new(WireCodec::Delta);
+        enc.begin_round(p);
+        enc.encode(&r, 0);
+        let mut r2 = r.clone();
+        r2[3] += 1.0;
+        enc.begin_round(p);
+        let (mode, bytes) = enc.encode(&r2, 0);
+        assert_eq!(mode, CODED_SPARSE);
+        let owned = bytes.to_vec();
+        let block = CodedBlock {
+            codec: CODEC_DELTA,
+            mode: CODED_SPARSE,
+            n_elems: p,
+            bytes: &owned,
+        };
+        let mut fresh = BcastDecoder::new(WireCodec::Delta);
+        let mut out = vec![0.0f32; p];
+        let err = fresh
+            .decode(&block, 0, p, &mut out)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no base"), "{err}");
+        // after reset_base the encoder's next round is dense
+        enc.reset_base();
+        enc.begin_round(p);
+        let (mode, _) = enc.encode(&r2, 0);
+        assert_eq!(mode, CODED_DENSE);
+    }
+
+    /// Report leg: quantized reports accumulate their error locally
+    /// and the decoded payload plus residual reconstructs the
+    /// compensated input exactly.
+    #[test]
+    fn report_ef_round_trips_and_accumulates() {
+        let p = 301;
+        let params = seq(p, 6);
+        for codec in [WireCodec::Bf16, WireCodec::F16] {
+            let mut enc = ReportEncoder::new(codec);
+            enc.ensure_p(p);
+            let mut dec = ReportDecoder::new(codec);
+            let mut out = Vec::new();
+            for _ in 0..3 {
+                let carried: Vec<f32> = enc.residual().to_vec();
+                let (mode, bytes) = enc.encode(&params, 0);
+                assert_eq!(bytes.len(), p * 2, "{codec:?}");
+                let owned = bytes.to_vec();
+                let block = CodedBlock {
+                    codec: report_block_id(codec),
+                    mode,
+                    n_elems: p,
+                    bytes: &owned,
+                };
+                dec.decode(&block, &mut out).unwrap();
+                for i in 0..p {
+                    let c = params[i] + carried[i];
+                    assert_eq!(
+                        (out[i] + enc.residual()[i]).to_bits(),
+                        c.to_bits(),
+                        "{codec:?} i {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Top-k ships exactly k pairs per bucket, the decoder scatters
+    /// them and zero-fills the rest, and the unshipped mass stays in
+    /// the residual.
+    #[test]
+    fn topk_report_round_trips_sparsely() {
+        let p = 200;
+        let frac = 0.05;
+        let params = seq(p, 7);
+        let codec = WireCodec::TopK(frac);
+        let mut enc = ReportEncoder::new(codec);
+        enc.ensure_p(p);
+        let mut dec = ReportDecoder::new(codec);
+        let (mode, bytes) = enc.encode(&params, 0);
+        assert_eq!(mode, CODED_SPARSE);
+        let k = topk_bucket_k(frac, p);
+        assert_eq!(bytes.len(), k * 8);
+        let owned = bytes.to_vec();
+        let block = CodedBlock {
+            codec: CODEC_TOPK,
+            mode,
+            n_elems: p,
+            bytes: &owned,
+        };
+        let mut out = Vec::new();
+        dec.decode(&block, &mut out).unwrap();
+        // decoded + residual == compensated input (== params, round 1)
+        for i in 0..p {
+            assert_eq!(
+                (out[i] + enc.residual()[i]).to_bits(),
+                (params[i] + 0.0).to_bits(),
+                "i {i}"
+            );
+        }
+        let shipped = out.iter().filter(|v| **v != 0.0).count();
+        assert!(shipped <= k);
+        // a wrong pair count or an index replay is refused
+        let block_bad = CodedBlock {
+            codec: CODEC_TOPK,
+            mode: CODED_SPARSE,
+            n_elems: p,
+            bytes: &owned[..owned.len() - 8],
+        };
+        assert!(dec.decode(&block_bad, &mut out).is_err());
+        let mut dup = owned.clone();
+        let last = dup.len() - 8;
+        let first_idx = dup[..4].to_vec();
+        dup[last..last + 4].copy_from_slice(&first_idx);
+        let block_dup = CodedBlock {
+            codec: CODEC_TOPK,
+            mode: CODED_SPARSE,
+            n_elems: p,
+            bytes: &dup,
+        };
+        let err =
+            dec.decode(&block_dup, &mut out).unwrap_err().to_string();
+        assert!(err.contains("strictly increasing"), "{err}");
+    }
+
+    /// Mismatched block ids and byte lengths are typed errors on both
+    /// legs — the decoder never trusts a header the handshake didn't
+    /// negotiate.
+    #[test]
+    fn decoders_refuse_foreign_blocks() {
+        let mut dec = ReportDecoder::new(WireCodec::Bf16);
+        let mut out = Vec::new();
+        let block = CodedBlock {
+            codec: CODEC_F16,
+            mode: CODED_DENSE,
+            n_elems: 2,
+            bytes: &[0u8; 4],
+        };
+        let err = dec.decode(&block, &mut out).unwrap_err().to_string();
+        assert!(err.contains("negotiated codec bf16"), "{err}");
+        let block = CodedBlock {
+            codec: CODEC_BF16,
+            mode: CODED_DENSE,
+            n_elems: 3,
+            bytes: &[0u8; 4], // 3 elems need 6 bytes
+        };
+        assert!(dec.decode(&block, &mut out).is_err());
+        let mut bdec = BcastDecoder::new(WireCodec::Delta);
+        let mut buf = vec![0.0f32; 2];
+        let block = CodedBlock {
+            codec: CODEC_BF16,
+            mode: CODED_DENSE,
+            n_elems: 2,
+            bytes: &[0u8; 4],
+        };
+        assert!(bdec.decode(&block, 0, 2, &mut buf).is_err());
+        // raw never decodes blocks at all
+        let mut rdec = ReportDecoder::new(WireCodec::Raw);
+        let block = CodedBlock {
+            codec: CODEC_RAW,
+            mode: CODED_DENSE,
+            n_elems: 1,
+            bytes: &[0u8; 4],
+        };
+        assert!(rdec.decode(&block, &mut out).is_err());
+    }
+
+    #[test]
+    fn topk_bucket_k_scales_and_clamps() {
+        assert_eq!(topk_bucket_k(0.01, 1000), 10);
+        assert_eq!(topk_bucket_k(0.01, 5), 1); // at least one
+        assert_eq!(topk_bucket_k(1.0, 7), 7);
+        assert_eq!(topk_bucket_k(0.5, 0), 0); // empty bucket
+        assert_eq!(topk_bucket_k(0.015, 1000), 15);
+    }
+}

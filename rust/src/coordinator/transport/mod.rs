@@ -61,6 +61,11 @@
 //! Draining --[BUCKET_REPORT w->m]--> Draining
 //! RoundLoop --[STATE_CHUNK m->w]--> RoundLoop
 //! SnapshotQuiesce --[STATE_CHUNK w->m]--> SnapshotQuiesce
+//! RoundLoop --[CODED_BCAST m->w]--> InFlight
+//! InFlight --[CODED_BCAST m->w]--> InFlight
+//! Restore --[CODED_BCAST m->w]--> InFlight
+//! InFlight --[CODED_REPORT w->m]--> InFlight
+//! Draining --[CODED_REPORT w->m]--> Draining
 //! ```
 //!
 //! # Bucketed streaming (wire v2)
@@ -81,6 +86,22 @@
 //! within each bucket, so results are bit-identical to the monolithic
 //! path — pinned across bucket sizes by the determinism suite.
 //!
+//! # Wire codecs (v3)
+//!
+//! `--wire-codec` selects a payload transform between the fabric and
+//! the TCP wire ([`codec`]): bf16/f16 quantization, top-k
+//! sparsification of the report leg, and XOR-delta encoding of the
+//! broadcast leg against the previous dispatch. The codec is
+//! negotiated in the hello handshake (a mismatched worker is refused
+//! at connect) and applied per bucket, composing with the streaming
+//! above: a coded dispatch is a run of `CODED_BCAST` frames, a coded
+//! report a run of `CODED_REPORT` frames, and the stats-only `REPORT`
+//! still closes the round. Lossy report codecs carry a per-replica
+//! error-feedback residual (checkpointed with worker state, so resume
+//! stays trajectory-stable); `raw` — the default and the determinism
+//! suites' codec — sends v2's frames byte-for-byte. The in-process
+//! channels ignore the knob: there is no wire to compress.
+//!
 //! Debug-oriented [`protocol::ProtocolMonitor`]s sit on both endpoints
 //! of both transports and validate every frame against the table, so
 //! an illegal sequence (a round before the handshake, a report during
@@ -90,6 +111,7 @@
 //! which checks every `// lint: proto(STATE)` region's tag handling
 //! statically.
 
+pub mod codec;
 pub mod protocol;
 pub mod tcp;
 pub mod wire;

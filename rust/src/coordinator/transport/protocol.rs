@@ -157,6 +157,44 @@ pub const TRANSITIONS: &[(State, Dir, u8, State)] = &[
         wire::TAG_STATE_CHUNK,
         State::SnapshotQuiesce,
     ),
+    // Coded payload frames (wire v3, `--wire-codec`): exactly the
+    // bucketed rows' shape with the payload transformed. A coded
+    // dispatch is a run of TAG_CODED_BCAST frames (bucket 0 arms the
+    // round, monolithic = the n_buckets == 1 case); the worker answers
+    // with TAG_CODED_REPORT frames and the round still completes on
+    // the stats-only TAG_REPORT row above — a coded frame never closes
+    // a round. `raw` sends none of these: its wire is bit-identical to
+    // v2's.
+    (
+        State::RoundLoop,
+        Dir::ToWorker,
+        wire::TAG_CODED_BCAST,
+        State::InFlight,
+    ),
+    (
+        State::InFlight,
+        Dir::ToWorker,
+        wire::TAG_CODED_BCAST,
+        State::InFlight,
+    ),
+    (
+        State::Restore,
+        Dir::ToWorker,
+        wire::TAG_CODED_BCAST,
+        State::InFlight,
+    ),
+    (
+        State::InFlight,
+        Dir::ToMaster,
+        wire::TAG_CODED_REPORT,
+        State::InFlight,
+    ),
+    (
+        State::Draining,
+        Dir::ToMaster,
+        wire::TAG_CODED_REPORT,
+        State::Draining,
+    ),
 ];
 
 impl State {
@@ -206,6 +244,8 @@ pub const fn tag_name(tag: u8) -> &'static str {
         wire::TAG_BUCKET_REPORT => "TAG_BUCKET_REPORT",
         wire::TAG_BUCKET_BCAST => "TAG_BUCKET_BCAST",
         wire::TAG_STATE_CHUNK => "TAG_STATE_CHUNK",
+        wire::TAG_CODED_BCAST => "TAG_CODED_BCAST",
+        wire::TAG_CODED_REPORT => "TAG_CODED_REPORT",
         _ => "TAG_UNKNOWN",
     }
 }
@@ -462,6 +502,46 @@ mod tests {
             legal(State::InFlight, Dir::ToMaster, wire::TAG_STATE_CHUNK),
             None
         );
+    }
+
+    #[test]
+    fn monitor_walks_a_coded_round_clean_and_rejects_strays() {
+        let mut m = ProtocolMonitor::established("master", 0);
+        // coded dispatch run, coded report run, stats-only completion
+        for _ in 0..3 {
+            m.observe(Dir::ToWorker, wire::TAG_CODED_BCAST).unwrap();
+        }
+        assert_eq!(m.state(), State::InFlight);
+        for _ in 0..3 {
+            m.observe(Dir::ToMaster, wire::TAG_CODED_REPORT).unwrap();
+        }
+        m.observe(Dir::ToMaster, wire::TAG_REPORT).unwrap();
+        assert_eq!(m.state(), State::RoundLoop);
+        // a coded dispatch straight out of Restore, drained after Stop
+        m.observe(Dir::ToWorker, wire::TAG_RESTORE).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_CODED_BCAST).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_STOP).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_CODED_REPORT).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_REPORT).unwrap();
+        assert_eq!(m.state(), State::Draining);
+        // coded frames outside their states are violations: no coded
+        // report once the round completed, none during the handshake
+        // or a snapshot quiesce, and a coded frame never travels
+        // against its leg's direction
+        for (s, d, t) in [
+            (State::RoundLoop, Dir::ToMaster, wire::TAG_CODED_REPORT),
+            (State::Hello, Dir::ToWorker, wire::TAG_CODED_BCAST),
+            (
+                State::SnapshotQuiesce,
+                Dir::ToMaster,
+                wire::TAG_CODED_REPORT,
+            ),
+            (State::InFlight, Dir::ToMaster, wire::TAG_CODED_BCAST),
+            (State::InFlight, Dir::ToWorker, wire::TAG_CODED_REPORT),
+        ] {
+            assert_eq!(legal(s, d, t), None, "{} {}", s.name(),
+                       tag_name(t));
+        }
     }
 
     /// The typed error must survive an anyhow boundary: that is what

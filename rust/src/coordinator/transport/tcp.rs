@@ -24,6 +24,7 @@
 //! the in-process convention so comm/compute ratios are comparable.
 
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -31,13 +32,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::config::WireCodec;
 use crate::coordinator::comm::{BucketPayload, BucketReport, CommMeter,
                                FabricEvent, ReplicaEndpoint, RoundCmd,
                                RoundMsg, RoundReport, WorkerCmd,
                                WorkerState};
 use crate::coordinator::transport::protocol::{Dir, ProtocolMonitor,
                                               ProtocolViolation};
-use crate::coordinator::transport::{wire, Transport};
+use crate::coordinator::transport::{codec, wire, Transport};
 use crate::info;
 use crate::opt::vecmath;
 
@@ -60,6 +62,16 @@ pub struct TcpTransport {
     /// also sizes state chunks so snapshot/restore payloads larger than
     /// one frame ship in bucket-sized pieces.
     bucket_elems: usize,
+    /// `bucket_elems` mirrored for the reader threads: a coded (or
+    /// bucketed) report arriving while the fabric runs monolithic
+    /// rounds is assembled reader-side and injected into the closing
+    /// stats report instead of surfacing as a bucket event.
+    bucket_shared: Arc<AtomicUsize>,
+    /// Negotiated payload codec (`--wire-codec`), uniform across the
+    /// fabric — the handshake refuses a worker speaking anything else.
+    codec: WireCodec,
+    /// Per-connection dispatch-leg encoders (delta bases + scratch).
+    bcast_enc: Vec<codec::BcastEncoder>,
 }
 
 /// How long [`TcpTransport::listen`] waits for all `n` workers to
@@ -78,6 +90,24 @@ impl TcpTransport {
     /// trajectory is independent of which physical worker lands where.
     pub fn listen(addr: &str, n: usize) -> Result<TcpTransport> {
         Self::listen_timeout(addr, n, DEFAULT_ACCEPT_TIMEOUT)
+    }
+
+    /// [`TcpTransport::listen`] negotiating a payload codec
+    /// (`--wire-codec`): every worker must hello with the same codec,
+    /// or its connection is refused during the handshake.
+    pub fn listen_with_codec(
+        addr: &str,
+        n: usize,
+        wc: WireCodec,
+    ) -> Result<TcpTransport> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding fabric master on {addr}"))?;
+        Self::accept_workers_with_codec(
+            listener,
+            n,
+            DEFAULT_ACCEPT_TIMEOUT,
+            wc,
+        )
     }
 
     /// [`TcpTransport::listen`] with an explicit accept deadline: if
@@ -101,18 +131,31 @@ impl TcpTransport {
         n: usize,
         timeout: Duration,
     ) -> Result<TcpTransport> {
+        Self::accept_workers_with_codec(listener, n, timeout,
+                                        WireCodec::Raw)
+    }
+
+    /// [`TcpTransport::accept_workers`] under a payload codec.
+    pub fn accept_workers_with_codec(
+        listener: TcpListener,
+        n: usize,
+        timeout: Duration,
+        wc: WireCodec,
+    ) -> Result<TcpTransport> {
         anyhow::ensure!(n >= 1, "a TCP fabric needs at least one worker");
         listener
             .set_nonblocking(true)
             .context("setting the fabric listener non-blocking")?;
         let deadline = Instant::now() + timeout;
         let meter = Arc::new(CommMeter::new());
+        let bucket_shared = Arc::new(AtomicUsize::new(0));
         let (event_tx, event_rx) = mpsc::channel::<FabricEvent>();
         let mut streams = Vec::with_capacity(n);
         let mut snap_rxs = Vec::with_capacity(n);
         let mut readers = Vec::with_capacity(n);
         let mut monitors = Vec::with_capacity(n);
         let mut pool_txs = Vec::with_capacity(n);
+        let mut bcast_enc = Vec::with_capacity(n);
         for id in 0..n {
             let (mut stream, peer) =
                 accept_deadline(&listener, deadline, id, n)?;
@@ -126,7 +169,7 @@ impl TcpTransport {
                 .saturating_duration_since(Instant::now())
                 .max(Duration::from_millis(1));
             stream.set_read_timeout(Some(remaining)).ok();
-            let monitor = handshake_accept(&mut stream, peer, id, n)?;
+            let monitor = handshake_accept(&mut stream, peer, id, n, wc)?;
             // back to a blocking socket before the reader takes over
             stream.set_read_timeout(None).ok();
             info!("fabric: worker {id}/{n} connected from {peer}");
@@ -137,13 +180,15 @@ impl TcpTransport {
             let (pool_tx, pool_rx) = mpsc::channel::<Vec<f32>>();
             let ev = event_tx.clone();
             let m = meter.clone();
+            let bs = bucket_shared.clone();
             readers.push(std::thread::spawn(move || {
-                reader_loop(rd, id, ev, snap_tx, pool_rx, m)
+                reader_loop(rd, id, ev, snap_tx, pool_rx, m, wc, bs)
             }));
             streams.push(stream);
             snap_rxs.push(snap_rx);
             monitors.push(monitor);
             pool_txs.push(pool_tx);
+            bcast_enc.push(codec::BcastEncoder::new(wc));
         }
         Ok(TcpTransport {
             streams,
@@ -154,6 +199,9 @@ impl TcpTransport {
             monitors,
             pool_tx: pool_txs,
             bucket_elems: 0,
+            bucket_shared,
+            codec: wc,
+            bcast_enc,
         })
     }
 
@@ -178,6 +226,9 @@ impl TcpTransport {
     fn dispatch_cmd(&mut self, replica: usize, cmd: RoundCmd) -> Result<()> {
         match cmd {
             RoundCmd::Round(msg) => {
+                if codec::bcast_is_coded(self.codec) {
+                    return self.write_round_coded(replica, &msg);
+                }
                 if msg.bucket_elems > 0 && !msg.xref.is_empty() {
                     return self.write_round_buckets(replica, &msg);
                 }
@@ -211,6 +262,10 @@ impl TcpTransport {
                 })
             }
             RoundCmd::Restore(st) => {
+                // a restore re-anchors the dispatch leg: the next coded
+                // round must not diff against pre-restore state (the
+                // worker's decoder resets its base on receipt)
+                self.bcast_enc[replica].reset_base();
                 let chunk = self.state_chunk_bytes();
                 let monitor = &mut self.monitors[replica];
                 wire::write_state_chunked(
@@ -299,6 +354,68 @@ impl TcpTransport {
         }
         Ok(())
     }
+
+    /// Stream one round through the negotiated payload codec: a run of
+    /// [`wire::TAG_CODED_BCAST`] frames, one per bucket (a monolithic
+    /// dispatch is the single-bucket case, so the worker mirrors a
+    /// single coded bucket back). The meter counts the *post-encode*
+    /// frame bytes — what actually crossed the wire, which is the
+    /// quantity the codec exists to shrink.
+    // lint: proto(RoundLoop|Restore|InFlight)
+    fn write_round_coded(&mut self, replica: usize, msg: &RoundMsg)
+                         -> Result<()> {
+        let p = msg.xref.len();
+        let n = if msg.bucket_elems > 0 && p > 0 {
+            let n = vecmath::bucket_count(p, msg.bucket_elems);
+            // geometry the u32 header can't carry falls back to one
+            // monolithic coded frame, like the raw path's fallback
+            if u32::try_from(n).is_ok() {
+                n
+            } else {
+                1
+            }
+        } else {
+            1
+        };
+        let be = if n == 1 { 0 } else { msg.bucket_elems };
+        let block_id = codec::bcast_block_id(self.codec);
+        self.bcast_enc[replica].begin_round(p);
+        for k in 0..n {
+            self.monitors[replica]
+                .observe(Dir::ToWorker, wire::TAG_CODED_BCAST)?;
+            let (lo, hi) = vecmath::bucket_range(p, be, k);
+            let meta = wire::BucketMeta {
+                round: msg.round,
+                bucket: k as u32,
+                n_buckets: n as u32,
+                offset: lo as u64,
+                total_len: p as u64,
+            };
+            let (mode, coded) =
+                self.bcast_enc[replica].encode(&msg.xref[lo..hi], lo);
+            let payload = wire::encode_coded_bcast(
+                &msg.consts,
+                &meta,
+                block_id,
+                mode,
+                hi - lo,
+                coded,
+            )
+            .with_context(|| {
+                format!("sending coded bucket {k} to replica {replica}")
+            })?;
+            self.meter.account(wire::frame_bytes(payload.len()));
+            wire::write_frame(
+                &mut self.streams[replica],
+                wire::TAG_CODED_BCAST,
+                &payload,
+            )
+            .with_context(|| {
+                format!("sending coded bucket {k} to replica {replica}")
+            })?;
+        }
+        Ok(())
+    }
 }
 
 /// Bind an OS-assigned loopback port and report the concrete address
@@ -318,16 +435,19 @@ pub fn ephemeral_listener() -> Result<(TcpListener, String)> {
 /// Hello handshake on a freshly accepted connection: the worker's
 /// opening frame is validated against the protocol table — a round (or
 /// anything else) before hello fails `listen` with a typed
-/// [`crate::coordinator::transport::ProtocolViolation`] — then the
-/// peer is assigned slot `id` and the link's monitor comes back parked
-/// in the round loop.
+/// [`crate::coordinator::transport::ProtocolViolation`] — and its
+/// negotiated codec must equal this fabric's, or the connection is
+/// refused before any payload flows. Then the peer is assigned slot
+/// `id` and the link's monitor comes back parked in the round loop.
 // lint: proto(Hello)
 fn handshake_accept(
     stream: &mut TcpStream,
     peer: std::net::SocketAddr,
     id: usize,
     n: usize,
+    wc: WireCodec,
 ) -> Result<ProtocolMonitor> {
+    let ours = codec::to_wire(wc);
     let mut monitor = ProtocolMonitor::handshaking("master");
     let hello = wire::read_frame(stream)
         .with_context(|| format!("handshake with {peer}"))?
@@ -337,13 +457,15 @@ fn handshake_accept(
     monitor
         .observe(Dir::ToMaster, hello.tag)
         .with_context(|| format!("handshake with {peer}"))?;
-    wire::decode_hello(&hello.payload)
+    let theirs = wire::decode_hello(&hello.payload)
+        .with_context(|| format!("handshake with {peer}"))?;
+    wire::check_codec_match(ours, theirs)
         .with_context(|| format!("handshake with {peer}"))?;
     monitor.observe(Dir::ToWorker, wire::TAG_HELLO_ACK)?;
     wire::write_frame(
         stream,
         wire::TAG_HELLO_ACK,
-        &wire::encode_hello_ack(id, n)?,
+        &wire::encode_hello_ack_coded(id, n, ours.0, ours.1)?,
     )
     .with_context(|| format!("acking {peer}"))?;
     monitor.set_replica(id);
@@ -391,8 +513,16 @@ fn reader_loop(
     snap_tx: Sender<WorkerState>,
     pool_rx: Receiver<Vec<f32>>,
     meter: Arc<CommMeter>,
+    wc: WireCodec,
+    master_buckets: Arc<AtomicUsize>,
 ) {
     let mut asm = wire::StateAssembler::default();
+    let mut dec = codec::ReportDecoder::new(wc);
+    // a coded (or bucketed) report payload arriving while the fabric
+    // runs monolithic rounds is parked here and injected into the
+    // closing stats report, so the fabric sees the plain Report it
+    // expects whatever the codec did to the wire
+    let mut held: Option<(u64, Vec<f32>)> = None;
     // lint: panic-free -- a reader panic would silence this replica's
     // Exited/Failed events and hang the master's barrier forever
     // lint: proto(InFlight|SnapshotQuiesce|Draining)
@@ -407,22 +537,39 @@ fn reader_loop(
             Ok(Some(frame)) => {
                 let res = match frame.tag {
                     wire::TAG_REPORT => {
-                        wire::decode_report(&frame.payload).and_then(|rep| {
-                            if rep.replica != id {
-                                bail!(
-                                    "report stamped replica {} on \
-                                     connection {id}",
-                                    rep.replica
-                                );
-                            }
-                            meter.account(
-                                wire::frame_bytes(frame.payload.len()),
-                            );
-                            event_tx
-                                .send(FabricEvent::Report(rep))
-                                .ok();
-                            Ok(())
-                        })
+                        wire::decode_report(&frame.payload).and_then(
+                            |mut rep| {
+                                if rep.replica != id {
+                                    bail!(
+                                        "report stamped replica {} on \
+                                         connection {id}",
+                                        rep.replica
+                                    );
+                                }
+                                if rep.params.is_empty() {
+                                    if let Some((round, params)) =
+                                        held.take()
+                                    {
+                                        if round != rep.round {
+                                            bail!(
+                                                "held payload stamped \
+                                                 round {round}, closing \
+                                                 report says {}",
+                                                rep.round
+                                            );
+                                        }
+                                        rep.params = params;
+                                    }
+                                }
+                                meter.account(wire::frame_bytes(
+                                    frame.payload.len(),
+                                ));
+                                event_tx
+                                    .send(FabricEvent::Report(rep))
+                                    .ok();
+                                Ok(())
+                            },
+                        )
                     }
                     wire::TAG_BUCKET_REPORT => {
                         // decode into a recycled bucket buffer; the
@@ -441,31 +588,46 @@ fn reader_loop(
                                      on connection {id}",
                                 );
                             }
-                            let offset = usize::try_from(m.offset)
-                                .map_err(|_| {
-                                    anyhow!(
-                                        "bucket offset {} overflows \
-                                         this host",
-                                        m.offset
-                                    )
-                                })?;
                             meter.account(
                                 wire::frame_bytes(frame.payload.len()),
                             );
-                            event_tx
-                                .send(FabricEvent::BucketReport(
-                                    BucketReport {
-                                        replica,
-                                        round: m.round,
-                                        bucket: m.bucket,
-                                        n_buckets: m.n_buckets,
-                                        offset,
-                                        data: BucketPayload::Owned(buf),
-                                    },
-                                ))
-                                .ok();
-                            Ok(())
+                            deliver_bucket(
+                                &event_tx,
+                                &mut held,
+                                master_buckets.load(Ordering::Relaxed)
+                                    > 0,
+                                replica,
+                                &m,
+                                buf,
+                            )
                         })
+                    }
+                    wire::TAG_CODED_REPORT => {
+                        let mut buf =
+                            pool_rx.try_recv().unwrap_or_default();
+                        wire::decode_coded_report(&frame.payload)
+                            .and_then(|(replica, m, block)| {
+                                if replica != id {
+                                    bail!(
+                                        "coded bucket stamped replica \
+                                         {replica} on connection {id}",
+                                    );
+                                }
+                                dec.decode(&block, &mut buf)?;
+                                meter.account(wire::frame_bytes(
+                                    frame.payload.len(),
+                                ));
+                                deliver_bucket(
+                                    &event_tx,
+                                    &mut held,
+                                    master_buckets
+                                        .load(Ordering::Relaxed)
+                                        > 0,
+                                    replica,
+                                    &m,
+                                    buf,
+                                )
+                            })
                     }
                     wire::TAG_STATE_CHUNK => asm.push(&frame.payload),
                     wire::TAG_SNAPSHOT => {
@@ -494,6 +656,53 @@ fn reader_loop(
             }
         }
     }
+}
+
+/// Route one decoded report bucket: onto the event stream when the
+/// fabric reduces bucketed, or parked as the held monolithic payload
+/// when it doesn't. The monolithic case only ever sees a single
+/// full-extent bucket (the worker mirrors the master's single-frame
+/// dispatch), so anything else is a corrupt or hostile peer.
+fn deliver_bucket(
+    event_tx: &Sender<FabricEvent>,
+    held: &mut Option<(u64, Vec<f32>)>,
+    bucketed: bool,
+    replica: usize,
+    m: &wire::BucketMeta,
+    buf: Vec<f32>,
+) -> Result<()> {
+    let offset = usize::try_from(m.offset).map_err(|_| {
+        anyhow!("bucket offset {} overflows this host", m.offset)
+    })?;
+    if bucketed {
+        event_tx
+            .send(FabricEvent::BucketReport(BucketReport {
+                replica,
+                round: m.round,
+                bucket: m.bucket,
+                n_buckets: m.n_buckets,
+                offset,
+                data: BucketPayload::Owned(buf),
+            }))
+            .ok();
+        return Ok(());
+    }
+    if m.n_buckets != 1
+        || offset != 0
+        || buf.len() as u64 != m.total_len
+    {
+        bail!(
+            "bucket {}/{} (offset {offset}) while the fabric runs \
+             monolithic rounds",
+            m.bucket,
+            m.n_buckets
+        );
+    }
+    if held.is_some() {
+        bail!("two report payloads for one monolithic round");
+    }
+    *held = Some((m.round, buf));
+    Ok(())
 }
 
 impl Transport for TcpTransport {
@@ -569,6 +778,9 @@ impl Transport for TcpTransport {
 
     fn set_bucket_elems(&mut self, elems: usize) {
         self.bucket_elems = elems;
+        // mirror for the readers: they pick delivery (bucket events vs
+        // hold-and-inject) per report frame, long after this is set
+        self.bucket_shared.store(elems, Ordering::Relaxed);
     }
 
     /// Feed a consumed bucket buffer back to its connection's reader
@@ -641,6 +853,15 @@ pub struct TcpWorkerLink {
     /// Reassembles chunked restore state across
     /// [`wire::TAG_STATE_CHUNK`] frames.
     state_asm: wire::StateAssembler,
+    /// Negotiated payload codec; must equal the master's (the
+    /// handshake refuses the connection otherwise).
+    codec: WireCodec,
+    /// Dispatch-leg decoder: mirrors the master encoder's delta base.
+    bcast_dec: codec::BcastDecoder,
+    /// Report-leg encoder; owns the error-feedback residual, which is
+    /// replica state — it rides snapshots under
+    /// [`codec::EF_RESIDUAL_VEC`] and is reinstalled at restore.
+    report_enc: codec::ReportEncoder,
 }
 
 impl TcpWorkerLink {
@@ -650,6 +871,21 @@ impl TcpWorkerLink {
     /// skip, e.g. for tooling).
     pub fn connect(addr: &str, expect_workers: usize, timeout: Duration)
                    -> Result<TcpWorkerLink> {
+        Self::connect_with_codec(addr, expect_workers, timeout,
+                                 WireCodec::Raw)
+    }
+
+    /// [`TcpWorkerLink::connect`] negotiating a payload codec: the
+    /// hello carries this end's codec, the ack echoes the master's,
+    /// and either side refuses a mismatch before any payload flows —
+    /// launch both ends with the same `--wire-codec`.
+    pub fn connect_with_codec(
+        addr: &str,
+        expect_workers: usize,
+        timeout: Duration,
+        wc: WireCodec,
+    ) -> Result<TcpWorkerLink> {
+        let ours = codec::to_wire(wc);
         let deadline = Instant::now() + timeout;
         let mut stream = loop {
             match TcpStream::connect(addr) {
@@ -670,7 +906,7 @@ impl TcpWorkerLink {
             let mut monitor = ProtocolMonitor::handshaking("worker");
             monitor.observe(Dir::ToMaster, wire::TAG_HELLO)?;
             wire::write_frame(&mut stream, wire::TAG_HELLO,
-                              &wire::encode_hello())
+                              &wire::encode_hello_coded(ours.0, ours.1))
                 .context("sending hello")?;
             let ack = wire::read_frame(&mut stream)
                 .context("handshake")?
@@ -681,7 +917,10 @@ impl TcpWorkerLink {
             // out-of-state frame: fail with the typed violation
             monitor.observe(Dir::ToWorker, ack.tag)
                 .context("handshake")?;
-            let (replica, workers) = wire::decode_hello_ack(&ack.payload)?;
+            let (replica, workers, ack_codec, ack_param) =
+                wire::decode_hello_ack(&ack.payload)?;
+            wire::check_codec_match(ours, (ack_codec, ack_param))
+                .context("handshake")?;
             if expect_workers != 0 && workers != expect_workers {
                 bail!(
                     "master runs a {workers}-worker fabric, this process \
@@ -702,6 +941,9 @@ impl TcpWorkerLink {
                 pending_n: 0,
                 bucket_buf: Vec::new(),
                 state_asm: wire::StateAssembler::default(),
+                codec: wc,
+                bcast_dec: codec::BcastDecoder::new(wc),
+                report_enc: codec::ReportEncoder::new(wc),
             })
         }
     }
@@ -744,19 +986,29 @@ impl TcpWorkerLink {
                     let p = xref_buf.len();
                     let mut slab = self.slab.take().unwrap_or_default();
                     slab.resize(p, 0.0);
-                    // a monolithic round means a monolithic report
+                    // a monolithic round means a monolithic report;
+                    // build the RoundMsg before returning so the slab
+                    // is handed off ahead of the early return
                     self.bucket_elems = 0;
-                    return Ok(Some(WorkerCmd::Round(RoundMsg {
+                    let msg = WorkerCmd::Round(RoundMsg {
                         round,
                         xref: Arc::clone(&self.xref),
                         slab,
                         bucket_elems: 0,
                         consts,
-                    })));
+                    });
+                    return Ok(Some(msg));
                 }
                 wire::TAG_BUCKET_BCAST => {
                     if let Some(msg) =
                         self.apply_bcast_bucket(&frame.payload)?
+                    {
+                        return Ok(Some(WorkerCmd::Round(msg)));
+                    }
+                }
+                wire::TAG_CODED_BCAST => {
+                    if let Some(msg) =
+                        self.apply_coded_bucket(&frame.payload)?
                     {
                         return Ok(Some(WorkerCmd::Round(msg)));
                     }
@@ -768,9 +1020,22 @@ impl TcpWorkerLink {
                     return Ok(Some(WorkerCmd::Snapshot));
                 }
                 wire::TAG_RESTORE => {
-                    return Ok(Some(WorkerCmd::Restore(Box::new(
-                        self.state_asm.finish(&frame.payload)?,
-                    ))));
+                    let mut st = self.state_asm.finish(&frame.payload)?;
+                    // the EF residual is link state, not worker-body
+                    // state: strip it here and reinstall it in the
+                    // report encoder; a restore also re-anchors the
+                    // dispatch leg (the master's encoder reset its base
+                    // before sending this)
+                    if let Some(pos) = st
+                        .vecs
+                        .iter()
+                        .position(|(k, _)| k == codec::EF_RESIDUAL_VEC)
+                    {
+                        let (_, r) = st.vecs.remove(pos);
+                        self.report_enc.set_residual(r);
+                    }
+                    self.bcast_dec.reset_base();
+                    return Ok(Some(WorkerCmd::Restore(Box::new(st))));
                 }
                 wire::TAG_STOP => return Ok(None),
                 other => bail!("unexpected frame tag {other} from master"),
@@ -851,19 +1116,91 @@ impl TcpWorkerLink {
         }))
     }
 
+    /// Fold one coded dispatch bucket into the reference buffer via the
+    /// negotiated decoder — the coded twin of
+    /// [`TcpWorkerLink::apply_bcast_bucket`], with the same run
+    /// discipline (bucket 0 arms, later frames continue in index
+    /// order). The learned geometry is mirrored back on the report
+    /// leg, so a single-frame coded round reports as a single coded
+    /// bucket too.
+    fn apply_coded_bucket(&mut self, payload: &[u8])
+                          -> Result<Option<RoundMsg>> {
+        let (consts, meta, block) = wire::decode_coded_bcast(payload)?;
+        let total = usize::try_from(meta.total_len)
+            .context("bucket total_len overflows this host")?;
+        let offset = usize::try_from(meta.offset)
+            .context("bucket offset overflows this host")?;
+        let len = block.n_elems;
+        if meta.bucket == 0 {
+            self.pending_round = meta.round;
+            self.pending_n = meta.n_buckets;
+            self.next_bucket = 0;
+            self.bucket_elems = len.max(1);
+            Arc::make_mut(&mut self.xref).resize(total, 0.0);
+        } else if meta.round != self.pending_round
+            || meta.n_buckets != self.pending_n
+            || meta.bucket != self.next_bucket
+        {
+            bail!(
+                "coded bucket {}/{} of round {} arrived mid-run \
+                 (expected bucket {} of round {})",
+                meta.bucket,
+                meta.n_buckets,
+                meta.round,
+                self.next_bucket,
+                self.pending_round
+            );
+        }
+        let xref_buf = Arc::make_mut(&mut self.xref);
+        if xref_buf.len() != total {
+            bail!(
+                "coded run declares {total} parameters, reference \
+                 holds {}",
+                xref_buf.len()
+            );
+        }
+        let Some(dst) = xref_buf.get_mut(offset..offset + len) else {
+            bail!(
+                "coded bucket {} ({len} elements at offset {offset}) \
+                 overruns the {total}-parameter reference",
+                meta.bucket
+            );
+        };
+        self.bcast_dec.decode(&block, offset, total, dst)?;
+        self.next_bucket = meta.bucket + 1;
+        if meta.bucket + 1 < meta.n_buckets {
+            return Ok(None);
+        }
+        let mut slab = self.slab.take().unwrap_or_default();
+        slab.resize(total, 0.0);
+        Ok(Some(RoundMsg {
+            round: meta.round,
+            xref: Arc::clone(&self.xref),
+            slab,
+            bucket_elems: self.bucket_elems,
+            consts,
+        }))
+    }
+
     /// Ship a round report; returns the wire bytes written (for the
     /// worker-local meter) and recycles the payload as the next round's
     /// slab. Bucketed rounds mirror the dispatch geometry back: the
     /// parameters stream as `TAG_BUCKET_REPORT` frames the master can
     /// start reducing immediately, closed by an empty `TAG_REPORT`
-    /// carrying the scalar round stats.
+    /// carrying the scalar round stats. Codecs that transform the
+    /// report leg stream coded buckets instead.
     // lint: proto(InFlight|Draining)
     pub(crate) fn report(&mut self, rep: RoundReport) -> Result<usize> {
-        if self.bucket_elems > 0 && !rep.params.is_empty() {
+        if !rep.params.is_empty() {
             let n =
                 vecmath::bucket_count(rep.params.len(), self.bucket_elems);
             if u32::try_from(n).is_ok() {
-                return self.report_bucketed(rep, n);
+                if codec::report_is_coded(self.codec) {
+                    return self.report_coded(rep, n);
+                }
+                if self.bucket_elems > 0 {
+                    return self.report_bucketed(rep, n);
+                }
             }
         }
         // refuse to emit an out-of-state report: the typed violation
@@ -920,6 +1257,60 @@ impl TcpWorkerLink {
         Ok(bytes)
     }
 
+    /// Stream one report through the negotiated codec: `n` coded
+    /// buckets (the error-feedback residual updates in place, bucket by
+    /// bucket) plus the closing stats frame. Returns the post-encode
+    /// wire bytes — what actually crossed the network, not the logical
+    /// `P * 4` payload size.
+    // lint: proto(InFlight|Draining)
+    fn report_coded(&mut self, mut rep: RoundReport, n: usize)
+                    -> Result<usize> {
+        let params = std::mem::take(&mut rep.params);
+        let p = params.len();
+        self.report_enc.ensure_p(p);
+        let block_id = codec::report_block_id(self.codec);
+        let mut bytes = 0usize;
+        for k in 0..n {
+            self.monitor
+                .observe(Dir::ToMaster, wire::TAG_CODED_REPORT)?;
+            let (lo, hi) =
+                vecmath::bucket_range(p, self.bucket_elems, k);
+            let meta = wire::BucketMeta {
+                round: rep.round,
+                bucket: k as u32,
+                n_buckets: n as u32,
+                offset: lo as u64,
+                total_len: p as u64,
+            };
+            let (mode, coded) =
+                self.report_enc.encode(&params[lo..hi], lo);
+            let payload = wire::encode_coded_report(
+                self.replica,
+                &meta,
+                block_id,
+                mode,
+                hi - lo,
+                coded,
+            )?;
+            wire::write_frame(
+                &mut self.stream,
+                wire::TAG_CODED_REPORT,
+                &payload,
+            )
+            .context("sending coded report bucket to master")?;
+            bytes += wire::frame_bytes(payload.len());
+        }
+        // the closing frame carries the scalar stats; its empty params
+        // tell the master "the payload already streamed"
+        self.monitor.observe(Dir::ToMaster, wire::TAG_REPORT)?;
+        let payload = wire::encode_report(&rep)?;
+        wire::write_frame(&mut self.stream, wire::TAG_REPORT, &payload)
+            .context("sending report to master")?;
+        bytes += wire::frame_bytes(payload.len());
+        self.slab = Some(params);
+        Ok(bytes)
+    }
+
     /// Bytes per state chunk: align with the round's bucket size when
     /// bucketed, else the single-frame cap.
     fn state_chunk_bytes(&self) -> usize {
@@ -931,13 +1322,25 @@ impl TcpWorkerLink {
     }
 
     // lint: proto(SnapshotQuiesce)
-    pub(crate) fn send_snapshot(&mut self, st: &WorkerState) -> Result<()> {
+    pub(crate) fn send_snapshot(&mut self, mut st: WorkerState)
+                                -> Result<()> {
+        // the report leg's error-feedback residual is replica state:
+        // fold it into the snapshot so a resumed run re-ships exactly
+        // the deferred mass an uninterrupted one would have
+        if codec::report_is_coded(self.codec)
+            && !self.report_enc.residual().is_empty()
+        {
+            st.vecs.push((
+                codec::EF_RESIDUAL_VEC.to_string(),
+                self.report_enc.residual().to_vec(),
+            ));
+        }
         let chunk = self.state_chunk_bytes();
         let monitor = &mut self.monitor;
         wire::write_state_chunked(
             &mut self.stream,
             wire::TAG_SNAPSHOT,
-            st,
+            &st,
             chunk,
             |tag| {
                 monitor

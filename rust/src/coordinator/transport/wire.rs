@@ -40,8 +40,10 @@ use crate::coordinator::comm::{RoundConsts, RoundReport, WorkerState};
 /// Handshake magic ("PRLW") + protocol version, sent in every `Hello`.
 /// v2 added the bucketed round frames (`TAG_BUCKET_REPORT` /
 /// `TAG_BUCKET_BCAST`) and chunked state frames (`TAG_STATE_CHUNK`).
+/// v3 added codec negotiation to the hello/ack payloads and the coded
+/// payload frames (`TAG_CODED_BCAST` / `TAG_CODED_REPORT`).
 pub const WIRE_MAGIC: u32 = 0x5052_4c57;
-pub const WIRE_VERSION: u32 = 2;
+pub const WIRE_VERSION: u32 = 3;
 
 /// Hard cap on one frame's declared length: the checkpoint param cap
 /// (2^28 f32 = 1 GiB) plus 64 KiB of message framing, so every frame
@@ -99,6 +101,32 @@ pub const TAG_BUCKET_BCAST: u8 = 10;
 /// master) with the same chunk header, so a single-frame state is just
 /// the `n_chunks == 1` case.
 pub const TAG_STATE_CHUNK: u8 = 11;
+/// Master -> worker (v3): one codec-transformed dispatch bucket — the
+/// `--wire-codec` form of `TAG_BUCKET_BCAST` (a monolithic coded
+/// dispatch is the `n_buckets == 1` case). Only sent when the
+/// negotiated codec transforms the broadcast leg; `raw` keeps today's
+/// frames byte-for-byte.
+pub const TAG_CODED_BCAST: u8 = 12;
+/// Worker -> master (v3): one codec-transformed report bucket — the
+/// `--wire-codec` form of `TAG_BUCKET_REPORT`. Like its raw sibling it
+/// never closes the round: the stats-only `TAG_REPORT` does.
+pub const TAG_CODED_REPORT: u8 = 13;
+
+// On-wire codec ids carried by the v3 hello/ack negotiation and every
+// coded frame header. The id plus one f32-bits parameter (the top-k
+// fraction; zero otherwise) fully names a codec on the wire.
+pub const CODEC_RAW: u8 = 0;
+pub const CODEC_BF16: u8 = 1;
+pub const CODEC_F16: u8 = 2;
+pub const CODEC_TOPK: u8 = 3;
+pub const CODEC_DELTA: u8 = 4;
+pub const CODEC_DELTA_BF16: u8 = 5;
+
+/// Coded-frame mode byte: every element coded, in order.
+pub const CODED_DENSE: u8 = 0;
+/// Coded-frame mode byte: index/value (top-k) or index/delta (delta
+/// codecs) pairs over a shared base.
+pub const CODED_SPARSE: u8 = 1;
 
 /// One decoded frame: tag + raw payload bytes.
 pub struct Frame {
@@ -166,14 +194,28 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
 // payload encodings
 // ---------------------------------------------------------------------------
 
+/// Raw-codec hello — the spelling the determinism suites and the
+/// echo-worker test helpers use. [`encode_hello_coded`] is the general
+/// form.
 pub fn encode_hello() -> Vec<u8> {
-    let mut out = Vec::with_capacity(8);
+    encode_hello_coded(CODEC_RAW, 0)
+}
+
+/// v3 hello: magic, version, then the codec this worker was launched
+/// with (`--wire-codec`), as an id plus one f32-bits parameter. The
+/// master refuses a mismatch at connect, so both ends always agree on
+/// every later frame's payload encoding.
+pub fn encode_hello_coded(codec: u8, codec_param: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13);
     out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
     out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.push(codec);
+    out.extend_from_slice(&codec_param.to_le_bytes());
     out
 }
 
-pub fn decode_hello(payload: &[u8]) -> Result<()> {
+/// -> the peer's negotiated `(codec id, codec param)`.
+pub fn decode_hello(payload: &[u8]) -> Result<(u8, u32)> {
     let mut c = Cursor::new(payload);
     let magic = read_u32(&mut c).context("hello magic")?;
     if magic != WIRE_MAGIC {
@@ -186,28 +228,65 @@ pub fn decode_hello(payload: &[u8]) -> Result<()> {
              speaks v{WIRE_VERSION}"
         );
     }
-    Ok(())
+    let mut codec = [0u8; 1];
+    c.read_exact(&mut codec).context("hello codec id")?;
+    let param = read_u32(&mut c).context("hello codec param")?;
+    Ok((codec[0], param))
 }
 
+/// Raw-codec hello-ack ([`encode_hello_ack_coded`] is the general form).
 pub fn encode_hello_ack(replica: usize, workers: usize) -> Result<Vec<u8>> {
+    encode_hello_ack_coded(replica, workers, CODEC_RAW, 0)
+}
+
+/// v3 hello-ack: the assigned slot, the expected worker count, and the
+/// master's own codec — echoed back so a mismatch is refused on *both*
+/// ends, whichever noticed first.
+pub fn encode_hello_ack_coded(replica: usize, workers: usize, codec: u8,
+                              codec_param: u32) -> Result<Vec<u8>> {
     // try_from, not `as`: a slot id must never truncate on the wire
     let replica = u32::try_from(replica).context("hello-ack replica")?;
     let workers = u32::try_from(workers).context("hello-ack workers")?;
-    let mut out = Vec::with_capacity(8);
+    let mut out = Vec::with_capacity(13);
     out.extend_from_slice(&replica.to_le_bytes());
     out.extend_from_slice(&workers.to_le_bytes());
+    out.push(codec);
+    out.extend_from_slice(&codec_param.to_le_bytes());
     Ok(out)
 }
 
-/// -> (replica slot, total workers the master expects).
-pub fn decode_hello_ack(payload: &[u8]) -> Result<(usize, usize)> {
+/// -> (replica slot, total workers, master's codec id + param).
+pub fn decode_hello_ack(payload: &[u8])
+                        -> Result<(usize, usize, u8, u32)> {
     let mut c = Cursor::new(payload);
     let replica = read_u32(&mut c).context("hello-ack replica")? as usize;
     let workers = read_u32(&mut c).context("hello-ack workers")? as usize;
     if replica >= workers {
         bail!("corrupt hello-ack: replica {replica} of {workers}");
     }
-    Ok((replica, workers))
+    let mut codec = [0u8; 1];
+    c.read_exact(&mut codec).context("hello-ack codec id")?;
+    let param = read_u32(&mut c).context("hello-ack codec param")?;
+    Ok((replica, workers, codec[0], param))
+}
+
+/// Typed refusal when the two ends of a connection negotiated
+/// different codecs. Both handshake sides call this, so a mismatched
+/// worker is turned away at connect — before any payload frame could
+/// be misdecoded.
+pub fn check_codec_match(ours: (u8, u32), peer: (u8, u32)) -> Result<()> {
+    if ours != peer {
+        bail!(
+            "wire codec mismatch: peer negotiates codec id {} (param \
+             {:#010x}), this endpoint runs codec id {} (param {:#010x}); \
+             launch both ends with the same --wire-codec",
+            peer.0,
+            peer.1,
+            ours.0,
+            ours.1
+        );
+    }
+    Ok(())
 }
 
 /// The dispatch leg of one round: stamp, broadcast constants, and the
@@ -461,6 +540,133 @@ fn check_bucket_extent(meta: &BucketMeta, len: usize) -> Result<()> {
         bail!("corrupt bucket frame: empty non-final bucket");
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// coded payload frames (v3)
+// ---------------------------------------------------------------------------
+
+/// The codec-specific body of a coded frame: which transform produced
+/// it, dense or sparse layout, how many f32 elements it decodes to,
+/// and the transformed bytes themselves (borrowed from the frame — the
+/// transform layer decodes them into pooled buffers). The *semantic*
+/// decode (bf16 widening, top-k scatter, delta application) lives in
+/// [`super::codec`]; this header only carries enough for the frame
+/// layer to validate lengths before any byte is trusted.
+#[derive(Debug, PartialEq, Eq)]
+pub struct CodedBlock<'a> {
+    pub codec: u8,
+    pub mode: u8,
+    /// f32 element count this block decodes to (the bucket length).
+    pub n_elems: usize,
+    pub bytes: &'a [u8],
+}
+
+fn write_coded_block(out: &mut Vec<u8>, codec: u8, mode: u8,
+                     n_elems: usize, coded: &[u8]) {
+    out.push(codec);
+    out.push(mode);
+    out.extend_from_slice(&(n_elems as u64).to_le_bytes());
+    out.extend_from_slice(&(coded.len() as u64).to_le_bytes());
+    out.extend_from_slice(coded);
+}
+
+/// Validate a coded block's header against the placement header and
+/// the physical payload, returning a borrow of the coded bytes. Every
+/// length is checked — `n_elems` against `MAX_PARAMS` and the bucket
+/// extent, the byte count against what the frame actually carried —
+/// before anything is sized from it, so a garbled codec header is a
+/// typed decode error, never a panic or an absurd allocation.
+fn read_coded_block<'a>(payload: &'a [u8], c: &mut Cursor<&'a [u8]>,
+                        meta: &BucketMeta) -> Result<CodedBlock<'a>> {
+    let mut hdr = [0u8; 2];
+    c.read_exact(&mut hdr).context("coded header")?;
+    let (codec, mode) = (hdr[0], hdr[1]);
+    if codec == CODEC_RAW || codec > CODEC_DELTA_BF16 {
+        bail!("corrupt coded frame: unknown codec id {codec}");
+    }
+    if mode > CODED_SPARSE {
+        bail!("corrupt coded frame: unknown mode {mode}");
+    }
+    let n_elems = read_u64(c).context("coded element count")?;
+    if n_elems > MAX_PARAMS {
+        bail!(
+            "corrupt coded frame: {n_elems} elements exceeds the \
+             {MAX_PARAMS} parameter cap"
+        );
+    }
+    let n_elems = usize::try_from(n_elems).context("coded elements")?;
+    check_bucket_extent(meta, n_elems)?;
+    let coded_len = read_u64(c).context("coded byte count")?;
+    let start = usize::try_from(c.position()).context("coded offset")?;
+    let rest = payload.len() - start.min(payload.len());
+    if coded_len != rest as u64 {
+        bail!(
+            "corrupt coded frame: header declares {coded_len} coded \
+             bytes, frame carries {rest}"
+        );
+    }
+    Ok(CodedBlock {
+        codec,
+        mode,
+        n_elems,
+        bytes: &payload[start..],
+    })
+}
+
+/// One master->worker coded dispatch bucket: round constants and
+/// placement header exactly as [`encode_bucket_bcast`], then a coded
+/// block instead of raw f32s.
+pub fn encode_coded_bcast(consts: &RoundConsts, meta: &BucketMeta,
+                          codec: u8, mode: u8, n_elems: usize,
+                          coded: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(16 + 32 + 18 + coded.len());
+    out.extend_from_slice(&consts.lr.to_le_bytes());
+    out.extend_from_slice(&consts.gamma_inv.to_le_bytes());
+    out.extend_from_slice(&consts.rho_inv.to_le_bytes());
+    out.extend_from_slice(&consts.eta_over_rho.to_le_bytes());
+    write_bucket_meta(&mut out, meta);
+    write_coded_block(&mut out, codec, mode, n_elems, coded);
+    Ok(out)
+}
+
+/// Decode a coded dispatch bucket's headers, borrowing the coded bytes
+/// (zero copies here; the codec layer decodes into pooled buffers).
+pub fn decode_coded_bcast<'a>(payload: &'a [u8])
+    -> Result<(RoundConsts, BucketMeta, CodedBlock<'a>)> {
+    let mut c = Cursor::new(payload);
+    let consts = RoundConsts {
+        lr: read_f32(&mut c).context("coded lr")?,
+        gamma_inv: read_f32(&mut c).context("coded gamma_inv")?,
+        rho_inv: read_f32(&mut c).context("coded rho_inv")?,
+        eta_over_rho: read_f32(&mut c).context("coded eta_over_rho")?,
+    };
+    let meta = read_bucket_meta(&mut c)?;
+    let block = read_coded_block(payload, &mut c, &meta)?;
+    Ok((consts, meta, block))
+}
+
+/// One worker->master coded report bucket: replica stamp and placement
+/// header exactly as [`encode_bucket_report`], then a coded block.
+pub fn encode_coded_report(replica: usize, meta: &BucketMeta, codec: u8,
+                           mode: u8, n_elems: usize, coded: &[u8])
+                           -> Result<Vec<u8>> {
+    let replica = u32::try_from(replica).context("coded replica")?;
+    let mut out = Vec::with_capacity(4 + 32 + 18 + coded.len());
+    out.extend_from_slice(&replica.to_le_bytes());
+    write_bucket_meta(&mut out, meta);
+    write_coded_block(&mut out, codec, mode, n_elems, coded);
+    Ok(out)
+}
+
+/// Decode a coded report bucket's headers, borrowing the coded bytes.
+pub fn decode_coded_report<'a>(payload: &'a [u8])
+    -> Result<(usize, BucketMeta, CodedBlock<'a>)> {
+    let mut c = Cursor::new(payload);
+    let replica = read_u32(&mut c).context("coded replica")? as usize;
+    let meta = read_bucket_meta(&mut c)?;
+    let block = read_coded_block(payload, &mut c, &meta)?;
+    Ok((replica, meta, block))
 }
 
 // ---------------------------------------------------------------------------
@@ -743,7 +949,8 @@ mod tests {
 
     #[test]
     fn hello_handshake_round_trips_and_validates() {
-        decode_hello(&encode_hello()).unwrap();
+        assert_eq!(decode_hello(&encode_hello()).unwrap(),
+                   (CODEC_RAW, 0));
         let mut bad = encode_hello();
         bad[0] ^= 0xff;
         assert!(decode_hello(&bad).is_err());
@@ -752,12 +959,43 @@ mod tests {
         let err = decode_hello(&stale).unwrap_err().to_string();
         assert!(err.contains("protocol mismatch"), "{err}");
 
-        let (r, n) =
+        let (r, n, codec, param) =
             decode_hello_ack(&encode_hello_ack(2, 5).unwrap()).unwrap();
-        assert_eq!((r, n), (2, 5));
+        assert_eq!((r, n, codec, param), (2, 5, CODEC_RAW, 0));
         assert!(
             decode_hello_ack(&encode_hello_ack(5, 5).unwrap()).is_err()
         );
+    }
+
+    /// The v3 handshake carries the codec both ways, and either end
+    /// refuses a mismatch with a typed, actionable error.
+    #[test]
+    fn hello_negotiates_the_wire_codec() {
+        let topk = 0.01f32.to_bits();
+        let hello = encode_hello_coded(CODEC_TOPK, topk);
+        assert_eq!(decode_hello(&hello).unwrap(), (CODEC_TOPK, topk));
+        let ack = encode_hello_ack_coded(1, 4, CODEC_BF16, 0).unwrap();
+        let (r, n, codec, param) = decode_hello_ack(&ack).unwrap();
+        assert_eq!((r, n, codec, param), (1, 4, CODEC_BF16, 0));
+
+        check_codec_match((CODEC_TOPK, topk), (CODEC_TOPK, topk)).unwrap();
+        let err = check_codec_match((CODEC_BF16, 0), (CODEC_TOPK, topk))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("wire codec mismatch"), "{err}");
+        assert!(err.contains("--wire-codec"), "{err}");
+        // same codec, different parameter is still a mismatch
+        assert!(check_codec_match(
+            (CODEC_TOPK, 0.01f32.to_bits()),
+            (CODEC_TOPK, 0.05f32.to_bits())
+        )
+        .is_err());
+        // a v2 (8-byte) hello fails on the missing codec bytes, typed
+        let mut v2 = encode_hello();
+        v2.truncate(8);
+        v2[4] = 3; // right version, short payload
+        let err = decode_hello(&v2).unwrap_err();
+        assert!(format!("{err:#}").contains("codec"), "{err:#}");
     }
 
     /// Round frames preserve every f32 bit of the reference, including
@@ -896,6 +1134,94 @@ mod tests {
         }
     }
 
+    /// Coded frames round-trip their headers and borrow the coded
+    /// bytes without copying.
+    #[test]
+    fn coded_frames_round_trip() {
+        let m = meta(1, 3, 4, 12);
+        let coded = [0xde, 0xad, 0xbe, 0xef, 0x01, 0x02];
+        let enc = encode_coded_bcast(&consts(), &m, CODEC_BF16,
+                                     CODED_DENSE, 3, &coded)
+            .unwrap();
+        let (c, back, block) = decode_coded_bcast(&enc).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(c.lr.to_bits(), consts().lr.to_bits());
+        assert_eq!(
+            (block.codec, block.mode, block.n_elems),
+            (CODEC_BF16, CODED_DENSE, 3)
+        );
+        assert_eq!(block.bytes, &coded[..]);
+
+        let enc = encode_coded_report(2, &m, CODEC_TOPK, CODED_SPARSE,
+                                      3, &coded[..0])
+            .unwrap();
+        let (replica, back, block) = decode_coded_report(&enc).unwrap();
+        assert_eq!(replica, 2);
+        assert_eq!(back, m);
+        assert_eq!(
+            (block.codec, block.mode, block.n_elems, block.bytes.len()),
+            (CODEC_TOPK, CODED_SPARSE, 3, 0)
+        );
+    }
+
+    /// Garbled codec headers are typed decode errors caught before any
+    /// byte of the block is trusted: unknown codec id (including a
+    /// smuggled `raw`), unknown mode, element counts past the bucket
+    /// extent or parameter cap, and byte counts that disagree with the
+    /// physical frame.
+    #[test]
+    fn coded_frames_reject_garbled_codec_headers() {
+        let m = meta(1, 3, 4, 12);
+        let good = encode_coded_report(0, &m, CODEC_F16, CODED_DENSE, 3,
+                                       &[0u8; 6])
+            .unwrap();
+        decode_coded_report(&good).unwrap();
+        // the codec id and mode bytes sit right after replica + meta
+        let base = 4 + 32;
+        for (patch, val, what) in [
+            (base, CODEC_RAW, "raw smuggled as coded"),
+            (base, 99, "unknown codec id"),
+            (base + 1, 7, "unknown mode"),
+        ] {
+            let mut bad = good.clone();
+            bad[patch] = val;
+            let err = decode_coded_report(&bad).unwrap_err().to_string();
+            assert!(err.contains("corrupt coded frame"), "{what}: {err}");
+        }
+        // n_elems overrunning the bucket extent reuses the bucket check
+        let mut bad = good.clone();
+        bad[base + 2..base + 10].copy_from_slice(&100u64.to_le_bytes());
+        let err = format!("{:#}", decode_coded_report(&bad).unwrap_err());
+        assert!(err.contains("overrun"), "{err}");
+        // n_elems past MAX_PARAMS is refused by the cap itself
+        let mut bad = good.clone();
+        bad[base + 2..base + 10]
+            .copy_from_slice(&(MAX_PARAMS + 1).to_le_bytes());
+        let err = format!("{:#}", decode_coded_report(&bad).unwrap_err());
+        assert!(err.contains("parameter cap"), "{err}");
+        // declared byte count must match the frame exactly, both ways
+        for delta in [-1i64, 1] {
+            let mut bad = good.clone();
+            let declared = (6i64 + delta) as u64;
+            bad[base + 10..base + 18]
+                .copy_from_slice(&declared.to_le_bytes());
+            let err = decode_coded_report(&bad).unwrap_err().to_string();
+            assert!(err.contains("coded bytes"), "{err}");
+        }
+        // truncated mid-header: typed error, no panic
+        for cut in [0usize, 5, 37, 40] {
+            assert!(decode_coded_report(&good[..cut]).is_err(), "{cut}");
+        }
+        // the bcast twin rejects the same abuse
+        let enc = encode_coded_bcast(&consts(), &m, CODEC_DELTA,
+                                     CODED_SPARSE, 3, &[0u8; 8])
+            .unwrap();
+        decode_coded_bcast(&enc).unwrap();
+        let mut bad = enc.clone();
+        bad[16 + 32] = 99;
+        assert!(decode_coded_bcast(&bad).is_err());
+    }
+
     fn chunked_state_roundtrip(st: &WorkerState, chunk_bytes: usize)
                                -> WorkerState {
         let mut pipe = Vec::new();
@@ -994,6 +1320,8 @@ mod tests {
         let mut scratch = Vec::new();
         assert!(decode_bucket_report_into(&junk, &mut scratch).is_err());
         assert!(decode_bucket_bcast_into(&junk, &mut scratch).is_err());
+        assert!(decode_coded_report(&junk).is_err());
+        assert!(decode_coded_bcast(&junk).is_err());
         assert!(decode_state_chunk(&junk).is_err());
         // a declared vector length far past the payload end must be
         // caught by the shared checkpoint cap/limit checks

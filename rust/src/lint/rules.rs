@@ -6,7 +6,7 @@
 //! | `D2` | whole tree | no truncating `as` casts on seed/replica identifiers — use `fold_seed_i32` / `try_into` |
 //! | `A1` | `// lint: hot-path` regions | no steady-state allocation (`Vec::new`, `vec!`, `with_capacity`, `to_vec`, `.clone()`, `collect`) |
 //! | `P1` | `// lint: panic-free` regions | no `.unwrap()`, `.expect()`, `panic!`-family macros, or slice indexing |
-//! | `W1` | `wire.rs` / `checkpoint.rs` | every decoded length is cap-checked before it sizes an allocation |
+//! | `W1` | `wire.rs` / `codec.rs` / `checkpoint.rs` | every decoded length is cap-checked before it sizes an allocation |
 //! | `S1` | `// lint: proto(STATE\|...)` regions | every wire tag mentioned is legal in the region's states per the `transport/protocol.rs` table, and every `match` on a frame tag handles exactly one direction's legal tag set |
 //! | `R1` | `// lint: pooled` regions | a slab taken from a pool is recycled on every exit path — no `?`/`return` between take and release |
 //! | `D3` | `// lint: deterministic` regions | no wall-clock or thread-identity reads (`Instant::now`, `SystemTime`, `thread::current()`) |
@@ -38,8 +38,13 @@ const REDUCE_PATH_MODULES: &[&str] = &[
     "transport/wire.rs",
 ];
 
-/// Files rule W1 applies to (the two halves of the shared codec).
-const WIRE_BOUND_FILES: &[&str] = &["transport/wire.rs", "coordinator/checkpoint.rs"];
+/// Files rule W1 applies to: the frame codec, the payload-transform
+/// codec layered on top of it, and the checkpoint reader.
+const WIRE_BOUND_FILES: &[&str] = &[
+    "transport/wire.rs",
+    "transport/codec.rs",
+    "coordinator/checkpoint.rs",
+];
 
 /// Identifiers that prove a decoded length was cap-checked before the
 /// allocation it sizes: the named caps, plus the shared readers that

@@ -94,6 +94,9 @@ fn run() -> Result<()> {
                      whole-vector rounds)",
                 )?;
             }
+            if let Some(c) = flag("wire-codec") {
+                cfg.wire_codec = parle::config::WireCodec::parse(c)?;
+            }
             if let Some(addr) = flag("listen") {
                 cfg.listen = Some(addr.to_string());
             }
@@ -228,6 +231,19 @@ DISTRIBUTED (multi-process, TCP):
                              master at connect) with the SAME model/
                              algo/seed/--set flags as the master;
                              exits when the master finishes
+  --wire-codec C             payload transform for TCP round traffic
+                             (both ends must agree; the handshake
+                             refuses a mismatch). raw (default,
+                             bit-identical wire), bf16 | f16 (2-byte
+                             floats, report leg error-feedback
+                             compensated), topk<K> (ship the K-fraction
+                             largest report entries, e.g. topk0.01;
+                             broadcast goes bf16), delta (XOR-delta the
+                             broadcast against the previous round;
+                             trajectory identical to raw), delta+bf16
+                             (both). Excluded from the replay
+                             fingerprint; raw and delta replay
+                             bit-identically
 
 CHECKPOINT/RESUME:
   --set checkpoint_every=N   write a full-state checkpoint every N

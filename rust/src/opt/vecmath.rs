@@ -209,6 +209,228 @@ pub fn outer_step(
     }
 }
 
+// --------------------------------------------------------------------
+// Wire-codec kernels (`--wire-codec`): f32<->bf16/f16 conversion, top-k
+// magnitude selection, and the error-feedback transforms built on them.
+// They run per bucket on both wire legs, so like the reduce kernels
+// above they are deterministic by construction: serial element order,
+// integer sort keys, no hash containers.
+
+/// f32 -> bf16 with round-to-nearest-even. NaN payloads are quieted
+/// (truncating a NaN's mantissa could otherwise leave the all-zero
+/// pattern, i.e. turn it into an infinity).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// bf16 -> f32 (exact: bf16 is a truncated f32).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 -> IEEE 754 binary16 with round-to-nearest-even, handling
+/// overflow to ±inf, the subnormal range, signed zero, and NaN (quieted,
+/// payload truncated but never silently turned into an infinity).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf stays inf; NaN keeps its sign and top payload bits with
+        // the quiet bit forced
+        return if man == 0 {
+            sign | 0x7c00
+        } else {
+            sign | 0x7e00 | ((man >> 13) as u16 & 0x01ff)
+        };
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal half; the rounding carry may overflow the mantissa
+        // into the exponent (up to and including inf), which is exactly
+        // round-to-nearest-even's behaviour at binade boundaries
+        let mut h = (((e + 15) as u32) << 10) | (man >> 13);
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    if e >= -25 {
+        // subnormal half: value = h_man * 2^-24, so the target mantissa
+        // is the explicit-leading-bit significand shifted by -e-1
+        let m = man | 0x0080_0000;
+        let shift = (-e - 1) as u32;
+        let mut h = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (h & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    sign // underflow to signed zero
+}
+
+/// IEEE 754 binary16 -> f32 (exact: every half value is representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        // inf / NaN: widen the payload into the top mantissa bits
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: value = man * 2^-24; normalize into f32
+            let k = 31 - man.leading_zeros();
+            sign | ((k + 103) << 23) | ((man << (23 - k)) & 0x007f_ffff)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize a bucket with no feedback (the broadcast leg, which ships a
+/// fresh reference each round). Codewords are appended to the pooled
+/// `out`, which is cleared first; steady state reuses its capacity.
+pub fn quantize_into(v: &[f32], out: &mut Vec<u16>, q: fn(f32) -> u16) {
+    out.clear();
+    for &x in v {
+        out.push(q(x));
+    }
+}
+
+/// One error-feedback quantization step over a bucket: the compensated
+/// input `c = v[i] + residual[i]` is quantized through `q`, the
+/// codeword appended to `out`, and the fresh residual `c - dq(q(c))`
+/// written back in place (serial element order — the residual stream is
+/// part of the replayable trajectory). A non-finite carry (NaN payload,
+/// or an overflow-to-inf quantization like f16's) resets that element's
+/// residual to zero instead of poisoning every later round.
+// lint: deterministic -- the residual stream is checkpointed state; no
+// clock or thread-identity may leak into it
+pub fn quantize_ef(
+    v: &[f32],
+    residual: &mut [f32],
+    out: &mut Vec<u16>,
+    q: fn(f32) -> u16,
+    dq: fn(u16) -> f32,
+) {
+    debug_assert_eq!(v.len(), residual.len());
+    out.clear();
+    for (r, &x) in residual.iter_mut().zip(v) {
+        let c = x + *r;
+        let code = q(c);
+        out.push(code);
+        let err = c - dq(code);
+        *r = if err.is_finite() { err } else { 0.0 };
+    }
+}
+
+/// Decode a codeword bucket back to f32 — the receive side of both
+/// [`quantize_into`] and [`quantize_ef`].
+pub fn dequantize_into(codes: &[u16], out: &mut [f32], dq: fn(u16) -> f32) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = dq(c);
+    }
+}
+
+/// Indices of the `k` largest-magnitude elements of `v`, written to
+/// `idx_out` in strictly increasing index order. Magnitude compares on
+/// the sign-cleared bit pattern (monotonic for non-negative floats, so
+/// no float comparator is needed); ties break toward the lower index,
+/// making the selected *set* deterministic. NaN keys sort above +inf,
+/// so NaN elements are always shipped (and their residual reset in
+/// [`top_k_ef`]) rather than silently dropped. `scratch` is
+/// caller-pooled; steady state allocates nothing.
+pub fn top_k_select(
+    v: &[f32],
+    k: usize,
+    scratch: &mut Vec<(u32, u32)>,
+    idx_out: &mut Vec<u32>,
+) {
+    idx_out.clear();
+    let k = k.min(v.len());
+    if k == 0 {
+        return;
+    }
+    debug_assert!(v.len() <= u32::MAX as usize);
+    scratch.clear();
+    for (i, &x) in v.iter().enumerate() {
+        scratch.push((x.to_bits() & 0x7fff_ffff, i as u32));
+    }
+    let nth = k - 1;
+    scratch.select_nth_unstable_by_key(nth, |&(key, i)| {
+        (core::cmp::Reverse(key), i)
+    });
+    idx_out.extend(scratch[..k].iter().map(|&(_, i)| i));
+    idx_out.sort_unstable();
+}
+
+/// One error-feedback top-k step over a bucket: the compensated input
+/// `v + residual` is formed in place in `residual`, its `k`
+/// largest-magnitude elements are shipped exactly (indices ascending in
+/// `idx_out`, matching values in `val_out`) and zeroed in the residual,
+/// and every unselected element's full compensated value becomes the
+/// next residual. Unselected non-finite values are reset to zero (per
+/// [`top_k_select`] that only happens when a bucket holds more than `k`
+/// of them).
+// lint: deterministic -- the residual stream is checkpointed state; no
+// clock or thread-identity may leak into it
+pub fn top_k_ef(
+    v: &[f32],
+    residual: &mut [f32],
+    k: usize,
+    scratch: &mut Vec<(u32, u32)>,
+    idx_out: &mut Vec<u32>,
+    val_out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(v.len(), residual.len());
+    for (r, &x) in residual.iter_mut().zip(v) {
+        *r += x;
+    }
+    top_k_select(residual, k, scratch, idx_out);
+    val_out.clear();
+    for &i in idx_out.iter() {
+        let i = i as usize;
+        val_out.push(residual[i]);
+        residual[i] = 0.0;
+    }
+    for r in residual.iter_mut() {
+        if !r.is_finite() {
+            *r = 0.0;
+        }
+    }
+}
+
+/// Scatter decoded top-k pairs into a bucket slice (zeroed first: the
+/// unshipped mass stays on the sender as residual).
+pub fn scatter_topk(out: &mut [f32], idx: &[u32], val: &[f32]) {
+    debug_assert_eq!(idx.len(), val.len());
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for (&i, &v) in idx.iter().zip(val) {
+        if let Some(o) = out.get_mut(i as usize) {
+            *o = v;
+        }
+    }
+}
+
 /// Squared L2 distance (used by the alignment metric and tests).
 pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -421,5 +643,188 @@ mod tests {
         assert_eq!(dist2(&[0.0, 3.0], &[4.0, 0.0]), 25.0);
         assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
         assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn bf16_round_trips_specials_and_rounds_to_even() {
+        // specials survive
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(
+            bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)),
+            f32::NEG_INFINITY
+        );
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        // exactly-representable values are exact
+        for v in [1.0f32, -2.5, 0.5, 256.0, f32::MIN_POSITIVE] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v, "{v}");
+        }
+        // round-to-nearest-even at a midpoint: 1 + 2^-8 is exactly
+        // between bf16(1.0) (even) and the next code (odd) -> 1.0
+        let mid = f32::from_bits(0x3f80_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(mid)), 1.0);
+        // just above the midpoint rounds up
+        let above = f32::from_bits(0x3f80_8001);
+        assert_eq!(
+            f32_to_bf16(above),
+            0x3f81,
+            "above-midpoint must round up"
+        );
+        // max f32 overflows to bf16 inf under RNE
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+        // relative error of a round trip is within half a ulp (2^-8)
+        for &v in &[3.14159f32, -1e-20, 7.3e19, 1.5e-38] {
+            let rt = bf16_to_f32(f32_to_bf16(v));
+            assert!(
+                ((rt - v) / v).abs() <= 1.0 / 256.0,
+                "{v} -> {rt}"
+            );
+        }
+    }
+
+    #[test]
+    fn f16_round_trips_specials_subnormals_and_bounds() {
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(
+            f16_to_f32(f32_to_f16(f32::NEG_INFINITY)),
+            f32::NEG_INFINITY
+        );
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        // canonical exact values
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(-2.0), 0xc000);
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        // half max (65504) is exact; anything past the overflow
+        // threshold (65520) becomes inf
+        assert_eq!(f16_to_f32(0x7bff), 65504.0);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff);
+        assert_eq!(f32_to_f16(65521.0), 0x7c00);
+        assert_eq!(f32_to_f16(1e9), 0x7c00);
+        // smallest half subnormal = 2^-24, round trip exact
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+        // largest subnormal and smallest normal straddle 2^-14
+        assert_eq!(f32_to_f16(2.0f32.powi(-14)), 0x0400);
+        let largest_sub = 1023.0 * 2.0f32.powi(-24);
+        assert_eq!(f32_to_f16(largest_sub), 0x03ff);
+        assert_eq!(f16_to_f32(0x03ff), largest_sub);
+        // f32 values below half the smallest subnormal flush to zero
+        assert_eq!(f32_to_f16(2.0f32.powi(-26)), 0x0000);
+        assert_eq!(f32_to_f16(-(2.0f32.powi(-26))), 0x8000);
+        // every half code round-trips through f32 exactly
+        for code in 0u16..=0xffff {
+            let f = f16_to_f32(code);
+            if f.is_nan() {
+                assert!(f16_to_f32(f32_to_f16(f)).is_nan(), "{code:#06x}");
+            } else {
+                assert_eq!(f32_to_f16(f), code, "{code:#06x} -> {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_ef_residual_is_the_exact_quantization_error() {
+        let v = random_replicas(4097, 1, 21).remove(0);
+        let mut residual = vec![0.0f32; v.len()];
+        let mut codes = Vec::new();
+        quantize_ef(&v, &mut residual, &mut codes, f32_to_bf16, bf16_to_f32);
+        assert_eq!(codes.len(), v.len());
+        let mut deq = vec![0.0f32; v.len()];
+        dequantize_into(&codes, &mut deq, bf16_to_f32);
+        for i in 0..v.len() {
+            // round 1: compensated input c == v + 0.0, so the residual
+            // must equal c - dq(q(c)) bit for bit
+            let c = v[i] + 0.0;
+            assert_eq!(
+                residual[i].to_bits(),
+                (c - deq[i]).to_bits(),
+                "i {i}"
+            );
+        }
+        // round 2 quantizes v + residual; decoded + carried residual
+        // reconstructs the compensated input exactly
+        let carried = residual.clone();
+        quantize_ef(&v, &mut residual, &mut codes, f32_to_bf16, bf16_to_f32);
+        dequantize_into(&codes, &mut deq, bf16_to_f32);
+        for i in 0..v.len() {
+            let c = v[i] + carried[i];
+            assert_eq!((deq[i] + residual[i]).to_bits(), c.to_bits(), "i {i}");
+        }
+    }
+
+    #[test]
+    fn quantize_ef_resets_nonfinite_residuals() {
+        let v = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0, 7e4];
+        let mut residual = vec![0.0f32; v.len()];
+        let mut codes = Vec::new();
+        quantize_ef(&v, &mut residual, &mut codes, f32_to_f16, f16_to_f32);
+        // NaN/inf inputs and f16-overflowed values leave a zero
+        // residual, never a poisoned one
+        assert_eq!(&residual[..3], &[0.0, 0.0, 0.0]);
+        assert_eq!(residual[4], 0.0, "inf - inf must reset, not NaN");
+        assert!(residual.iter().all(|r| r.is_finite()));
+        // and the codes still carry the specials
+        assert!(f16_to_f32(codes[0]).is_nan());
+        assert_eq!(f16_to_f32(codes[1]), f32::INFINITY);
+        assert_eq!(f16_to_f32(codes[4]), f32::INFINITY);
+    }
+
+    #[test]
+    fn top_k_select_is_deterministic_sorted_and_dedup() {
+        let v = [1.0f32, -5.0, 0.0, 5.0, 2.0, -2.0, 0.25];
+        let mut scratch = Vec::new();
+        let mut idx = Vec::new();
+        // |-5| ties |5|: the lower index must win the tie, and the
+        // output must be strictly increasing (no duplicates)
+        top_k_select(&v, 3, &mut scratch, &mut idx);
+        assert_eq!(idx, vec![1, 3, 4]);
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // k >= len selects everything, k = 0 nothing
+        top_k_select(&v, 100, &mut scratch, &mut idx);
+        assert_eq!(idx, (0..v.len() as u32).collect::<Vec<_>>());
+        top_k_select(&v, 0, &mut scratch, &mut idx);
+        assert!(idx.is_empty());
+        // NaN sorts above +inf: always selected first
+        let v = [1.0f32, f32::NAN, f32::INFINITY];
+        top_k_select(&v, 1, &mut scratch, &mut idx);
+        assert_eq!(idx, vec![1]);
+        // same inputs, scrambled scratch state -> same selection
+        let big = random_replicas(2001, 1, 22).remove(0);
+        let mut a = Vec::new();
+        top_k_select(&big, 37, &mut scratch, &mut a);
+        let mut b = Vec::new();
+        let mut scratch2 = vec![(9u32, 9u32); 5];
+        top_k_select(&big, 37, &mut scratch2, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 37);
+    }
+
+    #[test]
+    fn top_k_ef_ships_exact_values_and_keeps_the_rest_as_residual() {
+        let v = [3.0f32, -1.0, 0.5, -4.0, 0.25];
+        let mut residual = vec![0.0f32; v.len()];
+        let (mut scratch, mut idx, mut val) =
+            (Vec::new(), Vec::new(), Vec::new());
+        top_k_ef(&v, &mut residual, 2, &mut scratch, &mut idx, &mut val);
+        assert_eq!(idx, vec![0, 3]);
+        assert_eq!(val, vec![3.0, -4.0]);
+        // shipped slots have zero residual; the rest carry their value
+        assert_eq!(residual, vec![0.0, -1.0, 0.5, 0.0, 0.25]);
+        // next round the carried mass competes again: -1.0 doubles
+        top_k_ef(&v, &mut residual, 2, &mut scratch, &mut idx, &mut val);
+        assert_eq!(idx, vec![0, 3]);
+        assert_eq!(residual[1], -2.0);
+        // scatter on the receive side reconstructs shipped slots only
+        let mut out = vec![9.0f32; v.len()];
+        scatter_topk(&mut out, &idx, &val);
+        assert_eq!(out, vec![3.0, 0.0, 0.0, -4.0, 0.0]);
+        // out-of-range indices are ignored, not a panic
+        scatter_topk(&mut out, &[100], &[1.0]);
+        assert_eq!(out, vec![0.0; 5]);
     }
 }

@@ -15,12 +15,12 @@
 
 use std::time::Duration;
 
-use parle::config::{Algo, RunConfig, TransportCfg};
+use parle::config::{Algo, RunConfig, TransportCfg, WireCodec};
 use parle::coordinator::comm::{ReduceFabric, ReplicaEndpoint, RoundCmd,
                                RoundConsts, RoundMsg, RoundReport,
                                WorkerCmd, WorkerState};
 use parle::coordinator::transport::protocol::State;
-use parle::coordinator::transport::{ephemeral_listener, wire,
+use parle::coordinator::transport::{codec, ephemeral_listener, wire,
                                     ProtocolViolation, TcpTransport,
                                     TcpWorkerLink, Transport};
 use parle::coordinator::{serve_worker_as, train, train_hierarchical};
@@ -746,6 +746,357 @@ fn tcp_double_restore_is_refused_before_the_wire() {
 }
 
 // ---------------------------------------------------------------------------
+// wire codecs over the real socket
+// ---------------------------------------------------------------------------
+
+/// Codec negotiation is part of the hello handshake: a worker launched
+/// with a different `--wire-codec` (or a different top-k fraction) is
+/// refused at connect on both ends, before any round traffic flows.
+#[test]
+fn tcp_codec_mismatch_is_refused_at_connect() {
+    // raw worker vs bf16 master
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let worker = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            TcpWorkerLink::connect(&addr, 1, Duration::from_secs(10))
+                .map(|_| ())
+        })
+    };
+    let err = format!(
+        "{:#}",
+        TcpTransport::accept_workers_with_codec(
+            listener,
+            1,
+            Duration::from_secs(10),
+            WireCodec::Bf16,
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("wire codec mismatch"), "got: {err}");
+    assert!(
+        worker.join().unwrap().is_err(),
+        "mismatched worker should be refused too"
+    );
+
+    // same codec family, different top-k fraction: still a mismatch
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let worker = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            TcpWorkerLink::connect_with_codec(
+                &addr,
+                1,
+                Duration::from_secs(10),
+                WireCodec::TopK(0.01),
+            )
+            .map(|_| ())
+        })
+    };
+    let err = format!(
+        "{:#}",
+        TcpTransport::accept_workers_with_codec(
+            listener,
+            1,
+            Duration::from_secs(10),
+            WireCodec::TopK(0.1),
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("wire codec mismatch"), "got: {err}");
+    assert!(worker.join().unwrap().is_err());
+}
+
+/// Drive the echo fabric under every codec, monolithic and bucketed:
+/// `delta` reconstructs the raw trajectory bit-for-bit while shipping
+/// far fewer broadcast bytes, `delta+bf16` matches `bf16` bit-for-bit,
+/// the lossy codecs stay within quantization tolerance, and the meter
+/// counts post-encode wire bytes (the satellite bugfix) — so coded runs
+/// measurably undercut raw.
+#[test]
+fn tcp_coded_fabric_echoes_within_tolerance_and_meters_wire_bytes() {
+    let n = 2usize;
+    let p = 2048usize;
+    let rounds = 5u64;
+    // a mostly-static reference with a handful of mutations per round:
+    // the regime delta encoding exists for
+    let xref_for = |round: u64| -> Vec<f32> {
+        let mut x: Vec<f32> =
+            (0..p).map(|i| (i as f32 * 0.37).sin()).collect();
+        for r in 1..=round {
+            for j in 0..16usize {
+                let at = (r as usize * 31 + j * 7) % p;
+                x[at] = (r as f32 * 0.11 + j as f32).cos();
+            }
+        }
+        x
+    };
+    let run = |wc: WireCodec, bucket_bytes: usize| -> (Vec<Vec<u32>>, u64) {
+        let (listener, addr) = ephemeral_listener().unwrap();
+        let workers: Vec<_> = (0..n)
+            .map(|_| {
+                let addr = addr.to_string();
+                std::thread::spawn(move || -> parle::Result<()> {
+                    let link = TcpWorkerLink::connect_with_codec(
+                        &addr,
+                        n,
+                        Duration::from_secs(10),
+                        wc,
+                    )?;
+                    let ep = ReplicaEndpoint::remote(link);
+                    while let Some(msg) = ep.recv() {
+                        let RoundMsg {
+                            round,
+                            xref,
+                            mut slab,
+                            ..
+                        } = msg;
+                        slab.copy_from_slice(&xref);
+                        ep.report(RoundReport {
+                            replica: ep.id(),
+                            round,
+                            params: slab,
+                            train_loss: 0.0,
+                            train_err: 0.0,
+                            step_s: 0.0,
+                        });
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        let mut fabric = ReduceFabric::with_transport(
+            vec![0; n],
+            Box::new(
+                TcpTransport::accept_workers_with_codec(
+                    listener,
+                    n,
+                    Duration::from_secs(10),
+                    wc,
+                )
+                .unwrap(),
+            ),
+        );
+        fabric.set_bucket_bytes(bucket_bytes);
+        let meter = fabric.meter();
+        let mut bits = Vec::new();
+        for round in 0..rounds {
+            let xref = xref_for(round);
+            fabric.broadcast(consts(), &[xref.as_slice()]);
+            fabric.collect().unwrap();
+            for r in fabric.reports() {
+                assert!(
+                    r.params.iter().all(|v| v.is_finite()),
+                    "{wc:?}: non-finite report value"
+                );
+                bits.push(
+                    r.params.iter().map(|v| v.to_bits()).collect(),
+                );
+            }
+        }
+        let bytes = meter.bytes();
+        fabric.shutdown().unwrap();
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        (bits, bytes)
+    };
+    for bucket_bytes in [0usize, 1024] {
+        let (raw_bits, raw_bytes) = run(WireCodec::Raw, bucket_bytes);
+        let tag = |wc: WireCodec| format!("{wc:?}/bucket={bucket_bytes}");
+
+        // delta is representation-only: bit-identical to raw, and the
+        // near-static reference deltas well below raw broadcast cost
+        let (delta_bits, delta_bytes) = run(WireCodec::Delta, bucket_bytes);
+        assert_eq!(raw_bits, delta_bits, "{}", tag(WireCodec::Delta));
+        assert!(
+            delta_bytes * 4 < raw_bytes * 3,
+            "delta shipped {delta_bytes}B vs raw {raw_bytes}B \
+             (bucket={bucket_bytes})"
+        );
+
+        // bf16 echoes land within quantization tolerance of the
+        // dispatch and roughly halve the metered wire traffic
+        let (bf16_bits, bf16_bytes) = run(WireCodec::Bf16, bucket_bytes);
+        for (r, chunk) in bf16_bits.chunks(n).enumerate() {
+            let xref = xref_for(r as u64);
+            for bits in chunk {
+                for (a, b) in bits.iter().zip(&xref) {
+                    let a = f32::from_bits(*a);
+                    assert!(
+                        (a - b).abs() <= 0.02 * (1.0 + b.abs()),
+                        "{}: {a} vs {b}",
+                        tag(WireCodec::Bf16)
+                    );
+                }
+            }
+        }
+        assert!(
+            raw_bytes * 10 > bf16_bytes * 18,
+            "bf16 shipped {bf16_bytes}B vs raw {raw_bytes}B \
+             (bucket={bucket_bytes})"
+        );
+
+        // delta over bf16 codewords reconstructs the bf16 trajectory
+        // bit-for-bit
+        let (dbf16_bits, dbf16_bytes) =
+            run(WireCodec::DeltaBf16, bucket_bytes);
+        assert_eq!(bf16_bits, dbf16_bits, "{}", tag(WireCodec::DeltaBf16));
+        assert!(dbf16_bytes < bf16_bytes);
+
+        // top-k ships a sparse report leg: the biggest savings of all
+        let (_topk_bits, topk_bytes) =
+            run(WireCodec::TopK(0.01), bucket_bytes);
+        assert!(
+            raw_bytes > topk_bytes * 3,
+            "topk shipped {topk_bytes}B vs raw {raw_bytes}B \
+             (bucket={bucket_bytes})"
+        );
+    }
+}
+
+/// The error-feedback residual is replica state: it rides worker
+/// snapshots under the `wire.ef` section, and a restore into a fresh
+/// fabric replays the exact trajectory the uninterrupted run produced.
+#[test]
+fn tcp_codec_ef_residual_rides_snapshot_and_restore() {
+    let wc = WireCodec::Bf16;
+    let n = 2usize;
+    let p = 33usize;
+    let xref_for = |round: u64| -> Vec<f32> {
+        (0..p)
+            .map(|i| (i as f32 * 0.61 + round as f32 * 0.173).sin())
+            .collect()
+    };
+    // stateful workers: the accumulator drifts off the bf16 grid, so
+    // the report leg keeps a nonzero residual alive round over round
+    let spawn = |addr: &str| {
+        (0..n)
+            .map(|_| {
+                let addr = addr.to_string();
+                std::thread::spawn(move || -> parle::Result<()> {
+                    let link = TcpWorkerLink::connect_with_codec(
+                        &addr,
+                        n,
+                        Duration::from_secs(10),
+                        wc,
+                    )?;
+                    let ep = ReplicaEndpoint::remote(link);
+                    let mut acc = vec![0.0f32; p];
+                    let mut drawn = 0u64;
+                    while let Some(cmd) = ep.recv_cmd() {
+                        match cmd {
+                            WorkerCmd::Round(msg) => {
+                                for (a, x) in
+                                    acc.iter_mut().zip(msg.xref.iter())
+                                {
+                                    *a = *a * 0.9 + *x;
+                                }
+                                drawn += 1;
+                                let RoundMsg {
+                                    round, mut slab, ..
+                                } = msg;
+                                slab.copy_from_slice(&acc);
+                                ep.report(RoundReport {
+                                    replica: ep.id(),
+                                    round,
+                                    params: slab,
+                                    train_loss: 0.0,
+                                    train_err: 0.0,
+                                    step_s: 0.0,
+                                });
+                            }
+                            WorkerCmd::Snapshot => {
+                                ep.send_snapshot(WorkerState {
+                                    replica: ep.id(),
+                                    vecs: vec![("acc".into(), acc.clone())],
+                                    batches_drawn: drawn,
+                                });
+                            }
+                            WorkerCmd::Restore(st) => {
+                                acc = st.vec("acc").unwrap().to_vec();
+                                drawn = st.batches_drawn;
+                            }
+                        }
+                    }
+                    Ok(())
+                })
+            })
+            .collect::<Vec<_>>()
+    };
+    let fresh_fabric = |addr_listener: (std::net::TcpListener, String)| {
+        let (listener, _addr) = addr_listener;
+        let mut fabric = ReduceFabric::with_transport(
+            vec![0; n],
+            Box::new(
+                TcpTransport::accept_workers_with_codec(
+                    listener,
+                    n,
+                    Duration::from_secs(10),
+                    wc,
+                )
+                .unwrap(),
+            ),
+        );
+        fabric.set_bucket_bytes(64);
+        fabric
+    };
+    let round =
+        |fabric: &mut ReduceFabric, r: u64| -> Vec<Vec<u32>> {
+            let xref = xref_for(r);
+            fabric.broadcast(consts(), &[xref.as_slice()]);
+            fabric.collect().unwrap();
+            fabric
+                .reports()
+                .iter()
+                .map(|rep| {
+                    rep.params.iter().map(|v| v.to_bits()).collect()
+                })
+                .collect()
+        };
+
+    // run A: uninterrupted, snapshot after two rounds, keep going
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let workers = spawn(&addr);
+    let mut fabric = fresh_fabric((listener, addr));
+    round(&mut fabric, 0);
+    round(&mut fabric, 1);
+    let states = fabric.snapshot_workers().unwrap();
+    let tail_a: Vec<_> =
+        (2..5).map(|r| round(&mut fabric, r)).collect();
+    fabric.shutdown().unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+
+    // the snapshot carries a live error-feedback residual per replica
+    for st in &states {
+        let ef = st
+            .vec(codec::EF_RESIDUAL_VEC)
+            .expect("snapshot should carry the wire.ef residual");
+        assert_eq!(ef.len(), p);
+        assert!(
+            ef.iter().any(|v| *v != 0.0),
+            "bf16 residual should be nonzero off the bf16 grid"
+        );
+    }
+
+    // run B: fresh fabric + fresh workers, restore, replay the tail —
+    // bitwise-equal reports prove the residual was reinstated
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let workers = spawn(&addr);
+    let mut fabric = fresh_fabric((listener, addr));
+    fabric.restore_workers(states).unwrap();
+    let tail_b: Vec<_> =
+        (2..5).map(|r| round(&mut fabric, r)).collect();
+    assert_eq!(tail_a, tail_b, "restored trajectory diverged");
+    fabric.shutdown().unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
 // cross-transport determinism (artifact-gated, like the training suite)
 // ---------------------------------------------------------------------------
 
@@ -918,4 +1269,58 @@ fn tcp_hierarchy_is_bit_identical_to_in_process() {
     );
     assert_same_run(&local, &remote, "hierarchy");
     assert_eq!(remote.record.replicas, 4);
+}
+
+/// Real training under every wire codec, over the exact `--role
+/// worker` path. The representation-only codecs are pinned bitwise —
+/// `delta` against `raw`, `delta+bf16` against `bf16` — and the lossy
+/// codecs (with error feedback on the report leg) must land within
+/// noise of the raw trajectory's final validation error.
+#[test]
+fn tcp_wire_codecs_learn_within_noise_and_deltas_match_exactly() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let mut cfg = base(Algo::Parle);
+    cfg.epochs = 1.0;
+    cfg.reduce_bucket_bytes = 256;
+    let run = |wc: WireCodec, label: &str| {
+        let mut c = cfg.clone();
+        c.wire_codec = wc;
+        tcp_train(
+            &c,
+            label,
+            |c: &RunConfig| -> Box<dyn parle::coordinator::RoundAlgo> {
+                Box::new(parle::coordinator::driver::CoupledAlgo::new(c))
+            },
+            train,
+        )
+    };
+    let raw = run(WireCodec::Raw, "itest_codec_raw");
+    let delta = run(WireCodec::Delta, "itest_codec_delta");
+    assert_same_run(&raw, &delta, "delta-vs-raw");
+    let bf16 = run(WireCodec::Bf16, "itest_codec_bf16");
+    let dbf16 = run(WireCodec::DeltaBf16, "itest_codec_deltabf16");
+    assert_same_run(&bf16, &dbf16, "delta+bf16-vs-bf16");
+    let f16 = run(WireCodec::F16, "itest_codec_f16");
+    let topk = run(WireCodec::TopK(0.05), "itest_codec_topk");
+    for (out, name) in
+        [(&bf16, "bf16"), (&f16, "f16"), (&topk, "topk0.05")]
+    {
+        let drift = (out.record.final_val_err
+            - raw.record.final_val_err)
+            .abs();
+        assert!(
+            drift <= 0.10,
+            "{name}: final val err {:.4} vs raw {:.4} drifts past noise",
+            out.record.final_val_err,
+            raw.record.final_val_err
+        );
+        assert!(
+            out.record.final_val_err < 0.5,
+            "{name}: failed to learn at all"
+        );
+    }
 }

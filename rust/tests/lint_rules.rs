@@ -125,6 +125,38 @@ fn binary_flags_w1_uncapped_decode_allocations() {
 }
 
 #[test]
+fn binary_flags_w1_uncapped_codec_decode_allocations() {
+    // transport/codec.rs is W1-bound like wire.rs: decode-side
+    // allocations must be cap-checked
+    let dir = fixture_dir("w1_codec");
+    write(
+        &dir,
+        "transport/codec.rs",
+        "pub fn decode_block(len: usize) -> Vec<u16> {\n\
+         \x20   vec![0u16; len]\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "uncapped codec decode alloc must fail W1");
+    assert!(err.contains("[W1]"), "stderr: {err}");
+    assert!(err.contains("decode_block"), "stderr: {err}");
+
+    // the same allocation behind a cap guard passes
+    write(
+        &dir,
+        "transport/codec.rs",
+        "pub fn decode_block(len: usize) -> Result<Vec<u16>> {\n\
+         \x20   if len > MAX_PARAMS {\n\
+         \x20       return Err(too_big());\n\
+         \x20   }\n\
+         \x20   Ok(vec![0u16; len])\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(ok, "cap-guarded codec decode alloc must pass W1: {err}");
+}
+
+#[test]
 fn binary_exits_zero_on_a_clean_fixture() {
     let dir = fixture_dir("clean");
     write(&dir, "math.rs", "pub fn add(a: f32, b: f32) -> f32 { a + b }\n");
@@ -192,9 +224,9 @@ fn binary_reports_multiple_files_in_sorted_order() {
 
 /// A minimal `transport/protocol.rs` whose TRANSITIONS table the S1
 /// pass can parse: Hello -> Run on hello, Run <-> Busy on round/report,
-/// stop self-loops on Run, and a streamed bucket tag that self-loops on
-/// Busy (legal nowhere else — mirroring the real table's mid-round
-/// `TAG_BUCKET_REPORT` rows).
+/// stop self-loops on Run, and streamed bucket/coded tags that
+/// self-loop on Busy (legal nowhere else — mirroring the real table's
+/// mid-round `TAG_BUCKET_REPORT` / `TAG_CODED_*` rows).
 const MINI_PROTOCOL: &str = "\
 pub enum State { Hello, Run, Busy }\n\
 pub enum Dir { ToWorker, ToMaster }\n\
@@ -202,7 +234,9 @@ pub const TRANSITIONS: &[(State, Dir, u8, State)] = &[\n\
     (State::Hello, Dir::ToMaster, wire::TAG_HELLO, State::Run),\n\
     (State::Run, Dir::ToWorker, wire::TAG_ROUND, State::Busy),\n\
     (State::Run, Dir::ToWorker, wire::TAG_STOP, State::Run),\n\
+    (State::Busy, Dir::ToWorker, wire::TAG_CODED_BCAST, State::Busy),\n\
     (State::Busy, Dir::ToMaster, wire::TAG_BUCKET_REPORT, State::Busy),\n\
+    (State::Busy, Dir::ToMaster, wire::TAG_CODED_REPORT, State::Busy),\n\
     (State::Busy, Dir::ToMaster, wire::TAG_REPORT, State::Run),\n\
 ];\n";
 
@@ -261,6 +295,43 @@ fn binary_flags_s1_bucket_tag_outside_its_states() {
     );
     let (ok, _, err) = run_lint(&dir);
     assert!(ok, "bucket tag inside Busy must pass S1: {err}");
+}
+
+#[test]
+fn binary_flags_s1_coded_tag_outside_its_states() {
+    let dir = fixture_dir("s1_coded");
+    write(&dir, "transport/protocol.rs", MINI_PROTOCOL);
+    // coded payload frames exist only mid-round (Busy); a Run-state
+    // region touching one must fail
+    write(
+        &dir,
+        "transport/peer.rs",
+        "pub fn drain(tag: u8) {\n\
+         \x20   // lint: proto(Run)\n\
+         \x20   {\n\
+         \x20       if tag == wire::TAG_CODED_REPORT { coded(); }\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "coded tag outside Busy must fail S1");
+    assert!(err.contains("[S1]"), "stderr: {err}");
+    assert!(err.contains("TAG_CODED_REPORT"), "stderr: {err}");
+
+    // both coded legs inside a Busy-state region are clean
+    write(
+        &dir,
+        "transport/peer.rs",
+        "pub fn drain(tag: u8) {\n\
+         \x20   // lint: proto(Busy)\n\
+         \x20   {\n\
+         \x20       if tag == wire::TAG_CODED_BCAST { bcast(); }\n\
+         \x20       if tag == wire::TAG_CODED_REPORT { coded(); }\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(ok, "coded tags inside Busy must pass S1: {err}");
 }
 
 #[test]

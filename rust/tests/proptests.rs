@@ -4,10 +4,10 @@
 //! failure message carries the case seed for replay).
 
 use parle::align::{greedy_assignment, hungarian};
-use parle::config::CommCfg;
+use parle::config::{CommCfg, WireCodec};
 use parle::coordinator::comm::{ReduceFabric, RoundConsts, RoundMsg,
                                RoundReport, WorkerState};
-use parle::coordinator::transport::wire;
+use parle::coordinator::transport::{codec, wire};
 use parle::data::{build, split_shards, DataConfig, Dataset};
 use parle::opt::scoping::Scoping;
 use parle::opt::vecmath;
@@ -422,6 +422,559 @@ fn prop_wire_codec_rejects_mutations_without_panicking() {
             "case {case}: absurd length accepted"
         );
     }
+}
+
+fn round_meta(round: u64, bucket: usize, n_buckets: usize, lo: usize,
+              total: usize) -> wire::BucketMeta {
+    wire::BucketMeta {
+        round,
+        bucket: bucket as u32,
+        n_buckets: n_buckets as u32,
+        offset: lo as u64,
+        total_len: total as u64,
+    }
+}
+
+const TEST_CONSTS: RoundConsts = RoundConsts {
+    lr: 0.1,
+    gamma_inv: 0.01,
+    rho_inv: 1.0,
+    eta_over_rho: 0.1,
+};
+
+/// The report leg of every lossy `--wire-codec` through real coded
+/// frames: encode -> frame -> unframe -> decode must reproduce exactly
+/// the quantization model, and the error-feedback residual must follow
+/// its defining recurrence bitwise — including NaN, ±inf, subnormal
+/// and -0.0 payloads (a non-finite carry resets to zero instead of
+/// poisoning later rounds).
+#[test]
+fn prop_codec_report_round_trips_under_error_feedback() {
+    let codecs = [
+        WireCodec::Bf16,
+        WireCodec::F16,
+        WireCodec::DeltaBf16,
+        WireCodec::TopK(0.1),
+    ];
+    for case in 0..CASES {
+        for &wc in &codecs {
+            let mut rng = Pcg64::new(xp() + case as u64, 20);
+            let p = 1 + rng.next_below(600);
+            let mut enc = codec::ReportEncoder::new(wc);
+            let mut dec = codec::ReportDecoder::new(wc);
+            enc.ensure_p(p);
+            let mut out = Vec::new();
+            for round in 0..3u64 {
+                let mut data = vec![0.0f32; p];
+                rng.fill_normal(&mut data, 2.0);
+                if p > 5 {
+                    data[0] = f32::NAN;
+                    data[1] = f32::INFINITY;
+                    data[2] = f32::NEG_INFINITY;
+                    data[3] = f32::MIN_POSITIVE / 2.0; // subnormal
+                    data[4] = -0.0;
+                }
+                let res_before = enc.residual().to_vec();
+                let (mode, bytes) = enc.encode(&data, 0);
+                let bytes = bytes.to_vec();
+                let payload = wire::encode_coded_report(
+                    3,
+                    &round_meta(round, 0, 1, 0, p),
+                    codec::report_block_id(wc),
+                    mode,
+                    p,
+                    &bytes,
+                )
+                .unwrap();
+                let (replica, m, block) =
+                    wire::decode_coded_report(&payload).unwrap();
+                assert_eq!(
+                    (replica, m.round, m.total_len),
+                    (3, round, p as u64),
+                    "case {case} {}",
+                    wc.name()
+                );
+                dec.decode(&block, &mut out).unwrap();
+                assert_eq!(out.len(), p, "case {case} {}", wc.name());
+                match wc {
+                    WireCodec::Bf16
+                    | WireCodec::DeltaBf16
+                    | WireCodec::F16 => {
+                        let (q, dq): (fn(f32) -> u16, fn(u16) -> f32) =
+                            if matches!(wc, WireCodec::F16) {
+                                (vecmath::f32_to_f16, vecmath::f16_to_f32)
+                            } else {
+                                (vecmath::f32_to_bf16, vecmath::bf16_to_f32)
+                            };
+                        for i in 0..p {
+                            let c = data[i] + res_before[i];
+                            let want = dq(q(c));
+                            assert_eq!(
+                                out[i].to_bits(),
+                                want.to_bits(),
+                                "case {case} {} round {round} decode \
+                                 diverges at {i}",
+                                wc.name()
+                            );
+                            let err = c - want;
+                            let want_r =
+                                if err.is_finite() { err } else { 0.0 };
+                            assert_eq!(
+                                enc.residual()[i].to_bits(),
+                                want_r.to_bits(),
+                                "case {case} {} round {round} residual \
+                                 diverges at {i}",
+                                wc.name()
+                            );
+                        }
+                    }
+                    WireCodec::TopK(frac) => {
+                        let k = codec::topk_bucket_k(frac, p);
+                        assert_eq!(bytes.len(), k * 8, "case {case}");
+                        let comp: Vec<f32> = (0..p)
+                            .map(|i| data[i] + res_before[i])
+                            .collect();
+                        let mut sel = Vec::new();
+                        let mut prev: Option<u32> = None;
+                        for pair in bytes.chunks_exact(8) {
+                            let i = u32::from_le_bytes([
+                                pair[0], pair[1], pair[2], pair[3],
+                            ]);
+                            let v = f32::from_bits(u32::from_le_bytes([
+                                pair[4], pair[5], pair[6], pair[7],
+                            ]));
+                            assert!(
+                                prev.map_or(true, |q| i > q),
+                                "case {case}: top-k indices not \
+                                 strictly increasing"
+                            );
+                            prev = Some(i);
+                            assert!((i as usize) < p, "case {case}");
+                            // shipped values are the exact compensated
+                            // inputs, bit for bit
+                            assert_eq!(
+                                v.to_bits(),
+                                comp[i as usize].to_bits(),
+                                "case {case}: shipped value not exact \
+                                 at {i}"
+                            );
+                            assert_eq!(
+                                out[i as usize].to_bits(),
+                                v.to_bits(),
+                                "case {case}: scatter diverges at {i}"
+                            );
+                            sel.push(i as usize);
+                        }
+                        // the selection really is a top-k by the
+                        // sign-cleared magnitude key
+                        let key = |x: f32| x.to_bits() & 0x7fff_ffff;
+                        let sel_min = sel
+                            .iter()
+                            .map(|&i| key(comp[i]))
+                            .min()
+                            .unwrap();
+                        for i in 0..p {
+                            if sel.contains(&i) {
+                                assert_eq!(
+                                    enc.residual()[i].to_bits(),
+                                    0.0f32.to_bits(),
+                                    "case {case}: shipped residual not \
+                                     cleared at {i}"
+                                );
+                            } else {
+                                assert!(
+                                    key(comp[i]) <= sel_min,
+                                    "case {case}: dropped element {i} \
+                                     outranks a shipped one"
+                                );
+                                assert_eq!(
+                                    out[i].to_bits(),
+                                    0.0f32.to_bits(),
+                                    "case {case}: unshipped element {i} \
+                                     decoded nonzero"
+                                );
+                                let want_r = if comp[i].is_finite() {
+                                    comp[i]
+                                } else {
+                                    0.0
+                                };
+                                assert_eq!(
+                                    enc.residual()[i].to_bits(),
+                                    want_r.to_bits(),
+                                    "case {case}: carried residual \
+                                     diverges at {i}"
+                                );
+                            }
+                        }
+                    }
+                    WireCodec::Raw | WireCodec::Delta => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+/// Element-wise report codecs are geometry-independent: encoding a
+/// vector as one monolithic bucket or as many streamed buckets yields
+/// bitwise-identical decodes and residual state. And under a constant
+/// input, error feedback keeps the accumulated quantization error
+/// bounded by a single step's worth — the mass all arrives eventually.
+#[test]
+fn prop_codec_report_bucketing_invariant_and_ef_mass_conservation() {
+    for case in 0..CASES {
+        for &wc in &[WireCodec::Bf16, WireCodec::F16] {
+            let mut rng = Pcg64::new(xp() + case as u64, 22);
+            let p = 1 + rng.next_below(1500);
+            let bucket_elems = 1 + rng.next_below(p + 32);
+            let nb = vecmath::bucket_count(p, bucket_elems);
+            let mut mono = codec::ReportEncoder::new(wc);
+            let mut streamed = codec::ReportEncoder::new(wc);
+            let mut dec = codec::ReportDecoder::new(wc);
+            mono.ensure_p(p);
+            streamed.ensure_p(p);
+            let mut got_mono = Vec::new();
+            let mut got_streamed = vec![Vec::new(); nb];
+            for _ in 0..3 {
+                let mut data = vec![0.0f32; p];
+                rng.fill_normal(&mut data, 2.0);
+                let (mode, bytes) = mono.encode(&data, 0);
+                let bytes = bytes.to_vec();
+                let block = wire::CodedBlock {
+                    codec: codec::report_block_id(wc),
+                    mode,
+                    n_elems: p,
+                    bytes: &bytes,
+                };
+                dec.decode(&block, &mut got_mono).unwrap();
+                for k in 0..nb {
+                    let (lo, hi) =
+                        vecmath::bucket_range(p, bucket_elems, k);
+                    let (mode, bytes) =
+                        streamed.encode(&data[lo..hi], lo);
+                    let bytes = bytes.to_vec();
+                    let block = wire::CodedBlock {
+                        codec: codec::report_block_id(wc),
+                        mode,
+                        n_elems: hi - lo,
+                        bytes: &bytes,
+                    };
+                    dec.decode(&block, &mut got_streamed[k]).unwrap();
+                }
+                let flat: Vec<u32> = got_streamed
+                    .iter()
+                    .flatten()
+                    .map(|v| v.to_bits())
+                    .collect();
+                let mono_bits: Vec<u32> =
+                    got_mono.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    mono_bits, flat,
+                    "case {case} {}: bucketing changes the decode",
+                    wc.name()
+                );
+            }
+            for i in 0..p {
+                assert_eq!(
+                    mono.residual()[i].to_bits(),
+                    streamed.residual()[i].to_bits(),
+                    "case {case} {}: bucketing changes the residual",
+                    wc.name()
+                );
+            }
+        }
+
+        // constant input: after R rounds the undelivered mass is the
+        // final residual, bounded by one quantization step
+        let mut rng = Pcg64::new(xp() + case as u64, 23);
+        let p = 1 + rng.next_below(400);
+        let mut data = vec![0.0f32; p];
+        rng.fill_normal(&mut data, 2.0);
+        for &wc in &[WireCodec::Bf16, WireCodec::F16] {
+            let mut enc = codec::ReportEncoder::new(wc);
+            let mut dec = codec::ReportDecoder::new(wc);
+            enc.ensure_p(p);
+            let mut out = Vec::new();
+            let mut delivered = vec![0.0f64; p];
+            let rounds = 16;
+            for _ in 0..rounds {
+                let (mode, bytes) = enc.encode(&data, 0);
+                let bytes = bytes.to_vec();
+                let block = wire::CodedBlock {
+                    codec: codec::report_block_id(wc),
+                    mode,
+                    n_elems: p,
+                    bytes: &bytes,
+                };
+                dec.decode(&block, &mut out).unwrap();
+                for (d, &v) in delivered.iter_mut().zip(&out) {
+                    *d += v as f64;
+                }
+            }
+            for i in 0..p {
+                let want = data[i] as f64 * rounds as f64;
+                let slack = 0.02 * (1.0 + data[i].abs() as f64);
+                assert!(
+                    (delivered[i] - want).abs() <= slack,
+                    "case {case} {}: EF leaks mass at {i}: delivered \
+                     {} want {want}",
+                    wc.name(),
+                    delivered[i]
+                );
+            }
+        }
+    }
+}
+
+/// The broadcast leg through real coded frames under random bucket
+/// geometry: quantizing codecs reconstruct the quantization of the
+/// dispatch, and the delta codecs reconstruct it bit-identically to
+/// their dense counterparts (`delta` == raw bits, `delta+bf16` == bf16
+/// bits) whichever of the dense/sparse representations the encoder
+/// picked per round.
+#[test]
+fn prop_codec_bcast_reconstructs_the_dispatch_bit_exactly() {
+    let codecs = [
+        WireCodec::Bf16,
+        WireCodec::F16,
+        WireCodec::TopK(0.05),
+        WireCodec::Delta,
+        WireCodec::DeltaBf16,
+    ];
+    for case in 0..CASES {
+        for &wc in &codecs {
+            let mut rng = Pcg64::new(xp() + case as u64, 21);
+            let p = 1 + rng.next_below(2000);
+            let bucket_elems = 1 + rng.next_below(p + 64);
+            let nb = vecmath::bucket_count(p, bucket_elems);
+            let mut enc = codec::BcastEncoder::new(wc);
+            let mut dec = codec::BcastDecoder::new(wc);
+            let mut xref = vec![0.0f32; p];
+            rng.fill_normal(&mut xref, 3.0);
+            for round in 0..4u64 {
+                if round > 0 {
+                    // mutate a small subset so sparse deltas can fire
+                    for _ in 0..1 + p / 8 {
+                        let i = rng.next_below(p);
+                        xref[i] = rng.next_f32() * 4.0 - 2.0;
+                    }
+                }
+                enc.begin_round(p);
+                let mut got = vec![0.0f32; p];
+                for k in 0..nb {
+                    let (lo, hi) =
+                        vecmath::bucket_range(p, bucket_elems, k);
+                    let (mode, bytes) = enc.encode(&xref[lo..hi], lo);
+                    let bytes = bytes.to_vec();
+                    let payload = wire::encode_coded_bcast(
+                        &TEST_CONSTS,
+                        &round_meta(round, k, nb, lo, p),
+                        codec::bcast_block_id(wc),
+                        mode,
+                        hi - lo,
+                        &bytes,
+                    )
+                    .unwrap();
+                    let (consts, m, block) =
+                        wire::decode_coded_bcast(&payload).unwrap();
+                    assert_eq!(consts.lr.to_bits(), TEST_CONSTS.lr.to_bits());
+                    dec.decode(
+                        &block,
+                        m.offset as usize,
+                        p,
+                        &mut got[lo..hi],
+                    )
+                    .unwrap();
+                }
+                for i in 0..p {
+                    let want = match wc {
+                        WireCodec::Delta => xref[i],
+                        WireCodec::F16 => vecmath::f16_to_f32(
+                            vecmath::f32_to_f16(xref[i]),
+                        ),
+                        _ => vecmath::bf16_to_f32(
+                            vecmath::f32_to_bf16(xref[i]),
+                        ),
+                    };
+                    assert_eq!(
+                        got[i].to_bits(),
+                        want.to_bits(),
+                        "case {case} {} round {round} bcast diverges \
+                         at {i}",
+                        wc.name()
+                    );
+                }
+            }
+        }
+    }
+
+    // the sparse representation demonstrably fires and beats dense:
+    // big vector, few mutations
+    for &wc in &[WireCodec::Delta, WireCodec::DeltaBf16] {
+        let mut enc = codec::BcastEncoder::new(wc);
+        let mut xref = vec![1.0f32; 1024];
+        enc.begin_round(1024);
+        let (mode, _) = enc.encode(&xref, 0);
+        assert_eq!(mode, wire::CODED_DENSE, "{}: first round must be \
+                    dense", wc.name());
+        xref[7] = 2.0;
+        xref[700] = -3.0;
+        enc.begin_round(1024);
+        let (mode, bytes) = enc.encode(&xref, 0);
+        assert_eq!(mode, wire::CODED_SPARSE, "{}", wc.name());
+        let pair = if matches!(wc, WireCodec::Delta) { 8 } else { 6 };
+        assert_eq!(bytes.len(), 2 * pair, "{}", wc.name());
+    }
+}
+
+/// Garbled coded frames are typed decode errors, never panics: header
+/// corruption at the frame layer, codec mismatches at the block layer,
+/// malformed sparse pair streams, and sparse deltas against a missing
+/// base (the mutated-base / desynced-peer case) are all refused.
+#[test]
+fn prop_codec_rejects_garbled_frames_without_panicking() {
+    let wc = WireCodec::TopK(0.1);
+    for case in 0..CASES {
+        let mut rng = Pcg64::new(xp() + case as u64, 24);
+        let p = 8 + rng.next_below(400);
+        let mut data = vec![0.0f32; p];
+        rng.fill_normal(&mut data, 2.0);
+        let mut enc = codec::ReportEncoder::new(wc);
+        enc.ensure_p(p);
+        let (mode, bytes) = enc.encode(&data, 0);
+        let bytes = bytes.to_vec();
+        let payload = wire::encode_coded_report(
+            1,
+            &round_meta(0, 0, 1, 0, p),
+            codec::report_block_id(wc),
+            mode,
+            p,
+            &bytes,
+        )
+        .unwrap();
+
+        // strict truncation anywhere must error
+        let cut = rng.next_below(payload.len());
+        assert!(
+            wire::decode_coded_report(&payload[..cut]).is_err(),
+            "case {case}: truncation at {cut} accepted"
+        );
+
+        // header corruption: raw / unknown codec ids, unknown mode,
+        // absurd element count (the codec byte sits after the u32
+        // replica and the 32-byte bucket meta)
+        let hdr = 4 + 32;
+        for (at, val) in [(hdr, 0u8), (hdr, 99), (hdr + 1, 7)] {
+            let mut bad = payload.clone();
+            bad[at] = val;
+            assert!(
+                wire::decode_coded_report(&bad).is_err(),
+                "case {case}: corrupt header byte {at}={val} accepted"
+            );
+        }
+        let mut bad = payload.clone();
+        bad[hdr + 2..hdr + 10]
+            .copy_from_slice(&(u64::MAX / 8).to_le_bytes());
+        assert!(
+            wire::decode_coded_report(&bad).is_err(),
+            "case {case}: absurd element count accepted"
+        );
+
+        // a block from a bf16 peer under a top-k negotiation is a
+        // codec mismatch, typed at the block layer
+        let mut other = codec::ReportEncoder::new(WireCodec::Bf16);
+        other.ensure_p(p);
+        let (mode2, bytes2) = other.encode(&data, 0);
+        let block = wire::CodedBlock {
+            codec: codec::report_block_id(WireCodec::Bf16),
+            mode: mode2,
+            n_elems: p,
+            bytes: bytes2,
+        };
+        let mut dec = codec::ReportDecoder::new(wc);
+        let mut out = Vec::new();
+        assert!(
+            dec.decode(&block, &mut out).is_err(),
+            "case {case}: cross-codec block accepted"
+        );
+    }
+
+    // malformed top-k pair streams: non-increasing indices, an index
+    // past the bucket, and a wrong pair count
+    let p = 16usize;
+    let k = codec::topk_bucket_k(0.5, p); // 8 pairs expected
+    let mk_pairs = |idx: &[u32]| -> Vec<u8> {
+        let mut b = Vec::new();
+        for &i in idx {
+            b.extend_from_slice(&i.to_le_bytes());
+            b.extend_from_slice(&1.0f32.to_bits().to_le_bytes());
+        }
+        b
+    };
+    let mut dec = codec::ReportDecoder::new(WireCodec::TopK(0.5));
+    let mut out = Vec::new();
+    let cases: [(&str, Vec<u8>); 3] = [
+        ("non-increasing", mk_pairs(&[0, 1, 2, 3, 5, 5, 6, 7])),
+        ("past the bucket", mk_pairs(&[0, 1, 2, 3, 4, 5, 6, 99])),
+        ("wrong pair count", mk_pairs(&[0, 1, 2])),
+    ];
+    for (what, bytes) in &cases {
+        let block = wire::CodedBlock {
+            codec: codec::report_block_id(WireCodec::TopK(0.5)),
+            mode: wire::CODED_SPARSE,
+            n_elems: p,
+            bytes,
+        };
+        assert!(
+            dec.decode(&block, &mut out).is_err(),
+            "{what} pair stream accepted (expected {k} pairs)"
+        );
+    }
+
+    // a sparse delta against a decoder with no base installed (fresh
+    // connect, or a base dropped by restore) must be refused, and
+    // recover once a dense frame re-seeds the base
+    let mut enc = codec::BcastEncoder::new(WireCodec::Delta);
+    let xref0 = vec![1.0f32; 64];
+    enc.begin_round(64);
+    let (mode, dense0) = enc.encode(&xref0, 0);
+    let dense0 = dense0.to_vec();
+    assert_eq!(mode, wire::CODED_DENSE);
+    let mut xref1 = xref0.clone();
+    xref1[3] = 5.0;
+    enc.begin_round(64);
+    let (mode, sparse1) = enc.encode(&xref1, 0);
+    let sparse1 = sparse1.to_vec();
+    assert_eq!(mode, wire::CODED_SPARSE);
+    fn blk(mode: u8, bytes: &[u8]) -> wire::CodedBlock<'_> {
+        wire::CodedBlock {
+            codec: codec::bcast_block_id(WireCodec::Delta),
+            mode,
+            n_elems: 64,
+            bytes,
+        }
+    }
+    let mut fresh = codec::BcastDecoder::new(WireCodec::Delta);
+    let mut out = vec![0.0f32; 64];
+    assert!(
+        fresh
+            .decode(&blk(wire::CODED_SPARSE, &sparse1), 0, 64, &mut out)
+            .is_err(),
+        "sparse delta with no base accepted"
+    );
+    fresh
+        .decode(&blk(wire::CODED_DENSE, &dense0), 0, 64, &mut out)
+        .unwrap();
+    fresh
+        .decode(&blk(wire::CODED_SPARSE, &sparse1), 0, 64, &mut out)
+        .unwrap();
+    assert_eq!(out[3].to_bits(), 5.0f32.to_bits());
+    fresh.reset_base();
+    assert!(
+        fresh
+            .decode(&blk(wire::CODED_SPARSE, &sparse1), 0, 64, &mut out)
+            .is_err(),
+        "sparse delta after a base reset accepted"
+    );
 }
 
 #[test]
