@@ -294,6 +294,22 @@ pub struct RunConfig {
     /// TCP master only: `host:port` to listen on for worker
     /// connections (`--listen`).
     pub listen: Option<String>,
+    /// TCP worker: ping the master with a heartbeat frame after this
+    /// many seconds of command-leg idleness so the master's liveness
+    /// clock stays fresh between round legs (`--heartbeat-every`;
+    /// 0 disables pings). A pure transport-liveness knob — excluded
+    /// from the replay fingerprint like the rest of the wire layer.
+    pub heartbeat_secs: f64,
+    /// TCP master: evict a replica silent for this many seconds — its
+    /// shard parked, barriers shrink to the live members, and the
+    /// listener keeps admitting fingerprint-matched late joiners
+    /// (`--evict-after`). 0 (the default) keeps the classic fail-stop
+    /// fabric.
+    pub evict_after_secs: f64,
+    /// TCP worker: fail with a typed "master silent" error once no
+    /// master frame has arrived for this many seconds
+    /// (`--master-silence`; 0 = wait forever, the legacy behavior).
+    pub master_silence_secs: f64,
     pub seed: u64,
     pub artifacts_dir: String,
     /// Write a full-state checkpoint every this many communication
@@ -348,6 +364,9 @@ impl RunConfig {
             transport: TransportCfg::InProcess,
             wire_codec: WireCodec::Raw,
             listen: None,
+            heartbeat_secs: 2.0,
+            evict_after_secs: 0.0,
+            master_silence_secs: 0.0,
             seed: 42,
             artifacts_dir: "artifacts".to_string(),
             checkpoint_every_rounds: 0,
@@ -397,6 +416,15 @@ impl RunConfig {
                 self.wire_codec = WireCodec::parse(value)?
             }
             "listen" => self.listen = Some(value.to_string()),
+            "heartbeat_every" | "heartbeat_secs" => {
+                self.heartbeat_secs = value.parse()?
+            }
+            "evict_after" | "evict_after_secs" => {
+                self.evict_after_secs = value.parse()?
+            }
+            "master_silence" | "master_silence_secs" => {
+                self.master_silence_secs = value.parse()?
+            }
             "scoping" => {
                 self.scoping = match value {
                     "paper" => ScopingCfg::Paper,
@@ -446,7 +474,12 @@ impl RunConfig {
     /// `delta` don't perturb the trajectory at all. Resuming under a
     /// different lossy codec changes future rounding, exactly like
     /// resuming on different BLAS hardware — permitted, not
-    /// fingerprinted.
+    /// fingerprinted. The elastic-membership knobs
+    /// (`heartbeat_secs`/`evict_after_secs`/`master_silence_secs`) are
+    /// liveness policy, not trajectory: they stay out too, so a
+    /// fail-stop checkpoint resumes under an elastic fabric and vice
+    /// versa — and a late joiner's hello fingerprint matches the
+    /// master's regardless of either side's liveness settings.
     pub fn replay_fingerprint(&self) -> u64 {
         let canon = format!(
             "model={};alpha={};momentum={};wd={};lr={}@{:?}/{};\
@@ -497,6 +530,27 @@ impl RunConfig {
         }
         if !(0.0..=1.0).contains(&self.alpha) {
             bail!("alpha must be in [0, 1]");
+        }
+        for (name, v) in [
+            ("heartbeat_every", self.heartbeat_secs),
+            ("evict_after", self.evict_after_secs),
+            ("master_silence", self.master_silence_secs),
+        ] {
+            if !(v >= 0.0 && v.is_finite()) {
+                bail!("{name} must be a finite number of seconds >= 0, \
+                       got {v}");
+            }
+        }
+        if self.evict_after_secs > 0.0
+            && self.heartbeat_secs > 0.0
+            && self.heartbeat_secs >= self.evict_after_secs
+        {
+            bail!(
+                "heartbeat_every ({}s) must be shorter than evict_after \
+                 ({}s), or every worker gets evicted between pings",
+                self.heartbeat_secs,
+                self.evict_after_secs
+            );
         }
         Ok(())
     }
@@ -680,6 +734,35 @@ mod tests {
         // replay_fingerprint doc for the lossy-resume caveat)
         let base = RunConfig::new("mlp_synth", Algo::Parle);
         assert_eq!(base.replay_fingerprint(), c.replay_fingerprint());
+    }
+
+    #[test]
+    fn membership_knobs_parse_validate_and_stay_unfingerprinted() {
+        let mut c = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(c.heartbeat_secs, 2.0);
+        assert_eq!(c.evict_after_secs, 0.0);
+        assert_eq!(c.master_silence_secs, 0.0);
+        c.set("heartbeat_every", "0.5").unwrap();
+        c.set("evict_after", "6").unwrap();
+        c.set("master_silence", "30").unwrap();
+        assert_eq!(c.heartbeat_secs, 0.5);
+        assert_eq!(c.evict_after_secs, 6.0);
+        assert_eq!(c.master_silence_secs, 30.0);
+        assert!(c.set("evict_after", "soon").is_err());
+        assert!(c.validate().is_ok());
+        // liveness policy, not trajectory: excluded from the replay
+        // fingerprint so fail-stop checkpoints resume under an elastic
+        // fabric (and late joiners' hellos match the master's print)
+        let base = RunConfig::new("mlp_synth", Algo::Parle);
+        assert_eq!(base.replay_fingerprint(), c.replay_fingerprint());
+        // a heartbeat slower than the eviction deadline is a config
+        // error — every worker would look dead between pings
+        c.set("heartbeat_every", "10").unwrap();
+        assert!(c.validate().is_err());
+        c.set("heartbeat_every", "0").unwrap();
+        assert!(c.validate().is_ok(), "no pings: reports must suffice");
+        c.set("master_silence", "-1").unwrap();
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -146,17 +146,20 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Crash-safe save: write to `<path>.tmp`, then rename over `path`
-    /// so a kill mid-write never corrupts the previous checkpoint.
+    /// Crash-safe save: write to `<path>.tmp`, fsync it, rename it over
+    /// `path`, then best-effort fsync the parent directory. The fsync
+    /// *before* the rename is the load-bearing half: the rename is
+    /// atomic on the directory entry, but without syncing the data
+    /// first a crash shortly after the rename can leave the new name
+    /// pointing at never-written blocks — corrupting exactly the
+    /// checkpoint the tmp-and-rename dance was meant to protect.
     pub fn save_atomic<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let path = path.as_ref();
         let mut tmp = path.as_os_str().to_owned();
         tmp.push(".tmp");
         let tmp = std::path::PathBuf::from(tmp);
         self.save(&tmp)?;
-        std::fs::rename(&tmp, path).with_context(|| {
-            format!("renaming {} over {}", tmp.display(), path.display())
-        })
+        publish_durably(&tmp, path, &mut FsPublish)
     }
 
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
@@ -217,6 +220,57 @@ impl Checkpoint {
             vecs_f64,
         })
     }
+}
+
+/// The durability legs of an atomic checkpoint publish, injectable so
+/// a unit test can pin their order: data fsync, then rename, then
+/// directory fsync.
+trait PublishOps {
+    fn sync_file(&mut self, p: &Path) -> Result<()>;
+    fn rename(&mut self, from: &Path, to: &Path) -> Result<()>;
+    /// Best-effort — some filesystems refuse directory fsync, and by
+    /// this point the data itself is durable; only the rename's
+    /// directory entry could still be lost (yielding the *old*
+    /// checkpoint, which is safe).
+    fn sync_dir(&mut self, dir: &Path);
+}
+
+struct FsPublish;
+
+impl PublishOps for FsPublish {
+    fn sync_file(&mut self, p: &Path) -> Result<()> {
+        std::fs::File::open(p)
+            .and_then(|f| f.sync_all())
+            .with_context(|| format!("fsyncing {}", p.display()))
+    }
+
+    fn rename(&mut self, from: &Path, to: &Path) -> Result<()> {
+        std::fs::rename(from, to).with_context(|| {
+            format!("renaming {} over {}", from.display(), to.display())
+        })
+    }
+
+    fn sync_dir(&mut self, dir: &Path) {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
+/// fsync `tmp`'s payload, rename it over `path`, then best-effort
+/// fsync the parent directory so the rename itself reaches disk. See
+/// [`Checkpoint::save_atomic`] for why this order is the whole point.
+fn publish_durably(
+    tmp: &Path,
+    path: &Path,
+    ops: &mut dyn PublishOps,
+) -> Result<()> {
+    ops.sync_file(tmp)?;
+    ops.rename(tmp, path)?;
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        ops.sync_dir(dir);
+    }
+    Ok(())
 }
 
 /// One named f32 vector in the v2 section encoding: name, dtype byte,
@@ -437,6 +491,71 @@ mod tests {
         // atomic save leaves no tmp file behind
         assert!(!path.with_extension("ck.tmp").exists());
         std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    /// Regression: `save_atomic` used to rename the tmp file into place
+    /// without fsyncing it, so a crash right after the rename could
+    /// publish a checkpoint whose bytes never hit disk. The data fsync
+    /// must come strictly before the rename; the directory fsync
+    /// (persisting the rename itself) strictly after.
+    #[test]
+    fn atomic_publish_syncs_data_before_rename_and_dir_after() {
+        struct Recorder(Vec<String>);
+        impl PublishOps for Recorder {
+            fn sync_file(&mut self, p: &Path) -> Result<()> {
+                self.0.push(format!("sync_file {}", p.display()));
+                Ok(())
+            }
+            fn rename(&mut self, from: &Path, to: &Path) -> Result<()> {
+                self.0.push(format!(
+                    "rename {} -> {}",
+                    from.display(),
+                    to.display()
+                ));
+                Ok(())
+            }
+            fn sync_dir(&mut self, dir: &Path) {
+                self.0.push(format!("sync_dir {}", dir.display()));
+            }
+        }
+        let mut rec = Recorder(Vec::new());
+        publish_durably(
+            Path::new("/runs/a.ck.tmp"),
+            Path::new("/runs/a.ck"),
+            &mut rec,
+        )
+        .unwrap();
+        assert_eq!(
+            rec.0,
+            [
+                "sync_file /runs/a.ck.tmp",
+                "rename /runs/a.ck.tmp -> /runs/a.ck",
+                "sync_dir /runs",
+            ]
+        );
+        // a failed data fsync must abort before the rename publishes
+        // anything
+        struct FailSync(Vec<String>);
+        impl PublishOps for FailSync {
+            fn sync_file(&mut self, _: &Path) -> Result<()> {
+                bail!("disk full")
+            }
+            fn rename(&mut self, _: &Path, _: &Path) -> Result<()> {
+                self.0.push("rename".into());
+                Ok(())
+            }
+            fn sync_dir(&mut self, _: &Path) {
+                self.0.push("sync_dir".into());
+            }
+        }
+        let mut f = FailSync(Vec::new());
+        assert!(publish_durably(
+            Path::new("/runs/a.ck.tmp"),
+            Path::new("/runs/a.ck"),
+            &mut f,
+        )
+        .is_err());
+        assert!(f.0.is_empty(), "rename ran after a failed fsync: {:?}", f.0);
     }
 
     /// A v1 file (no section block at all) still loads — with empty

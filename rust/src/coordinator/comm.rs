@@ -28,6 +28,15 @@
 //! therefore pushes a final `Exited` event when its body returns, and
 //! the master turns an unexpected `Exited` into an error.
 //!
+//! In **elastic mode** ([`ReduceFabric::set_elastic`], driven by the
+//! engine's `--evict-after` knob) a dead or silent replica is demoted
+//! instead of failing the run: [`ReduceFabric::recv_pulse`] surfaces
+//! it as a [`FabricPulse::Evicted`] membership change, barriers and
+//! reduces count only the remaining live members ([`ReduceFabric::evict`]
+//! owns the mid-round bucket arithmetic), and a later
+//! [`ReduceFabric::readmit`] — after the transport admitted a
+//! fingerprint-checked joiner — grows the group back.
+//!
 //! # Buffer lifecycle (zero steady-state allocation)
 //!
 //! Two kinds of P-sized buffers circulate, and after the first two rounds
@@ -272,6 +281,19 @@ pub enum FabricEvent {
     Failed(usize, String),
 }
 
+/// What the master's event loop consumes through
+/// [`ReduceFabric::recv_pulse`]: a round report, or — in elastic mode —
+/// a membership change the fabric has already folded into its barriers
+/// and reduces.
+pub enum FabricPulse {
+    Report(RoundReport),
+    /// The fabric evicted `replica`: its transport leg died or went
+    /// silent past the eviction deadline. By the time the caller sees
+    /// this, [`ReduceFabric::evict`] has already shrunk the reduce
+    /// group, so barriers count only the remaining live members.
+    Evicted { replica: usize, reason: String },
+}
+
 /// Counts every byte the fabric moves (both directions).
 #[derive(Default)]
 pub struct CommMeter {
@@ -344,6 +366,14 @@ pub struct ReplicaEndpoint {
     /// tracks its own copy (it learns the geometry from the raw bucket
     /// frames).
     bucket_elems: Cell<usize>,
+    /// The typed error (e.g. a
+    /// [`crate::coordinator::transport::MasterSilence`] deadline)
+    /// behind the
+    /// last `None` a TCP link returned from
+    /// [`ReplicaEndpoint::recv_cmd`]. Worker bodies take it on exit so
+    /// `--role worker` fails with the diagnosis instead of draining
+    /// out as if the master had stopped it cleanly.
+    link_error: RefCell<Option<anyhow::Error>>,
 }
 
 impl ReplicaEndpoint {
@@ -369,6 +399,7 @@ impl ReplicaEndpoint {
                 "worker", id,
             )),
             bucket_elems: Cell::new(0),
+            link_error: RefCell::new(None),
         }
     }
 
@@ -389,6 +420,7 @@ impl ReplicaEndpoint {
                 "worker", id,
             )),
             bucket_elems: Cell::new(0),
+            link_error: RefCell::new(None),
         }
     }
 
@@ -448,11 +480,24 @@ impl ReplicaEndpoint {
                                 self.id
                             ),
                         );
+                        // keep the typed cause (MasterSilence, decode
+                        // failures) for the worker body to propagate
+                        *self.link_error.borrow_mut() = Some(e);
                         None
                     }
                 }
             }
         }
+    }
+
+    /// The typed link error behind the last `None` from
+    /// [`ReplicaEndpoint::recv_cmd`], if the link failed rather than
+    /// stopping cleanly. Worker bodies call this after their round
+    /// loop drains so a dead wire (e.g. a
+    /// [`crate::coordinator::transport::MasterSilence`] deadline)
+    /// fails the worker process with the diagnosis.
+    pub fn take_link_error(&self) -> Option<anyhow::Error> {
+        self.link_error.borrow_mut().take()
     }
 
     /// Round-only receive for stateless workers (tests, probes): answers
@@ -772,6 +817,15 @@ pub struct ReduceFabric {
     asm_p: usize,
     /// Bucket count the assembly state was armed for.
     asm_buckets: u32,
+    /// Membership mask: `live[r]` is false once replica r was evicted
+    /// ([`ReduceFabric::evict`]) and true again after
+    /// [`ReduceFabric::readmit`]. Dead replicas receive no dispatches
+    /// and no barrier waits on them.
+    live: Vec<bool>,
+    /// Elastic mode ([`ReduceFabric::set_elastic`]): dead replicas are
+    /// evicted instead of failing the run. Off by default — the
+    /// fail-stop semantics every pre-elastic caller relies on.
+    elastic: bool,
 }
 
 impl ReduceFabric {
@@ -822,6 +876,8 @@ impl ReduceFabric {
             asm_round: 0,
             asm_p: 0,
             asm_buckets: 0,
+            live: vec![true; n],
+            elastic: false,
         }
     }
 
@@ -833,6 +889,23 @@ impl ReduceFabric {
 
     pub fn replicas(&self) -> usize {
         self.groups.len()
+    }
+
+    /// Replicas currently live (not evicted).
+    pub fn live_replicas(&self) -> usize {
+        self.live.iter().filter(|&&b| b).count()
+    }
+
+    /// Whether replica `r` is live (in range and not evicted).
+    pub fn is_live(&self, r: usize) -> bool {
+        self.live.get(r).copied().unwrap_or(false)
+    }
+
+    /// Switch the fabric between fail-stop (default) and elastic
+    /// membership. Elastic mode turns dead or silent replicas into
+    /// [`FabricPulse::Evicted`] pulses instead of errors.
+    pub fn set_elastic(&mut self, on: bool) {
+        self.elastic = on;
     }
 
     /// Align the fabric's round counter (sync resume). `RoundMsg::round`
@@ -942,6 +1015,9 @@ impl ReduceFabric {
                 }
             }
             for r in 0..self.groups.len() {
+                if !self.live[r] {
+                    continue; // evicted: shard parked, nothing shipped
+                }
                 let slab = match self.slab_pool[r].take() {
                     Some(s) => s,
                     None => fresh_slab(p), // first round only
@@ -1036,6 +1112,29 @@ impl ReduceFabric {
     ///
     /// [`collect`]: ReduceFabric::collect
     pub fn recv_report(&mut self) -> Result<RoundReport> {
+        match self.recv_pulse()? {
+            FabricPulse::Report(rep) => Ok(rep),
+            FabricPulse::Evicted { replica, reason } => {
+                Err(anyhow::anyhow!(
+                    "replica {replica} evicted mid-wait: {reason}"
+                ))
+            }
+        }
+    }
+
+    /// A dead replica's event should demote it rather than fail the
+    /// run: elastic mode is on and the replica is still counted live.
+    fn should_evict(&self, id: usize) -> bool {
+        self.elastic && self.live.get(id).copied().unwrap_or(false)
+    }
+
+    /// Blocking receive of the next fabric pulse. In fail-stop mode
+    /// (the default) this is [`ReduceFabric::recv_report`] — a dead
+    /// replica is an error. In elastic mode a dead or silent replica
+    /// comes back as [`FabricPulse::Evicted`] with its membership
+    /// already retired ([`ReduceFabric::evict`]); stale events from a
+    /// slot that was already evicted are dropped.
+    pub fn recv_pulse(&mut self) -> Result<FabricPulse> {
         let t = Timer::new();
         // lint: panic-free -- master event loop: a panic here deadlocks
         {
@@ -1055,7 +1154,8 @@ impl ReduceFabric {
                         {
                             prof.add(key, t.elapsed_s());
                         }
-                        return self.finish_report(rep);
+                        let rep = self.finish_report(rep)?;
+                        return Ok(FabricPulse::Report(rep));
                     }
                     Ok(FabricEvent::BucketReport(b)) => {
                         if self.bucket_elems == 0 {
@@ -1071,11 +1171,31 @@ impl ReduceFabric {
                         self.apply_bucket(b)?;
                     }
                     Ok(FabricEvent::Exited(id)) => {
+                        if self.should_evict(id) {
+                            self.evict(id);
+                            return Ok(FabricPulse::Evicted {
+                                replica: id,
+                                reason: "connection closed".into(),
+                            });
+                        }
+                        if self.elastic && id < self.live.len() {
+                            continue; // stale event, slot already dead
+                        }
                         return Err(anyhow::anyhow!(
                             "replica {id} exited mid-round"
                         ));
                     }
                     Ok(FabricEvent::Failed(id, msg)) => {
+                        if self.should_evict(id) {
+                            self.evict(id);
+                            return Ok(FabricPulse::Evicted {
+                                replica: id,
+                                reason: msg,
+                            });
+                        }
+                        if self.elastic && id < self.live.len() {
+                            continue; // stale event, slot already dead
+                        }
                         return Err(anyhow::anyhow!(
                             "replica {id} transport failed: {msg}"
                         ));
@@ -1084,6 +1204,114 @@ impl ReduceFabric {
                 }
             }
         }
+    }
+
+    /// Retire replica `r` from the membership: mark it dead on the
+    /// transport (its socket shut, its events gen-fenced), shrink its
+    /// reduce group, and — if a bucketed round is in flight — repair
+    /// the per-bucket countdowns so the barrier closes over the
+    /// remaining live members.
+    ///
+    /// Mid-round bucket arithmetic, per unreduced bucket `k` of the
+    /// dead replica's group: if its copy of `k` already arrived, the
+    /// copy is withdrawn (expected and arrived both shrink by one, so
+    /// the countdown is unchanged); if not, the countdown drops by one
+    /// and reduces the bucket when it hits zero. Buckets that already
+    /// reduced keep the dead replica's contribution — that mean was
+    /// final the moment it was computed. A monolithic report that fully
+    /// arrived before the eviction likewise stays in the round.
+    /// Idempotent; a no-op for out-of-range or already-dead replicas.
+    pub fn evict(&mut self, r: usize) {
+        // lint: panic-free -- runs inside the master event loop
+        {
+            if !self.is_live(r) {
+                return;
+            }
+            self.live[r] = false;
+            self.transport.mark_dead(r);
+            let g = self.groups[r];
+            self.group_size[g] = self.group_size[g].saturating_sub(1);
+            if self.bucket_elems == 0
+                || self.asm_buckets == 0
+                || self.means_complete
+                || r >= self.asm.len()
+            {
+                return;
+            }
+            for k in 0..self.asm_buckets as usize {
+                if self.pending[g][k] == 0 {
+                    continue; // already reduced: the mean is final
+                }
+                if self.asm[r].got[k] {
+                    // delivered but unreduced: withdraw the copy;
+                    // expected and arrived both shrank, countdown holds
+                    self.asm[r].got[k] = false;
+                    self.asm[r].n_got = self.asm[r].n_got.saturating_sub(1);
+                } else {
+                    self.pending[g][k] -= 1;
+                    if self.pending[g][k] == 0 {
+                        let (lo, hi) = vecmath::bucket_range(
+                            self.asm_p,
+                            self.bucket_elems,
+                            k,
+                        );
+                        self.reduce_bucket(g, lo, hi);
+                        self.pending_total -= 1;
+                        if self.pending_total == 0 {
+                            self.means_complete = true;
+                        }
+                    }
+                }
+            }
+            // the dead replica's assembly slab must not feed any later
+            // reduce; live filtering in reduce_bucket makes this moot,
+            // dropping it just frees the buffer
+            self.asm[r].buf = None;
+        }
+    }
+
+    /// Bring an admitted replacement (or late joiner) back into the
+    /// membership on slot `r`: mark it live and grow its reduce group.
+    /// Call between rounds — after the transport admitted the
+    /// connection ([`ReduceFabric::try_admit`]) and before the next
+    /// broadcast arms its barrier.
+    pub fn readmit(&mut self, r: usize) -> Result<()> {
+        if r >= self.live.len() {
+            anyhow::bail!(
+                "readmit of unknown replica {r} (fabric has {})",
+                self.live.len()
+            );
+        }
+        if self.live[r] {
+            anyhow::bail!("readmit of replica {r}, which is still live");
+        }
+        self.live[r] = true;
+        self.group_size[self.groups[r]] += 1;
+        Ok(())
+    }
+
+    /// Poll the transport's listener for a replacement or late joiner
+    /// (non-blocking). `Ok(Some(slot))` means a fingerprint-checked
+    /// worker completed its handshake on a parked slot; follow with
+    /// [`ReduceFabric::restore_replica`] and
+    /// [`ReduceFabric::readmit`].
+    pub fn try_admit(&mut self) -> Result<Option<usize>> {
+        self.transport.try_admit()
+    }
+
+    /// Ship a [`WorkerState`] to a single (just-admitted) replica over
+    /// the chunked state frames, without the full-fabric count check of
+    /// [`ReduceFabric::restore_workers`].
+    pub fn restore_replica(&mut self, st: WorkerState) -> Result<()> {
+        let r = st.replica;
+        if r >= self.replicas() {
+            anyhow::bail!("worker state for unknown replica {r}");
+        }
+        self.transport
+            .send_cmd(r, RoundCmd::Restore(Box::new(st)))
+            .map_err(|e| {
+                e.context("admitted replica died before restore")
+            })
     }
 
     /// Arm the bucket-assembly state for the sync round about to be
@@ -1276,13 +1504,15 @@ impl ReduceFabric {
             .groups
             .iter()
             .enumerate()
-            .filter(|&(_, &gr)| gr == g)
+            .filter(|&(r, &gr)| gr == g && self.live[r])
             .filter_map(|(r, _)| self.asm[r].buf.as_ref())
             .map(AsmBuf::view)
             .collect();
-        if views.len() != self.group_size[g] as usize {
-            // unreachable: the countdown only hits zero once every
-            // member installed a payload — but never panic here
+        if views.is_empty() || views.len() != self.group_size[g] as usize {
+            // unreachable outside eviction: the countdown only hits
+            // zero once every member installed a payload — but never
+            // panic here. Empty means the whole group was evicted;
+            // there is no mean to compute.
             return;
         }
         if let Some(out) = self.bucket_means.get_mut(g) {
@@ -1353,11 +1583,38 @@ impl ReduceFabric {
     /// broadcast.
     pub fn collect(&mut self) -> Result<RoundStats> {
         self.reports.clear();
-        for _ in 0..self.replicas() {
-            let rep = self
-                .recv_report()
-                .context("replica died mid-round")?;
-            self.reports.push(rep);
+        loop {
+            let outstanding = (0..self.replicas())
+                .filter(|&r| {
+                    self.live[r]
+                        && !self.reports.iter().any(|rep| rep.replica == r)
+                })
+                .count();
+            if outstanding == 0 {
+                break;
+            }
+            match self
+                .recv_pulse()
+                .context("replica died mid-round")?
+            {
+                FabricPulse::Report(rep) => self.reports.push(rep),
+                FabricPulse::Evicted { replica, reason } => {
+                    // membership already shrunk by evict(); the barrier
+                    // now waits on one fewer member
+                    crate::util::logging::log(
+                        crate::util::logging::Level::Info,
+                        "fabric",
+                        &format!(
+                            "evicted replica {replica} mid-round: {reason}"
+                        ),
+                    );
+                }
+            }
+        }
+        if self.reports.is_empty() {
+            anyhow::bail!(
+                "every replica was evicted mid-round; nothing to reduce"
+            );
         }
         self.reports.sort_by_key(|r| r.replica);
         let n = self.reports.len() as f64;
@@ -1457,11 +1714,13 @@ impl ReduceFabric {
     /// exact post-round state.
     pub fn snapshot_workers(&mut self) -> Result<Vec<WorkerState>> {
         let n = self.replicas();
-        for r in 0..n {
+        let members: Vec<usize> =
+            (0..n).filter(|&r| self.live[r]).collect();
+        for &r in &members {
             let _ = self.transport.send_cmd(r, RoundCmd::Snapshot);
         }
-        let mut states = Vec::with_capacity(n);
-        for r in 0..n {
+        let mut states = Vec::with_capacity(members.len());
+        for r in members {
             let st = self
                 .transport
                 .recv_snapshot(r)
@@ -1567,6 +1826,10 @@ pub struct AsyncPacer {
     max_staleness: u64,
     done: Vec<u64>,
     inflight: Vec<bool>,
+    /// Evicted replicas: never dispatched, never gate the staleness
+    /// bound or the watermark, and their stale reports are dropped.
+    /// `done` keeps their true stamps so checkpoints stay honest.
+    evicted: Vec<bool>,
 }
 
 impl AsyncPacer {
@@ -1585,6 +1848,7 @@ impl AsyncPacer {
             max_staleness,
             done,
             inflight: vec![false; n],
+            evicted: vec![false; n],
         }
     }
 
@@ -1593,18 +1857,27 @@ impl AsyncPacer {
         &self.done
     }
 
-    /// Rounds completed by *every* replica — the watermark that drives
-    /// scoping annealing, eval cadence and checkpoint cadence.
+    /// Rounds completed by every *live* replica — the watermark that
+    /// drives scoping annealing, eval cadence and checkpoint cadence.
+    /// Evicted replicas stop gating it.
     pub fn watermark(&self) -> u64 {
-        self.done.iter().copied().min().unwrap_or(0)
+        self.done
+            .iter()
+            .zip(&self.evicted)
+            .filter(|&(_, &ev)| !ev)
+            .map(|(&d, _)| d)
+            .min()
+            .unwrap_or(0)
     }
 
-    /// Min completed rounds among replicas that still have rounds left.
+    /// Min completed rounds among live replicas that still have rounds
+    /// left.
     fn min_active(&self) -> Option<u64> {
         self.done
             .iter()
-            .copied()
-            .filter(|&d| d < self.total_rounds)
+            .zip(&self.evicted)
+            .filter(|&(&d, &ev)| !ev && d < self.total_rounds)
+            .map(|(&d, _)| d)
             .min()
     }
 
@@ -1613,16 +1886,17 @@ impl AsyncPacer {
         self.done[r]
     }
 
-    /// Replicas that may be handed their next round now: idle, rounds
-    /// remaining, and within the staleness bound of the slowest
-    /// unfinished replica.
+    /// Replicas that may be handed their next round now: live, idle,
+    /// rounds remaining, and within the staleness bound of the slowest
+    /// live unfinished replica.
     pub fn dispatchable(&self) -> Vec<usize> {
         let Some(min) = self.min_active() else {
             return Vec::new();
         };
         (0..self.done.len())
             .filter(|&r| {
-                !self.inflight[r]
+                !self.evicted[r]
+                    && !self.inflight[r]
                     && self.done[r] < self.total_rounds
                     && self.done[r] - min <= self.max_staleness
             })
@@ -1635,11 +1909,46 @@ impl AsyncPacer {
         self.inflight[r] = true;
     }
 
-    /// Record replica `r`'s report for its in-flight round.
+    /// Record replica `r`'s report for its in-flight round. A report
+    /// racing an eviction (already in flight when the replica was
+    /// retired) is dropped.
     pub fn on_report(&mut self, r: usize) {
+        if self.evicted.get(r).copied().unwrap_or(false) {
+            return;
+        }
         debug_assert!(self.inflight[r], "report from idle replica {r}");
         self.inflight[r] = false;
         self.done[r] += 1;
+    }
+
+    /// Retire replica `r`: no further dispatches, no staleness or
+    /// watermark gating, in-flight leg written off. Idempotent.
+    pub fn evict(&mut self, r: usize) {
+        if let Some(ev) = self.evicted.get_mut(r) {
+            *ev = true;
+            self.inflight[r] = false;
+        }
+    }
+
+    /// Whether replica `r` has been evicted.
+    pub fn is_evicted(&self, r: usize) -> bool {
+        self.evicted.get(r).copied().unwrap_or(false)
+    }
+
+    /// Every replica has been evicted — the run cannot make progress.
+    pub fn all_evicted(&self) -> bool {
+        !self.evicted.is_empty() && self.evicted.iter().all(|&b| b)
+    }
+
+    /// Bring an admitted replacement back on slot `r`, resuming at
+    /// `round` (typically the current watermark, which the joiner's
+    /// restored state was cut at).
+    pub fn readmit(&mut self, r: usize, round: u64) {
+        if let Some(ev) = self.evicted.get_mut(r) {
+            *ev = false;
+            self.inflight[r] = false;
+            self.done[r] = round;
+        }
     }
 
     /// Number of rounds currently in flight.
@@ -1647,9 +1956,13 @@ impl AsyncPacer {
         self.inflight.iter().filter(|&&b| b).count()
     }
 
-    /// Every replica has completed all its rounds.
+    /// Every live replica has completed all its rounds (evicted
+    /// replicas cannot progress and stop counting).
     pub fn all_done(&self) -> bool {
-        self.done.iter().all(|&d| d >= self.total_rounds)
+        self.done
+            .iter()
+            .zip(&self.evicted)
+            .all(|(&d, &ev)| ev || d >= self.total_rounds)
     }
 }
 
@@ -2134,6 +2447,145 @@ mod tests {
         fabric.shutdown().unwrap();
     }
 
+    // --- elastic membership -------------------------------------------
+
+    /// Elastic mode: a worker that dies mid-round is evicted — the
+    /// barrier closes over the survivors and later rounds run with
+    /// n - 1 members instead of fail-stopping.
+    #[test]
+    fn elastic_collect_survives_a_dying_worker() {
+        let mut fabric = ReduceFabric::flat(2, CommCfg::off());
+        fabric.set_elastic(true);
+        // replica 0 echoes forever; replica 1 exits after one round
+        fabric
+            .spawn_worker(move |ep| {
+                while let Some(msg) = ep.recv() {
+                    let RoundMsg {
+                        round,
+                        xref,
+                        mut slab,
+                        ..
+                    } = msg;
+                    slab.copy_from_slice(&xref);
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round,
+                        params: slab,
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                Ok(())
+            })
+            .unwrap();
+        fabric
+            .spawn_worker(|ep| {
+                let _ = ep.recv();
+                Ok(())
+            })
+            .unwrap();
+        let xref = vec![3.0f32; 4];
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        fabric.collect().unwrap();
+        assert_eq!(fabric.live_replicas(), 1);
+        assert!(!fabric.is_live(1));
+        // the next round runs over the surviving member alone
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        fabric.collect().unwrap();
+        let mut out = vec![0.0f32; 4];
+        fabric.reduce_into(&mut out);
+        assert_eq!(out, xref);
+        fabric.shutdown().unwrap();
+    }
+
+    /// Mid-stream eviction on a bucketed round: the countdowns are
+    /// repaired so every bucket still reduces, over the live members
+    /// only.
+    #[test]
+    fn elastic_bucketed_eviction_repairs_the_countdowns() {
+        let mut fabric = ReduceFabric::flat(3, CommCfg::off());
+        fabric.set_elastic(true);
+        // replicas 0 and 1 echo scaled by 1x and 2x; replica 2 dies on
+        // receipt, delivering none of its buckets
+        for scale in [1.0f32, 2.0] {
+            fabric
+                .spawn_worker(move |ep| {
+                    while let Some(msg) = ep.recv() {
+                        let RoundMsg {
+                            round,
+                            xref,
+                            mut slab,
+                            ..
+                        } = msg;
+                        for (o, &v) in slab.iter_mut().zip(xref.iter()) {
+                            *o = v * scale;
+                        }
+                        ep.report(RoundReport {
+                            replica: ep.id(),
+                            round,
+                            params: slab,
+                            train_loss: 0.0,
+                            train_err: 0.0,
+                            step_s: 0.0,
+                        });
+                    }
+                    Ok(())
+                })
+                .unwrap();
+        }
+        fabric
+            .spawn_worker(|ep| {
+                let _ = ep.recv();
+                Ok(())
+            })
+            .unwrap();
+        fabric.set_bucket_bytes(8); // 2-element buckets over p = 5
+        let xref = vec![2.0f32, 4.0, 6.0, 8.0, 10.0];
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        fabric.collect().unwrap();
+        assert_eq!(fabric.live_replicas(), 2);
+        let mut out = vec![0.0f32; 5];
+        fabric.reduce_into(&mut out);
+        let want: Vec<f32> = xref.iter().map(|v| v * 1.5).collect();
+        assert_eq!(out, want);
+        fabric.shutdown().unwrap();
+    }
+
+    /// Eviction and readmission keep the membership accounting
+    /// consistent under repeats, out-of-range ids, and double calls.
+    #[test]
+    fn evict_and_readmit_bookkeeping_is_idempotent() {
+        let mut fabric = ReduceFabric::flat(2, CommCfg::off());
+        assert_eq!(fabric.live_replicas(), 2);
+        fabric.evict(1);
+        fabric.evict(1); // idempotent
+        fabric.evict(99); // out of range: ignored
+        assert_eq!(fabric.live_replicas(), 1);
+        assert!(fabric.readmit(1).is_ok());
+        assert!(fabric.readmit(1).is_err()); // already live
+        assert!(fabric.readmit(7).is_err()); // unknown slot
+        assert_eq!(fabric.live_replicas(), 2);
+    }
+
+    /// Fail-stop stays the default: without `set_elastic`, a dying
+    /// worker is still a collect error (the pre-elastic contract).
+    #[test]
+    fn fail_stop_remains_the_default_without_elastic() {
+        let mut fabric = ReduceFabric::flat(1, CommCfg::off());
+        fabric
+            .spawn_worker(|ep| {
+                let _ = ep.recv();
+                Ok(())
+            })
+            .unwrap();
+        let xref = vec![1.0f32; 4];
+        fabric.broadcast(consts(), &[xref.as_slice()]);
+        let err = format!("{:#}", fabric.collect().unwrap_err());
+        assert!(err.contains("exited mid-round"), "got: {err}");
+        fabric.shutdown().unwrap();
+    }
+
     // --- asynchronous event loop -------------------------------------
 
     /// Drive a full async run over echo workers with a skewed
@@ -2307,6 +2759,45 @@ mod tests {
         p.on_report(1);
         assert!(p.all_done());
         assert!(p.dispatchable().is_empty());
+    }
+
+    /// Evicted replicas stop gating the staleness bound and the
+    /// watermark, drop their stale reports, and rejoin cleanly.
+    #[test]
+    fn pacer_evicted_replicas_stop_gating_and_rejoin() {
+        let mut p = AsyncPacer::new(2, 5, 0);
+        p.mark_dispatched(0);
+        p.mark_dispatched(1);
+        p.on_report(0); // done = [1, 0]
+        p.evict(1);
+        assert_eq!(p.inflight(), 0); // the in-flight leg is written off
+        // lockstep staleness no longer waits on the dead replica
+        assert_eq!(p.dispatchable(), vec![0]);
+        assert_eq!(p.watermark(), 1);
+        p.on_report(1); // stale report racing the eviction: dropped
+        assert_eq!(p.done(), &[1, 0][..]);
+        assert!(p.is_evicted(1));
+        assert!(!p.all_evicted());
+        for _ in 0..4 {
+            p.mark_dispatched(0);
+            p.on_report(0);
+        }
+        // the survivor finished; the evicted replica stops counting
+        assert!(p.all_done());
+        p.readmit(1, 3);
+        assert!(!p.all_done());
+        assert_eq!(p.watermark(), 3);
+        assert_eq!(p.dispatchable(), vec![1]);
+    }
+
+    #[test]
+    fn pacer_all_evicted_is_detectable() {
+        let mut p = AsyncPacer::new(2, 5, 1);
+        p.evict(0);
+        p.evict(1);
+        assert!(p.all_evicted());
+        assert!(p.dispatchable().is_empty());
+        assert!(p.all_done()); // vacuously: nothing can progress
     }
 
     #[test]

@@ -66,9 +66,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{CommMode, RunConfig, ScopingCfg, TransportCfg};
 use crate::coordinator::checkpoint::Checkpoint;
-use crate::coordinator::comm::{AsyncPacer, ReduceFabric, ReplicaEndpoint,
-                               RoundConsts, RoundReport, WorkerState};
-use crate::coordinator::transport::{TcpTransport, TcpWorkerLink};
+use crate::coordinator::comm::{AsyncPacer, FabricPulse, ReduceFabric,
+                               ReplicaEndpoint, RoundConsts, RoundReport,
+                               WorkerState};
+use crate::coordinator::transport::{TcpConnectOpts, TcpListenOpts,
+                                    TcpTransport, TcpWorkerLink};
 use crate::data::batcher::{Augment, Batch, Batcher};
 use crate::data::{build, split_shards, Dataset};
 use crate::info;
@@ -184,6 +186,31 @@ pub trait RoundAlgo {
     /// `ck.params.len()` against [`RoundAlgo::params`].
     fn restore_state(&mut self, ck: &Checkpoint) -> Result<()>;
 
+    /// Persistent state to install into a worker admitted mid-run on
+    /// slot `replica` (a replacement or late joiner on the elastic TCP
+    /// fabric): the coupled-family default seeds y, z and x_a from the
+    /// current master params with zeroed momenta — the same state a
+    /// fresh replica would reach after the first broadcast.
+    /// `batches_drawn` fast-forwards the joiner's data/augment RNG
+    /// streams to the run's current position. Strategies with stateless
+    /// workers ignore the vectors (their Restore does).
+    fn admit_worker_state(&self, replica: usize, batches_drawn: u64)
+                          -> WorkerState {
+        let p = self.params().len();
+        let x = self.params().to_vec();
+        WorkerState {
+            replica,
+            vecs: vec![
+                ("y".into(), x.clone()),
+                ("z".into(), x.clone()),
+                ("mom".into(), vec![0.0; p]),
+                ("x_a".into(), x),
+                ("v_outer".into(), vec![0.0; p]),
+            ],
+            batches_drawn,
+        }
+    }
+
     /// Consume the strategy, yielding the final parameters.
     fn into_params(self) -> Vec<f32>
     where
@@ -270,10 +297,17 @@ impl<'a> RoundEngine<'a> {
                 info!(
                     "{label} waiting for {n_workers} workers on {addr}"
                 );
-                let transport = TcpTransport::listen_with_codec(
+                let transport = TcpTransport::listen_with_opts(
                     addr,
                     n_workers,
-                    cfg.wire_codec,
+                    crate::coordinator::transport::tcp::DEFAULT_ACCEPT_TIMEOUT,
+                    TcpListenOpts {
+                        codec: cfg.wire_codec,
+                        evict_after: std::time::Duration::from_secs_f64(
+                            cfg.evict_after_secs,
+                        ),
+                        fingerprint: Some(cfg.replay_fingerprint()),
+                    },
                 )?;
                 ReduceFabric::with_transport(
                     groups.clone(),
@@ -282,6 +316,11 @@ impl<'a> RoundEngine<'a> {
             }
         };
         fabric.set_profiler(profiler.clone());
+        // elastic membership only exists on the TCP fabric: in-process
+        // worker threads share our fate, so there is nobody to evict
+        let elastic = cfg.transport == TransportCfg::Tcp
+            && cfg.evict_after_secs > 0.0;
+        fabric.set_elastic(elastic);
         if cfg.comm_mode == CommMode::Sync {
             // stream the sync barrier in buckets so the master reduces
             // while later reports are still in flight; async dispatches
@@ -558,6 +597,25 @@ impl<'a> RoundEngine<'a> {
                     }
                     // else: stop dispatching and drain a report below
                 } else {
+                    // elastic: admit a fingerprint-matched late joiner
+                    // before dispatching; it resumes at the watermark so
+                    // its lead starts at zero
+                    if elastic {
+                        if let Some(slot) = fabric.try_admit()? {
+                            let wm = pacer.watermark();
+                            let st = algo.admit_worker_state(
+                                slot,
+                                (wm as f64 * spr) as u64,
+                            );
+                            fabric.restore_replica(st)?;
+                            fabric.readmit(slot)?;
+                            pacer.readmit(slot, wm);
+                            info!(
+                                "{label} admitted replica {slot} at \
+                                 round {wm}"
+                            );
+                        }
+                    }
                     if pacer.all_done() {
                         break;
                     }
@@ -584,7 +642,24 @@ impl<'a> RoundEngine<'a> {
                     // always dispatchable (lead 0 <= any staleness)
                     bail!("async pacer stalled with no legs in flight");
                 }
-                let rep = fabric.recv_report()?;
+                let rep = match fabric.recv_pulse()? {
+                    FabricPulse::Report(rep) => rep,
+                    FabricPulse::Evicted { replica, reason } => {
+                        crate::warn_log!(
+                            "{label} evicted replica {replica}: {reason} \
+                             — continuing with {} live",
+                            fabric.live_replicas()
+                        );
+                        pacer.evict(replica);
+                        if pacer.all_evicted() {
+                            bail!(
+                                "every replica was evicted; nothing left \
+                                 to train on"
+                            );
+                        }
+                        continue;
+                    }
+                };
                 // mean compute depth across replicas approximates the
                 // async run's critical path (no barrier to take a max
                 // over); comm_ratio stays comparable with sync runs
@@ -612,6 +687,24 @@ impl<'a> RoundEngine<'a> {
             }
         } else {
             for round in start_round..total_rounds {
+                // elastic: admit a fingerprint-matched late joiner at the
+                // round boundary — its state is anchored to the current
+                // reference, and its batcher fast-forwarded to the
+                // round's draw count, before the barrier re-counts it
+                if elastic {
+                    if let Some(slot) = fabric.try_admit()? {
+                        let st = algo.admit_worker_state(
+                            slot,
+                            (round as f64 * spr) as u64,
+                        );
+                        fabric.restore_replica(st)?;
+                        fabric.readmit(slot)?;
+                        info!(
+                            "{label} admitted replica {slot} at round \
+                             {round}"
+                        );
+                    }
+                }
                 let epoch = round as f64 * spr / b as f64;
                 let lr = cfg.lr.at(epoch);
                 let ctx = RoundCtx {
@@ -784,11 +877,20 @@ pub fn serve_worker_as(
     let n_workers = algo.groups().len();
     let datasets =
         shard_datasets(cfg, algo.shards_data(), train_ds, n_workers)?;
-    let link = TcpWorkerLink::connect_with_codec(
+    let link = TcpWorkerLink::connect_with_opts(
         connect,
         n_workers,
         std::time::Duration::from_secs(30),
-        cfg.wire_codec,
+        TcpConnectOpts {
+            codec: cfg.wire_codec,
+            fingerprint: Some(cfg.replay_fingerprint()),
+            heartbeat_every: std::time::Duration::from_secs_f64(
+                cfg.heartbeat_secs,
+            ),
+            master_silence: std::time::Duration::from_secs_f64(
+                cfg.master_silence_secs,
+            ),
+        },
     )?;
     let id = link.replica();
     info!("worker {id}/{n_workers} serving rounds from {connect}");
@@ -917,7 +1019,9 @@ fn write_checkpoint<A: RoundAlgo>(
     st: CkState,
 ) -> Result<()> {
     let states = fabric.snapshot_workers()?;
-    debug_assert_eq!(states.len(), st.rounds_done.len());
+    // elastic fabrics snapshot only the live members, so the state
+    // count may trail the per-replica round stamps
+    debug_assert!(states.len() <= st.rounds_done.len());
     let fp = cfg.replay_fingerprint();
     let mut ck = Checkpoint::new(&cfg.model, algo.params().to_vec())
         .with("round", st.next_round as f64)

@@ -277,7 +277,13 @@ pub fn run_replica(
             step_s,
         });
     }
-    Ok(())
+    // a drained loop is a clean stop unless the wire died underneath:
+    // surface the typed cause (master silence, decode failure) so the
+    // worker process exits with the diagnosis
+    match ep.take_link_error() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 /// Per-step dropout/augment seed: the shared collision-resistant mixer

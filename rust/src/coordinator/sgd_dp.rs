@@ -287,7 +287,11 @@ fn grad_worker(
             step_s: t.elapsed_s(),
         });
     }
-    Ok(())
+    // surface a dead wire's typed cause instead of a clean-looking exit
+    match ep.take_link_error() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 #[cfg(test)]

@@ -66,6 +66,11 @@
 //! Restore --[CODED_BCAST m->w]--> InFlight
 //! InFlight --[CODED_REPORT w->m]--> InFlight
 //! Draining --[CODED_REPORT w->m]--> Draining
+//! RoundLoop --[HEARTBEAT w->m]--> RoundLoop
+//! InFlight --[HEARTBEAT w->m]--> InFlight
+//! SnapshotQuiesce --[HEARTBEAT w->m]--> SnapshotQuiesce
+//! Restore --[HEARTBEAT w->m]--> Restore
+//! Draining --[HEARTBEAT w->m]--> Draining
 //! ```
 //!
 //! # Bucketed streaming (wire v2)
@@ -102,6 +107,25 @@
 //! suites' codec — sends v2's frames byte-for-byte. The in-process
 //! channels ignore the knob: there is no wire to compress.
 //!
+//! # Elastic membership (heartbeats, eviction, admission)
+//!
+//! `HEARTBEAT` is a worker→master liveness self-loop, legal in every
+//! live post-hello state: each worker pings on its `--heartbeat-every`
+//! cadence whenever its command receive goes idle, and the master's
+//! reader stamps a per-replica last-heard clock on *every* inbound
+//! frame (data frames count as liveness too, so a busy link never
+//! needs a ping). With `--evict-after > 0` the master evicts a replica
+//! silent past the deadline — its stream is closed, its shard parked,
+//! and the fabric shrinks the reduce group (sync barriers count only
+//! live members; the async pacer just stops dispatching to it) — and
+//! the retained listener keeps accepting: a late joiner or replacement
+//! whose hello carries a matching replay-config fingerprint (the same
+//! fingerprint checkpoints validate on resume; mismatches are refused
+//! at connect) is admitted into the lowest dead slot and shipped the
+//! current anchor state over chunked `RESTORE`/`STATE_CHUNK` frames.
+//! With `--evict-after 0` (the default) the fabric keeps its original
+//! fail-stop behavior: any worker death aborts the run.
+//!
 //! Debug-oriented [`protocol::ProtocolMonitor`]s sit on both endpoints
 //! of both transports and validate every frame against the table, so
 //! an illegal sequence (a round before the handshake, a report during
@@ -127,7 +151,8 @@ use crate::coordinator::comm::{CommMeter, FabricEvent, ReplicaEndpoint,
 use protocol::Dir;
 
 pub use protocol::{ProtocolMonitor, ProtocolViolation};
-pub use tcp::{ephemeral_listener, TcpTransport, TcpWorkerLink};
+pub use tcp::{ephemeral_listener, MasterSilence, TcpConnectOpts,
+              TcpListenOpts, TcpTransport, TcpWorkerLink};
 
 /// A fabric transport: the dispatch leg (commands to each replica) and
 /// the report leg (the master-bound event stream + snapshot replies).
@@ -177,6 +202,21 @@ pub trait Transport: Send {
     /// default drops it, which is correct for transports whose bucket
     /// payloads are shared rather than owned.
     fn recycle_bucket(&mut self, _replica: usize, _buf: Vec<f32>) {}
+
+    /// Poll for a newly admitted replacement / late-join worker.
+    /// Elastic wire transports accept a pending fingerprint-matched
+    /// connection into their lowest evicted slot and return its index;
+    /// the default — and the in-process channels, whose membership is
+    /// fixed at construction — reports none.
+    fn try_admit(&mut self) -> Result<Option<usize>> {
+        Ok(None)
+    }
+
+    /// Tear down replica `r`'s link after the fabric evicted it: wire
+    /// transports close the stream and retire events still in flight
+    /// from the dead connection. Default is a no-op for transports
+    /// without eviction.
+    fn mark_dead(&mut self, _replica: usize) {}
 
     /// Blocking receive of replica `r`'s snapshot reply.
     fn recv_snapshot(&mut self, replica: usize) -> Result<WorkerState>;

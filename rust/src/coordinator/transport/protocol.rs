@@ -195,6 +195,44 @@ pub const TRANSITIONS: &[(State, Dir, u8, State)] = &[
         wire::TAG_CODED_REPORT,
         State::Draining,
     ),
+    // Liveness heartbeats (elastic membership): a worker parked between
+    // round legs pings the master so silence can be distinguished from
+    // a long compute leg. A ping is an empty worker->master frame that
+    // never changes link state, and it races with every master-driven
+    // transition (one can be in flight when the master sends a
+    // snapshot request or stop), so it is a self-loop in EVERY live
+    // post-hello state. A ping during the handshake is still a
+    // violation — liveness starts once the link exists.
+    (
+        State::RoundLoop,
+        Dir::ToMaster,
+        wire::TAG_HEARTBEAT,
+        State::RoundLoop,
+    ),
+    (
+        State::InFlight,
+        Dir::ToMaster,
+        wire::TAG_HEARTBEAT,
+        State::InFlight,
+    ),
+    (
+        State::SnapshotQuiesce,
+        Dir::ToMaster,
+        wire::TAG_HEARTBEAT,
+        State::SnapshotQuiesce,
+    ),
+    (
+        State::Restore,
+        Dir::ToMaster,
+        wire::TAG_HEARTBEAT,
+        State::Restore,
+    ),
+    (
+        State::Draining,
+        Dir::ToMaster,
+        wire::TAG_HEARTBEAT,
+        State::Draining,
+    ),
 ];
 
 impl State {
@@ -246,6 +284,7 @@ pub const fn tag_name(tag: u8) -> &'static str {
         wire::TAG_STATE_CHUNK => "TAG_STATE_CHUNK",
         wire::TAG_CODED_BCAST => "TAG_CODED_BCAST",
         wire::TAG_CODED_REPORT => "TAG_CODED_REPORT",
+        wire::TAG_HEARTBEAT => "TAG_HEARTBEAT",
         _ => "TAG_UNKNOWN",
     }
 }
@@ -542,6 +581,44 @@ mod tests {
             assert_eq!(legal(s, d, t), None, "{} {}", s.name(),
                        tag_name(t));
         }
+    }
+
+    /// Heartbeats are state-invariant self-loops in every live
+    /// post-hello state — a ping may race any master-driven transition
+    /// without perturbing the link — but a ping during the handshake
+    /// is a violation.
+    #[test]
+    fn heartbeat_self_loops_in_every_live_state_but_not_hello() {
+        for &s in STATES {
+            let next = legal(s, Dir::ToMaster, wire::TAG_HEARTBEAT);
+            match s {
+                State::Hello | State::Closed => {
+                    assert_eq!(next, None, "{}", s.name());
+                }
+                live => assert_eq!(next, Some(live), "{}", live.name()),
+            }
+        }
+        // a heartbeat never travels master->worker
+        for &s in STATES {
+            assert_eq!(
+                legal(s, Dir::ToWorker, wire::TAG_HEARTBEAT),
+                None,
+                "{}",
+                s.name()
+            );
+        }
+        // and a full walk with pings interleaved stays clean
+        let mut m = ProtocolMonitor::established("master", 0);
+        m.observe(Dir::ToMaster, wire::TAG_HEARTBEAT).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_ROUND).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_HEARTBEAT).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_REPORT).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_SNAPSHOT_REQ).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_HEARTBEAT).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_SNAPSHOT).unwrap();
+        m.observe(Dir::ToWorker, wire::TAG_STOP).unwrap();
+        m.observe(Dir::ToMaster, wire::TAG_HEARTBEAT).unwrap();
+        assert_eq!(m.state(), State::Draining);
     }
 
     /// The typed error must survive an anyhow boundary: that is what

@@ -24,7 +24,7 @@
 //! the in-process convention so comm/compute ratios are comparable.
 
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -72,6 +72,32 @@ pub struct TcpTransport {
     codec: WireCodec,
     /// Per-connection dispatch-leg encoders (delta bases + scratch).
     bcast_enc: Vec<codec::BcastEncoder>,
+    /// Master-bound event sender, retained so admission can spawn
+    /// readers for replacement connections.
+    event_tx: Sender<(u64, FabricEvent)>,
+    /// The listener, retained past the initial accepts when elastic
+    /// membership is on (`evict_after > 0`) so [`Transport::try_admit`]
+    /// can keep admitting late joiners. `None` = classic fail-stop.
+    listener: Option<TcpListener>,
+    /// Per-slot liveness: `false` once the fabric evicted the slot (or
+    /// its link died), until a replacement is admitted.
+    live: Vec<bool>,
+    /// Per-slot connection generation. Bumped every time a slot's link
+    /// is torn down or re-established; events stamped with a stale
+    /// generation (a dead connection's reader racing its own eviction)
+    /// are dropped instead of reaching the admitted replacement.
+    slot_gen: Vec<u64>,
+    /// Milliseconds since `epoch` each replica was last heard from —
+    /// stamped by its reader on *every* inbound frame, heartbeat or
+    /// data, and compared against `evict_after` by the event loop.
+    last_heard: Vec<Arc<AtomicU64>>,
+    /// The instant the last-heard clocks count from.
+    epoch: Instant,
+    /// Evict a replica silent this long (zero = fail-stop).
+    evict_after: Duration,
+    /// Replay-config fingerprint a hello must match to be admitted
+    /// (`None` = unchecked; hellos without one always pass).
+    fingerprint: Option<u64>,
 }
 
 /// How long [`TcpTransport::listen`] waits for all `n` workers to
@@ -80,6 +106,43 @@ pub struct TcpTransport {
 /// fleet fails with a clear error instead of blocking the master
 /// forever.
 pub const DEFAULT_ACCEPT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// How long an admission handshake may take end-to-end. Short: the
+/// joiner initiates, so a connected-but-silent peer is a broken one,
+/// and a healthy run must not stall its event loop behind it.
+const ADMIT_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Poll cadence of the elastic event loop: short enough that a silent
+/// replica is evicted promptly once past its deadline, long enough
+/// that the master's barrier wait stays essentially free.
+const EVICT_POLL: Duration = Duration::from_millis(50);
+
+/// Membership options for a listening fabric master: the negotiated
+/// payload codec plus the elastic heartbeat/eviction/admission policy.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpListenOpts {
+    /// Payload codec every worker must hello with (`--wire-codec`).
+    pub codec: WireCodec,
+    /// Evict a replica silent this long. Zero (the default) keeps the
+    /// classic fail-stop fabric: no eviction, no admission, and the
+    /// listener is dropped after the initial accepts.
+    pub evict_after: Duration,
+    /// Replay-config fingerprint a hello must carry to be accepted —
+    /// the same fingerprint checkpoints validate at resume. `None`
+    /// skips the check; a hello without one always passes (older
+    /// workers predate the field).
+    pub fingerprint: Option<u64>,
+}
+
+impl Default for TcpListenOpts {
+    fn default() -> Self {
+        TcpListenOpts {
+            codec: WireCodec::Raw,
+            evict_after: Duration::ZERO,
+            fingerprint: None,
+        }
+    }
+}
 
 impl TcpTransport {
     /// Bind `addr` and block until `n` workers have connected and
@@ -142,20 +205,58 @@ impl TcpTransport {
         timeout: Duration,
         wc: WireCodec,
     ) -> Result<TcpTransport> {
+        Self::accept_workers_with_opts(
+            listener,
+            n,
+            timeout,
+            TcpListenOpts {
+                codec: wc,
+                ..TcpListenOpts::default()
+            },
+        )
+    }
+
+    /// [`TcpTransport::listen_timeout`] under full membership options.
+    pub fn listen_with_opts(
+        addr: &str,
+        n: usize,
+        timeout: Duration,
+        opts: TcpListenOpts,
+    ) -> Result<TcpTransport> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding fabric master on {addr}"))?;
+        Self::accept_workers_with_opts(listener, n, timeout, opts)
+    }
+
+    /// The general accept loop: `n` handshakes before `timeout`, each
+    /// validated against the protocol table, the codec negotiation and
+    /// (when configured) the replay-config fingerprint. With
+    /// `opts.evict_after > 0` the listener is retained so
+    /// [`Transport::try_admit`] can keep admitting late joiners after
+    /// evictions.
+    pub fn accept_workers_with_opts(
+        listener: TcpListener,
+        n: usize,
+        timeout: Duration,
+        opts: TcpListenOpts,
+    ) -> Result<TcpTransport> {
+        let wc = opts.codec;
         anyhow::ensure!(n >= 1, "a TCP fabric needs at least one worker");
         listener
             .set_nonblocking(true)
             .context("setting the fabric listener non-blocking")?;
         let deadline = Instant::now() + timeout;
+        let epoch = Instant::now();
         let meter = Arc::new(CommMeter::new());
         let bucket_shared = Arc::new(AtomicUsize::new(0));
-        let (event_tx, event_rx) = mpsc::channel::<FabricEvent>();
+        let (event_tx, event_rx) = mpsc::channel::<(u64, FabricEvent)>();
         let mut streams = Vec::with_capacity(n);
         let mut snap_rxs = Vec::with_capacity(n);
         let mut readers = Vec::with_capacity(n);
         let mut monitors = Vec::with_capacity(n);
         let mut pool_txs = Vec::with_capacity(n);
         let mut bcast_enc = Vec::with_capacity(n);
+        let mut last_heard = Vec::with_capacity(n);
         for id in 0..n {
             let (mut stream, peer) =
                 accept_deadline(&listener, deadline, id, n)?;
@@ -164,31 +265,43 @@ impl TcpTransport {
                 .context("restoring blocking mode on a worker socket")?;
             stream.set_nodelay(true).ok();
             // the handshake shares the accept deadline: a connected but
-            // silent peer must not stall the remaining accepts forever
+            // silent peer must not stall the remaining accepts forever.
+            // A deadline that fails to arm would silently defeat
+            // `timeout`, so the error propagates instead of being
+            // swallowed
             let remaining = deadline
                 .saturating_duration_since(Instant::now())
                 .max(Duration::from_millis(1));
-            stream.set_read_timeout(Some(remaining)).ok();
-            let monitor = handshake_accept(&mut stream, peer, id, n, wc)?;
+            stream
+                .set_read_timeout(Some(remaining))
+                .context("arming the handshake read deadline")?;
+            let monitor = handshake_accept(&mut stream, peer, id, n, wc,
+                                           opts.fingerprint)?;
             // back to a blocking socket before the reader takes over
-            stream.set_read_timeout(None).ok();
+            stream
+                .set_read_timeout(None)
+                .context("clearing the handshake read deadline")?;
             info!("fabric: worker {id}/{n} connected from {peer}");
             let rd = stream
                 .try_clone()
                 .context("cloning a worker socket for the reader")?;
             let (snap_tx, snap_rx) = mpsc::channel::<WorkerState>();
             let (pool_tx, pool_rx) = mpsc::channel::<Vec<f32>>();
+            let heard = Arc::new(AtomicU64::new(elapsed_ms(epoch)));
             let ev = event_tx.clone();
             let m = meter.clone();
             let bs = bucket_shared.clone();
+            let hb = heard.clone();
             readers.push(std::thread::spawn(move || {
-                reader_loop(rd, id, ev, snap_tx, pool_rx, m, wc, bs)
+                reader_loop(rd, id, 0, ev, snap_tx, pool_rx, m, wc, bs,
+                            hb, epoch)
             }));
             streams.push(stream);
             snap_rxs.push(snap_rx);
             monitors.push(monitor);
             pool_txs.push(pool_tx);
             bcast_enc.push(codec::BcastEncoder::new(wc));
+            last_heard.push(heard);
         }
         Ok(TcpTransport {
             streams,
@@ -202,6 +315,14 @@ impl TcpTransport {
             bucket_shared,
             codec: wc,
             bcast_enc,
+            event_tx,
+            listener: (!opts.evict_after.is_zero()).then_some(listener),
+            live: vec![true; n],
+            slot_gen: vec![0; n],
+            last_heard,
+            epoch,
+            evict_after: opts.evict_after,
+            fingerprint: opts.fingerprint,
         })
     }
 
@@ -216,6 +337,100 @@ impl TcpTransport {
         } else {
             wire::MAX_STATE_CHUNK
         }
+    }
+
+    /// Evict the first live replica silent past `evict_after`, if any:
+    /// tear its link down (retiring the connection generation) and
+    /// synthesize the `Failed` event the fabric turns into an eviction.
+    fn check_eviction(&mut self) -> Option<FabricEvent> {
+        if self.evict_after.is_zero() {
+            return None;
+        }
+        let now = elapsed_ms(self.epoch);
+        let limit = self.evict_after.as_millis() as u64;
+        for r in 0..self.live.len() {
+            if !self.live[r] {
+                continue;
+            }
+            let heard = self.last_heard[r].load(Ordering::Relaxed);
+            let silent = now.saturating_sub(heard);
+            if silent >= limit {
+                self.mark_dead(r);
+                return Some(FabricEvent::Failed(
+                    r,
+                    format!(
+                        "silent for {:.1}s (evict-after {:.1}s)",
+                        silent as f64 / 1e3,
+                        self.evict_after.as_secs_f64()
+                    ),
+                ));
+            }
+        }
+        None
+    }
+
+    /// Handshake a pending joiner connection into evicted `slot`:
+    /// protocol-table validation, codec negotiation and the
+    /// replay-config fingerprint check, then a fresh reader under the
+    /// slot's new connection generation.
+    fn admit(
+        &mut self,
+        slot: usize,
+        stream: &mut TcpStream,
+        peer: std::net::SocketAddr,
+    ) -> Result<()> {
+        stream
+            .set_nonblocking(false)
+            .context("restoring blocking mode on a joiner socket")?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(ADMIT_HANDSHAKE_TIMEOUT))
+            .context("arming the admission handshake deadline")?;
+        let n = self.streams.len();
+        let monitor = handshake_accept(stream, peer, slot, n, self.codec,
+                                       self.fingerprint)?;
+        stream
+            .set_read_timeout(None)
+            .context("clearing the admission handshake deadline")?;
+        // retire whatever generation the dead link was on before the
+        // new reader starts stamping events
+        self.slot_gen[slot] += 1;
+        self.last_heard[slot]
+            .store(elapsed_ms(self.epoch), Ordering::Relaxed);
+        self.monitors[slot] = monitor;
+        // the dispatch-leg encoder must not diff against state the old
+        // connection saw
+        self.bcast_enc[slot] = codec::BcastEncoder::new(self.codec);
+        self.streams[slot] = stream
+            .try_clone()
+            .context("retaining the joiner socket")?;
+        self.spawn_reader(slot)?;
+        self.live[slot] = true;
+        Ok(())
+    }
+
+    /// Spawn the reader thread for `slot`'s (re-)connected stream
+    /// under the slot's current connection generation.
+    fn spawn_reader(&mut self, slot: usize) -> Result<()> {
+        let rd = self.streams[slot]
+            .try_clone()
+            .context("cloning a worker socket for the reader")?;
+        let (snap_tx, snap_rx) = mpsc::channel::<WorkerState>();
+        let (pool_tx, pool_rx) = mpsc::channel::<Vec<f32>>();
+        let ev = self.event_tx.clone();
+        let m = self.meter.clone();
+        let bs = self.bucket_shared.clone();
+        let hb = self.last_heard[slot].clone();
+        let gen = self.slot_gen[slot];
+        let epoch = self.epoch;
+        let wc = self.codec;
+        self.readers.push(std::thread::spawn(move || {
+            reader_loop(rd, slot, gen, ev, snap_tx, pool_rx, m, wc, bs,
+                        hb, epoch)
+        }));
+        self.snap_rx[slot] = snap_rx;
+        self.pool_tx[slot] = pool_tx;
+        Ok(())
     }
 
     /// Encode-and-write leg of [`Transport::send_cmd`]: each arm
@@ -432,13 +647,32 @@ pub fn ephemeral_listener() -> Result<(TcpListener, String)> {
     Ok((listener, addr))
 }
 
+/// Milliseconds elapsed since the transport epoch — the unit the
+/// last-heard clocks count in.
+fn elapsed_ms(epoch: Instant) -> u64 {
+    epoch.elapsed().as_millis() as u64
+}
+
+/// The replica slot an event belongs to. Readers pin every stamp to
+/// their own connection, so this is trustworthy by the time an event
+/// reaches the master's loop.
+fn event_replica(ev: &FabricEvent) -> usize {
+    match ev {
+        FabricEvent::Report(rep) => rep.replica,
+        FabricEvent::BucketReport(b) => b.replica,
+        FabricEvent::Exited(id) | FabricEvent::Failed(id, _) => *id,
+    }
+}
+
 /// Hello handshake on a freshly accepted connection: the worker's
 /// opening frame is validated against the protocol table — a round (or
 /// anything else) before hello fails `listen` with a typed
-/// [`crate::coordinator::transport::ProtocolViolation`] — and its
-/// negotiated codec must equal this fabric's, or the connection is
-/// refused before any payload flows. Then the peer is assigned slot
-/// `id` and the link's monitor comes back parked in the round loop.
+/// [`crate::coordinator::transport::ProtocolViolation`] — its
+/// negotiated codec must equal this fabric's, and its replay-config
+/// fingerprint (when both sides carry one) must match, or the
+/// connection is refused before any payload flows. Then the peer is
+/// assigned slot `id` and the link's monitor comes back parked in the
+/// round loop.
 // lint: proto(Hello)
 fn handshake_accept(
     stream: &mut TcpStream,
@@ -446,6 +680,7 @@ fn handshake_accept(
     id: usize,
     n: usize,
     wc: WireCodec,
+    fingerprint: Option<u64>,
 ) -> Result<ProtocolMonitor> {
     let ours = codec::to_wire(wc);
     let mut monitor = ProtocolMonitor::handshaking("master");
@@ -457,10 +692,15 @@ fn handshake_accept(
     monitor
         .observe(Dir::ToMaster, hello.tag)
         .with_context(|| format!("handshake with {peer}"))?;
-    let theirs = wire::decode_hello(&hello.payload)
-        .with_context(|| format!("handshake with {peer}"))?;
+    let (theirs, their_fp) =
+        wire::decode_hello_fingerprint(&hello.payload)
+            .with_context(|| format!("handshake with {peer}"))?;
     wire::check_codec_match(ours, theirs)
         .with_context(|| format!("handshake with {peer}"))?;
+    if let Some(fp) = fingerprint {
+        wire::check_fingerprint_match(fp, their_fp)
+            .with_context(|| format!("handshake with {peer}"))?;
+    }
     monitor.observe(Dir::ToWorker, wire::TAG_HELLO_ACK)?;
     wire::write_frame(
         stream,
@@ -509,12 +749,15 @@ fn accept_deadline(
 fn reader_loop(
     mut stream: TcpStream,
     id: usize,
-    event_tx: Sender<FabricEvent>,
+    gen: u64,
+    event_tx: Sender<(u64, FabricEvent)>,
     snap_tx: Sender<WorkerState>,
     pool_rx: Receiver<Vec<f32>>,
     meter: Arc<CommMeter>,
     wc: WireCodec,
     master_buckets: Arc<AtomicUsize>,
+    heard: Arc<AtomicU64>,
+    epoch: Instant,
 ) {
     let mut asm = wire::StateAssembler::default();
     let mut dec = codec::ReportDecoder::new(wc);
@@ -531,10 +774,14 @@ fn reader_loop(
             Ok(None) => {
                 // clean close: the wire analog of a worker thread body
                 // returning
-                event_tx.send(FabricEvent::Exited(id)).ok();
+                event_tx.send((gen, FabricEvent::Exited(id))).ok();
                 return;
             }
             Ok(Some(frame)) => {
+                // every inbound frame is proof of life — data frames
+                // count as much as a dedicated ping, so a busy link
+                // never needs heartbeats to stay admitted
+                heard.store(elapsed_ms(epoch), Ordering::Relaxed);
                 let res = match frame.tag {
                     wire::TAG_REPORT => {
                         wire::decode_report(&frame.payload).and_then(
@@ -565,7 +812,10 @@ fn reader_loop(
                                     frame.payload.len(),
                                 ));
                                 event_tx
-                                    .send(FabricEvent::Report(rep))
+                                    .send((
+                                        gen,
+                                        FabricEvent::Report(rep),
+                                    ))
                                     .ok();
                                 Ok(())
                             },
@@ -593,6 +843,7 @@ fn reader_loop(
                             );
                             deliver_bucket(
                                 &event_tx,
+                                gen,
                                 &mut held,
                                 master_buckets.load(Ordering::Relaxed)
                                     > 0,
@@ -619,6 +870,7 @@ fn reader_loop(
                                 ));
                                 deliver_bucket(
                                     &event_tx,
+                                    gen,
                                     &mut held,
                                     master_buckets
                                         .load(Ordering::Relaxed)
@@ -635,13 +887,20 @@ fn reader_loop(
                             snap_tx.send(st).ok();
                         })
                     }
+                    // liveness ping: the stamp above is its whole
+                    // payload — nothing to surface, nothing to meter
+                    // (control-plane, like snapshot/restore traffic)
+                    wire::TAG_HEARTBEAT => Ok(()),
                     other => Err(anyhow!(
                         "unexpected frame tag {other} from worker"
                     )),
                 };
                 if let Err(e) = res {
                     event_tx
-                        .send(FabricEvent::Failed(id, format!("{e:#}")))
+                        .send((
+                            gen,
+                            FabricEvent::Failed(id, format!("{e:#}")),
+                        ))
                         .ok();
                     return;
                 }
@@ -650,7 +909,10 @@ fn reader_loop(
                 // truncated / garbled frame: surface the decode message
                 // instead of panicking or hanging
                 event_tx
-                    .send(FabricEvent::Failed(id, format!("{e:#}")))
+                    .send((
+                        gen,
+                        FabricEvent::Failed(id, format!("{e:#}")),
+                    ))
                     .ok();
                 return;
             }
@@ -664,7 +926,8 @@ fn reader_loop(
 /// full-extent bucket (the worker mirrors the master's single-frame
 /// dispatch), so anything else is a corrupt or hostile peer.
 fn deliver_bucket(
-    event_tx: &Sender<FabricEvent>,
+    event_tx: &Sender<(u64, FabricEvent)>,
+    gen: u64,
     held: &mut Option<(u64, Vec<f32>)>,
     bucketed: bool,
     replica: usize,
@@ -676,14 +939,17 @@ fn deliver_bucket(
     })?;
     if bucketed {
         event_tx
-            .send(FabricEvent::BucketReport(BucketReport {
-                replica,
-                round: m.round,
-                bucket: m.bucket,
-                n_buckets: m.n_buckets,
-                offset,
-                data: BucketPayload::Owned(buf),
-            }))
+            .send((
+                gen,
+                FabricEvent::BucketReport(BucketReport {
+                    replica,
+                    round: m.round,
+                    bucket: m.bucket,
+                    n_buckets: m.n_buckets,
+                    offset,
+                    data: BucketPayload::Owned(buf),
+                }),
+            ))
             .ok();
         return Ok(());
     }
@@ -750,10 +1016,41 @@ impl Transport for TcpTransport {
 
     // lint: proto(InFlight|Draining)
     fn recv_event(&mut self) -> Result<FabricEvent> {
-        let ev = self
-            .event_rx
-            .recv()
-            .map_err(|_| anyhow!("all fabric readers exited"))?;
+        let ev = loop {
+            // eviction deadlines are checked on every entry, not just
+            // on idle: a fabric busy with other replicas' events must
+            // still notice the silent one
+            if let Some(ev) = self.check_eviction() {
+                break ev;
+            }
+            if self.evict_after.is_zero() {
+                let (gen, ev) = self
+                    .event_rx
+                    .recv()
+                    .map_err(|_| anyhow!("all fabric readers exited"))?;
+                if self.slot_gen.get(event_replica(&ev)) == Some(&gen) {
+                    break ev;
+                }
+            } else {
+                match self.event_rx.recv_timeout(EVICT_POLL) {
+                    Ok((gen, ev)) => {
+                        // an event stamped with a generation the fabric
+                        // already retired — the dead link's reader
+                        // racing its own eviction — must not reach the
+                        // admitted replacement's slot
+                        if self.slot_gen.get(event_replica(&ev))
+                            == Some(&gen)
+                        {
+                            break ev;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        bail!("all fabric readers exited")
+                    }
+                }
+            }
+        };
         match &ev {
             FabricEvent::Report(rep) => {
                 // the reader already pinned rep.replica to its
@@ -774,6 +1071,53 @@ impl Transport for TcpTransport {
             }
         }
         Ok(ev)
+    }
+
+    /// Accept and handshake one pending late joiner into the lowest
+    /// evicted slot. Non-blocking: `Ok(None)` when no slot is free or
+    /// no connection is pending. A joiner that fails the handshake —
+    /// wrong codec, mismatched replay fingerprint, garbage — is
+    /// refused and dropped without disturbing the run, exactly as a
+    /// mismatched checkpoint is refused at resume.
+    fn try_admit(&mut self) -> Result<Option<usize>> {
+        let Some(slot) = self.live.iter().position(|l| !l) else {
+            return Ok(None);
+        };
+        let Some(listener) = self.listener.as_ref() else {
+            return Ok(None);
+        };
+        let (mut stream, peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                return Ok(None)
+            }
+            Err(e) => {
+                return Err(e).context("accepting a late-join worker")
+            }
+        };
+        if let Err(e) = self.admit(slot, &mut stream, peer) {
+            info!(
+                "fabric: refused joiner from {peer} for slot {slot}: \
+                 {e:#}"
+            );
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            return Ok(None);
+        }
+        info!("fabric: admitted worker from {peer} into slot {slot}");
+        Ok(Some(slot))
+    }
+
+    /// Tear down `replica`'s link: shut the socket (the old reader
+    /// drains out on EOF) and retire its connection generation so
+    /// events still in flight from the dead connection are dropped.
+    fn mark_dead(&mut self, replica: usize) {
+        if let Some(s) = self.streams.get(replica) {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        if replica < self.live.len() {
+            self.live[replica] = false;
+            self.slot_gen[replica] += 1;
+        }
     }
 
     fn set_bucket_elems(&mut self, elems: usize) {
@@ -815,6 +1159,60 @@ impl Transport for TcpTransport {
         Ok(())
     }
 }
+
+/// Connection options for a worker process: the negotiated payload
+/// codec plus the liveness legs of elastic membership.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpConnectOpts {
+    /// Payload codec to hello with (`--wire-codec`).
+    pub codec: WireCodec,
+    /// Replay-config fingerprint to carry in the hello so the master
+    /// can refuse a mismatched joiner at connect. `None` sends the
+    /// pre-fingerprint hello.
+    pub fingerprint: Option<u64>,
+    /// Ping the master with [`wire::TAG_HEARTBEAT`] after this much
+    /// command-leg idleness (zero = never ping, blocking reads — the
+    /// pre-elastic behavior).
+    pub heartbeat_every: Duration,
+    /// Fail with a typed [`MasterSilence`] error once nothing has
+    /// arrived from the master for this long (zero = wait forever).
+    pub master_silence: Duration,
+}
+
+impl Default for TcpConnectOpts {
+    fn default() -> Self {
+        TcpConnectOpts {
+            codec: WireCodec::Raw,
+            fingerprint: None,
+            heartbeat_every: Duration::ZERO,
+            master_silence: Duration::ZERO,
+        }
+    }
+}
+
+/// Typed error for a worker whose master has gone silent past
+/// `--master-silence`: the wire analog of a dead command channel, so
+/// `serve_worker` fails with a diagnosis instead of hanging forever on
+/// a wedged (but not closed) master socket.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MasterSilence {
+    /// Whole seconds the link had been silent when the deadline fired.
+    pub silent_secs: u64,
+    /// The configured deadline, in whole seconds.
+    pub limit_secs: u64,
+}
+
+impl std::fmt::Display for MasterSilence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "master silent for {}s (deadline {}s)",
+            self.silent_secs, self.limit_secs
+        )
+    }
+}
+
+impl std::error::Error for MasterSilence {}
 
 /// Worker-process side of the wire: the connected, handshaken socket a
 /// remote [`ReplicaEndpoint`] pumps frames through.
@@ -862,6 +1260,19 @@ pub struct TcpWorkerLink {
     /// replica state — it rides snapshots under
     /// [`codec::EF_RESIDUAL_VEC`] and is reinstalled at restore.
     report_enc: codec::ReportEncoder,
+    /// Ping cadence (zero = never ping).
+    heartbeat_every: Duration,
+    /// Idle-tick granularity the socket read timeout is armed at:
+    /// the heartbeat cadence when pinging, else the silence deadline
+    /// itself. Zero = blocking reads (the pre-elastic behavior).
+    idle_every: Duration,
+    /// Declare the master dead after this much inbound silence (zero =
+    /// wait forever).
+    master_silence: Duration,
+    /// When the last frame arrived from the master.
+    last_frame: Instant,
+    /// When the last heartbeat ping left.
+    last_ping: Instant,
 }
 
 impl TcpWorkerLink {
@@ -885,6 +1296,27 @@ impl TcpWorkerLink {
         timeout: Duration,
         wc: WireCodec,
     ) -> Result<TcpWorkerLink> {
+        Self::connect_with_opts(
+            addr,
+            expect_workers,
+            timeout,
+            TcpConnectOpts {
+                codec: wc,
+                ..TcpConnectOpts::default()
+            },
+        )
+    }
+
+    /// [`TcpWorkerLink::connect`] under full connection options:
+    /// codec negotiation, the replay-config fingerprint for admission
+    /// checks, and the heartbeat / master-silence liveness legs.
+    pub fn connect_with_opts(
+        addr: &str,
+        expect_workers: usize,
+        timeout: Duration,
+        opts: TcpConnectOpts,
+    ) -> Result<TcpWorkerLink> {
+        let wc = opts.codec;
         let ours = codec::to_wire(wc);
         let deadline = Instant::now() + timeout;
         let mut stream = loop {
@@ -905,8 +1337,13 @@ impl TcpWorkerLink {
         {
             let mut monitor = ProtocolMonitor::handshaking("worker");
             monitor.observe(Dir::ToMaster, wire::TAG_HELLO)?;
-            wire::write_frame(&mut stream, wire::TAG_HELLO,
-                              &wire::encode_hello_coded(ours.0, ours.1))
+            let hello = match opts.fingerprint {
+                Some(fp) => wire::encode_hello_fingerprint(
+                    ours.0, ours.1, fp,
+                ),
+                None => wire::encode_hello_coded(ours.0, ours.1),
+            };
+            wire::write_frame(&mut stream, wire::TAG_HELLO, &hello)
                 .context("sending hello")?;
             let ack = wire::read_frame(&mut stream)
                 .context("handshake")?
@@ -928,6 +1365,19 @@ impl TcpWorkerLink {
                 );
             }
             monitor.set_replica(replica);
+            // the idle tick is what turns a wedged master into a typed
+            // error: without it (both knobs zero) reads block forever,
+            // exactly as before elastic membership existed
+            let idle_every = if !opts.heartbeat_every.is_zero() {
+                opts.heartbeat_every
+            } else {
+                opts.master_silence
+            };
+            if !idle_every.is_zero() {
+                stream
+                    .set_read_timeout(Some(idle_every))
+                    .context("arming the command-leg read deadline")?;
+            }
             Ok(TcpWorkerLink {
                 stream,
                 replica,
@@ -944,6 +1394,11 @@ impl TcpWorkerLink {
                 codec: wc,
                 bcast_dec: codec::BcastDecoder::new(wc),
                 report_enc: codec::ReportEncoder::new(wc),
+                heartbeat_every: opts.heartbeat_every,
+                idle_every,
+                master_silence: opts.master_silence,
+                last_frame: Instant::now(),
+                last_ping: Instant::now(),
             })
         }
     }
@@ -967,9 +1422,7 @@ impl TcpWorkerLink {
     // lint: pooled
     pub(crate) fn recv_cmd(&mut self) -> Result<Option<WorkerCmd>> {
         loop {
-            let Some(frame) = wire::read_frame(&mut self.stream)
-                .context("receiving command from master")?
-            else {
+            let Some(frame) = self.next_frame()? else {
                 self.monitor.close();
                 return Ok(None);
             };
@@ -1041,6 +1494,54 @@ impl TcpWorkerLink {
                 other => bail!("unexpected frame tag {other} from master"),
             }
         }
+    }
+
+    /// One inbound frame, pumping idle ticks (heartbeat pings and the
+    /// master-silence deadline) each time the read times out with the
+    /// wire between frames. `Ok(None)` is EOF — the master hung up.
+    fn next_frame(&mut self) -> Result<Option<wire::Frame>> {
+        if self.idle_every.is_zero() {
+            return wire::read_frame(&mut self.stream)
+                .context("receiving command from master");
+        }
+        loop {
+            match wire::read_frame_or_idle(&mut self.stream)
+                .context("receiving command from master")?
+            {
+                wire::IdleFrame::Frame(f) => {
+                    self.last_frame = Instant::now();
+                    return Ok(Some(f));
+                }
+                wire::IdleFrame::Eof => return Ok(None),
+                wire::IdleFrame::Idle => self.on_idle()?,
+            }
+        }
+    }
+
+    /// One idle command-leg tick: fail if the master has been silent
+    /// past the deadline, otherwise keep this worker's own liveness
+    /// visible to the master's eviction clock with a heartbeat ping.
+    // lint: proto(RoundLoop|Restore|InFlight)
+    fn on_idle(&mut self) -> Result<()> {
+        if !self.master_silence.is_zero()
+            && self.last_frame.elapsed() >= self.master_silence
+        {
+            self.monitor.close();
+            return Err(MasterSilence {
+                silent_secs: self.last_frame.elapsed().as_secs(),
+                limit_secs: self.master_silence.as_secs(),
+            }
+            .into());
+        }
+        if !self.heartbeat_every.is_zero()
+            && self.last_ping.elapsed() >= self.heartbeat_every
+        {
+            self.monitor.observe(Dir::ToMaster, wire::TAG_HEARTBEAT)?;
+            wire::write_frame(&mut self.stream, wire::TAG_HEARTBEAT, &[])
+                .context("sending heartbeat to master")?;
+            self.last_ping = Instant::now();
+        }
+        Ok(())
     }
 
     /// Fold one dispatch bucket into the recycled reference buffer;

@@ -111,6 +111,13 @@ pub const TAG_CODED_BCAST: u8 = 12;
 /// `--wire-codec` form of `TAG_BUCKET_REPORT`. Like its raw sibling it
 /// never closes the round: the stats-only `TAG_REPORT` does.
 pub const TAG_CODED_REPORT: u8 = 13;
+/// Worker -> master: liveness ping, empty payload. Sent while the
+/// worker is parked between round legs (any frame proves liveness;
+/// the heartbeat only guarantees a floor frequency), so the master can
+/// distinguish "computing a long leg" from "dead" and evict a replica
+/// silent past `--evict-after`. Legal as a self-loop in every live
+/// post-hello state — a ping races with any master-driven transition.
+pub const TAG_HEARTBEAT: u8 = 14;
 
 // On-wire codec ids carried by the v3 hello/ack negotiation and every
 // coded frame header. The id plus one f32-bits parameter (the top-k
@@ -173,6 +180,55 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
         }
         got += n;
     }
+    Ok(Some(finish_frame(r, len_b)?))
+}
+
+/// One [`read_frame_or_idle`] outcome: a frame, a timeout at a frame
+/// boundary (an idle tick — the reader's chance to send a heartbeat or
+/// check a liveness deadline), or a clean EOF.
+pub enum IdleFrame {
+    Frame(Frame),
+    Idle,
+    Eof,
+}
+
+/// [`read_frame`] for a socket with a read timeout: a timeout *before
+/// any header byte* is [`IdleFrame::Idle`], not an error — the peer is
+/// merely quiet. A timeout once the length header has started is still
+/// an error: bytes of a frame exist, so the peer wedged mid-message.
+pub fn read_frame_or_idle<R: Read>(r: &mut R) -> Result<IdleFrame> {
+    let mut len_b = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_b[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(IdleFrame::Eof);
+                }
+                bail!(
+                    "connection closed mid-frame (partial length header)"
+                );
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if got == 0 {
+                    return Ok(IdleFrame::Idle);
+                }
+                return Err(e).context("read timed out mid-frame header");
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading frame length"),
+        }
+    }
+    Ok(IdleFrame::Frame(finish_frame(r, len_b)?))
+}
+
+/// Shared tail of the two frame readers: validate the length header,
+/// then read the tag byte and payload.
+fn finish_frame<R: Read>(r: &mut R, len_b: [u8; 4]) -> Result<Frame> {
     let len = u32::from_le_bytes(len_b);
     if len == 0 {
         bail!("corrupt frame: zero length");
@@ -184,10 +240,10 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
     r.read_exact(&mut tag).context("reading frame tag")?;
     let mut payload = vec![0u8; len as usize - 1];
     r.read_exact(&mut payload).context("reading frame payload")?;
-    Ok(Some(Frame {
+    Ok(Frame {
         tag: tag[0],
         payload,
-    }))
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -232,6 +288,53 @@ pub fn decode_hello(payload: &[u8]) -> Result<(u8, u32)> {
     c.read_exact(&mut codec).context("hello codec id")?;
     let param = read_u32(&mut c).context("hello codec param")?;
     Ok((codec[0], param))
+}
+
+/// Hello carrying the run's replay-config fingerprint
+/// ([`crate::config::RunConfig::replay_fingerprint`]) as eight
+/// trailing bytes. [`decode_hello`] ignores trailing bytes, so this
+/// extension is backward-compatible: a master that does not check
+/// fingerprints accepts it unchanged, and [`decode_hello_fingerprint`]
+/// reports an absent fingerprint as `None` rather than erroring —
+/// the test helpers' plain [`encode_hello`] stays valid.
+pub fn encode_hello_fingerprint(codec: u8, codec_param: u32,
+                                fingerprint: u64) -> Vec<u8> {
+    let mut out = encode_hello_coded(codec, codec_param);
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out
+}
+
+/// -> the negotiated `(codec id, codec param)` plus the peer's
+/// replay-config fingerprint, if its hello carried one.
+pub fn decode_hello_fingerprint(payload: &[u8])
+                                -> Result<((u8, u32), Option<u64>)> {
+    let codec = decode_hello(payload)?;
+    let fp = payload
+        .get(13..21)
+        .map(|b| u64::from_le_bytes(b.try_into().expect("8-byte slice")));
+    Ok((codec, fp))
+}
+
+/// Typed refusal when a connecting worker declares a replay-config
+/// fingerprint different from the master's run — the connect-time
+/// analog of the checkpoint resume check: a mismatched worker would
+/// silently compute a wrong trajectory. A worker that declares no
+/// fingerprint (older test helpers, raw handshakes) is tolerated; the
+/// world-size and codec cross-checks still apply to it.
+pub fn check_fingerprint_match(ours: u64, theirs: Option<u64>)
+                               -> Result<()> {
+    if let Some(theirs) = theirs {
+        if theirs != ours {
+            bail!(
+                "replay-config fingerprint mismatch: worker runs \
+                 {theirs:#018x}, master runs {ours:#018x} — the two \
+                 processes were launched with different replay-relevant \
+                 config (data/schedule/hyperparameters/dispatch mode); \
+                 admitting it would silently diverge the run"
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Raw-codec hello-ack ([`encode_hello_ack_coded`] is the general form).
@@ -996,6 +1099,84 @@ mod tests {
         v2[4] = 3; // right version, short payload
         let err = decode_hello(&v2).unwrap_err();
         assert!(format!("{err:#}").contains("codec"), "{err:#}");
+    }
+
+    /// The fingerprint extension rides the hello's trailing bytes:
+    /// carried fingerprints round-trip, plain hellos decode to `None`
+    /// (and still pass the plain decoder), and the match check refuses
+    /// only a *declared* mismatch.
+    #[test]
+    fn hello_fingerprint_is_backward_compatible() {
+        let fp = 0xdead_beef_0bad_f00du64;
+        let hello = encode_hello_fingerprint(CODEC_RAW, 0, fp);
+        // a fingerprint-blind master still decodes the codec fields
+        assert_eq!(decode_hello(&hello).unwrap(), (CODEC_RAW, 0));
+        let (codec, got) = decode_hello_fingerprint(&hello).unwrap();
+        assert_eq!(codec, (CODEC_RAW, 0));
+        assert_eq!(got, Some(fp));
+        // a plain hello carries no fingerprint and is tolerated
+        let (_, none) = decode_hello_fingerprint(&encode_hello()).unwrap();
+        assert_eq!(none, None);
+        check_fingerprint_match(fp, None).unwrap();
+        check_fingerprint_match(fp, Some(fp)).unwrap();
+        let err = check_fingerprint_match(fp, Some(fp ^ 1))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        assert!(err.contains("replay-relevant config"), "{err}");
+    }
+
+    /// A reader that times out at a frame boundary is *idle*, not
+    /// broken; a timeout once header bytes exist is an error; frames
+    /// and clean EOF classify exactly as `read_frame` would.
+    #[test]
+    fn read_frame_or_idle_classifies_timeouts() {
+        use std::io::{Error, ErrorKind};
+
+        /// Scripted reader: each entry is either bytes or a timeout.
+        /// Byte entries are served at most `buf.len()` at a time, the
+        /// remainder pushed back — a socket never overruns the caller.
+        struct Script(Vec<Option<Vec<u8>>>);
+        impl Read for Script {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                match self.0.pop() {
+                    Some(Some(mut bytes)) => {
+                        let n = bytes.len().min(buf.len());
+                        buf[..n].copy_from_slice(&bytes[..n]);
+                        if n < bytes.len() {
+                            bytes.drain(..n);
+                            self.0.push(Some(bytes));
+                        }
+                        Ok(n)
+                    }
+                    Some(None) => {
+                        Err(Error::from(ErrorKind::WouldBlock))
+                    }
+                    None => Ok(0), // EOF
+                }
+            }
+        }
+
+        // timeout before any byte -> Idle, then a full frame, then EOF
+        let mut pipe = Vec::new();
+        write_frame(&mut pipe, TAG_HEARTBEAT, &[]).unwrap();
+        let mut r = Script(vec![Some(pipe.clone()), None]);
+        assert!(matches!(read_frame_or_idle(&mut r).unwrap(),
+                         IdleFrame::Idle));
+        match read_frame_or_idle(&mut r).unwrap() {
+            IdleFrame::Frame(f) => {
+                assert_eq!((f.tag, f.payload.len()), (TAG_HEARTBEAT, 0));
+            }
+            _ => panic!("expected a frame"),
+        }
+        assert!(matches!(read_frame_or_idle(&mut r).unwrap(),
+                         IdleFrame::Eof));
+
+        // timeout after a partial length header -> typed error
+        let mut r = Script(vec![None, Some(pipe[..2].to_vec())]);
+        let err =
+            format!("{:#}", read_frame_or_idle(&mut r).unwrap_err());
+        assert!(err.contains("mid-frame"), "{err}");
     }
 
     /// Round frames preserve every f32 bit of the reference, including

@@ -100,6 +100,21 @@ fn run() -> Result<()> {
             if let Some(addr) = flag("listen") {
                 cfg.listen = Some(addr.to_string());
             }
+            if let Some(s) = flag("heartbeat-every") {
+                cfg.heartbeat_secs = s.parse().context(
+                    "--heartbeat-every needs seconds (0 = no pings)",
+                )?;
+            }
+            if let Some(s) = flag("evict-after") {
+                cfg.evict_after_secs = s.parse().context(
+                    "--evict-after needs seconds (0 = fail-stop)",
+                )?;
+            }
+            if let Some(s) = flag("master-silence") {
+                cfg.master_silence_secs = s.parse().context(
+                    "--master-silence needs seconds (0 = wait forever)",
+                )?;
+            }
             if let Some(path) = flag("resume") {
                 cfg.resume_from = Some(path.to_string());
             }
@@ -244,6 +259,19 @@ DISTRIBUTED (multi-process, TCP):
                              (both). Excluded from the replay
                              fingerprint; raw and delta replay
                              bit-identically
+  --evict-after S            master: evict a replica silent for S
+                             seconds instead of fail-stopping the run —
+                             its shard is parked, barriers shrink to the
+                             live members, and the listener keeps
+                             admitting fingerprint-matched late joiners
+                             mid-run (default 0 = classic fail-stop)
+  --heartbeat-every S        worker: ping the master after S seconds of
+                             idleness between round legs so long legs
+                             don't read as death (default 2; must be
+                             shorter than --evict-after; 0 = no pings)
+  --master-silence S         worker: fail with a typed diagnosis once
+                             the master has been silent S seconds
+                             (default 0 = wait forever)
 
 CHECKPOINT/RESUME:
   --set checkpoint_every=N   write a full-state checkpoint every N

@@ -16,13 +16,16 @@
 use std::time::Duration;
 
 use parle::config::{Algo, RunConfig, TransportCfg, WireCodec};
-use parle::coordinator::comm::{ReduceFabric, ReplicaEndpoint, RoundCmd,
-                               RoundConsts, RoundMsg, RoundReport,
-                               WorkerCmd, WorkerState};
+use parle::coordinator::comm::{FabricPulse, ReduceFabric,
+                               ReplicaEndpoint, RoundCmd, RoundConsts,
+                               RoundMsg, RoundReport, WorkerCmd,
+                               WorkerState};
 use parle::coordinator::transport::protocol::State;
 use parle::coordinator::transport::{codec, ephemeral_listener, wire,
-                                    ProtocolViolation, TcpTransport,
-                                    TcpWorkerLink, Transport};
+                                    MasterSilence, ProtocolViolation,
+                                    TcpConnectOpts, TcpListenOpts,
+                                    TcpTransport, TcpWorkerLink,
+                                    Transport};
 use parle::coordinator::{serve_worker_as, train, train_hierarchical};
 use parle::opt::LrSchedule;
 
@@ -1097,6 +1100,541 @@ fn tcp_codec_ef_residual_rides_snapshot_and_restore() {
 }
 
 // ---------------------------------------------------------------------------
+// elastic membership: heartbeats, eviction, late-join admission
+// ---------------------------------------------------------------------------
+
+/// An echo worker over [`TcpWorkerLink::connect_with_opts`] — the
+/// elastic tests need pinging workers (`heartbeat_every`) and
+/// fingerprinted hellos that `spawn_echo_workers` can't provide.
+fn spawn_echo_worker_with(
+    addr: &str,
+    n: usize,
+    opts: TcpConnectOpts,
+) -> std::thread::JoinHandle<parle::Result<()>> {
+    let addr = addr.to_string();
+    std::thread::spawn(move || {
+        let link = TcpWorkerLink::connect_with_opts(
+            &addr,
+            n,
+            Duration::from_secs(10),
+            opts,
+        )?;
+        let ep = ReplicaEndpoint::remote(link);
+        while let Some(msg) = ep.recv() {
+            let RoundMsg {
+                round,
+                xref,
+                mut slab,
+                ..
+            } = msg;
+            slab.copy_from_slice(&xref);
+            ep.report(RoundReport {
+                replica: ep.id(),
+                round,
+                params: slab,
+                train_loss: 0.25,
+                train_err: 0.125,
+                step_s: 0.0,
+            });
+        }
+        Ok(())
+    })
+}
+
+/// A stateful worker (running accumulator, snapshot/restore-capable)
+/// over explicit connect opts — the admission tests restore doctored
+/// state into a freshly admitted replacement.
+fn spawn_stateful_worker_with(
+    addr: &str,
+    n: usize,
+    opts: TcpConnectOpts,
+) -> std::thread::JoinHandle<parle::Result<()>> {
+    let addr = addr.to_string();
+    std::thread::spawn(move || -> parle::Result<()> {
+        let link = TcpWorkerLink::connect_with_opts(
+            &addr,
+            n,
+            Duration::from_secs(10),
+            opts,
+        )?;
+        let ep = ReplicaEndpoint::remote(link);
+        let mut acc = vec![0.0f32; 2];
+        let mut drawn = 0u64;
+        while let Some(cmd) = ep.recv_cmd() {
+            match cmd {
+                WorkerCmd::Round(msg) => {
+                    acc[0] += msg.xref.iter().sum::<f32>();
+                    drawn += 1;
+                    let RoundMsg {
+                        round, mut slab, ..
+                    } = msg;
+                    slab.copy_from_slice(&acc);
+                    ep.report(RoundReport {
+                        replica: ep.id(),
+                        round,
+                        params: slab,
+                        train_loss: 0.0,
+                        train_err: 0.0,
+                        step_s: 0.0,
+                    });
+                }
+                WorkerCmd::Snapshot => {
+                    ep.send_snapshot(WorkerState {
+                        replica: ep.id(),
+                        vecs: vec![("acc".into(), acc.clone())],
+                        batches_drawn: drawn,
+                    });
+                }
+                WorkerCmd::Restore(st) => {
+                    acc = st.vec("acc").unwrap().to_vec();
+                    drawn = st.batches_drawn;
+                }
+            }
+        }
+        Ok(())
+    })
+}
+
+/// The elastic fabric demotes a dead worker to an eviction instead of
+/// failing the run: the sync barrier closes over the survivors and the
+/// next round runs n−1 — the fix for the fail-stop pinned by
+/// `tcp_worker_death_mid_round_errors_master` above.
+#[test]
+fn tcp_elastic_fabric_evicts_dead_worker_and_round_closes_over_survivor() {
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let n = 2usize;
+    // one echo worker that lives to the end, one that swallows its
+    // first round and hangs up without reporting
+    let healthy =
+        spawn_echo_worker_with(&addr, n, TcpConnectOpts::default());
+    let doomed = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || -> parle::Result<()> {
+            let link =
+                TcpWorkerLink::connect(&addr, n, Duration::from_secs(10))?;
+            let ep = ReplicaEndpoint::remote(link);
+            let _ = ep.recv();
+            Ok(())
+        })
+    };
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0; n],
+        Box::new(
+            TcpTransport::accept_workers_with_opts(
+                listener,
+                n,
+                Duration::from_secs(10),
+                TcpListenOpts {
+                    evict_after: Duration::from_secs(30),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        ),
+    );
+    fabric.set_elastic(true);
+    let xref = vec![1.0f32; 8];
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    // the barrier survives the death: one report, one eviction
+    let stats = fabric.collect().unwrap();
+    assert_eq!(stats.mean_loss, 0.25);
+    assert_eq!(fabric.reports().len(), 1);
+    assert_eq!(fabric.live_replicas(), 1);
+    doomed.join().unwrap().unwrap();
+    // training continues over the survivor; the reduce is the
+    // survivor's echo alone
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    fabric.collect().unwrap();
+    assert_eq!(fabric.reports().len(), 1);
+    assert_eq!(fabric.reports()[0].round, 1);
+    let mut out = vec![0.0f32; 8];
+    fabric.reduce_into(&mut out);
+    assert_eq!(out, xref);
+    fabric.shutdown().unwrap();
+    healthy.join().unwrap().unwrap();
+}
+
+/// Same fix on the async dispatch leg: per-replica rounds keep flowing
+/// to the survivor after an eviction pulse, mirroring how the engine's
+/// pacer drops the dead replica from its watermark.
+#[test]
+fn tcp_elastic_async_dispatch_keeps_pacing_survivor_after_eviction() {
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let n = 2usize;
+    let healthy =
+        spawn_echo_worker_with(&addr, n, TcpConnectOpts::default());
+    let doomed = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || -> parle::Result<()> {
+            let link =
+                TcpWorkerLink::connect(&addr, n, Duration::from_secs(10))?;
+            let ep = ReplicaEndpoint::remote(link);
+            let _ = ep.recv();
+            Ok(())
+        })
+    };
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0; n],
+        Box::new(
+            TcpTransport::accept_workers_with_opts(
+                listener,
+                n,
+                Duration::from_secs(10),
+                TcpListenOpts {
+                    evict_after: Duration::from_secs(30),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        ),
+    );
+    fabric.set_elastic(true);
+    let xref = vec![1.0f32; 4];
+    for r in 0..n {
+        fabric.send_round_to(r, 0, consts(), &xref);
+    }
+    let mut survivor = None;
+    let mut evicted = None;
+    for _ in 0..2 {
+        match fabric.recv_pulse().unwrap() {
+            FabricPulse::Report(rep) => {
+                assert_eq!(rep.round, 0);
+                survivor = Some(rep.replica);
+            }
+            FabricPulse::Evicted { replica, .. } => {
+                evicted = Some(replica);
+            }
+        }
+    }
+    let survivor = survivor.expect("healthy replica should report");
+    let dead = evicted.expect("dead replica should be evicted");
+    assert_ne!(survivor, dead);
+    assert_eq!(fabric.live_replicas(), 1);
+    // keep pacing the survivor alone, like the engine's async loop
+    for round in 1..4u64 {
+        fabric.send_round_to(survivor, round, consts(), &xref);
+        match fabric.recv_pulse().unwrap() {
+            FabricPulse::Report(rep) => {
+                assert_eq!(rep.replica, survivor);
+                assert_eq!(rep.round, round);
+            }
+            FabricPulse::Evicted { replica, reason } => {
+                panic!("spurious eviction of {replica}: {reason}")
+            }
+        }
+    }
+    fabric.shutdown().unwrap();
+    healthy.join().unwrap().unwrap();
+    doomed.join().unwrap().unwrap();
+}
+
+/// Deadline eviction: a worker whose socket stays open but goes silent
+/// past `evict_after` is evicted with a reason naming the silence,
+/// while heartbeats keep the idle-but-healthy peer alive through the
+/// same window — the pin that the pings actually reset the deadline
+/// (without them the survivor would be evicted too and the barrier
+/// would bail with nothing left to reduce).
+#[test]
+fn tcp_silent_worker_is_evicted_on_deadline_heartbeats_keep_peer_alive() {
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let n = 2usize;
+    let healthy = spawn_echo_worker_with(
+        &addr,
+        n,
+        TcpConnectOpts {
+            heartbeat_every: Duration::from_millis(50),
+            ..Default::default()
+        },
+    );
+    let wedged = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let mut stream = connect_retry(&addr);
+            raw_handshake(&mut stream);
+            // wedge: hold the socket open, read nothing, say nothing
+            std::thread::sleep(Duration::from_millis(2500));
+            drop(stream);
+        })
+    };
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0; n],
+        Box::new(
+            TcpTransport::accept_workers_with_opts(
+                listener,
+                n,
+                Duration::from_secs(10),
+                TcpListenOpts {
+                    evict_after: Duration::from_millis(1500),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        ),
+    );
+    fabric.set_elastic(true);
+    let xref = vec![0.5f32; 8];
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    // drive the pulses by hand to capture the eviction reason
+    let mut got_report = false;
+    let mut reason = None;
+    for _ in 0..2 {
+        match fabric.recv_pulse().unwrap() {
+            FabricPulse::Report(rep) => {
+                assert_eq!(rep.round, 0);
+                got_report = true;
+            }
+            FabricPulse::Evicted { reason: why, .. } => {
+                reason = Some(why);
+            }
+        }
+    }
+    assert!(got_report, "heartbeating worker should report normally");
+    let reason = reason.expect("silent worker should be evicted");
+    assert!(reason.contains("silent for"), "{reason}");
+    assert_eq!(fabric.live_replicas(), 1);
+    // the survivor keeps training
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    fabric.collect().unwrap();
+    assert_eq!(fabric.reports().len(), 1);
+    assert_eq!(fabric.reports()[0].round, 1);
+    fabric.shutdown().unwrap();
+    healthy.join().unwrap().unwrap();
+    wedged.join().unwrap();
+}
+
+/// The admission path end to end: evict a dead member, refuse a joiner
+/// whose replay-config fingerprint differs, then admit a matched
+/// replacement into the vacated slot, restore state into it over the
+/// wire, and run the next round over the full membership again.
+#[test]
+fn tcp_evicted_slot_readmits_fingerprint_matched_joiner_with_state() {
+    const FP: u64 = 0x5EED_CAFE;
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let n = 2usize;
+    let opts = |fp: u64| TcpConnectOpts {
+        fingerprint: Some(fp),
+        ..Default::default()
+    };
+    let keeper = spawn_stateful_worker_with(&addr, n, opts(FP));
+    let doomed = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || -> parle::Result<()> {
+            let link = TcpWorkerLink::connect_with_opts(
+                &addr,
+                n,
+                Duration::from_secs(10),
+                opts(FP),
+            )?;
+            let ep = ReplicaEndpoint::remote(link);
+            let _ = ep.recv_cmd();
+            Ok(())
+        })
+    };
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0; n],
+        Box::new(
+            TcpTransport::accept_workers_with_opts(
+                listener,
+                n,
+                Duration::from_secs(10),
+                TcpListenOpts {
+                    evict_after: Duration::from_secs(30),
+                    fingerprint: Some(FP),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        ),
+    );
+    fabric.set_elastic(true);
+    let xref = vec![1.0f32, 2.0];
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    fabric.collect().unwrap(); // evicts the doomed replica mid-barrier
+    assert_eq!(fabric.live_replicas(), 1);
+    doomed.join().unwrap().unwrap();
+    let dead = (0..n).find(|&r| !fabric.is_live(r)).unwrap();
+
+    // a joiner carrying the wrong replay fingerprint is refused at the
+    // admission handshake and never becomes a member
+    let impostor = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            TcpWorkerLink::connect_with_opts(
+                &addr,
+                n,
+                Duration::from_secs(10),
+                opts(FP ^ 1),
+            )
+            .map(|_| ())
+        })
+    };
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while !impostor.is_finished() {
+        assert!(
+            fabric.try_admit().unwrap().is_none(),
+            "mismatched fingerprint must not be admitted"
+        );
+        assert!(
+            std::time::Instant::now() < deadline,
+            "impostor never resolved"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        impostor.join().unwrap().is_err(),
+        "refused joiner should fail its connect"
+    );
+    assert_eq!(fabric.live_replicas(), 1);
+
+    // a matched joiner is admitted into the vacated slot; ship it
+    // state as the engine would and fold it back into the membership
+    let joiner = spawn_stateful_worker_with(&addr, n, opts(FP));
+    let slot = loop {
+        if let Some(s) = fabric.try_admit().unwrap() {
+            break s;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "joiner never admitted"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_eq!(slot, dead);
+    fabric
+        .restore_replica(WorkerState {
+            replica: slot,
+            vecs: vec![("acc".into(), vec![100.0, 0.0])],
+            batches_drawn: 7,
+        })
+        .unwrap();
+    fabric.readmit(slot).unwrap();
+    assert_eq!(fabric.live_replicas(), 2);
+
+    // the next round runs over both members: the keeper builds on its
+    // own accumulator, the joiner on the restored one
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    fabric.collect().unwrap();
+    assert_eq!(fabric.reports().len(), 2);
+    assert_eq!(fabric.report_params(slot), &[103.0f32, 0.0][..]);
+    assert_eq!(fabric.report_params(1 - slot), &[6.0f32, 0.0][..]);
+    fabric.shutdown().unwrap();
+    keeper.join().unwrap().unwrap();
+    joiner.join().unwrap().unwrap();
+}
+
+/// The replay-config fingerprint is checked at the *initial* accept
+/// too: a mismatched worker is refused at connect on both ends, while
+/// a fingerprint-blind hello (an older worker) is tolerated — the
+/// backward-compat leg of the handshake extension.
+#[test]
+fn tcp_fingerprint_mismatch_is_refused_at_connect() {
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let worker = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            TcpWorkerLink::connect_with_opts(
+                &addr,
+                1,
+                Duration::from_secs(10),
+                TcpConnectOpts {
+                    fingerprint: Some(2),
+                    ..Default::default()
+                },
+            )
+            .map(|_| ())
+        })
+    };
+    let err = format!(
+        "{:#}",
+        TcpTransport::accept_workers_with_opts(
+            listener,
+            1,
+            Duration::from_secs(10),
+            TcpListenOpts {
+                fingerprint: Some(1),
+                ..Default::default()
+            },
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("fingerprint mismatch"), "got: {err}");
+    assert!(err.contains("silently diverge"), "got: {err}");
+    assert!(
+        worker.join().unwrap().is_err(),
+        "mismatched worker should be refused too"
+    );
+
+    // a plain hello without a fingerprint still passes a fingerprinted
+    // master: older workers predate the field
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let workers = spawn_echo_workers(&addr, 1);
+    let mut fabric = ReduceFabric::with_transport(
+        vec![0],
+        Box::new(
+            TcpTransport::accept_workers_with_opts(
+                listener,
+                1,
+                Duration::from_secs(10),
+                TcpListenOpts {
+                    fingerprint: Some(1),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        ),
+    );
+    let xref = vec![1.0f32; 4];
+    fabric.broadcast(consts(), &[xref.as_slice()]);
+    fabric.collect().unwrap();
+    fabric.shutdown().unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+/// The worker-side read deadline: a master that goes silent after the
+/// handshake no longer wedges the worker in a blocking read forever —
+/// the endpoint winds down and leaves a typed [`MasterSilence`] error
+/// behind for the worker body to surface.
+#[test]
+fn tcp_worker_times_out_with_typed_error_when_master_goes_silent() {
+    let (listener, addr) = ephemeral_listener().unwrap();
+    let worker = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || -> anyhow::Error {
+            let link = TcpWorkerLink::connect_with_opts(
+                &addr,
+                1,
+                Duration::from_secs(10),
+                TcpConnectOpts {
+                    heartbeat_every: Duration::from_millis(100),
+                    master_silence: Duration::from_secs(1),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let ep = ReplicaEndpoint::remote(link);
+            // the silence deadline fires and the endpoint winds down...
+            assert!(ep.recv().is_none());
+            // ...with the typed cause left behind, not swallowed
+            ep.take_link_error()
+                .expect("master silence should leave a typed link error")
+        })
+    };
+    // accept the worker, then wedge: send nothing, hold the socket.
+    // its heartbeats keep arriving (the reader absorbs them) — pings
+    // are worker->master liveness and must not reset this deadline.
+    let transport = accept(listener, 1);
+    let err = worker.join().unwrap();
+    let silence = err
+        .downcast_ref::<MasterSilence>()
+        .unwrap_or_else(|| panic!("not a MasterSilence: {err:#}"));
+    assert_eq!(silence.limit_secs, 1);
+    assert!(format!("{silence}").contains("master silent for"));
+    drop(transport);
+}
+
+// ---------------------------------------------------------------------------
 // cross-transport determinism (artifact-gated, like the training suite)
 // ---------------------------------------------------------------------------
 
@@ -1323,4 +1861,29 @@ fn tcp_wire_codecs_learn_within_noise_and_deltas_match_exactly() {
             "{name}: failed to learn at all"
         );
     }
+}
+
+/// Elastic membership must be invisible to a healthy run: turning on
+/// heartbeats and an eviction deadline (which also arms the
+/// fingerprint handshake on both ends, via the engine) produces a
+/// bit-identical trajectory to the fail-stop default.
+#[test]
+fn tcp_elastic_mode_does_not_perturb_a_healthy_run() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    parle::util::logging::set_level(parle::util::logging::Level::Warn);
+    let mut cfg = base(Algo::Parle);
+    cfg.epochs = 1.0;
+    cfg.reduce_bucket_bytes = 256;
+    let mk = |c: &RunConfig| -> Box<dyn parle::coordinator::RoundAlgo> {
+        Box::new(parle::coordinator::driver::CoupledAlgo::new(c))
+    };
+    let baseline = tcp_train(&cfg, "itest_elastic_off", mk, train);
+    let mut ecfg = cfg.clone();
+    ecfg.heartbeat_secs = 0.2;
+    ecfg.evict_after_secs = 30.0;
+    let elastic = tcp_train(&ecfg, "itest_elastic_on", mk, train);
+    assert_same_run(&baseline, &elastic, "elastic-healthy");
 }

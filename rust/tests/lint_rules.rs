@@ -224,9 +224,12 @@ fn binary_reports_multiple_files_in_sorted_order() {
 
 /// A minimal `transport/protocol.rs` whose TRANSITIONS table the S1
 /// pass can parse: Hello -> Run on hello, Run <-> Busy on round/report,
-/// stop self-loops on Run, and streamed bucket/coded tags that
-/// self-loop on Busy (legal nowhere else — mirroring the real table's
-/// mid-round `TAG_BUCKET_REPORT` / `TAG_CODED_*` rows).
+/// stop self-loops on Run, streamed bucket/coded tags that self-loop
+/// on Busy (legal nowhere else — mirroring the real table's mid-round
+/// `TAG_BUCKET_REPORT` / `TAG_CODED_*` rows), and a heartbeat that
+/// self-loops on Busy only (the real table allows it in every live
+/// post-hello state, but never in Hello — this mini table keeps one
+/// illegal state around so the fixture can probe the refusal).
 const MINI_PROTOCOL: &str = "\
 pub enum State { Hello, Run, Busy }\n\
 pub enum Dir { ToWorker, ToMaster }\n\
@@ -237,6 +240,7 @@ pub const TRANSITIONS: &[(State, Dir, u8, State)] = &[\n\
     (State::Busy, Dir::ToWorker, wire::TAG_CODED_BCAST, State::Busy),\n\
     (State::Busy, Dir::ToMaster, wire::TAG_BUCKET_REPORT, State::Busy),\n\
     (State::Busy, Dir::ToMaster, wire::TAG_CODED_REPORT, State::Busy),\n\
+    (State::Busy, Dir::ToMaster, wire::TAG_HEARTBEAT, State::Busy),\n\
     (State::Busy, Dir::ToMaster, wire::TAG_REPORT, State::Run),\n\
 ];\n";
 
@@ -332,6 +336,43 @@ fn binary_flags_s1_coded_tag_outside_its_states() {
     );
     let (ok, _, err) = run_lint(&dir);
     assert!(ok, "coded tags inside Busy must pass S1: {err}");
+}
+
+#[test]
+fn binary_flags_s1_heartbeat_tag_outside_its_states() {
+    let dir = fixture_dir("s1_heartbeat");
+    write(&dir, "transport/protocol.rs", MINI_PROTOCOL);
+    // a heartbeat before the hello completes (mini table: outside Busy)
+    // is exactly the liveness bug the table exists to rule out — a
+    // pinger that starts before the peer knows who it is
+    write(
+        &dir,
+        "transport/peer.rs",
+        "pub fn ping(tag: u8) {\n\
+         \x20   // lint: proto(Hello)\n\
+         \x20   {\n\
+         \x20       if tag == wire::TAG_HEARTBEAT { pong(); }\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(!ok, "heartbeat tag outside its legal states must fail S1");
+    assert!(err.contains("[S1]"), "stderr: {err}");
+    assert!(err.contains("TAG_HEARTBEAT"), "stderr: {err}");
+
+    // the same probe inside the heartbeat's legal state is clean
+    write(
+        &dir,
+        "transport/peer.rs",
+        "pub fn ping(tag: u8) {\n\
+         \x20   // lint: proto(Busy)\n\
+         \x20   {\n\
+         \x20       if tag == wire::TAG_HEARTBEAT { pong(); }\n\
+         \x20   }\n\
+         }\n",
+    );
+    let (ok, _, err) = run_lint(&dir);
+    assert!(ok, "heartbeat tag inside Busy must pass S1: {err}");
 }
 
 #[test]

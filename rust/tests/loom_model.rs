@@ -9,7 +9,12 @@
 //! 2. fabric shutdown with reports still in flight — over every
 //!    interleaving of stop-sends, worker steps and joins, shutdown
 //!    reaches the all-joined terminal state (unconsumed reports die
-//!    with the event channel, they never deadlock the join).
+//!    with the event channel, they never deadlock the join);
+//! 3. elastic membership — over every interleaving of report sends,
+//!    deadline evictions (heartbeat misses), deliveries and late-join
+//!    admissions, the barrier always closes over the live members and
+//!    the generation fence never credits a dead incarnation's
+//!    in-flight report to its admitted replacement.
 //!
 //! The crate deliberately has no `loom` dependency; these are
 //! hand-rolled DFS explorations of small, exact models. State spaces
@@ -283,6 +288,172 @@ fn shutdown_with_inflight_reports_always_terminates() {
              (n={n})"
         );
     }
+}
+
+// ---------------------------------------------------------------- //
+// 3. Elastic membership: evictions vs in-flight reports            //
+// ---------------------------------------------------------------- //
+
+/// One state of the two-round membership protocol. Mirrors the TCP
+/// fabric's bookkeeping: `gen` is `slot_gen` (bumped once on evict,
+/// again on admit), the channel is the FIFO event stream the readers
+/// feed, and delivery applies the same generation fence
+/// `recv_event`/`recv_pulse` apply. Heartbeats are modeled
+/// adversarially: a deadline may fire against any live replica at any
+/// moment (the heartbeat that would have saved it was missed), which
+/// over-approximates every real timing.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct ElasticState {
+    /// 1 = the barrier the eviction races, 2 = the barrier after
+    /// admission (where a stale round-1 report could be miscredited).
+    round: u8,
+    /// Slot liveness as the master's fabric sees it.
+    live: Vec<bool>,
+    /// Connection generation: 0 original, 1 evicted, 2 readmitted.
+    gen: Vec<u8>,
+    /// In-flight report events: (slot, stamped gen, round sent in).
+    chan: Vec<(usize, u8, u8)>,
+    /// Current incarnation has sent its report for the current round.
+    sent: Vec<bool>,
+    /// Generation of the report the master counted this round.
+    counted: Vec<Option<u8>>,
+}
+
+impl ElasticState {
+    fn initial(n: usize) -> Self {
+        ElasticState {
+            round: 1,
+            live: vec![true; n],
+            gen: vec![0; n],
+            chan: Vec::new(),
+            sent: vec![false; n],
+            counted: vec![None; n],
+        }
+    }
+
+    /// The round-1 barrier closes exactly when every live member has
+    /// been counted (evicted slots dropped out of `outstanding`).
+    fn barrier_closed(&self) -> bool {
+        (0..self.live.len())
+            .all(|r| !self.live[r] || self.counted[r].is_some())
+    }
+}
+
+/// Exhaustive DFS over sends, evictions, deliveries and the admission
+/// boundary. Returns whether the interesting witness was reached: a
+/// stale pre-eviction report surviving into round 2 and being dropped
+/// by the generation fence after its slot was re-admitted.
+fn explore_membership(n: usize) -> bool {
+    let mut visited: HashSet<ElasticState> = HashSet::new();
+    let mut stack = vec![ElasticState::initial(n)];
+    let mut stale_dropped_after_admission = false;
+    while let Some(s) = stack.pop() {
+        if !visited.insert(s.clone()) {
+            continue;
+        }
+        let mut succ = Vec::new();
+        // worker: the current incarnation reports once per round
+        for r in 0..n {
+            if s.live[r] && !s.sent[r] {
+                let mut next = s.clone();
+                next.chan.push((r, s.gen[r], s.round));
+                next.sent[r] = true;
+                succ.push(next);
+            }
+        }
+        // deadline fires against a live original: evict — even with
+        // its report already in flight (the heartbeat-miss race)
+        if s.round == 1 {
+            for r in 0..n {
+                if s.live[r] && s.gen[r] == 0 {
+                    let mut next = s.clone();
+                    next.live[r] = false;
+                    next.gen[r] = 1;
+                    succ.push(next);
+                }
+            }
+        }
+        // master: deliver the head of the event channel through the
+        // generation fence
+        if let Some(&(r, g, rnd)) = s.chan.first() {
+            let mut next = s.clone();
+            next.chan.remove(0);
+            if next.live[r] && g == next.gen[r] {
+                assert!(
+                    next.counted[r].is_none(),
+                    "double-counted a report for slot {r}"
+                );
+                assert!(
+                    rnd == next.round,
+                    "generation fence failed: round-{rnd} report \
+                     counted into the round-{} barrier for slot {r}",
+                    next.round
+                );
+                next.counted[r] = Some(g);
+            } else if s.round == 2 && g == 0 && next.gen[r] == 2 {
+                // the witness: a dead incarnation's report crossed the
+                // admission boundary and the fence discarded it
+                stale_dropped_after_admission = true;
+            }
+            succ.push(next);
+        }
+        // master: the round-1 barrier closed — admit a replacement
+        // into every vacated slot and open the next round
+        if s.round == 1
+            && s.barrier_closed()
+            && s.live.iter().any(|&l| l)
+        {
+            let mut next = s.clone();
+            next.round = 2;
+            for r in 0..n {
+                if next.gen[r] == 1 {
+                    next.live[r] = true;
+                    next.gen[r] = 2;
+                }
+                next.sent[r] = false;
+                next.counted[r] = None;
+            }
+            succ.push(next);
+        }
+        if succ.is_empty() {
+            // quiescence is either the all-evicted bail (round 1, the
+            // real collect errors out) or the round-2 barrier closed
+            // over every member, replacements included
+            if s.round == 1 {
+                assert!(
+                    s.live.iter().all(|&l| !l),
+                    "round-1 stall with live members: counted={:?}",
+                    s.counted
+                );
+            } else {
+                for r in 0..n {
+                    assert!(
+                        !s.live[r] || s.counted[r].is_some(),
+                        "round-2 stall: slot {r} live but uncounted"
+                    );
+                    if s.gen[r] == 2 {
+                        assert_eq!(
+                            s.counted[r],
+                            Some(2),
+                            "replacement in slot {r} finished the round \
+                             credited with the wrong incarnation"
+                        );
+                    }
+                }
+            }
+        }
+        stack.extend(succ);
+    }
+    stale_dropped_after_admission
+}
+
+#[test]
+fn eviction_vs_inflight_reports_never_miscredits_generations() {
+    assert!(
+        explore_membership(2),
+        "model never reached the stale-report-across-admission witness"
+    );
+    explore_membership(3);
 }
 
 /// The model's claim, checked against the real fabric: broadcast a
